@@ -1,0 +1,63 @@
+//! Single-device compiler comparison (the paper's Fig. 8 scenario) as a
+//! library-API example: DisCo's search vs rule-based fusion (XLA, TVM,
+//! nGraph) and a TASO-like cost-guided substitution search, on
+//! inference-only graphs.
+//!
+//! ```bash
+//! cargo run --release --example compare_compilers -- [--model transformer] [--full]
+//! ```
+
+use disco::baselines;
+use disco::estimator::CostEstimator;
+use disco::models::{self, ModelKind, ModelSpec};
+use disco::network::Cluster;
+use disco::prelude::*;
+use disco::sim::CostSource;
+use disco::search::MethodSet;
+use disco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let kinds: Vec<ModelKind> = match args.get("model") {
+        Some(m) => vec![ModelKind::from_name(m).expect("unknown model")],
+        None => ModelKind::ALL.to_vec(),
+    };
+    let depth = if args.has_flag("full") { 1.0 } else { 0.25 };
+
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::single_device();
+    let sim_opts = SimOptions { ignore_comm: true, ..Default::default() };
+
+    println!(
+        "{:<12} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "model", "JAX_default", "nGraph", "TVM", "TASO-like", "DisCo"
+    );
+    for kind in kinds {
+        let mut spec = ModelSpec::new(kind, 8);
+        spec.depth_scale = depth;
+        let g = models::build(&spec, 1).forward_only();
+        let prof = disco::profiler::profile(&g, &device, &cluster, 3, 11);
+        let est = CostEstimator::oracle(&prof, &device);
+        let cost = |graph: &disco::graph::TrainingGraph| {
+            est.prepare(graph);
+            simulate(graph, &est, sim_opts).makespan_ms
+        };
+        let mut cfg = SearchConfig {
+            unchanged_limit: if args.has_flag("full") { 1000 } else { 200 },
+            sim: sim_opts,
+            ..Default::default()
+        };
+        cfg.methods = MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: false };
+        let disco_r = backtracking_search(&g, &est, &cfg);
+        println!(
+            "{:<12} {:>12.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            kind.name(),
+            cost(&baselines::xla_op_fusion(&g)),
+            cost(&baselines::ngraph_fusion(&g)),
+            cost(&baselines::tvm_rule_fusion(&g)),
+            cost(&baselines::taso_like(&g, &est, sim_opts, 150, 3)),
+            disco_r.best_cost_ms,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Train the GNN Fused-Op Estimator end-to-end from Rust (paper §4.3/§6.5).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example estimator_training -- [--per-model 400] [--epochs 15]
+//! ```
+//!
+//! Pipeline: profile the six benchmark models → generate random fused-op
+//! samples (§5.2) → train the GNN through the `gnn_train` PJRT artifact →
+//! evaluate prediction error on unseen fused ops (the Fig. 9 experiment)
+//! → save trained parameters for the search to use (`--estimator gnn`).
+
+use disco::bench::gnn_pipeline;
+use disco::bench::{BenchOptions, Scale};
+use disco::runtime::Manifest;
+use disco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let per_model = args.get_usize("per-model", 400);
+    let epochs = args.get_usize("epochs", 15);
+    let opts = BenchOptions {
+        scale: if args.has_flag("full") { Scale::Full } else { Scale::Fast },
+        ..Default::default()
+    };
+    let artifacts = Manifest::default_dir();
+
+    println!(
+        "generating {} train + {} test fused-op samples per model ...",
+        per_model,
+        per_model / 4
+    );
+    let report =
+        gnn_pipeline::train_and_eval(&opts, &artifacts, per_model, per_model / 4, epochs)?;
+    println!(
+        "trained on {} samples for {} epochs: log-MSE {:.4} → {:.4}",
+        report.train_samples, report.epochs, report.first_loss, report.last_loss
+    );
+    println!(
+        "held-out ({} unseen fused ops): mean err {:.1}%, p90 {:.1}%, within 14%: {:.1}% (paper: >90%)",
+        report.test_samples,
+        report.mean_error() * 100.0,
+        report.p90_error() * 100.0,
+        report.frac_within(0.14) * 100.0
+    );
+    println!("\nCDF of relative error:");
+    let cdf = report.hist.cdf();
+    for i in (0..cdf.len()).step_by(5) {
+        println!("  err <= {:.2}: {:.1}%", report.hist.edge(i), cdf[i] * 100.0);
+    }
+    let path = gnn_pipeline::save_params(&artifacts, &report.params)?;
+    println!("\nsaved trained estimator to {}", path.display());
+    Ok(())
+}

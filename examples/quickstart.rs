@@ -1,0 +1,60 @@
+//! Quickstart: the whole DisCo pipeline on one model in ~30 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the Transformer training graph for the paper's Cluster A,
+//! profiles it on the analytical device substrate, runs the joint
+//! op/tensor fusion search, and prints what changed.
+
+use disco::prelude::*;
+
+fn main() {
+    // 1. Workload: the paper's Transformer (12 layers, d=512) for 12
+    //    data-parallel workers. Use depth_scale to shrink for quick runs.
+    let mut spec = ModelSpec::transformer_base();
+    spec.depth_scale = 0.5;
+    let cluster = Cluster::cluster_a();
+    let graph = disco::models::build(&spec, cluster.num_devices());
+    println!(
+        "graph: {} ops, {} AllReduces, {:.1}M gradient elements",
+        graph.live_count(),
+        graph.allreduces().len(),
+        graph.total_gradient_bytes() / 4.0 / 1e6
+    );
+
+    // 2. Profile per-op times + fit the AllReduce linear model.
+    let device = DeviceModel::gtx1080ti();
+    let profile = disco::profiler::profile(&graph, &device, &cluster, 3, 42);
+    println!(
+        "comm model: T = {:.3e}·bytes + {:.2} ms (r²={:.3})",
+        profile.comm.c, profile.comm.d, profile.comm.r2
+    );
+
+    // 3. Joint op + tensor fusion search (Alg. 1).
+    let est = CostEstimator::analytical(&profile, &cluster);
+    let cfg = SearchConfig { unchanged_limit: 300, ..Default::default() };
+    let result = backtracking_search(&graph, &est, &cfg);
+
+    // 4. Report.
+    let before = simulate(&graph, &est, SimOptions::default());
+    let after = simulate(&result.best, &est, SimOptions::default());
+    println!(
+        "per-iteration: {:.2} ms → {:.2} ms ({:.1}% faster, {} simulator evals, {:.1}s search)",
+        before.makespan_ms,
+        after.makespan_ms,
+        (before.makespan_ms / after.makespan_ms - 1.0) * 100.0,
+        result.evals,
+        result.elapsed.as_secs_f64()
+    );
+    println!(
+        "kernels {} → {}; AllReduces {} → {}; overlap {:.2} → {:.2}",
+        before.kernels,
+        after.kernels,
+        before.allreduces,
+        after.allreduces,
+        before.overlap_ratio(),
+        after.overlap_ratio()
+    );
+}

@@ -1,0 +1,149 @@
+"""AOT compiler: lower the L2 JAX computations (with their L1 Pallas
+kernels) to HLO **text** artifacts the Rust runtime loads via PJRT.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``--out artifacts/``):
+  gnn_infer.hlo.txt    estimator forward  (search-time cost model)
+  gnn_train.hlo.txt    estimator fwd+bwd+Adam step
+  lm_grads.hlo.txt     LM loss+gradients (per worker)
+  lm_adam.hlo.txt      fused-Adam parameter update
+  lm_eval.hlo.txt      LM held-out loss
+  gnn_params.f32       initial flat estimator parameters (LE f32)
+  lm_params.f32        initial flat LM parameters (LE f32)
+  manifest.json        shapes/dtypes of every artifact's inputs/outputs
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import LMConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export(fn, args, path):
+    """Lower ``fn`` at the abstract ``args`` and write HLO text to ``path``.
+    Returns (input_specs, output_specs) for the manifest."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *args)
+    outs = jax.tree_util.tree_leaves(out_shapes)
+    ins = jax.tree_util.tree_leaves(args)
+    fmt = lambda s: {"shape": list(s.shape), "dtype": str(s.dtype)}
+    return [fmt(s) for s in ins], [fmt(s) for s in outs]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--lm-d", type=int, default=128)
+    ap.add_argument("--lm-layers", type=int, default=2)
+    ap.add_argument("--lm-heads", type=int, default=4)
+    ap.add_argument("--lm-ff", type=int, default=512)
+    ap.add_argument("--lm-seq", type=int, default=64)
+    ap.add_argument("--lm-batch", type=int, default=8)
+    ap.add_argument("--lm-vocab", type=int, default=256)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"artifacts": {}}
+
+    # --- GNN estimator -----------------------------------------------------
+    gnn_p, _, gnn_init = model.gnn_flat_spec()
+    infer, train = model.make_gnn_fns()
+    B, N, F = model.GNN_BATCH, model.MAX_NODES, model.FEAT_DIM
+
+    ins, outs = export(
+        infer,
+        (spec((gnn_p,)), spec((B, N, F)), spec((B, N, N)), spec((B, N))),
+        os.path.join(args.out, "gnn_infer.hlo.txt"),
+    )
+    manifest["artifacts"]["gnn_infer"] = {
+        "file": "gnn_infer.hlo.txt", "inputs": ins, "outputs": outs,
+    }
+
+    ins, outs = export(
+        train,
+        (
+            spec((gnn_p,)), spec((gnn_p,)), spec((gnn_p,)), spec((1,)),
+            spec((B, N, F)), spec((B, N, N)), spec((B, N)), spec((B,)),
+        ),
+        os.path.join(args.out, "gnn_train.hlo.txt"),
+    )
+    manifest["artifacts"]["gnn_train"] = {
+        "file": "gnn_train.hlo.txt", "inputs": ins, "outputs": outs,
+    }
+    np.asarray(gnn_init, dtype="<f4").tofile(os.path.join(args.out, "gnn_params.f32"))
+    manifest["gnn"] = {
+        "params": "gnn_params.f32", "flat_len": int(gnn_p), "batch": B,
+        "max_nodes": N, "feat_dim": F, "n_op_kinds": model.N_OP_KINDS,
+        "lr": model.GNN_LR,
+    }
+
+    # --- Transformer LM -----------------------------------------------------
+    cfg = LMConfig(
+        vocab=args.lm_vocab, d_model=args.lm_d, n_heads=args.lm_heads,
+        n_layers=args.lm_layers, d_ff=args.lm_ff, seq=args.lm_seq,
+        batch=args.lm_batch,
+    )
+    lm_p, _, lm_init = model.lm_flat_spec(cfg)
+    grads, adam, evaluate = model.make_lm_fns(cfg)
+    tok = spec((cfg.batch, cfg.seq + 1), jnp.int32)
+
+    ins, outs = export(grads, (spec((lm_p,)), tok), os.path.join(args.out, "lm_grads.hlo.txt"))
+    manifest["artifacts"]["lm_grads"] = {
+        "file": "lm_grads.hlo.txt", "inputs": ins, "outputs": outs,
+    }
+    ins, outs = export(
+        adam,
+        (spec((lm_p,)), spec((lm_p,)), spec((lm_p,)), spec((lm_p,)), spec((1,))),
+        os.path.join(args.out, "lm_adam.hlo.txt"),
+    )
+    manifest["artifacts"]["lm_adam"] = {
+        "file": "lm_adam.hlo.txt", "inputs": ins, "outputs": outs,
+    }
+    ins, outs = export(evaluate, (spec((lm_p,)), tok), os.path.join(args.out, "lm_eval.hlo.txt"))
+    manifest["artifacts"]["lm_eval"] = {
+        "file": "lm_eval.hlo.txt", "inputs": ins, "outputs": outs,
+    }
+    np.asarray(lm_init, dtype="<f4").tofile(os.path.join(args.out, "lm_params.f32"))
+    manifest["lm"] = {
+        "params": "lm_params.f32", "flat_len": int(lm_p),
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers, "d_ff": cfg.d_ff, "seq": cfg.seq,
+        "batch": cfg.batch, "lr": cfg.lr,
+        "param_count": int(lm_p),
+    }
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out} "
+          f"(gnn flat={gnn_p}, lm flat={lm_p}, lm: {cfg.describe()})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so real-TPU lowering is compile-only here
+(see DESIGN.md §3 Hardware adaptation).
+"""
+
+from .gat import gat_attention
+from .attention import causal_attention
+from .adam import adam_update
+
+__all__ = ["gat_attention", "causal_attention", "adam_update"]

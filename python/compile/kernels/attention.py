@@ -1,0 +1,76 @@
+"""Pallas kernel: fused causal attention (transformer hot-spot).
+
+One (batch, head) pair per grid step: the [S, D] Q/K/V tiles live in VMEM
+(S ≤ 256, D ≤ 128 → ≤ 384 KiB), the S×S score matrix never round-trips to
+HBM — the same intermediate-elimination the paper's op fusion performs,
+expressed as a kernel. Scores and context are MXU matmuls.
+
+The GPU flash-attention formulation (threadblock tiling over KV chunks
+with online softmax) is re-thought for TPU per DESIGN.md §3: with S ≤ 256
+an entire head's working set fits VMEM, so a single-block masked softmax
+is the better schedule; for longer sequences the grid would tile S with
+BlockSpec and carry running max/denominator in scratch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0, 0]  # [S, D]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.dot(q, k.T) * scale  # [S, S] (MXU)
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(col <= row, scores, -1e9)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(w.astype(v.dtype), v)  # (MXU)
+
+
+def _attn_pallas(q, k, v):
+    b, h, s, d = q.shape
+    spec = pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """Fused causal attention.
+
+    Args: q, k, v: [B, H, S, D].
+    Returns: [B, H, S, D].
+
+    Forward runs the Pallas kernel; backward is the VJP of the identical
+    jnp reference (interpret-mode Pallas has no reverse-mode AD).
+    """
+    return _attn_pallas(q, k, v)
+
+
+def _causal_fwd(q, k, v):
+    return _attn_pallas(q, k, v), (q, k, v)
+
+
+def _causal_bwd(res, ct):
+    from .ref import causal_attention_ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(causal_attention_ref, q, k, v)
+    return vjp(ct)
+
+
+causal_attention.defvjp(_causal_fwd, _causal_bwd)

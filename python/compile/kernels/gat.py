@@ -1,0 +1,107 @@
+"""Pallas kernel: masked multi-head graph-attention aggregation.
+
+The compute hot-spot of the GNN Fused-Op Estimator (paper §4.3.1 eq. (1)):
+per-head attention scores between every pair of connected ops, masked
+softmax over neighbours, and feature aggregation — O(N²·H + N²·D) per
+fused-op subgraph.
+
+TPU mapping (DESIGN.md §3): the grid iterates over the batch of subgraphs;
+each grid step holds one graph's [N, D] features and [N, N] adjacency in
+VMEM (N = 64, D ≤ 128 → ≤ 96 KiB — far under the ~16 MiB VMEM budget) and
+drives the MXU with the two [N, D] x [D, H] score matmuls and the [N·H, N]
+x [N, D] aggregation contraction. The HBM↔VMEM schedule is expressed with
+BlockSpec: one graph per block, weights broadcast to every step.
+
+``interpret=True`` everywhere — CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LEAKY_SLOPE
+
+
+def _gat_kernel(h_ref, adj_ref, wsrc_ref, wdst_ref, o_ref):
+    """One graph per grid step; block shapes carry the [N, D] tile."""
+    h = h_ref[0]  # [N, D]
+    adj = adj_ref[0]  # [N, N]
+    w_src = wsrc_ref[...]  # [D, H]
+    w_dst = wdst_ref[...]  # [D, H]
+
+    src = jnp.dot(h, w_src)  # [N, H]  (MXU)
+    dst = jnp.dot(h, w_dst)  # [N, H]  (MXU)
+    e = src[:, None, :] + dst[None, :, :]  # [N, N, H]
+    e = jnp.where(e > 0, e, LEAKY_SLOPE * e)
+    mask = (adj > 0)[:, :, None]
+    e = jnp.where(mask, e, -1e9)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    w = jnp.exp(e) * mask
+    denom = jnp.sum(w, axis=1, keepdims=True)
+    alpha = w / jnp.maximum(denom, 1e-9)  # [N, N, H]
+    # Aggregate: out[i, hd, :] = sum_j alpha[i, j, hd] * h[j, :]  (MXU)
+    n, d = h.shape
+    heads = alpha.shape[-1]
+    alpha_t = jnp.transpose(alpha, (0, 2, 1)).reshape(n * heads, n)
+    out = jnp.dot(alpha_t, h).reshape(n, heads, d)
+    o_ref[0] = jnp.mean(out, axis=1)
+
+
+def _gat_pallas(h, adj, w_src, w_dst):
+    b, n, d = h.shape
+    return pl.pallas_call(
+        _gat_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n, d), h.dtype),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, n * 0 + d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec(w_src.shape, lambda i: (0, 0)),
+            pl.BlockSpec(w_dst.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(h, adj, w_src, w_dst)
+
+
+def _gat_ref_batched(h, adj, w_src, w_dst):
+    """vmapped pure-jnp reference (used for the custom VJP backward)."""
+    from .ref import gat_attention_ref
+
+    return jax.vmap(lambda hh, aa: gat_attention_ref(hh, aa, w_src, w_dst))(h, adj)
+
+
+@jax.custom_vjp
+def gat_attention(h, adj, w_src, w_dst):
+    """Batched GAT aggregation.
+
+    Args:
+      h:     [B, N, D] projected node features.
+      adj:   [B, N, N] 0/1 adjacency (self loops included for live nodes).
+      w_src: [D, H] receiving-node score projection.
+      w_dst: [D, H] sending-node score projection.
+
+    Returns:
+      [B, N, D] aggregated features (mean over the H heads).
+
+    Forward runs the Pallas kernel; the backward is the VJP of the
+    numerically identical jnp reference (Pallas interpret kernels do not
+    support reverse-mode AD directly).
+    """
+    return _gat_pallas(h, adj, w_src, w_dst)
+
+
+def _gat_fwd(h, adj, w_src, w_dst):
+    return _gat_pallas(h, adj, w_src, w_dst), (h, adj, w_src, w_dst)
+
+
+def _gat_bwd(res, ct):
+    h, adj, w_src, w_dst = res
+    _, vjp = jax.vjp(lambda hh, ws, wd: _gat_ref_batched(hh, adj, ws, wd), h, w_src, w_dst)
+    dh, dws, dwd = vjp(ct)
+    return dh, jnp.zeros_like(adj), dws, dwd
+
+
+gat_attention.defvjp(_gat_fwd, _gat_bwd)

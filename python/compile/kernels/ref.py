@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package has a
+reference here, and ``python/tests`` sweeps shapes/dtypes with hypothesis
+asserting allclose between kernel and reference.
+"""
+
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def gat_attention_ref(h, adj, w_src, w_dst):
+    """Masked multi-head graph-attention aggregation (one graph).
+
+    Args:
+      h:     [N, D]  node features (already linearly projected).
+      adj:   [N, N]  0/1 adjacency, adj[i, j] = 1 when j may attend into i
+             (i.e. j is a neighbour whose message i aggregates). Self loops
+             must be included for nodes that exist; padded nodes have
+             all-zero rows and produce zero output.
+      w_src: [D, H]  per-head receiving-node score projection.
+      w_dst: [D, H]  per-head sending-node score projection.
+
+    Returns:
+      [N, D] aggregated node features (mean over heads).
+    """
+    src = h @ w_src  # [N, H]
+    dst = h @ w_dst  # [N, H]
+    e = src[:, None, :] + dst[None, :, :]  # [N, N, H]
+    e = jnp.where(e > 0, e, LEAKY_SLOPE * e)
+    mask = (adj > 0)[:, :, None]  # [N, N, 1]
+    e = jnp.where(mask, e, -1e9)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    w = jnp.exp(e) * mask
+    denom = jnp.sum(w, axis=1, keepdims=True)
+    alpha = w / jnp.maximum(denom, 1e-9)  # [N, N, H]
+    out = jnp.einsum("ijh,jd->ihd", alpha, h)  # [N, H, D]
+    return jnp.mean(out, axis=1)  # [N, D]
+
+
+def causal_attention_ref(q, k, v):
+    """Causal scaled-dot-product attention.
+
+    Args:  q, k, v: [B, H, S, D].
+    Returns: [B, H, S, D].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = q.shape[2]
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None, :, :], scores, -1e9)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v)
+
+
+def adam_update_ref(p, g, m, v, t, lr=1e-3, b1=ADAM_B1, b2=ADAM_B2, eps=ADAM_EPS):
+    """One Adam step. ``t`` is the 1-based step count (scalar).
+
+    Returns (p_new, m_new, v_new).
+    """
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - b1**t)
+    v_hat = v_new / (1.0 - b2**t)
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new

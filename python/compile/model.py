@@ -1,0 +1,283 @@
+"""Layer-2 JAX models (build-time only).
+
+Two computations, both calling the Layer-1 Pallas kernels so that they
+lower into the same HLO modules the Rust runtime executes:
+
+1. The **GNN Fused-Op Estimator** (paper §4.3): 6 graph-attention layers
+   (the ``gat_attention`` Pallas kernel) encode a fused-op subgraph, a
+   masked sum pools node embeddings into the fused-op embedding (eq. (2)),
+   and a 3-layer regression MLP predicts execution time. Trained with MSE
+   in log space.
+
+2. A small **transformer LM train step** — the end-to-end workload the
+   distributed-enactment example trains for real. The attention uses the
+   ``causal_attention`` Pallas kernel; the optimizer uses the fused
+   ``adam_update`` kernel. Gradient computation and the optimizer step are
+   exported as *separate* artifacts so the Rust ring-AllReduce can average
+   gradients between them (synchronous data parallelism).
+
+Parameters cross the Rust boundary as one flat f32 vector (padded to the
+Adam kernel's block size); the pytree structure lives only here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import adam_update, causal_attention, gat_attention
+from .kernels.adam import BLOCK as ADAM_BLOCK
+
+# ---------------------------------------------------------------------------
+# Feature encoding contract with rust/src/runtime/gnn.rs — keep in sync.
+# ---------------------------------------------------------------------------
+
+N_OP_KINDS = 40          # graph::OpKind::ALL
+N_SCALAR_FEATS = 9       # per-op: 0.2*ln(time_ms+1e-5), 0.2*ln(MB_in+1e-4),
+                         # 0.2*ln(MB_out+1e-4), 0.2*ln(GFLOP+1e-5), dup flag;
+                         # broadcast: 0.2*ln(fused-node boundary MB in/out)
+                         # (bandwidth-bound fused kernels are priced by
+                         # boundary traffic, which no single member knows);
+                         # structural: has-internal-consumer,
+                         # has-internal-producer flags
+FEAT_DIM = N_OP_KINDS + N_SCALAR_FEATS
+MAX_NODES = 64           # fused groups larger than this use the analytical
+                         # fallback on the Rust side
+GNN_BATCH = 64           # static batch of the AOT artifacts (search-time
+                         # queries arrive in small bursts; a modest batch
+                         # keeps per-call CPU latency low)
+
+GNN_HIDDEN = 64
+GNN_HEADS = 4
+GNN_LAYERS = 6           # paper §5.2: 6 graph conv layers
+GNN_MLP = (64, 32, 1)    # 3 dense regression layers
+GNN_LR = 2e-3
+
+
+def init_gnn_params(key):
+    """Initialize the estimator's parameter pytree."""
+    params = {}
+    k_in, key = jax.random.split(key)
+    params["w_in"] = jax.random.normal(k_in, (FEAT_DIM, GNN_HIDDEN)) * (
+        1.0 / jnp.sqrt(FEAT_DIM)
+    )
+    params["b_in"] = jnp.zeros((GNN_HIDDEN,))
+    for l in range(GNN_LAYERS):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        params[f"gat{l}_src"] = jax.random.normal(k1, (GNN_HIDDEN, GNN_HEADS)) * 0.1
+        params[f"gat{l}_dst"] = jax.random.normal(k2, (GNN_HIDDEN, GNN_HEADS)) * 0.1
+        params[f"gat{l}_w"] = jax.random.normal(k3, (GNN_HIDDEN, GNN_HIDDEN)) * (
+            1.0 / jnp.sqrt(GNN_HIDDEN)
+        )
+        params[f"gat{l}_b"] = jnp.zeros((GNN_HIDDEN,))
+    dim = GNN_HIDDEN
+    for i, out in enumerate(GNN_MLP):
+        k1, key = jax.random.split(key)
+        params[f"mlp{i}_w"] = jax.random.normal(k1, (dim, out)) * (1.0 / jnp.sqrt(dim))
+        params[f"mlp{i}_b"] = jnp.zeros((out,))
+        dim = out
+    return params
+
+
+def _gnn_forward_log(params, feats, adj, mask):
+    """Regression output y = log1p(time_ms) for fused-op subgraphs.
+
+    Args:
+      params: pytree from :func:`init_gnn_params`.
+      feats: [B, N, FEAT_DIM] node features (padded rows zero).
+      adj:   [B, N, N] adjacency in *both* directions + self loops for live
+             nodes (message passing over data deps, paper eq. (1)).
+      mask:  [B, N] 1.0 for live nodes.
+
+    Returns:
+      [B] predicted execution time in ms (positive).
+    """
+    h = jnp.tanh(feats @ params["w_in"] + params["b_in"])
+    h = h * mask[:, :, None]
+    for l in range(GNN_LAYERS):
+        agg = gat_attention(h, adj, params[f"gat{l}_src"], params[f"gat{l}_dst"])
+        h2 = jnp.tanh(agg @ params[f"gat{l}_w"] + params[f"gat{l}_b"])
+        h = (h + h2) * mask[:, :, None]  # residual + re-mask padding
+    # Fused-op embedding: masked sum over member ops (paper eq. (2)).
+    g = jnp.sum(h * mask[:, :, None], axis=1)
+    x = g
+    for i in range(len(GNN_MLP)):
+        x = x @ params[f"mlp{i}_w"] + params[f"mlp{i}_b"]
+        if i + 1 < len(GNN_MLP):
+            x = jnp.maximum(x, 0.0)
+    return x[:, 0]  # y = ln(time_ms), unconstrained
+
+
+def gnn_forward(params, feats, adj, mask):
+    """Predicted execution time in ms (positive)."""
+    return jnp.exp(_gnn_forward_log(params, feats, adj, mask))
+
+
+def gnn_loss(params, feats, adj, mask, target_ms):
+    """MSE in ln space: |Δln t| IS the relative error, so a 20 µs op and a
+    30 ms op contribute equally — the paper's error metric (|pred−real|/
+    real) is exactly what this optimizes."""
+    y = _gnn_forward_log(params, feats, adj, mask)
+    return jnp.mean((y - jnp.log(jnp.maximum(target_ms, 1e-5))) ** 2)
+
+
+# --- flat-vector packaging --------------------------------------------------
+
+
+def _pad_to_block(flat):
+    n = flat.shape[0]
+    pad = (-n) % ADAM_BLOCK
+    return jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)]), n
+
+
+def gnn_flat_spec(key=None):
+    """(padded_len, unravel, initial_flat) for the estimator parameters."""
+    params = init_gnn_params(key if key is not None else jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(params)
+    padded, n = _pad_to_block(flat)
+    return padded.shape[0], (unravel, n), padded
+
+
+def make_gnn_fns():
+    """Flat-parameter entry points for AOT export."""
+    _, (unravel, n), _ = gnn_flat_spec()
+
+    def infer(flat, feats, adj, mask):
+        params = unravel(flat[:n])
+        return (gnn_forward(params, feats, adj, mask),)
+
+    def train_step(flat, m, v, t, feats, adj, mask, target_ms):
+        def loss_flat(f):
+            return gnn_loss(unravel(f[:n]), feats, adj, mask, target_ms)
+
+        loss, grad = jax.value_and_grad(loss_flat)(flat)
+        p2, m2, v2 = adam_update(flat, grad, m, v, t, lr=GNN_LR)
+        return loss, p2, m2, v2
+
+    return infer, train_step
+
+
+# ---------------------------------------------------------------------------
+# Transformer language model (the end-to-end training workload).
+# ---------------------------------------------------------------------------
+
+
+class LMConfig:
+    """Static transformer-LM configuration (shapes are baked into the AOT
+    artifacts). The default is CPU-friendly; scale up via aot.py flags."""
+
+    def __init__(self, vocab=256, d_model=128, n_heads=4, n_layers=2, d_ff=512,
+                 seq=64, batch=8, lr=3e-4):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_layers = n_layers
+        self.d_ff = d_ff
+        self.seq = seq
+        self.batch = batch
+        self.lr = lr
+
+    def describe(self):
+        return (f"vocab={self.vocab} d={self.d_model} h={self.n_heads} "
+                f"L={self.n_layers} ff={self.d_ff} s={self.seq} b={self.batch}")
+
+
+def init_lm_params(cfg, key):
+    params = {}
+    k, key = jax.random.split(key)
+    params["embed"] = jax.random.normal(k, (cfg.vocab, cfg.d_model)) * 0.02
+    for l in range(cfg.n_layers):
+        for name, shape in [
+            ("wq", (cfg.d_model, cfg.d_model)),
+            ("wk", (cfg.d_model, cfg.d_model)),
+            ("wv", (cfg.d_model, cfg.d_model)),
+            ("wo", (cfg.d_model, cfg.d_model)),
+            ("ff1", (cfg.d_model, cfg.d_ff)),
+            ("ff2", (cfg.d_ff, cfg.d_model)),
+        ]:
+            k, key = jax.random.split(key)
+            params[f"l{l}_{name}"] = jax.random.normal(k, shape) * (
+                1.0 / jnp.sqrt(shape[0])
+            )
+        params[f"l{l}_ln1"] = jnp.ones((cfg.d_model,))
+        params[f"l{l}_ln1b"] = jnp.zeros((cfg.d_model,))
+        params[f"l{l}_ln2"] = jnp.ones((cfg.d_model,))
+        params[f"l{l}_ln2b"] = jnp.zeros((cfg.d_model,))
+    params["ln_f"] = jnp.ones((cfg.d_model,))
+    params["ln_fb"] = jnp.zeros((cfg.d_model,))
+    k, key = jax.random.split(key)
+    params["head"] = jax.random.normal(k, (cfg.d_model, cfg.vocab)) * 0.02
+    return params
+
+
+def _layer_norm(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+
+def lm_forward(cfg, params, tokens):
+    """Next-token logits. tokens: [B, S] int32 → [B, S, vocab]."""
+    b, s = tokens.shape
+    h = params["embed"][tokens]  # [B, S, D]
+    # Sinusoid-free learned-position-free: add a fixed ramp (cheap, fine at
+    # this scale and keeps the parameter story simple).
+    pos = jnp.arange(s)[None, :, None] / float(s)
+    h = h + 0.1 * pos
+    dh = cfg.d_model // cfg.n_heads
+    for l in range(cfg.n_layers):
+        x = _layer_norm(h, params[f"l{l}_ln1"], params[f"l{l}_ln1b"])
+        q = (x @ params[f"l{l}_wq"]).reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+        k = (x @ params[f"l{l}_wk"]).reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+        v = (x @ params[f"l{l}_wv"]).reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+        ctx = causal_attention(q, k, v)  # Pallas kernel
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + ctx @ params[f"l{l}_wo"]
+        x = _layer_norm(h, params[f"l{l}_ln2"], params[f"l{l}_ln2b"])
+        h = h + jnp.maximum(x @ params[f"l{l}_ff1"], 0.0) @ params[f"l{l}_ff2"]
+    h = _layer_norm(h, params["ln_f"], params["ln_fb"])
+    return h @ params["head"]
+
+
+def lm_loss(cfg, params, tokens):
+    """Causal LM loss on a [B, S+1] token window."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = lm_forward(cfg, params, inputs)
+    logits = logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def lm_flat_spec(cfg, key=None):
+    params = init_lm_params(cfg, key if key is not None else jax.random.PRNGKey(42))
+    flat, unravel = ravel_pytree(params)
+    padded, n = _pad_to_block(flat)
+    return padded.shape[0], (unravel, n), padded
+
+
+def make_lm_fns(cfg):
+    """(grads_fn, adam_fn, eval_fn) over flat parameters, for AOT export.
+
+    * grads:  (flat, tokens[B,S+1] i32) → (loss, grads_flat) — run per
+      worker; gradients are ring-AllReduced in Rust between the two calls.
+    * adam:   (flat, grads, m, v, t) → (flat', m', v') — fused Pallas Adam.
+    * eval:   (flat, tokens) → (loss,) — held-out evaluation.
+    """
+    _, (unravel, n), _ = lm_flat_spec(cfg)
+
+    def grads(flat, tokens):
+        def loss_flat(f):
+            return lm_loss(cfg, unravel(f[:n]), tokens)
+
+        loss, grad = jax.value_and_grad(loss_flat)(flat)
+        return loss, grad
+
+    def adam(flat, grad, m, v, t):
+        return adam_update(flat, grad, m, v, t, lr=cfg.lr)
+
+    def evaluate(flat, tokens):
+        return (lm_loss(cfg, unravel(flat[:n]), tokens),)
+
+    return grads, adam, evaluate

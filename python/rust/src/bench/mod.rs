@@ -1,0 +1,1 @@
+//! Benchmark harness library (tables/figures; being populated).

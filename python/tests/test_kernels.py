@@ -1,0 +1,207 @@
+"""Kernel-vs-reference correctness: hypothesis sweeps over shapes/dtypes,
+assert_allclose against the pure-jnp oracles in kernels/ref.py.
+
+This is the CORE correctness signal for Layer 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import adam_update, causal_attention, gat_attention
+from compile.kernels.adam import BLOCK
+from compile.kernels.ref import (
+    adam_update_ref,
+    causal_attention_ref,
+    gat_attention_ref,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GAT kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    n=st.sampled_from([4, 8, 16, 64]),
+    d=st.sampled_from([8, 32, 64]),
+    heads=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**20),
+)
+def test_gat_matches_ref(b, n, d, heads, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    h = rand(ks[0], (b, n, d))
+    adj = (jax.random.uniform(ks[1], (b, n, n)) > 0.5).astype(jnp.float32)
+    adj = adj.at[:, jnp.arange(n), jnp.arange(n)].set(1.0)
+    w_src = rand(ks[2], (d, heads), scale=0.1)
+    w_dst = rand(ks[3], (d, heads), scale=0.1)
+    out = gat_attention(h, adj, w_src, w_dst)
+    ref = jnp.stack([gat_attention_ref(h[i], adj[i], w_src, w_dst) for i in range(b)])
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_gat_padded_nodes_produce_zeros():
+    # Padded rows: zero features, zero adjacency (no self loop).
+    b, n, d, heads = 2, 8, 16, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = rand(ks[0], (b, n, d))
+    h = h.at[:, 4:, :].set(0.0)
+    adj = jnp.zeros((b, n, n))
+    adj = adj.at[:, :4, :4].set(1.0)
+    out = gat_attention(h, adj, rand(ks[1], (d, heads)), rand(ks[2], (d, heads)))
+    # Rows 4.. aggregate nothing: all-masked softmax denominators are 0.
+    assert_allclose(np.asarray(out[:, 4:, :]), 0.0, atol=1e-6)
+
+
+def test_gat_self_loop_only_is_identity_mean():
+    # With adjacency = I, each node attends only to itself: out == h.
+    b, n, d, heads = 1, 6, 8, 3
+    h = rand(jax.random.PRNGKey(1), (b, n, d))
+    adj = jnp.eye(n)[None]
+    out = gat_attention(h, adj, jnp.zeros((d, heads)), jnp.zeros((d, heads)))
+    assert_allclose(np.asarray(out), np.asarray(h), rtol=1e-5, atol=1e-6)
+
+
+def test_gat_gradients_flow():
+    b, n, d, heads = 2, 8, 16, 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    h = rand(ks[0], (b, n, d))
+    adj = jnp.ones((b, n, n))
+    w_src = rand(ks[1], (d, heads), scale=0.1)
+    w_dst = rand(ks[2], (d, heads), scale=0.1)
+
+    def f(h_, ws, wd):
+        return jnp.sum(gat_attention(h_, adj, ws, wd) ** 2)
+
+    def f_ref(h_, ws, wd):
+        out = jnp.stack([gat_attention_ref(h_[i], adj[i], ws, wd) for i in range(b)])
+        return jnp.sum(out**2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(h, w_src, w_dst)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(h, w_src, w_dst)
+    for a, bb in zip(g, gr):
+        assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Causal attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 16, 64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**20),
+)
+def test_attention_matches_ref(b, h, s, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(ks[i], (b, h, s, d)) for i in range(3))
+    assert_allclose(
+        np.asarray(causal_attention(q, k, v)),
+        np.asarray(causal_attention_ref(q, k, v)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_attention_is_causal():
+    # Output at position t must not depend on inputs at positions > t.
+    b, h, s, d = 1, 1, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (rand(ks[i], (b, h, s, d)) for i in range(3))
+    out1 = causal_attention(q, k, v)
+    k2 = k.at[:, :, 5:, :].set(99.0)
+    v2 = v.at[:, :, 5:, :].set(-99.0)
+    out2 = causal_attention(q, k2, v2)
+    assert_allclose(np.asarray(out1[:, :, :5]), np.asarray(out2[:, :, :5]), rtol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, :, 5:]), np.asarray(out2[:, :, 5:]))
+
+
+def test_attention_first_token_is_v0():
+    b, h, s, d = 1, 2, 6, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q, k, v = (rand(ks[i], (b, h, s, d)) for i in range(3))
+    out = causal_attention(q, k, v)
+    assert_allclose(np.asarray(out[:, :, 0]), np.asarray(v[:, :, 0]), rtol=1e-5)
+
+
+def test_attention_bf16_runs():
+    b, h, s, d = 1, 1, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q, k, v = (rand(ks[i], (b, h, s, d), dtype=jnp.bfloat16) for i in range(3))
+    out = causal_attention(q, k, v)
+    ref = causal_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    assert_allclose(
+        np.asarray(out.astype(jnp.float32)), np.asarray(ref), rtol=5e-2, atol=5e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# Adam kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 4),
+    t=st.integers(1, 1000),
+    lr=st.sampled_from([1e-4, 1e-3, 1e-2]),
+    seed=st.integers(0, 2**20),
+)
+def test_adam_matches_ref(nblocks, t, lr, seed):
+    n = nblocks * BLOCK
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p, g, m, v = (rand(ks[i], (n,)) for i in range(4))
+    v = jnp.abs(v)
+    pn, mn, vn = adam_update(p, g, m, v, jnp.array([float(t)]), lr=lr)
+    pr, mr, vr = adam_update_ref(p, g, m, v, float(t), lr=lr)
+    # f32 pow(b, t) in the kernel vs f64 promotion in the ref: allow a
+    # few ULP of drift in the bias-corrected moments.
+    assert_allclose(np.asarray(pn), np.asarray(pr), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(mn), np.asarray(mr), rtol=1e-5, atol=1e-8)
+    assert_allclose(np.asarray(vn), np.asarray(vr), rtol=1e-5, atol=1e-8)
+
+
+def test_adam_zero_grad_padding_fixed_point():
+    # Zero-padded tail (g = m = v = 0) must leave p unchanged.
+    n = BLOCK
+    p = jnp.ones((n,))
+    z = jnp.zeros((n,))
+    pn, mn, vn = adam_update(p, z, z, z, jnp.array([3.0]))
+    assert_allclose(np.asarray(pn), np.asarray(p), atol=1e-7)
+    assert_allclose(np.asarray(mn), 0.0)
+    assert_allclose(np.asarray(vn), 0.0)
+
+
+def test_adam_rejects_unaligned():
+    n = BLOCK + 1
+    z = jnp.zeros((n,))
+    with pytest.raises(AssertionError):
+        adam_update(z, z, z, z, jnp.array([1.0]))
+
+
+def test_adam_descends_quadratic():
+    # Minimizing 0.5*||p||^2: repeated fused-Adam steps shrink the norm.
+    n = BLOCK
+    p = rand(jax.random.PRNGKey(11), (n,))
+    m = jnp.zeros((n,))
+    v = jnp.zeros((n,))
+    norm0 = float(jnp.linalg.norm(p))
+    for t in range(1, 51):
+        g = p  # grad of 0.5 ||p||^2
+        p, m, v = adam_update(p, g, m, v, jnp.array([float(t)]), lr=1e-2)
+    assert float(jnp.linalg.norm(p)) < norm0 * 0.8

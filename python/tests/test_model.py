@@ -1,0 +1,111 @@
+"""L2 model checks: GNN estimator shapes/learning, transformer LM
+shapes/learning, and flat-parameter round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.model import LMConfig
+
+
+def synth_batch(key, b=8, n=16):
+    """A toy supervised batch: label = total 'time' feature mass, so the
+    GNN has an easy learnable signal."""
+    ks = jax.random.split(key, 3)
+    feats = jnp.zeros((b, n, model.FEAT_DIM))
+    kinds = jax.random.randint(ks[0], (b, n), 0, model.N_OP_KINDS)
+    feats = feats.at[jnp.arange(b)[:, None], jnp.arange(n)[None, :], kinds].set(1.0)
+    times = jax.random.uniform(ks[1], (b, n)) * 0.5
+    feats = feats.at[:, :, model.N_OP_KINDS].set(times)
+    adj = (jax.random.uniform(ks[2], (b, n, n)) > 0.7).astype(jnp.float32)
+    adj = adj.at[:, jnp.arange(n), jnp.arange(n)].set(1.0)
+    adj = jnp.maximum(adj, jnp.transpose(adj, (0, 2, 1)))
+    mask = jnp.ones((b, n))
+    target = jnp.sum(times, axis=1)
+    return feats, adj, mask, target
+
+
+def test_gnn_forward_shape_and_positivity():
+    params = model.init_gnn_params(jax.random.PRNGKey(0))
+    feats, adj, mask, _ = synth_batch(jax.random.PRNGKey(1))
+    pred = model.gnn_forward(params, feats, adj, mask)
+    assert pred.shape == (8,)
+    assert bool(jnp.all(pred >= 0.0))
+
+
+def test_gnn_padding_invariance():
+    # Adding padded (masked-out) nodes must not change predictions.
+    params = model.init_gnn_params(jax.random.PRNGKey(0))
+    feats, adj, mask, _ = synth_batch(jax.random.PRNGKey(2), b=4, n=8)
+    pred_small = model.gnn_forward(params, feats, adj, mask)
+    n2 = 16
+    feats2 = jnp.zeros((4, n2, model.FEAT_DIM)).at[:, :8].set(feats)
+    adj2 = jnp.zeros((4, n2, n2)).at[:, :8, :8].set(adj)
+    mask2 = jnp.zeros((4, n2)).at[:, :8].set(1.0)
+    pred_big = model.gnn_forward(params, feats2, adj2, mask2)
+    assert_allclose(np.asarray(pred_small), np.asarray(pred_big), rtol=1e-4, atol=1e-5)
+
+
+def test_gnn_learns_synthetic_signal():
+    _, (unravel, n), flat0 = model.gnn_flat_spec()
+    _, train = model.make_gnn_fns()
+    train = jax.jit(train)
+    feats, adj, mask, target = synth_batch(jax.random.PRNGKey(3), b=model.GNN_BATCH, n=model.MAX_NODES)
+    flat = flat0
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for t in range(1, 41):
+        loss, flat, m, v = train(flat, m, v, jnp.array([float(t)]), feats, adj, mask, target)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+
+
+def test_lm_forward_shapes():
+    cfg = LMConfig()
+    params = model.init_lm_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((2, cfg.seq), dtype=jnp.int32)
+    logits = model.lm_forward(cfg, params, tokens)
+    assert logits.shape == (2, cfg.seq, cfg.vocab)
+
+
+def test_lm_loss_near_uniform_at_init():
+    cfg = LMConfig()
+    params = model.init_lm_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, cfg.seq + 1), 0, cfg.vocab)
+    loss = model.lm_loss(cfg, params, tokens)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_lm_trains_on_repetitive_data():
+    cfg = LMConfig(d_model=64, n_layers=1, d_ff=128, seq=32, batch=8)
+    _, _, flat = model.lm_flat_spec(cfg)
+    grads, adam, _ = model.make_lm_fns(cfg)
+    grads = jax.jit(grads)
+    adam = jax.jit(adam)
+    # Periodic token stream: trivially predictable.
+    base = jnp.arange(cfg.seq + 1, dtype=jnp.int32) % 7
+    tokens = jnp.tile(base[None, :], (cfg.batch, 1))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    first = None
+    for t in range(1, 151):
+        loss, g = grads(flat, tokens)
+        flat, m, v = adam(flat, g, m, v, jnp.array([float(t)]))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.5, (first, float(loss))
+
+
+def test_flat_roundtrip_lengths():
+    plen, (unravel, n), flat = model.gnn_flat_spec()
+    assert flat.shape == (plen,)
+    assert plen % 1024 == 0
+    assert n <= plen
+    cfg = LMConfig()
+    plen2, (_, n2), flat2 = model.lm_flat_spec(cfg)
+    assert flat2.shape == (plen2,)
+    assert plen2 % 1024 == 0
+    assert n2 <= plen2

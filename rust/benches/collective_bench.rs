@@ -1,0 +1,31 @@
+//! Collective substrate: in-process ring AllReduce throughput across
+//! message sizes and world sizes (the enactment path's real collective).
+
+use disco::collective::run_workers;
+use disco::util::timer::fmt_ns;
+use std::time::Instant;
+
+fn main() {
+    for world in [2usize, 4, 8] {
+        for log2 in [10usize, 14, 18, 22] {
+            let elems = 1usize << log2;
+            let iters = if log2 >= 18 { 20 } else { 200 };
+            let t = Instant::now();
+            run_workers(world, move |peer| {
+                let mut data = vec![peer.rank as f32; elems];
+                for _ in 0..iters {
+                    peer.allreduce_sum(&mut data);
+                }
+            });
+            let per = t.elapsed().as_nanos() as f64 / iters as f64;
+            let bytes = elems * 4;
+            let gbps = bytes as f64 / (per / 1e9) / 1e9;
+            println!(
+                "allreduce world={world} size={:>8}B: {:>12}/op  {:>6.2} GB/s algbw",
+                bytes,
+                fmt_ns(per),
+                gbps
+            );
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! L3 hot path: fusion rewrite application + candidate enumeration +
+//! candidate cloning (the per-search-step costs).
+
+use disco::fusion::{self, FusionKind};
+use disco::models::{build, ModelSpec};
+use disco::util::rng::Rng;
+use disco::util::timer::{bench_quick, black_box};
+
+fn main() {
+    let g = build(&ModelSpec::transformer_base(), 12);
+    println!("transformer-full: {} live nodes", g.live_count());
+
+    bench_quick("clone/transformer-full", || {
+        black_box(g.clone());
+    });
+
+    bench_quick("op_fusion_candidates/transformer-full", || {
+        black_box(fusion::op_fusion_candidates(&g));
+    });
+
+    let cands = fusion::op_fusion_candidates(&g);
+    let mut rng = Rng::new(7);
+    bench_quick("fuse_ops(nondup)/transformer-full", || {
+        let mut h = g.clone();
+        let (p, s) = cands[rng.gen_range(cands.len())];
+        let _ = black_box(fusion::fuse_ops(&mut h, p, s, FusionKind::NonDuplicate));
+    });
+
+    bench_quick("ar_neighbors/transformer-full", || {
+        let ars = g.allreduces();
+        black_box(fusion::ar_neighbors(&g, ars[ars.len() / 2]));
+    });
+
+    bench_quick("fingerprint/transformer-full", || {
+        black_box(g.fingerprint());
+    });
+
+    bench_quick("to_json/transformer-full", || {
+        black_box(g.to_json());
+    });
+}

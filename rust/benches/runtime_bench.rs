@@ -1,0 +1,66 @@
+//! PJRT runtime hot paths: GNN batch prediction latency (the search-time
+//! estimator query) and LM train-step latency (the enactment workload).
+//! Skips quietly when artifacts are missing.
+
+use disco::estimator::AnalyticalFused;
+use disco::graph::{FusedGroup, OpKind, OrigOp};
+use disco::runtime::gnn::GnnPredictor;
+use disco::runtime::trainer::Corpus;
+use disco::runtime::{lit_f32, lit_i32, Manifest, Runtime};
+use disco::util::timer::{bench_quick, black_box};
+
+fn chain(n: usize) -> FusedGroup {
+    FusedGroup {
+        ops: (0..n)
+            .map(|i| OrigOp {
+                orig_id: i,
+                kind: OpKind::Mul,
+                flops: 1e6,
+                bytes_in: 4e5,
+                bytes_out: 4e5,
+                time_ms: 0.02,
+                duplicated: false,
+            })
+            .collect(),
+        edges: (1..n).map(|i| (i - 1, i)).collect(),
+    }
+}
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP runtime_bench: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+
+    // GNN predictor latency at various batch fill levels.
+    let fallback = AnalyticalFused { launch_ms: 0.005, bw_bytes_per_ms: 4.8e8 };
+    let pred = GnnPredictor::load(&rt, fallback).unwrap();
+    for fill in [1usize, 8, 64] {
+        let items: Vec<_> = (0..fill).map(|i| (chain(2 + i % 30), 4e5, 4e5)).collect();
+        bench_quick(&format!("gnn_predict/batch_fill={fill}"), || {
+            black_box(pred.predict(&items).unwrap());
+        });
+    }
+
+    // LM gradient step latency (one worker).
+    let grads = rt.load("lm_grads").unwrap();
+    let lm = rt.manifest.raw.get("lm");
+    let flat_len = lm.get("flat_len").as_usize().unwrap();
+    let batch = lm.get("batch").as_usize().unwrap();
+    let seq = lm.get("seq").as_usize().unwrap();
+    let params = rt.manifest.load_f32(lm.get("params").as_str().unwrap()).unwrap();
+    let corpus = Corpus::synthetic(1 << 14, 1);
+    let tokens = corpus.batch(batch, seq, 0, 1, 0);
+    bench_quick("lm_grads/one_step", || {
+        black_box(
+            grads
+                .run(&[
+                    lit_f32(&params, &[flat_len]).unwrap(),
+                    lit_i32(&tokens, &[batch, seq + 1]).unwrap(),
+                ])
+                .unwrap(),
+        );
+    });
+}

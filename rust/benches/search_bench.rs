@@ -1,0 +1,39 @@
+//! L3 end-to-end: backtracking-search throughput (evals/s) and one
+//! fixed-budget search per representative model — the engineering numbers
+//! behind Tables 3/4's search-time column.
+
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::models::{build, ModelKind, ModelSpec};
+use disco::network::Cluster;
+use disco::profiler::profile;
+use disco::search::{backtracking_search, SearchConfig};
+use disco::util::timer::black_box;
+
+fn main() {
+    let cluster = Cluster::cluster_a();
+    let device = DeviceModel::gtx1080ti();
+
+    for (name, spec) in [
+        ("rnnlm-fast", ModelSpec { kind: ModelKind::Rnnlm, batch: 16, depth_scale: 0.25 }),
+        ("resnet50-fast", ModelSpec { kind: ModelKind::ResNet50, batch: 8, depth_scale: 0.25 }),
+        ("transformer-full", ModelSpec::transformer_base()),
+    ] {
+        let g = build(&spec, cluster.num_devices());
+        let prof = profile(&g, &device, &cluster, 2, 1);
+        let est = CostEstimator::oracle(&prof, &device);
+        let cfg = SearchConfig { unchanged_limit: 200, seed: 3, ..Default::default() };
+        let start = std::time::Instant::now();
+        let r = backtracking_search(&g, &est, &cfg);
+        let dt = start.elapsed().as_secs_f64();
+        let (hits, misses) = est.cache_stats();
+        println!(
+            "search/{name:<18} {:>6} evals in {dt:>6.2}s = {:>7.0} evals/s   {:.2} -> {:.2} ms   cache {hits}h/{misses}m",
+            r.evals,
+            r.evals as f64 / dt,
+            r.initial_cost_ms,
+            r.best_cost_ms,
+        );
+        black_box(r);
+    }
+}

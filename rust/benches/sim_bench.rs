@@ -1,0 +1,39 @@
+//! L3 hot path: cost-model simulation throughput (`Cost(H)` is called
+//! thousands of times per search — DESIGN.md §8 target ≥ 10k simulated
+//! ops/ms).
+
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::models::{build, ModelKind, ModelSpec};
+use disco::network::Cluster;
+use disco::profiler::profile;
+use disco::sim::hifi::{execute_real, HifiOptions};
+use disco::sim::{simulate, SimOptions};
+use disco::util::timer::{bench_quick, black_box};
+
+fn main() {
+    let cluster = Cluster::cluster_a();
+    let device = DeviceModel::gtx1080ti();
+
+    for (name, spec) in [
+        ("rnnlm-fast", ModelSpec { kind: ModelKind::Rnnlm, batch: 16, depth_scale: 0.25 }),
+        ("transformer-full", ModelSpec::transformer_base()),
+        ("bert-full", ModelSpec::bert_base()),
+    ] {
+        let g = build(&spec, cluster.num_devices());
+        let prof = profile(&g, &device, &cluster, 2, 1);
+        let est = CostEstimator::oracle(&prof, &device);
+        let ops = g.live_count();
+        let r = bench_quick(&format!("simulate/{name} ({ops} ops)"), || {
+            black_box(simulate(&g, &est, SimOptions::default()));
+        });
+        let ops_per_ms = ops as f64 / (r.mean_ns / 1e6);
+        println!("  -> {ops_per_ms:.0} simulated ops/ms");
+    }
+
+    // Hi-fi execution (Table 2's "real run") — noisy, multi-iteration.
+    let g = build(&ModelSpec { kind: ModelKind::Rnnlm, batch: 16, depth_scale: 0.25 }, 12);
+    bench_quick("hifi_execute/rnnlm-fast x5 iters", || {
+        black_box(execute_real(&g, &device, &cluster, &HifiOptions::default()));
+    });
+}

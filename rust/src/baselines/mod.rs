@@ -1,0 +1,398 @@
+//! Baseline fusion schemes the paper compares against (§6.1):
+//!
+//! * [`no_fusion`] — JAX_no_fusion: the graph as-is.
+//! * [`xla_op_fusion`] — JAX_op_fusion: XLA's rule-based post-order op
+//!   fusion (extensive fusion of injective producers / elementwise
+//!   epilogues, no communication awareness).
+//! * [`ar_threshold_fusion`] — JAX_AllReduce_fusion: XLA's AllReduce
+//!   combiner — greedily merge neighbouring AllReduces (in gradient
+//!   production order) up to a fixed size threshold (30 MB default).
+//! * [`jax_default`] — both of the above, op fusion first (the separate,
+//!   sequential passes the paper criticizes).
+//! * [`pytorch_ddp`] — PyTorch DDP: no op fusion, 25 MB gradient buckets
+//!   overlapping with backward.
+//! * [`tvm_rule_fusion`] — TVM's pattern rules (injective/reduction/
+//!   complex-out-fusible), for the Fig. 8 single-device comparison.
+//! * [`ngraph_fusion`] — nGraph-style extensive elementwise-chain fusion.
+//! * [`taso_like`] — greedy best-improvement local search over the op
+//!   substitution (fusion) space with a cost model, standing in for TASO's
+//!   backtracking graph-substitution search (Fig. 8; see DESIGN.md §10).
+//!
+//! All baselines are pure graph→graph functions; `Cluster`/cost knowledge
+//! enters only where the original system had it.
+
+use crate::fusion::{self, FusionKind};
+use crate::graph::{NodeId, OpKind, PatternClass, TrainingGraph};
+use crate::sim::{simulate, CostSource, SimOptions};
+use crate::util::rng::Rng;
+
+/// JAX_no_fusion: identity.
+pub fn no_fusion(g: &TrainingGraph) -> TrainingGraph {
+    g.clone()
+}
+
+/// Would XLA's heuristic fuse producer `p` into consumer `s`?
+/// Injective producers fuse into anything; heavy producers accept
+/// injective epilogues. Two heavy ops never fuse.
+fn xla_fusible_pair(g: &TrainingGraph, p: NodeId, s: NodeId) -> bool {
+    let pk = effective_class(g, p);
+    let sk = effective_class(g, s);
+    match (pk, sk) {
+        (PatternClass::Injective, _) => true,
+        (_, PatternClass::Injective) => true,
+        _ => false,
+    }
+}
+
+/// Pattern class of a (possibly fused) node: a fused group takes the
+/// "heaviest" class of its members.
+fn effective_class(g: &TrainingGraph, id: NodeId) -> PatternClass {
+    let n = &g.nodes[id];
+    match &n.fused {
+        None => n.kind.pattern_class(),
+        Some(grp) => {
+            let mut cls = PatternClass::Injective;
+            for o in &grp.ops {
+                cls = heavier(cls, o.kind.pattern_class());
+            }
+            cls
+        }
+    }
+}
+
+fn heavier(a: PatternClass, b: PatternClass) -> PatternClass {
+    use PatternClass::*;
+    let rank = |c: PatternClass| match c {
+        Injective => 0,
+        Reduction => 1,
+        ComplexOutFusible => 2,
+        Opaque => 3,
+    };
+    if rank(a) >= rank(b) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Greedy rule-driven fusion to fixpoint: walk consumers in post order
+/// (reverse topological), fusing each with an eligible predecessor.
+fn rule_fusion_fixpoint<F>(g: &TrainingGraph, eligible: F, max_passes: usize) -> TrainingGraph
+where
+    F: Fn(&TrainingGraph, NodeId, NodeId) -> bool,
+{
+    let mut g = g.clone();
+    for _pass in 0..max_passes {
+        let mut changed = false;
+        let mut order = g.topo_order().expect("valid graph");
+        order.reverse(); // post order: consumers before producers
+        for id in order {
+            if g.nodes[id].deleted {
+                continue;
+            }
+            let k = g.nodes[id].kind;
+            if !(k.is_fusible_compute() || k == OpKind::Fused) {
+                continue;
+            }
+            let preds: Vec<NodeId> = g.nodes[id].inputs.clone();
+            for p in preds {
+                if g.nodes[p].deleted {
+                    continue;
+                }
+                let pk = g.nodes[p].kind;
+                if !(pk.is_fusible_compute() || pk == OpKind::Fused) {
+                    continue;
+                }
+                if !eligible(&g, p, id) {
+                    continue;
+                }
+                if fusion::fuse_ops(&mut g, p, id, FusionKind::NonDuplicate).is_ok() {
+                    changed = true;
+                    break; // this consumer is gone; move on
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    g
+}
+
+/// JAX_op_fusion: XLA default heuristic op fusion (post order, extensive).
+pub fn xla_op_fusion(g: &TrainingGraph) -> TrainingGraph {
+    rule_fusion_fixpoint(g, xla_fusible_pair, 16)
+}
+
+/// XLA AllReduce combiner / Horovod-style tensor fusion: merge neighbouring
+/// AllReduces in gradient production order until the fused tensor reaches
+/// `threshold_bytes`.
+pub fn ar_threshold_fusion(g: &TrainingGraph, threshold_bytes: f64) -> TrainingGraph {
+    let mut g = g.clone();
+    // Production order ≈ topological position of the AllReduce node (its
+    // producers all precede it).
+    let order = g.topo_order().expect("valid graph");
+    let ars: Vec<NodeId> = order
+        .into_iter()
+        .filter(|&id| !g.nodes[id].deleted && g.nodes[id].kind == OpKind::AllReduce)
+        .collect();
+    let mut cur: Option<NodeId> = None;
+    for ar in ars {
+        if g.nodes[ar].deleted {
+            continue;
+        }
+        match cur {
+            None => cur = Some(ar),
+            Some(c) => {
+                if g.nodes[c].bytes_out < threshold_bytes
+                    && fusion::are_ar_neighbors(&g, c, ar)
+                {
+                    match fusion::fuse_allreduce(&mut g, c, ar) {
+                        Ok(f) => cur = Some(f),
+                        Err(_) => cur = Some(ar),
+                    }
+                } else {
+                    cur = Some(ar);
+                }
+            }
+        }
+    }
+    g
+}
+
+/// XLA's default AllReduce-combiner threshold (30 MB).
+pub const XLA_AR_THRESHOLD: f64 = 30.0 * 1024.0 * 1024.0;
+/// PyTorch DDP's default bucket size (25 MB).
+pub const DDP_BUCKET_BYTES: f64 = 25.0 * 1024.0 * 1024.0;
+
+/// JAX_default: XLA op fusion, then the AllReduce combiner — two separate
+/// passes, communication-oblivious op fusion first.
+pub fn jax_default(g: &TrainingGraph) -> TrainingGraph {
+    ar_threshold_fusion(&xla_op_fusion(g), XLA_AR_THRESHOLD)
+}
+
+/// PyTorch DDP: gradient bucketing only (25 MB buckets), no op fusion.
+pub fn pytorch_ddp(g: &TrainingGraph) -> TrainingGraph {
+    ar_threshold_fusion(g, DDP_BUCKET_BYTES)
+}
+
+/// TVM fusion rules (§7.1): injective chains fuse; reductions absorb input
+/// injectives; complex-out-fusible ops absorb elementwise epilogues.
+fn tvm_eligible(g: &TrainingGraph, p: NodeId, s: NodeId) -> bool {
+    use PatternClass::*;
+    match (effective_class(g, p), effective_class(g, s)) {
+        (Injective, Injective) => true,
+        (Injective, Reduction) => true,
+        (ComplexOutFusible, Injective) => true,
+        _ => false,
+    }
+}
+
+/// TVM-style rule fusion.
+pub fn tvm_rule_fusion(g: &TrainingGraph) -> TrainingGraph {
+    rule_fusion_fixpoint(g, tvm_eligible, 16)
+}
+
+/// nGraph-style fusion: elementwise chains (and norm folding) only.
+fn ngraph_eligible(g: &TrainingGraph, p: NodeId, s: NodeId) -> bool {
+    use PatternClass::*;
+    matches!(
+        (effective_class(g, p), effective_class(g, s)),
+        (Injective, Injective) | (Injective, Reduction)
+    )
+}
+
+/// nGraph-style extensive elementwise fusion.
+pub fn ngraph_fusion(g: &TrainingGraph) -> TrainingGraph {
+    rule_fusion_fixpoint(g, ngraph_eligible, 16)
+}
+
+/// TASO-like cost-model-guided greedy substitution search: at each step,
+/// sample fusion candidates, apply the single best cost improvement, stop
+/// when no sampled candidate improves (or the step budget runs out).
+pub fn taso_like(
+    g: &TrainingGraph,
+    costs: &dyn CostSource,
+    sim: SimOptions,
+    max_steps: usize,
+    seed: u64,
+) -> TrainingGraph {
+    let mut rng = Rng::new(seed);
+    let mut cur = g.clone();
+    let mut cur_cost = simulate(&cur, costs, sim).makespan_ms;
+    for _ in 0..max_steps {
+        let cands = fusion::op_fusion_candidates(&cur);
+        if cands.is_empty() {
+            break;
+        }
+        // Sample up to 48 candidates per step to bound cost-model calls.
+        let sample: Vec<(NodeId, NodeId)> = if cands.len() <= 48 {
+            cands
+        } else {
+            (0..48).map(|_| cands[rng.gen_range(cands.len())]).collect()
+        };
+        let mut best: Option<(f64, TrainingGraph)> = None;
+        for &(p, s) in &sample {
+            for kind in [FusionKind::NonDuplicate, FusionKind::Duplicate] {
+                let mut trial = cur.clone();
+                if fusion::fuse_ops(&mut trial, p, s, kind).is_err() {
+                    continue;
+                }
+                let c = simulate(&trial, costs, sim).makespan_ms;
+                if c < cur_cost && best.as_ref().map(|(bc, _)| c < *bc).unwrap_or(true) {
+                    best = Some((c, trial));
+                }
+            }
+        }
+        match best {
+            Some((c, gnext)) => {
+                cur_cost = c;
+                cur = gnext;
+            }
+            None => break,
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceModel;
+    use crate::estimator::CostEstimator;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::Role;
+    use crate::network::Cluster;
+    use crate::profiler;
+
+    fn cnn_ish() -> TrainingGraph {
+        let mut b = GraphBuilder::new("cnn", 12);
+        let x = b.constant("x", &[8, 3, 64, 64]);
+        let c1 = b.conv2d("c1", &[x], 8, 3, 64, 64, 16, 3, 1, Role::Forward);
+        let r1 = b.compute(OpKind::Relu, "r1", &[c1], &[8, 16, 64, 64], Role::Forward);
+        let bn = b.compute(OpKind::BatchNorm, "bn", &[r1], &[8, 16, 64, 64], Role::Forward);
+        let c2 = b.conv2d("c2", &[bn], 8, 16, 64, 64, 16, 3, 1, Role::Forward);
+        let r2 = b.compute(OpKind::Relu, "r2", &[c2], &[8, 16, 64, 64], Role::Forward);
+        for i in 0..4 {
+            let p = b.param(&format!("w{i}"), &[16 * 16 * 9]);
+            let gop = b.compute(
+                OpKind::Mul,
+                &format!("g{i}"),
+                &[r2],
+                &[16 * 16 * 9],
+                Role::Backward,
+            );
+            let ar = b.allreduce(&format!("ar{i}"), gop, &[16 * 16 * 9]);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn xla_fusion_reduces_kernels() {
+        let g = cnn_ish();
+        let fused = xla_op_fusion(&g);
+        assert!(fused.validate().is_ok());
+        assert!(fused.compute_ops().len() < g.compute_ops().len());
+        // No gradient bytes lost.
+        assert_eq!(fused.total_gradient_bytes(), g.total_gradient_bytes());
+    }
+
+    #[test]
+    fn xla_never_fuses_two_heavy_ops_directly() {
+        let mut b = GraphBuilder::new("h", 2);
+        let x = b.constant("x", &[64, 64]);
+        let m1 = b.matmul("m1", &[x], 1, 64, 64, 64, Role::Forward);
+        let m2 = b.matmul("m2", &[m1], 1, 64, 64, 64, Role::Forward);
+        let g = b.finish();
+        let fused = xla_op_fusion(&g);
+        // Both matmuls survive unfused.
+        assert!(!fused.nodes[m1].deleted);
+        assert!(!fused.nodes[m2].deleted);
+    }
+
+    #[test]
+    fn ar_combiner_respects_threshold() {
+        let mut b = GraphBuilder::new("ar", 8);
+        let x = b.constant("x", &[1024]);
+        let mut prev = x;
+        for i in 0..6 {
+            let gop =
+                b.compute(OpKind::Mul, &format!("g{i}"), &[prev], &[1024], Role::Backward);
+            b.allreduce(&format!("ar{i}"), gop, &[1024]);
+            prev = gop;
+        }
+        let g = b.finish();
+        // Tiny tensors, 16KB threshold: 4KB each, so ~4 per fused AR.
+        let fused = ar_threshold_fusion(&g, 16.0 * 1024.0);
+        let ars = fused.allreduces();
+        assert!(ars.len() < 6, "combiner did nothing");
+        assert_eq!(fused.total_gradient_bytes(), g.total_gradient_bytes());
+        // With an enormous threshold everything neighbouring merges.
+        let all = ar_threshold_fusion(&g, 1e12);
+        assert_eq!(all.allreduces().len(), 1);
+        // With a zero threshold nothing merges.
+        let none = ar_threshold_fusion(&g, 0.0);
+        assert_eq!(none.allreduces().len(), 6);
+    }
+
+    #[test]
+    fn jax_default_composes_both_passes() {
+        let g = cnn_ish();
+        let fused = jax_default(&g);
+        assert!(fused.validate().is_ok());
+        assert!(fused.compute_ops().len() < g.compute_ops().len());
+    }
+
+    #[test]
+    fn ddp_only_buckets() {
+        let g = cnn_ish();
+        let d = pytorch_ddp(&g);
+        // Same number of compute ops (no op fusion).
+        assert_eq!(d.compute_ops().len(), g.compute_ops().len());
+    }
+
+    #[test]
+    fn tvm_fuses_conv_epilogue() {
+        let g = cnn_ish();
+        let fused = tvm_rule_fusion(&g);
+        // conv+relu should merge: find a fused node containing Conv2D+Relu.
+        let has_conv_relu = fused.live().any(|n| {
+            n.fused
+                .as_ref()
+                .map(|grp| {
+                    grp.ops.iter().any(|o| o.kind == OpKind::Conv2D)
+                        && grp.ops.iter().any(|o| o.kind == OpKind::Relu)
+                })
+                .unwrap_or(false)
+        });
+        assert!(has_conv_relu);
+    }
+
+    #[test]
+    fn ngraph_fuses_only_injective() {
+        let g = cnn_ish();
+        let fused = ngraph_fusion(&g);
+        // No fused group may contain a conv.
+        for n in fused.live() {
+            if let Some(grp) = &n.fused {
+                assert!(grp.ops.iter().all(|o| o.kind != OpKind::Conv2D));
+            }
+        }
+    }
+
+    #[test]
+    fn taso_like_improves_or_equal() {
+        let g = cnn_ish();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 3);
+        let est = CostEstimator::oracle(&prof, &d);
+        let opts = SimOptions { ignore_comm: true, ..Default::default() };
+        let out = taso_like(&g, &est, opts, 10, 17);
+        let before = simulate(&g, &est, opts).makespan_ms;
+        let after = simulate(&out, &est, opts).makespan_ms;
+        assert!(after <= before);
+        assert!(out.validate().is_ok());
+    }
+}

@@ -1,0 +1,140 @@
+//! GNN estimator pipeline: generate fused-op samples from the model zoo,
+//! train the estimator through the PJRT train-step artifact, and evaluate
+//! prediction error on held-out fused ops (paper §6.5 / Fig. 9).
+
+use super::BenchOptions;
+use crate::estimator::AnalyticalFused;
+use crate::models::{self, ModelKind};
+use crate::network::Cluster;
+use crate::profiler::{self, FusedSample};
+use crate::runtime::gnn::{GnnPredictor, GnnTrainer};
+use crate::runtime::Runtime;
+use crate::util::stats::{percentile, Histogram};
+use anyhow::Result;
+use std::path::Path;
+
+/// Outcome of the Fig. 9 experiment.
+pub struct GnnEvalReport {
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub epochs: usize,
+    pub first_loss: f64,
+    pub last_loss: f64,
+    /// Relative errors |pred − real| / real on the held-out set.
+    pub errors: Vec<f64>,
+    /// PDF/CDF histogram of the errors (30 bins over [0, 0.6)).
+    pub hist: Histogram,
+    /// Trained flat parameters (savable via `save_params`).
+    pub params: Vec<f32>,
+}
+
+impl GnnEvalReport {
+    pub fn frac_within(&self, tol: f64) -> f64 {
+        if self.errors.is_empty() {
+            return 0.0;
+        }
+        self.errors.iter().filter(|&&e| e <= tol).count() as f64 / self.errors.len() as f64
+    }
+
+    pub fn mean_error(&self) -> f64 {
+        crate::util::stats::mean(&self.errors)
+    }
+
+    pub fn p90_error(&self) -> f64 {
+        percentile(&self.errors, 90.0)
+    }
+}
+
+/// Generate per-model fused-op samples (paper §5.2: random predecessor
+/// fusion chains) with device-model labels.
+pub fn generate_samples(
+    opts: &BenchOptions,
+    per_model: usize,
+    max_group: usize,
+    seed: u64,
+) -> Vec<FusedSample> {
+    let cluster = Cluster::cluster_a();
+    let device = BenchOptions::device_for(&cluster);
+    let mut all = Vec::new();
+    for kind in ModelKind::ALL {
+        let g = models::build(&opts.spec(kind), cluster.num_devices());
+        let prof = profiler::profile(&g, &device, &cluster, 2, seed ^ kind as u64);
+        let samples = profiler::generate_fused_samples(
+            &g,
+            &device,
+            &prof,
+            per_model,
+            max_group,
+            seed.wrapping_mul(31).wrapping_add(kind as u64),
+        );
+        all.extend(samples);
+    }
+    all
+}
+
+/// Train the GNN on `train_per_model` samples per model, evaluate on
+/// `test_per_model` *unseen* samples per model.
+pub fn train_and_eval(
+    opts: &BenchOptions,
+    artifacts: &Path,
+    train_per_model: usize,
+    test_per_model: usize,
+    epochs: usize,
+) -> Result<GnnEvalReport> {
+    let rt = Runtime::new(artifacts)?;
+    // Disjoint seeds → disjoint random fusion chains for train vs test.
+    let train = generate_samples(opts, train_per_model, 24, opts.seed ^ 0x7124);
+    let test = generate_samples(opts, test_per_model, 24, opts.seed ^ 0x7E57);
+
+    let mut trainer = GnnTrainer::new(&rt)?;
+    let losses = trainer.train(&train, epochs)?;
+    let first_loss = losses.first().copied().unwrap_or(0.0);
+    let last_loss = losses.last().copied().unwrap_or(0.0);
+
+    let fallback = AnalyticalFused { launch_ms: 0.005, bw_bytes_per_ms: 4.8e8 };
+    let pred = GnnPredictor::with_params(&rt, trainer.params.clone(), fallback)?;
+    let items: Vec<_> = test
+        .iter()
+        .map(|s| (s.group.clone(), s.bytes_in, s.bytes_out))
+        .collect();
+    let preds = pred.predict(&items)?;
+    let mut errors = Vec::with_capacity(test.len());
+    let mut hist = Histogram::new(0.0, 0.6, 30);
+    for (s, p) in test.iter().zip(&preds) {
+        let e = (p - s.label_ms).abs() / s.label_ms.max(1e-9);
+        errors.push(e);
+        hist.add(e);
+    }
+    Ok(GnnEvalReport {
+        train_samples: train.len(),
+        test_samples: test.len(),
+        epochs,
+        first_loss,
+        last_loss,
+        errors,
+        hist,
+        params: trainer.params,
+    })
+}
+
+/// Persist trained estimator parameters next to the artifacts.
+pub fn save_params(artifacts: &Path, params: &[f32]) -> Result<std::path::PathBuf> {
+    let path = artifacts.join("gnn_trained.f32");
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(&path, bytes)?;
+    Ok(path)
+}
+
+/// Load previously trained parameters if present.
+pub fn load_trained_params(artifacts: &Path) -> Option<Vec<f32>> {
+    let bytes = std::fs::read(artifacts.join("gnn_trained.f32")).ok()?;
+    Some(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}

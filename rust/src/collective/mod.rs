@@ -1,0 +1,222 @@
+//! Real ring-AllReduce over in-process workers — the substrate the
+//! enactment phase uses to actually average gradients in the end-to-end
+//! training example (DESIGN.md §2: numerics are real even though timing
+//! is modelled).
+//!
+//! Implements the classic two-phase ring algorithm (Patarasuk & Yuan):
+//! reduce-scatter (N−1 steps, each worker accumulates one chunk) followed
+//! by all-gather (N−1 steps). Workers are threads exchanging chunk
+//! messages over `std::sync::mpsc` channels arranged in a ring.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// Splits `len` elements into `n` contiguous chunks (first chunks one
+/// element longer when `len % n != 0`). Returns (start, end) pairs.
+pub fn chunk_ranges(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < rem);
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
+
+/// One worker's handle into a ring of `n` workers: sends to `rank+1`,
+/// receives from `rank-1`.
+pub struct RingPeer {
+    pub rank: usize,
+    pub world: usize,
+    tx_next: Sender<Vec<f32>>,
+    rx_prev: Receiver<Vec<f32>>,
+}
+
+/// Build channel rings for `world` workers.
+pub fn make_ring(world: usize) -> Vec<RingPeer> {
+    assert!(world >= 1);
+    let mut txs = Vec::with_capacity(world);
+    let mut rxs = Vec::with_capacity(world);
+    for _ in 0..world {
+        let (tx, rx) = channel::<Vec<f32>>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // Worker r sends into channel r (read by r+1).
+    let mut peers = Vec::with_capacity(world);
+    let mut rx_iter = rxs.into_iter();
+    // rx for worker r is channel (r-1+world)%world; rebuild in order.
+    let mut rx_map: Vec<Option<Receiver<Vec<f32>>>> = (0..world).map(|_| rx_iter.next()).collect();
+    for rank in 0..world {
+        let tx_next = txs[rank].clone();
+        let rx_prev = rx_map[(rank + world - 1) % world].take().expect("rx taken twice");
+        peers.push(RingPeer { rank, world, tx_next, rx_prev });
+    }
+    peers
+}
+
+impl RingPeer {
+    /// In-place ring AllReduce (sum) of `data` across all workers. Every
+    /// worker must call this with an equal-length buffer. After return,
+    /// every buffer holds the elementwise sum.
+    pub fn allreduce_sum(&self, data: &mut [f32]) {
+        let n = self.world;
+        if n == 1 {
+            return;
+        }
+        let ranges = chunk_ranges(data.len(), n);
+
+        // Phase 1: reduce-scatter. In step s, send chunk (rank - s) and
+        // receive + accumulate chunk (rank - s - 1).
+        for s in 0..n - 1 {
+            let send_idx = (self.rank + n - s) % n;
+            let recv_idx = (self.rank + n - s - 1) % n;
+            let (a, bnd) = ranges[send_idx];
+            self.tx_next
+                .send(data[a..bnd].to_vec())
+                .expect("ring peer hung up (reduce-scatter)");
+            let incoming = self.rx_prev.recv().expect("ring recv failed (reduce-scatter)");
+            let (a, bnd) = ranges[recv_idx];
+            for (dst, src) in data[a..bnd].iter_mut().zip(incoming.iter()) {
+                *dst += *src;
+            }
+        }
+
+        // Phase 2: all-gather. In step s, send the chunk finalized last
+        // step and receive the previous worker's finalized chunk.
+        for s in 0..n - 1 {
+            let send_idx = (self.rank + 1 + n - s) % n;
+            let recv_idx = (self.rank + n - s) % n;
+            let (a, bnd) = ranges[send_idx];
+            self.tx_next
+                .send(data[a..bnd].to_vec())
+                .expect("ring peer hung up (all-gather)");
+            let incoming = self.rx_prev.recv().expect("ring recv failed (all-gather)");
+            let (a, bnd) = ranges[recv_idx];
+            data[a..bnd].copy_from_slice(&incoming);
+        }
+    }
+
+    /// AllReduce-mean: sum then divide by world size (gradient averaging).
+    pub fn allreduce_mean(&self, data: &mut [f32]) {
+        self.allreduce_sum(data);
+        let inv = 1.0 / self.world as f32;
+        for x in data.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Convenience: run `world` worker closures on threads, each given its
+/// ring peer; returns their outputs in rank order.
+pub fn run_workers<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(RingPeer) -> T + Send + Sync + 'static,
+{
+    let peers = make_ring(world);
+    let f = std::sync::Arc::new(f);
+    let mut handles = Vec::new();
+    for peer in peers {
+        let f = f.clone();
+        handles.push(thread::spawn(move || f(peer)));
+    }
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for len in [0usize, 1, 7, 64, 100] {
+            for n in [1usize, 2, 3, 8] {
+                let r = chunk_ranges(len, n);
+                assert_eq!(r.len(), n);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[n - 1].1, len);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_matches_reference() {
+        for world in [1usize, 2, 3, 4, 8] {
+            let len = 103; // not divisible by world
+            // Build per-worker inputs deterministically.
+            let inputs: Vec<Vec<f32>> = (0..world)
+                .map(|r| {
+                    let mut rng = Rng::new(100 + r as u64);
+                    (0..len).map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32).collect()
+                })
+                .collect();
+            let mut expect = vec![0.0f32; len];
+            for inp in &inputs {
+                for (e, x) in expect.iter_mut().zip(inp) {
+                    *e += *x;
+                }
+            }
+            let inputs2 = inputs.clone();
+            let results = run_workers(world, move |peer| {
+                let mut data = inputs2[peer.rank].clone();
+                peer.allreduce_sum(&mut data);
+                data
+            });
+            for r in &results {
+                for (a, b) in r.iter().zip(&expect) {
+                    assert!((a - b).abs() < 1e-4, "world={world}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_mean_averages() {
+        let world = 4;
+        let results = run_workers(world, move |peer| {
+            let mut data = vec![peer.rank as f32; 10];
+            peer.allreduce_mean(&mut data);
+            data
+        });
+        for r in results {
+            for x in r {
+                assert!((x - 1.5).abs() < 1e-6); // mean of 0,1,2,3
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let results = run_workers(1, |peer| {
+            let mut d = vec![1.0f32, 2.0, 3.0];
+            peer.allreduce_sum(&mut d);
+            d
+        });
+        assert_eq!(results[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn repeated_allreduces_on_same_ring() {
+        let world = 3;
+        let results = run_workers(world, move |peer| {
+            let mut out = Vec::new();
+            for round in 0..5 {
+                let mut d = vec![(peer.rank + round) as f32; 8];
+                peer.allreduce_sum(&mut d);
+                out.push(d[0]);
+            }
+            out
+        });
+        for r in results {
+            assert_eq!(r, vec![3.0, 6.0, 9.0, 12.0, 15.0]); // sum of ranks+round
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Leader: strategy broadcast + report aggregation.
+
+use super::messages::Msg;
+use crate::device::DeviceModel;
+use crate::graph::TrainingGraph;
+use crate::network::Cluster;
+use anyhow::{anyhow, Result};
+use std::net::{TcpListener, TcpStream};
+
+/// Enactment configuration.
+#[derive(Debug, Clone)]
+pub struct EnactConfig {
+    /// Address to bind ("127.0.0.1:0" picks a free port).
+    pub bind: String,
+    /// Number of workers expected to join.
+    pub world: usize,
+    /// Iterations each worker must execute.
+    pub iterations: usize,
+    pub seed: u64,
+    /// If true, spawn in-process worker threads instead of waiting for
+    /// external `disco worker` processes.
+    pub spawn_inproc: bool,
+    pub device: DeviceModel,
+    pub cluster: Cluster,
+}
+
+impl Default for EnactConfig {
+    fn default() -> Self {
+        EnactConfig {
+            bind: "127.0.0.1:0".to_string(),
+            world: 4,
+            iterations: 5,
+            seed: 0xC0DE,
+            spawn_inproc: true,
+            device: DeviceModel::gtx1080ti(),
+            cluster: Cluster::cluster_a(),
+        }
+    }
+}
+
+/// Aggregated result of an enactment round.
+#[derive(Debug, Clone)]
+pub struct EnactReport {
+    /// Per-rank (makespan, comp, comm) in ms.
+    pub per_rank: Vec<(f64, f64, f64)>,
+    /// Synchronous per-iteration time: max makespan across ranks.
+    pub iteration_ms: f64,
+    pub acks: usize,
+}
+
+/// Run the enactment phase: broadcast `graph` to `world` workers, have
+/// them execute it, aggregate their reports.
+pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport> {
+    let listener = TcpListener::bind(&cfg.bind)?;
+    let addr = listener.local_addr()?;
+
+    // Optionally host the workers ourselves (single-machine mode).
+    let mut worker_handles = Vec::new();
+    if cfg.spawn_inproc {
+        for rank in 0..cfg.world {
+            let device = cfg.device.clone();
+            let cluster = cfg.cluster.clone();
+            let addr = addr.to_string();
+            worker_handles.push(std::thread::spawn(move || {
+                super::worker::run_worker(&addr, rank, &device, &cluster)
+            }));
+        }
+    }
+
+    // Accept exactly `world` workers.
+    let mut conns: Vec<(usize, TcpStream)> = Vec::new();
+    for _ in 0..cfg.world {
+        let (mut stream, _) = listener.accept()?;
+        match Msg::recv(&mut stream)? {
+            Msg::Hello { rank } => conns.push((rank, stream)),
+            other => return Err(anyhow!("expected Hello, got {other:?}")),
+        }
+    }
+    conns.sort_by_key(|(r, _)| *r);
+    let ranks: Vec<usize> = conns.iter().map(|(r, _)| *r).collect();
+    let expect: Vec<usize> = (0..cfg.world).collect();
+    if ranks != expect {
+        return Err(anyhow!("worker ranks {ranks:?} != {expect:?}"));
+    }
+
+    // Broadcast the strategy; collect fingerprint acks.
+    let graph_json = graph.to_json();
+    let fp = graph.fingerprint();
+    let mut acks = 0;
+    for (_, stream) in conns.iter_mut() {
+        Msg::Strategy { graph_json: graph_json.clone() }.send(stream)?;
+    }
+    for (rank, stream) in conns.iter_mut() {
+        match Msg::recv(stream)? {
+            Msg::Ack { rank: r, fingerprint } => {
+                if r != *rank {
+                    return Err(anyhow!("ack rank mismatch: {r} != {rank}"));
+                }
+                if fingerprint != fp {
+                    return Err(anyhow!(
+                        "worker {rank} fingerprint {fingerprint:#x} != leader {fp:#x}"
+                    ));
+                }
+                acks += 1;
+            }
+            other => return Err(anyhow!("expected Ack, got {other:?}")),
+        }
+    }
+
+    // Run + collect reports.
+    for (rank, stream) in conns.iter_mut() {
+        Msg::Run { iterations: cfg.iterations, seed: cfg.seed ^ (*rank as u64) }.send(stream)?;
+    }
+    let mut per_rank = vec![(0.0, 0.0, 0.0); cfg.world];
+    for (_, stream) in conns.iter_mut() {
+        match Msg::recv(stream)? {
+            Msg::Report { rank, makespan_ms, comp_ms, comm_ms } => {
+                per_rank[rank] = (makespan_ms, comp_ms, comm_ms);
+            }
+            other => return Err(anyhow!("expected Report, got {other:?}")),
+        }
+    }
+    for (_, stream) in conns.iter_mut() {
+        Msg::Shutdown.send(stream)?;
+    }
+    for h in worker_handles {
+        h.join().map_err(|_| anyhow!("worker thread panicked"))??;
+    }
+
+    let iteration_ms = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    Ok(EnactReport { per_rank, iteration_ms, acks })
+}

@@ -1,0 +1,160 @@
+//! Wire protocol: length-prefixed JSON frames over TCP.
+//!
+//! Deliberately simple — 4-byte big-endian length, then a JSON object with
+//! a `"type"` tag. All fields are strings/numbers so the in-tree JSON
+//! module suffices.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Coordinator protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → leader: join with a rank request.
+    Hello { rank: usize },
+    /// Leader → worker: the optimized training graph (serialized).
+    Strategy { graph_json: String },
+    /// Worker → leader: strategy received; fingerprint echo for
+    /// consistency checking.
+    Ack { rank: usize, fingerprint: u64 },
+    /// Leader → worker: execute `iterations` training iterations.
+    Run { iterations: usize, seed: u64 },
+    /// Worker → leader: execution report.
+    Report { rank: usize, makespan_ms: f64, comp_ms: f64, comm_ms: f64 },
+    /// Leader → worker: shut down cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Hello { rank } => Json::obj(vec![
+                ("type", Json::Str("hello".into())),
+                ("rank", Json::Num(*rank as f64)),
+            ]),
+            Msg::Strategy { graph_json } => Json::obj(vec![
+                ("type", Json::Str("strategy".into())),
+                ("graph", Json::Str(graph_json.clone())),
+            ]),
+            Msg::Ack { rank, fingerprint } => Json::obj(vec![
+                ("type", Json::Str("ack".into())),
+                ("rank", Json::Num(*rank as f64)),
+                // u64 doesn't fit f64 exactly; ship as hex string.
+                ("fingerprint", Json::Str(format!("{fingerprint:016x}"))),
+            ]),
+            Msg::Run { iterations, seed } => Json::obj(vec![
+                ("type", Json::Str("run".into())),
+                ("iterations", Json::Num(*iterations as f64)),
+                ("seed", Json::Str(format!("{seed:016x}"))),
+            ]),
+            Msg::Report { rank, makespan_ms, comp_ms, comm_ms } => Json::obj(vec![
+                ("type", Json::Str("report".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("makespan_ms", Json::Num(*makespan_ms)),
+                ("comp_ms", Json::Num(*comp_ms)),
+                ("comm_ms", Json::Num(*comm_ms)),
+            ]),
+            Msg::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let t = j.get("type").as_str().ok_or_else(|| anyhow!("missing type"))?;
+        let hex = |s: &Json| -> Result<u64> {
+            u64::from_str_radix(s.as_str().ok_or_else(|| anyhow!("missing hex"))?, 16)
+                .map_err(|e| anyhow!("bad hex: {e}"))
+        };
+        Ok(match t {
+            "hello" => Msg::Hello {
+                rank: j.get("rank").as_usize().ok_or_else(|| anyhow!("rank"))?,
+            },
+            "strategy" => Msg::Strategy {
+                graph_json: j.get("graph").as_str().ok_or_else(|| anyhow!("graph"))?.to_string(),
+            },
+            "ack" => Msg::Ack {
+                rank: j.get("rank").as_usize().ok_or_else(|| anyhow!("rank"))?,
+                fingerprint: hex(j.get("fingerprint"))?,
+            },
+            "run" => Msg::Run {
+                iterations: j.get("iterations").as_usize().ok_or_else(|| anyhow!("iters"))?,
+                seed: hex(j.get("seed"))?,
+            },
+            "report" => Msg::Report {
+                rank: j.get("rank").as_usize().ok_or_else(|| anyhow!("rank"))?,
+                makespan_ms: j.get("makespan_ms").as_f64().ok_or_else(|| anyhow!("ms"))?,
+                comp_ms: j.get("comp_ms").as_f64().ok_or_else(|| anyhow!("comp"))?,
+                comm_ms: j.get("comm_ms").as_f64().ok_or_else(|| anyhow!("comm"))?,
+            },
+            "shutdown" => Msg::Shutdown,
+            other => return Err(anyhow!("unknown message type '{other}'")),
+        })
+    }
+
+    /// Write one length-prefixed frame.
+    pub fn send(&self, stream: &mut TcpStream) -> Result<()> {
+        let payload = self.to_json().to_string();
+        let bytes = payload.as_bytes();
+        let len = (bytes.len() as u32).to_be_bytes();
+        stream.write_all(&len)?;
+        stream.write_all(bytes)?;
+        stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one length-prefixed frame.
+    pub fn recv(stream: &mut TcpStream) -> Result<Msg> {
+        let mut len = [0u8; 4];
+        stream.read_exact(&mut len)?;
+        let n = u32::from_be_bytes(len) as usize;
+        if n > 256 * 1024 * 1024 {
+            return Err(anyhow!("frame too large: {n}"));
+        }
+        let mut buf = vec![0u8; n];
+        stream.read_exact(&mut buf)?;
+        let s = String::from_utf8(buf)?;
+        let j = Json::parse(&s).map_err(|e| anyhow!("frame parse: {e}"))?;
+        Msg::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_all_variants() {
+        let msgs = vec![
+            Msg::Hello { rank: 3 },
+            Msg::Strategy { graph_json: "{\"x\":1}".into() },
+            Msg::Ack { rank: 1, fingerprint: 0xDEADBEEF12345678 },
+            Msg::Run { iterations: 10, seed: u64::MAX },
+            Msg::Report { rank: 2, makespan_ms: 1.5, comp_ms: 1.0, comm_ms: 0.75 },
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            let j = m.to_json();
+            let back = Msg::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn tcp_frame_roundtrip() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = Msg::recv(&mut s).unwrap();
+            Msg::send(&m, &mut s).unwrap(); // echo
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let m = Msg::Ack { rank: 7, fingerprint: 42 };
+        m.send(&mut c).unwrap();
+        let back = Msg::recv(&mut c).unwrap();
+        assert_eq!(m, back);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,21 @@
+//! Leader/worker coordinator — the paper's *Enactment Phase* (§4.1).
+//!
+//! The **leader** (Strategy Maker host) runs the search, then broadcasts
+//! the optimized module to every **worker** (Activator); workers validate
+//! it (fingerprint acknowledgement — the MPIBroadcast + NCCL-id exchange
+//! of §5.1, over TCP here), execute the module for the requested number of
+//! iterations, and report per-iteration timings back.
+//!
+//! Workers run the hi-fi execution substrate ([`crate::sim::hifi`]) with
+//! per-rank seeds; the leader aggregates their reports (max across ranks =
+//! the synchronous-iteration time). The same protocol drives in-process
+//! worker threads (tests, single-host runs) and separate processes
+//! (`disco worker` / `disco enact` over real sockets).
+
+pub mod messages;
+pub mod leader;
+pub mod worker;
+
+pub use leader::{enact, EnactConfig, EnactReport};
+pub use messages::Msg;
+pub use worker::run_worker;

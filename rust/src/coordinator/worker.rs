@@ -1,0 +1,50 @@
+//! Worker (Activator): receive the optimized module, execute, report.
+
+use super::messages::Msg;
+use crate::device::DeviceModel;
+use crate::graph::TrainingGraph;
+use crate::network::Cluster;
+use crate::sim::hifi::{execute_real, HifiOptions};
+use anyhow::{anyhow, Result};
+use std::net::TcpStream;
+
+/// Connect to the leader at `addr` as `rank` and serve the enactment
+/// protocol until Shutdown. Execution uses the hi-fi substrate with a
+/// per-rank seed (DESIGN.md §2 — this is "running on the testbed").
+pub fn run_worker(
+    addr: &str,
+    rank: usize,
+    device: &DeviceModel,
+    cluster: &Cluster,
+) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    Msg::Hello { rank }.send(&mut stream)?;
+
+    let mut graph: Option<TrainingGraph> = None;
+    loop {
+        match Msg::recv(&mut stream)? {
+            Msg::Strategy { graph_json } => {
+                let g = TrainingGraph::from_json(&graph_json)?;
+                // Validate before acking: a worker must never execute a
+                // malformed module.
+                g.validate().map_err(|e| anyhow!("invalid strategy: {e}"))?;
+                Msg::Ack { rank, fingerprint: g.fingerprint() }.send(&mut stream)?;
+                graph = Some(g);
+            }
+            Msg::Run { iterations, seed } => {
+                let g = graph.as_ref().ok_or_else(|| anyhow!("Run before Strategy"))?;
+                let opts = HifiOptions { iterations, seed, ..Default::default() };
+                let r = execute_real(g, device, cluster, &opts);
+                Msg::Report {
+                    rank,
+                    makespan_ms: r.makespan_ms,
+                    comp_ms: r.comp_busy_ms,
+                    comm_ms: r.comm_busy_ms,
+                }
+                .send(&mut stream)?;
+            }
+            Msg::Shutdown => return Ok(()),
+            other => return Err(anyhow!("worker {rank}: unexpected {other:?}")),
+        }
+    }
+}

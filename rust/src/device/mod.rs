@@ -1,0 +1,273 @@
+//! Analytical device model — the substitute for the paper's real GPUs.
+//!
+//! The paper profiles ops on GTX 1080 Ti / Tesla T4 and lets fused-op cost
+//! emerge from the hardware. Here a roofline model plays that role:
+//!
+//! ```text
+//! t(op)  = max(flops / (peak·eff), traffic / bw) + launch
+//! t(fused) = max(Σ flops_i/(peak·eff_i), boundary_traffic + spill) · I(n) + launch
+//! ```
+//!
+//! Fusion gains exactly what it gains on a GPU: intermediate results that
+//! fit the on-chip budget stop round-tripping through device memory, and
+//! n−1 kernel launches disappear. Fusion *costs* what it costs on a GPU:
+//! an interaction penalty `I(n)` grows mildly with group size (register
+//! pressure / occupancy loss), and oversized intermediates spill. These
+//! non-linear terms are what the GNN estimator has to learn — per-op
+//! profiled times alone cannot predict them.
+//!
+//! The searcher is **never** allowed to query this model for fused ops; it
+//! sees only profiled per-op times (through [`crate::profiler`]) and the
+//! estimator. The device model is "the hardware".
+
+use crate::graph::{FusedGroup, Node, OpKind};
+use crate::util::rng::Rng;
+
+/// Static description of a device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak f32 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Device-memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Kernel launch + synchronization overhead per kernel, ms.
+    pub launch_overhead_ms: f64,
+    /// On-chip working-set budget (registers/L2/shared-memory proxy), bytes.
+    pub onchip_bytes: f64,
+    /// Multiplicative noise sigma for "measurements" on this device.
+    pub noise_sigma: f64,
+}
+
+/// The analytical device model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceModel {
+    pub spec: DeviceSpec,
+}
+
+/// Achievable fraction of peak FLOPs by op kind (GPUs never hit peak on
+/// real kernels; dense ops come closest).
+fn efficiency(kind: OpKind) -> f64 {
+    match kind {
+        OpKind::MatMul | OpKind::BatchMatMul => 0.62,
+        OpKind::Conv2D => 0.55,
+        OpKind::Embedding | OpKind::Gather | OpKind::Scatter | OpKind::Sort => 0.15,
+        OpKind::Reduce | OpKind::Softmax | OpKind::CrossEntropy => 0.35,
+        OpKind::LayerNorm | OpKind::BatchNorm | OpKind::Pool => 0.40,
+        _ => 0.85, // elementwise / data movement: effectively bw-bound anyway
+    }
+}
+
+impl DeviceModel {
+    /// GTX-1080-Ti-like device (the paper's Cluster A GPUs):
+    /// 11.3 TFLOP/s f32, 484 GB/s GDDR5X, ~3 MB L2.
+    pub fn gtx1080ti() -> DeviceModel {
+        DeviceModel {
+            spec: DeviceSpec {
+                name: "gtx1080ti".to_string(),
+                peak_flops: 11.3e12,
+                mem_bw: 484.0e9,
+                launch_overhead_ms: 0.005,
+                onchip_bytes: 3.0 * 1024.0 * 1024.0,
+                noise_sigma: 0.05,
+            },
+        }
+    }
+
+    /// Tesla-T4-like device (the paper's Cluster B GPUs):
+    /// 8.1 TFLOP/s f32, 300 GB/s GDDR6, 4 MB L2.
+    pub fn tesla_t4() -> DeviceModel {
+        DeviceModel {
+            spec: DeviceSpec {
+                name: "tesla_t4".to_string(),
+                peak_flops: 8.1e12,
+                mem_bw: 300.0e9,
+                launch_overhead_ms: 0.005,
+                onchip_bytes: 4.0 * 1024.0 * 1024.0,
+                noise_sigma: 0.05,
+            },
+        }
+    }
+
+    /// Interaction penalty for an `n`-op fused kernel: register pressure and
+    /// occupancy degrade slowly with kernel complexity.
+    fn interaction(n: usize) -> f64 {
+        1.0 + 0.02 * ((1 + n) as f64).ln()
+    }
+
+    /// True execution time of a *single original* op, ms.
+    pub fn single_op_time_ms(
+        &self,
+        kind: OpKind,
+        flops: f64,
+        bytes_in: f64,
+        bytes_out: f64,
+    ) -> f64 {
+        if matches!(kind, OpKind::Parameter | OpKind::Constant) {
+            return 0.0;
+        }
+        let compute_ms = flops / (self.spec.peak_flops * efficiency(kind)) * 1e3;
+        let mem_ms = (bytes_in + bytes_out) / self.spec.mem_bw * 1e3;
+        compute_ms.max(mem_ms) + self.spec.launch_overhead_ms
+    }
+
+    /// True execution time of a fused group, ms. `bytes_in`/`bytes_out` are
+    /// the *boundary* traffic of the fused kernel (computed by the fusion
+    /// transform); internal tensors only cost when they spill.
+    pub fn fused_time_ms(&self, group: &FusedGroup, bytes_in: f64, bytes_out: f64) -> f64 {
+        if group.ops.is_empty() {
+            return 0.0;
+        }
+        let compute_ms: f64 = group
+            .ops
+            .iter()
+            .map(|o| o.flops / (self.spec.peak_flops * efficiency(o.kind)) * 1e3)
+            .sum();
+        // Internal tensors: outputs of member ops consumed inside the group.
+        // Working set beyond the on-chip budget spills to device memory
+        // (write + read back).
+        let mut internal_producers: Vec<usize> = group.edges.iter().map(|&(p, _)| p).collect();
+        internal_producers.sort_unstable();
+        internal_producers.dedup();
+        let mut spill = 0.0;
+        let mut working_set = 0.0;
+        for &p in &internal_producers {
+            let b = group.ops[p].bytes_out;
+            if b > self.spec.onchip_bytes {
+                spill += 2.0 * b; // streams through device memory entirely
+            } else {
+                working_set += b;
+            }
+        }
+        if working_set > self.spec.onchip_bytes {
+            // The part of the working set that doesn't fit round-trips once.
+            spill += 2.0 * (working_set - self.spec.onchip_bytes);
+        }
+        let mem_ms = (bytes_in + bytes_out + spill) / self.spec.mem_bw * 1e3;
+        compute_ms.max(mem_ms) * Self::interaction(group.ops.len()) + self.spec.launch_overhead_ms
+    }
+
+    /// True execution time of any node (dispatches on fused/unfused), ms.
+    /// AllReduce is not a device op — the network model owns it.
+    pub fn node_time_ms(&self, node: &Node) -> f64 {
+        debug_assert_ne!(node.kind, OpKind::AllReduce);
+        match &node.fused {
+            Some(g) => self.fused_time_ms(g, node.bytes_in, node.bytes_out),
+            None => self.single_op_time_ms(node.kind, node.flops, node.bytes_in, node.bytes_out),
+        }
+    }
+
+    /// One noisy "measurement", as a profiler or a real run would observe.
+    pub fn measure_ms(&self, true_ms: f64, rng: &mut Rng) -> f64 {
+        true_ms * rng.gen_lognormal_factor(self.spec.noise_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OrigOp;
+
+    fn orig(id: usize, kind: OpKind, flops: f64, bin: f64, bout: f64) -> OrigOp {
+        OrigOp { orig_id: id, kind, flops, bytes_in: bin, bytes_out: bout, time_ms: 0.0, duplicated: false }
+    }
+
+    #[test]
+    fn compute_bound_matmul() {
+        let d = DeviceModel::gtx1080ti();
+        // 4096^3 matmul: clearly compute bound.
+        let flops = 2.0 * 4096f64.powi(3);
+        let bytes = 3.0 * 4096.0 * 4096.0 * 4.0;
+        let t = d.single_op_time_ms(OpKind::MatMul, flops, bytes * 2.0 / 3.0, bytes / 3.0);
+        let compute_only = flops / (11.3e12 * 0.62) * 1e3;
+        assert!((t - compute_only - 0.005).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn bandwidth_bound_elementwise() {
+        let d = DeviceModel::gtx1080ti();
+        let elems = 1e7;
+        let t = d.single_op_time_ms(OpKind::Add, elems, 2.0 * elems * 4.0, elems * 4.0);
+        let mem_only = 3.0 * elems * 4.0 / 484.0e9 * 1e3;
+        assert!((t - mem_only - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leaves_are_free() {
+        let d = DeviceModel::tesla_t4();
+        assert_eq!(d.single_op_time_ms(OpKind::Parameter, 0.0, 0.0, 1e9), 0.0);
+    }
+
+    #[test]
+    fn fusing_elementwise_chain_saves_time() {
+        let d = DeviceModel::gtx1080ti();
+        // a -> b -> c chain of big elementwise ops (1M elems, 4MB tensors —
+        // wait, use 256KB tensors so they fit on-chip).
+        let bytes = 256.0 * 1024.0;
+        let elems = bytes / 4.0;
+        let sum_unfused: f64 = (0..3)
+            .map(|_| d.single_op_time_ms(OpKind::Mul, elems, bytes, bytes))
+            .sum();
+        let group = FusedGroup {
+            ops: vec![
+                orig(0, OpKind::Mul, elems, bytes, bytes),
+                orig(1, OpKind::Mul, elems, bytes, bytes),
+                orig(2, OpKind::Mul, elems, bytes, bytes),
+            ],
+            edges: vec![(0, 1), (1, 2)],
+        };
+        let fused = d.fused_time_ms(&group, bytes, bytes);
+        assert!(
+            fused < sum_unfused * 0.7,
+            "fused={fused} unfused={sum_unfused}"
+        );
+    }
+
+    #[test]
+    fn oversized_intermediates_spill() {
+        let d = DeviceModel::gtx1080ti();
+        let big = 64.0 * 1024.0 * 1024.0; // 64 MB >> on-chip
+        let elems = big / 4.0;
+        let group_big = FusedGroup {
+            ops: vec![
+                orig(0, OpKind::Mul, elems, big, big),
+                orig(1, OpKind::Mul, elems, big, big),
+            ],
+            edges: vec![(0, 1)],
+        };
+        let small = 128.0 * 1024.0;
+        let group_small = FusedGroup {
+            ops: vec![
+                orig(0, OpKind::Mul, small / 4.0, small, small),
+                orig(1, OpKind::Mul, small / 4.0, small, small),
+            ],
+            edges: vec![(0, 1)],
+        };
+        // Big group gets little relative benefit: fused ~= sum of parts.
+        let fused_big = d.fused_time_ms(&group_big, big, big);
+        let parts_big: f64 =
+            2.0 * d.single_op_time_ms(OpKind::Mul, elems, big * 1.0, big) - 0.005;
+        assert!(fused_big > parts_big * 0.8, "fused={fused_big} parts={parts_big}");
+        // Small group: clear win.
+        let fused_small = d.fused_time_ms(&group_small, small, small);
+        let parts_small: f64 = 2.0 * d.single_op_time_ms(OpKind::Mul, small / 4.0, small * 2.0, small);
+        assert!(fused_small < parts_small);
+    }
+
+    #[test]
+    fn interaction_penalty_monotone() {
+        assert!(DeviceModel::interaction(2) < DeviceModel::interaction(10));
+        assert!(DeviceModel::interaction(10) < DeviceModel::interaction(100));
+        assert!(DeviceModel::interaction(100) < 1.15);
+    }
+
+    #[test]
+    fn measurement_noise_centered() {
+        let d = DeviceModel::gtx1080ti();
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| d.measure_ms(1.0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+}

@@ -1,0 +1,286 @@
+//! Cost estimation — what the search is allowed to know.
+//!
+//! [`CostEstimator`] implements [`crate::sim::CostSource`] for candidate
+//! graphs. Per the paper's information structure (§4.2–4.3):
+//!
+//! * **original ops** → profiled times, looked up by node id;
+//! * **AllReduce instructions** → the fitted linear model `T = C·x + D`;
+//! * **fused ops** → a pluggable [`FusedOpEstimator`]:
+//!   - [`AnalyticalFused`] — a white-box heuristic using only
+//!     profiler-visible quantities (member times, launch/bandwidth
+//!     estimates): the "no GNN" ablation;
+//!   - [`OracleFused`] — queries the device model directly (an upper bound
+//!     on estimator quality, used in tests and ablations; a real system
+//!     cannot have this);
+//!   - the GNN predictor in [`crate::runtime::gnn`] — the paper's
+//!     Fused Op Estimator, executed as an AOT-compiled XLA artifact.
+//!
+//! Predictions are memoized by the fused group's structural signature —
+//! the search revisits the same fused ops constantly, and this cache is
+//! the difference between O(1) and O(GNN) per `Cost(H)` call.
+
+use crate::device::DeviceModel;
+use crate::graph::{FusedGroup, Node, OpKind};
+use crate::network::{Cluster, CommModel};
+use crate::profiler::ProfileData;
+use crate::sim::CostSource;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Strategy for predicting fused-op execution time.
+pub trait FusedOpEstimator {
+    /// Predict execution time (ms) of the fused kernel described by
+    /// `group` with the given boundary traffic. `group` members carry
+    /// profiled `time_ms`.
+    fn estimate_ms(&self, group: &FusedGroup, bytes_in: f64, bytes_out: f64) -> f64;
+
+    /// Batched prediction — backends with per-call overhead (the GNN via
+    /// PJRT) override this to amortize it; the default maps the scalar
+    /// path.
+    fn estimate_batch(&self, items: &[(FusedGroup, f64, f64)]) -> Vec<f64> {
+        items.iter().map(|(g, bi, bo)| self.estimate_ms(g, *bi, *bo)).collect()
+    }
+
+    /// Human-readable backend name (for logs / EXPERIMENTS.md).
+    fn name(&self) -> &'static str;
+}
+
+/// White-box estimate from profiler-visible quantities only:
+/// sum of member times, minus saved launches, minus saved intermediate
+/// round-trips — but blind to spills and interaction penalties.
+pub struct AnalyticalFused {
+    pub launch_ms: f64,
+    pub bw_bytes_per_ms: f64,
+}
+
+impl AnalyticalFused {
+    pub fn from_profile(p: &ProfileData) -> AnalyticalFused {
+        AnalyticalFused { launch_ms: p.launch_est_ms, bw_bytes_per_ms: p.bw_est_bytes_per_ms }
+    }
+}
+
+impl FusedOpEstimator for AnalyticalFused {
+    fn estimate_ms(&self, group: &FusedGroup, _bytes_in: f64, _bytes_out: f64) -> f64 {
+        let sum_members: f64 = group.ops.iter().map(|o| o.time_ms).sum();
+        let saved_launches = self.launch_ms * (group.len().saturating_sub(1)) as f64;
+        // Each internal producer's output no longer round-trips (write+read).
+        let mut internal: Vec<usize> = group.edges.iter().map(|&(p, _)| p).collect();
+        internal.sort_unstable();
+        internal.dedup();
+        let saved_traffic: f64 =
+            internal.iter().map(|&p| 2.0 * group.ops[p].bytes_out).sum::<f64>()
+                / self.bw_bytes_per_ms;
+        (sum_members - saved_launches - saved_traffic).max(self.launch_ms)
+    }
+
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+}
+
+/// Oracle backend: asks the device model (ground truth). Only for tests and
+/// estimator-quality ablations.
+pub struct OracleFused {
+    pub device: DeviceModel,
+}
+
+impl FusedOpEstimator for OracleFused {
+    fn estimate_ms(&self, group: &FusedGroup, bytes_in: f64, bytes_out: f64) -> f64 {
+        self.device.fused_time_ms(group, bytes_in, bytes_out)
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+/// The full cost model handed to the simulator.
+pub struct CostEstimator<'a> {
+    pub profile: &'a ProfileData,
+    pub comm: CommModel,
+    pub fused: Box<dyn FusedOpEstimator + 'a>,
+    cache: RefCell<HashMap<u64, f64>>,
+    hits: RefCell<u64>,
+    misses: RefCell<u64>,
+}
+
+impl<'a> CostEstimator<'a> {
+    pub fn new(profile: &'a ProfileData, fused: Box<dyn FusedOpEstimator + 'a>) -> Self {
+        CostEstimator {
+            profile,
+            comm: profile.comm,
+            fused,
+            cache: RefCell::new(HashMap::new()),
+            hits: RefCell::new(0),
+            misses: RefCell::new(0),
+        }
+    }
+
+    /// Analytical-backend estimator (searcher without a GNN).
+    pub fn analytical(profile: &'a ProfileData, _cluster: &Cluster) -> Self {
+        Self::new(profile, Box::new(AnalyticalFused::from_profile(profile)))
+    }
+
+    /// Oracle-backend estimator (tests / upper bound).
+    pub fn oracle(profile: &'a ProfileData, device: &DeviceModel) -> Self {
+        Self::new(profile, Box::new(OracleFused { device: device.clone() }))
+    }
+
+    /// (cache hits, misses) — perf metric for EXPERIMENTS.md §Perf.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (*self.hits.borrow(), *self.misses.borrow())
+    }
+
+    /// Batch-predict every not-yet-cached fused op of `graph` in one
+    /// backend call (the search invokes this before each `Cost(H')`
+    /// evaluation so GNN queries arrive in batches, not one-by-one).
+    pub fn warm_cache(&self, graph: &crate::graph::TrainingGraph) {
+        let mut pending: Vec<(u64, (FusedGroup, f64, f64))> = Vec::new();
+        {
+            let cache = self.cache.borrow();
+            for n in graph.live() {
+                if let Some(group) = &n.fused {
+                    let sig = group.signature();
+                    if !cache.contains_key(&sig) && !pending.iter().any(|(s, _)| *s == sig) {
+                        let mut g = group.clone();
+                        self.profile.annotate_group(&mut g);
+                        pending.push((sig, (g, n.bytes_in, n.bytes_out)));
+                    }
+                }
+            }
+        }
+        if pending.is_empty() {
+            return;
+        }
+        let items: Vec<(FusedGroup, f64, f64)> =
+            pending.iter().map(|(_, it)| it.clone()).collect();
+        let preds = self.fused.estimate_batch(&items);
+        let mut cache = self.cache.borrow_mut();
+        for ((sig, _), t) in pending.into_iter().zip(preds) {
+            cache.insert(sig, t);
+        }
+        *self.misses.borrow_mut() += items.len() as u64;
+    }
+
+    fn fused_time(&self, node: &Node) -> f64 {
+        let group = node.fused.as_ref().expect("fused node without group");
+        let sig = group.signature();
+        if let Some(&t) = self.cache.borrow().get(&sig) {
+            *self.hits.borrow_mut() += 1;
+            return t;
+        }
+        *self.misses.borrow_mut() += 1;
+        let mut g = group.clone();
+        self.profile.annotate_group(&mut g);
+        let t = self.fused.estimate_ms(&g, node.bytes_in, node.bytes_out);
+        self.cache.borrow_mut().insert(sig, t);
+        t
+    }
+}
+
+impl CostSource for CostEstimator<'_> {
+    fn compute_time_ms(&self, node: &Node) -> f64 {
+        match node.kind {
+            OpKind::Parameter | OpKind::Constant => 0.0,
+            OpKind::Fused => self.fused_time(node),
+            _ => {
+                let t = self.profile.time_of(node.id);
+                if t > 0.0 {
+                    t
+                } else {
+                    // Unprofiled original op (shouldn't happen in the normal
+                    // pipeline): fall back to a bandwidth estimate.
+                    (node.bytes_in + node.bytes_out) / self.profile.bw_est_bytes_per_ms
+                        + self.profile.launch_est_ms
+                }
+            }
+        }
+    }
+
+    fn comm_time_ms(&self, bytes: f64) -> f64 {
+        self.comm.predict_ms(bytes)
+    }
+
+    fn prepare(&self, graph: &crate::graph::TrainingGraph) {
+        self.warm_cache(graph);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{fuse_ops, FusionKind};
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::{Role, TrainingGraph};
+    use crate::profiler;
+
+    fn setup() -> (TrainingGraph, DeviceModel, Cluster, ProfileData) {
+        let mut b = GraphBuilder::new("e", 12);
+        let x = b.constant("x", &[1 << 16]);
+        let mut prev = x;
+        for i in 0..6 {
+            prev = b.compute(OpKind::Mul, &format!("m{i}"), &[prev], &[1 << 16], Role::Forward);
+        }
+        let p = b.param("w", &[1 << 16]);
+        b.grad_sync("w", &[prev], p, 1e6);
+        let g = b.finish();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 3, 11);
+        (g, d, c, prof)
+    }
+
+    #[test]
+    fn original_ops_use_profiled_times() {
+        let (g, _d, c, prof) = setup();
+        let est = CostEstimator::analytical(&prof, &c);
+        for n in g.live() {
+            if n.kind == OpKind::Mul {
+                assert_eq!(est.compute_time_ms(n), prof.time_of(n.id));
+            }
+        }
+    }
+
+    #[test]
+    fn comm_uses_fitted_model() {
+        let (_g, _d, c, prof) = setup();
+        let est = CostEstimator::analytical(&prof, &c);
+        let bytes = 8.0 * 1024.0 * 1024.0;
+        assert_eq!(est.comm_time_ms(bytes), prof.comm.predict_ms(bytes));
+    }
+
+    #[test]
+    fn oracle_matches_device_exactly() {
+        let (mut g, d, _c, prof) = setup();
+        let f = fuse_ops(&mut g, 1, 2, FusionKind::NonDuplicate).unwrap();
+        let est = CostEstimator::oracle(&prof, &d);
+        let node = &g.nodes[f];
+        let truth = d.node_time_ms(node);
+        assert!((est.compute_time_ms(node) - truth).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytical_prediction_in_ballpark() {
+        let (mut g, d, c, prof) = setup();
+        let mut f = fuse_ops(&mut g, 1, 2, FusionKind::NonDuplicate).unwrap();
+        f = fuse_ops(&mut g, f, 3, FusionKind::NonDuplicate).unwrap();
+        let est = CostEstimator::analytical(&prof, &c);
+        let pred = est.compute_time_ms(&g.nodes[f]);
+        let truth = d.node_time_ms(&g.nodes[f]);
+        // White-box heuristic: right order of magnitude, not exact.
+        assert!(pred > 0.0);
+        assert!((pred - truth).abs() / truth < 0.8, "pred={pred} truth={truth}");
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_queries() {
+        let (mut g, d, _c, prof) = setup();
+        let f = fuse_ops(&mut g, 1, 2, FusionKind::NonDuplicate).unwrap();
+        let est = CostEstimator::oracle(&prof, &d);
+        let a = est.compute_time_ms(&g.nodes[f]);
+        let b = est.compute_time_ms(&g.nodes[f]);
+        assert_eq!(a, b);
+        let (hits, misses) = est.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+}

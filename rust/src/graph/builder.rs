@@ -1,0 +1,265 @@
+//! Convenience builder for [`TrainingGraph`]s, used by the model zoo and
+//! tests. Computes FLOP and byte accounting from shapes so the device
+//! model gets consistent inputs.
+
+use super::{DType, Node, NodeId, OpKind, Role, Shape, TrainingGraph};
+
+/// Builder over an owned graph.
+pub struct GraphBuilder {
+    g: TrainingGraph,
+    dtype: DType,
+}
+
+/// Cost factors for transcendental elementwise ops relative to one FLOP
+/// per element (a GPU `exp` is several hardware ops).
+fn elementwise_flop_factor(kind: OpKind) -> f64 {
+    match kind {
+        OpKind::Exp | OpKind::Log | OpKind::Tanh | OpKind::Sigmoid | OpKind::Gelu => 4.0,
+        OpKind::Sqrt | OpKind::Rsqrt => 2.0,
+        OpKind::Softmax => 5.0,
+        OpKind::LayerNorm | OpKind::BatchNorm => 6.0,
+        OpKind::CrossEntropy => 6.0,
+        _ => 1.0,
+    }
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, num_workers: usize) -> GraphBuilder {
+        GraphBuilder { g: TrainingGraph::new(name, num_workers), dtype: DType::F32 }
+    }
+
+    pub fn with_dtype(mut self, dt: DType) -> Self {
+        self.dtype = dt;
+        self
+    }
+
+    pub fn graph(&self) -> &TrainingGraph {
+        &self.g
+    }
+
+    pub fn finish(self) -> TrainingGraph {
+        debug_assert!(self.g.validate().is_ok());
+        self.g
+    }
+
+    fn input_bytes(&self, inputs: &[NodeId]) -> f64 {
+        inputs.iter().map(|&i| self.g.nodes[i].bytes_out).sum()
+    }
+
+    fn push(
+        &mut self,
+        kind: OpKind,
+        name: &str,
+        role: Role,
+        inputs: Vec<NodeId>,
+        dims: &[usize],
+        flops: f64,
+    ) -> NodeId {
+        let shape = Shape::new(dims);
+        let bytes_out = shape.bytes(self.dtype) as f64;
+        let bytes_in = self.input_bytes(&inputs);
+        self.g.push(Node {
+            id: 0,
+            name: name.to_string(),
+            kind,
+            role,
+            orig_inputs: inputs.clone(),
+            inputs,
+            shape,
+            dtype: self.dtype,
+            flops,
+            bytes_in,
+            bytes_out,
+            fused: None,
+            ar_constituents: Vec::new(),
+            deleted: false,
+        })
+    }
+
+    // ---- leaves ----------------------------------------------------------
+
+    /// Model parameter (weight tensor).
+    pub fn param(&mut self, name: &str, dims: &[usize]) -> NodeId {
+        self.push(OpKind::Parameter, name, Role::Param, vec![], dims, 0.0)
+    }
+
+    /// Constant / input activation leaf.
+    pub fn constant(&mut self, name: &str, dims: &[usize]) -> NodeId {
+        self.push(OpKind::Constant, name, Role::Param, vec![], dims, 0.0)
+    }
+
+    // ---- generic compute ----------------------------------------------------
+
+    /// Generic compute node; FLOPs estimated as `factor * out_elems` for
+    /// elementwise-like ops, `in_elems` for data movement / reductions.
+    pub fn compute(
+        &mut self,
+        kind: OpKind,
+        name: &str,
+        inputs: &[NodeId],
+        out_dims: &[usize],
+        role: Role,
+    ) -> NodeId {
+        let out_elems = Shape::new(out_dims).elems() as f64;
+        let in_elems: f64 = inputs
+            .iter()
+            .map(|&i| self.g.nodes[i].shape.elems() as f64)
+            .sum();
+        let flops = match kind.pattern_class() {
+            super::PatternClass::Injective => elementwise_flop_factor(kind) * out_elems,
+            super::PatternClass::Reduction => elementwise_flop_factor(kind) * in_elems.max(out_elems),
+            _ => in_elems.max(out_elems), // conservative default; use the
+                                          // dedicated helpers for matmul/conv
+        };
+        self.push(kind, name, role, inputs.to_vec(), out_dims, flops)
+    }
+
+    /// Compute node with explicit FLOPs (for ops whose cost is not derivable
+    /// from the output shape).
+    pub fn compute_flops(
+        &mut self,
+        kind: OpKind,
+        name: &str,
+        inputs: &[NodeId],
+        out_dims: &[usize],
+        role: Role,
+        flops: f64,
+    ) -> NodeId {
+        self.push(kind, name, role, inputs.to_vec(), out_dims, flops)
+    }
+
+    // ---- dense / conv helpers ---------------------------------------------------
+
+    /// `[b?, m, k] x [k, n]` matmul: 2*m*k*n*batch FLOPs.
+    pub fn matmul(
+        &mut self,
+        name: &str,
+        inputs: &[NodeId],
+        batch: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        role: Role,
+    ) -> NodeId {
+        let flops = 2.0 * batch as f64 * m as f64 * k as f64 * n as f64;
+        let dims: Vec<usize> =
+            if batch > 1 { vec![batch, m, n] } else { vec![m, n] };
+        let kind = if batch > 1 { OpKind::BatchMatMul } else { OpKind::MatMul };
+        self.push(kind, name, role, inputs.to_vec(), &dims, flops)
+    }
+
+    /// NCHW conv2d with square kernel `r`, stride `s`, "same"-ish output
+    /// `h_out = h/s`, `w_out = w/s`: 2*N*K*C*R*R*h_out*w_out FLOPs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        inputs: &[NodeId],
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        r: usize,
+        stride: usize,
+        role: Role,
+    ) -> NodeId {
+        let (ho, wo) = (h / stride, w / stride);
+        let flops = 2.0 * (n * k * c * r * r * ho * wo) as f64;
+        self.push(OpKind::Conv2D, name, role, inputs.to_vec(), &[n, k, ho, wo], flops)
+    }
+
+    // ---- communication / optimizer ------------------------------------------------
+
+    /// AllReduce of the gradient produced by `grad_op`. Registers itself as
+    /// its own (singleton) constituent for tensor-fusion bookkeeping.
+    pub fn allreduce(&mut self, name: &str, grad_op: NodeId, dims: &[usize]) -> NodeId {
+        let id = self.push(OpKind::AllReduce, name, Role::Comm, vec![grad_op], dims, 0.0);
+        self.g.nodes[id].ar_constituents = vec![id];
+        id
+    }
+
+    /// Optimizer update consuming an aggregated gradient (+ the parameter).
+    pub fn optimizer_update(&mut self, name: &str, inputs: &[NodeId]) -> NodeId {
+        let dims: Vec<usize> = self.g.nodes[inputs[0]].shape.dims.clone();
+        let elems = Shape::new(&dims).elems() as f64;
+        // Adam: ~10 flops/element (m, v, bias correction, update).
+        self.push(OpKind::ApplyOptimizer, name, Role::Optimizer, inputs.to_vec(), &dims, 10.0 * elems)
+    }
+
+    /// Convenience: gradient compute + AllReduce + optimizer chain for one
+    /// parameter. Returns the AllReduce id.
+    pub fn grad_sync(
+        &mut self,
+        base_name: &str,
+        grad_inputs: &[NodeId],
+        param: NodeId,
+        grad_flops: f64,
+    ) -> NodeId {
+        let dims: Vec<usize> = self.g.nodes[param].shape.dims.clone();
+        let g = self.compute_flops(
+            OpKind::MatMul,
+            &format!("{base_name}.grad"),
+            grad_inputs,
+            &dims,
+            Role::Backward,
+            grad_flops,
+        );
+        let ar = self.allreduce(&format!("{base_name}.allreduce"), g, &dims);
+        self.optimizer_update(&format!("{base_name}.apply"), &[ar, param]);
+        ar
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_flops() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.constant("x", &[32, 64]);
+        let w = b.param("w", &[64, 128]);
+        let y = b.matmul("y", &[x, w], 1, 32, 64, 128, Role::Forward);
+        let n = &b.graph().nodes[y];
+        assert_eq!(n.flops, 2.0 * 32.0 * 64.0 * 128.0);
+        assert_eq!(n.shape.dims, vec![32, 128]);
+        assert_eq!(n.bytes_out, 32.0 * 128.0 * 4.0);
+        assert_eq!(n.bytes_in, (32.0 * 64.0 + 64.0 * 128.0) * 4.0);
+    }
+
+    #[test]
+    fn conv_flops_and_shape() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.constant("x", &[8, 3, 224, 224]);
+        let y = b.conv2d("c1", &[x], 8, 3, 224, 224, 64, 3, 1, Role::Forward);
+        let n = &b.graph().nodes[y];
+        assert_eq!(n.shape.dims, vec![8, 64, 224, 224]);
+        assert_eq!(n.flops, 2.0 * (8 * 64 * 3 * 3 * 3 * 224 * 224) as f64);
+    }
+
+    #[test]
+    fn elementwise_factors() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.constant("x", &[100]);
+        let t = b.compute(OpKind::Tanh, "t", &[x], &[100], Role::Forward);
+        let a = b.compute(OpKind::Add, "a", &[x, x], &[100], Role::Forward);
+        assert_eq!(b.graph().nodes[t].flops, 400.0);
+        assert_eq!(b.graph().nodes[a].flops, 100.0);
+    }
+
+    #[test]
+    fn grad_sync_chain() {
+        let mut b = GraphBuilder::new("t", 4);
+        let p = b.param("w", &[64, 64]);
+        let x = b.constant("x", &[64, 64]);
+        let ar = b.grad_sync("w", &[x], p, 1000.0);
+        let g = b.finish();
+        assert_eq!(g.allreduces(), vec![ar]);
+        assert_eq!(g.nodes[ar].ar_constituents, vec![ar]);
+        // Optimizer consumes the allreduce.
+        let succ = g.successors();
+        assert_eq!(succ[ar].len(), 1);
+        assert_eq!(g.nodes[succ[ar][0]].kind, OpKind::ApplyOptimizer);
+    }
+}

@@ -1,0 +1,476 @@
+//! HLO-like intermediate representation of one training iteration.
+//!
+//! A [`TrainingGraph`] is the unit the whole system operates on: the model
+//! zoo builds one, the profiler annotates it, the fusion transforms rewrite
+//! it, the simulator schedules it, and the search explores the space of its
+//! rewrites. It corresponds to the paper's "HLO module of the whole DNN
+//! model" (DisCo §3.1): forward ops, backward ops, AllReduce instructions
+//! for every gradient tensor, and optimizer-update ops.
+//!
+//! Nodes are stored in an arena (`Vec<Node>`) with tombstones: fusion
+//! transforms mark absorbed nodes `deleted` rather than re-indexing, so a
+//! candidate rewrite is a cheap clone + local edits (important for the
+//! search hot path).
+
+pub mod op;
+pub mod shape;
+pub mod builder;
+pub mod serial;
+pub mod hlo_import;
+
+pub use op::{OpKind, PatternClass};
+pub use shape::{DType, Shape};
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+/// Index of a node within its graph's arena.
+pub type NodeId = usize;
+
+/// Which phase of the training iteration an op belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Forward,
+    Backward,
+    Optimizer,
+    Comm,
+    Param,
+}
+
+impl Role {
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Forward => "fwd",
+            Role::Backward => "bwd",
+            Role::Optimizer => "opt",
+            Role::Comm => "comm",
+            Role::Param => "param",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Role> {
+        match s {
+            "fwd" => Some(Role::Forward),
+            "bwd" => Some(Role::Backward),
+            "opt" => Some(Role::Optimizer),
+            "comm" => Some(Role::Comm),
+            "param" => Some(Role::Param),
+            _ => None,
+        }
+    }
+}
+
+/// Descriptor of an original (pre-fusion) op retained inside a fused group.
+/// This is exactly the per-node feature record the GNN estimator consumes
+/// (paper §4.3.1: op type, input/output sizes, profiled execution time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrigOp {
+    /// Node id in the *original* (unfused) graph — stable identity.
+    pub orig_id: NodeId,
+    pub kind: OpKind,
+    pub flops: f64,
+    pub bytes_in: f64,
+    pub bytes_out: f64,
+    /// Profiled single-op execution time in ms (0 until profiled).
+    pub time_ms: f64,
+    /// True if this op instance is a duplicate-fusion replica whose compute
+    /// is re-paid inside the group.
+    pub duplicated: bool,
+}
+
+/// The subgraph of original ops inside a fused computation op.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FusedGroup {
+    pub ops: Vec<OrigOp>,
+    /// Directed edges (producer index, consumer index) into `ops`.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl FusedGroup {
+    /// Deterministic signature for estimator caching: same member ops (by
+    /// original id + duplication flag) and same internal wiring → same cost.
+    pub fn signature(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        // Order-independent over ops: sort keys first.
+        let mut keys: Vec<(NodeId, bool)> =
+            self.ops.iter().map(|o| (o.orig_id, o.duplicated)).collect();
+        keys.sort_unstable();
+        keys.hash(&mut h);
+        let mut edges: Vec<(NodeId, NodeId)> = self
+            .edges
+            .iter()
+            .map(|&(a, b)| (self.ops[a].orig_id, self.ops[b].orig_id))
+            .collect();
+        edges.sort_unstable();
+        edges.hash(&mut h);
+        h.finish()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// One instruction of the training graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub role: Role,
+    /// Producers of this node's operands (live node ids). Fusion
+    /// transforms redirect these when consumers are rewired.
+    pub inputs: Vec<NodeId>,
+    /// The inputs this instruction had when first created — never mutated
+    /// by rewrites. Fused-group internal wiring is derived from these.
+    pub orig_inputs: Vec<NodeId>,
+    /// Primary output shape.
+    pub shape: Shape,
+    pub dtype: DType,
+    /// Floating-point operations performed by this op.
+    pub flops: f64,
+    /// Bytes read from device memory (operand bytes).
+    pub bytes_in: f64,
+    /// Bytes written to device memory (result bytes).
+    pub bytes_out: f64,
+    /// For `OpKind::Fused`: the internal subgraph of original ops.
+    pub fused: Option<FusedGroup>,
+    /// For `OpKind::AllReduce`: ids of the *original* AllReduce instructions
+    /// merged into this one (singleton when unfused). Used for neighbor
+    /// discovery and byte accounting in tensor fusion.
+    pub ar_constituents: Vec<NodeId>,
+    /// Tombstone: true once absorbed by a fusion transform.
+    pub deleted: bool,
+}
+
+impl Node {
+    /// Gradient-tensor bytes carried by an AllReduce node.
+    pub fn tensor_bytes(&self) -> f64 {
+        debug_assert_eq!(self.kind, OpKind::AllReduce);
+        self.bytes_out
+    }
+
+    /// Signature used as an estimator cache key. Unfused ops key on
+    /// (kind, shape, dtype); fused ops key on their group signature —
+    /// the paper's "indexed by op_code and input shape" (§4.2).
+    pub fn cost_signature(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        match &self.fused {
+            Some(g) => {
+                1u8.hash(&mut h);
+                g.signature().hash(&mut h);
+            }
+            None => {
+                0u8.hash(&mut h);
+                self.kind.name().hash(&mut h);
+                self.shape.dims.hash(&mut h);
+                self.dtype.name().hash(&mut h);
+                (self.flops.to_bits(), self.bytes_in.to_bits(), self.bytes_out.to_bits())
+                    .hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+}
+
+/// Validation failures for a graph (used by the search's validity check).
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum GraphError {
+    #[error("node {0} references missing/deleted input {1}")]
+    DanglingInput(NodeId, NodeId),
+    #[error("graph contains a cycle involving node {0}")]
+    Cycle(NodeId),
+    #[error("node {0} ({1}) of kind {2} may not be fused")]
+    InvalidFusion(NodeId, String, String),
+    #[error("node {0} id does not match arena index {1}")]
+    IdMismatch(NodeId, usize),
+}
+
+/// A whole training-iteration graph for one worker replica, plus the
+/// data-parallel context (worker count) its AllReduces span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingGraph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Number of data-parallel workers (devices) the AllReduces span.
+    pub num_workers: usize,
+}
+
+impl TrainingGraph {
+    pub fn new(name: &str, num_workers: usize) -> TrainingGraph {
+        TrainingGraph { name: name.to_string(), nodes: Vec::new(), num_workers }
+    }
+
+    // ---- structure access ---------------------------------------------------
+
+    /// Live (non-tombstoned) nodes.
+    pub fn live(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| !n.deleted)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live().count()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Successor lists for all nodes (index = node id; deleted nodes empty).
+    pub fn successors(&self) -> Vec<Vec<NodeId>> {
+        let mut succ = vec![Vec::new(); self.nodes.len()];
+        for n in self.live() {
+            for &i in &n.inputs {
+                succ[i].push(n.id);
+            }
+        }
+        succ
+    }
+
+    /// Kahn topological order over live nodes. Errors with the id of a node
+    /// on a cycle.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, GraphError> {
+        let mut indeg = vec![0usize; self.nodes.len()];
+        let succ = self.successors();
+        for n in self.live() {
+            indeg[n.id] = n.inputs.len();
+        }
+        let mut queue: Vec<NodeId> =
+            self.live().filter(|n| n.inputs.is_empty()).map(|n| n.id).collect();
+        let mut order = Vec::with_capacity(self.live_count());
+        let mut qi = 0;
+        while qi < queue.len() {
+            let u = queue[qi];
+            qi += 1;
+            order.push(u);
+            for &v in &succ[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() != self.live_count() {
+            let stuck = self
+                .live()
+                .find(|n| indeg[n.id] > 0)
+                .map(|n| n.id)
+                .unwrap_or(0);
+            return Err(GraphError::Cycle(stuck));
+        }
+        Ok(order)
+    }
+
+    /// Full validation: arena ids, dangling inputs, acyclicity.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(GraphError::IdMismatch(n.id, i));
+            }
+            if n.deleted {
+                continue;
+            }
+            for &inp in &n.inputs {
+                if inp >= self.nodes.len() || self.nodes[inp].deleted {
+                    return Err(GraphError::DanglingInput(n.id, inp));
+                }
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    // ---- aggregate queries ----------------------------------------------------
+
+    /// Ids of all live AllReduce instructions.
+    pub fn allreduces(&self) -> Vec<NodeId> {
+        self.live().filter(|n| n.kind == OpKind::AllReduce).map(|n| n.id).collect()
+    }
+
+    /// Ids of all live fusible computation ops.
+    pub fn compute_ops(&self) -> Vec<NodeId> {
+        self.live()
+            .filter(|n| n.kind.is_fusible_compute() || n.kind == OpKind::Fused)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Total gradient bytes communicated per iteration (invariant under
+    /// tensor fusion — a key property test).
+    pub fn total_gradient_bytes(&self) -> f64 {
+        self.live()
+            .filter(|n| n.kind == OpKind::AllReduce)
+            .map(|n| n.bytes_out)
+            .sum()
+    }
+
+    /// Total computation FLOPs (grows only via duplicate fusion).
+    pub fn total_flops(&self) -> f64 {
+        self.live().map(|n| n.flops).sum()
+    }
+
+    /// Number of original computation ops represented (fused groups count
+    /// their members; invariant under non-duplicate fusion).
+    pub fn represented_ops(&self) -> usize {
+        self.live()
+            .map(|n| match &n.fused {
+                Some(g) => g.ops.iter().filter(|o| !o.duplicated).count(),
+                None => usize::from(n.kind != OpKind::AllReduce),
+            })
+            .sum()
+    }
+
+    /// Append a node, assigning the next id. Used by the builder and by the
+    /// fusion transforms (fused nodes are appended, members tombstoned).
+    pub fn push(&mut self, mut node: Node) -> NodeId {
+        node.id = self.nodes.len();
+        let id = node.id;
+        self.nodes.push(node);
+        id
+    }
+
+    /// Inference view: tombstone every backward, communication and
+    /// optimizer instruction, leaving the forward pass (used for the
+    /// single-device comparison, paper Fig. 8).
+    pub fn forward_only(&self) -> TrainingGraph {
+        let mut g = self.clone();
+        g.name = format!("{}-fwd", g.name);
+        for n in g.nodes.iter_mut() {
+            if matches!(n.role, Role::Backward | Role::Comm | Role::Optimizer) {
+                n.deleted = true;
+            }
+        }
+        // Drop now-unconsumed parameters? No — parameters feed forward ops.
+        debug_assert!(g.validate().is_ok());
+        g
+    }
+
+    /// Deep structural fingerprint of the live graph, for dedup of search
+    /// candidates.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        for n in self.live() {
+            n.id.hash(&mut h);
+            n.kind.name().hash(&mut h);
+            n.inputs.hash(&mut h);
+            if let Some(g) = &n.fused {
+                g.signature().hash(&mut h);
+            }
+            n.ar_constituents.hash(&mut h);
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder::GraphBuilder;
+    use super::*;
+
+    fn tiny() -> TrainingGraph {
+        // p -> mul -> relu -> grad(mul) -> allreduce -> apply
+        let mut b = GraphBuilder::new("tiny", 4);
+        let p = b.param("w", &[128, 128]);
+        let m = b.compute(OpKind::MatMul, "mm", &[p, p], &[128, 128], Role::Forward);
+        let r = b.compute(OpKind::Relu, "relu", &[m], &[128, 128], Role::Forward);
+        let g = b.compute(OpKind::MatMul, "grad", &[r], &[128, 128], Role::Backward);
+        let ar = b.allreduce("ar", g, &[128, 128]);
+        b.optimizer_update("apply", &[ar, p]);
+        b.finish()
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.allreduces().len(), 1);
+        assert!(g.live_count() >= 6);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = tiny();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.nodes.len()];
+            for (i, &id) in order.iter().enumerate() {
+                p[id] = i;
+            }
+            p
+        };
+        for n in g.live() {
+            for &i in &n.inputs {
+                assert!(pos[i] < pos[n.id], "{} before {}", i, n.id);
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = tiny();
+        // Introduce a cycle: first compute node consumes the last one.
+        let last = g.nodes.len() - 1;
+        g.nodes[1].inputs.push(last);
+        assert!(matches!(g.validate(), Err(GraphError::Cycle(_))));
+    }
+
+    #[test]
+    fn dangling_detected() {
+        let mut g = tiny();
+        let victim = g.nodes[2].inputs[0];
+        g.nodes[victim].deleted = true;
+        assert!(matches!(g.validate(), Err(GraphError::DanglingInput(_, _))));
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = tiny();
+        c.nodes[2].deleted = true;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fused_group_signature_order_independent() {
+        let op = |id: NodeId| OrigOp {
+            orig_id: id,
+            kind: OpKind::Mul,
+            flops: 10.0,
+            bytes_in: 8.0,
+            bytes_out: 8.0,
+            time_ms: 0.0,
+            duplicated: false,
+        };
+        let g1 = FusedGroup { ops: vec![op(1), op(2)], edges: vec![(0, 1)] };
+        let g2 = FusedGroup { ops: vec![op(2), op(1)], edges: vec![(1, 0)] };
+        assert_eq!(g1.signature(), g2.signature());
+        let g3 = FusedGroup { ops: vec![op(1), op(3)], edges: vec![(0, 1)] };
+        assert_ne!(g1.signature(), g3.signature());
+    }
+
+    #[test]
+    fn cost_signature_distinguishes_shapes() {
+        let g = tiny();
+        let a = g.nodes[1].cost_signature();
+        let mut n2 = g.nodes[1].clone();
+        n2.shape = Shape::new(&[64, 64]);
+        assert_ne!(a, n2.cost_signature());
+    }
+
+    #[test]
+    fn represented_ops_counts_members() {
+        let g = tiny();
+        let before = g.represented_ops();
+        assert!(before > 0);
+        assert_eq!(g.total_gradient_bytes(), 128.0 * 128.0 * 4.0);
+    }
+}

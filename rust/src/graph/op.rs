@@ -1,0 +1,285 @@
+//! Operator vocabulary of the IR, and the classifications the fusion
+//! passes need (XLA-style fusibility, TVM-style pattern classes).
+
+/// Kinds of instruction in our HLO-like IR. This mirrors the op set of the
+/// paper's benchmark models (CNNs + NLP models): dense/conv compute,
+/// elementwise math, normalization, data movement, communication, and the
+/// control-flow ops whose fusion is invalid (Alg. 1 validity check).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    // -- leaves --------------------------------------------------------
+    Parameter,
+    Constant,
+    // -- heavy compute --------------------------------------------------
+    Conv2D,
+    MatMul,
+    BatchMatMul,
+    // -- elementwise ----------------------------------------------------
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Gelu,
+    Maximum,
+    Select,
+    Compare,
+    Cast,
+    // -- reductions / normalization --------------------------------------
+    Reduce,
+    Softmax,
+    LayerNorm,
+    BatchNorm,
+    Pool,
+    // -- data movement ----------------------------------------------------
+    Transpose,
+    Reshape,
+    Broadcast,
+    Concat,
+    Slice,
+    Gather,
+    Scatter,
+    Embedding,
+    Sort,
+    // -- training-specific -------------------------------------------------
+    Dropout,
+    CrossEntropy,
+    ApplyOptimizer,
+    // -- communication -------------------------------------------------------
+    AllReduce,
+    // -- structured -----------------------------------------------------------
+    /// A fused computation op produced by an op-fusion transform.
+    Fused,
+    // -- control flow (never fusible, paper §4.5 validity) ----------------------
+    While,
+    Conditional,
+}
+
+/// TVM-style pattern classes (paper §7.1): injective ops fuse freely,
+/// reductions fuse with input injectives, complex-out-fusible ops accept
+/// elementwise epilogues, opaque ops never fuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatternClass {
+    Injective,
+    Reduction,
+    ComplexOutFusible,
+    Opaque,
+}
+
+impl OpKind {
+    /// All op kinds, for feature one-hot encoding (GNN input) and tests.
+    pub const ALL: [OpKind; 40] = [
+        OpKind::Parameter,
+        OpKind::Constant,
+        OpKind::Conv2D,
+        OpKind::MatMul,
+        OpKind::BatchMatMul,
+        OpKind::Add,
+        OpKind::Sub,
+        OpKind::Mul,
+        OpKind::Div,
+        OpKind::Neg,
+        OpKind::Exp,
+        OpKind::Log,
+        OpKind::Sqrt,
+        OpKind::Rsqrt,
+        OpKind::Tanh,
+        OpKind::Sigmoid,
+        OpKind::Relu,
+        OpKind::Gelu,
+        OpKind::Maximum,
+        OpKind::Select,
+        OpKind::Compare,
+        OpKind::Cast,
+        OpKind::Reduce,
+        OpKind::Softmax,
+        OpKind::LayerNorm,
+        OpKind::BatchNorm,
+        OpKind::Pool,
+        OpKind::Transpose,
+        OpKind::Reshape,
+        OpKind::Broadcast,
+        OpKind::Concat,
+        OpKind::Slice,
+        OpKind::Gather,
+        OpKind::Scatter,
+        OpKind::Embedding,
+        OpKind::Sort,
+        OpKind::Dropout,
+        OpKind::CrossEntropy,
+        OpKind::ApplyOptimizer,
+        OpKind::AllReduce,
+    ];
+
+    /// Index into the one-hot feature encoding used by the GNN estimator.
+    /// Fused/control-flow ops never appear inside a fused subgraph.
+    pub fn feature_index(self) -> usize {
+        OpKind::ALL
+            .iter()
+            .position(|&k| k == self)
+            .unwrap_or(OpKind::ALL.len())
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Parameter => "parameter",
+            OpKind::Constant => "constant",
+            OpKind::Conv2D => "conv2d",
+            OpKind::MatMul => "matmul",
+            OpKind::BatchMatMul => "batch_matmul",
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Neg => "neg",
+            OpKind::Exp => "exp",
+            OpKind::Log => "log",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Rsqrt => "rsqrt",
+            OpKind::Tanh => "tanh",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::Relu => "relu",
+            OpKind::Gelu => "gelu",
+            OpKind::Maximum => "maximum",
+            OpKind::Select => "select",
+            OpKind::Compare => "compare",
+            OpKind::Cast => "cast",
+            OpKind::Reduce => "reduce",
+            OpKind::Softmax => "softmax",
+            OpKind::LayerNorm => "layer_norm",
+            OpKind::BatchNorm => "batch_norm",
+            OpKind::Pool => "pool",
+            OpKind::Transpose => "transpose",
+            OpKind::Reshape => "reshape",
+            OpKind::Broadcast => "broadcast",
+            OpKind::Concat => "concat",
+            OpKind::Slice => "slice",
+            OpKind::Gather => "gather",
+            OpKind::Scatter => "scatter",
+            OpKind::Embedding => "embedding",
+            OpKind::Sort => "sort",
+            OpKind::Dropout => "dropout",
+            OpKind::CrossEntropy => "cross_entropy",
+            OpKind::ApplyOptimizer => "apply_optimizer",
+            OpKind::AllReduce => "all_reduce",
+            OpKind::Fused => "fused",
+            OpKind::While => "while",
+            OpKind::Conditional => "conditional",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OpKind> {
+        OpKind::ALL
+            .iter()
+            .copied()
+            .chain([OpKind::Fused, OpKind::While, OpKind::Conditional])
+            .find(|k| k.name() == s)
+    }
+
+    /// Is this a computation op that op-fusion may touch? (Paper validity:
+    /// parameters, constants, control flow, communication and optimizer
+    /// updates are excluded.)
+    pub fn is_fusible_compute(self) -> bool {
+        !matches!(
+            self,
+            OpKind::Parameter
+                | OpKind::Constant
+                | OpKind::AllReduce
+                | OpKind::ApplyOptimizer
+                | OpKind::While
+                | OpKind::Conditional
+        )
+    }
+
+    /// Elementwise (one output element per input element, same shape)?
+    pub fn is_elementwise(self) -> bool {
+        matches!(
+            self,
+            OpKind::Add
+                | OpKind::Sub
+                | OpKind::Mul
+                | OpKind::Div
+                | OpKind::Neg
+                | OpKind::Exp
+                | OpKind::Log
+                | OpKind::Sqrt
+                | OpKind::Rsqrt
+                | OpKind::Tanh
+                | OpKind::Sigmoid
+                | OpKind::Relu
+                | OpKind::Gelu
+                | OpKind::Maximum
+                | OpKind::Select
+                | OpKind::Compare
+                | OpKind::Cast
+                | OpKind::Dropout
+        )
+    }
+
+    /// TVM pattern class (used by the TVM-rule baseline).
+    pub fn pattern_class(self) -> PatternClass {
+        if self.is_elementwise()
+            || matches!(self, OpKind::Transpose | OpKind::Reshape | OpKind::Broadcast | OpKind::Slice | OpKind::Concat)
+        {
+            PatternClass::Injective
+        } else if matches!(self, OpKind::Reduce | OpKind::Softmax | OpKind::LayerNorm | OpKind::BatchNorm | OpKind::Pool | OpKind::CrossEntropy) {
+            PatternClass::Reduction
+        } else if matches!(self, OpKind::Conv2D | OpKind::MatMul | OpKind::BatchMatMul | OpKind::Embedding) {
+            PatternClass::ComplexOutFusible
+        } else {
+            PatternClass::Opaque
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrip_all() {
+        for k in OpKind::ALL {
+            assert_eq!(OpKind::from_name(k.name()), Some(k), "{k:?}");
+        }
+        assert_eq!(OpKind::from_name("fused"), Some(OpKind::Fused));
+        assert_eq!(OpKind::from_name("while"), Some(OpKind::While));
+    }
+
+    #[test]
+    fn feature_indices_unique_and_dense() {
+        let mut seen = vec![false; OpKind::ALL.len()];
+        for k in OpKind::ALL {
+            let i = k.feature_index();
+            assert!(i < OpKind::ALL.len());
+            assert!(!seen[i], "duplicate index for {k:?}");
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn validity_exclusions() {
+        assert!(!OpKind::Parameter.is_fusible_compute());
+        assert!(!OpKind::While.is_fusible_compute());
+        assert!(!OpKind::AllReduce.is_fusible_compute());
+        assert!(!OpKind::ApplyOptimizer.is_fusible_compute());
+        assert!(OpKind::MatMul.is_fusible_compute());
+        assert!(OpKind::Relu.is_fusible_compute());
+    }
+
+    #[test]
+    fn pattern_classes() {
+        assert_eq!(OpKind::Add.pattern_class(), PatternClass::Injective);
+        assert_eq!(OpKind::Reshape.pattern_class(), PatternClass::Injective);
+        assert_eq!(OpKind::Reduce.pattern_class(), PatternClass::Reduction);
+        assert_eq!(OpKind::Conv2D.pattern_class(), PatternClass::ComplexOutFusible);
+        assert_eq!(OpKind::Gather.pattern_class(), PatternClass::Opaque);
+        assert_eq!(OpKind::AllReduce.pattern_class(), PatternClass::Opaque);
+    }
+}

@@ -1,0 +1,222 @@
+//! JSON (de)serialization of [`TrainingGraph`] — the wire format the
+//! coordinator broadcasts in the enactment phase (paper §4.1: the Activator
+//! fetches the optimized HLO module and broadcasts it to workers), and the
+//! on-disk format for saved strategies.
+
+use super::{DType, FusedGroup, Node, OpKind, OrigOp, Role, Shape, TrainingGraph};
+use crate::util::json::Json;
+
+fn shape_json(s: &Shape) -> Json {
+    Json::arr_usize(&s.dims)
+}
+
+fn shape_from(j: &Json) -> Option<Shape> {
+    let dims: Option<Vec<usize>> = j.as_arr()?.iter().map(|v| v.as_usize()).collect();
+    Some(Shape { dims: dims? })
+}
+
+fn orig_op_json(o: &OrigOp) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(o.orig_id as f64)),
+        ("kind", Json::Str(o.kind.name().to_string())),
+        ("flops", Json::Num(o.flops)),
+        ("bin", Json::Num(o.bytes_in)),
+        ("bout", Json::Num(o.bytes_out)),
+        ("t", Json::Num(o.time_ms)),
+        ("dup", Json::Bool(o.duplicated)),
+    ])
+}
+
+fn orig_op_from(j: &Json) -> Option<OrigOp> {
+    Some(OrigOp {
+        orig_id: j.get("id").as_usize()?,
+        kind: OpKind::from_name(j.get("kind").as_str()?)?,
+        flops: j.get("flops").as_f64()?,
+        bytes_in: j.get("bin").as_f64()?,
+        bytes_out: j.get("bout").as_f64()?,
+        time_ms: j.get("t").as_f64()?,
+        duplicated: j.get("dup").as_bool()?,
+    })
+}
+
+fn node_json(n: &Node) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(n.id as f64)),
+        ("name", Json::Str(n.name.clone())),
+        ("kind", Json::Str(n.kind.name().to_string())),
+        ("role", Json::Str(n.role.name().to_string())),
+        ("inputs", Json::arr_usize(&n.inputs)),
+        ("oinputs", Json::arr_usize(&n.orig_inputs)),
+        ("shape", shape_json(&n.shape)),
+        ("dtype", Json::Str(n.dtype.name().to_string())),
+        ("flops", Json::Num(n.flops)),
+        ("bin", Json::Num(n.bytes_in)),
+        ("bout", Json::Num(n.bytes_out)),
+        ("deleted", Json::Bool(n.deleted)),
+    ];
+    if let Some(g) = &n.fused {
+        fields.push((
+            "fused",
+            Json::obj(vec![
+                ("ops", Json::Arr(g.ops.iter().map(orig_op_json).collect())),
+                (
+                    "edges",
+                    Json::Arr(
+                        g.edges
+                            .iter()
+                            .map(|&(a, b)| Json::arr_usize(&[a, b]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    if !n.ar_constituents.is_empty() {
+        fields.push(("ar", Json::arr_usize(&n.ar_constituents)));
+    }
+    Json::obj(fields)
+}
+
+fn node_from(j: &Json) -> Option<Node> {
+    let fused = match j.get("fused") {
+        Json::Null => None,
+        f => {
+            let ops: Option<Vec<OrigOp>> =
+                f.get("ops").as_arr()?.iter().map(orig_op_from).collect();
+            let edges: Option<Vec<(usize, usize)>> = f
+                .get("edges")
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    let a = e.as_arr()?;
+                    Some((a.first()?.as_usize()?, a.get(1)?.as_usize()?))
+                })
+                .collect();
+            Some(FusedGroup { ops: ops?, edges: edges? })
+        }
+    };
+    let ar_constituents = match j.get("ar") {
+        Json::Null => Vec::new(),
+        a => a
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Option<Vec<usize>>>()?,
+    };
+    Some(Node {
+        id: j.get("id").as_usize()?,
+        name: j.get("name").as_str()?.to_string(),
+        kind: OpKind::from_name(j.get("kind").as_str()?)?,
+        role: Role::from_name(j.get("role").as_str()?)?,
+        inputs: j
+            .get("inputs")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Option<Vec<usize>>>()?,
+        orig_inputs: j
+            .get("oinputs")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Option<Vec<usize>>>()?,
+        shape: shape_from(j.get("shape"))?,
+        dtype: DType::from_name(j.get("dtype").as_str()?)?,
+        flops: j.get("flops").as_f64()?,
+        bytes_in: j.get("bin").as_f64()?,
+        bytes_out: j.get("bout").as_f64()?,
+        fused,
+        ar_constituents,
+        deleted: j.get("deleted").as_bool()?,
+    })
+}
+
+impl TrainingGraph {
+    /// Serialize to a JSON string (stable field order).
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("num_workers", Json::Num(self.num_workers as f64)),
+            ("nodes", Json::Arr(self.nodes.iter().map(node_json).collect())),
+        ])
+        .to_string()
+    }
+
+    /// Parse a graph back from [`TrainingGraph::to_json`] output.
+    pub fn from_json(s: &str) -> anyhow::Result<TrainingGraph> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let nodes: Option<Vec<Node>> =
+            j.get("nodes").as_arr().ok_or_else(|| anyhow::anyhow!("missing nodes"))?
+                .iter()
+                .map(node_from)
+                .collect();
+        let g = TrainingGraph {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("missing name"))?
+                .to_string(),
+            num_workers: j
+                .get("num_workers")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("missing num_workers"))?,
+            nodes: nodes.ok_or_else(|| anyhow::anyhow!("bad node"))?,
+        };
+        g.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builder::GraphBuilder;
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain_graph() {
+        let mut b = GraphBuilder::new("rt", 8);
+        let p = b.param("w", &[64, 32]);
+        let x = b.constant("x", &[16, 64]);
+        let y = b.matmul("y", &[x, p], 1, 16, 64, 32, Role::Forward);
+        let r = b.compute(OpKind::Relu, "r", &[y], &[16, 32], Role::Forward);
+        b.grad_sync("w", &[r], p, 1234.0);
+        let g = b.finish();
+        let s = g.to_json();
+        let g2 = TrainingGraph::from_json(&s).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn roundtrip_with_fused_group() {
+        let mut b = GraphBuilder::new("rt2", 2);
+        let x = b.constant("x", &[8]);
+        let a = b.compute(OpKind::Add, "a", &[x], &[8], Role::Forward);
+        let mut g = b.finish();
+        // Hand-attach a fused group to exercise that path.
+        g.nodes[a].kind = OpKind::Fused;
+        g.nodes[a].fused = Some(FusedGroup {
+            ops: vec![OrigOp {
+                orig_id: a,
+                kind: OpKind::Add,
+                flops: 8.0,
+                bytes_in: 32.0,
+                bytes_out: 32.0,
+                time_ms: 0.01,
+                duplicated: false,
+            }],
+            edges: vec![],
+        });
+        let g2 = TrainingGraph::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(
+            g2.nodes[a].fused.as_ref().unwrap().signature(),
+            g.nodes[a].fused.as_ref().unwrap().signature()
+        );
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(TrainingGraph::from_json("{").is_err());
+        assert!(TrainingGraph::from_json("{\"name\":\"x\"}").is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Tensor element types and shapes.
+
+/// Element type of a tensor. The paper's workloads train in f32 (with f16
+/// variants in some kernels); we carry the dtype so byte accounting —
+/// which drives both the device roofline and the AllReduce model — is exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    I32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f16" => Some(DType::F16),
+            "bf16" => Some(DType::BF16),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+/// A tensor shape (row-major dims). Scalars have empty dims.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape {
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Shape {
+        Shape { dims: dims.to_vec() }
+    }
+
+    pub fn scalar() -> Shape {
+        Shape { dims: vec![] }
+    }
+
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Total bytes at the given dtype.
+    pub fn bytes(&self, dt: DType) -> usize {
+        self.elems() * dt.bytes()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn to_string(&self) -> String {
+        let inner: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("[{}]", inner.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::BF16.bytes(), 2);
+    }
+
+    #[test]
+    fn dtype_name_roundtrip() {
+        for dt in [DType::F32, DType::F16, DType::BF16, DType::I32] {
+            assert_eq!(DType::from_name(dt.name()), Some(dt));
+        }
+        assert_eq!(DType::from_name("zzz"), None);
+    }
+
+    #[test]
+    fn shape_elems_bytes() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.elems(), 24);
+        assert_eq!(s.bytes(DType::F32), 96);
+        assert_eq!(s.rank(), 3);
+        assert_eq!(Shape::scalar().elems(), 1);
+    }
+
+    #[test]
+    fn shape_display() {
+        assert_eq!(Shape::new(&[8, 128]).to_string(), "[8,128]");
+        assert_eq!(Shape::scalar().to_string(), "[]");
+    }
+}

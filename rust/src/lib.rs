@@ -1,0 +1,72 @@
+//! # disco-rs
+//!
+//! A reproduction of **DisCo** — *"Optimizing DNN Compilation for Distributed
+//! Training with Joint OP and Tensor Fusion"* (Yi et al., TPDS 2022) — as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! DisCo takes a training graph (our HLO-like IR, [`graph::TrainingGraph`]),
+//! and jointly searches over
+//!
+//! * **computation op fusion** (non-duplicate and duplicate, [`fusion`]),
+//! * **communication tensor fusion** (combining AllReduce instructions),
+//!
+//! to minimize per-iteration distributed training time. The search
+//! ([`search`], Alg. 1 of the paper) is driven by a discrete-event
+//! [`sim`]ulator whose fused-op costs come from a [`estimator`] — either an
+//! analytical model or the paper's GNN *Fused Op Estimator*, executed as an
+//! AOT-compiled XLA artifact through [`runtime`].
+//!
+//! The distributed substrate the paper assumes (GPU cluster + NCCL) is
+//! replaced by an analytical [`device`] model, a ring-AllReduce [`network`]
+//! model, and a real in-process [`collective`] used for actual gradient
+//! averaging in the end-to-end example. See `DESIGN.md` for the full
+//! substitution table.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use disco::prelude::*;
+//!
+//! // 1. A workload: transformer training graph for 12 workers.
+//! let spec = disco::models::ModelSpec::transformer_base();
+//! let graph = disco::models::build(&spec, 12);
+//!
+//! // 2. A testbed: cluster A from the paper (6x2 GTX-1080-Ti-like).
+//! let cluster = disco::network::Cluster::cluster_a();
+//! let device = disco::device::DeviceModel::gtx1080ti();
+//!
+//! // 3. Profile + search.
+//! let profile = disco::profiler::profile(&graph, &device, &cluster, 3, 7);
+//! let est = disco::estimator::CostEstimator::analytical(&profile, &cluster);
+//! let cfg = disco::search::SearchConfig::default();
+//! let result = disco::search::backtracking_search(&graph, &est, &cfg);
+//! println!("optimized per-iteration time: {:.3} ms", result.best_cost_ms);
+//! ```
+
+pub mod util;
+pub mod graph;
+pub mod device;
+pub mod network;
+pub mod models;
+pub mod profiler;
+pub mod fusion;
+pub mod estimator;
+pub mod sim;
+pub mod search;
+pub mod baselines;
+pub mod collective;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Commonly used types, re-exported for examples and binaries.
+pub mod prelude {
+    pub use crate::device::DeviceModel;
+    pub use crate::estimator::CostEstimator;
+    pub use crate::graph::{DType, Node, OpKind, Shape, TrainingGraph};
+    pub use crate::models::ModelSpec;
+    pub use crate::network::Cluster;
+    pub use crate::search::{backtracking_search, SearchConfig};
+    pub use crate::sim::{simulate, SimOptions};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,385 @@
+//! `disco` — CLI for the DisCo reproduction.
+//!
+//! ```text
+//! disco search    --model transformer --cluster a [--alpha 1.05 --beta 10]
+//!                 [--estimator analytical|gnn|oracle] [--out strategy.json]
+//! disco enact     --strategy strategy.json --world 4 [--iterations 10]
+//! disco worker    --connect 127.0.0.1:7100 --rank 0 [--cluster a]
+//! disco profile   --model vgg19 --cluster a
+//! disco bench     fig6|fig7|fig8|fig9|table2|fig10|table3|table4|ablation|extensions|all
+//!                 [--full] [--estimator ...] [--out EXPERIMENTS.md-section]
+//! disco train-gnn [--per-model 800] [--epochs 30]
+//! disco e2e       [--workers 4] [--steps 200]
+//! ```
+
+use anyhow::{anyhow, Result};
+use disco::bench::{experiments, BenchOptions, EstimatorKind, Scale};
+use disco::coordinator::{enact, run_worker, EnactConfig};
+use disco::estimator::CostEstimator;
+use disco::graph::TrainingGraph;
+use disco::models::{build, ModelKind};
+use disco::network::Cluster;
+use disco::runtime::trainer::{train_distributed, TrainConfig};
+use disco::runtime::Manifest;
+use disco::search::{backtracking_search, SearchConfig};
+use disco::sim::CostSource;
+use disco::util::cli::Args;
+
+fn cluster_of(args: &Args) -> Cluster {
+    match args.get_or("cluster", "a") {
+        "b" => Cluster::cluster_b(),
+        "single" => Cluster::single_device(),
+        _ => Cluster::cluster_a(),
+    }
+}
+
+fn model_of(args: &Args) -> Result<ModelKind> {
+    let name = args.get_or("model", "transformer");
+    ModelKind::from_name(name).ok_or_else(|| {
+        anyhow!(
+            "unknown model '{name}' (expected one of {:?})",
+            ModelKind::ALL.iter().map(|m| m.name()).collect::<Vec<_>>()
+        )
+    })
+}
+
+fn bench_opts(args: &Args) -> Result<BenchOptions> {
+    let estimator = EstimatorKind::parse(args.get_or("estimator", "analytical"))
+        .ok_or_else(|| anyhow!("estimator must be analytical|gnn|oracle"))?;
+    Ok(BenchOptions {
+        scale: if args.has_flag("full") { Scale::Full } else { Scale::Fast },
+        estimator,
+        seed: args.get_u64("seed", 0xD15C0),
+        alpha: args.get_f64("alpha", 1.05),
+        beta: args.get_usize("beta", 10),
+    })
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let opts = bench_opts(args)?;
+    // `--config file.json` overrides cluster/device/search settings.
+    let file_cfg = match args.get("config") {
+        Some(path) => Some(disco::util::config::Config::from_file(path)?),
+        None => None,
+    };
+    let cluster = file_cfg.as_ref().map(|c| c.cluster.clone()).unwrap_or_else(|| cluster_of(args));
+    let kind = model_of(args)?;
+    let p = disco::bench::prepare(&opts, kind, &cluster);
+    let est = p.estimator(opts.estimator);
+    let mut cfg: SearchConfig = match &file_cfg {
+        Some(c) => c.search.clone(),
+        None => opts.search_config(),
+    };
+    cfg.unchanged_limit = args.get_usize("unchanged", cfg.unchanged_limit);
+    println!(
+        "searching {} on cluster {} ({} devices, {} live ops, {} AllReduces; estimator={}, α={}, β={})",
+        kind.name(),
+        cluster.name,
+        cluster.num_devices(),
+        p.graph.live_count(),
+        p.graph.allreduces().len(),
+        est.fused.name(),
+        cfg.alpha,
+        cfg.beta
+    );
+    let r = backtracking_search(&p.graph, &est, &cfg);
+    println!(
+        "initial {:.3} ms → best {:.3} ms ({:.1}% faster); {} evals in {:.1}s",
+        r.initial_cost_ms,
+        r.best_cost_ms,
+        (r.initial_cost_ms / r.best_cost_ms - 1.0) * 100.0,
+        r.evals,
+        r.elapsed.as_secs_f64()
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, r.best.to_json())?;
+        println!("wrote optimized strategy to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_enact(args: &Args) -> Result<()> {
+    let path = args.get("strategy").ok_or_else(|| anyhow!("--strategy <file> required"))?;
+    let graph = TrainingGraph::from_json(&std::fs::read_to_string(path)?)?;
+    let cluster = cluster_of(args);
+    let cfg = EnactConfig {
+        world: args.get_usize("world", 4),
+        iterations: args.get_usize("iterations", 10),
+        seed: args.get_u64("seed", 0xC0DE),
+        device: BenchOptions::device_for(&cluster),
+        cluster,
+        ..Default::default()
+    };
+    let report = enact(&graph, &cfg)?;
+    println!("enactment: {} workers acked; per-iteration {:.3} ms", report.acks, report.iteration_ms);
+    for (rank, (mk, comp, comm)) in report.per_rank.iter().enumerate() {
+        println!("  rank {rank}: makespan {mk:.3} ms (comp {comp:.3}, comm {comm:.3})");
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get("connect").ok_or_else(|| anyhow!("--connect <addr> required"))?;
+    let rank = args.get_usize("rank", 0);
+    let cluster = cluster_of(args);
+    let device = BenchOptions::device_for(&cluster);
+    run_worker(addr, rank, &device, &cluster)
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let opts = bench_opts(args)?;
+    let cluster = cluster_of(args);
+    let kind = model_of(args)?;
+    let p = disco::bench::prepare(&opts, kind, &cluster);
+    println!(
+        "{}: {} live ops, {} AllReduces, {:.1}M gradient elements, {:.2} GFLOP/iter",
+        kind.name(),
+        p.graph.live_count(),
+        p.graph.allreduces().len(),
+        p.graph.total_gradient_bytes() / 4.0 / 1e6,
+        p.graph.total_flops() / 1e9
+    );
+    println!(
+        "comm fit: T = {:.4e}·bytes + {:.3} ms (r² = {:.4}); launch ≈ {:.4} ms; bw ≈ {:.1} GB/s",
+        p.profile.comm.c,
+        p.profile.comm.d,
+        p.profile.comm.r2,
+        p.profile.launch_est_ms,
+        p.profile.bw_est_bytes_per_ms / 1e6
+    );
+    let est = CostEstimator::analytical(&p.profile, &p.cluster);
+    let sim = p.cost(&p.graph, &est);
+    println!(
+        "unoptimized per-iteration: {:.3} ms (comp {:.3}, comm {:.3}, overlap {:.2})",
+        sim.makespan_ms,
+        sim.comp_busy_ms,
+        sim.comm_busy_ms,
+        sim.overlap_ratio()
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let opts = bench_opts(args)?;
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let artifacts = Manifest::default_dir();
+    let mut sections: Vec<String> = Vec::new();
+    let run = |name: &str| what == name || what == "all";
+    if run("fig6") || what == "table1" {
+        sections.push(experiments::fig6_table1(&opts));
+    }
+    if run("fig7") {
+        sections.push(experiments::fig7(&opts));
+    }
+    if run("fig8") {
+        sections.push(experiments::fig8(&opts));
+    }
+    if run("fig9") {
+        match experiments::fig9(&opts, &artifacts) {
+            Ok(s) => sections.push(s),
+            Err(e) => eprintln!("fig9 skipped: {e} (run `make artifacts`)"),
+        }
+    }
+    if run("table2") {
+        sections.push(experiments::table2(&opts));
+    }
+    if run("fig10") {
+        sections.push(experiments::fig10(&opts));
+    }
+    if run("table3") {
+        sections.push(experiments::table3(&opts));
+    }
+    if run("table4") {
+        sections.push(experiments::table4(&opts));
+    }
+    if run("ablation") {
+        sections.push(experiments::ablation_estimator(&opts, Some(&artifacts))?);
+    }
+    if run("extensions") {
+        sections.push(experiments::ext_search_ablation(&opts));
+        sections.push(experiments::ext_parameter_server(&opts));
+        sections.push(experiments::ext_memory(&opts));
+    }
+    if sections.is_empty() {
+        return Err(anyhow!("unknown experiment '{what}'"));
+    }
+    let body = sections.join("\n");
+    println!("{body}");
+    if let Some(path) = args.get("out") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(
+            f,
+            "\n<!-- disco bench {what} ({} scale, {} estimator) -->\n{body}",
+            if opts.scale == Scale::Full { "full" } else { "fast" },
+            opts.estimator.name()
+        )?;
+        println!("appended to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train_gnn(args: &Args) -> Result<()> {
+    let opts = bench_opts(args)?;
+    let artifacts = Manifest::default_dir();
+    let per_model = args.get_usize("per-model", 400);
+    let epochs = args.get_usize("epochs", 15);
+    let report = disco::bench::gnn_pipeline::train_and_eval(
+        &opts,
+        &artifacts,
+        per_model,
+        per_model / 4,
+        epochs,
+    )?;
+    let path = disco::bench::gnn_pipeline::save_params(&artifacts, &report.params)?;
+    println!(
+        "trained on {} samples, {} epochs: loss {:.4} → {:.4}; held-out mean err {:.1}%, within 14%: {:.1}%",
+        report.train_samples,
+        report.epochs,
+        report.first_loss,
+        report.last_loss,
+        report.mean_error() * 100.0,
+        report.frac_within(0.14) * 100.0
+    );
+    println!("saved trained parameters to {}", path.display());
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        artifacts: Manifest::default_dir(),
+        world: args.get_usize("workers", 4),
+        steps: args.get_usize("steps", 200),
+        eval_every: args.get_usize("eval-every", 25),
+        seed: args.get_u64("seed", 0x7EA1),
+    };
+    let res = train_distributed(&cfg)?;
+    println!(
+        "trained {} params on {} workers for {} steps in {:.1}s",
+        res.param_count,
+        res.world,
+        cfg.steps,
+        res.wall_seconds
+    );
+    for l in res.log.iter().filter(|l| l.step % 10 == 0 || l.eval_loss.is_some()) {
+        match l.eval_loss {
+            Some(e) => println!("step {:>4}  loss {:.4}  eval {:.4}", l.step, l.loss, e),
+            None => println!("step {:>4}  loss {:.4}", l.step, l.loss),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_export_samples(args: &Args) -> Result<()> {
+    let opts = bench_opts(args)?;
+    let per_model = args.get_usize("per-model", 200);
+    let out = args.get_or("out", "samples.json");
+    let samples = disco::bench::gnn_pipeline::generate_samples(
+        &opts,
+        per_model,
+        args.get_usize("max-group", 24),
+        args.get_u64("seed", opts.seed),
+    );
+    std::fs::write(out, disco::profiler::samples_to_json(&samples))?;
+    println!("wrote {} fused-op samples to {out}", samples.len());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let opts = bench_opts(args)?;
+    let cluster = cluster_of(args);
+    let kind = model_of(args)?;
+    let p = disco::bench::prepare(&opts, kind, &cluster);
+    let est = p.estimator(opts.estimator);
+    // Optionally trace the optimized module instead of the raw one.
+    let graph = if args.has_flag("optimized") {
+        backtracking_search(&p.graph, &est, &opts.search_config()).best
+    } else {
+        p.graph.clone()
+    };
+    est.prepare(&graph);
+    let (res, events) =
+        disco::sim::trace::capture(&graph, &est, disco::sim::SimOptions::default());
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(out, disco::sim::trace::to_chrome_json(&events))?;
+    println!(
+        "wrote {} events ({:.2} ms makespan, {:.0} MB peak) to {out} — open in chrome://tracing",
+        events.len(),
+        res.makespan_ms,
+        res.peak_bytes / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_import_hlo(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: disco import-hlo <module.hlo.txt> [--optimize]"))?;
+    let g = disco::graph::hlo_import::import_hlo_file(std::path::Path::new(path), 1)?;
+    println!(
+        "{}: {} live instructions, {:.2} GFLOP, {} AllReduces",
+        g.name,
+        g.live_count(),
+        g.total_flops() / 1e9,
+        g.allreduces().len()
+    );
+    let mut kinds: std::collections::BTreeMap<&str, usize> = Default::default();
+    for n in g.live() {
+        *kinds.entry(n.kind.name()).or_insert(0) += 1;
+    }
+    for (k, c) in &kinds {
+        println!("  {k:<16} {c}");
+    }
+    if args.has_flag("optimize") {
+        let device = disco::device::DeviceModel::gtx1080ti();
+        let cluster = Cluster::single_device();
+        let prof = disco::profiler::profile(&g, &device, &cluster, 3, 17);
+        let est = CostEstimator::oracle(&prof, &device);
+        let mut cfg = SearchConfig {
+            unchanged_limit: args.get_usize("unchanged", 300),
+            ..Default::default()
+        };
+        cfg.sim.ignore_comm = g.allreduces().is_empty();
+        cfg.methods.ar_fusion = !g.allreduces().is_empty();
+        let r = backtracking_search(&g, &est, &cfg);
+        println!(
+            "optimize: {:.3} ms → {:.3} ms ({:.1}% faster; {} evals, {:.1}s)",
+            r.initial_cost_ms,
+            r.best_cost_ms,
+            (r.initial_cost_ms / r.best_cost_ms - 1.0) * 100.0,
+            r.evals,
+            r.elapsed.as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: disco <search|enact|worker|profile|bench|train-gnn|e2e|import-hlo> [options]
+  run `disco <cmd> --help` conventions: see rust/src/main.rs module docs";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "search" => cmd_search(&args),
+        "enact" => cmd_enact(&args),
+        "worker" => cmd_worker(&args),
+        "profile" => cmd_profile(&args),
+        "bench" => cmd_bench(&args),
+        "train-gnn" => cmd_train_gnn(&args),
+        "e2e" => cmd_e2e(&args),
+        "import-hlo" => cmd_import_hlo(&args),
+        "export-samples" => cmd_export_samples(&args),
+        "trace" => cmd_trace(&args),
+        _ => {
+            let _ = build; // silence unused in non-model paths
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,157 @@
+//! Reformer (Kitaev et al., 2020): LSH attention over long sequences with
+//! shared-QK projection. Structurally distinctive pieces we model:
+//! the hash/sort/gather bucketing pipeline (Sort + Gather are *opaque* ops
+//! that block fusion — realistic obstacles for the search), chunked
+//! attention (cost linear-ish in sequence length), and per-chunk FFN.
+//! 6 layers, d=512, seq 512, vocab 32k.
+
+use super::{ModelSpec, Net};
+use crate::graph::{NodeId, OpKind, Role, TrainingGraph};
+
+pub const D_MODEL: usize = 512;
+pub const D_FF: usize = 2048;
+pub const SEQ: usize = 512;
+pub const LAYERS: usize = 6;
+pub const VOCAB: usize = 32_768;
+pub const CHUNK: usize = 64;
+
+pub fn build(spec: &ModelSpec, num_workers: usize) -> TrainingGraph {
+    let mut net = Net::new("reformer", num_workers);
+    let b = spec.batch;
+    let (d, s, v, ff) = (D_MODEL, SEQ, VOCAB, D_FF);
+
+    let tokens = net.b.constant("tokens", &[b, s]);
+    let emb_flops = (b * s * d) as f64;
+    net.checkpoint("embed", &[b, s, d], emb_flops, OpKind::Embedding);
+    net.track_param("embed.w", &[v, d], emb_flops);
+    let mut x: NodeId =
+        net.b
+            .compute_flops(OpKind::Embedding, "embed", &[tokens], &[b, s, d], Role::Forward, emb_flops);
+
+    for l in 0..spec.scaled(LAYERS) {
+        x = lsh_layer(&mut net, x, &format!("l{l}"), b, s, d, ff);
+    }
+
+    let proj_flops = 2.0 * (b * s * d * v) as f64;
+    net.track_param("lm_head.w", &[d, v], proj_flops);
+    let logits =
+        net.b
+            .compute_flops(OpKind::MatMul, "lm_head", &[x], &[b, s, v], Role::Forward, proj_flops);
+    net.checkpoint("lm_head", &[b, s, v], proj_flops, OpKind::MatMul);
+
+    net.finish_with_backprop(logits)
+}
+
+/// One Reformer layer: shared-QK LSH attention + chunked FFN.
+fn lsh_layer(net: &mut Net, x: NodeId, name: &str, b: usize, s: usize, d: usize, ff: usize) -> NodeId {
+    let proj_flops = 2.0 * (b * s * d * d) as f64;
+
+    // Shared QK projection + V projection.
+    net.track_param(&format!("{name}.wqk"), &[d, d], proj_flops);
+    let qk = net.b.compute_flops(OpKind::MatMul, &format!("{name}.qk"), &[x], &[b, s, d], Role::Forward, proj_flops);
+    net.checkpoint(&format!("{name}.qk"), &[b, s, d], proj_flops, OpKind::MatMul);
+    net.track_param(&format!("{name}.wv"), &[d, d], proj_flops);
+    let vv = net.b.compute_flops(OpKind::MatMul, &format!("{name}.v"), &[x], &[b, s, d], Role::Forward, proj_flops);
+    net.checkpoint(&format!("{name}.v"), &[b, s, d], proj_flops, OpKind::MatMul);
+
+    // LSH bucketing: random rotations (matmul), argmax hash, sort, gather.
+    let n_hashes = 4usize;
+    let rot_flops = 2.0 * (b * s * d * n_hashes * 16) as f64;
+    let rot = net.b.compute_flops(OpKind::MatMul, &format!("{name}.rot"), &[qk], &[b, s, n_hashes * 16], Role::Forward, rot_flops);
+    net.checkpoint(&format!("{name}.rot"), &[b, s, n_hashes * 16], rot_flops, OpKind::MatMul);
+    let hash = net.b.compute(OpKind::Reduce, &format!("{name}.hash"), &[rot], &[b, s], Role::Forward);
+    let sorted = net.b.compute(OpKind::Sort, &format!("{name}.sort"), &[hash], &[b, s], Role::Forward);
+    let gathered = net.b.compute(OpKind::Gather, &format!("{name}.gather"), &[sorted, qk, vv], &[b, s, 2 * d], Role::Forward);
+    net.checkpoint(&format!("{name}.gather"), &[b, s, 2 * d], (b * s * 2 * d) as f64, OpKind::Gather);
+
+    // Chunked attention: per 64-token chunk, attend within chunk and one
+    // neighbour → cost ∝ s * (2*CHUNK) * d instead of s².
+    let att_flops = 2.0 * (b * s * 2 * CHUNK * d) as f64;
+    let scores = net.b.compute_flops(
+        OpKind::BatchMatMul,
+        &format!("{name}.scores"),
+        &[gathered],
+        &[b, s, 2 * CHUNK],
+        Role::Forward,
+        att_flops,
+    );
+    net.checkpoint(&format!("{name}.scores"), &[b, s, 2 * CHUNK], att_flops, OpKind::BatchMatMul);
+    let probs = net.b.compute(OpKind::Softmax, &format!("{name}.softmax"), &[scores], &[b, s, 2 * CHUNK], Role::Forward);
+    let ctx = net.b.compute_flops(
+        OpKind::BatchMatMul,
+        &format!("{name}.ctx"),
+        &[probs, gathered],
+        &[b, s, d],
+        Role::Forward,
+        att_flops,
+    );
+    net.checkpoint(&format!("{name}.ctx"), &[b, s, d], att_flops, OpKind::BatchMatMul);
+    // Undo the sort.
+    let unsorted = net.b.compute(OpKind::Scatter, &format!("{name}.unsort"), &[ctx], &[b, s, d], Role::Forward);
+
+    net.track_param(&format!("{name}.wo"), &[d, d], proj_flops);
+    let out = net.b.compute_flops(OpKind::MatMul, &format!("{name}.o"), &[unsorted], &[b, s, d], Role::Forward, proj_flops);
+    net.checkpoint(&format!("{name}.o"), &[b, s, d], proj_flops, OpKind::MatMul);
+
+    // Reversible residual (modelled as plain residual + LN).
+    let res = net.b.compute(OpKind::Add, &format!("{name}.res1"), &[out, x], &[b, s, d], Role::Forward);
+    net.track_param(&format!("{name}.ln1"), &[2 * d], (b * s * d) as f64);
+    let ln1 = net.b.compute(OpKind::LayerNorm, &format!("{name}.ln1"), &[res], &[b, s, d], Role::Forward);
+    net.checkpoint(&format!("{name}.ln1"), &[b, s, d], 6.0 * (b * s * d) as f64, OpKind::LayerNorm);
+
+    // Chunked FFN.
+    let ff_flops = 2.0 * (b * s * d * ff) as f64;
+    net.track_param(&format!("{name}.ff1"), &[d, ff], ff_flops);
+    let h1 = net.b.compute_flops(OpKind::MatMul, &format!("{name}.ff1"), &[ln1], &[b, s, ff], Role::Forward, ff_flops);
+    net.checkpoint(&format!("{name}.ff1"), &[b, s, ff], ff_flops, OpKind::MatMul);
+    let act = net.b.compute(OpKind::Gelu, &format!("{name}.gelu"), &[h1], &[b, s, ff], Role::Forward);
+    net.track_param(&format!("{name}.ff2"), &[ff, d], ff_flops);
+    let h2 = net.b.compute_flops(OpKind::MatMul, &format!("{name}.ff2"), &[act], &[b, s, d], Role::Forward, ff_flops);
+    net.checkpoint(&format!("{name}.ff2"), &[b, s, d], ff_flops, OpKind::MatMul);
+    let res2 = net.b.compute(OpKind::Add, &format!("{name}.res2"), &[h2, ln1], &[b, s, d], Role::Forward);
+    net.track_param(&format!("{name}.ln2"), &[2 * d], (b * s * d) as f64);
+    let ln2 = net.b.compute(OpKind::LayerNorm, &format!("{name}.ln2"), &[res2], &[b, s, d], Role::Forward);
+    net.checkpoint(&format!("{name}.ln2"), &[b, s, d], 6.0 * (b * s * d) as f64, OpKind::LayerNorm);
+    ln2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reformer_has_opaque_ops() {
+        let g = build(&ModelSpec::reformer(), 12);
+        assert!(g.live().any(|n| n.kind == OpKind::Sort));
+        assert!(g.live().any(|n| n.kind == OpKind::Gather));
+        assert!(g.live().any(|n| n.kind == OpKind::Scatter));
+    }
+
+    #[test]
+    fn parameter_count() {
+        let g = build(&ModelSpec::reformer(), 12);
+        let params = g.total_gradient_bytes() / 4.0;
+        // 2 vocab matrices (33.5M) + 6 layers x ~3.2M ≈ 53M.
+        assert!(params > 40e6 && params < 65e6, "{:.1}M", params / 1e6);
+    }
+
+    #[test]
+    fn chunked_attention_cheaper_than_full() {
+        // LSH attention FLOPs should be well below s^2 full attention.
+        let g = build(&ModelSpec::reformer(), 12);
+        let att: f64 = g
+            .live()
+            .filter(|n| {
+                n.kind == OpKind::BatchMatMul && n.role == crate::graph::Role::Forward
+            })
+            .map(|n| n.flops)
+            .sum();
+        let b = 16.0;
+        let full = 2.0 * 2.0 * b * (SEQ * SEQ * D_MODEL) as f64 * spec_layers() as f64;
+        assert!(att < full / 2.0, "att={att} full={full}");
+    }
+
+    fn spec_layers() -> usize {
+        LAYERS
+    }
+}

@@ -1,0 +1,180 @@
+//! ResNet50 (He et al., 2016): bottleneck residual network, ~25.5M
+//! parameters — the paper's computation-bound CNN (many ops, modest
+//! gradient volume, lots of BN/ReLU epilogues for op fusion).
+
+use super::{ModelSpec, Net};
+use crate::graph::{NodeId, OpKind, Role, TrainingGraph};
+
+struct Stage {
+    blocks: usize,
+    mid: usize,
+    out: usize,
+    stride: usize,
+}
+
+pub fn build(spec: &ModelSpec, num_workers: usize) -> TrainingGraph {
+    let mut net = Net::new("resnet50", num_workers);
+    let b = spec.batch;
+
+    // Stem: 7x7/2 conv, BN, ReLU, 3x3/2 pool.
+    let mut h = 224usize;
+    let mut x: NodeId = net.b.constant("input", &[b, 3, h, h]);
+    h /= 2;
+    x = net.b.conv2d("stem.conv", &[x], b, 3, 224, 224, 64, 7, 2, Role::Forward);
+    let stem_flops = 2.0 * (b * 64 * 3 * 7 * 7 * h * h) as f64;
+    net.checkpoint("stem", &[b, 64, h, h], stem_flops, OpKind::Conv2D);
+    net.track_param("stem.w", &[64, 3, 7, 7], stem_flops);
+    x = bn_relu(&mut net, x, "stem", b, 64, h);
+    h /= 2;
+    x = net.b.compute(OpKind::Pool, "stem.pool", &[x], &[b, 64, h, h], Role::Forward);
+    net.checkpoint("stem.pool", &[b, 64, h, h], (b * 64 * h * h) as f64, OpKind::Pool);
+
+    let stages = [
+        Stage { blocks: 3, mid: 64, out: 256, stride: 1 },
+        Stage { blocks: 4, mid: 128, out: 512, stride: 2 },
+        Stage { blocks: 6, mid: 256, out: 1024, stride: 2 },
+        Stage { blocks: 3, mid: 512, out: 2048, stride: 2 },
+    ];
+    let mut c_in = 64usize;
+    for (si, st) in stages.iter().enumerate() {
+        let blocks = spec.scaled(st.blocks);
+        for bi in 0..blocks {
+            let stride = if bi == 0 { st.stride } else { 1 };
+            let name = format!("s{si}b{bi}");
+            let h_out = h / stride;
+            let skip = x;
+
+            // 1x1 reduce.
+            x = conv_bn_relu(&mut net, x, &format!("{name}.c1"), b, c_in, h, st.mid, 1, stride);
+            // 3x3.
+            x = conv_bn_relu(&mut net, x, &format!("{name}.c2"), b, st.mid, h_out, st.mid, 3, 1);
+            // 1x1 expand (BN, no relu before the add).
+            x = conv_bn(&mut net, x, &format!("{name}.c3"), b, st.mid, h_out, st.out, 1, 1);
+
+            // Projection shortcut when shape changes.
+            let skip_out = if bi == 0 {
+                conv_bn(&mut net, skip, &format!("{name}.proj"), b, c_in, h, st.out, 1, stride)
+            } else {
+                skip
+            };
+            let add = net.b.compute(
+                OpKind::Add,
+                &format!("{name}.add"),
+                &[x, skip_out],
+                &[b, st.out, h_out, h_out],
+                Role::Forward,
+            );
+            x = net.b.compute(
+                OpKind::Relu,
+                &format!("{name}.relu"),
+                &[add],
+                &[b, st.out, h_out, h_out],
+                Role::Forward,
+            );
+            net.checkpoint(
+                &format!("{name}.res"),
+                &[b, st.out, h_out, h_out],
+                (2 * b * st.out * h_out * h_out) as f64,
+                OpKind::Add,
+            );
+            c_in = st.out;
+            h = h_out;
+        }
+    }
+
+    // Head: global average pool + FC to 1000 classes.
+    x = net.b.compute(OpKind::Pool, "gap", &[x], &[b, c_in], Role::Forward);
+    net.checkpoint("gap", &[b, c_in], (b * c_in * h * h) as f64, OpKind::Pool);
+    let logits = net.b.matmul("fc", &[x], 1, b, c_in, 1000, Role::Forward);
+    let fc_flops = 2.0 * (b * c_in * 1000) as f64;
+    net.checkpoint("fc", &[b, 1000], fc_flops, OpKind::MatMul);
+    net.track_param("fc.w", &[c_in, 1000], fc_flops);
+    net.track_param("fc.b", &[1000], (b * 1000) as f64);
+
+    net.finish_with_backprop(logits)
+}
+
+/// conv -> BN -> ReLU, with parameter tracking and a backward checkpoint.
+#[allow(clippy::too_many_arguments)]
+fn conv_bn_relu(
+    net: &mut Net,
+    x: NodeId,
+    name: &str,
+    b: usize,
+    c_in: usize,
+    h: usize,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+) -> NodeId {
+    let y = conv_bn(net, x, name, b, c_in, h, c_out, k, stride);
+    let ho = h / stride;
+    net.b
+        .compute(OpKind::Relu, &format!("{name}.relu"), &[y], &[b, c_out, ho, ho], Role::Forward)
+}
+
+/// conv -> BN (no activation).
+#[allow(clippy::too_many_arguments)]
+fn conv_bn(
+    net: &mut Net,
+    x: NodeId,
+    name: &str,
+    b: usize,
+    c_in: usize,
+    h: usize,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+) -> NodeId {
+    let conv = net.b.conv2d(&format!("{name}.conv"), &[x], b, c_in, h, h, c_out, k, stride, Role::Forward);
+    let ho = h / stride;
+    let flops = 2.0 * (b * c_out * c_in * k * k * ho * ho) as f64;
+    net.checkpoint(name, &[b, c_out, ho, ho], flops, OpKind::Conv2D);
+    net.track_param(&format!("{name}.w"), &[c_out, c_in, k, k], flops);
+    net.track_param(&format!("{name}.bn"), &[2 * c_out], (b * c_out * ho * ho) as f64);
+    net.b
+        .compute(OpKind::BatchNorm, &format!("{name}.bn"), &[conv], &[b, c_out, ho, ho], Role::Forward)
+}
+
+/// BN -> ReLU epilogue used by the stem.
+fn bn_relu(net: &mut Net, x: NodeId, name: &str, b: usize, c: usize, h: usize) -> NodeId {
+    net.track_param(&format!("{name}.bn"), &[2 * c], (b * c * h * h) as f64);
+    let bn = net
+        .b
+        .compute(OpKind::BatchNorm, &format!("{name}.bn"), &[x], &[b, c, h, h], Role::Forward);
+    net.b
+        .compute(OpKind::Relu, &format!("{name}.relu"), &[bn], &[b, c, h, h], Role::Forward)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_parameter_count() {
+        let g = build(&ModelSpec::resnet50(), 12);
+        let params = g.total_gradient_bytes() / 4.0;
+        // Published: ~25.5M (we model BN as 2c-element params).
+        assert!((params - 25.5e6).abs() / 25.5e6 < 0.08, "{:.1}M", params / 1e6);
+    }
+
+    #[test]
+    fn many_small_gradients() {
+        // The tensor-fusion motivation: most ResNet50 gradients are small.
+        let g = build(&ModelSpec::resnet50(), 12);
+        let small = g
+            .allreduces()
+            .iter()
+            .filter(|&&ar| g.nodes[ar].bytes_out < 1024.0 * 1024.0)
+            .count();
+        assert!(small * 2 > g.allreduces().len(), "{small} small tensors");
+    }
+
+    #[test]
+    fn op_count_in_expected_range() {
+        let g = build(&ModelSpec::resnet50(), 12);
+        // 53 convs * (conv+bn+...) fwd + bwd chain + per-param AR/apply.
+        assert!(g.live_count() > 500, "{}", g.live_count());
+        assert!(g.live_count() < 2500, "{}", g.live_count());
+    }
+}

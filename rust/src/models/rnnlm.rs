@@ -1,0 +1,152 @@
+//! RNNLM (Ji et al., 2016): a 2-layer LSTM language model, hidden 1024,
+//! unrolled 20 steps. The graph is dominated by long chains of small
+//! elementwise ops (the gates), exactly the paper's Fig. 2 scenario where
+//! fusion-order heuristics go wrong. Weight gradients accumulate across
+//! the unrolled steps (BPTT), so all AllReduces fire late in backprop.
+
+use super::{ModelSpec, Net};
+use crate::graph::{NodeId, OpKind, Role, TrainingGraph};
+
+pub const HIDDEN: usize = 1024;
+pub const LAYERS: usize = 2;
+pub const STEPS: usize = 20;
+pub const VOCAB: usize = 10_000;
+
+pub fn build(spec: &ModelSpec, num_workers: usize) -> TrainingGraph {
+    let mut net = Net::new("rnnlm", num_workers);
+    let b = spec.batch;
+    let (hsz, v) = (HIDDEN, VOCAB);
+    let steps = spec.scaled(STEPS);
+
+    // Parameters are declared before any checkpoints so their (BPTT-
+    // accumulated) gradients are produced only when backprop reaches the
+    // first step — checkpoint index 0.
+    let emb_flops = (b * steps * hsz) as f64;
+    net.track_param("embed.w", &[v, hsz], emb_flops);
+    for l in 0..LAYERS {
+        let gate_flops = 2.0 * (b * steps * hsz * 4 * hsz) as f64;
+        net.track_param(&format!("lstm{l}.wx"), &[hsz, 4 * hsz], gate_flops);
+        net.track_param(&format!("lstm{l}.wh"), &[hsz, 4 * hsz], gate_flops);
+        net.track_param(&format!("lstm{l}.b"), &[4 * hsz], (b * steps * 4 * hsz) as f64);
+    }
+    let proj_flops = 2.0 * (b * steps * hsz * v) as f64;
+    net.track_param("proj.w", &[hsz, v], proj_flops);
+
+    let tokens = net.b.constant("tokens", &[b, steps]);
+    // Embedded inputs for all steps (one gather).
+    let emb = net.b.compute_flops(
+        OpKind::Embedding,
+        "embed",
+        &[tokens],
+        &[b, steps, hsz],
+        Role::Forward,
+        emb_flops,
+    );
+    net.checkpoint("embed", &[b, steps, hsz], emb_flops, OpKind::Embedding);
+
+    // Unrolled LSTM.
+    let mut h_prev: Vec<NodeId> = Vec::new();
+    let mut c_prev: Vec<NodeId> = Vec::new();
+    for l in 0..LAYERS {
+        h_prev.push(net.b.constant(&format!("h0.{l}"), &[b, hsz]));
+        c_prev.push(net.b.constant(&format!("c0.{l}"), &[b, hsz]));
+    }
+    let mut outputs: Vec<NodeId> = Vec::new();
+    for t in 0..steps {
+        let mut input = net.b.compute(
+            OpKind::Slice,
+            &format!("x.{t}"),
+            &[emb],
+            &[b, hsz],
+            Role::Forward,
+        );
+        for l in 0..LAYERS {
+            let name = format!("t{t}.l{l}");
+            let (h, c) = lstm_cell(&mut net, &name, input, h_prev[l], c_prev[l], b, hsz);
+            h_prev[l] = h;
+            c_prev[l] = c;
+            input = h;
+        }
+        outputs.push(input);
+    }
+
+    // Concatenate step outputs and project to vocab.
+    let cat = net.b.compute(
+        OpKind::Concat,
+        "concat",
+        &outputs,
+        &[b, steps, hsz],
+        Role::Forward,
+    );
+    net.checkpoint("concat", &[b, steps, hsz], (b * steps * hsz) as f64, OpKind::Concat);
+    let logits = net.b.compute_flops(
+        OpKind::MatMul,
+        "proj",
+        &[cat],
+        &[b, steps, v],
+        Role::Forward,
+        proj_flops,
+    );
+    net.checkpoint("proj", &[b, steps, v], proj_flops, OpKind::MatMul);
+
+    net.finish_with_backprop(logits)
+}
+
+/// One LSTM cell at HLO granularity: two gate matmuls, bias add, then the
+/// sigmoid/tanh/mul elementwise cascade (8 small ops — fusion fodder).
+fn lstm_cell(
+    net: &mut Net,
+    name: &str,
+    x: NodeId,
+    h: NodeId,
+    c: NodeId,
+    b: usize,
+    hsz: usize,
+) -> (NodeId, NodeId) {
+    let gflops = 2.0 * (b * hsz * 4 * hsz) as f64;
+    let gx = net.b.compute_flops(OpKind::MatMul, &format!("{name}.gx"), &[x], &[b, 4 * hsz], Role::Forward, gflops);
+    let gh = net.b.compute_flops(OpKind::MatMul, &format!("{name}.gh"), &[h], &[b, 4 * hsz], Role::Forward, gflops);
+    let gates = net.b.compute(OpKind::Add, &format!("{name}.gsum"), &[gx, gh], &[b, 4 * hsz], Role::Forward);
+    let gates = net.b.compute(OpKind::Add, &format!("{name}.gbias"), &[gates], &[b, 4 * hsz], Role::Forward);
+
+    let i = net.b.compute(OpKind::Sigmoid, &format!("{name}.i"), &[gates], &[b, hsz], Role::Forward);
+    let f = net.b.compute(OpKind::Sigmoid, &format!("{name}.f"), &[gates], &[b, hsz], Role::Forward);
+    let o = net.b.compute(OpKind::Sigmoid, &format!("{name}.o"), &[gates], &[b, hsz], Role::Forward);
+    let gq = net.b.compute(OpKind::Tanh, &format!("{name}.g"), &[gates], &[b, hsz], Role::Forward);
+    let fc = net.b.compute(OpKind::Mul, &format!("{name}.fc"), &[f, c], &[b, hsz], Role::Forward);
+    let ig = net.b.compute(OpKind::Mul, &format!("{name}.ig"), &[i, gq], &[b, hsz], Role::Forward);
+    let c_new = net.b.compute(OpKind::Add, &format!("{name}.c"), &[fc, ig], &[b, hsz], Role::Forward);
+    let ct = net.b.compute(OpKind::Tanh, &format!("{name}.ct"), &[c_new], &[b, hsz], Role::Forward);
+    let h_new = net.b.compute(OpKind::Mul, &format!("{name}.h"), &[o, ct], &[b, hsz], Role::Forward);
+
+    // Backward through the cell: roughly 2x the gate matmul cost.
+    net.checkpoint(name, &[b, hsz], 2.0 * gflops, OpKind::MatMul);
+    (h_new, c_new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rnnlm_parameter_count() {
+        let g = build(&ModelSpec::rnnlm(), 12);
+        let params = g.total_gradient_bytes() / 4.0;
+        // emb 10.24M + 2x(4.19M+4.19M) + proj 10.24M ≈ 37.3M.
+        assert!((params - 37.3e6).abs() / 37.3e6 < 0.05, "{:.1}M", params / 1e6);
+    }
+
+    #[test]
+    fn few_allreduces_fired_late() {
+        let g = build(&ModelSpec::rnnlm(), 12);
+        // One AR per weight tensor, not per step.
+        assert_eq!(g.allreduces().len(), 8);
+    }
+
+    #[test]
+    fn dominated_by_elementwise_ops() {
+        let g = build(&ModelSpec::rnnlm(), 12);
+        let ew = g.live().filter(|n| n.kind.is_elementwise()).count();
+        assert!(ew > 150, "ew={ew}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Transformer (Vaswani et al., 2017) — 12 layers, d=512, 8 heads,
+//! FFN 2048, seq 128, vocab 32k: ~70M parameters. The paper's most
+//! communication-bound NLP model (26.7% speed-up in Table 1).
+
+use super::{ModelSpec, Net};
+use crate::graph::{NodeId, OpKind, Role, TrainingGraph};
+
+pub const D_MODEL: usize = 512;
+pub const N_HEADS: usize = 8;
+pub const D_FF: usize = 2048;
+pub const SEQ: usize = 128;
+pub const LAYERS: usize = 12;
+pub const VOCAB: usize = 32_768;
+
+pub fn build(spec: &ModelSpec, num_workers: usize) -> TrainingGraph {
+    let mut net = Net::new("transformer", num_workers);
+    let b = spec.batch;
+    let (d, s, v, ff) = (D_MODEL, SEQ, VOCAB, D_FF);
+
+    // Embedding lookup.
+    let tokens = net.b.constant("tokens", &[b, s]);
+    let emb_flops = (b * s * d) as f64;
+    net.checkpoint("embed", &[b, s, d], emb_flops, OpKind::Embedding);
+    net.track_param("embed.w", &[v, d], emb_flops);
+    let mut x: NodeId =
+        net.b
+            .compute_flops(OpKind::Embedding, "embed", &[tokens], &[b, s, d], Role::Forward, emb_flops);
+
+    for l in 0..spec.scaled(LAYERS) {
+        x = encoder_layer(&mut net, x, &format!("l{l}"), b, s, d, ff);
+    }
+
+    // Output projection to the vocabulary.
+    let proj_flops = 2.0 * (b * s * d * v) as f64;
+    let logits = net.b.compute_flops(
+        OpKind::MatMul,
+        "lm_head",
+        &[x],
+        &[b, s, v],
+        Role::Forward,
+        proj_flops,
+    );
+    net.checkpoint("lm_head", &[b, s, v], proj_flops, OpKind::MatMul);
+    net.track_param("lm_head.w", &[d, v], proj_flops);
+
+    net.finish_with_backprop(logits)
+}
+
+/// One post-LN encoder layer: MHA + residual + LN, FFN + residual + LN.
+pub(crate) fn encoder_layer(
+    net: &mut Net,
+    x: NodeId,
+    name: &str,
+    b: usize,
+    s: usize,
+    d: usize,
+    ff: usize,
+) -> NodeId {
+    let qkv_flops = 2.0 * (b * s * d * d) as f64;
+
+    // Q, K, V projections.
+    let mut proj = Vec::new();
+    for t in ["q", "k", "v"] {
+        net.checkpoint(&format!("{name}.{t}"), &[b, s, d], qkv_flops, OpKind::MatMul);
+        net.track_param(&format!("{name}.w{t}"), &[d, d], qkv_flops);
+        proj.push(net.b.compute_flops(
+            OpKind::MatMul,
+            &format!("{name}.{t}"),
+            &[x],
+            &[b, s, d],
+            Role::Forward,
+            qkv_flops,
+        ));
+    }
+    let (q, k, v) = (proj[0], proj[1], proj[2]);
+
+    // Scaled dot-product attention.
+    let scores_flops = 2.0 * (b * s * s * d) as f64;
+    let scores = net.b.compute_flops(
+        OpKind::BatchMatMul,
+        &format!("{name}.qk"),
+        &[q, k],
+        &[b, N_HEADS, s, s],
+        Role::Forward,
+        scores_flops,
+    );
+    net.checkpoint(&format!("{name}.qk"), &[b, N_HEADS, s, s], scores_flops, OpKind::BatchMatMul);
+    let probs = net.b.compute(
+        OpKind::Softmax,
+        &format!("{name}.softmax"),
+        &[scores],
+        &[b, N_HEADS, s, s],
+        Role::Forward,
+    );
+    net.checkpoint(&format!("{name}.softmax"), &[b, N_HEADS, s, s], 5.0 * (b * N_HEADS * s * s) as f64, OpKind::Softmax);
+    let ctx = net.b.compute_flops(
+        OpKind::BatchMatMul,
+        &format!("{name}.av"),
+        &[probs, v],
+        &[b, s, d],
+        Role::Forward,
+        scores_flops,
+    );
+    net.checkpoint(&format!("{name}.av"), &[b, s, d], scores_flops, OpKind::BatchMatMul);
+
+    // Output projection + residual + LN.
+    net.track_param(&format!("{name}.wo"), &[d, d], qkv_flops);
+    let out = net.b.compute_flops(
+        OpKind::MatMul,
+        &format!("{name}.o"),
+        &[ctx],
+        &[b, s, d],
+        Role::Forward,
+        qkv_flops,
+    );
+    net.checkpoint(&format!("{name}.o"), &[b, s, d], qkv_flops, OpKind::MatMul);
+    let res1 = net.b.compute(OpKind::Add, &format!("{name}.res1"), &[out, x], &[b, s, d], Role::Forward);
+    net.track_param(&format!("{name}.ln1"), &[2 * d], (b * s * d) as f64);
+    let ln1 = net.b.compute(OpKind::LayerNorm, &format!("{name}.ln1"), &[res1], &[b, s, d], Role::Forward);
+    net.checkpoint(&format!("{name}.ln1"), &[b, s, d], 6.0 * (b * s * d) as f64, OpKind::LayerNorm);
+
+    // FFN.
+    let ff1_flops = 2.0 * (b * s * d * ff) as f64;
+    net.track_param(&format!("{name}.ff1"), &[d, ff], ff1_flops);
+    let h1 = net.b.compute_flops(
+        OpKind::MatMul,
+        &format!("{name}.ff1"),
+        &[ln1],
+        &[b, s, ff],
+        Role::Forward,
+        ff1_flops,
+    );
+    net.checkpoint(&format!("{name}.ff1"), &[b, s, ff], ff1_flops, OpKind::MatMul);
+    let act = net.b.compute(OpKind::Relu, &format!("{name}.ffact"), &[h1], &[b, s, ff], Role::Forward);
+    net.track_param(&format!("{name}.ff2"), &[ff, d], ff1_flops);
+    let h2 = net.b.compute_flops(
+        OpKind::MatMul,
+        &format!("{name}.ff2"),
+        &[act],
+        &[b, s, d],
+        Role::Forward,
+        ff1_flops,
+    );
+    net.checkpoint(&format!("{name}.ff2"), &[b, s, d], ff1_flops, OpKind::MatMul);
+    let res2 = net.b.compute(OpKind::Add, &format!("{name}.res2"), &[h2, ln1], &[b, s, d], Role::Forward);
+    net.track_param(&format!("{name}.ln2"), &[2 * d], (b * s * d) as f64);
+    let ln2 = net.b.compute(OpKind::LayerNorm, &format!("{name}.ln2"), &[res2], &[b, s, d], Role::Forward);
+    net.checkpoint(&format!("{name}.ln2"), &[b, s, d], 6.0 * (b * s * d) as f64, OpKind::LayerNorm);
+    ln2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transformer_parameter_count() {
+        let g = build(&ModelSpec::transformer_base(), 12);
+        let params = g.total_gradient_bytes() / 4.0;
+        // 12 layers x ~3.15M + 2 x 16.8M vocab matrices ≈ 71.5M.
+        assert!((params - 71.5e6).abs() / 71.5e6 < 0.05, "{:.1}M", params / 1e6);
+    }
+
+    #[test]
+    fn mixture_of_small_and_large_gradients() {
+        let g = build(&ModelSpec::transformer_base(), 12);
+        let sizes: Vec<f64> = g.allreduces().iter().map(|&ar| g.nodes[ar].bytes_out).collect();
+        let small = sizes.iter().filter(|&&s| s < 1024.0 * 1024.0).count();
+        let large = sizes.iter().filter(|&&s| s > 16.0 * 1024.0 * 1024.0).count();
+        assert!(small > 10, "small={small}");
+        assert!(large >= 2, "large={large} (vocab matrices)");
+    }
+
+    #[test]
+    fn has_softmax_and_batchmatmul() {
+        let g = build(&ModelSpec::transformer_base(), 12);
+        assert!(g.live().any(|n| n.kind == OpKind::Softmax));
+        assert!(g.live().any(|n| n.kind == OpKind::BatchMatMul));
+    }
+}

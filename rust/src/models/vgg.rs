@@ -1,0 +1,107 @@
+//! VGG19 (Simonyan & Zisserman, 2014): 16 conv layers + 3 FC layers,
+//! ~143M parameters — the paper's communication-bound CNN (most of the
+//! gradient volume sits in the first FC layer's 102M-parameter matrix,
+//! transferred at the *start* of backprop).
+
+use super::{ModelSpec, Net};
+use crate::graph::{NodeId, OpKind, Role, TrainingGraph};
+
+/// Per-block (conv count, channels). All five pools are always applied so
+/// the classifier input stays 512×7×7 even at reduced depth scale (a
+/// truncated conv list would otherwise leave a gigantic feature map on
+/// the first FC layer).
+const BLOCKS: [(usize, usize); 5] = [(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)];
+
+pub fn build(spec: &ModelSpec, num_workers: usize) -> TrainingGraph {
+    let mut net = Net::new("vgg19", num_workers);
+    let b = spec.batch;
+    let mut h = 224usize;
+    let mut c = 3usize;
+
+    let mut x: NodeId = net.b.constant("input", &[b, c, h, h]);
+    let mut li = 0usize;
+    let mut plan: Vec<usize> = Vec::new();
+    for (convs, ch) in BLOCKS {
+        for _ in 0..spec.scaled(convs) {
+            plan.push(ch);
+        }
+        plan.push(0); // pool
+    }
+    for &plan_c in &plan {
+        if plan_c == 0 {
+            h /= 2;
+            x = net.b.compute(OpKind::Pool, &format!("pool{li}"), &[x], &[b, c, h, h], Role::Forward);
+            net.checkpoint(&format!("pool{li}"), &[b, c, h, h], (b * c * h * h) as f64, OpKind::Pool);
+            continue;
+        }
+        let k = plan_c;
+        let conv = net.b.conv2d(&format!("conv{li}"), &[x], b, c, h, h, k, 3, 1, Role::Forward);
+        let conv_flops = 2.0 * (b * k * c * 3 * 3 * h * h) as f64;
+        let bias = net.b.compute(OpKind::Add, &format!("conv{li}.bias"), &[conv], &[b, k, h, h], Role::Forward);
+        let relu = net.b.compute(OpKind::Relu, &format!("conv{li}.relu"), &[bias], &[b, k, h, h], Role::Forward);
+        // Backward through this conv (grad-input) costs about one forward.
+        net.checkpoint(&format!("conv{li}"), &[b, k, h, h], conv_flops, OpKind::Conv2D);
+        // Weight gradient: one more conv-sized contraction.
+        net.track_param(&format!("conv{li}.w"), &[k, c, 3, 3], conv_flops);
+        net.track_param(&format!("conv{li}.b"), &[k], (b * k * h * h) as f64);
+        x = relu;
+        c = k;
+        li += 1;
+    }
+
+    // Classifier head: flatten -> 4096 -> 4096 -> 1000.
+    let feat = c * h * h; // 512 * 7 * 7 = 25088 at full depth
+    x = net.b.compute(OpKind::Reshape, "flatten", &[x], &[b, feat], Role::Forward);
+    net.checkpoint("flatten", &[b, feat], 0.0, OpKind::Reshape);
+    let mut dim_in = feat;
+    for (i, dim_out) in [4096usize, 4096, 1000].into_iter().enumerate() {
+        let mm = net.b.matmul(&format!("fc{i}"), &[x], 1, b, dim_in, dim_out, Role::Forward);
+        let bias = net.b.compute(OpKind::Add, &format!("fc{i}.bias"), &[mm], &[b, dim_out], Role::Forward);
+        let act = if i < 2 {
+            net.b.compute(OpKind::Relu, &format!("fc{i}.relu"), &[bias], &[b, dim_out], Role::Forward)
+        } else {
+            net.b.compute(OpKind::Softmax, "logits", &[bias], &[b, dim_out], Role::Forward)
+        };
+        let mm_flops = 2.0 * (b * dim_in * dim_out) as f64;
+        net.checkpoint(&format!("fc{i}"), &[b, dim_out], mm_flops, OpKind::MatMul);
+        net.track_param(&format!("fc{i}.w"), &[dim_in, dim_out], mm_flops);
+        net.track_param(&format!("fc{i}.b"), &[dim_out], (b * dim_out) as f64);
+        x = act;
+        dim_in = dim_out;
+    }
+
+    net.finish_with_backprop(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_parameter_count() {
+        let g = build(&ModelSpec::vgg19(), 12);
+        let params: f64 = g.total_gradient_bytes() / 4.0;
+        // Published: ~143.7M parameters.
+        assert!((params - 143.7e6).abs() / 143.7e6 < 0.03, "{:.1}M", params / 1e6);
+    }
+
+    #[test]
+    fn fc0_dominates_gradient_volume() {
+        let g = build(&ModelSpec::vgg19(), 12);
+        let biggest = g
+            .allreduces()
+            .into_iter()
+            .map(|ar| g.nodes[ar].bytes_out)
+            .fold(0.0f64, f64::max);
+        // fc0: 25088 x 4096 = 102.8M params = 411 MB.
+        assert!((biggest - 25088.0 * 4096.0 * 4.0).abs() < 1.0);
+        assert!(biggest > 0.5 * g.total_gradient_bytes());
+    }
+
+    #[test]
+    fn has_conv_epilogues_to_fuse() {
+        let g = build(&ModelSpec::vgg19(), 12);
+        let relus = g.live().filter(|n| n.kind == OpKind::Relu).count();
+        assert!(relus >= 16);
+    }
+}

@@ -1,0 +1,197 @@
+//! Cluster topology and ring-AllReduce communication model — the
+//! substitute for NCCL on the paper's 100 GbE testbeds.
+//!
+//! The paper (§4.2) models AllReduce time as `T = C·x + D` and justifies it
+//! with the ring formula `T = 2(N−1)x / (B·N)` (full-duplex NICs, [42]).
+//! We implement exactly that ground truth — bottleneck bandwidth `B` is the
+//! per-GPU share of the machine NIC — plus a fixed negotiation overhead `D`
+//! that makes small tensors expensive (the motivation for tensor fusion).
+//! The profiler *fits* the linear model from noisy measurements; the fitted
+//! `(C, D)` is what the estimator uses, mirroring the paper's pipeline.
+
+pub mod ps;
+
+use crate::util::rng::Rng;
+use crate::util::stats::{linear_regression, LinearFit};
+
+/// A homogeneous GPU cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    pub name: String,
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+    /// NIC bandwidth per machine, bytes/s (100 GbE = 12.5 GB/s).
+    pub nic_bw: f64,
+    /// Fixed per-AllReduce negotiation/synchronization overhead, ms.
+    pub overhead_ms: f64,
+    /// Multiplicative noise sigma on "real" communication times.
+    pub noise_sigma: f64,
+}
+
+impl Cluster {
+    /// Paper Cluster A: 6 machines × 2 GTX 1080 Ti, 100 GbE.
+    pub fn cluster_a() -> Cluster {
+        Cluster {
+            name: "A".to_string(),
+            machines: 6,
+            gpus_per_machine: 2,
+            nic_bw: 12.5e9,
+            overhead_ms: 0.35,
+            noise_sigma: 0.08,
+        }
+    }
+
+    /// Paper Cluster B: 8 machines × 8 Tesla T4, 100 GbE.
+    pub fn cluster_b() -> Cluster {
+        Cluster {
+            name: "B".to_string(),
+            machines: 8,
+            gpus_per_machine: 8,
+            nic_bw: 12.5e9,
+            overhead_ms: 0.35,
+            noise_sigma: 0.08,
+        }
+    }
+
+    /// A single-device "cluster" (Fig. 8 single-device comparison).
+    pub fn single_device() -> Cluster {
+        Cluster {
+            name: "single".to_string(),
+            machines: 1,
+            gpus_per_machine: 1,
+            nic_bw: 12.5e9,
+            overhead_ms: 0.0,
+            noise_sigma: 0.0,
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.machines * self.gpus_per_machine
+    }
+
+    /// Bottleneck bandwidth along the ring, bytes/s. GPUs on one machine
+    /// share its NIC, so the inter-machine hop divides the NIC bandwidth.
+    pub fn bottleneck_bw(&self) -> f64 {
+        if self.machines <= 1 {
+            // Intra-machine ring over PCIe-like links.
+            16.0e9
+        } else {
+            self.nic_bw / self.gpus_per_machine as f64
+        }
+    }
+
+    /// True ring-AllReduce time for a tensor of `bytes`, ms.
+    pub fn allreduce_time_ms(&self, bytes: f64) -> f64 {
+        let n = self.num_devices() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let transfer = 2.0 * (n - 1.0) * bytes / (self.bottleneck_bw() * n);
+        transfer * 1e3 + self.overhead_ms
+    }
+
+    /// A noisy "measurement" of an AllReduce, as the profiler observes.
+    pub fn measure_allreduce_ms(&self, bytes: f64, rng: &mut Rng) -> f64 {
+        self.allreduce_time_ms(bytes) * rng.gen_lognormal_factor(self.noise_sigma)
+    }
+}
+
+/// The fitted linear communication model `T = C·x + D` the estimator uses
+/// (paper §4.2 Profiler).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommModel {
+    /// ms per byte.
+    pub c: f64,
+    /// fixed overhead, ms.
+    pub d: f64,
+    pub r2: f64,
+}
+
+impl CommModel {
+    /// Fit from profiled (bytes, ms) samples.
+    pub fn fit(samples: &[(f64, f64)]) -> CommModel {
+        let xs: Vec<f64> = samples.iter().map(|s| s.0).collect();
+        let ys: Vec<f64> = samples.iter().map(|s| s.1).collect();
+        let LinearFit { slope, intercept, r2 } = linear_regression(&xs, &ys);
+        CommModel { c: slope, d: intercept.max(0.0), r2 }
+    }
+
+    /// Exact model derived from a cluster (used in tests / oracle mode).
+    pub fn exact(cluster: &Cluster) -> CommModel {
+        let n = cluster.num_devices() as f64;
+        let c = if n <= 1.0 {
+            0.0
+        } else {
+            2.0 * (n - 1.0) / (cluster.bottleneck_bw() * n) * 1e3
+        };
+        CommModel { c, d: if n <= 1.0 { 0.0 } else { cluster.overhead_ms }, r2: 1.0 }
+    }
+
+    /// Predicted AllReduce time for a tensor of `bytes`, ms.
+    pub fn predict_ms(&self, bytes: f64) -> f64 {
+        self.c * bytes + self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_sizes() {
+        assert_eq!(Cluster::cluster_a().num_devices(), 12);
+        assert_eq!(Cluster::cluster_b().num_devices(), 64);
+    }
+
+    #[test]
+    fn ring_formula() {
+        let c = Cluster::cluster_a();
+        let bytes = 100.0 * 1024.0 * 1024.0;
+        let t = c.allreduce_time_ms(bytes);
+        let b = 12.5e9 / 2.0;
+        let expect = 2.0 * 11.0 * bytes / (b * 12.0) * 1e3 + 0.35;
+        assert!((t - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_device_free() {
+        assert_eq!(Cluster::single_device().allreduce_time_ms(1e9), 0.0);
+    }
+
+    #[test]
+    fn small_tensors_dominated_by_overhead() {
+        let c = Cluster::cluster_a();
+        let t_small = c.allreduce_time_ms(1024.0);
+        assert!(t_small < 0.36 && t_small > 0.34);
+        // Fusing 10 tiny tensors beats 10 separate calls.
+        let fused = c.allreduce_time_ms(10.0 * 1024.0);
+        let separate = 10.0 * t_small;
+        assert!(fused < separate / 5.0);
+    }
+
+    #[test]
+    fn fused_transfer_never_cheaper_than_sum_of_transfers() {
+        // Pure transfer time is linear; savings come only from overhead D.
+        let c = Cluster::cluster_b();
+        let t1 = c.allreduce_time_ms(5e6) - c.overhead_ms;
+        let t2 = c.allreduce_time_ms(7e6) - c.overhead_ms;
+        let tf = c.allreduce_time_ms(12e6) - c.overhead_ms;
+        assert!((tf - (t1 + t2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_fit_recovers_exact() {
+        let cluster = Cluster::cluster_a();
+        let mut rng = Rng::new(42);
+        let mut samples = Vec::new();
+        for i in 1..200 {
+            let bytes = i as f64 * 1e6;
+            samples.push((bytes, cluster.measure_allreduce_ms(bytes, &mut rng)));
+        }
+        let fit = CommModel::fit(&samples);
+        let exact = CommModel::exact(&cluster);
+        assert!((fit.c - exact.c).abs() / exact.c < 0.05, "c={} vs {}", fit.c, exact.c);
+        assert!((fit.d - exact.d).abs() < 0.3, "d={}", fit.d);
+        assert!(fit.r2 > 0.95);
+    }
+}

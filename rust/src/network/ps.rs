@@ -1,0 +1,140 @@
+//! Parameter-server communication model — the paper's §8 future-work
+//! extension ("replace AllReduce instructions with push and pull").
+//!
+//! Gradients are sharded over `servers` parameter servers; each worker
+//! pushes its gradient shard-wise and pulls the updated parameters back.
+//! Per tensor of `x` bytes on a `W`-worker / `S`-server cluster where
+//! every server NIC sustains `B` bytes/s:
+//!
+//! ```text
+//! T_push = W·x / (S·B) + D        (server inbound is the bottleneck)
+//! T_pull = W·x / (S·B) + D
+//! T      = T_push + T_pull        (pull depends on the pushed update)
+//! ```
+//!
+//! The graph transform [`to_parameter_server`] keeps the IR unchanged —
+//! each AllReduce node simply becomes a "push+pull" synchronization whose
+//! time comes from [`PsModel`] instead of the ring formula, so the whole
+//! pipeline (simulation, search, tensor fusion) works unmodified: DisCo's
+//! method (iii) now fuses push/pull rounds exactly as the paper suggests.
+
+use crate::network::Cluster;
+
+/// Parameter-server topology and timing model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PsModel {
+    pub workers: usize,
+    pub servers: usize,
+    /// Per-server NIC bandwidth, bytes/s.
+    pub server_bw: f64,
+    /// Fixed per-round (push or pull) overhead, ms.
+    pub overhead_ms: f64,
+}
+
+impl PsModel {
+    /// Derive a PS deployment from a cluster: servers get the same NICs
+    /// as the workers' machines.
+    pub fn from_cluster(cluster: &Cluster, servers: usize) -> PsModel {
+        PsModel {
+            workers: cluster.num_devices(),
+            servers: servers.max(1),
+            server_bw: cluster.nic_bw,
+            overhead_ms: cluster.overhead_ms / 2.0, // per direction
+        }
+    }
+
+    /// One push round for a tensor of `bytes`, ms.
+    pub fn push_time_ms(&self, bytes: f64) -> f64 {
+        self.workers as f64 * bytes / (self.servers as f64 * self.server_bw) * 1e3
+            + self.overhead_ms
+    }
+
+    /// One pull round, ms (same volume back out).
+    pub fn pull_time_ms(&self, bytes: f64) -> f64 {
+        self.push_time_ms(bytes)
+    }
+
+    /// Full synchronization (push then pull), ms — the drop-in
+    /// replacement for the AllReduce time in the simulator.
+    pub fn sync_time_ms(&self, bytes: f64) -> f64 {
+        self.push_time_ms(bytes) + self.pull_time_ms(bytes)
+    }
+}
+
+/// A cost-source wrapper swapping the communication model to PS while
+/// delegating compute times.
+pub struct PsCostSource<'a> {
+    pub inner: &'a dyn crate::sim::CostSource,
+    pub ps: PsModel,
+}
+
+impl crate::sim::CostSource for PsCostSource<'_> {
+    fn compute_time_ms(&self, node: &crate::graph::Node) -> f64 {
+        self.inner.compute_time_ms(node)
+    }
+
+    fn comm_time_ms(&self, bytes: f64) -> f64 {
+        self.ps.sync_time_ms(bytes)
+    }
+
+    fn prepare(&self, graph: &crate::graph::TrainingGraph) {
+        self.inner.prepare(graph);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::CostSource;
+
+    #[test]
+    fn ps_times_scale_with_workers_and_servers() {
+        let a = PsModel { workers: 12, servers: 1, server_bw: 12.5e9, overhead_ms: 0.2 };
+        let b = PsModel { workers: 12, servers: 4, server_bw: 12.5e9, overhead_ms: 0.2 };
+        let bytes = 100e6;
+        assert!(a.sync_time_ms(bytes) > b.sync_time_ms(bytes));
+        // 4x servers ≈ 4x faster transfer (minus fixed overhead).
+        let ta = a.push_time_ms(bytes) - 0.2;
+        let tb = b.push_time_ms(bytes) - 0.2;
+        assert!((ta / tb - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sync_is_push_plus_pull() {
+        let m = PsModel { workers: 8, servers: 2, server_bw: 10e9, overhead_ms: 0.1 };
+        assert!((m.sync_time_ms(1e6) - 2.0 * m.push_time_ms(1e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_cost_source_swaps_comm_only() {
+        struct Unit;
+        impl CostSource for Unit {
+            fn compute_time_ms(&self, _n: &crate::graph::Node) -> f64 {
+                1.5
+            }
+            fn comm_time_ms(&self, _b: f64) -> f64 {
+                99.0
+            }
+        }
+        let ps = PsModel { workers: 4, servers: 2, server_bw: 10e9, overhead_ms: 0.1 };
+        let src = PsCostSource { inner: &Unit, ps: ps.clone() };
+        let node = crate::graph::Node {
+            id: 0,
+            name: "x".into(),
+            kind: crate::graph::OpKind::Mul,
+            role: crate::graph::Role::Forward,
+            inputs: vec![],
+            orig_inputs: vec![],
+            shape: crate::graph::Shape::new(&[1]),
+            dtype: crate::graph::DType::F32,
+            flops: 0.0,
+            bytes_in: 0.0,
+            bytes_out: 0.0,
+            fused: None,
+            ar_constituents: vec![],
+            deleted: false,
+        };
+        assert_eq!(src.compute_time_ms(&node), 1.5);
+        assert_eq!(src.comm_time_ms(1e6), ps.sync_time_ms(1e6));
+    }
+}

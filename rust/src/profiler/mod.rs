@@ -1,0 +1,335 @@
+//! Profiler (paper §4.2 / §5.2): records per-op execution times, fits the
+//! linear AllReduce model, and generates the fused-op training samples for
+//! the GNN estimator.
+//!
+//! The profiler is the only component allowed to touch the device model
+//! for *individual* ops (that's what profiling is); fused-op ground truth
+//! appears only as labels of generated training samples — the search never
+//! sees it directly.
+
+use crate::device::DeviceModel;
+use crate::fusion::{self, FusionKind};
+use crate::graph::{FusedGroup, NodeId, OpKind, TrainingGraph};
+use crate::network::{Cluster, CommModel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::linear_regression;
+
+/// Profiled data for one (graph, device, cluster) combination.
+#[derive(Debug, Clone)]
+pub struct ProfileData {
+    /// Average measured time of each original op, indexed by node id.
+    pub op_time_ms: Vec<f64>,
+    /// Fitted AllReduce model `T = C·x + D`.
+    pub comm: CommModel,
+    /// Estimated per-kernel launch overhead (ms), from the elementwise-op
+    /// regression intercept. Available to white-box estimators.
+    pub launch_est_ms: f64,
+    /// Estimated effective memory bandwidth (bytes/ms), from the
+    /// elementwise-op regression slope.
+    pub bw_est_bytes_per_ms: f64,
+}
+
+impl ProfileData {
+    /// Profiled time of an original op (0 for out-of-range ids).
+    pub fn time_of(&self, id: NodeId) -> f64 {
+        self.op_time_ms.get(id).copied().unwrap_or(0.0)
+    }
+
+    /// Fill `time_ms` of every member of a fused group from the profile
+    /// (the GNN's per-node feature, paper §4.3.1).
+    pub fn annotate_group(&self, group: &mut FusedGroup) {
+        for o in &mut group.ops {
+            o.time_ms = self.time_of(o.orig_id);
+        }
+    }
+}
+
+/// Profile every op of `graph` on `device` (`reps` noisy measurements,
+/// averaged) and fit the AllReduce linear model on `cluster`.
+pub fn profile(
+    graph: &TrainingGraph,
+    device: &DeviceModel,
+    cluster: &Cluster,
+    reps: usize,
+    seed: u64,
+) -> ProfileData {
+    let mut rng = Rng::new(seed);
+    let mut op_time_ms = vec![0.0; graph.nodes.len()];
+    let mut ew_points: Vec<(f64, f64)> = Vec::new(); // (bytes, ms) of elementwise ops
+    for n in graph.live() {
+        if n.kind == OpKind::AllReduce {
+            continue;
+        }
+        let truth = device.node_time_ms(n);
+        let avg: f64 = (0..reps.max(1))
+            .map(|_| device.measure_ms(truth, &mut rng))
+            .sum::<f64>()
+            / reps.max(1) as f64;
+        op_time_ms[n.id] = avg;
+        if n.kind.is_elementwise() && avg > 0.0 {
+            ew_points.push((n.bytes_in + n.bytes_out, avg));
+        }
+    }
+
+    // Fit comm model from a size sweep + the graph's own gradient sizes.
+    let mut samples: Vec<(f64, f64)> = Vec::new();
+    for i in 1..=64usize {
+        let bytes = (i * i) as f64 * 64.0 * 1024.0; // 64KB .. 256MB, quadratic sweep
+        for _ in 0..reps.max(1) {
+            samples.push((bytes, cluster.measure_allreduce_ms(bytes, &mut rng)));
+        }
+    }
+    for &ar in &graph.allreduces() {
+        let bytes = graph.nodes[ar].bytes_out;
+        for _ in 0..reps.max(1) {
+            samples.push((bytes, cluster.measure_allreduce_ms(bytes, &mut rng)));
+        }
+    }
+    let comm = CommModel::fit(&samples);
+
+    // White-box hardware constants from profiled elementwise ops.
+    let (launch_est_ms, bw_est_bytes_per_ms) = if ew_points.len() >= 2 {
+        let xs: Vec<f64> = ew_points.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = ew_points.iter().map(|p| p.1).collect();
+        match std::panic::catch_unwind(|| linear_regression(&xs, &ys)) {
+            Ok(fit) if fit.slope > 0.0 => (fit.intercept.max(1e-4), 1.0 / fit.slope),
+            _ => (0.005, 4.0e8),
+        }
+    } else {
+        (0.005, 4.0e8)
+    };
+
+    ProfileData { op_time_ms, comm, launch_est_ms, bw_est_bytes_per_ms }
+}
+
+/// One GNN training sample: a fused-op subgraph (features) and its
+/// measured execution time (label).
+#[derive(Debug, Clone)]
+pub struct FusedSample {
+    pub group: FusedGroup,
+    pub bytes_in: f64,
+    pub bytes_out: f64,
+    /// Ground-truth ("profiled") execution time of the fused kernel, ms.
+    pub label_ms: f64,
+}
+
+impl FusedSample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "ops",
+                Json::Arr(
+                    self.group
+                        .ops
+                        .iter()
+                        .map(|o| {
+                            Json::obj(vec![
+                                ("kind", Json::Num(o.kind.feature_index() as f64)),
+                                ("flops", Json::Num(o.flops)),
+                                ("bin", Json::Num(o.bytes_in)),
+                                ("bout", Json::Num(o.bytes_out)),
+                                ("t", Json::Num(o.time_ms)),
+                                ("dup", Json::Bool(o.duplicated)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "edges",
+                Json::Arr(
+                    self.group
+                        .edges
+                        .iter()
+                        .map(|&(a, b)| Json::arr_usize(&[a, b]))
+                        .collect(),
+                ),
+            ),
+            ("bin", Json::Num(self.bytes_in)),
+            ("bout", Json::Num(self.bytes_out)),
+            ("label", Json::Num(self.label_ms)),
+        ])
+    }
+}
+
+/// Generate `count` random fused-op samples from `graph` (paper §5.2:
+/// "randomly select an op and fuse it with one of its predecessors, then
+/// repeatedly fuse this fused op with one predecessor"). Labels are noisy
+/// measurements of the device model's fused-kernel time.
+pub fn generate_fused_samples(
+    graph: &TrainingGraph,
+    device: &DeviceModel,
+    profile: &ProfileData,
+    count: usize,
+    max_group: usize,
+    seed: u64,
+) -> Vec<FusedSample> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    let mut attempts = 0usize;
+    while out.len() < count && attempts < count * 20 {
+        attempts += 1;
+        let mut scratch = graph.clone();
+        let compute = scratch.compute_ops();
+        let Some(&start) = rng.choose(&compute) else { continue };
+        let mut cur = start;
+        let steps = rng.gen_range_inclusive(1, max_group.saturating_sub(1).max(1));
+        for _ in 0..steps {
+            let preds: Vec<NodeId> = scratch.nodes[cur]
+                .inputs
+                .iter()
+                .copied()
+                .filter(|&p| {
+                    !scratch.nodes[p].deleted
+                        && (scratch.nodes[p].kind.is_fusible_compute()
+                            || scratch.nodes[p].kind == OpKind::Fused)
+                })
+                .collect();
+            let Some(&p) = rng.choose(&preds) else { break };
+            let kind = if rng.gen_bool(0.25) {
+                FusionKind::Duplicate
+            } else {
+                FusionKind::NonDuplicate
+            };
+            match fusion::fuse_ops(&mut scratch, p, cur, kind) {
+                Ok(f) => cur = f,
+                Err(_) => break,
+            }
+            if scratch.nodes[cur]
+                .fused
+                .as_ref()
+                .map(|g| g.len() >= max_group)
+                .unwrap_or(false)
+            {
+                break;
+            }
+        }
+        let node = &scratch.nodes[cur];
+        let Some(group) = node.fused.clone() else { continue };
+        let mut group = group;
+        profile.annotate_group(&mut group);
+        let truth = device.fused_time_ms(&group, node.bytes_in, node.bytes_out);
+        // Average of 3 noisy measurements, like real profiling.
+        let label: f64 =
+            (0..3).map(|_| device.measure_ms(truth, &mut rng)).sum::<f64>() / 3.0;
+        out.push(FusedSample {
+            group,
+            bytes_in: node.bytes_in,
+            bytes_out: node.bytes_out,
+            label_ms: label,
+        });
+    }
+    out
+}
+
+/// Serialize samples to the JSON file consumed by
+/// `python/compile/model.py`'s data loader and by `runtime::gnn` tests.
+pub fn samples_to_json(samples: &[FusedSample]) -> String {
+    Json::Arr(samples.iter().map(|s| s.to_json()).collect()).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::Role;
+
+    fn graph() -> TrainingGraph {
+        let mut b = GraphBuilder::new("p", 12);
+        let x = b.constant("x", &[1 << 18]);
+        let mut prev = x;
+        for i in 0..8 {
+            let m = b.compute(OpKind::Mul, &format!("m{i}"), &[prev], &[1 << 18], Role::Forward);
+            let t = b.compute(OpKind::Tanh, &format!("t{i}"), &[m], &[1 << 18], Role::Forward);
+            prev = t;
+        }
+        let p = b.param("w", &[1 << 18]);
+        b.grad_sync("w", &[prev], p, 1e6);
+        b.finish()
+    }
+
+    #[test]
+    fn profile_times_positive_and_reasonable() {
+        let g = graph();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let p = profile(&g, &d, &c, 3, 42);
+        for n in g.live() {
+            if n.kind == OpKind::AllReduce || n.kind == OpKind::Parameter || n.kind == OpKind::Constant {
+                continue;
+            }
+            let t = p.time_of(n.id);
+            let truth = d.node_time_ms(n);
+            assert!(t > 0.0);
+            assert!((t - truth).abs() / truth < 0.2, "t={t} truth={truth}");
+        }
+    }
+
+    #[test]
+    fn comm_fit_close_to_cluster_truth() {
+        let g = graph();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let p = profile(&g, &d, &c, 3, 42);
+        let exact = CommModel::exact(&c);
+        assert!((p.comm.c - exact.c).abs() / exact.c < 0.1);
+        let big = 32.0 * 1024.0 * 1024.0;
+        let err = (p.comm.predict_ms(big) - c.allreduce_time_ms(big)).abs()
+            / c.allreduce_time_ms(big);
+        assert!(err < 0.1, "err={err}");
+    }
+
+    #[test]
+    fn launch_and_bw_estimates_sane() {
+        let g = graph();
+        let d = DeviceModel::gtx1080ti();
+        let p = profile(&g, &d, &Cluster::cluster_a(), 3, 7);
+        // True launch overhead is 0.005ms; bandwidth 484 GB/s = 4.84e8 B/ms.
+        assert!(p.launch_est_ms > 0.001 && p.launch_est_ms < 0.02, "launch={}", p.launch_est_ms);
+        assert!(
+            p.bw_est_bytes_per_ms > 1e8 && p.bw_est_bytes_per_ms < 1e9,
+            "bw={}",
+            p.bw_est_bytes_per_ms
+        );
+    }
+
+    #[test]
+    fn sample_generation_produces_valid_groups() {
+        let g = graph();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let p = profile(&g, &d, &c, 2, 1);
+        let samples = generate_fused_samples(&g, &d, &p, 50, 8, 99);
+        assert!(samples.len() >= 40, "got {}", samples.len());
+        for s in &samples {
+            assert!(s.group.len() >= 2, "trivial group");
+            assert!(s.group.len() <= 8);
+            assert!(s.label_ms > 0.0);
+            // Member times were annotated from the profile.
+            assert!(s.group.ops.iter().any(|o| o.time_ms > 0.0));
+            // Edges reference valid member indices.
+            for &(a, b) in &s.group.edges {
+                assert!(a < s.group.len() && b < s.group.len());
+            }
+        }
+        // Deterministic for a fixed seed.
+        let again = generate_fused_samples(&g, &d, &p, 50, 8, 99);
+        assert_eq!(samples.len(), again.len());
+        assert_eq!(samples[0].label_ms, again[0].label_ms);
+    }
+
+    #[test]
+    fn samples_json_parses() {
+        let g = graph();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let p = profile(&g, &d, &c, 1, 1);
+        let samples = generate_fused_samples(&g, &d, &p, 5, 6, 3);
+        let s = samples_to_json(&samples);
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), samples.len());
+        let first = &parsed.as_arr().unwrap()[0];
+        assert!(first.get("label").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,327 @@
+//! The GNN Fused-Op Estimator, executed as an AOT-compiled XLA artifact.
+//!
+//! This is the paper's §4.3 cost model running on the Rust side of the
+//! stack: [`GnnPredictor`] encodes fused-op subgraphs into the feature
+//! tensors the L2 JAX model expects (contract in `python/compile/model.py`
+//! — keep in sync), executes `gnn_infer.hlo.txt` via PJRT, and implements
+//! [`FusedOpEstimator`] so the search can use it transparently. Training
+//! (`gnn_train.hlo.txt`) runs from Rust too — see [`GnnTrainer`].
+
+use super::{lit_f32, lit_scalar, lit_to_f64s, Executable, Runtime};
+use crate::estimator::{AnalyticalFused, FusedOpEstimator};
+use crate::graph::FusedGroup;
+use crate::profiler::FusedSample;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+
+/// Feature-encoding constants — the contract with python/compile/model.py.
+pub const N_OP_KINDS: usize = 40;
+pub const N_SCALAR_FEATS: usize = 9;
+pub const FEAT_DIM: usize = N_OP_KINDS + N_SCALAR_FEATS;
+pub const MAX_NODES: usize = 64;
+
+/// Encode one fused group (plus the fused node's boundary traffic) into
+/// (features, adjacency, mask) rows.
+/// Returns false (and encodes nothing) when the group exceeds MAX_NODES.
+pub fn encode_group(
+    group: &FusedGroup,
+    node_bytes_in: f64,
+    node_bytes_out: f64,
+    feats: &mut [f32], // [MAX_NODES * FEAT_DIM]
+    adj: &mut [f32],   // [MAX_NODES * MAX_NODES]
+    mask: &mut [f32],  // [MAX_NODES]
+) -> bool {
+    let n = group.ops.len();
+    if n == 0 || n > MAX_NODES {
+        return false;
+    }
+    let bin_feat = (0.2 * (node_bytes_in.max(0.0) / 1e6 + 1e-4).ln()) as f32;
+    let bout_feat = (0.2 * (node_bytes_out.max(0.0) / 1e6 + 1e-4).ln()) as f32;
+    let mut has_out = vec![false; n];
+    let mut has_in = vec![false; n];
+    for &(a, b) in &group.edges {
+        has_out[a] = true;
+        has_in[b] = true;
+    }
+    for (i, op) in group.ops.iter().enumerate() {
+        let row = &mut feats[i * FEAT_DIM..(i + 1) * FEAT_DIM];
+        let k = op.kind.feature_index().min(N_OP_KINDS - 1);
+        row[k] = 1.0;
+        // Scaled log-space features — contract with model.py.
+        row[N_OP_KINDS] = (0.2 * (op.time_ms.max(0.0) + 1e-5).ln()) as f32;
+        row[N_OP_KINDS + 1] = (0.2 * (op.bytes_in.max(0.0) / 1e6 + 1e-4).ln()) as f32;
+        row[N_OP_KINDS + 2] = (0.2 * (op.bytes_out.max(0.0) / 1e6 + 1e-4).ln()) as f32;
+        row[N_OP_KINDS + 3] = (0.2 * (op.flops.max(0.0) / 1e9 + 1e-5).ln()) as f32;
+        row[N_OP_KINDS + 4] = if op.duplicated { 1.0 } else { 0.0 };
+        row[N_OP_KINDS + 5] = bin_feat;
+        row[N_OP_KINDS + 6] = bout_feat;
+        row[N_OP_KINDS + 7] = if has_out[i] { 1.0 } else { 0.0 };
+        row[N_OP_KINDS + 8] = if has_in[i] { 1.0 } else { 0.0 };
+        mask[i] = 1.0;
+        adj[i * MAX_NODES + i] = 1.0; // self loop
+    }
+    for &(a, b) in &group.edges {
+        // Undirected message passing over the data dependencies.
+        adj[a * MAX_NODES + b] = 1.0;
+        adj[b * MAX_NODES + a] = 1.0;
+    }
+    true
+}
+
+/// Inference-side predictor implementing [`FusedOpEstimator`].
+pub struct GnnPredictor {
+    exec: Executable,
+    batch: usize,
+    params: Vec<f32>,
+    /// Fallback for groups larger than MAX_NODES.
+    fallback: AnalyticalFused,
+    /// (queries, batched_calls) counters for §Perf.
+    stats: RefCell<(u64, u64)>,
+}
+
+impl GnnPredictor {
+    /// Load the estimator with the initial (untrained) parameters from the
+    /// manifest.
+    pub fn load(rt: &Runtime, fallback: AnalyticalFused) -> Result<GnnPredictor> {
+        let params_file = rt
+            .manifest
+            .raw
+            .get("gnn")
+            .get("params")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest missing gnn.params"))?
+            .to_string();
+        let params = rt.manifest.load_f32(&params_file)?;
+        Self::with_params(rt, params, fallback)
+    }
+
+    /// Load with explicit (e.g. trained) flat parameters.
+    pub fn with_params(
+        rt: &Runtime,
+        params: Vec<f32>,
+        fallback: AnalyticalFused,
+    ) -> Result<GnnPredictor> {
+        let exec = rt.load("gnn_infer")?;
+        let batch = exec.spec.inputs[1].shape[0];
+        let expected = exec.spec.inputs[0].elems();
+        if params.len() != expected {
+            return Err(anyhow!("gnn params len {} != {}", params.len(), expected));
+        }
+        Ok(GnnPredictor { exec, batch, params, fallback, stats: RefCell::new((0, 0)) })
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        *self.stats.borrow()
+    }
+
+    /// Predict times (ms) for up to `batch` groups in one artifact call.
+    /// Oversized groups get the analytical fallback.
+    pub fn predict(&self, items: &[(FusedGroup, f64, f64)]) -> Result<Vec<f64>> {
+        let mut out = vec![0.0f64; items.len()];
+        let mut chunk_idx: Vec<usize> = Vec::new();
+        let mut start = 0;
+        while start < items.len() {
+            let end = (start + self.batch).min(items.len());
+            chunk_idx.clear();
+            let mut feats = vec![0.0f32; self.batch * MAX_NODES * FEAT_DIM];
+            let mut adj = vec![0.0f32; self.batch * MAX_NODES * MAX_NODES];
+            let mut mask = vec![0.0f32; self.batch * MAX_NODES];
+            for (slot, i) in (start..end).enumerate() {
+                let (group, bin, bout) = &items[i];
+                let ok = encode_group(
+                    group,
+                    *bin,
+                    *bout,
+                    &mut feats[slot * MAX_NODES * FEAT_DIM..(slot + 1) * MAX_NODES * FEAT_DIM],
+                    &mut adj[slot * MAX_NODES * MAX_NODES..(slot + 1) * MAX_NODES * MAX_NODES],
+                    &mut mask[slot * MAX_NODES..(slot + 1) * MAX_NODES],
+                );
+                if ok {
+                    chunk_idx.push(i);
+                } else {
+                    out[i] = self.fallback.estimate_ms(group, *bin, *bout);
+                }
+            }
+            if !chunk_idx.is_empty() {
+                let res = self.exec.run(&[
+                    lit_f32(&self.params, &[self.params.len()])?,
+                    lit_f32(&feats, &[self.batch, MAX_NODES, FEAT_DIM])?,
+                    lit_f32(&adj, &[self.batch, MAX_NODES, MAX_NODES])?,
+                    lit_f32(&mask, &[self.batch, MAX_NODES])?,
+                ])?;
+                let preds = lit_to_f64s(&res[0])?;
+                for (slot, i) in (start..end).enumerate() {
+                    if chunk_idx.contains(&i) {
+                        out[i] = preds[slot].max(1e-4);
+                    }
+                }
+                let mut st = self.stats.borrow_mut();
+                st.1 += 1;
+            }
+            let mut st = self.stats.borrow_mut();
+            st.0 += (end - start) as u64;
+            start = end;
+        }
+        Ok(out)
+    }
+}
+
+impl FusedOpEstimator for GnnPredictor {
+    fn estimate_ms(&self, group: &FusedGroup, bytes_in: f64, bytes_out: f64) -> f64 {
+        self.predict(&[(group.clone(), bytes_in, bytes_out)])
+            .map(|v| v[0])
+            .unwrap_or_else(|_| self.fallback.estimate_ms(group, bytes_in, bytes_out))
+    }
+
+    fn estimate_batch(&self, items: &[(FusedGroup, f64, f64)]) -> Vec<f64> {
+        self.predict(items).unwrap_or_else(|_| {
+            items
+                .iter()
+                .map(|(g, bi, bo)| self.fallback.estimate_ms(g, *bi, *bo))
+                .collect()
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "gnn"
+    }
+}
+
+/// Training loop driver over the `gnn_train` artifact.
+pub struct GnnTrainer {
+    exec: Executable,
+    pub batch: usize,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: f32,
+}
+
+impl GnnTrainer {
+    pub fn new(rt: &Runtime) -> Result<GnnTrainer> {
+        let exec = rt.load("gnn_train")?;
+        let batch = exec.spec.inputs[4].shape[0];
+        let params_file = rt
+            .manifest
+            .raw
+            .get("gnn")
+            .get("params")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest missing gnn.params"))?
+            .to_string();
+        let params = rt.manifest.load_f32(&params_file)?;
+        let n = params.len();
+        Ok(GnnTrainer { exec, batch, params, m: vec![0.0; n], v: vec![0.0; n], step: 0.0 })
+    }
+
+    /// One SGD step over up to `batch` samples (padded with repeats).
+    /// Returns the training loss.
+    pub fn step(&mut self, samples: &[&FusedSample]) -> Result<f64> {
+        assert!(!samples.is_empty());
+        let mut feats = vec![0.0f32; self.batch * MAX_NODES * FEAT_DIM];
+        let mut adj = vec![0.0f32; self.batch * MAX_NODES * MAX_NODES];
+        let mut mask = vec![0.0f32; self.batch * MAX_NODES];
+        let mut targets = vec![0.0f32; self.batch];
+        for slot in 0..self.batch {
+            let s = samples[slot % samples.len()];
+            encode_group(
+                &s.group,
+                s.bytes_in,
+                s.bytes_out,
+                &mut feats[slot * MAX_NODES * FEAT_DIM..(slot + 1) * MAX_NODES * FEAT_DIM],
+                &mut adj[slot * MAX_NODES * MAX_NODES..(slot + 1) * MAX_NODES * MAX_NODES],
+                &mut mask[slot * MAX_NODES..(slot + 1) * MAX_NODES],
+            );
+            targets[slot] = s.label_ms as f32;
+        }
+        self.step += 1.0;
+        let n = self.params.len();
+        let res = self.exec.run(&[
+            lit_f32(&self.params, &[n])?,
+            lit_f32(&self.m, &[n])?,
+            lit_f32(&self.v, &[n])?,
+            lit_f32(&[self.step], &[1])?,
+            lit_f32(&feats, &[self.batch, MAX_NODES, FEAT_DIM])?,
+            lit_f32(&adj, &[self.batch, MAX_NODES, MAX_NODES])?,
+            lit_f32(&mask, &[self.batch, MAX_NODES])?,
+            lit_f32(&targets, &[self.batch])?,
+        ])?;
+        let loss = lit_scalar(&res[0])? as f64;
+        self.params = super::lit_to_f32(&res[1])?;
+        self.m = super::lit_to_f32(&res[2])?;
+        self.v = super::lit_to_f32(&res[3])?;
+        Ok(loss)
+    }
+
+    /// Train for `epochs` passes over `samples` with per-epoch shuffling
+    /// (deterministic). Returns per-step losses.
+    pub fn train(&mut self, samples: &[FusedSample], epochs: usize) -> Result<Vec<f64>> {
+        let mut losses = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(0x6A77);
+        let mut order: Vec<usize> = (0..samples.len()).collect();
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut i = 0;
+            while i < order.len() {
+                let end = (i + self.batch).min(order.len());
+                let batch: Vec<&FusedSample> =
+                    order[i..end].iter().map(|&j| &samples[j]).collect();
+                losses.push(self.step(&batch)?);
+                i = end;
+            }
+        }
+        Ok(losses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, OrigOp};
+
+    fn group(n: usize) -> FusedGroup {
+        FusedGroup {
+            ops: (0..n)
+                .map(|i| OrigOp {
+                    orig_id: i,
+                    kind: OpKind::Mul,
+                    flops: 100.0,
+                    bytes_in: 64.0,
+                    bytes_out: 64.0,
+                    time_ms: 0.01,
+                    duplicated: i % 2 == 1,
+                })
+                .collect(),
+            edges: (1..n).map(|i| (i - 1, i)).collect(),
+        }
+    }
+
+    #[test]
+    fn encode_basic() {
+        let g = group(3);
+        let mut feats = vec![0.0; MAX_NODES * FEAT_DIM];
+        let mut adj = vec![0.0; MAX_NODES * MAX_NODES];
+        let mut mask = vec![0.0; MAX_NODES];
+        assert!(encode_group(&g, 4e5, 4e5, &mut feats, &mut adj, &mut mask));
+        // 3 live nodes.
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 3);
+        // One-hot set for Mul.
+        let k = OpKind::Mul.feature_index();
+        assert_eq!(feats[k], 1.0);
+        // Self loops + undirected edges.
+        assert_eq!(adj[0], 1.0);
+        assert_eq!(adj[1], 1.0); // 0->1
+        assert_eq!(adj[MAX_NODES], 1.0); // 1->0 (mirrored)
+        // dup flag on second node.
+        assert_eq!(feats[FEAT_DIM + N_OP_KINDS + 4], 1.0);
+    }
+
+    #[test]
+    fn encode_rejects_oversize() {
+        let g = group(MAX_NODES + 1);
+        let mut feats = vec![0.0; MAX_NODES * FEAT_DIM];
+        let mut adj = vec![0.0; MAX_NODES * MAX_NODES];
+        let mut mask = vec![0.0; MAX_NODES];
+        assert!(!encode_group(&g, 4e5, 4e5, &mut feats, &mut adj, &mut mask));
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust — Python is never on
+//! this path.
+//!
+//! The interchange format is HLO *text* (see aot.py's module docs for why
+//! not serialized protos). `manifest.json` carries the static input/output
+//! shapes of every artifact plus the initial flat parameter vectors.
+
+pub mod gnn;
+pub mod trainer;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        Some(TensorSpec {
+            shape: j
+                .get("shape")
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Option<Vec<_>>>()?,
+            dtype: j.get("dtype").as_str()?.to_string(),
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+            })?;
+        let raw = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        Ok(Manifest { dir: dir.to_path_buf(), raw })
+    }
+
+    /// Default artifacts directory: `$DISCO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DISCO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<ArtifactSpec> {
+        let a = self.raw.get("artifacts").get(name);
+        if *a == Json::Null {
+            return Err(anyhow!("artifact '{name}' not in manifest"));
+        }
+        let parse = |key: &str| -> Result<Vec<TensorSpec>> {
+            a.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad manifest"))?
+                .iter()
+                .map(|j| TensorSpec::from_json(j).ok_or_else(|| anyhow!("bad spec")))
+                .collect()
+        };
+        Ok(ArtifactSpec {
+            file: a
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("bad manifest"))?
+                .to_string(),
+            inputs: parse("inputs")?,
+            outputs: parse("outputs")?,
+        })
+    }
+
+    /// Load a raw little-endian f32 parameter file referenced by the
+    /// manifest (e.g. `lm_params.f32`).
+    pub fn load_f32(&self, file: &str) -> Result<Vec<f32>> {
+        let bytes =
+            std::fs::read(self.dir.join(file)).with_context(|| format!("reading {file}"))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("{file}: length not a multiple of 4"));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A compiled artifact ready to execute on the PJRT CPU client.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Shared PJRT CPU client + manifest.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest: Manifest::load(dir)? })
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { spec, exe })
+    }
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.file,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.file))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the result is always a tuple.
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("lit_f32: {} elems for shape {:?}", data.len(), shape));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape from a slice.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("lit_i32: {} elems for shape {:?}", data.len(), shape));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+/// Extract an f64 vector from an f32 literal.
+pub fn lit_to_f64s(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit_to_f32(lit)?.into_iter().map(|x| x as f64).collect())
+}
+
+/// Extract the single f32 scalar of a literal.
+pub fn lit_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = lit_to_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}

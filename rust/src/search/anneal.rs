@@ -1,0 +1,174 @@
+//! Simulated-annealing search over the same joint op/tensor-fusion move
+//! set — the design-choice ablation for the paper's backtracking
+//! algorithm (DESIGN.md §5). Same moves, same cost model, different
+//! exploration: a single walker accepts worsening moves with probability
+//! `exp(−Δ/T)` under a geometric cooling schedule, instead of maintaining
+//! a pruned priority queue of candidates.
+
+use super::{MethodSet, SearchResult};
+use crate::fusion::{self, FusionKind};
+use crate::graph::TrainingGraph;
+use crate::sim::{simulate, CostSource, SimOptions};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Annealing hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct AnnealConfig {
+    /// Total proposal steps.
+    pub steps: usize,
+    /// Initial temperature as a fraction of the initial cost.
+    pub t0_frac: f64,
+    /// Geometric cooling factor per step.
+    pub cooling: f64,
+    pub methods: MethodSet,
+    pub sim: SimOptions,
+    pub seed: u64,
+}
+
+impl Default for AnnealConfig {
+    fn default() -> Self {
+        AnnealConfig {
+            steps: 2000,
+            t0_frac: 0.05,
+            cooling: 0.998,
+            methods: MethodSet::all(),
+            sim: SimOptions::default(),
+            seed: 0xA11EA1,
+        }
+    }
+}
+
+/// Propose one random rewrite (mutates `g`); returns false if no move was
+/// applicable.
+fn propose(g: &mut TrainingGraph, methods: &MethodSet, rng: &mut Rng) -> bool {
+    let mut options = Vec::new();
+    if methods.nondup_fusion {
+        options.push(0u8);
+    }
+    if methods.dup_fusion {
+        options.push(1);
+    }
+    if methods.ar_fusion {
+        options.push(2);
+    }
+    let Some(&m) = rng.choose(&options) else { return false };
+    match m {
+        0 | 1 => {
+            let kind = if m == 0 { FusionKind::NonDuplicate } else { FusionKind::Duplicate };
+            let cands = fusion::op_fusion_candidates(g);
+            for _ in 0..4 {
+                if let Some(&(p, s)) = rng.choose(&cands) {
+                    if fusion::fuse_ops(g, p, s, kind).is_ok() {
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        _ => {
+            let ars = g.allreduces();
+            for _ in 0..4 {
+                if let Some(&a) = rng.choose(&ars) {
+                    let nbrs = fusion::ar_neighbors(g, a);
+                    if let Some(&b) = rng.choose(&nbrs) {
+                        if fusion::fuse_allreduce(g, a, b).is_ok() {
+                            return true;
+                        }
+                    }
+                }
+            }
+            false
+        }
+    }
+}
+
+/// Run simulated annealing from `input`. Moves are fusion-only (no
+/// un-fusion), so rejected proposals restart from the current state's
+/// clone — the walk monotonically coarsens but temperature decides which
+/// coarsenings stick.
+pub fn anneal_search(
+    input: &TrainingGraph,
+    costs: &dyn CostSource,
+    cfg: &AnnealConfig,
+) -> SearchResult {
+    let start = Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let cost_of = |g: &TrainingGraph| {
+        costs.prepare(g);
+        simulate(g, costs, cfg.sim).makespan_ms
+    };
+    let initial_cost = cost_of(input);
+    let mut current = input.clone();
+    let mut current_cost = initial_cost;
+    let mut best = current.clone();
+    let mut best_cost = current_cost;
+    let mut temp = initial_cost * cfg.t0_frac;
+    let mut evals = 1u64;
+
+    for _ in 0..cfg.steps {
+        let mut cand = current.clone();
+        if !propose(&mut cand, &cfg.methods, &mut rng) {
+            break; // no applicable moves left
+        }
+        let c = cost_of(&cand);
+        evals += 1;
+        let accept = c <= current_cost
+            || (temp > 0.0 && rng.gen_f64() < ((current_cost - c) / temp).exp());
+        if accept {
+            current = cand;
+            current_cost = c;
+            if c < best_cost {
+                best_cost = c;
+                best = current.clone();
+            }
+        }
+        temp *= cfg.cooling;
+    }
+
+    SearchResult {
+        best,
+        best_cost_ms: best_cost,
+        initial_cost_ms: initial_cost,
+        steps: cfg.steps as u64,
+        evals,
+        elapsed: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceModel;
+    use crate::estimator::CostEstimator;
+    use crate::models::{build, ModelKind, ModelSpec};
+    use crate::network::Cluster;
+    use crate::profiler::profile;
+
+    #[test]
+    fn anneal_improves_and_stays_valid() {
+        let g = build(&ModelSpec { kind: ModelKind::Rnnlm, batch: 16, depth_scale: 0.25 }, 12);
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profile(&g, &d, &c, 2, 3);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = AnnealConfig { steps: 400, seed: 9, ..Default::default() };
+        let r = anneal_search(&g, &est, &cfg);
+        assert!(r.best_cost_ms <= r.initial_cost_ms);
+        assert!(r.best.validate().is_ok());
+        assert!((r.best.total_gradient_bytes() - g.total_gradient_bytes()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn anneal_deterministic() {
+        let g = build(&ModelSpec { kind: ModelKind::Rnnlm, batch: 16, depth_scale: 0.25 }, 12);
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profile(&g, &d, &c, 2, 3);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = AnnealConfig { steps: 200, seed: 4, ..Default::default() };
+        let a = anneal_search(&g, &est, &cfg);
+        let b = anneal_search(&g, &est, &cfg);
+        assert_eq!(a.best_cost_ms, b.best_cost_ms);
+    }
+}

@@ -1,0 +1,372 @@
+//! Backtracking strategy search — Alg. 1 of the paper.
+//!
+//! A priority queue of candidate HLO modules (ordered by simulated cost)
+//! drives exploration. Each step dequeues the cheapest candidate and, for
+//! each enabled optimization method, applies it a random number of times
+//! (`n ∈ [0, β]`, the paper's `RandomApply`), evaluates the mutated module
+//! with the simulator, tracks the best module found, and re-enqueues
+//! candidates whose cost is within `α ×` the best (pruning). The search
+//! stops when the queue empties or the best module hasn't improved for
+//! `unchanged_limit` candidate evaluations (1000 in the paper).
+//!
+//! The three optimization methods (paper §4.5) are:
+//! 1. non-duplicate op fusion of a random (pred, succ) pair,
+//! 2. duplicate op fusion of a random (pred, succ) pair,
+//! 3. fusion of a random AllReduce with a random neighbour AllReduce.
+//!
+//! Method subsets are configurable to reproduce the Fig. 10 ablation.
+
+pub mod anneal;
+
+use crate::fusion::{self, FusionKind};
+use crate::graph::TrainingGraph;
+use crate::sim::{simulate, CostSource, OrderedF64, SimOptions};
+use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+use std::time::{Duration, Instant};
+
+/// Which optimization methods the search may use (Fig. 10 ablation knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MethodSet {
+    pub nondup_fusion: bool,
+    pub dup_fusion: bool,
+    pub ar_fusion: bool,
+}
+
+impl MethodSet {
+    pub fn all() -> MethodSet {
+        MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: true }
+    }
+
+    pub fn none() -> MethodSet {
+        MethodSet { nondup_fusion: false, dup_fusion: false, ar_fusion: false }
+    }
+
+    fn enabled(&self) -> Vec<Method> {
+        let mut v = Vec::new();
+        if self.nondup_fusion {
+            v.push(Method::NonDupFusion);
+        }
+        if self.dup_fusion {
+            v.push(Method::DupFusion);
+        }
+        if self.ar_fusion {
+            v.push(Method::ArFusion);
+        }
+        v
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Method {
+    NonDupFusion,
+    DupFusion,
+    ArFusion,
+}
+
+/// Search hyper-parameters (paper defaults: α = 1.05, β = 10,
+/// unchanged limit 1000).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub alpha: f64,
+    pub beta: usize,
+    pub unchanged_limit: usize,
+    /// Cap on the priority queue (memory guard; the paper's queue is
+    /// unbounded but our candidates are full graph clones).
+    pub max_queue: usize,
+    /// Hard wall-clock budget; 0 = unlimited.
+    pub max_seconds: f64,
+    pub methods: MethodSet,
+    pub sim: SimOptions,
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            alpha: 1.05,
+            beta: 10,
+            unchanged_limit: 1000,
+            max_queue: 256,
+            max_seconds: 0.0,
+            methods: MethodSet::all(),
+            sim: SimOptions::default(),
+            seed: 0xD15C0,
+        }
+    }
+}
+
+/// Outcome of a search run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: TrainingGraph,
+    pub best_cost_ms: f64,
+    pub initial_cost_ms: f64,
+    /// Queue dequeues performed.
+    pub steps: u64,
+    /// Simulator evaluations performed.
+    pub evals: u64,
+    pub elapsed: Duration,
+}
+
+impl SearchResult {
+    pub fn speedup(&self) -> f64 {
+        if self.best_cost_ms == 0.0 {
+            1.0
+        } else {
+            self.initial_cost_ms / self.best_cost_ms
+        }
+    }
+}
+
+/// Apply method `m` up to `n` times with random operands. Returns true if
+/// the graph changed. Invalid applications (paper's validity check) are
+/// skipped, with a few retries each.
+fn random_apply(g: &mut TrainingGraph, m: Method, n: usize, rng: &mut Rng) -> bool {
+    let mut changed = false;
+    for _ in 0..n {
+        let applied = match m {
+            Method::NonDupFusion | Method::DupFusion => {
+                let kind = if m == Method::NonDupFusion {
+                    FusionKind::NonDuplicate
+                } else {
+                    FusionKind::Duplicate
+                };
+                let cands = fusion::op_fusion_candidates(g);
+                let mut ok = false;
+                for _ in 0..4 {
+                    let Some(&(p, s)) = rng.choose(&cands) else { break };
+                    if fusion::fuse_ops(g, p, s, kind).is_ok() {
+                        ok = true;
+                        break;
+                    }
+                }
+                ok
+            }
+            Method::ArFusion => {
+                let ars = g.allreduces();
+                let mut ok = false;
+                for _ in 0..4 {
+                    let Some(&a) = rng.choose(&ars) else { break };
+                    let neighbors = fusion::ar_neighbors(g, a);
+                    let Some(&b) = rng.choose(&neighbors) else { continue };
+                    if fusion::fuse_allreduce(g, a, b).is_ok() {
+                        ok = true;
+                        break;
+                    }
+                }
+                ok
+            }
+        };
+        changed |= applied;
+        if !applied {
+            break;
+        }
+    }
+    changed
+}
+
+/// Run Alg. 1 on `input` using `costs` as the simulator's cost source.
+pub fn backtracking_search(
+    input: &TrainingGraph,
+    costs: &dyn CostSource,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    let start = Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let methods = cfg.methods.enabled();
+
+    let cost_of = |g: &TrainingGraph| {
+        costs.prepare(g); // batched GNN prefetch (no-op for other sources)
+        simulate(g, costs, cfg.sim).makespan_ms
+    };
+
+    let initial_cost = cost_of(input);
+    let mut best = input.clone();
+    let mut best_cost = initial_cost;
+
+    // Priority queue of (cost, seq, arena index); arena holds the graphs.
+    let mut arena: Vec<Option<TrainingGraph>> = vec![Some(input.clone())];
+    let mut queue: BinaryHeap<Reverse<(OrderedF64, u64, usize)>> = BinaryHeap::new();
+    queue.push(Reverse((OrderedF64(initial_cost), 0, 0)));
+    let mut seen: HashSet<u64> = HashSet::new();
+    seen.insert(input.fingerprint());
+
+    let mut unchanged = 0usize;
+    let mut steps = 0u64;
+    let mut evals = 1u64;
+    let mut seq = 1u64;
+
+    while let Some(Reverse((_, _, idx))) = queue.pop() {
+        if unchanged >= cfg.unchanged_limit {
+            break;
+        }
+        if cfg.max_seconds > 0.0 && start.elapsed().as_secs_f64() > cfg.max_seconds {
+            break;
+        }
+        let h = arena[idx].take().expect("candidate already consumed");
+        steps += 1;
+
+        for &m in &methods {
+            // n = Random(0, β): 0 applications produce H' == H — skip the
+            // no-op evaluation (the fingerprint set would reject it anyway).
+            let n = rng.gen_range_inclusive(0, cfg.beta);
+            if n == 0 {
+                continue;
+            }
+            let mut candidate = h.clone();
+            if !random_apply(&mut candidate, m, n, &mut rng) {
+                continue;
+            }
+            let fp = candidate.fingerprint();
+            if !seen.insert(fp) {
+                continue;
+            }
+            let cost = cost_of(&candidate);
+            evals += 1;
+            if cost < best_cost {
+                best_cost = cost;
+                best = candidate.clone();
+                unchanged = 0;
+            } else {
+                unchanged += 1;
+            }
+            if cost <= cfg.alpha * best_cost && queue.len() < cfg.max_queue {
+                arena.push(Some(candidate));
+                queue.push(Reverse((OrderedF64(cost), seq, arena.len() - 1)));
+                seq += 1;
+            }
+        }
+    }
+
+    SearchResult {
+        best,
+        best_cost_ms: best_cost,
+        initial_cost_ms: initial_cost,
+        steps,
+        evals,
+        elapsed: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceModel;
+    use crate::estimator::CostEstimator;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::{OpKind, Role};
+    use crate::network::Cluster;
+    use crate::profiler;
+
+    /// A graph with obvious fusion wins: long elementwise chains producing
+    /// many small gradients.
+    fn workload() -> TrainingGraph {
+        let mut b = GraphBuilder::new("wl", 12);
+        let x = b.constant("x", &[1 << 16]);
+        let mut prev = x;
+        for i in 0..6 {
+            let m = b.compute(OpKind::Mul, &format!("m{i}"), &[prev], &[1 << 16], Role::Forward);
+            let t = b.compute(OpKind::Tanh, &format!("t{i}"), &[m], &[1 << 16], Role::Forward);
+            prev = t;
+        }
+        // Backward chain with small per-layer gradients.
+        let mut grad = prev;
+        for i in 0..6 {
+            let gop =
+                b.compute(OpKind::Mul, &format!("bg{i}"), &[grad], &[1 << 12], Role::Backward);
+            let p = b.param(&format!("w{i}"), &[1 << 12]);
+            let ar = b.allreduce(&format!("ar{i}"), gop, &[1 << 12]);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+            grad = gop;
+        }
+        b.finish()
+    }
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { unchanged_limit: 60, max_queue: 64, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn search_improves_cost() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let r = backtracking_search(&g, &est, &quick_cfg());
+        assert!(r.best_cost_ms < r.initial_cost_ms, "no improvement: {} -> {}", r.initial_cost_ms, r.best_cost_ms);
+        assert!(r.best.validate().is_ok());
+        assert!(r.evals > 10);
+    }
+
+    #[test]
+    fn best_graph_preserves_gradient_bytes() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let r = backtracking_search(&g, &est, &quick_cfg());
+        assert!((r.best.total_gradient_bytes() - g.total_gradient_bytes()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let a = backtracking_search(&g, &est, &quick_cfg());
+        let b = backtracking_search(&g, &est, &quick_cfg());
+        assert_eq!(a.best_cost_ms, b.best_cost_ms);
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn empty_method_set_is_identity() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = SearchConfig { methods: MethodSet::none(), ..quick_cfg() };
+        let r = backtracking_search(&g, &est, &cfg);
+        assert_eq!(r.best_cost_ms, r.initial_cost_ms);
+        assert_eq!(r.best.fingerprint(), g.fingerprint());
+    }
+
+    #[test]
+    fn more_methods_never_hurt() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let only_nondup = SearchConfig {
+            methods: MethodSet { nondup_fusion: true, dup_fusion: false, ar_fusion: false },
+            ..quick_cfg()
+        };
+        let all = quick_cfg();
+        let r1 = backtracking_search(&g, &est, &only_nondup);
+        let r2 = backtracking_search(&g, &est, &all);
+        // With the same budget the richer space should do at least roughly
+        // as well (allow small stochastic slack).
+        assert!(r2.best_cost_ms <= r1.best_cost_ms * 1.10, "all={} nondup={}", r2.best_cost_ms, r1.best_cost_ms);
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = SearchConfig { max_seconds: 0.05, unchanged_limit: 1_000_000, ..quick_cfg() };
+        let start = std::time::Instant::now();
+        let _ = backtracking_search(&g, &est, &cfg);
+        assert!(start.elapsed().as_secs_f64() < 5.0);
+    }
+}

@@ -1,0 +1,371 @@
+//! Discrete-event simulation of one training iteration (paper §4.4).
+//!
+//! Two resources model the worker: a **compute stream** (the GPU executes
+//! one kernel at a time) and a **communication channel** (one AllReduce in
+//! flight at a time — NCCL's in-order collective channel). Computation and
+//! communication overlap freely; the only coupling is data dependencies
+//! (an AllReduce starts once its (fused) gradient tensor is produced; an
+//! optimizer op starts once its aggregated gradient arrives).
+//!
+//! The same engine backs both
+//! * the **cost model** `Cost(H)` used by the search (clean per-op times
+//!   from a [`CostSource`], paper's Simulator), and
+//! * the **high-fidelity "real execution"** ([`hifi`]) that substitutes for
+//!   the paper's physical testbed: per-op noise, per-worker jitter and
+//!   AllReduce straggler synchronization (see DESIGN.md §2).
+
+pub mod hifi;
+pub mod trace;
+
+use crate::graph::{Node, NodeId, OpKind, TrainingGraph};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Observer of scheduling decisions (Chrome-trace export, debugging).
+/// The no-op implementation compiles away in the search hot path.
+pub trait Recorder {
+    fn record(&mut self, _node: &Node, _start_ms: f64, _end_ms: f64, _comm: bool) {}
+}
+
+/// Default no-op recorder.
+pub struct NoRecord;
+
+impl Recorder for NoRecord {}
+
+/// Where per-node times come from. The searcher's estimator implements
+/// this; the hi-fi simulator implements it with the noisy device model.
+pub trait CostSource {
+    /// Execution time of a computation node, ms.
+    fn compute_time_ms(&self, node: &Node) -> f64;
+    /// AllReduce time for a (fused) gradient tensor of `bytes`, ms.
+    fn comm_time_ms(&self, bytes: f64) -> f64;
+    /// Hook called once per candidate graph before simulation — cost
+    /// sources with batched backends (the GNN estimator) prefetch every
+    /// fused-op prediction here. Default: no-op.
+    fn prepare(&self, _graph: &TrainingGraph) {}
+}
+
+/// Simulation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Extra delay added to every AllReduce start, modelling worker skew
+    /// (0 in the cost model; >0 in hi-fi runs).
+    pub straggler_ms: f64,
+    /// If true, AllReduces are skipped entirely (single-device runs,
+    /// Fig. 8).
+    pub ignore_comm: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { straggler_ms: 0.0, ignore_comm: false }
+    }
+}
+
+/// Result of simulating one iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimResult {
+    /// End-to-end per-iteration time (makespan), ms.
+    pub makespan_ms: f64,
+    /// Total compute-stream busy time, ms (Fig. 7 "computation time").
+    pub comp_busy_ms: f64,
+    /// Total channel busy time, ms (Fig. 7 "communication time").
+    pub comm_busy_ms: f64,
+    /// Number of scheduled compute kernels.
+    pub kernels: usize,
+    /// Number of AllReduce operations executed.
+    pub allreduces: usize,
+    /// Peak device-memory footprint of live intermediate tensors, bytes
+    /// (refcounted: an output is freed once its last consumer completes).
+    /// One of op fusion's benefits the paper cites — fewer materialized
+    /// intermediates — made measurable.
+    pub peak_bytes: f64,
+}
+
+impl SimResult {
+    /// The paper's overlap metric (§6.3): (comp + comm) / makespan.
+    /// Values > 1 mean overlap; 1 means fully serialized.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.makespan_ms == 0.0 {
+            1.0
+        } else {
+            (self.comp_busy_ms + self.comm_busy_ms) / self.makespan_ms
+        }
+    }
+}
+
+/// Fully-overlapped lower bound (the paper's "FO" line in Fig. 6):
+/// computation and communication each run back-to-back with perfect
+/// overlap and no dependency stalls.
+pub fn fo_bound(graph: &TrainingGraph, costs: &dyn CostSource) -> f64 {
+    let mut comp = 0.0;
+    let mut comm = 0.0;
+    for n in graph.live() {
+        match n.kind {
+            OpKind::AllReduce => comm += costs.comm_time_ms(n.bytes_out),
+            OpKind::Parameter | OpKind::Constant => {}
+            _ => comp += costs.compute_time_ms(n),
+        }
+    }
+    comp.max(comm)
+}
+
+/// Simulate one training iteration of `graph` under `costs`.
+///
+/// Scheduling discipline: per resource, earliest-ready-first (FIFO on
+/// ready time, ties broken by enqueue sequence) — the paper's ready-queue
+/// process, with AllReduces "executed in order of production of their
+/// respective gradient tensors".
+pub fn simulate(graph: &TrainingGraph, costs: &dyn CostSource, opts: SimOptions) -> SimResult {
+    simulate_with(graph, costs, opts, &mut NoRecord)
+}
+
+/// [`simulate`] with a scheduling observer (Chrome-trace export etc.).
+pub fn simulate_with<R: Recorder>(
+    graph: &TrainingGraph,
+    costs: &dyn CostSource,
+    opts: SimOptions,
+    rec: &mut R,
+) -> SimResult {
+    let n = graph.nodes.len();
+    let mut indeg = vec![0usize; n];
+    let succ = graph.successors();
+    let mut ready_time = vec![0.0f64; n];
+
+    // (ready_time, seq, id) min-heap over BOTH resources; popping in global
+    // ready order keeps each resource's discipline consistent (a newly
+    // enabled node is never ready earlier than the node that enabled it).
+    let mut heap: BinaryHeap<Reverse<(OrderedF64, usize, NodeId)>> = BinaryHeap::new();
+    let mut seq = 0usize;
+
+    for node in graph.live() {
+        indeg[node.id] = node.inputs.len();
+        if node.inputs.is_empty() {
+            heap.push(Reverse((OrderedF64(0.0), seq, node.id)));
+            seq += 1;
+        }
+    }
+
+    let mut device_free = 0.0f64;
+    let mut channel_free = 0.0f64;
+    let mut comp_busy = 0.0f64;
+    let mut comm_busy = 0.0f64;
+    let mut kernels = 0usize;
+    let mut allreduces = 0usize;
+    let mut makespan = 0.0f64;
+    let mut completion = vec![0.0f64; n];
+    let mut scheduled = 0usize;
+
+    // Memory refcounting: an intermediate lives from its producer's
+    // completion until its last consumer's completion. Parameters and
+    // constants are persistent state, excluded from the peak.
+    let mut consumers_left: Vec<usize> = succ.iter().map(|s| s.len()).collect();
+    let mut live_bytes = 0.0f64;
+    let mut peak_bytes = 0.0f64;
+    let transient =
+        |node: &Node| !matches!(node.kind, OpKind::Parameter | OpKind::Constant);
+
+    while let Some(Reverse((OrderedF64(rt), _s, id))) = heap.pop() {
+        let node = &graph.nodes[id];
+        let (start, done) = match node.kind {
+            OpKind::AllReduce => {
+                if opts.ignore_comm {
+                    (rt, rt)
+                } else {
+                    let start = (rt + opts.straggler_ms).max(channel_free);
+                    let t = costs.comm_time_ms(node.bytes_out);
+                    channel_free = start + t;
+                    comm_busy += t;
+                    allreduces += 1;
+                    rec.record(node, start, channel_free, true);
+                    (start, channel_free)
+                }
+            }
+            OpKind::Parameter | OpKind::Constant => (rt, rt),
+            _ => {
+                let t = costs.compute_time_ms(node);
+                let start = rt.max(device_free);
+                device_free = start + t;
+                comp_busy += t;
+                kernels += 1;
+                rec.record(node, start, device_free, false);
+                (start, device_free)
+            }
+        };
+        let _ = start;
+        completion[id] = done;
+        makespan = makespan.max(done);
+        scheduled += 1;
+
+        if transient(node) {
+            live_bytes += node.bytes_out;
+            peak_bytes = peak_bytes.max(live_bytes);
+        }
+        for &i in &node.inputs {
+            consumers_left[i] -= 1;
+            if consumers_left[i] == 0 && transient(&graph.nodes[i]) {
+                live_bytes -= graph.nodes[i].bytes_out;
+            }
+        }
+
+        for &v in &succ[id] {
+            ready_time[v] = ready_time[v].max(done);
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                heap.push(Reverse((OrderedF64(ready_time[v]), seq, v)));
+                seq += 1;
+            }
+        }
+    }
+    debug_assert_eq!(scheduled, graph.live_count(), "graph has a cycle?");
+
+    SimResult {
+        makespan_ms: makespan,
+        comp_busy_ms: comp_busy,
+        comm_busy_ms: comm_busy,
+        kernels,
+        allreduces,
+        peak_bytes,
+    }
+}
+
+/// f64 wrapper with total order for the heap (times are never NaN).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrderedF64(pub f64);
+
+impl Eq for OrderedF64 {}
+
+impl PartialOrd for OrderedF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrderedF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN time")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::Role;
+
+    /// Fixed-cost source: every compute op takes `comp` ms, every AllReduce
+    /// `comm` ms.
+    struct Fixed {
+        comp: f64,
+        comm: f64,
+    }
+
+    impl CostSource for Fixed {
+        fn compute_time_ms(&self, _node: &Node) -> f64 {
+            self.comp
+        }
+        fn comm_time_ms(&self, _bytes: f64) -> f64 {
+            self.comm
+        }
+    }
+
+    /// chain of `k` backward ops, each feeding an AllReduce + optimizer.
+    fn bp_chain(k: usize) -> TrainingGraph {
+        let mut b = GraphBuilder::new("chain", 4);
+        let mut prev = b.constant("x", &[64]);
+        for i in 0..k {
+            let g = b.compute(OpKind::Mul, &format!("g{i}"), &[prev], &[64], Role::Backward);
+            let p = b.param(&format!("w{i}"), &[64]);
+            let ar = b.allreduce(&format!("ar{i}"), g, &[64]);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+            prev = g;
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn serial_chain_no_comm() {
+        let g = bp_chain(5);
+        let r = simulate(&g, &Fixed { comp: 1.0, comm: 0.0 }, SimOptions { ignore_comm: true, ..Default::default() });
+        // 5 grads + 5 optimizer updates = 10 kernels of 1ms, serial device.
+        assert_eq!(r.kernels, 10);
+        assert_eq!(r.makespan_ms, 10.0);
+        assert_eq!(r.comp_busy_ms, 10.0);
+        assert_eq!(r.allreduces, 0);
+    }
+
+    #[test]
+    fn comm_overlaps_compute() {
+        let g = bp_chain(4);
+        let r = simulate(&g, &Fixed { comp: 1.0, comm: 1.0 }, SimOptions::default());
+        // 4 grads serial on device (t=1..4); AR_i starts at its grad's
+        // completion, channel serializes; optimizer ops ride the device.
+        assert_eq!(r.allreduces, 4);
+        assert!(r.overlap_ratio() > 1.0, "overlap={}", r.overlap_ratio());
+        // Makespan is far below full serialization.
+        assert!(r.makespan_ms < r.comp_busy_ms + r.comm_busy_ms);
+    }
+
+    #[test]
+    fn makespan_at_least_fo_bound() {
+        let g = bp_chain(6);
+        let c = Fixed { comp: 0.7, comm: 1.3 };
+        let r = simulate(&g, &c, SimOptions::default());
+        assert!(r.makespan_ms >= fo_bound(&g, &c) - 1e-9);
+    }
+
+    #[test]
+    fn makespan_at_most_serial_sum() {
+        let g = bp_chain(6);
+        let c = Fixed { comp: 0.7, comm: 1.3 };
+        let r = simulate(&g, &c, SimOptions::default());
+        assert!(r.makespan_ms <= r.comp_busy_ms + r.comm_busy_ms + 1e-9);
+    }
+
+    #[test]
+    fn channel_serializes_allreduces() {
+        // One producer, two ARs on it: second waits for first.
+        let mut b = GraphBuilder::new("two-ar", 2);
+        let x = b.constant("x", &[64]);
+        let gop = b.compute(OpKind::Mul, "g", &[x], &[64], Role::Backward);
+        b.allreduce("ar1", gop, &[64]);
+        b.allreduce("ar2", gop, &[64]);
+        let g = b.finish();
+        let r = simulate(&g, &Fixed { comp: 1.0, comm: 2.0 }, SimOptions::default());
+        // grad done at 1; ar1 spans 1..3, ar2 3..5.
+        assert_eq!(r.makespan_ms, 5.0);
+        assert_eq!(r.comm_busy_ms, 4.0);
+    }
+
+    #[test]
+    fn straggler_delays_comm() {
+        let g = bp_chain(3);
+        let base = simulate(&g, &Fixed { comp: 0.1, comm: 1.0 }, SimOptions::default());
+        let slow = simulate(
+            &g,
+            &Fixed { comp: 0.1, comm: 1.0 },
+            SimOptions { straggler_ms: 0.5, ignore_comm: false },
+        );
+        assert!(slow.makespan_ms > base.makespan_ms);
+    }
+
+    #[test]
+    fn optimizer_waits_for_allreduce() {
+        // comp=1, comm=10: the optimizer op for the first gradient cannot
+        // start before its AR finishes at 1+10=11.
+        let g = bp_chain(1);
+        let r = simulate(&g, &Fixed { comp: 1.0, comm: 10.0 }, SimOptions::default());
+        // grad 0..1, AR 1..11, optimizer 11..12.
+        assert_eq!(r.makespan_ms, 12.0);
+    }
+
+    #[test]
+    fn fo_bound_is_max_of_totals() {
+        let g = bp_chain(4);
+        let c = Fixed { comp: 2.0, comm: 1.0 };
+        // 8 compute ops * 2ms = 16; 4 ARs * 1ms = 4.
+        assert_eq!(fo_bound(&g, &c), 16.0);
+        let c2 = Fixed { comp: 0.1, comm: 5.0 };
+        assert_eq!(fo_bound(&g, &c2), 20.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! JSON config files: define custom clusters, devices and search
+//! hyper-parameters without recompiling (`disco ... --config my.json`).
+//!
+//! ```json
+//! {
+//!   "cluster": {"machines": 4, "gpus_per_machine": 4, "nic_gbps": 100,
+//!                "overhead_ms": 0.35},
+//!   "device":  {"preset": "tesla_t4", "peak_tflops": 8.1,
+//!                "mem_gbps": 300, "onchip_mb": 4},
+//!   "search":  {"alpha": 1.05, "beta": 10, "unchanged_limit": 1000,
+//!                "seed": 7}
+//! }
+//! ```
+//!
+//! Every field is optional; omitted ones keep the preset/default.
+
+use crate::device::DeviceModel;
+use crate::network::Cluster;
+use crate::search::SearchConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Parsed configuration bundle.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cluster: Cluster,
+    pub device: DeviceModel,
+    pub search: SearchConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cluster: Cluster::cluster_a(),
+            device: DeviceModel::gtx1080ti(),
+            search: SearchConfig::default(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Config> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let mut cfg = Config::default();
+
+        let c = j.get("cluster");
+        if *c != Json::Null {
+            if let Some(preset) = c.get("preset").as_str() {
+                cfg.cluster = match preset {
+                    "a" => Cluster::cluster_a(),
+                    "b" => Cluster::cluster_b(),
+                    "single" => Cluster::single_device(),
+                    other => return Err(anyhow!("unknown cluster preset '{other}'")),
+                };
+            }
+            if let Some(m) = c.get("machines").as_usize() {
+                cfg.cluster.machines = m;
+            }
+            if let Some(g) = c.get("gpus_per_machine").as_usize() {
+                cfg.cluster.gpus_per_machine = g;
+            }
+            if let Some(bw) = c.get("nic_gbps").as_f64() {
+                cfg.cluster.nic_bw = bw * 1e9 / 8.0;
+            }
+            if let Some(o) = c.get("overhead_ms").as_f64() {
+                cfg.cluster.overhead_ms = o;
+            }
+        }
+
+        let d = j.get("device");
+        if *d != Json::Null {
+            if let Some(preset) = d.get("preset").as_str() {
+                cfg.device = match preset {
+                    "gtx1080ti" => DeviceModel::gtx1080ti(),
+                    "tesla_t4" => DeviceModel::tesla_t4(),
+                    other => return Err(anyhow!("unknown device preset '{other}'")),
+                };
+            }
+            if let Some(p) = d.get("peak_tflops").as_f64() {
+                cfg.device.spec.peak_flops = p * 1e12;
+            }
+            if let Some(bw) = d.get("mem_gbps").as_f64() {
+                cfg.device.spec.mem_bw = bw * 1e9;
+            }
+            if let Some(mb) = d.get("onchip_mb").as_f64() {
+                cfg.device.spec.onchip_bytes = mb * 1024.0 * 1024.0;
+            }
+            if let Some(l) = d.get("launch_us").as_f64() {
+                cfg.device.spec.launch_overhead_ms = l / 1e3;
+            }
+        }
+
+        let s = j.get("search");
+        if *s != Json::Null {
+            if let Some(a) = s.get("alpha").as_f64() {
+                cfg.search.alpha = a;
+            }
+            if let Some(bta) = s.get("beta").as_usize() {
+                cfg.search.beta = bta;
+            }
+            if let Some(u) = s.get("unchanged_limit").as_usize() {
+                cfg.search.unchanged_limit = u;
+            }
+            if let Some(q) = s.get("max_queue").as_usize() {
+                cfg.search.max_queue = q;
+            }
+            if let Some(sec) = s.get("max_seconds").as_f64() {
+                cfg.search.max_seconds = sec;
+            }
+            if let Some(seed) = s.get("seed").as_usize() {
+                cfg.search.seed = seed as u64;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_default() {
+        let c = Config::from_json_str("{}").unwrap();
+        assert_eq!(c.cluster.name, "A");
+        assert_eq!(c.search.alpha, 1.05);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = Config::from_json_str(
+            r#"{
+              "cluster": {"preset": "b", "machines": 2, "nic_gbps": 200},
+              "device": {"preset": "tesla_t4", "peak_tflops": 10.0},
+              "search": {"alpha": 1.1, "beta": 5, "unchanged_limit": 42}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.machines, 2);
+        assert_eq!(c.cluster.gpus_per_machine, 8); // from preset b
+        assert!((c.cluster.nic_bw - 25e9).abs() < 1.0);
+        assert_eq!(c.device.spec.peak_flops, 10.0e12);
+        assert_eq!(c.search.alpha, 1.1);
+        assert_eq!(c.search.beta, 5);
+        assert_eq!(c.search.unchanged_limit, 42);
+    }
+
+    #[test]
+    fn bad_preset_rejected() {
+        assert!(Config::from_json_str(r#"{"cluster": {"preset": "zzz"}}"#).is_err());
+        assert!(Config::from_json_str("not json").is_err());
+    }
+}

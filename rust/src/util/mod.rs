@@ -1,0 +1,11 @@
+//! Small in-tree substitutes for crates unavailable in the airgapped build
+//! (rand, serde_json, clap, criterion, proptest) plus shared numerics.
+
+pub mod config;
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod prop;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,92 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! seed and case index so the exact counterexample is reproducible with
+//! `Rng::new(seed)`. Used for the invariants listed in DESIGN.md §7
+//! (fusion legality, simulator bounds, coordinator routing/batching).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xD15C0 }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    /// Property does not apply to this input; does not count as a pass.
+    Discard,
+    Fail(String),
+}
+
+/// Run `property` over `cfg.cases` random cases. Each case receives a
+/// deterministic per-case RNG. Panics (failing the test) on the first
+/// failure, printing seed + case index.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, cfg: PropConfig, mut property: F) {
+    let mut passed = 0usize;
+    let mut discarded = 0usize;
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        match property(&mut rng) {
+            CaseResult::Pass => passed += 1,
+            CaseResult::Discard => discarded += 1,
+            CaseResult::Fail(msg) => panic!(
+                "property '{name}' FAILED at case {case} (seed {case_seed:#x}): {msg}"
+            ),
+        }
+    }
+    assert!(
+        passed > cfg.cases / 2,
+        "property '{name}': too many discards ({discarded}/{})",
+        cfg.cases
+    );
+}
+
+/// Assert-style helper producing a CaseResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return $crate::util::prop::CaseResult::Fail(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", PropConfig::default(), |rng| {
+            let a = rng.gen_range(1000) as i64;
+            let b = rng.gen_range(1000) as i64;
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            CaseResult::Pass
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "FAILED")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", PropConfig { cases: 8, seed: 1 }, |_rng| {
+            CaseResult::Fail("nope".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn discard_heavy_property_rejected() {
+        check("all-discard", PropConfig { cases: 8, seed: 1 }, |_rng| CaseResult::Discard);
+    }
+}

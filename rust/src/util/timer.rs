@@ -1,0 +1,122 @@
+//! Micro-benchmark timing harness (criterion is unavailable offline).
+//!
+//! Used by `rust/benches/*` (with `harness = false`) and by the §Perf pass:
+//! warmup, fixed-duration sampling, mean/p50/p99 reporting.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` duration of warmup, then sample batches for
+/// `measure` duration (at least 10 samples). Each sample times one call.
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+    }
+    // Measure.
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < measure || samples.len() < 10 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        mean_ns: mean,
+        p50_ns: samples[samples.len() / 2],
+        p99_ns: samples[(samples.len() as f64 * 0.99) as usize % samples.len()],
+        min_ns: samples[0],
+    }
+}
+
+/// Convenience wrapper with default durations, printing the report line.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_millis(200), Duration::from_millis(800), f);
+    println!("{}", r.report());
+    r
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench(
+            "spin",
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            || {
+                let mut s = 0u64;
+                for i in 0..1000 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            },
+        );
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

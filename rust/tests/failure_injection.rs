@@ -1,0 +1,150 @@
+//! Failure injection: the system must reject corrupt inputs loudly rather
+//! than proceed wrongly (DESIGN.md §7).
+
+use disco::coordinator::messages::Msg;
+use disco::graph::TrainingGraph;
+use disco::runtime::Manifest;
+use disco::util::json::Json;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+
+#[test]
+fn worker_rejects_corrupt_strategy() {
+    // A leader that sends an invalid graph must get an error, not an ack.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let leader = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let hello = Msg::recv(&mut s).unwrap();
+        assert!(matches!(hello, Msg::Hello { .. }));
+        // Graph with a dangling input.
+        Msg::Strategy {
+            graph_json: r#"{"name":"bad","num_workers":2,"nodes":[
+                {"id":0,"name":"x","kind":"mul","role":"fwd","inputs":[5],
+                 "oinputs":[5],"shape":[4],"dtype":"f32","flops":1,"bin":1,
+                 "bout":1,"deleted":false}]}"#
+                .to_string(),
+        }
+        .send(&mut s)
+        .unwrap();
+        // Worker should hang up with an error, not ack.
+        Msg::recv(&mut s)
+    });
+    let res = disco::coordinator::run_worker(
+        &addr.to_string(),
+        0,
+        &disco::device::DeviceModel::gtx1080ti(),
+        &disco::network::Cluster::cluster_a(),
+    );
+    assert!(res.is_err(), "worker accepted a corrupt strategy");
+    let leader_saw = leader.join().unwrap();
+    assert!(leader_saw.is_err(), "leader received an unexpected ack");
+}
+
+#[test]
+fn oversized_frame_rejected() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let t = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // Claim a 1 GiB frame.
+        s.write_all(&(1u32 << 30).to_be_bytes()).unwrap();
+        s.write_all(b"xxxx").unwrap();
+    });
+    let mut c = TcpStream::connect(addr).unwrap();
+    assert!(Msg::recv(&mut c).is_err());
+    t.join().unwrap();
+}
+
+#[test]
+fn manifest_missing_and_corrupt() {
+    let dir = std::env::temp_dir().join(format!("disco-missing-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    assert!(Manifest::load(&dir).is_err(), "no manifest.json");
+    std::fs::write(dir.join("manifest.json"), "{broken").unwrap();
+    assert!(Manifest::load(&dir).is_err(), "corrupt manifest.json");
+    std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.artifact("nope").is_err(), "unknown artifact");
+    // Truncated f32 file (length not /4).
+    std::fs::write(dir.join("p.f32"), [0u8; 7]).unwrap();
+    assert!(m.load_f32("p.f32").is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn graph_json_attack_surfaces() {
+    // Cycles, bad enums, truncated docs — all must fail cleanly.
+    for bad in [
+        "",                       // empty
+        "[1,2,3]",                // wrong top-level type
+        r#"{"name":"x"}"#,        // missing fields
+        r#"{"name":"x","num_workers":1,"nodes":[{"id":0,"name":"n","kind":"NOTAKIND","role":"fwd","inputs":[],"oinputs":[],"shape":[1],"dtype":"f32","flops":0,"bin":0,"bout":0,"deleted":false}]}"#,
+    ] {
+        assert!(TrainingGraph::from_json(bad).is_err(), "{bad:.40}");
+    }
+    // Cycle: 0 <-> 1.
+    let cyc = r#"{"name":"c","num_workers":1,"nodes":[
+      {"id":0,"name":"a","kind":"mul","role":"fwd","inputs":[1],"oinputs":[1],"shape":[1],"dtype":"f32","flops":0,"bin":0,"bout":0,"deleted":false},
+      {"id":1,"name":"b","kind":"mul","role":"fwd","inputs":[0],"oinputs":[0],"shape":[1],"dtype":"f32","flops":0,"bin":0,"bout":0,"deleted":false}]}"#;
+    assert!(TrainingGraph::from_json(cyc).is_err());
+}
+
+#[test]
+fn json_parser_fuzz_never_panics() {
+    // Mutate a valid document at every byte; parser must return (not panic).
+    let base = r#"{"a":[1,2.5,{"b":"x"},null,true],"c":"A\n"}"#;
+    let bytes = base.as_bytes();
+    for i in 0..bytes.len() {
+        for repl in [b'{', b'}', b'"', b'\\', b'0', b' ', 0xFFu8] {
+            let mut m = bytes.to_vec();
+            m[i] = repl;
+            if let Ok(s) = String::from_utf8(m) {
+                let _ = Json::parse(&s); // Ok or Err — both fine
+            }
+        }
+    }
+}
+
+#[test]
+fn estimator_handles_unprofiled_nodes() {
+    // A graph node the profile has never seen gets the bandwidth fallback,
+    // not a zero (which would corrupt the search).
+    use disco::estimator::CostEstimator;
+    use disco::graph::builder::GraphBuilder;
+    use disco::graph::{OpKind, Role};
+    use disco::sim::CostSource;
+
+    let mut b = GraphBuilder::new("t", 2);
+    let x = b.constant("x", &[1024]);
+    b.compute(OpKind::Mul, "m", &[x], &[1024], Role::Forward);
+    let g = b.finish();
+    let prof = disco::profiler::profile(
+        &g,
+        &disco::device::DeviceModel::gtx1080ti(),
+        &disco::network::Cluster::cluster_a(),
+        1,
+        1,
+    );
+    // New node appended after profiling.
+    let mut g2 = g.clone();
+    // (no builder needed; append the node manually)
+    let id = g2.push(disco::graph::Node {
+        id: 0,
+        name: "late".into(),
+        kind: OpKind::Tanh,
+        role: Role::Forward,
+        inputs: vec![1],
+        orig_inputs: vec![1],
+        shape: disco::graph::Shape::new(&[1024]),
+        dtype: disco::graph::DType::F32,
+        flops: 1024.0,
+        bytes_in: 4096.0,
+        bytes_out: 4096.0,
+        fused: None,
+        ar_constituents: vec![],
+        deleted: false,
+    });
+    let est = CostEstimator::analytical(&prof, &disco::network::Cluster::cluster_a());
+    assert!(est.compute_time_ms(&g2.nodes[id]) > 0.0);
+}

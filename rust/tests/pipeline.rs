@@ -1,0 +1,140 @@
+//! Integration: the full DisCo pipeline (model → profile → search →
+//! simulate) across the paper's six models, plus the baseline comparisons
+//! the evaluation section is built on — at reduced scale.
+
+use disco::baselines;
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::models::{build, ModelKind, ModelSpec};
+use disco::network::Cluster;
+use disco::profiler::profile;
+use disco::search::{backtracking_search, SearchConfig};
+use disco::sim::{fo_bound, simulate, SimOptions};
+
+fn small(kind: ModelKind) -> ModelSpec {
+    ModelSpec { kind, batch: 8, depth_scale: 0.25 }
+}
+
+#[test]
+fn disco_beats_or_matches_every_baseline_on_every_model() {
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::cluster_a();
+    for kind in ModelKind::ALL {
+        let g = build(&small(kind), cluster.num_devices());
+        let prof = profile(&g, &device, &cluster, 2, 42);
+        let est = CostEstimator::oracle(&prof, &device);
+        let opts = SimOptions::default();
+
+        let cost = |graph: &disco::graph::TrainingGraph| simulate(graph, &est, opts).makespan_ms;
+        let baselines = [
+            ("no_fusion", baselines::no_fusion(&g)),
+            ("xla_op_fusion", baselines::xla_op_fusion(&g)),
+            ("ar_fusion", baselines::ar_threshold_fusion(&g, baselines::XLA_AR_THRESHOLD)),
+            ("jax_default", baselines::jax_default(&g)),
+            ("ddp", baselines::pytorch_ddp(&g)),
+        ];
+        let best_baseline = baselines
+            .iter()
+            .map(|(n, bg)| (cost(bg), *n))
+            .fold((f64::INFINITY, ""), |acc, x| if x.0 < acc.0 { x } else { acc });
+
+        let cfg = SearchConfig { unchanged_limit: 120, max_queue: 64, seed: 7, ..Default::default() };
+        let result = backtracking_search(&g, &est, &cfg);
+
+        // DisCo must be at least as good as the best baseline (small slack
+        // for the tiny search budget), and above the FO lower bound.
+        assert!(
+            result.best_cost_ms <= best_baseline.0 * 1.05,
+            "{}: disco={:.3} vs best baseline {}={:.3}",
+            kind.name(),
+            result.best_cost_ms,
+            best_baseline.1,
+            best_baseline.0
+        );
+        // FO is a per-graph lower bound; op fusion legitimately reduces
+        // total compute, so bound against the *optimized* graph.
+        let fo = fo_bound(&result.best, &est);
+        assert!(
+            result.best_cost_ms >= fo * 0.999,
+            "{}: below FO bound?! {:.3} < {:.3}",
+            kind.name(),
+            result.best_cost_ms,
+            fo
+        );
+    }
+}
+
+#[test]
+fn fusion_strategies_keep_semantics() {
+    // Applying any baseline or the search must conserve gradient bytes
+    // and represented (non-duplicated) op count.
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::cluster_a();
+    let g = build(&small(ModelKind::Transformer), 12);
+    let grad_bytes = g.total_gradient_bytes();
+    let repr = g.represented_ops();
+
+    for (name, bg) in [
+        ("xla", baselines::xla_op_fusion(&g)),
+        ("jax_default", baselines::jax_default(&g)),
+        ("ddp", baselines::pytorch_ddp(&g)),
+        ("tvm", baselines::tvm_rule_fusion(&g)),
+        ("ngraph", baselines::ngraph_fusion(&g)),
+    ] {
+        assert!(bg.validate().is_ok(), "{name}");
+        assert!((bg.total_gradient_bytes() - grad_bytes).abs() < 1.0, "{name}");
+        assert_eq!(bg.represented_ops(), repr, "{name}");
+    }
+
+    let prof = profile(&g, &device, &cluster, 2, 1);
+    let est = CostEstimator::oracle(&prof, &device);
+    let cfg = SearchConfig { unchanged_limit: 60, seed: 11, ..Default::default() };
+    let r = backtracking_search(&g, &est, &cfg);
+    assert!((r.best.total_gradient_bytes() - grad_bytes).abs() < 1.0);
+    // Duplicate fusion may add recomputation but never loses represented ops.
+    assert!(r.best.represented_ops() >= repr);
+}
+
+#[test]
+fn overlap_improves_with_disco() {
+    // §6.3: DisCo should raise the overlap ratio vs naive op fusion on a
+    // communication-bound model.
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::cluster_a();
+    let g = build(&small(ModelKind::Vgg19), 12);
+    let prof = profile(&g, &device, &cluster, 2, 13);
+    let est = CostEstimator::oracle(&prof, &device);
+    let opts = SimOptions::default();
+
+    let fused = baselines::xla_op_fusion(&g);
+    let r_fused = simulate(&fused, &est, opts);
+    let cfg = SearchConfig { unchanged_limit: 120, seed: 5, ..Default::default() };
+    let r = backtracking_search(&g, &est, &cfg);
+    let r_disco = simulate(&r.best, &est, opts);
+    assert!(
+        r_disco.makespan_ms <= r_fused.makespan_ms,
+        "disco {:.2} vs xla {:.2}",
+        r_disco.makespan_ms,
+        r_fused.makespan_ms
+    );
+}
+
+#[test]
+fn strategy_roundtrips_through_serialization() {
+    // The enactment wire format must preserve the optimized module.
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::cluster_a();
+    let g = build(&small(ModelKind::ResNet50), 12);
+    let prof = profile(&g, &device, &cluster, 1, 2);
+    let est = CostEstimator::oracle(&prof, &device);
+    let cfg = SearchConfig { unchanged_limit: 40, seed: 21, ..Default::default() };
+    let r = backtracking_search(&g, &est, &cfg);
+    let json = r.best.to_json();
+    let back = disco::graph::TrainingGraph::from_json(&json).unwrap();
+    assert_eq!(back.fingerprint(), r.best.fingerprint());
+    let opts = SimOptions::default();
+    assert_eq!(
+        simulate(&back, &est, opts).makespan_ms,
+        simulate(&r.best, &est, opts).makespan_ms
+    );
+}

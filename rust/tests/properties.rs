@@ -1,0 +1,241 @@
+//! Property tests (in-tree harness, DESIGN.md §7): invariants over random
+//! graphs, fusion sequences, simulation, collectives and the coordinator.
+
+use disco::collective::run_workers;
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::fusion::{self, FusionKind};
+use disco::graph::builder::GraphBuilder;
+use disco::graph::{OpKind, Role, TrainingGraph};
+use disco::network::Cluster;
+use disco::prop_assert;
+use disco::sim::{fo_bound, simulate, CostSource, SimOptions};
+use disco::util::prop::{check, CaseResult, PropConfig};
+use disco::util::rng::Rng;
+
+/// Random layered DAG with gradients + AllReduces, structurally similar to
+/// a BP graph.
+fn random_graph(rng: &mut Rng) -> TrainingGraph {
+    let layers = rng.gen_range_inclusive(2, 6);
+    let width = rng.gen_range_inclusive(1, 4);
+    let mut b = GraphBuilder::new("prop", rng.gen_range_inclusive(2, 16));
+    let mut prev: Vec<usize> = vec![b.constant("x", &[256])];
+    let kinds = [OpKind::Mul, OpKind::Add, OpKind::Tanh, OpKind::Sigmoid, OpKind::MatMul, OpKind::Reduce];
+    for l in 0..layers {
+        let mut cur = Vec::new();
+        for w in 0..width {
+            let k = *rng.choose(&kinds).unwrap();
+            // 1-2 inputs from the previous layer.
+            let mut ins = vec![prev[rng.gen_range(prev.len())]];
+            if rng.gen_bool(0.4) {
+                let extra = prev[rng.gen_range(prev.len())];
+                if !ins.contains(&extra) {
+                    ins.push(extra);
+                }
+            }
+            let dims = [256usize >> rng.gen_range(3)];
+            let id = b.compute(k, &format!("l{l}w{w}"), &ins, &dims, if l >= layers / 2 { Role::Backward } else { Role::Forward }, );
+            cur.push(id);
+        }
+        prev = cur;
+    }
+    // Gradient sync for a random subset of backward nodes.
+    let g = b.graph().clone();
+    let bwd: Vec<usize> = g
+        .live()
+        .filter(|n| n.role == Role::Backward)
+        .map(|n| n.id)
+        .collect();
+    for (i, &id) in bwd.iter().enumerate() {
+        if rng.gen_bool(0.7) {
+            let dims: Vec<usize> = b.graph().nodes[id].shape.dims.clone();
+            let p = b.param(&format!("w{i}"), &dims);
+            let ar = b.allreduce(&format!("ar{i}"), id, &dims);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+        }
+    }
+    b.finish()
+}
+
+/// Apply a random sequence of fusion rewrites; returns how many succeeded.
+fn random_rewrites(g: &mut TrainingGraph, rng: &mut Rng, tries: usize) -> usize {
+    let mut applied = 0;
+    for _ in 0..tries {
+        if rng.gen_bool(0.6) {
+            let cands = fusion::op_fusion_candidates(g);
+            if let Some(&(p, s)) = rng.choose(&cands) {
+                let kind = if rng.gen_bool(0.5) {
+                    FusionKind::NonDuplicate
+                } else {
+                    FusionKind::Duplicate
+                };
+                if fusion::fuse_ops(g, p, s, kind).is_ok() {
+                    applied += 1;
+                }
+            }
+        } else {
+            let ars = g.allreduces();
+            if let Some(&a) = rng.choose(&ars) {
+                let nbrs = fusion::ar_neighbors(g, a);
+                if let Some(&bb) = rng.choose(&nbrs) {
+                    if fusion::fuse_allreduce(g, a, bb).is_ok() {
+                        applied += 1;
+                    }
+                }
+            }
+        }
+    }
+    applied
+}
+
+#[test]
+fn prop_fusion_preserves_acyclicity_and_bytes() {
+    check("fusion-invariants", PropConfig { cases: 96, seed: 0xAB1 }, |rng| {
+        let mut g = random_graph(rng);
+        let bytes = g.total_gradient_bytes();
+        let repr = g.represented_ops();
+        random_rewrites(&mut g, rng, 12);
+        prop_assert!(g.validate().is_ok(), "graph invalid after rewrites");
+        prop_assert!(
+            (g.total_gradient_bytes() - bytes).abs() < 1e-6,
+            "gradient bytes changed: {} -> {}",
+            bytes,
+            g.total_gradient_bytes()
+        );
+        prop_assert!(
+            g.represented_ops() >= repr,
+            "represented ops lost: {} -> {}",
+            repr,
+            g.represented_ops()
+        );
+        CaseResult::Pass
+    });
+}
+
+struct Unit;
+
+impl CostSource for Unit {
+    fn compute_time_ms(&self, _n: &disco::graph::Node) -> f64 {
+        0.5
+    }
+    fn comm_time_ms(&self, bytes: f64) -> f64 {
+        0.1 + bytes * 1e-7
+    }
+}
+
+#[test]
+fn prop_sim_bounded_by_fo_and_serial_sum() {
+    check("sim-bounds", PropConfig { cases: 96, seed: 0xB0B }, |rng| {
+        let mut g = random_graph(rng);
+        random_rewrites(&mut g, rng, 6);
+        let r = simulate(&g, &Unit, SimOptions::default());
+        let fo = fo_bound(&g, &Unit);
+        prop_assert!(r.makespan_ms >= fo - 1e-9, "makespan {} < FO {}", r.makespan_ms, fo);
+        prop_assert!(
+            r.makespan_ms <= r.comp_busy_ms + r.comm_busy_ms + 1e-9,
+            "makespan {} > serial {}",
+            r.makespan_ms,
+            r.comp_busy_ms + r.comm_busy_ms
+        );
+        prop_assert!(r.overlap_ratio() >= 1.0 - 1e-9, "overlap < 1");
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_sim_monotone_in_comm_cost() {
+    struct Scaled(f64);
+    impl CostSource for Scaled {
+        fn compute_time_ms(&self, _n: &disco::graph::Node) -> f64 {
+            0.5
+        }
+        fn comm_time_ms(&self, bytes: f64) -> f64 {
+            self.0 * (0.1 + bytes * 1e-7)
+        }
+    }
+    check("sim-monotone-comm", PropConfig { cases: 64, seed: 0xC0C }, |rng| {
+        let g = random_graph(rng);
+        let cheap = simulate(&g, &Scaled(1.0), SimOptions::default());
+        let pricey = simulate(&g, &Scaled(3.0), SimOptions::default());
+        prop_assert!(
+            pricey.makespan_ms >= cheap.makespan_ms - 1e-9,
+            "3x comm got faster: {} vs {}",
+            pricey.makespan_ms,
+            cheap.makespan_ms
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_estimator_cache_consistent() {
+    // Cached and uncached evaluation of the same graph agree.
+    check("estimator-cache", PropConfig { cases: 32, seed: 0xD0D }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let mut g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        random_rewrites(&mut g, rng, 8);
+        let est = CostEstimator::oracle(&prof, &device);
+        let a = simulate(&g, &est, SimOptions::default()).makespan_ms;
+        est.warm_cache(&g);
+        let b = simulate(&g, &est, SimOptions::default()).makespan_ms;
+        prop_assert!((a - b).abs() < 1e-9, "cache changed cost: {a} vs {b}");
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_allreduce_equals_local_average() {
+    check("collective-average", PropConfig { cases: 24, seed: 0xE0E }, |rng| {
+        let world = rng.gen_range_inclusive(1, 6);
+        let len = rng.gen_range_inclusive(1, 300);
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|w| {
+                let mut r = Rng::new(rng.next_u64() ^ w as u64);
+                (0..len).map(|_| (r.gen_f64() * 4.0 - 2.0) as f32).collect()
+            })
+            .collect();
+        let mut expect = vec![0.0f32; len];
+        for inp in &inputs {
+            for (e, x) in expect.iter_mut().zip(inp) {
+                *e += *x / world as f32;
+            }
+        }
+        let inputs2 = inputs.clone();
+        let results = run_workers(world, move |peer| {
+            let mut d = inputs2[peer.rank].clone();
+            peer.allreduce_mean(&mut d);
+            d
+        });
+        for r in &results {
+            for (a, e) in r.iter().zip(&expect) {
+                prop_assert!((a - e).abs() < 1e-4, "allreduce mismatch: {a} vs {e}");
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_coordinator_consistent_broadcast() {
+    // Every worker acks the same fingerprint the leader computed, for
+    // arbitrary (searched or raw) strategies.
+    check("coordinator-broadcast", PropConfig { cases: 12, seed: 0xF0F }, |rng| {
+        let mut g = random_graph(rng);
+        random_rewrites(&mut g, rng, 5);
+        let cfg = disco::coordinator::EnactConfig {
+            world: rng.gen_range_inclusive(1, 4),
+            iterations: 1,
+            ..Default::default()
+        };
+        match disco::coordinator::enact(&g, &cfg) {
+            Ok(report) => {
+                prop_assert!(report.acks == cfg.world, "acks {} != {}", report.acks, cfg.world);
+                prop_assert!(report.per_rank.len() == cfg.world, "missing reports");
+                CaseResult::Pass
+            }
+            Err(e) => CaseResult::Fail(format!("enact failed: {e}")),
+        }
+    });
+}

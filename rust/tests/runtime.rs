@@ -1,0 +1,181 @@
+//! Integration: the Rust PJRT runtime executing the AOT artifacts.
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use disco::device::DeviceModel;
+use disco::estimator::{AnalyticalFused, FusedOpEstimator};
+use disco::graph::{FusedGroup, OpKind, OrigOp};
+use disco::network::Cluster;
+use disco::profiler;
+use disco::runtime::gnn::{GnnPredictor, GnnTrainer};
+use disco::runtime::trainer::{train_distributed, Corpus, TrainConfig};
+use disco::runtime::{lit_f32, lit_i32, lit_scalar, lit_to_f32, Manifest, Runtime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn fallback() -> AnalyticalFused {
+    AnalyticalFused { launch_ms: 0.005, bw_bytes_per_ms: 4.8e8 }
+}
+
+fn chain_group(n: usize, time_ms: f64) -> FusedGroup {
+    FusedGroup {
+        ops: (0..n)
+            .map(|i| OrigOp {
+                orig_id: i,
+                kind: OpKind::Mul,
+                flops: 1e6,
+                bytes_in: 4e5,
+                bytes_out: 4e5,
+                time_ms,
+                duplicated: false,
+            })
+            .collect(),
+        edges: (1..n).map(|i| (i - 1, i)).collect(),
+    }
+}
+
+#[test]
+fn gnn_infer_artifact_runs_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let pred = GnnPredictor::load(&rt, fallback()).unwrap();
+    let items: Vec<(FusedGroup, f64, f64)> =
+        (2..10).map(|n| (chain_group(n, 0.05), 4e5, 4e5)).collect();
+    let a = pred.predict(&items).unwrap();
+    let b = pred.predict(&items).unwrap();
+    assert_eq!(a, b);
+    assert!(a.iter().all(|&t| t > 0.0), "{a:?}");
+}
+
+#[test]
+fn gnn_oversized_group_uses_fallback() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let pred = GnnPredictor::load(&rt, fallback()).unwrap();
+    let big = chain_group(100, 0.05); // > MAX_NODES
+    let t = pred.estimate_ms(&big, 4e5, 4e5);
+    let expect = fallback().estimate_ms(&big, 4e5, 4e5);
+    assert!((t - expect).abs() < 1e-12);
+}
+
+#[test]
+fn gnn_training_reduces_loss_via_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Real pipeline: profile a graph, generate fused samples, train the
+    // GNN through the exported train-step artifact.
+    let g = disco::models::build(
+        &disco::models::ModelSpec {
+            kind: disco::models::ModelKind::Rnnlm,
+            batch: 16,
+            depth_scale: 0.2,
+        },
+        4,
+    );
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::cluster_a();
+    let prof = profiler::profile(&g, &device, &cluster, 2, 11);
+    let samples = profiler::generate_fused_samples(&g, &device, &prof, 192, 16, 17);
+    assert!(samples.len() >= 128);
+
+    // Hold out the tail for evaluation.
+    let (train, held) = samples.split_at(samples.len() - 32);
+
+    let rt = Runtime::new(&dir).unwrap();
+    let mut trainer = GnnTrainer::new(&rt).unwrap();
+    let initial_params = trainer.params.clone();
+    let losses = trainer.train(train, 8).unwrap();
+    let head: f64 = losses[..3].iter().sum::<f64>() / 3.0;
+    let tail: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+    assert!(
+        tail < head * 0.8,
+        "GNN loss did not fall: head={head:.4} tail={tail:.4}"
+    );
+
+    // Training must improve held-out log-error vs the untrained net.
+    let log_err = |params: Vec<f32>| -> f64 {
+        let pred = GnnPredictor::with_params(&rt, params, fallback()).unwrap();
+        let items: Vec<_> =
+            held.iter().map(|s| (s.group.clone(), s.bytes_in, s.bytes_out)).collect();
+        let out = pred.predict(&items).unwrap();
+        out.iter()
+            .zip(held)
+            .map(|(p, s)| (p.max(1e-5).ln() - s.label_ms.max(1e-5).ln()).abs())
+            .sum::<f64>()
+            / held.len() as f64
+    };
+    let before = log_err(initial_params);
+    let after = log_err(trainer.params.clone());
+    assert!(after < before * 0.8, "held-out log-err {before:.3} -> {after:.3}");
+}
+
+#[test]
+fn lm_grads_and_adam_artifacts_train() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let grads_exe = rt.load("lm_grads").unwrap();
+    let adam_exe = rt.load("lm_adam").unwrap();
+    let lm = rt.manifest.raw.get("lm");
+    let flat_len = lm.get("flat_len").as_usize().unwrap();
+    let batch = lm.get("batch").as_usize().unwrap();
+    let seq = lm.get("seq").as_usize().unwrap();
+    let mut params = rt
+        .manifest
+        .load_f32(lm.get("params").as_str().unwrap())
+        .unwrap();
+    assert_eq!(params.len(), flat_len);
+
+    let corpus = Corpus::synthetic(1 << 14, 3);
+    let mut m = vec![0.0f32; flat_len];
+    let mut v = vec![0.0f32; flat_len];
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=30 {
+        let tokens = corpus.batch(batch, seq, 0, 1, step);
+        let out = grads_exe
+            .run(&[
+                lit_f32(&params, &[flat_len]).unwrap(),
+                lit_i32(&tokens, &[batch, seq + 1]).unwrap(),
+            ])
+            .unwrap();
+        let loss = lit_scalar(&out[0]).unwrap() as f64;
+        let grad = lit_to_f32(&out[1]).unwrap();
+        let out = adam_exe
+            .run(&[
+                lit_f32(&params, &[flat_len]).unwrap(),
+                lit_f32(&grad, &[flat_len]).unwrap(),
+                lit_f32(&m, &[flat_len]).unwrap(),
+                lit_f32(&v, &[flat_len]).unwrap(),
+                lit_f32(&[step as f32], &[1]).unwrap(),
+            ])
+            .unwrap();
+        params = lit_to_f32(&out[0]).unwrap();
+        m = lit_to_f32(&out[1]).unwrap();
+        v = lit_to_f32(&out[2]).unwrap();
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(last < first, "loss did not fall: {first} -> {last}");
+}
+
+#[test]
+fn distributed_training_replicas_stay_synchronized() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = TrainConfig { artifacts: dir, world: 2, steps: 8, eval_every: 4, seed: 5 };
+    let res = train_distributed(&cfg).unwrap();
+    assert_eq!(res.log.len(), 8);
+    // Losses are finite and generally trending down over a short run.
+    assert!(res.log.iter().all(|l| l.loss.is_finite()));
+    assert!(res.log.last().unwrap().loss < res.log[0].loss * 1.05);
+    // Eval happened.
+    assert!(res.log.iter().any(|l| l.eval_loss.is_some()));
+}
