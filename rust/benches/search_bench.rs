@@ -1,7 +1,13 @@
 //! L3 end-to-end: backtracking-search throughput (evals/s) and one
 //! fixed-budget search per representative model — the engineering numbers
-//! behind Tables 3/4's search-time column.
+//! behind Tables 3/4's search-time column — plus the hot-path A/B record:
+//! the same search run with the pre-refactor engine behavior (eager
+//! full-clone arena, fresh scratch per eval, candidate re-enumeration per
+//! mutation, serial eval) versus the current engine (delta-encoded
+//! candidates, reused workspaces, incremental candidate pool, parallel
+//! eval). Writes `BENCH_search.json` at the repo root.
 
+use disco::bench::{write_search_perf_record, BenchOptions, Scale};
 use disco::device::DeviceModel;
 use disco::estimator::CostEstimator;
 use disco::models::{build, ModelKind, ModelSpec};
@@ -28,12 +34,38 @@ fn main() {
         let dt = start.elapsed().as_secs_f64();
         let (hits, misses) = est.cache_stats();
         println!(
-            "search/{name:<18} {:>6} evals in {dt:>6.2}s = {:>7.0} evals/s   {:.2} -> {:.2} ms   cache {hits}h/{misses}m",
+            "search/{name:<18} {:>6} evals in {dt:>6.2}s = {:>7.0} evals/s   {:.2} -> {:.2} ms   arena peak {:.2} MB   cache {hits}h/{misses}m",
             r.evals,
             r.evals as f64 / dt,
             r.initial_cost_ms,
             r.best_cost_ms,
+            r.peak_arena_bytes as f64 / 1e6,
         );
         black_box(r);
+    }
+
+    // Hot-path A/B on the acceptance workload (transformer_base, 12
+    // workers) → BENCH_search.json at the repo root.
+    let opts = BenchOptions { scale: Scale::Full, ..Default::default() };
+    match write_search_perf_record(&opts) {
+        Ok((record, path)) => {
+            for (tag, m) in [("before", &record.before), ("after", &record.after)] {
+                println!(
+                    "hotpath/{tag:<7} {:>6} evals in {:>6.2}s = {:>7.0} evals/s   arena peak {:.2} MB   best {:.2} ms",
+                    m.evals,
+                    m.seconds,
+                    m.evals_per_sec,
+                    m.peak_arena_bytes as f64 / 1e6,
+                    m.best_cost_ms,
+                );
+            }
+            println!(
+                "hotpath ratio: {:.2}x evals/s, {:.2}x smaller arena  -> {}",
+                record.throughput_ratio(),
+                record.arena_ratio(),
+                path.display()
+            );
+        }
+        Err(e) => eprintln!("failed to write BENCH_search.json: {e}"),
     }
 }

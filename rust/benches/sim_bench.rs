@@ -1,6 +1,8 @@
 //! L3 hot path: cost-model simulation throughput (`Cost(H)` is called
 //! thousands of times per search — DESIGN.md §8 target ≥ 10k simulated
-//! ops/ms).
+//! ops/ms), measured both the pre-refactor way (fresh scratch allocations
+//! + adjacency per call) and with the reused [`SimWorkspace`] + cached
+//! CSR adjacency the search actually uses.
 
 use disco::device::DeviceModel;
 use disco::estimator::CostEstimator;
@@ -8,7 +10,7 @@ use disco::models::{build, ModelKind, ModelSpec};
 use disco::network::Cluster;
 use disco::profiler::profile;
 use disco::sim::hifi::{execute_real, HifiOptions};
-use disco::sim::{simulate, SimOptions};
+use disco::sim::{simulate, simulate_in, NoRecord, SimOptions, SimWorkspace};
 use disco::util::timer::{bench_quick, black_box};
 
 fn main() {
@@ -20,15 +22,29 @@ fn main() {
         ("transformer-full", ModelSpec::transformer_base()),
         ("bert-full", ModelSpec::bert_base()),
     ] {
-        let g = build(&spec, cluster.num_devices());
+        let mut g = build(&spec, cluster.num_devices());
         let prof = profile(&g, &device, &cluster, 2, 1);
         let est = CostEstimator::oracle(&prof, &device);
         let ops = g.live_count();
-        let r = bench_quick(&format!("simulate/{name} ({ops} ops)"), || {
+
+        // Before: fresh workspace per call, adjacency rebuilt per call
+        // (the pre-refactor per-eval allocation profile).
+        let fresh = bench_quick(&format!("simulate/fresh-alloc/{name} ({ops} ops)"), || {
+            g.invalidate_adjacency();
             black_box(simulate(&g, &est, SimOptions::default()));
         });
-        let ops_per_ms = ops as f64 / (r.mean_ns / 1e6);
-        println!("  -> {ops_per_ms:.0} simulated ops/ms");
+
+        // After: reused workspace + cached CSR (the search hot path).
+        let mut ws = SimWorkspace::new();
+        let reused = bench_quick(&format!("simulate/reused-ws/{name} ({ops} ops)"), || {
+            black_box(simulate_in(&g, &est, SimOptions::default(), &mut NoRecord, &mut ws));
+        });
+
+        let ops_per_ms = ops as f64 / (reused.mean_ns / 1e6);
+        println!(
+            "  -> {ops_per_ms:.0} simulated ops/ms reused ({:.2}x vs fresh-alloc)",
+            fresh.mean_ns / reused.mean_ns
+        );
     }
 
     // Hi-fi execution (Table 2's "real run") — noisy, multi-iteration.

@@ -424,6 +424,44 @@ pub fn ext_parameter_server(opts: &BenchOptions) -> String {
     t.to_markdown()
 }
 
+/// §Perf — search hot-path A/B: evals/sec and peak candidate-arena bytes
+/// with the pre-refactor engine behavior (eager clone arena, per-eval
+/// scratch allocations, full candidate re-enumeration, serial eval)
+/// versus the current engine (delta candidates, reused workspaces,
+/// incremental candidate pool, parallel eval). Also writes
+/// `BENCH_search.json` at the repo root.
+pub fn perf_search(opts: &BenchOptions) -> String {
+    let (record, path) = match super::write_search_perf_record(opts) {
+        Ok(ok) => ok,
+        Err(e) => return format!("perf record failed to write: {e}\n"),
+    };
+    let mut t = Table::new(
+        &format!(
+            "§Perf — search hot path, {} on {} workers (budget {}, seed {:#x})",
+            record.model, record.workers, record.unchanged_limit, record.seed
+        ),
+        &["engine", "evals", "seconds", "evals/sec", "peak arena MB", "best (ms)"],
+    );
+    for (name, m) in [("before", &record.before), ("after", &record.after)] {
+        t.row(vec![
+            name.to_string(),
+            m.evals.to_string(),
+            format!("{:.2}", m.seconds),
+            format!("{:.0}", m.evals_per_sec),
+            format!("{:.2}", m.peak_arena_bytes as f64 / 1e6),
+            fmt_ms(m.best_cost_ms),
+        ]);
+    }
+    let mut out = t.to_markdown();
+    out.push_str(&format!(
+        "\nthroughput ratio: {:.2}x; arena ratio: {:.2}x; record: {}\n",
+        record.throughput_ratio(),
+        record.arena_ratio(),
+        path.display()
+    ));
+    out
+}
+
 /// Extension C — peak activation memory: fusion's memory benefit (paper
 /// §2.2 "eliminates device memory allocations for intermediate results")
 /// made measurable by the simulator's refcounting.

@@ -115,6 +115,7 @@ impl BenchOptions {
             methods: MethodSet::all(),
             sim: SimOptions::default(),
             seed: self.seed,
+            ..SearchConfig::default()
         }
     }
 
@@ -201,12 +202,168 @@ pub fn run_all_schemes(p: &Prepared, opts: &BenchOptions) -> (Vec<SchemeResult>,
             makespan_ms: fo,
             comp_busy_ms: 0.0,
             comm_busy_ms: 0.0,
+            comp_idle_ms: 0.0,
+            comm_idle_ms: 0.0,
             kernels: 0,
             allreduces: 0,
             peak_bytes: 0.0,
         },
     });
     (out, result)
+}
+
+// ---------------------------------------------------------------------------
+// Search hot-path A/B perf record (BENCH_search.json).
+// ---------------------------------------------------------------------------
+
+/// One engine configuration's measured throughput on the record workload.
+#[derive(Debug, Clone)]
+pub struct HotPathModeStats {
+    pub evals: u64,
+    pub steps: u64,
+    pub seconds: f64,
+    pub evals_per_sec: f64,
+    pub peak_arena_bytes: usize,
+    pub best_cost_ms: f64,
+}
+
+/// Before/after measurement of the search hot path on the acceptance
+/// workload (`transformer_base`, 12 workers — paper cluster A).
+/// "Before" pins the pre-refactor engine behavior through the
+/// [`SearchConfig`] toggles: eager full-clone arena, fresh scratch
+/// allocations per eval, full candidate re-enumeration per mutation,
+/// serial evaluation. "After" is the default engine.
+#[derive(Debug, Clone)]
+pub struct HotPathRecord {
+    pub model: &'static str,
+    pub workers: usize,
+    pub unchanged_limit: usize,
+    pub seed: u64,
+    pub before: HotPathModeStats,
+    pub after: HotPathModeStats,
+}
+
+impl HotPathRecord {
+    pub fn throughput_ratio(&self) -> f64 {
+        if self.before.evals_per_sec == 0.0 {
+            0.0
+        } else {
+            self.after.evals_per_sec / self.before.evals_per_sec
+        }
+    }
+
+    pub fn arena_ratio(&self) -> f64 {
+        if self.after.peak_arena_bytes == 0 {
+            0.0
+        } else {
+            self.before.peak_arena_bytes as f64 / self.after.peak_arena_bytes as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mode = |m: &HotPathModeStats| {
+            Json::obj(vec![
+                ("evals", Json::Num(m.evals as f64)),
+                ("steps", Json::Num(m.steps as f64)),
+                ("seconds", Json::Num(m.seconds)),
+                ("evals_per_sec", Json::Num(m.evals_per_sec)),
+                ("peak_arena_bytes", Json::Num(m.peak_arena_bytes as f64)),
+                ("best_cost_ms", Json::Num(m.best_cost_ms)),
+            ])
+        };
+        Json::obj(vec![
+            ("bench", Json::Str("search_hot_path".into())),
+            ("model", Json::Str(self.model.into())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("unchanged_limit", Json::Num(self.unchanged_limit as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("measured", Json::Bool(true)),
+            ("before", mode(&self.before)),
+            ("after", mode(&self.after)),
+            ("evals_per_sec_ratio", Json::Num(self.throughput_ratio())),
+            ("peak_arena_bytes_ratio", Json::Num(self.arena_ratio())),
+        ])
+    }
+}
+
+fn timed_search(
+    graph: &TrainingGraph,
+    est: &CostEstimator<'_>,
+    cfg: &SearchConfig,
+) -> HotPathModeStats {
+    let t = std::time::Instant::now();
+    let r = backtracking_search(graph, est, cfg);
+    let seconds = t.elapsed().as_secs_f64();
+    HotPathModeStats {
+        evals: r.evals,
+        steps: r.steps,
+        seconds,
+        evals_per_sec: if seconds > 0.0 { r.evals as f64 / seconds } else { 0.0 },
+        peak_arena_bytes: r.peak_arena_bytes,
+        best_cost_ms: r.best_cost_ms,
+    }
+}
+
+/// Measure the search hot path before/after on the acceptance workload.
+/// Always uses the *full* `transformer_base` spec (the record is about
+/// engine throughput, not CI speed); `opts.scale` only sizes the budget.
+pub fn search_hot_path_record(opts: &BenchOptions) -> HotPathRecord {
+    let cluster = Cluster::cluster_a();
+    let device = BenchOptions::device_for(&cluster);
+    let graph = models::build(&ModelSpec::transformer_base(), cluster.num_devices());
+    let profile = profiler::profile(&graph, &device, &cluster, 2, opts.seed);
+    let unchanged_limit = match opts.scale {
+        Scale::Full => 400,
+        Scale::Fast => 150,
+    };
+    let base = SearchConfig { unchanged_limit, seed: opts.seed, ..Default::default() };
+    let before_cfg = SearchConfig {
+        eval_threads: 1,
+        delta_candidates: false,
+        reuse_workspaces: false,
+        incremental_candidates: false,
+        ..base.clone()
+    };
+    // Fresh estimator (cold prediction memo) and fresh graph (cold CSR
+    // cache) per arm — sharing them would hand the second run a
+    // pre-warmed cache and bias the throughput ratio by run order.
+    let before = {
+        let est = CostEstimator::oracle(&profile, &device);
+        timed_search(&graph.clone(), &est, &before_cfg)
+    };
+    let after = {
+        let est = CostEstimator::oracle(&profile, &device);
+        timed_search(&graph.clone(), &est, &base)
+    };
+    HotPathRecord {
+        model: "transformer_base",
+        workers: cluster.num_devices(),
+        unchanged_limit,
+        seed: opts.seed,
+        before,
+        after,
+    }
+}
+
+/// Repository root (the parent of the `rust/` crate), resolved at compile
+/// time so the record lands in the same place regardless of cwd.
+pub fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
+}
+
+/// Run the A/B measurement and write `BENCH_search.json` at the repo root.
+/// Returns the record and the path written.
+pub fn write_search_perf_record(
+    opts: &BenchOptions,
+) -> std::io::Result<(HotPathRecord, std::path::PathBuf)> {
+    let record = search_hot_path_record(opts);
+    let path = repo_root().join("BENCH_search.json");
+    std::fs::write(&path, record.to_json().to_string())?;
+    Ok((record, path))
 }
 
 #[cfg(test)]

@@ -24,8 +24,9 @@ use crate::graph::{FusedGroup, Node, OpKind};
 use crate::network::{Cluster, CommModel};
 use crate::profiler::ProfileData;
 use crate::sim::CostSource;
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Strategy for predicting fused-op execution time.
 pub trait FusedOpEstimator {
@@ -94,25 +95,29 @@ impl FusedOpEstimator for OracleFused {
     }
 }
 
-/// The full cost model handed to the simulator.
+/// The full cost model handed to the simulator. `Sync`: the search's
+/// parallel candidate evaluation shares one estimator across worker
+/// threads, so the prediction memo is a `Mutex` and the stats are atomics
+/// (cached *values* are deterministic — only the hit/miss split varies
+/// with thread interleaving).
 pub struct CostEstimator<'a> {
     pub profile: &'a ProfileData,
     pub comm: CommModel,
-    pub fused: Box<dyn FusedOpEstimator + 'a>,
-    cache: RefCell<HashMap<u64, f64>>,
-    hits: RefCell<u64>,
-    misses: RefCell<u64>,
+    pub fused: Box<dyn FusedOpEstimator + Sync + 'a>,
+    cache: Mutex<HashMap<u64, f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl<'a> CostEstimator<'a> {
-    pub fn new(profile: &'a ProfileData, fused: Box<dyn FusedOpEstimator + 'a>) -> Self {
+    pub fn new(profile: &'a ProfileData, fused: Box<dyn FusedOpEstimator + Sync + 'a>) -> Self {
         CostEstimator {
             profile,
             comm: profile.comm,
             fused,
-            cache: RefCell::new(HashMap::new()),
-            hits: RefCell::new(0),
-            misses: RefCell::new(0),
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
     }
 
@@ -128,16 +133,19 @@ impl<'a> CostEstimator<'a> {
 
     /// (cache hits, misses) — perf metric for EXPERIMENTS.md §Perf.
     pub fn cache_stats(&self) -> (u64, u64) {
-        (*self.hits.borrow(), *self.misses.borrow())
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
     /// Batch-predict every not-yet-cached fused op of `graph` in one
     /// backend call (the search invokes this before each `Cost(H')`
     /// evaluation so GNN queries arrive in batches, not one-by-one).
+    /// The lock is dropped around the backend call; a concurrent thread
+    /// may redundantly predict the same signature, which is wasted work
+    /// but not a correctness issue (predictions are deterministic).
     pub fn warm_cache(&self, graph: &crate::graph::TrainingGraph) {
         let mut pending: Vec<(u64, (FusedGroup, f64, f64))> = Vec::new();
         {
-            let cache = self.cache.borrow();
+            let cache = self.cache.lock().unwrap();
             for n in graph.live() {
                 if let Some(group) = &n.fused {
                     let sig = group.signature();
@@ -155,25 +163,25 @@ impl<'a> CostEstimator<'a> {
         let items: Vec<(FusedGroup, f64, f64)> =
             pending.iter().map(|(_, it)| it.clone()).collect();
         let preds = self.fused.estimate_batch(&items);
-        let mut cache = self.cache.borrow_mut();
+        let mut cache = self.cache.lock().unwrap();
         for ((sig, _), t) in pending.into_iter().zip(preds) {
             cache.insert(sig, t);
         }
-        *self.misses.borrow_mut() += items.len() as u64;
+        self.misses.fetch_add(items.len() as u64, Ordering::Relaxed);
     }
 
     fn fused_time(&self, node: &Node) -> f64 {
         let group = node.fused.as_ref().expect("fused node without group");
         let sig = group.signature();
-        if let Some(&t) = self.cache.borrow().get(&sig) {
-            *self.hits.borrow_mut() += 1;
+        if let Some(&t) = self.cache.lock().unwrap().get(&sig) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
-        *self.misses.borrow_mut() += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let mut g = group.clone();
         self.profile.annotate_group(&mut g);
         let t = self.fused.estimate_ms(&g, node.bytes_in, node.bytes_out);
-        self.cache.borrow_mut().insert(sig, t);
+        self.cache.lock().unwrap().insert(sig, t);
         t
     }
 }

@@ -123,6 +123,21 @@ fn external_input_bytes(g: &TrainingGraph, inputs: &[NodeId]) -> f64 {
     inputs.iter().map(|&i| g.nodes[i].bytes_out).sum()
 }
 
+/// What a successful op-fusion rewrite did to the graph, beyond creating
+/// the fused node — enough for incremental maintenance of derived state
+/// (the search's [`CandidateSet`]) without rescanning the graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionEffects {
+    /// Id of the new fused node.
+    pub fused: NodeId,
+    /// Consumers whose input list was redirected to `fused` (deduped, in
+    /// ascending node-id order) — exactly the consumers of `fused`.
+    pub redirected: Vec<NodeId>,
+    /// Whether the predecessor was tombstoned (false only for duplicate
+    /// fusion that kept the replica live).
+    pub pred_deleted: bool,
+}
+
 /// Fuse predecessor `pred` into successor `succ`. Returns the id of the new
 /// fused node. See module docs for semantics of the two kinds.
 pub fn fuse_ops(
@@ -131,6 +146,16 @@ pub fn fuse_ops(
     succ: NodeId,
     kind: FusionKind,
 ) -> Result<NodeId, FusionError> {
+    fuse_ops_explain(g, pred, succ, kind).map(|fx| fx.fused)
+}
+
+/// [`fuse_ops`] returning the full [`FusionEffects`] record.
+pub fn fuse_ops_explain(
+    g: &mut TrainingGraph,
+    pred: NodeId,
+    succ: NodeId,
+    kind: FusionKind,
+) -> Result<FusionEffects, FusionError> {
     if pred == succ {
         return Err(FusionError::SelfFusion);
     }
@@ -225,16 +250,22 @@ pub fn fuse_ops(
     });
 
     // Redirect consumers.
+    let mut redirected: Vec<NodeId> = Vec::new();
     for n in 0..fused_id {
         if g.nodes[n].deleted {
             continue;
         }
         let redirect_pred = kind == FusionKind::NonDuplicate && n != succ;
+        let mut hit = false;
         for idx in 0..g.nodes[n].inputs.len() {
             let i = g.nodes[n].inputs[idx];
             if i == succ || (i == pred && redirect_pred) {
                 g.nodes[n].inputs[idx] = fused_id;
+                hit = true;
             }
+        }
+        if hit {
+            redirected.push(n);
         }
         // A consumer may now list the fused node twice (it consumed both
         // pred and succ); dedup to keep byte accounting sane.
@@ -252,12 +283,14 @@ pub fn fuse_ops(
 
     // Tombstones.
     g.nodes[succ].deleted = true;
-    if kind == FusionKind::NonDuplicate || !keep_pred_live {
+    let pred_deleted = kind == FusionKind::NonDuplicate || !keep_pred_live;
+    if pred_deleted {
         g.nodes[pred].deleted = true;
     }
 
+    g.invalidate_adjacency();
     debug_assert!(g.validate().is_ok(), "fusion broke the graph");
-    Ok(fused_id)
+    Ok(FusionEffects { fused: fused_id, redirected, pred_deleted })
 }
 
 /// Producer compute ops of an AllReduce (its live inputs).
@@ -388,6 +421,7 @@ pub fn fuse_allreduce(
     g.nodes[a].deleted = true;
     g.nodes[b].deleted = true;
 
+    g.invalidate_adjacency();
     debug_assert!(g.validate().is_ok(), "AR fusion broke the graph");
     Ok(fused_id)
 }
@@ -406,6 +440,102 @@ pub fn op_fusion_candidates(g: &TrainingGraph) -> Vec<(NodeId, NodeId)> {
         }
     }
     out
+}
+
+/// One applied rewrite, recorded with the exact operands that succeeded so
+/// it can be replayed deterministically on a copy of the same parent graph.
+/// This is the search's candidate *delta* encoding: a queued candidate is
+/// (parent index, `Vec<Mutation>`) instead of a full graph clone.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mutation {
+    FuseOps { pred: NodeId, succ: NodeId, kind: FusionKind },
+    FuseAllReduce { a: NodeId, b: NodeId },
+}
+
+impl Mutation {
+    /// Re-apply this rewrite. On the graph state it was recorded against
+    /// this cannot fail; an error means the caller replayed out of order.
+    pub fn replay(&self, g: &mut TrainingGraph) -> Result<NodeId, FusionError> {
+        match *self {
+            Mutation::FuseOps { pred, succ, kind } => fuse_ops(g, pred, succ, kind),
+            Mutation::FuseAllReduce { a, b } => fuse_allreduce(g, a, b),
+        }
+    }
+}
+
+/// The live rewrite-candidate pool of a graph — op-fusion (pred, succ)
+/// pairs plus live AllReduce ids — maintained *incrementally* across
+/// mutations instead of being re-enumerated from the graph after every
+/// application (the pre-refactor hot-path cost). Pair updates are O(pool)
+/// retains with zero allocation; correctness against a from-scratch
+/// rebuild is property-tested (`incremental_matches_rebuild`).
+#[derive(Debug, Clone, Default)]
+pub struct CandidateSet {
+    pairs: Vec<(NodeId, NodeId)>,
+    ars: Vec<NodeId>,
+}
+
+impl CandidateSet {
+    /// Enumerate from scratch.
+    pub fn build(g: &TrainingGraph) -> CandidateSet {
+        CandidateSet { pairs: op_fusion_candidates(g), ars: g.allreduces() }
+    }
+
+    /// Current op-fusion pairs. Order is deterministic but differs from
+    /// [`op_fusion_candidates`] once incremental updates have happened.
+    pub fn op_pairs(&self) -> &[(NodeId, NodeId)] {
+        &self.pairs
+    }
+
+    /// Current live AllReduce ids (ascending — fused ARs get the largest
+    /// arena id, so incremental maintenance preserves the sort).
+    pub fn allreduces(&self) -> &[NodeId] {
+        &self.ars
+    }
+
+    /// Apply an op fusion through the set, patching the pair pool from the
+    /// rewrite's [`FusionEffects`].
+    pub fn apply_op_fusion(
+        &mut self,
+        g: &mut TrainingGraph,
+        pred: NodeId,
+        succ: NodeId,
+        kind: FusionKind,
+    ) -> Result<NodeId, FusionError> {
+        let fx = fuse_ops_explain(g, pred, succ, kind)?;
+        // `succ` is always tombstoned; `pred` only when the rewrite says so
+        // (duplicate fusion keeps the replica live, and its other pairs
+        // with it).
+        self.pairs.retain(|&(p, s)| {
+            p != succ && s != succ && (!fx.pred_deleted || (p != pred && s != pred))
+        });
+        let f = fx.fused;
+        for &i in &g.nodes[f].inputs {
+            if is_live_compute(g, i) {
+                self.pairs.push((i, f));
+            }
+        }
+        for &c in &fx.redirected {
+            let k = g.nodes[c].kind;
+            if k.is_fusible_compute() || k == OpKind::Fused {
+                self.pairs.push((f, c));
+            }
+        }
+        Ok(f)
+    }
+
+    /// Apply an AllReduce fusion through the set, patching the AR pool.
+    pub fn apply_ar_fusion(
+        &mut self,
+        g: &mut TrainingGraph,
+        a: NodeId,
+        b: NodeId,
+    ) -> Result<NodeId, FusionError> {
+        let f = fuse_allreduce(g, a, b)?;
+        self.ars.retain(|&x| x != a && x != b);
+        self.ars.push(f);
+        Ok(f)
+    }
 }
 
 #[cfg(test)]
@@ -611,5 +741,67 @@ mod tests {
         assert!(cands.contains(&(m1, m2)));
         // The constant is not a fusible pred.
         assert!(cands.iter().all(|&(p, _)| p != 0));
+    }
+
+    #[test]
+    fn mutation_replay_reproduces_rewrite() {
+        let (mut g, _x, m1, m2, _ar) = diamond();
+        let mut h = g.clone();
+        fuse_ops(&mut g, m1, m2, FusionKind::NonDuplicate).unwrap();
+        Mutation::FuseOps { pred: m1, succ: m2, kind: FusionKind::NonDuplicate }
+            .replay(&mut h)
+            .unwrap();
+        assert_eq!(g.fingerprint(), h.fingerprint());
+        assert_eq!(g, h);
+    }
+
+    /// Incremental candidate maintenance must stay set-equal to a
+    /// from-scratch enumeration across random mutation sequences.
+    #[test]
+    fn incremental_matches_rebuild() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5E7);
+        for case in 0..40 {
+            // Random-ish layered graph with sibling gradients + ARs.
+            let mut b = crate::graph::builder::GraphBuilder::new("cs", 4);
+            let mut prev = b.constant("x", &[128]);
+            let layers = 2 + (case % 4);
+            for l in 0..layers {
+                let m = b.compute(OpKind::Mul, &format!("m{l}"), &[prev], &[128], Role::Backward);
+                let t = b.compute(OpKind::Tanh, &format!("t{l}"), &[m], &[128], Role::Backward);
+                let gw =
+                    b.compute(OpKind::MatMul, &format!("gw{l}"), &[m], &[64], Role::Backward);
+                let p = b.param(&format!("w{l}"), &[64]);
+                let ar = b.allreduce(&format!("ar{l}"), gw, &[64]);
+                b.optimizer_update(&format!("u{l}"), &[ar, p]);
+                prev = t;
+            }
+            let mut g = b.finish();
+            let mut cset = CandidateSet::build(&g);
+            for _ in 0..10 {
+                if rng.gen_bool(0.7) {
+                    let Some(&(p, s)) = rng.choose(cset.op_pairs()) else { continue };
+                    let kind = if rng.gen_bool(0.5) {
+                        FusionKind::NonDuplicate
+                    } else {
+                        FusionKind::Duplicate
+                    };
+                    let _ = cset.apply_op_fusion(&mut g, p, s, kind);
+                } else {
+                    let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+                    let nbrs = ar_neighbors(&g, a);
+                    let Some(&bb) = rng.choose(&nbrs) else { continue };
+                    let _ = cset.apply_ar_fusion(&mut g, a, bb);
+                }
+                let mut inc: Vec<(NodeId, NodeId)> = cset.op_pairs().to_vec();
+                let mut scratch = op_fusion_candidates(&g);
+                inc.sort_unstable();
+                scratch.sort_unstable();
+                assert_eq!(inc, scratch, "op pairs diverged (case {case})");
+                let mut ars = cset.allreduces().to_vec();
+                ars.sort_unstable();
+                assert_eq!(ars, g.allreduces(), "AR pool diverged (case {case})");
+            }
+        }
     }
 }

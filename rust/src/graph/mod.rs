@@ -23,6 +23,7 @@ pub use shape::{DType, Shape};
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::sync::OnceLock;
 
 /// Index of a node within its graph's arena.
 pub type NodeId = usize;
@@ -194,19 +195,106 @@ pub enum GraphError {
     IdMismatch(NodeId, usize),
 }
 
+/// Flat CSR successor adjacency over a graph's node arena: the consumers
+/// of node `i` are `targets[offsets[i]..offsets[i + 1]]`, in ascending
+/// consumer-id order (matching [`TrainingGraph::successors`]). Two flat
+/// allocations instead of one `Vec` per node — this is the search hot
+/// path's adjacency representation, cached on the graph and rebuilt
+/// lazily after a rewrite invalidates it (see `rust/PERF.md`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SuccCsr {
+    pub offsets: Vec<u32>,
+    pub targets: Vec<u32>,
+}
+
+impl SuccCsr {
+    /// Build from scratch in two passes (degree count + prefix sum, fill).
+    pub fn build(g: &TrainingGraph) -> SuccCsr {
+        let n = g.nodes.len();
+        let mut offsets = vec![0u32; n + 1];
+        for node in g.live() {
+            for &i in &node.inputs {
+                offsets[i + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        let mut targets = vec![0u32; offsets[n] as usize];
+        for node in g.live() {
+            for &i in &node.inputs {
+                targets[cursor[i] as usize] = node.id as u32;
+                cursor[i] += 1;
+            }
+        }
+        SuccCsr { offsets, targets }
+    }
+
+    /// Consumers of node `id`.
+    #[inline]
+    pub fn row(&self, id: NodeId) -> &[u32] {
+        &self.targets[self.offsets[id] as usize..self.offsets[id + 1] as usize]
+    }
+
+    /// Number of consumers of node `id`.
+    #[inline]
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        (self.offsets[id + 1] - self.offsets[id]) as usize
+    }
+}
+
 /// A whole training-iteration graph for one worker replica, plus the
 /// data-parallel context (worker count) its AllReduces span.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct TrainingGraph {
     pub name: String,
     pub nodes: Vec<Node>,
     /// Number of data-parallel workers (devices) the AllReduces span.
     pub num_workers: usize,
+    /// Lazily-built successor adjacency. Invalidation contract: every
+    /// mutation that goes through [`TrainingGraph::push`] or the fusion
+    /// rewrites resets it; code that edits `nodes` directly must call
+    /// [`TrainingGraph::invalidate_adjacency`] before the next
+    /// `succ_csr`/`topo_order`/simulation. `validate()` deliberately does
+    /// NOT trust this cache.
+    adj: OnceLock<SuccCsr>,
+}
+
+impl Clone for TrainingGraph {
+    fn clone(&self) -> Self {
+        // The cache is not carried: clones exist to be mutated (search
+        // candidates), so a copied cache would be stale immediately.
+        TrainingGraph {
+            name: self.name.clone(),
+            nodes: self.nodes.clone(),
+            num_workers: self.num_workers,
+            adj: OnceLock::new(),
+        }
+    }
+}
+
+impl PartialEq for TrainingGraph {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.num_workers == other.num_workers
+            && self.nodes == other.nodes
+    }
 }
 
 impl TrainingGraph {
     pub fn new(name: &str, num_workers: usize) -> TrainingGraph {
-        TrainingGraph { name: name.to_string(), nodes: Vec::new(), num_workers }
+        TrainingGraph {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            num_workers,
+            adj: OnceLock::new(),
+        }
+    }
+
+    /// Assemble a graph from already-built parts (deserialization).
+    pub fn from_parts(name: String, nodes: Vec<Node>, num_workers: usize) -> TrainingGraph {
+        TrainingGraph { name, nodes, num_workers, adj: OnceLock::new() }
     }
 
     // ---- structure access ---------------------------------------------------
@@ -225,6 +313,7 @@ impl TrainingGraph {
     }
 
     /// Successor lists for all nodes (index = node id; deleted nodes empty).
+    /// Compatibility helper — hot paths use [`TrainingGraph::succ_csr`].
     pub fn successors(&self) -> Vec<Vec<NodeId>> {
         let mut succ = vec![Vec::new(); self.nodes.len()];
         for n in self.live() {
@@ -235,11 +324,23 @@ impl TrainingGraph {
         succ
     }
 
-    /// Kahn topological order over live nodes. Errors with the id of a node
-    /// on a cycle.
-    pub fn topo_order(&self) -> Result<Vec<NodeId>, GraphError> {
+    /// Cached CSR successor adjacency, built on first use after the last
+    /// invalidation. See the `adj` field docs for the invalidation
+    /// contract.
+    pub fn succ_csr(&self) -> &SuccCsr {
+        self.adj.get_or_init(|| SuccCsr::build(self))
+    }
+
+    /// Drop the cached adjacency. Called by `push` and the fusion
+    /// rewrites; required after any direct edit of `nodes`.
+    pub fn invalidate_adjacency(&mut self) {
+        self.adj.take();
+    }
+
+    /// Kahn topological order over live nodes using `succ` as the
+    /// adjacency. Errors with the id of a node on a cycle.
+    fn topo_with(&self, succ: &SuccCsr) -> Result<Vec<NodeId>, GraphError> {
         let mut indeg = vec![0usize; self.nodes.len()];
-        let succ = self.successors();
         for n in self.live() {
             indeg[n.id] = n.inputs.len();
         }
@@ -251,7 +352,8 @@ impl TrainingGraph {
             let u = queue[qi];
             qi += 1;
             order.push(u);
-            for &v in &succ[u] {
+            for &v in succ.row(u) {
+                let v = v as usize;
                 indeg[v] -= 1;
                 if indeg[v] == 0 {
                     queue.push(v);
@@ -269,7 +371,16 @@ impl TrainingGraph {
         Ok(order)
     }
 
-    /// Full validation: arena ids, dangling inputs, acyclicity.
+    /// Kahn topological order over live nodes (cached adjacency). Errors
+    /// with the id of a node on a cycle.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, GraphError> {
+        self.topo_with(self.succ_csr())
+    }
+
+    /// Full validation: arena ids, dangling inputs, acyclicity. As the
+    /// integrity auditor it rebuilds the adjacency from scratch rather
+    /// than trusting the cache (a stale cache is one of the corruptions
+    /// it exists to catch).
     pub fn validate(&self) -> Result<(), GraphError> {
         for (i, n) in self.nodes.iter().enumerate() {
             if n.id != i {
@@ -284,7 +395,7 @@ impl TrainingGraph {
                 }
             }
         }
-        self.topo_order().map(|_| ())
+        self.topo_with(&SuccCsr::build(self)).map(|_| ())
     }
 
     // ---- aggregate queries ----------------------------------------------------
@@ -333,6 +444,7 @@ impl TrainingGraph {
         node.id = self.nodes.len();
         let id = node.id;
         self.nodes.push(node);
+        self.invalidate_adjacency();
         id
     }
 
@@ -347,9 +459,30 @@ impl TrainingGraph {
                 n.deleted = true;
             }
         }
+        g.invalidate_adjacency();
         // Drop now-unconsumed parameters? No — parameters feed forward ops.
         debug_assert!(g.validate().is_ok());
         g
+    }
+
+    /// Approximate resident bytes of this graph (arena + per-node heap
+    /// allocations). Used by the search to report candidate-arena memory;
+    /// an estimate, not an allocator census.
+    pub fn approx_bytes(&self) -> usize {
+        let mut b = std::mem::size_of::<TrainingGraph>()
+            + self.name.capacity()
+            + self.nodes.capacity() * std::mem::size_of::<Node>();
+        for n in &self.nodes {
+            b += n.name.capacity()
+                + (n.inputs.capacity() + n.orig_inputs.capacity() + n.ar_constituents.capacity())
+                    * std::mem::size_of::<NodeId>()
+                + n.shape.dims.capacity() * std::mem::size_of::<usize>();
+            if let Some(g) = &n.fused {
+                b += g.ops.capacity() * std::mem::size_of::<OrigOp>()
+                    + g.edges.capacity() * std::mem::size_of::<(usize, usize)>();
+            }
+        }
+        b
     }
 
     /// Deep structural fingerprint of the live graph, for dedup of search
@@ -464,6 +597,53 @@ mod tests {
         let mut n2 = g.nodes[1].clone();
         n2.shape = Shape::new(&[64, 64]);
         assert_ne!(a, n2.cost_signature());
+    }
+
+    #[test]
+    fn succ_csr_matches_successors() {
+        let g = tiny();
+        let csr = g.succ_csr();
+        let succ = g.successors();
+        for id in 0..g.nodes.len() {
+            let row: Vec<NodeId> = csr.row(id).iter().map(|&v| v as NodeId).collect();
+            assert_eq!(row, succ[id], "row {id}");
+            assert_eq!(csr.out_degree(id), succ[id].len());
+        }
+    }
+
+    #[test]
+    fn succ_csr_invalidated_by_push() {
+        let mut g = tiny();
+        let before = g.succ_csr().targets.len();
+        let src = g.nodes[2].id;
+        let mut n = g.nodes[2].clone();
+        n.inputs = vec![src];
+        n.orig_inputs = vec![src];
+        n.name = "extra".into();
+        g.push(n);
+        // Cache was dropped by push; the rebuilt CSR sees the new edge.
+        assert_eq!(g.succ_csr().targets.len(), before + 1);
+    }
+
+    #[test]
+    fn succ_csr_skips_deleted_consumers() {
+        let mut g = tiny();
+        let _ = g.succ_csr();
+        g.nodes[3].deleted = true;
+        g.invalidate_adjacency();
+        let csr = g.succ_csr();
+        assert!(csr.targets.iter().all(|&t| t != 3));
+    }
+
+    #[test]
+    fn approx_bytes_positive_and_grows() {
+        let g = tiny();
+        let b = g.approx_bytes();
+        assert!(b > g.nodes.len() * std::mem::size_of::<Node>());
+        let mut g2 = g.clone();
+        let n = g2.nodes[1].clone();
+        g2.push(n);
+        assert!(g2.approx_bytes() > b);
     }
 
     #[test]

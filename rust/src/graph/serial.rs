@@ -150,18 +150,16 @@ impl TrainingGraph {
                 .iter()
                 .map(node_from)
                 .collect();
-        let g = TrainingGraph {
-            name: j
-                .get("name")
+        let g = TrainingGraph::from_parts(
+            j.get("name")
                 .as_str()
                 .ok_or_else(|| anyhow::anyhow!("missing name"))?
                 .to_string(),
-            num_workers: j
-                .get("num_workers")
+            nodes.ok_or_else(|| anyhow::anyhow!("bad node"))?,
+            j.get("num_workers")
                 .as_usize()
                 .ok_or_else(|| anyhow::anyhow!("missing num_workers"))?,
-            nodes: nodes.ok_or_else(|| anyhow::anyhow!("bad node"))?,
-        };
+        );
         g.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(g)
     }

@@ -44,6 +44,7 @@
 //! ```
 
 pub mod util;
+pub mod xla_stub;
 pub mod graph;
 pub mod device;
 pub mod network;
@@ -67,6 +68,6 @@ pub mod prelude {
     pub use crate::models::ModelSpec;
     pub use crate::network::Cluster;
     pub use crate::search::{backtracking_search, SearchConfig};
-    pub use crate::sim::{simulate, SimOptions};
+    pub use crate::sim::{simulate, SimOptions, SimWorkspace};
     pub use crate::util::rng::Rng;
 }

@@ -6,7 +6,7 @@
 //! disco enact     --strategy strategy.json --world 4 [--iterations 10]
 //! disco worker    --connect 127.0.0.1:7100 --rank 0 [--cluster a]
 //! disco profile   --model vgg19 --cluster a
-//! disco bench     fig6|fig7|fig8|fig9|table2|fig10|table3|table4|ablation|extensions|all
+//! disco bench     fig6|fig7|fig8|fig9|table2|fig10|table3|table4|ablation|extensions|perf|all
 //!                 [--full] [--estimator ...] [--out EXPERIMENTS.md-section]
 //! disco train-gnn [--per-model 800] [--epochs 30]
 //! disco e2e       [--workers 4] [--steps 200]
@@ -199,6 +199,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         sections.push(experiments::ext_search_ablation(&opts));
         sections.push(experiments::ext_parameter_server(&opts));
         sections.push(experiments::ext_memory(&opts));
+    }
+    if run("perf") {
+        sections.push(experiments::perf_search(&opts));
     }
     if sections.is_empty() {
         return Err(anyhow!("unknown experiment '{what}'"));

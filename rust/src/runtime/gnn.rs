@@ -12,7 +12,7 @@ use crate::estimator::{AnalyticalFused, FusedOpEstimator};
 use crate::graph::FusedGroup;
 use crate::profiler::FusedSample;
 use anyhow::{anyhow, Result};
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 /// Feature-encoding constants — the contract with python/compile/model.py.
 pub const N_OP_KINDS: usize = 40;
@@ -75,8 +75,10 @@ pub struct GnnPredictor {
     params: Vec<f32>,
     /// Fallback for groups larger than MAX_NODES.
     fallback: AnalyticalFused,
-    /// (queries, batched_calls) counters for §Perf.
-    stats: RefCell<(u64, u64)>,
+    /// (queries, batched_calls) counters for §Perf. Mutex (not RefCell)
+    /// so the predictor stays `Sync` — the search evaluates candidates on
+    /// worker threads that share one estimator.
+    stats: Mutex<(u64, u64)>,
 }
 
 impl GnnPredictor {
@@ -107,11 +109,11 @@ impl GnnPredictor {
         if params.len() != expected {
             return Err(anyhow!("gnn params len {} != {}", params.len(), expected));
         }
-        Ok(GnnPredictor { exec, batch, params, fallback, stats: RefCell::new((0, 0)) })
+        Ok(GnnPredictor { exec, batch, params, fallback, stats: Mutex::new((0, 0)) })
     }
 
     pub fn stats(&self) -> (u64, u64) {
-        *self.stats.borrow()
+        *self.stats.lock().unwrap()
     }
 
     /// Predict times (ms) for up to `batch` groups in one artifact call.
@@ -155,10 +157,10 @@ impl GnnPredictor {
                         out[i] = preds[slot].max(1e-4);
                     }
                 }
-                let mut st = self.stats.borrow_mut();
+                let mut st = self.stats.lock().unwrap();
                 st.1 += 1;
             }
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.0 += (end - start) as u64;
             start = end;
         }

@@ -10,6 +10,10 @@ pub mod gnn;
 pub mod trainer;
 
 use crate::util::json::Json;
+// The real `xla` crate is unavailable offline; an API-compatible typed
+// stub keeps this module compiling and makes the backend-missing failure
+// mode explicit at `Runtime::new` (see rust/src/xla_stub.rs).
+use crate::xla_stub as xla;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 

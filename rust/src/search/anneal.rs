@@ -8,7 +8,7 @@
 use super::{MethodSet, SearchResult};
 use crate::fusion::{self, FusionKind};
 use crate::graph::TrainingGraph;
-use crate::sim::{simulate, CostSource, SimOptions};
+use crate::sim::{simulate_in, CostSource, NoRecord, SimOptions, SimWorkspace};
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -94,11 +94,14 @@ pub fn anneal_search(
 ) -> SearchResult {
     let start = Instant::now();
     let mut rng = Rng::new(cfg.seed);
-    let cost_of = |g: &TrainingGraph| {
+    // Single walker → a single reused simulator workspace suffices for an
+    // allocation-free eval loop (same contract as the backtracking search).
+    let mut ws = SimWorkspace::new();
+    let cost_of = |g: &TrainingGraph, ws: &mut SimWorkspace| {
         costs.prepare(g);
-        simulate(g, costs, cfg.sim).makespan_ms
+        simulate_in(g, costs, cfg.sim, &mut NoRecord, ws).makespan_ms
     };
-    let initial_cost = cost_of(input);
+    let initial_cost = cost_of(input, &mut ws);
     let mut current = input.clone();
     let mut current_cost = initial_cost;
     let mut best = current.clone();
@@ -111,7 +114,7 @@ pub fn anneal_search(
         if !propose(&mut cand, &cfg.methods, &mut rng) {
             break; // no applicable moves left
         }
-        let c = cost_of(&cand);
+        let c = cost_of(&cand, &mut ws);
         evals += 1;
         let accept = c <= current_cost
             || (temp > 0.0 && rng.gen_f64() < ((current_cost - c) / temp).exp());
@@ -126,12 +129,15 @@ pub fn anneal_search(
         temp *= cfg.cooling;
     }
 
+    // Annealing keeps current + best + one proposal resident, no arena.
+    let peak_arena_bytes = 3 * input.approx_bytes();
     SearchResult {
         best,
         best_cost_ms: best_cost,
         initial_cost_ms: initial_cost,
         steps: cfg.steps as u64,
         evals,
+        peak_arena_bytes,
         elapsed: start.elapsed(),
     }
 }

@@ -15,15 +15,36 @@
 //! 3. fusion of a random AllReduce with a random neighbour AllReduce.
 //!
 //! Method subsets are configurable to reproduce the Fig. 10 ablation.
+//!
+//! ## Hot-path architecture (see `rust/PERF.md`)
+//!
+//! Evals/sec is the number that decides strategy quality under a fixed
+//! budget, so the inner loop is built to spend its time scheduling, not
+//! allocating:
+//!
+//! * queued candidates are **deltas** — (parent arena index, the exact
+//!   [`Mutation`] list that produced them) — rematerialized on dequeue,
+//!   instead of up to `max_queue` full graph clones;
+//! * the fusion-candidate pool is maintained **incrementally** across the
+//!   mutations of one `RandomApply` ([`CandidateSet`]);
+//! * simulator evaluations reuse per-thread [`SimWorkspace`]s and run the
+//!   per-step method batch on `std::thread::scope` workers.
+//!
+//! Mutation *generation* stays serial on the main RNG and results are
+//! merged in method order, so the search is deterministic per seed
+//! regardless of `eval_threads` (and identical between delta and eager
+//! candidate storage) — both equivalences are property-tested.
 
 pub mod anneal;
 
-use crate::fusion::{self, FusionKind};
+use crate::fusion::{self, CandidateSet, FusionKind, Mutation};
 use crate::graph::TrainingGraph;
-use crate::sim::{simulate, CostSource, OrderedF64, SimOptions};
+use crate::sim::{
+    simulate, simulate_in, CostSource, NoRecord, OrderedF64, SimOptions, SimWorkspace,
+};
 use crate::util::rng::Rng;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::time::{Duration, Instant};
 
 /// Which optimization methods the search may use (Fig. 10 ablation knob).
@@ -66,20 +87,53 @@ enum Method {
 }
 
 /// Search hyper-parameters (paper defaults: α = 1.05, β = 10,
-/// unchanged limit 1000).
+/// unchanged limit 1000) plus the hot-path knobs, which exist so the
+/// A/B perf record (`BENCH_search.json`) and the equivalence property
+/// tests can pin the pre-refactor behavior. `eval_threads`,
+/// `delta_candidates` and `reuse_workspaces` never change the result
+/// for a given seed — only where the time and memory go (both
+/// equivalences are property-tested). `incremental_candidates` is
+/// different: it reproduces the pre-refactor candidate *ordering*
+/// (rebuild order interleaves new pairs by consumer id; incremental
+/// patching appends them), and since `RandomApply` draws pairs by
+/// index, toggling it legitimately steers the random search onto a
+/// different — equally valid — trajectory.
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
     pub alpha: f64,
     pub beta: usize,
     pub unchanged_limit: usize,
-    /// Cap on the priority queue (memory guard; the paper's queue is
-    /// unbounded but our candidates are full graph clones).
+    /// Cap on the priority queue.
     pub max_queue: usize,
     /// Hard wall-clock budget; 0 = unlimited.
     pub max_seconds: f64,
     pub methods: MethodSet,
     pub sim: SimOptions,
     pub seed: u64,
+    /// Maximum worker threads for the per-step candidate evaluations
+    /// (the ≤ 3 method batch is chunked across at most this many
+    /// workers). 1 = serial. Results are identical either way: mutation
+    /// generation is serial and merge order is method order.
+    pub eval_threads: usize,
+    /// Store queued candidates as parent + mutation deltas rematerialized
+    /// on dequeue (true) instead of full graph clones (false, the
+    /// pre-refactor arena).
+    pub delta_candidates: bool,
+    /// Reuse per-thread simulator workspaces across evaluations (false =
+    /// allocate fresh scratch per eval, the pre-refactor behavior).
+    pub reuse_workspaces: bool,
+    /// Maintain the fusion-candidate pool incrementally across the
+    /// mutations of one `RandomApply` (false = re-enumerate from the
+    /// graph before every application, the pre-refactor behavior).
+    /// Unlike the two toggles above this affects candidate *ordering*
+    /// and therefore which random pairs get drawn — the search stays
+    /// deterministic per seed but follows a different trajectory.
+    pub incremental_candidates: bool,
+    /// Below this many arena nodes the per-step batch is evaluated
+    /// serially even when `eval_threads > 1`: for small graphs a
+    /// simulation is a few microseconds and per-step thread spawn/join
+    /// overhead would exceed the parallel win. Never affects results.
+    pub parallel_min_nodes: usize,
 }
 
 impl Default for SearchConfig {
@@ -93,6 +147,11 @@ impl Default for SearchConfig {
             methods: MethodSet::all(),
             sim: SimOptions::default(),
             seed: 0xD15C0,
+            eval_threads: 3,
+            delta_candidates: true,
+            reuse_workspaces: true,
+            incremental_candidates: true,
+            parallel_min_nodes: 128,
         }
     }
 }
@@ -107,6 +166,9 @@ pub struct SearchResult {
     pub steps: u64,
     /// Simulator evaluations performed.
     pub evals: u64,
+    /// High-water mark of candidate-storage memory (arena entries +
+    /// rematerialization memo), approximate bytes.
+    pub peak_arena_bytes: usize,
     pub elapsed: Duration,
 }
 
@@ -120,12 +182,22 @@ impl SearchResult {
     }
 }
 
-/// Apply method `m` up to `n` times with random operands. Returns true if
-/// the graph changed. Invalid applications (paper's validity check) are
-/// skipped, with a few retries each.
-fn random_apply(g: &mut TrainingGraph, m: Method, n: usize, rng: &mut Rng) -> bool {
-    let mut changed = false;
+/// Apply method `m` up to `n` times with random operands drawn from
+/// `cset`, recording each rewrite that succeeded. Invalid applications
+/// (paper's validity check) are skipped, with a few retries each.
+fn random_apply(
+    g: &mut TrainingGraph,
+    cset: &mut CandidateSet,
+    m: Method,
+    n: usize,
+    rng: &mut Rng,
+    incremental: bool,
+) -> Vec<Mutation> {
+    let mut muts = Vec::new();
     for _ in 0..n {
+        if !incremental && !muts.is_empty() {
+            *cset = CandidateSet::build(g);
+        }
         let applied = match m {
             Method::NonDupFusion | Method::DupFusion => {
                 let kind = if m == Method::NonDupFusion {
@@ -133,11 +205,11 @@ fn random_apply(g: &mut TrainingGraph, m: Method, n: usize, rng: &mut Rng) -> bo
                 } else {
                     FusionKind::Duplicate
                 };
-                let cands = fusion::op_fusion_candidates(g);
                 let mut ok = false;
                 for _ in 0..4 {
-                    let Some(&(p, s)) = rng.choose(&cands) else { break };
-                    if fusion::fuse_ops(g, p, s, kind).is_ok() {
+                    let Some(&(p, s)) = rng.choose(cset.op_pairs()) else { break };
+                    if cset.apply_op_fusion(g, p, s, kind).is_ok() {
+                        muts.push(Mutation::FuseOps { pred: p, succ: s, kind });
                         ok = true;
                         break;
                     }
@@ -145,13 +217,13 @@ fn random_apply(g: &mut TrainingGraph, m: Method, n: usize, rng: &mut Rng) -> bo
                 ok
             }
             Method::ArFusion => {
-                let ars = g.allreduces();
                 let mut ok = false;
                 for _ in 0..4 {
-                    let Some(&a) = rng.choose(&ars) else { break };
+                    let Some(&a) = rng.choose(cset.allreduces()) else { break };
                     let neighbors = fusion::ar_neighbors(g, a);
                     let Some(&b) = rng.choose(&neighbors) else { continue };
-                    if fusion::fuse_allreduce(g, a, b).is_ok() {
+                    if cset.apply_ar_fusion(g, a, b).is_ok() {
+                        muts.push(Mutation::FuseAllReduce { a, b });
                         ok = true;
                         break;
                     }
@@ -159,35 +231,178 @@ fn random_apply(g: &mut TrainingGraph, m: Method, n: usize, rng: &mut Rng) -> bo
                 ok
             }
         };
-        changed |= applied;
         if !applied {
             break;
         }
     }
-    changed
+    muts
+}
+
+/// How a queued candidate is stored in the arena.
+#[derive(Debug)]
+enum Stored {
+    /// Materialized graph (the root; every entry in eager mode).
+    Graph(TrainingGraph),
+    /// Delta: clone of `parent`'s graph + `muts` replayed in order.
+    Delta { parent: usize, muts: Vec<Mutation> },
+    /// Eager entry already consumed by its dequeue.
+    Taken,
+}
+
+/// Number of recently-dequeued parents kept materialized so delta
+/// rematerialization rarely walks more than one hop. Children of a good
+/// candidate sit near it in the cost-ordered queue, so a small LRU covers
+/// most dequeues; misses fall back to replay-from-ancestor, which is
+/// always correct.
+const REMAT_MEMO: usize = 8;
+
+/// Candidate arena: delta-encoded entries plus a bounded memo of
+/// materialized graphs, with byte accounting for the perf record.
+struct Arena {
+    entries: Vec<Stored>,
+    entry_bytes: Vec<usize>,
+    memo: HashMap<usize, TrainingGraph>,
+    memo_order: VecDeque<usize>,
+    live_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl Arena {
+    fn new(root: TrainingGraph) -> Arena {
+        let mut a = Arena {
+            entries: Vec::new(),
+            entry_bytes: Vec::new(),
+            memo: HashMap::new(),
+            memo_order: VecDeque::new(),
+            live_bytes: 0,
+            peak_bytes: 0,
+        };
+        a.push_graph(root);
+        a
+    }
+
+    fn note(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+    }
+
+    fn push_graph(&mut self, g: TrainingGraph) -> usize {
+        let bytes = g.approx_bytes();
+        self.entries.push(Stored::Graph(g));
+        self.entry_bytes.push(bytes);
+        self.live_bytes += bytes;
+        self.note();
+        self.entries.len() - 1
+    }
+
+    fn push_delta(&mut self, parent: usize, muts: Vec<Mutation>) -> usize {
+        let bytes = std::mem::size_of::<Stored>()
+            + muts.capacity() * std::mem::size_of::<Mutation>();
+        self.entries.push(Stored::Delta { parent, muts });
+        self.entry_bytes.push(bytes);
+        self.live_bytes += bytes;
+        self.note();
+        self.entries.len() - 1
+    }
+
+    /// Eager-mode dequeue: move the stored clone out.
+    fn take_graph(&mut self, idx: usize) -> TrainingGraph {
+        self.live_bytes -= self.entry_bytes[idx];
+        self.entry_bytes[idx] = 0;
+        match std::mem::replace(&mut self.entries[idx], Stored::Taken) {
+            Stored::Graph(g) => g,
+            _ => panic!("candidate {idx} is not an eager graph"),
+        }
+    }
+
+    /// Delta-mode dequeue: walk up to the nearest materialized ancestor
+    /// (memo hit or a `Stored::Graph`), clone it, and replay the deltas
+    /// down the path.
+    fn materialize(&self, idx: usize) -> TrainingGraph {
+        let mut path: Vec<usize> = Vec::new();
+        let mut cur = idx;
+        let mut g = loop {
+            if let Some(hit) = self.memo.get(&cur) {
+                break hit.clone();
+            }
+            match &self.entries[cur] {
+                Stored::Graph(gr) => break gr.clone(),
+                Stored::Delta { parent, .. } => {
+                    path.push(cur);
+                    cur = *parent;
+                }
+                Stored::Taken => unreachable!("delta parent was consumed"),
+            }
+        };
+        for &step in path.iter().rev() {
+            if let Stored::Delta { muts, .. } = &self.entries[step] {
+                for m in muts {
+                    m.replay(&mut g).expect("delta replay diverged from recorded parent");
+                }
+            }
+        }
+        g
+    }
+
+    /// Keep `g` (the graph of arena entry `idx`, which children reference)
+    /// materialized for upcoming dequeues; evicts the oldest memo entry
+    /// beyond [`REMAT_MEMO`].
+    fn memoize(&mut self, idx: usize, g: TrainingGraph) {
+        self.live_bytes += g.approx_bytes();
+        self.memo.insert(idx, g);
+        self.memo_order.push_back(idx);
+        if self.memo_order.len() > REMAT_MEMO {
+            if let Some(old) = self.memo_order.pop_front() {
+                if let Some(dropped) = self.memo.remove(&old) {
+                    self.live_bytes -= dropped.approx_bytes();
+                }
+            }
+        }
+        self.note();
+    }
+}
+
+/// One mutated candidate awaiting evaluation.
+struct Prepared {
+    graph: TrainingGraph,
+    muts: Vec<Mutation>,
+}
+
+#[inline]
+fn eval_one(
+    graph: &TrainingGraph,
+    costs: &dyn CostSource,
+    cfg: &SearchConfig,
+    ws: &mut SimWorkspace,
+) -> f64 {
+    costs.prepare(graph); // batched GNN prefetch (no-op for other sources)
+    if cfg.reuse_workspaces {
+        simulate_in(graph, costs, cfg.sim, &mut NoRecord, ws).makespan_ms
+    } else {
+        simulate(graph, costs, cfg.sim).makespan_ms
+    }
 }
 
 /// Run Alg. 1 on `input` using `costs` as the simulator's cost source.
+/// `costs` must be `Sync` so the per-step candidate batch can be
+/// evaluated on worker threads; every estimator in this crate is.
 pub fn backtracking_search(
     input: &TrainingGraph,
-    costs: &dyn CostSource,
+    costs: &(dyn CostSource + Sync),
     cfg: &SearchConfig,
 ) -> SearchResult {
     let start = Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let methods = cfg.methods.enabled();
+    let threads = cfg.eval_threads.max(1);
+    let mut ws_pool: Vec<SimWorkspace> = (0..threads).map(|_| SimWorkspace::new()).collect();
 
-    let cost_of = |g: &TrainingGraph| {
-        costs.prepare(g); // batched GNN prefetch (no-op for other sources)
-        simulate(g, costs, cfg.sim).makespan_ms
-    };
-
-    let initial_cost = cost_of(input);
+    let initial_cost = eval_one(input, costs, cfg, &mut ws_pool[0]);
     let mut best = input.clone();
     let mut best_cost = initial_cost;
 
-    // Priority queue of (cost, seq, arena index); arena holds the graphs.
-    let mut arena: Vec<Option<TrainingGraph>> = vec![Some(input.clone())];
+    // Priority queue of (cost, seq, arena index); the arena holds deltas
+    // (or full clones in eager mode).
+    let mut arena = Arena::new(input.clone());
     let mut queue: BinaryHeap<Reverse<(OrderedF64, u64, usize)>> = BinaryHeap::new();
     queue.push(Reverse((OrderedF64(initial_cost), 0, 0)));
     let mut seen: HashSet<u64> = HashSet::new();
@@ -197,6 +412,7 @@ pub fn backtracking_search(
     let mut steps = 0u64;
     let mut evals = 1u64;
     let mut seq = 1u64;
+    let mut batch: Vec<Prepared> = Vec::with_capacity(methods.len());
 
     while let Some(Reverse((_, _, idx))) = queue.pop() {
         if unchanged >= cfg.unchanged_limit {
@@ -205,9 +421,16 @@ pub fn backtracking_search(
         if cfg.max_seconds > 0.0 && start.elapsed().as_secs_f64() > cfg.max_seconds {
             break;
         }
-        let h = arena[idx].take().expect("candidate already consumed");
+        let h = if cfg.delta_candidates {
+            arena.materialize(idx)
+        } else {
+            arena.take_graph(idx)
+        };
         steps += 1;
 
+        // --- serial, deterministic mutation generation -------------------
+        let base_cset = CandidateSet::build(&h);
+        batch.clear();
         for &m in &methods {
             // n = Random(0, β): 0 applications produce H' == H — skip the
             // no-op evaluation (the fingerprint set would reject it anyway).
@@ -216,27 +439,79 @@ pub fn backtracking_search(
                 continue;
             }
             let mut candidate = h.clone();
-            if !random_apply(&mut candidate, m, n, &mut rng) {
+            let mut cset = base_cset.clone();
+            let muts =
+                random_apply(&mut candidate, &mut cset, m, n, &mut rng, cfg.incremental_candidates);
+            if muts.is_empty() {
                 continue;
             }
-            let fp = candidate.fingerprint();
-            if !seen.insert(fp) {
+            if !seen.insert(candidate.fingerprint()) {
                 continue;
             }
-            let cost = cost_of(&candidate);
+            batch.push(Prepared { graph: candidate, muts });
+        }
+
+        // --- evaluation: the expensive part, parallel when it pays -------
+        // At most `eval_threads` workers: the batch is split into
+        // contiguous chunks, each worker evaluating its chunk serially
+        // into a disjoint result slice (order-preserving, so the merge
+        // below stays deterministic).
+        let batch_costs: Vec<f64> = if threads > 1
+            && batch.len() > 1
+            && h.nodes.len() >= cfg.parallel_min_nodes
+        {
+            let workers = threads.min(batch.len());
+            let per = batch.len().div_ceil(workers);
+            let mut out = vec![0.0f64; batch.len()];
+            std::thread::scope(|s| {
+                let handles: Vec<_> = batch
+                    .chunks(per)
+                    .zip(out.chunks_mut(per))
+                    .zip(ws_pool.iter_mut())
+                    .map(|((items, slots), ws)| {
+                        s.spawn(move || {
+                            for (p, slot) in items.iter().zip(slots.iter_mut()) {
+                                *slot = eval_one(&p.graph, costs, cfg, ws);
+                            }
+                        })
+                    })
+                    .collect();
+                for handle in handles {
+                    handle.join().expect("candidate evaluation worker panicked");
+                }
+            });
+            out
+        } else {
+            let ws = &mut ws_pool[0];
+            batch.iter().map(|p| eval_one(&p.graph, costs, cfg, ws)).collect()
+        };
+
+        // --- deterministic merge, in method order ------------------------
+        let mut h_is_parent = false;
+        for (prepared, &cost) in batch.drain(..).zip(&batch_costs) {
             evals += 1;
             if cost < best_cost {
                 best_cost = cost;
-                best = candidate.clone();
+                best = prepared.graph.clone();
                 unchanged = 0;
             } else {
                 unchanged += 1;
             }
             if cost <= cfg.alpha * best_cost && queue.len() < cfg.max_queue {
-                arena.push(Some(candidate));
-                queue.push(Reverse((OrderedF64(cost), seq, arena.len() - 1)));
+                let slot = if cfg.delta_candidates {
+                    h_is_parent = true;
+                    arena.push_delta(idx, prepared.muts)
+                } else {
+                    arena.push_graph(prepared.graph)
+                };
+                queue.push(Reverse((OrderedF64(cost), seq, slot)));
                 seq += 1;
             }
+        }
+        // `h` is an enqueued child's parent: keep it materialized (no
+        // extra clone — `h` is owned and no longer needed).
+        if cfg.delta_candidates && h_is_parent {
+            arena.memoize(idx, h);
         }
     }
 
@@ -246,6 +521,7 @@ pub fn backtracking_search(
         initial_cost_ms: initial_cost,
         steps,
         evals,
+        peak_arena_bytes: arena.peak_bytes,
         elapsed: start.elapsed(),
     }
 }
@@ -299,6 +575,7 @@ mod tests {
         assert!(r.best_cost_ms < r.initial_cost_ms, "no improvement: {} -> {}", r.initial_cost_ms, r.best_cost_ms);
         assert!(r.best.validate().is_ok());
         assert!(r.evals > 10);
+        assert!(r.peak_arena_bytes > 0);
     }
 
     #[test]
@@ -323,6 +600,64 @@ mod tests {
         let b = backtracking_search(&g, &est, &quick_cfg());
         assert_eq!(a.best_cost_ms, b.best_cost_ms);
         assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn delta_arena_matches_eager_clones() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let delta = backtracking_search(&g, &est, &quick_cfg());
+        let eager_cfg = SearchConfig { delta_candidates: false, ..quick_cfg() };
+        let eager = backtracking_search(&g, &est, &eager_cfg);
+        assert_eq!(delta.best_cost_ms, eager.best_cost_ms);
+        assert_eq!(delta.evals, eager.evals);
+        assert_eq!(delta.steps, eager.steps);
+        assert_eq!(delta.best.fingerprint(), eager.best.fingerprint());
+        // Memory accounting is live in both modes (the big-workload
+        // delta-vs-eager comparison lives in the perf record, where queue
+        // depth makes the gap unambiguous).
+        assert!(delta.peak_arena_bytes > 0 && eager.peak_arena_bytes > 0);
+    }
+
+    #[test]
+    fn parallel_eval_matches_serial() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let serial_cfg = SearchConfig { eval_threads: 1, ..quick_cfg() };
+        // parallel_min_nodes: 0 forces the chunked worker path even on
+        // this small test workload.
+        let par_cfg = SearchConfig { eval_threads: 3, parallel_min_nodes: 0, ..quick_cfg() };
+        let a = backtracking_search(&g, &est, &serial_cfg);
+        let b = backtracking_search(&g, &est, &par_cfg);
+        assert_eq!(a.best_cost_ms, b.best_cost_ms);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.best.fingerprint(), b.best.fingerprint());
+    }
+
+    #[test]
+    fn legacy_engine_config_still_works() {
+        // The "before" A/B configuration used by the perf record.
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = SearchConfig {
+            eval_threads: 1,
+            delta_candidates: false,
+            reuse_workspaces: false,
+            incremental_candidates: false,
+            ..quick_cfg()
+        };
+        let r = backtracking_search(&g, &est, &cfg);
+        assert!(r.best_cost_ms <= r.initial_cost_ms);
+        assert!(r.best.validate().is_ok());
     }
 
     #[test]

@@ -76,6 +76,8 @@ pub fn execute_real(
         makespan_ms: 0.0,
         comp_busy_ms: 0.0,
         comm_busy_ms: 0.0,
+        comp_idle_ms: 0.0,
+        comm_idle_ms: 0.0,
         kernels: 0,
         allreduces: 0,
         peak_bytes: 0.0,
@@ -101,6 +103,8 @@ pub fn execute_real(
         acc.makespan_ms += r.makespan_ms;
         acc.comp_busy_ms += r.comp_busy_ms;
         acc.comm_busy_ms += r.comm_busy_ms;
+        acc.comp_idle_ms += r.comp_idle_ms;
+        acc.comm_idle_ms += r.comm_idle_ms;
         acc.kernels = r.kernels;
         acc.allreduces = r.allreduces;
         acc.peak_bytes = acc.peak_bytes.max(r.peak_bytes);
@@ -109,6 +113,8 @@ pub fn execute_real(
     acc.makespan_ms /= k;
     acc.comp_busy_ms /= k;
     acc.comm_busy_ms /= k;
+    acc.comp_idle_ms /= k;
+    acc.comm_idle_ms /= k;
     acc
 }
 

@@ -71,6 +71,13 @@ pub struct SimResult {
     pub comp_busy_ms: f64,
     /// Total channel busy time, ms (Fig. 7 "communication time").
     pub comm_busy_ms: f64,
+    /// Total compute-stream idle time spent waiting on dependencies: the
+    /// sum over kernels of `start − device_free_before` (dependency
+    /// stalls, not tail idle after the last kernel).
+    pub comp_idle_ms: f64,
+    /// Same for the communication channel: time the channel sat idle
+    /// between collectives waiting for a gradient to be produced.
+    pub comm_idle_ms: f64,
     /// Number of scheduled compute kernels.
     pub kernels: usize,
     /// Number of AllReduce operations executed.
@@ -110,6 +117,36 @@ pub fn fo_bound(graph: &TrainingGraph, costs: &dyn CostSource) -> f64 {
     comp.max(comm)
 }
 
+/// Reusable per-evaluation scratch state for [`simulate_in`]: the ready
+/// heap, in-degrees, ready times and memory refcounts. One workspace per
+/// simulating thread; reusing it across evaluations makes a full search
+/// perform zero per-eval scratch allocations once the vectors have grown
+/// to the largest graph seen (see `rust/PERF.md`).
+#[derive(Debug, Default)]
+pub struct SimWorkspace {
+    indeg: Vec<u32>,
+    ready: Vec<f64>,
+    consumers_left: Vec<u32>,
+    heap: BinaryHeap<Reverse<(OrderedF64, u32, u32)>>,
+}
+
+impl SimWorkspace {
+    pub fn new() -> SimWorkspace {
+        SimWorkspace::default()
+    }
+
+    /// Reset for a graph of `n` arena slots. Keeps capacity.
+    fn reset(&mut self, n: usize) {
+        self.indeg.clear();
+        self.indeg.resize(n, 0);
+        self.ready.clear();
+        self.ready.resize(n, 0.0);
+        self.consumers_left.clear();
+        self.consumers_left.resize(n, 0);
+        self.heap.clear();
+    }
+}
+
 /// Simulate one training iteration of `graph` under `costs`.
 ///
 /// Scheduling discipline: per resource, earliest-ready-first (FIFO on
@@ -121,27 +158,44 @@ pub fn simulate(graph: &TrainingGraph, costs: &dyn CostSource, opts: SimOptions)
 }
 
 /// [`simulate`] with a scheduling observer (Chrome-trace export etc.).
+/// Thin wrapper allocating a fresh workspace; hot paths call
+/// [`simulate_in`] with a reused one.
 pub fn simulate_with<R: Recorder>(
     graph: &TrainingGraph,
     costs: &dyn CostSource,
     opts: SimOptions,
     rec: &mut R,
 ) -> SimResult {
+    simulate_in(graph, costs, opts, rec, &mut SimWorkspace::new())
+}
+
+/// Core event loop: [`simulate_with`] threaded through a caller-owned
+/// [`SimWorkspace`]. Bit-identical to a fresh-workspace run (property
+/// test `prop_sim_workspace_reuse_identical`).
+pub fn simulate_in<R: Recorder>(
+    graph: &TrainingGraph,
+    costs: &dyn CostSource,
+    opts: SimOptions,
+    rec: &mut R,
+    ws: &mut SimWorkspace,
+) -> SimResult {
     let n = graph.nodes.len();
-    let mut indeg = vec![0usize; n];
-    let succ = graph.successors();
-    let mut ready_time = vec![0.0f64; n];
+    let succ = graph.succ_csr();
+    ws.reset(n);
 
     // (ready_time, seq, id) min-heap over BOTH resources; popping in global
     // ready order keeps each resource's discipline consistent (a newly
     // enabled node is never ready earlier than the node that enabled it).
-    let mut heap: BinaryHeap<Reverse<(OrderedF64, usize, NodeId)>> = BinaryHeap::new();
-    let mut seq = 0usize;
+    let mut seq = 0u32;
 
     for node in graph.live() {
-        indeg[node.id] = node.inputs.len();
+        ws.indeg[node.id] = node.inputs.len() as u32;
+        // Memory refcounting: an intermediate lives from its producer's
+        // completion until its last consumer's completion. Parameters and
+        // constants are persistent state, excluded from the peak.
+        ws.consumers_left[node.id] = succ.out_degree(node.id) as u32;
         if node.inputs.is_empty() {
-            heap.push(Reverse((OrderedF64(0.0), seq, node.id)));
+            ws.heap.push(Reverse((OrderedF64(0.0), seq, node.id as u32)));
             seq += 1;
         }
     }
@@ -150,50 +204,48 @@ pub fn simulate_with<R: Recorder>(
     let mut channel_free = 0.0f64;
     let mut comp_busy = 0.0f64;
     let mut comm_busy = 0.0f64;
+    let mut comp_idle = 0.0f64;
+    let mut comm_idle = 0.0f64;
     let mut kernels = 0usize;
     let mut allreduces = 0usize;
     let mut makespan = 0.0f64;
-    let mut completion = vec![0.0f64; n];
     let mut scheduled = 0usize;
 
-    // Memory refcounting: an intermediate lives from its producer's
-    // completion until its last consumer's completion. Parameters and
-    // constants are persistent state, excluded from the peak.
-    let mut consumers_left: Vec<usize> = succ.iter().map(|s| s.len()).collect();
     let mut live_bytes = 0.0f64;
     let mut peak_bytes = 0.0f64;
     let transient =
         |node: &Node| !matches!(node.kind, OpKind::Parameter | OpKind::Constant);
 
-    while let Some(Reverse((OrderedF64(rt), _s, id))) = heap.pop() {
+    while let Some(Reverse((OrderedF64(rt), _s, id))) = ws.heap.pop() {
+        let id = id as NodeId;
         let node = &graph.nodes[id];
-        let (start, done) = match node.kind {
+        let done = match node.kind {
             OpKind::AllReduce => {
                 if opts.ignore_comm {
-                    (rt, rt)
+                    rt
                 } else {
                     let start = (rt + opts.straggler_ms).max(channel_free);
+                    comm_idle += start - channel_free;
                     let t = costs.comm_time_ms(node.bytes_out);
                     channel_free = start + t;
                     comm_busy += t;
                     allreduces += 1;
                     rec.record(node, start, channel_free, true);
-                    (start, channel_free)
+                    channel_free
                 }
             }
-            OpKind::Parameter | OpKind::Constant => (rt, rt),
+            OpKind::Parameter | OpKind::Constant => rt,
             _ => {
                 let t = costs.compute_time_ms(node);
                 let start = rt.max(device_free);
+                comp_idle += start - device_free;
                 device_free = start + t;
                 comp_busy += t;
                 kernels += 1;
                 rec.record(node, start, device_free, false);
-                (start, device_free)
+                device_free
             }
         };
-        let _ = start;
-        completion[id] = done;
         makespan = makespan.max(done);
         scheduled += 1;
 
@@ -202,17 +254,18 @@ pub fn simulate_with<R: Recorder>(
             peak_bytes = peak_bytes.max(live_bytes);
         }
         for &i in &node.inputs {
-            consumers_left[i] -= 1;
-            if consumers_left[i] == 0 && transient(&graph.nodes[i]) {
+            ws.consumers_left[i] -= 1;
+            if ws.consumers_left[i] == 0 && transient(&graph.nodes[i]) {
                 live_bytes -= graph.nodes[i].bytes_out;
             }
         }
 
-        for &v in &succ[id] {
-            ready_time[v] = ready_time[v].max(done);
-            indeg[v] -= 1;
-            if indeg[v] == 0 {
-                heap.push(Reverse((OrderedF64(ready_time[v]), seq, v)));
+        for &v in succ.row(id) {
+            let v = v as NodeId;
+            ws.ready[v] = ws.ready[v].max(done);
+            ws.indeg[v] -= 1;
+            if ws.indeg[v] == 0 {
+                ws.heap.push(Reverse((OrderedF64(ws.ready[v]), seq, v as u32)));
                 seq += 1;
             }
         }
@@ -223,6 +276,8 @@ pub fn simulate_with<R: Recorder>(
         makespan_ms: makespan,
         comp_busy_ms: comp_busy,
         comm_busy_ms: comm_busy,
+        comp_idle_ms: comp_idle,
+        comm_idle_ms: comm_idle,
         kernels,
         allreduces,
         peak_bytes,
@@ -292,6 +347,21 @@ mod tests {
         assert_eq!(r.makespan_ms, 10.0);
         assert_eq!(r.comp_busy_ms, 10.0);
         assert_eq!(r.allreduces, 0);
+        // Device never stalls: every kernel is ready by the time the
+        // previous one finishes.
+        assert_eq!(r.comp_idle_ms, 0.0);
+    }
+
+    #[test]
+    fn workspace_reuse_identical_to_fresh() {
+        let mut ws = SimWorkspace::new();
+        let c = Fixed { comp: 0.7, comm: 1.3 };
+        for k in [1usize, 6, 3] {
+            let g = bp_chain(k);
+            let fresh = simulate(&g, &c, SimOptions::default());
+            let reused = simulate_in(&g, &c, SimOptions::default(), &mut NoRecord, &mut ws);
+            assert_eq!(fresh, reused, "k={k}");
+        }
     }
 
     #[test]
@@ -357,6 +427,10 @@ mod tests {
         let r = simulate(&g, &Fixed { comp: 1.0, comm: 10.0 }, SimOptions::default());
         // grad 0..1, AR 1..11, optimizer 11..12.
         assert_eq!(r.makespan_ms, 12.0);
+        // The device sat idle 1..11 waiting for the aggregated gradient;
+        // the channel sat idle 0..1 waiting for the gradient.
+        assert_eq!(r.comp_idle_ms, 10.0);
+        assert_eq!(r.comm_idle_ms, 1.0);
     }
 
     #[test]

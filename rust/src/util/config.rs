@@ -115,6 +115,21 @@ impl Config {
             if let Some(seed) = s.get("seed").as_usize() {
                 cfg.search.seed = seed as u64;
             }
+            if let Some(t) = s.get("eval_threads").as_usize() {
+                cfg.search.eval_threads = t;
+            }
+            if let Some(d) = s.get("delta_candidates").as_bool() {
+                cfg.search.delta_candidates = d;
+            }
+            if let Some(w) = s.get("reuse_workspaces").as_bool() {
+                cfg.search.reuse_workspaces = w;
+            }
+            if let Some(i) = s.get("incremental_candidates").as_bool() {
+                cfg.search.incremental_candidates = i;
+            }
+            if let Some(p) = s.get("parallel_min_nodes").as_usize() {
+                cfg.search.parallel_min_nodes = p;
+            }
         }
         Ok(cfg)
     }
@@ -148,6 +163,22 @@ mod tests {
         assert_eq!(c.search.alpha, 1.1);
         assert_eq!(c.search.beta, 5);
         assert_eq!(c.search.unchanged_limit, 42);
+    }
+
+    #[test]
+    fn engine_knobs_apply() {
+        let c = Config::from_json_str(
+            r#"{"search": {"eval_threads": 1, "delta_candidates": false,
+                 "reuse_workspaces": false, "incremental_candidates": false}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.search.eval_threads, 1);
+        assert!(!c.search.delta_candidates);
+        assert!(!c.search.reuse_workspaces);
+        assert!(!c.search.incremental_candidates);
+        // Defaults are the fast engine.
+        let d = Config::from_json_str("{}").unwrap();
+        assert!(d.search.delta_candidates && d.search.reuse_workspaces);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Typed stand-in for the `xla` (PJRT) crate, which is unavailable in the
+//! airgapped build (same policy as the in-tree substitutes in [`crate::util`]
+//! for rand/serde_json/clap). It mirrors exactly the API surface
+//! [`crate::runtime`] uses, so that module compiles unchanged; every entry
+//! point that would need a real XLA runtime returns an error instead.
+//!
+//! [`Runtime::new`](crate::runtime::Runtime::new) therefore fails with a
+//! clear message, and every caller already handles that path (the GNN
+//! estimator falls back to the analytical model, integration tests skip
+//! when artifacts are missing). Literal construction/readback is
+//! implemented for real so pure data plumbing stays testable.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for `xla::Error` (callers format it with `{:?}`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT backend not available in this build (offline stub; \
+         see rust/src/xla_stub.rs)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold (the subset the runtime uses).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Scalar types storable in a literal.
+pub trait NativeType: Copy {
+    fn wrap(data: &[Self]) -> Elements;
+    fn unwrap(e: &Elements) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Elements {
+        Elements::F32(data.to_vec())
+    }
+    fn unwrap(e: &Elements) -> Option<Vec<Self>> {
+        match e {
+            Elements::F32(v) => Some(v.clone()),
+            Elements::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Elements {
+        Elements::I32(data.to_vec())
+    }
+    fn unwrap(e: &Elements) -> Option<Vec<Self>> {
+        match e {
+            Elements::I32(v) => Some(v.clone()),
+            Elements::F32(_) => None,
+        }
+    }
+}
+
+/// Host tensor literal. Construction and readback work for real; only
+/// execution requires the missing backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    pub elements: Elements,
+    pub dims: Vec<i64>,
+}
+
+impl Literal {
+    fn len(&self) -> usize {
+        match &self.elements {
+            Elements::F32(v) => v.len(),
+            Elements::I32(v) => v.len(),
+        }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { elements: T::wrap(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape; errors when the element count does not match.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!("reshape: {} elems into {:?}", self.len(), dims)));
+        }
+        Ok(Literal { elements: self.elements, dims: dims.to_vec() })
+    }
+
+    /// Read elements back out (type-checked).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.elements).ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples (execution
+    /// is unavailable), so this is an error by construction.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module text (opaque here).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper (opaque here).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident result buffer.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Loaded executable handle.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `xla-rs`: per-device, per-output buffers.
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims, vec![2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&[1i32]).reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn backend_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("not available"));
+    }
+}

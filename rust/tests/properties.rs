@@ -9,7 +9,8 @@ use disco::graph::builder::GraphBuilder;
 use disco::graph::{OpKind, Role, TrainingGraph};
 use disco::network::Cluster;
 use disco::prop_assert;
-use disco::sim::{fo_bound, simulate, CostSource, SimOptions};
+use disco::search::{backtracking_search, SearchConfig};
+use disco::sim::{fo_bound, simulate, simulate_in, CostSource, NoRecord, SimOptions, SimWorkspace};
 use disco::util::prop::{check, CaseResult, PropConfig};
 use disco::util::rng::Rng;
 
@@ -162,6 +163,102 @@ fn prop_sim_monotone_in_comm_cost() {
             "3x comm got faster: {} vs {}",
             pricey.makespan_ms,
             cheap.makespan_ms
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_sim_workspace_reuse_identical() {
+    // One workspace reused across every case and graph size must produce
+    // results bit-identical to fresh-allocation runs (SimResult derives
+    // PartialEq over raw f64s — no tolerance).
+    let mut ws = SimWorkspace::new();
+    check("sim-workspace-reuse", PropConfig { cases: 96, seed: 0x5EED }, move |rng| {
+        let mut g = random_graph(rng);
+        random_rewrites(&mut g, rng, 6);
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.3) { 0.25 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.2),
+        };
+        let fresh = simulate(&g, &Unit, opts);
+        let reused = simulate_in(&g, &Unit, opts, &mut NoRecord, &mut ws);
+        prop_assert!(fresh == reused, "workspace reuse diverged: {fresh:?} vs {reused:?}");
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_search_delta_matches_eager() {
+    // Delta-rematerialized candidates must drive the search to the exact
+    // same trajectory as eager full-graph clones.
+    check("search-delta-vs-eager", PropConfig { cases: 10, seed: 0xDE17A }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        let est = CostEstimator::oracle(&prof, &device);
+        let base = SearchConfig {
+            unchanged_limit: 30,
+            max_queue: 32,
+            seed: rng.next_u64(),
+            eval_threads: 1,
+            ..Default::default()
+        };
+        let delta = backtracking_search(&g, &est, &base);
+        let eager_cfg = SearchConfig { delta_candidates: false, ..base };
+        let eager = backtracking_search(&g, &est, &eager_cfg);
+        prop_assert!(
+            delta.best_cost_ms == eager.best_cost_ms && delta.evals == eager.evals,
+            "trajectory diverged: {}ms/{} vs {}ms/{}",
+            delta.best_cost_ms,
+            delta.evals,
+            eager.best_cost_ms,
+            eager.evals
+        );
+        prop_assert!(
+            delta.best.fingerprint() == eager.best.fingerprint(),
+            "best modules differ"
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_search_parallel_matches_serial() {
+    // Fixed seed: worker-thread evaluation must reproduce the serial
+    // search exactly (mutations are generated serially; merge order is
+    // method order).
+    check("search-parallel-vs-serial", PropConfig { cases: 8, seed: 0x9A7 }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 3);
+        let est = CostEstimator::oracle(&prof, &device);
+        let base = SearchConfig {
+            unchanged_limit: 30,
+            max_queue: 32,
+            seed: rng.next_u64(),
+            eval_threads: 1,
+            ..Default::default()
+        };
+        let serial = backtracking_search(&g, &est, &base);
+        // parallel_min_nodes: 0 forces the worker path on small graphs.
+        let par_cfg = SearchConfig { eval_threads: 3, parallel_min_nodes: 0, ..base };
+        let parallel = backtracking_search(&g, &est, &par_cfg);
+        prop_assert!(
+            serial.best_cost_ms == parallel.best_cost_ms
+                && serial.evals == parallel.evals
+                && serial.steps == parallel.steps,
+            "parallel diverged: {}ms/{} vs {}ms/{}",
+            serial.best_cost_ms,
+            serial.evals,
+            parallel.best_cost_ms,
+            parallel.evals
+        );
+        prop_assert!(
+            serial.best.fingerprint() == parallel.best.fingerprint(),
+            "best modules differ"
         );
         CaseResult::Pass
     });
