@@ -1,18 +1,19 @@
 //! End-to-end driver (DESIGN.md §6): proves all three layers compose.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_train -- [--workers 4] [--steps 200]
+//! cargo run --release --example e2e_train -- [--workers 4] [--steps 200]
 //! ```
 //!
 //! 1. **Strategy**: build the transformer training graph, run DisCo's
 //!    joint op/tensor fusion search, and enact the optimized module
 //!    across workers via the coordinator (leader broadcast + hi-fi
 //!    execution) — the paper's pipeline on the simulated testbed.
-//! 2. **Real training**: train the AOT-compiled transformer LM
-//!    (Pallas attention + fused-Adam kernels, lowered by
-//!    `python/compile/aot.py`) for a few hundred steps across N worker
-//!    threads with *real* PJRT execution and a *real* ring AllReduce —
-//!    and log the loss curve.
+//! 2. **Real training**: train the AOT-compiled LM artifacts for a few
+//!    hundred steps across N worker threads with *real* artifact
+//!    execution (the in-tree HLO interpreter by default — no setup
+//!    needed; `make artifacts` + a PJRT binding swaps in the full
+//!    transformer lowered by `python/compile/aot.py`) and a *real* ring
+//!    AllReduce — and log the loss curve.
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
@@ -78,9 +79,16 @@ fn main() -> anyhow::Result<()> {
     }
     let first = res.log.first().map(|l| l.loss).unwrap_or(0.0);
     let last = res.log.last().map(|l| l.loss).unwrap_or(0.0);
+    let vocab = Manifest::load(&tcfg.artifacts)?
+        .raw
+        .get("lm")
+        .get("vocab")
+        .as_usize()
+        .unwrap_or(256);
     println!(
-        "\ntrain loss {first:.4} → {last:.4} ({}); uniform baseline ln(256)=5.545",
-        if last < first { "LEARNING ✓" } else { "NOT LEARNING ✗" }
+        "\ntrain loss {first:.4} → {last:.4} ({}); uniform baseline ln({vocab})={:.3}",
+        if last < first { "LEARNING ✓" } else { "NOT LEARNING ✗" },
+        (vocab as f64).ln()
     );
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! Train the GNN Fused-Op Estimator end-to-end from Rust (paper §4.3/§6.5).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example estimator_training -- [--per-model 400] [--epochs 15]
+//! cargo run --release --example estimator_training -- [--per-model 400] [--epochs 15]
 //! ```
 //!
 //! Pipeline: profile the six benchmark models → generate random fused-op
-//! samples (§5.2) → train the GNN through the `gnn_train` PJRT artifact →
+//! samples (§5.2) → train the GNN through the `gnn_train` artifact (the
+//! in-tree interpreter backend bootstraps artifacts automatically; a PJRT
+//! binding + `make artifacts` swaps in the JAX-lowered variant) →
 //! evaluate prediction error on unseen fused ops (the Fig. 9 experiment)
 //! → save trained parameters for the search to use (`--estimator gnn`).
 

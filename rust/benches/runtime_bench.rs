@@ -1,6 +1,7 @@
-//! PJRT runtime hot paths: GNN batch prediction latency (the search-time
+//! Runtime hot paths: GNN batch prediction latency (the search-time
 //! estimator query) and LM train-step latency (the enactment workload).
-//! Skips quietly when artifacts are missing.
+//! Runs on the default interpreter backend (bootstrapping artifacts if
+//! needed); skips quietly only when the stubbed PJRT backend is forced.
 
 use disco::estimator::AnalyticalFused;
 use disco::graph::{FusedGroup, OpKind, OrigOp};
@@ -28,11 +29,13 @@ fn chain(n: usize) -> FusedGroup {
 
 fn main() {
     let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("SKIP runtime_bench: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let rt = Runtime::new(&dir).unwrap();
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP runtime_bench: {e:#} (PJRT backend is stubbed offline)");
+            return;
+        }
+    };
 
     // GNN predictor latency at various batch fill levels.
     let fallback = AnalyticalFused { launch_ms: 0.005, bw_bytes_per_ms: 4.8e8 };

@@ -287,13 +287,18 @@ pub fn ablation_estimator(opts: &BenchOptions, artifacts: Option<&Path>) -> Resu
         "Ablation — fused-op estimator backend (strategies re-scored by oracle, ms)",
         &["model", "analytical", "gnn", "oracle"],
     );
-    // Optional trained GNN predictor shared across models.
-    let rt = match artifacts {
-        Some(dir) if dir.join("manifest.json").exists() => {
-            Some(crate::runtime::Runtime::new(dir)?)
+    // Optional trained GNN predictor shared across models. The default
+    // interpreter backend bootstraps an empty artifact dir; only the PJRT
+    // backend (offline stub) leaves `rt` as None and skips the GNN arm —
+    // any other failure (corrupt manifest, unreadable params) is reported
+    // rather than silently dropping the column.
+    let rt = artifacts.and_then(|dir| match crate::runtime::Runtime::new(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("ablation: GNN arm skipped: {e:#}");
+            None
         }
-        _ => None,
-    };
+    });
     for kind in [ModelKind::Rnnlm, ModelKind::Transformer] {
         let p = prepare(opts, kind, &cluster);
         let oracle = p.estimator(EstimatorKind::Oracle);

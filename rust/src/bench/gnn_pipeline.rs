@@ -1,6 +1,8 @@
 //! GNN estimator pipeline: generate fused-op samples from the model zoo,
-//! train the estimator through the PJRT train-step artifact, and evaluate
-//! prediction error on held-out fused ops (paper §6.5 / Fig. 9).
+//! train the estimator through the runtime's train-step artifact (the
+//! in-tree interpreter by default — fully offline, bootstrapping the
+//! artifact set if needed; DESIGN.md §9), and evaluate prediction error
+//! on held-out fused ops (paper §6.5 / Fig. 9).
 
 use super::BenchOptions;
 use crate::estimator::AnalyticalFused;

@@ -1,16 +1,22 @@
-//! Import real XLA HLO **text** modules into the DisCo IR.
+//! Parse real XLA HLO **text** modules — both into the DisCo IR and into
+//! the structured form the in-tree interpreter executes.
 //!
-//! This closes the loop with actual compiler artifacts: the modules that
-//! `python/compile/aot.py` exports (and any `.hlo.txt` dumped from XLA)
-//! can be loaded as a [`TrainingGraph`] and pushed through the same
-//! profiling / fusion / search pipeline as the synthetic model zoo —
-//! `disco import-hlo artifacts/lm_grads.hlo.txt` optimizes the very
-//! module the runtime executes.
+//! This closes the loop with actual compiler artifacts twice over:
 //!
-//! Scope: the ENTRY computation of the jax-emitted dialect (one
-//! instruction per line, `name = type opcode(operands), attrs`). Nested
-//! computations (reduce bodies, fusions) contribute no graph nodes; their
-//! cost is folded into the calling instruction's FLOP estimate. FLOPs for
+//! * [`import_hlo_text`] loads a module as a [`TrainingGraph`] so the
+//!   profiling / fusion / search pipeline can optimize it —
+//!   `disco import-hlo artifacts/lm_grads.hlo.txt` optimizes the very
+//!   module the runtime executes;
+//! * [`parse_module`] keeps the *full* structured module — every
+//!   computation, instruction, operand and attribute — which
+//!   [`crate::runtime::interp`] evaluates for real (DESIGN.md §9).
+//!
+//! Scope: the jax-emitted dialect (one instruction per line,
+//! `name = type opcode(operands), attrs`). Nested computations (reduce
+//! bodies, fusion bodies) are parsed like any other computation; for graph
+//! import they contribute no graph nodes, but their parsed bodies are
+//! walked to fold an exact per-application FLOP count into the calling
+//! instruction (previously a shape-only guess). FLOPs for
 //! `dot`/`convolution` are estimated from operand/result shapes (the
 //! contraction extent is inferred), elementwise ops count one FLOP per
 //! element — adequate for structure-level optimization, and stated in
@@ -20,44 +26,317 @@ use super::{DType, Node, NodeId, OpKind, Role, Shape, TrainingGraph};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
-/// Parse `f32[8,64]{1,0}` → (dtype, shape). Tuple types take their first
-/// element. `pred`/integer types map to I32-width accounting.
-fn parse_type(s: &str) -> Option<(DType, Shape)> {
-    let s = s.trim();
-    if let Some(inner) = s.strip_prefix('(') {
-        // Tuple: take the first element type — up to the first comma at
-        // bracket/brace depth 0 (commas also appear inside dims/layouts).
-        let mut depth = 0i32;
-        let mut end = inner.len();
-        for (i, c) in inner.char_indices() {
-            match c {
-                '[' | '{' => depth += 1,
-                ']' | '}' => depth -= 1,
-                ',' if depth == 0 => {
-                    end = i;
-                    break;
+// ---------------------------------------------------------------------------
+// Structured module form (shared by graph import and the interpreter).
+// ---------------------------------------------------------------------------
+
+/// Shape of one HLO value: an array or a (possibly nested) tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HloShape {
+    Array { dtype: DType, shape: Shape },
+    Tuple(Vec<HloShape>),
+}
+
+impl HloShape {
+    /// Parse `f32[8,64]{1,0}`, `pred[]`, or `(f32[5]{0}, s32[2]{0})`.
+    /// Layout annotations (`{1,0}`) are ignored. `pred`/integer types map
+    /// to I32-width accounting.
+    pub fn parse(s: &str) -> Option<HloShape> {
+        let s = s.trim();
+        if let Some(inner) = s.strip_prefix('(') {
+            let inner = inner.strip_suffix(')').unwrap_or(inner);
+            let mut elems = Vec::new();
+            for part in split_top_level(inner) {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
                 }
-                _ => {}
+                elems.push(HloShape::parse(part)?);
+            }
+            return Some(HloShape::Tuple(elems));
+        }
+        let bracket = s.find('[')?;
+        let dtype = match &s[..bracket] {
+            "f32" | "f64" => DType::F32,
+            "f16" => DType::F16,
+            "bf16" => DType::BF16,
+            _ => DType::I32, // s32/u32/pred/s64…: byte accounting only
+        };
+        let rest = &s[bracket + 1..];
+        let close = rest.find(']')?;
+        let dims_str = &rest[..close];
+        let dims: Vec<usize> = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str.split(',').map(|d| d.trim().parse().ok()).collect::<Option<_>>()?
+        };
+        Some(HloShape::Array { dtype, shape: Shape { dims } })
+    }
+
+    /// First array shape (tuples recurse into their first element) — the
+    /// single-tensor view the graph importer uses for tuple-typed nodes.
+    pub fn first_array(&self) -> Option<(DType, Shape)> {
+        match self {
+            HloShape::Array { dtype, shape } => Some((*dtype, shape.clone())),
+            HloShape::Tuple(elems) => elems.first()?.first_array(),
+        }
+    }
+
+    /// Element count of the array (first element for tuples).
+    pub fn elems(&self) -> usize {
+        self.first_array().map(|(_, s)| s.elems()).unwrap_or(0)
+    }
+}
+
+/// One parsed HLO instruction.
+#[derive(Debug, Clone)]
+pub struct HloInstr {
+    pub name: String,
+    pub is_root: bool,
+    pub shape: HloShape,
+    pub opcode: String,
+    /// Operand instruction names (type prefixes and `%` sigils stripped).
+    pub operands: Vec<String>,
+    /// Raw text between the operand parentheses — the literal payload for
+    /// `constant`/`parameter`, empty for most ops.
+    pub payload: String,
+    /// `key=value` attributes after the operand list, in order.
+    pub attrs: Vec<(String, String)>,
+}
+
+impl HloInstr {
+    /// Look up an attribute by key.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse a `{1,0}`-style attribute into a dimension list. Missing or
+    /// empty attributes yield an empty list.
+    pub fn dims_attr(&self, key: &str) -> Vec<usize> {
+        parse_dim_list(self.attr(key).unwrap_or(""))
+    }
+}
+
+/// Parse `{0,2}` / `0,2` / `{}` into a dimension list.
+pub fn parse_dim_list(s: &str) -> Vec<usize> {
+    s.trim()
+        .trim_start_matches('{')
+        .trim_end_matches('}')
+        .split(',')
+        .filter_map(|t| t.trim().parse::<usize>().ok())
+        .collect()
+}
+
+/// One computation (ENTRY or nested region/fusion body).
+#[derive(Debug, Clone)]
+pub struct HloComputation {
+    pub name: String,
+    pub is_entry: bool,
+    pub instrs: Vec<HloInstr>,
+}
+
+impl HloComputation {
+    /// Index of the root instruction (`ROOT`-marked, else the last one).
+    pub fn root(&self) -> Option<&HloInstr> {
+        self.instrs.iter().find(|i| i.is_root).or_else(|| self.instrs.last())
+    }
+}
+
+/// A fully parsed HLO text module.
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<HloComputation>,
+}
+
+impl HloModule {
+    /// The ENTRY computation.
+    pub fn entry(&self) -> Result<&HloComputation> {
+        self.computations
+            .iter()
+            .find(|c| c.is_entry)
+            .ok_or_else(|| anyhow!("no ENTRY computation found"))
+    }
+
+    /// Look up a nested computation by name (as cited by `to_apply=`/
+    /// `calls=` attributes, which may carry a `%` sigil).
+    pub fn computation(&self, name: &str) -> Option<&HloComputation> {
+        let name = name.trim_start_matches('%');
+        self.computations.iter().find(|c| c.name == name)
+    }
+}
+
+/// Split at top-level commas: commas nested inside `()`, `[]`, or `{}`
+/// don't split.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+/// Find the index of the `)` matching the `(` at `open` (byte offset).
+fn matching_paren(s: &str, open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (i, c) in s[open..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(open + i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse one instruction line; `None` for non-instruction lines.
+fn parse_instr(line: &str) -> Result<Option<HloInstr>> {
+    let line = line.trim();
+    let Some(eq) = line.find(" = ") else { return Ok(None) };
+    let mut lhs = line[..eq].trim();
+    let is_root = lhs.starts_with("ROOT ");
+    if is_root {
+        lhs = lhs["ROOT ".len()..].trim();
+    }
+    let name = lhs.trim_start_matches('%').to_string();
+    let rhs = line[eq + 3..].trim_start();
+
+    // rhs = "<type> <opcode>(<operands>)[, attrs]". Tuple types start with
+    // '(' — consume the balanced group first so we don't mistake it for
+    // the operand list.
+    let (type_str, rest) = if rhs.starts_with('(') {
+        let end = matching_paren(rhs, 0).ok_or_else(|| anyhow!("unbalanced type: {line}"))?;
+        (&rhs[..=end], rhs[end + 1..].trim_start())
+    } else {
+        let sp = rhs
+            .find(char::is_whitespace)
+            .ok_or_else(|| anyhow!("bad instruction: {line}"))?;
+        (&rhs[..sp], rhs[sp + 1..].trim_start())
+    };
+    let shape =
+        HloShape::parse(type_str).ok_or_else(|| anyhow!("bad type '{type_str}' in: {line}"))?;
+
+    let paren = rest.find('(').ok_or_else(|| anyhow!("no operands: {line}"))?;
+    let opcode = rest[..paren].trim().to_string();
+    let close =
+        matching_paren(rest, paren).ok_or_else(|| anyhow!("unclosed operands: {line}"))?;
+    let payload = rest[paren + 1..close].to_string();
+
+    // Constants / parameters keep their payload raw; everything else
+    // resolves operand names ("name" or "f32[...] %name" → last token).
+    let mut operands = Vec::new();
+    if opcode != "constant" && opcode != "parameter" && opcode != "iota" {
+        for tok in split_top_level(&payload) {
+            let t = tok.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let opname = t.rsplit(char::is_whitespace).next().unwrap_or(t);
+            operands.push(opname.trim_start_matches('%').to_string());
+        }
+    }
+
+    let mut attrs = Vec::new();
+    let tail = rest[close + 1..].trim_start().trim_start_matches(',').trim_start();
+    for part in split_top_level(tail) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some(eq) = part.find('=') {
+            attrs.push((part[..eq].trim().to_string(), part[eq + 1..].trim().to_string()));
+        }
+    }
+
+    Ok(Some(HloInstr { name, is_root, shape, opcode, operands, payload, attrs }))
+}
+
+/// Parse a full HLO text module into structured form: every computation
+/// (ENTRY and nested bodies), every instruction.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut name = "hlo_module".to_string();
+    let mut computations: Vec<HloComputation> = Vec::new();
+    let mut cur: Option<HloComputation> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule ") {
+            name = rest
+                .split([',', ' '])
+                .next()
+                .unwrap_or("hlo_module")
+                .trim_start_matches('%')
+                .to_string();
+            continue;
+        }
+        match &mut cur {
+            None => {
+                // Computation header: `name {`, `%name (args) -> type {`,
+                // or `ENTRY name {`.
+                if line.ends_with('{') && !line.contains(" = ") {
+                    let mut head = line[..line.len() - 1].trim();
+                    let is_entry = head.starts_with("ENTRY");
+                    if is_entry {
+                        head = head["ENTRY".len()..].trim_start();
+                    }
+                    let cname = head
+                        .split(|c: char| c.is_whitespace() || c == '(')
+                        .next()
+                        .unwrap_or("")
+                        .trim_start_matches('%')
+                        .to_string();
+                    cur = Some(HloComputation { name: cname, is_entry, instrs: Vec::new() });
+                }
+            }
+            Some(comp) => {
+                if line.starts_with('}') {
+                    computations.push(cur.take().unwrap());
+                    continue;
+                }
+                if let Some(instr) = parse_instr(line)? {
+                    comp.instrs.push(instr);
+                }
             }
         }
-        return parse_type(inner[..end].trim_end_matches(')'));
     }
-    let bracket = s.find('[')?;
-    let dtype = match &s[..bracket] {
-        "f32" => DType::F32,
-        "f16" => DType::F16,
-        "bf16" => DType::BF16,
-        _ => DType::I32, // s32/u32/pred/s64…: byte accounting only
-    };
-    let rest = &s[bracket + 1..];
-    let close = rest.find(']')?;
-    let dims_str = &rest[..close];
-    let dims: Vec<usize> = if dims_str.is_empty() {
-        vec![]
-    } else {
-        dims_str.split(',').map(|d| d.trim().parse().ok()).collect::<Option<_>>()?
-    };
-    Some((dtype, Shape { dims }))
+    if let Some(comp) = cur {
+        computations.push(comp); // tolerate a missing final brace
+    }
+    if computations.is_empty() {
+        return Err(anyhow!("no computations found in HLO text"));
+    }
+    Ok(HloModule { name, computations })
+}
+
+// ---------------------------------------------------------------------------
+// TrainingGraph import.
+// ---------------------------------------------------------------------------
+
+/// Parse `f32[8,64]{1,0}` → (dtype, shape). Tuple types take their first
+/// element.
+fn parse_type(s: &str) -> Option<(DType, Shape)> {
+    HloShape::parse(s)?.first_array()
 }
 
 /// Map an HLO opcode to our [`OpKind`].
@@ -112,10 +391,9 @@ fn estimate_flops(kind: OpKind, out: &Shape, inputs: &[(DType, Shape)]) -> f64 {
     match kind {
         OpKind::Parameter | OpKind::Constant => 0.0,
         OpKind::MatMul | OpKind::BatchMatMul => {
-            // 2 * |out| * contraction extent. Infer the contraction as
-            // |lhs| / leading-share: contraction ≈ lhs_elems * rhs_elems /
-            // (out_elems * batch²) is fragile; use lhs_elems*rhs_elems/out
-            // bounded to something sane.
+            // 2 * |out| * contraction extent, with the contraction inferred
+            // as sqrt(lhs·rhs/|out|) — exact for plain [m,k]×[k,n] matmuls
+            // and a sane bound elsewhere.
             let lhs = inputs.first().map(|i| i.1.elems()).unwrap_or(1) as f64;
             let rhs = inputs.get(1).map(|i| i.1.elems()).unwrap_or(1) as f64;
             let k = ((lhs * rhs) / out_elems.max(1.0)).sqrt().max(1.0);
@@ -130,79 +408,69 @@ fn estimate_flops(kind: OpKind, out: &Shape, inputs: &[(DType, Shape)]) -> f64 {
     }
 }
 
-/// Import the ENTRY computation of an HLO-text module.
-pub fn import_hlo_text(text: &str, num_workers: usize) -> Result<TrainingGraph> {
-    // Locate the ENTRY block (jax dialect: `ENTRY main.163 {` … `}`).
-    let entry_start = text
-        .lines()
-        .position(|l| l.trim_start().starts_with("ENTRY "))
-        .ok_or_else(|| anyhow!("no ENTRY computation found"))?;
-    let lines: Vec<&str> = text.lines().collect();
+/// Total FLOPs of a parsed nested computation, one application: sum the
+/// per-instruction estimates over its declared shapes. Reduce bodies are
+/// scalar computations, so this is typically 1–3 FLOPs; fusion bodies
+/// carry their real internal shapes.
+fn computation_flops(comp: &HloComputation) -> f64 {
+    comp.instrs
+        .iter()
+        .map(|i| {
+            let kind = map_opcode(&i.opcode);
+            let out = i.shape.first_array().map(|(_, s)| s).unwrap_or_default();
+            // Operand shapes aren't resolved here; the estimate only needs
+            // them for dot/conv/reduce, which use the output-shape bound.
+            estimate_flops(kind, &out, &[])
+        })
+        .sum()
+}
 
-    let mut name = "hlo_import".to_string();
-    if let Some(first) = lines.first() {
-        if let Some(rest) = first.strip_prefix("HloModule ") {
-            name = rest.split([',', ' ']).next().unwrap_or("hlo_import").to_string();
+/// FLOPs for an instruction, folding in the cost of any nested computation
+/// it applies (`to_apply=` for reduce/map, `calls=` for fusion/call).
+fn instr_flops(
+    module: &HloModule,
+    instr: &HloInstr,
+    kind: OpKind,
+    out: &Shape,
+    inputs: &[(DType, Shape)],
+) -> f64 {
+    let base = estimate_flops(kind, out, inputs);
+    let body = instr
+        .attr("to_apply")
+        .or_else(|| instr.attr("calls"))
+        .and_then(|name| module.computation(name));
+    match (kind, body) {
+        // One body application per reduced input element.
+        (OpKind::Reduce, Some(b)) => {
+            let apps = inputs.first().map(|i| i.1.elems()).unwrap_or(1) as f64;
+            apps * computation_flops(b).max(1.0)
         }
+        // Opaque fused/called bodies execute once; their internal shapes
+        // are the honest cost.
+        (OpKind::Fused, Some(b)) => computation_flops(b).max(base),
+        _ => base,
     }
+}
 
-    let mut g = TrainingGraph::new(&name, num_workers);
+/// Import the ENTRY computation of an HLO-text module as a
+/// [`TrainingGraph`].
+pub fn import_hlo_text(text: &str, num_workers: usize) -> Result<TrainingGraph> {
+    let module = parse_module(text)?;
+    let entry = module.entry()?;
+
+    let mut g = TrainingGraph::new(&module.name, num_workers);
     let mut by_name: HashMap<String, NodeId> = HashMap::new();
     let mut dtypes: HashMap<NodeId, (DType, Shape)> = HashMap::new();
 
-    for raw in lines[entry_start + 1..].iter() {
-        let line = raw.trim();
-        if line.starts_with('}') {
-            break;
-        }
-        let Some(eq) = line.find(" = ") else { continue };
-        let lhs_name = line[..eq].trim_start_matches("ROOT ").trim().to_string();
-        let rhs = line[eq + 3..].trim_start();
-        // rhs = "<type> <opcode>(<operands>)<attrs>". Tuple types start
-        // with '(' — consume the balanced group first so we don't mistake
-        // it for the operand list.
-        let (type_str, rest) = if rhs.starts_with('(') {
-            let mut depth = 0usize;
-            let mut end = 0usize;
-            for (i, c) in rhs.char_indices() {
-                match c {
-                    '(' => depth += 1,
-                    ')' => {
-                        depth -= 1;
-                        if depth == 0 {
-                            end = i;
-                            break;
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            (&rhs[..=end], rhs[end + 1..].trim_start())
-        } else {
-            let sp = rhs
-                .find(char::is_whitespace)
-                .ok_or_else(|| anyhow!("bad instruction: {line}"))?;
-            (&rhs[..sp], rhs[sp + 1..].trim_start())
-        };
-        let (dtype, shape) =
-            parse_type(type_str).ok_or_else(|| anyhow!("bad type '{type_str}' in: {line}"))?;
-        let paren = rest.find('(').ok_or_else(|| anyhow!("no operands: {line}"))?;
-        let opcode = rest[..paren].trim();
-        let close = rest[paren..]
-            .find(')')
-            .map(|i| paren + i)
-            .ok_or_else(|| anyhow!("unclosed operands: {line}"))?;
-        let operand_str = &rest[paren + 1..close];
+    for instr in &entry.instrs {
+        let (dtype, shape) = instr
+            .shape
+            .first_array()
+            .ok_or_else(|| anyhow!("empty tuple type on {}", instr.name))?;
         let mut inputs: Vec<NodeId> = Vec::new();
         let mut input_meta: Vec<(DType, Shape)> = Vec::new();
-        for tok in operand_str.split(',') {
-            let t = tok.trim().trim_start_matches('%');
-            if t.is_empty() {
-                continue;
-            }
-            // Operands may be "name" or "f32[...] name"; take the last token.
-            let opname = t.rsplit(char::is_whitespace).next().unwrap_or(t);
-            if let Some(&id) = by_name.get(opname) {
+        for opname in &instr.operands {
+            if let Some(&id) = by_name.get(opname.as_str()) {
                 if !inputs.contains(&id) {
                     inputs.push(id);
                     input_meta.push(dtypes[&id].clone());
@@ -210,15 +478,15 @@ pub fn import_hlo_text(text: &str, num_workers: usize) -> Result<TrainingGraph> 
             }
         }
 
-        let kind = map_opcode(opcode);
-        let flops = estimate_flops(kind, &shape, &input_meta);
+        let kind = map_opcode(&instr.opcode);
+        let flops = instr_flops(&module, instr, kind, &shape, &input_meta);
         let bytes_out = shape.bytes(dtype) as f64;
         let bytes_in: f64 =
             input_meta.iter().map(|(dt, sh)| sh.bytes(*dt) as f64).sum();
         let role = if kind == OpKind::AllReduce { Role::Comm } else { Role::Forward };
         let id = g.push(Node {
             id: 0,
-            name: lhs_name.clone(),
+            name: instr.name.clone(),
             kind,
             role,
             inputs: inputs.clone(),
@@ -251,7 +519,7 @@ pub fn import_hlo_text(text: &str, num_workers: usize) -> Result<TrainingGraph> 
             };
             g.nodes[id].fused = Some(super::FusedGroup { ops: vec![member], edges: vec![] });
         }
-        by_name.insert(lhs_name, id);
+        by_name.insert(instr.name.clone(), id);
         let meta = (g.nodes[id].dtype, g.nodes[id].shape.clone());
         dtypes.insert(id, meta);
     }
@@ -310,6 +578,33 @@ ENTRY main.9 {
     }
 
     #[test]
+    fn structured_parse_sees_nested_bodies() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.computations.len(), 2);
+        let region = m.computation("region_0.1").unwrap();
+        assert_eq!(region.instrs.len(), 3);
+        assert_eq!(region.root().unwrap().opcode, "add");
+        assert!(!region.is_entry);
+        let entry = m.entry().unwrap();
+        assert_eq!(entry.instrs.len(), 7);
+        assert_eq!(entry.root().unwrap().opcode, "tanh");
+        // The reduce cites the region and carries its attrs.
+        let red = entry.instrs.iter().find(|i| i.opcode == "reduce").unwrap();
+        assert_eq!(red.attr("to_apply"), Some("region_0.1"));
+        assert_eq!(red.dims_attr("dimensions"), vec![1]);
+        assert_eq!(red.operands, vec!["dot.5", "constant.2"]);
+    }
+
+    #[test]
+    fn reduce_flops_fold_in_the_parsed_body() {
+        let g = import_hlo_text(TINY, 1).unwrap();
+        let red = g.live().find(|n| n.kind == OpKind::Reduce).unwrap();
+        // 16 input elements, 1-FLOP scalar add body.
+        assert!((red.flops - 16.0).abs() < 1e-9, "flops={}", red.flops);
+    }
+
+    #[test]
     fn type_parser_cases() {
         assert_eq!(parse_type("f32[8,64]{1,0}").unwrap().1.dims, vec![8, 64]);
         assert_eq!(parse_type("f32[]").unwrap().1.dims, Vec::<usize>::new());
@@ -318,6 +613,32 @@ ENTRY main.9 {
         // Tuple takes the first element.
         assert_eq!(parse_type("(f32[5]{0}, s32[2]{0})").unwrap().1.dims, vec![5]);
         assert!(parse_type("garbage").is_none());
+        // Full tuple shape retained in structured form.
+        match HloShape::parse("(f32[5]{0}, s32[2]{0})").unwrap() {
+            HloShape::Tuple(elems) => assert_eq!(elems.len(), 2),
+            other => panic!("expected tuple, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn instr_parser_attrs_and_payloads() {
+        let i = parse_instr("  c = f32[2,2]{1,0} constant({ { 1, 2 }, { 3, 4 } })")
+            .unwrap()
+            .unwrap();
+        assert_eq!(i.opcode, "constant");
+        assert!(i.operands.is_empty());
+        assert_eq!(i.payload, "{ { 1, 2 }, { 3, 4 } }");
+
+        let i = parse_instr("ROOT s = f32[2]{0} slice(x), slice={[1:3]}").unwrap().unwrap();
+        assert!(i.is_root);
+        assert_eq!(i.attr("slice"), Some("{[1:3]}"));
+
+        let i = parse_instr("d = f32[4,4] dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+            .unwrap()
+            .unwrap();
+        assert_eq!(i.dims_attr("lhs_contracting_dims"), vec![1]);
+        assert_eq!(i.dims_attr("rhs_contracting_dims"), vec![0]);
+        assert_eq!(i.operands, vec!["a", "b"]);
     }
 
     #[test]

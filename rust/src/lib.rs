@@ -14,7 +14,8 @@
 //! ([`search`], Alg. 1 of the paper) is driven by a discrete-event
 //! [`sim`]ulator whose fused-op costs come from a [`estimator`] — either an
 //! analytical model or the paper's GNN *Fused Op Estimator*, executed as an
-//! AOT-compiled XLA artifact through [`runtime`].
+//! AOT-compiled HLO artifact through [`runtime`] (an in-tree HLO
+//! interpreter by default; PJRT when a real `xla` binding is present).
 //!
 //! The distributed substrate the paper assumes (GPU cluster + NCCL) is
 //! replaced by an analytical [`device`] model, a ring-AllReduce [`network`]

@@ -10,7 +10,12 @@
 //!                 [--full] [--estimator ...] [--out EXPERIMENTS.md-section]
 //! disco train-gnn [--per-model 800] [--epochs 30]
 //! disco e2e       [--workers 4] [--steps 200]
+//! disco gen-artifacts [--out artifacts]
 //! ```
+//!
+//! Every runtime-touching command accepts `--backend interp|pjrt`
+//! (default: the in-tree HLO interpreter, which runs fully offline —
+//! DESIGN.md §9).
 
 use anyhow::{anyhow, Result};
 use disco::bench::{experiments, BenchOptions, EstimatorKind, Scale};
@@ -177,7 +182,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if run("fig9") {
         match experiments::fig9(&opts, &artifacts) {
             Ok(s) => sections.push(s),
-            Err(e) => eprintln!("fig9 skipped: {e} (run `make artifacts`)"),
+            Err(e) => eprintln!(
+                "fig9 skipped: {e} (interpreter backend bootstraps artifacts \
+                 automatically; for PJRT run `make artifacts`)"
+            ),
         }
     }
     if run("table2") {
@@ -273,6 +281,20 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_gen_artifacts(args: &Args) -> Result<()> {
+    let dir = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    disco::runtime::gen::write_artifacts(&dir)?;
+    println!(
+        "wrote offline artifact set to {} (HLO text + params + manifest; \
+         executable by the in-tree interpreter — DESIGN.md §9)",
+        dir.display()
+    );
+    Ok(())
+}
+
 fn cmd_export_samples(args: &Args) -> Result<()> {
     let opts = bench_opts(args)?;
     let per_model = args.get_usize("per-model", 200);
@@ -358,11 +380,20 @@ fn cmd_import_hlo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: disco <search|enact|worker|profile|bench|train-gnn|e2e|import-hlo> [options]
+const USAGE: &str = "usage: disco <search|enact|worker|profile|bench|train-gnn|e2e|import-hlo|gen-artifacts> [options]
   run `disco <cmd> --help` conventions: see rust/src/main.rs module docs";
 
 fn main() {
     let args = Args::from_env();
+    // `--backend interp|pjrt` selects the runtime engine for this process
+    // (read by BackendKind::from_env at every Runtime construction).
+    if let Some(b) = args.get("backend") {
+        if disco::runtime::BackendKind::parse(b).is_none() {
+            eprintln!("error: unknown backend '{b}' (expected interp|pjrt)");
+            std::process::exit(2);
+        }
+        std::env::set_var("DISCO_BACKEND", b);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "search" => cmd_search(&args),
@@ -373,6 +404,7 @@ fn main() {
         "train-gnn" => cmd_train_gnn(&args),
         "e2e" => cmd_e2e(&args),
         "import-hlo" => cmd_import_hlo(&args),
+        "gen-artifacts" => cmd_gen_artifacts(&args),
         "export-samples" => cmd_export_samples(&args),
         "trace" => cmd_trace(&args),
         _ => {

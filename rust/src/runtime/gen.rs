@@ -1,0 +1,825 @@
+//! Offline artifact generator (DESIGN.md §9).
+//!
+//! `python/compile/aot.py` lowers the L2 JAX models to HLO text with a
+//! real XLA — but that toolchain isn't available in the airgapped build.
+//! This module emits an equivalent set of artifacts *from Rust*: HLO text
+//! modules (forward passes, hand-derived backward passes, and fused Adam
+//! updates), initial parameter files, and `manifest.json`, all executable
+//! by the in-tree interpreter ([`crate::runtime::interp`]).
+//!
+//! The generated models are smaller, documented variants of aot.py's
+//! (the manifest carries every shape, so the Rust side adapts
+//! automatically — see the feature contract in [`crate::runtime::gnn`]):
+//!
+//! * **GNN estimator** — one mean-aggregation graph-conv layer with a
+//!   tanh residual + a 2-layer regression MLP over the masked-sum
+//!   embedding (aot.py: 6 GAT layers). Same inputs `(flat, feats, adj,
+//!   mask)`, same log-space MSE objective, same flat-vector Adam step.
+//! * **Transformer LM → bigram LM** — next-token logits from a single
+//!   `[vocab, vocab]` table via one-hot matmul. The distributed-training
+//!   example still exercises the full loop: per-worker gradients, real
+//!   ring AllReduce, fused Adam, held-out eval.
+//!
+//! Backward passes are hand-derived chain rules over dot/reduce/
+//! elementwise ops; `tests/interp.rs` verifies them against finite
+//! differences through the interpreter.
+
+use crate::graph::DType;
+use crate::runtime::gnn::{FEAT_DIM, MAX_NODES};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Hidden width of the offline GNN variant.
+pub const GNN_HIDDEN: usize = 16;
+/// MLP hidden width of the offline GNN variant.
+pub const GNN_MLP_HIDDEN: usize = 16;
+/// Static batch of the GNN artifacts (queries arrive in small bursts).
+pub const GNN_BATCH: usize = 8;
+/// Adam learning rate baked into `gnn_train.hlo.txt`. Higher than
+/// aot.py's 2e-3: the offline variant is trained for few steps in tests
+/// and examples, and Adam's per-step movement is ≈ lr.
+pub const GNN_LR: f64 = 2e-2;
+
+/// Bigram-LM vocabulary (the synthetic corpus is ASCII, < 128).
+pub const LM_VOCAB: usize = 128;
+/// Token window length per example.
+pub const LM_SEQ: usize = 32;
+/// Per-worker batch size.
+pub const LM_BATCH: usize = 4;
+/// Adam learning rate baked into `lm_adam.hlo.txt`.
+pub const LM_LR: f64 = 2e-2;
+
+/// Flat parameter-vector length of the GNN estimator:
+/// `[W_in, b_in, W1, b1, Wm1, bm1, Wm2, bm2]` concatenated.
+pub fn gnn_flat_len() -> usize {
+    let (f, h, m) = (FEAT_DIM, GNN_HIDDEN, GNN_MLP_HIDDEN);
+    f * h + h + h * h + h + h * m + m + m + 1
+}
+
+/// Flat parameter length of the bigram LM (the logit table).
+pub fn lm_flat_len() -> usize {
+    LM_VOCAB * LM_VOCAB
+}
+
+// ---------------------------------------------------------------------------
+// Tiny HLO text emitter.
+// ---------------------------------------------------------------------------
+
+/// Instruction handle within an [`Emit`] builder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Id(usize);
+
+/// Builds the ENTRY computation of an HLO text module, tracking the
+/// shape of every emitted instruction so op helpers can compute result
+/// types exactly the way the interpreter does.
+struct Emit {
+    lines: Vec<String>,
+    shapes: Vec<(DType, Vec<usize>)>,
+    need_sum: bool,
+    need_max: bool,
+}
+
+fn dimlist(dims: &[usize]) -> String {
+    let parts: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+impl Emit {
+    fn new() -> Emit {
+        Emit { lines: Vec::new(), shapes: Vec::new(), need_sum: false, need_max: false }
+    }
+
+    fn ty(dt: DType, dims: &[usize]) -> String {
+        let base = match dt {
+            DType::I32 => "s32",
+            _ => "f32",
+        };
+        let parts: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+        format!("{base}[{}]", parts.join(","))
+    }
+
+    fn nm(&self, id: Id) -> String {
+        format!("v{}", id.0)
+    }
+
+    fn dims(&self, id: Id) -> &[usize] {
+        &self.shapes[id.0].1
+    }
+
+    fn push_ty(&mut self, dt: DType, dims: Vec<usize>, tystr: String, expr: String) -> Id {
+        let id = Id(self.shapes.len());
+        self.lines.push(format!("  v{} = {tystr} {expr}", id.0));
+        self.shapes.push((dt, dims));
+        id
+    }
+
+    fn push(&mut self, dt: DType, dims: Vec<usize>, expr: String) -> Id {
+        let ty = Self::ty(dt, &dims);
+        self.push_ty(dt, dims, ty, expr)
+    }
+
+    fn param(&mut self, idx: usize, dt: DType, dims: &[usize]) -> Id {
+        self.push(dt, dims.to_vec(), format!("parameter({idx})"))
+    }
+
+    /// Scalar f32 constant.
+    fn cf(&mut self, v: f64) -> Id {
+        self.push(DType::F32, vec![], format!("constant({:?})", v as f32))
+    }
+
+    /// Scalar constant broadcast to `dims`.
+    fn splat(&mut self, v: f64, dims: &[usize]) -> Id {
+        let c = self.cf(v);
+        self.bcast(c, dims, &[])
+    }
+
+    /// Broadcast with an explicit operand→output dimension mapping.
+    fn bcast(&mut self, x: Id, out_dims: &[usize], mapping: &[usize]) -> Id {
+        let (dt, in_dims) = self.shapes[x.0].clone();
+        assert_eq!(in_dims.len(), mapping.len(), "bcast mapping rank");
+        for (k, &m) in mapping.iter().enumerate() {
+            assert_eq!(out_dims[m], in_dims[k], "bcast extent");
+        }
+        let expr = format!("broadcast({}), dimensions={}", self.nm(x), dimlist(mapping));
+        self.push(dt, out_dims.to_vec(), expr)
+    }
+
+    fn bin(&mut self, op: &str, a: Id, b: Id) -> Id {
+        assert_eq!(self.dims(a), self.dims(b), "{op} operand shapes");
+        let (dt, dims) = self.shapes[a.0].clone();
+        let expr = format!("{op}({}, {})", self.nm(a), self.nm(b));
+        self.push(dt, dims, expr)
+    }
+
+    fn un(&mut self, op: &str, a: Id) -> Id {
+        let (dt, dims) = self.shapes[a.0].clone();
+        let expr = format!("{op}({})", self.nm(a));
+        self.push(dt, dims, expr)
+    }
+
+    /// General dot; result dims are `[batch (lhs order), lhs free, rhs
+    /// free]` — must mirror the interpreter exactly.
+    fn dot(&mut self, a: Id, b: Id, lb: &[usize], lc: &[usize], rb: &[usize], rc: &[usize]) -> Id {
+        let ldims = self.dims(a).to_vec();
+        let rdims = self.dims(b).to_vec();
+        for (&x, &y) in lb.iter().zip(rb) {
+            assert_eq!(ldims[x], rdims[y], "dot batch extent");
+        }
+        for (&x, &y) in lc.iter().zip(rc) {
+            assert_eq!(ldims[x], rdims[y], "dot contraction extent");
+        }
+        let mut out: Vec<usize> = lb.iter().map(|&d| ldims[d]).collect();
+        out.extend((0..ldims.len()).filter(|d| !lb.contains(d) && !lc.contains(d)).map(|d| ldims[d]));
+        out.extend((0..rdims.len()).filter(|d| !rb.contains(d) && !rc.contains(d)).map(|d| rdims[d]));
+        let expr = format!(
+            "dot({}, {}), lhs_batch_dims={}, lhs_contracting_dims={}, rhs_batch_dims={}, rhs_contracting_dims={}",
+            self.nm(a),
+            self.nm(b),
+            dimlist(lb),
+            dimlist(lc),
+            dimlist(rb),
+            dimlist(rc)
+        );
+        self.push(DType::F32, out, expr)
+    }
+
+    fn reduce_sum(&mut self, a: Id, rdims: &[usize]) -> Id {
+        self.need_sum = true;
+        let init = self.cf(0.0);
+        self.reduce(a, init, rdims, "sum_f32")
+    }
+
+    fn reduce_max(&mut self, a: Id, rdims: &[usize]) -> Id {
+        self.need_max = true;
+        let init = self.push(DType::F32, vec![], "constant(-inf)".to_string());
+        self.reduce(a, init, rdims, "max_f32")
+    }
+
+    fn reduce(&mut self, a: Id, init: Id, rdims: &[usize], body: &str) -> Id {
+        let in_dims = self.dims(a).to_vec();
+        let out: Vec<usize> = (0..in_dims.len())
+            .filter(|d| !rdims.contains(d))
+            .map(|d| in_dims[d])
+            .collect();
+        let expr = format!(
+            "reduce({}, {}), dimensions={}, to_apply={body}",
+            self.nm(a),
+            self.nm(init),
+            dimlist(rdims)
+        );
+        self.push(DType::F32, out, expr)
+    }
+
+    fn reshape(&mut self, a: Id, dims: &[usize]) -> Id {
+        let (dt, in_dims) = self.shapes[a.0].clone();
+        assert_eq!(
+            in_dims.iter().product::<usize>(),
+            dims.iter().product::<usize>(),
+            "reshape elems"
+        );
+        let expr = format!("reshape({})", self.nm(a));
+        self.push(dt, dims.to_vec(), expr)
+    }
+
+    fn transpose(&mut self, a: Id, perm: &[usize]) -> Id {
+        let (dt, in_dims) = self.shapes[a.0].clone();
+        let dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+        let expr = format!("transpose({}), dimensions={}", self.nm(a), dimlist(perm));
+        self.push(dt, dims, expr)
+    }
+
+    /// 1-D slice `[start:end]`.
+    fn slice1(&mut self, a: Id, start: usize, end: usize) -> Id {
+        let (dt, _) = self.shapes[a.0];
+        let expr = format!("slice({}), slice={{[{start}:{end}]}}", self.nm(a));
+        self.push(dt, vec![end - start], expr)
+    }
+
+    /// 2-D slice `[r0:r1, c0:c1]`.
+    fn slice2(&mut self, a: Id, r: (usize, usize), c: (usize, usize)) -> Id {
+        let (dt, _) = self.shapes[a.0];
+        let expr = format!(
+            "slice({}), slice={{[{}:{}], [{}:{}]}}",
+            self.nm(a),
+            r.0,
+            r.1,
+            c.0,
+            c.1
+        );
+        self.push(dt, vec![r.1 - r.0, c.1 - c.0], expr)
+    }
+
+    fn concat1(&mut self, parts: &[Id], total: usize) -> Id {
+        let names: Vec<String> = parts.iter().map(|&p| self.nm(p)).collect();
+        let expr = format!("concatenate({}), dimensions={{0}}", names.join(", "));
+        self.push(DType::F32, vec![total], expr)
+    }
+
+    /// Elementwise compare producing a `pred` tensor (stored as i32).
+    fn cmp(&mut self, a: Id, b: Id, direction: &str) -> Id {
+        assert_eq!(self.dims(a), self.dims(b), "compare shapes");
+        let dims = self.dims(a).to_vec();
+        let parts: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+        let tystr = format!("pred[{}]", parts.join(","));
+        let expr = format!("compare({}, {}), direction={direction}", self.nm(a), self.nm(b));
+        self.push_ty(DType::I32, dims, tystr, expr)
+    }
+
+    fn convert_f32(&mut self, a: Id) -> Id {
+        let dims = self.dims(a).to_vec();
+        let expr = format!("convert({})", self.nm(a));
+        self.push(DType::F32, dims, expr)
+    }
+
+    fn iota_i32(&mut self, dims: &[usize], d: usize) -> Id {
+        self.push(DType::I32, dims.to_vec(), format!("iota(), iota_dimension={d}"))
+    }
+
+    /// Emit the ROOT tuple and assemble the final module text.
+    fn finish(mut self, module_name: &str, outputs: &[Id]) -> String {
+        let types: Vec<String> =
+            outputs.iter().map(|&o| Self::ty(self.shapes[o.0].0, self.dims(o))).collect();
+        let names: Vec<String> = outputs.iter().map(|&o| self.nm(o)).collect();
+        let id = self.shapes.len();
+        self.lines.push(format!(
+            "  ROOT v{id} = ({}) tuple({})",
+            types.join(", "),
+            names.join(", ")
+        ));
+        let mut text = format!("HloModule {module_name}\n\n");
+        if self.need_sum {
+            text.push_str(
+                "sum_f32 {\n  sa = f32[] parameter(0)\n  sb = f32[] parameter(1)\n  ROOT sr = f32[] add(sa, sb)\n}\n\n",
+            );
+        }
+        if self.need_max {
+            text.push_str(
+                "max_f32 {\n  ma = f32[] parameter(0)\n  mb = f32[] parameter(1)\n  ROOT mr = f32[] maximum(ma, mb)\n}\n\n",
+            );
+        }
+        text.push_str("ENTRY main {\n");
+        for l in &self.lines {
+            text.push_str(l);
+            text.push('\n');
+        }
+        text.push_str("}\n");
+        text
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared building blocks.
+// ---------------------------------------------------------------------------
+
+/// Fused Adam update on a flat `[n]` vector; returns `(p', m', v')`.
+/// `t` is the 1-based step count as an `f32[1]` input.
+fn adam(e: &mut Emit, p: Id, g: Id, m: Id, v: Id, t: Id, lr: f64, n: usize) -> (Id, Id, Id) {
+    let dims = [n];
+    let ts = e.reshape(t, &[]);
+    let b1 = e.cf(0.9);
+    let b2 = e.cf(0.999);
+    let b1t = e.bin("power", b1, ts);
+    let b2t = e.bin("power", b2, ts);
+    let one = e.cf(1.0);
+    let mc = e.bin("subtract", one, b1t); // 1 - β1^t
+    let vc = e.bin("subtract", one, b2t);
+
+    let c_b1 = e.splat(0.9, &dims);
+    let c_1mb1 = e.splat(0.1, &dims);
+    let c_b2 = e.splat(0.999, &dims);
+    let c_1mb2 = e.splat(0.001, &dims);
+    let m_scaled = e.bin("multiply", c_b1, m);
+    let g_scaled = e.bin("multiply", c_1mb1, g);
+    let m2 = e.bin("add", m_scaled, g_scaled);
+    let gg = e.bin("multiply", g, g);
+    let v_scaled = e.bin("multiply", c_b2, v);
+    let gg_scaled = e.bin("multiply", c_1mb2, gg);
+    let v2 = e.bin("add", v_scaled, gg_scaled);
+
+    let mcb = e.bcast(mc, &dims, &[]);
+    let vcb = e.bcast(vc, &dims, &[]);
+    let mhat = e.bin("divide", m2, mcb);
+    let vhat = e.bin("divide", v2, vcb);
+    let sv = e.un("sqrt", vhat);
+    let eps = e.splat(1e-8, &dims);
+    let denom = e.bin("add", sv, eps);
+    let upd = e.bin("divide", mhat, denom);
+    let lrb = e.splat(lr, &dims);
+    let step = e.bin("multiply", lrb, upd);
+    let p2 = e.bin("subtract", p, step);
+    (p2, m2, v2)
+}
+
+/// Intermediate values of the GNN forward pass needed by the backward.
+struct GnnFwd {
+    w1: Id,
+    wm1: Id,
+    wm2: Id,
+    t0: Id,
+    t1: Id,
+    agg: Id,
+    g: Id,
+    u1: Id,
+    r1: Id,
+    mask3: Id,
+    /// Prediction in log space, `[B]`.
+    yv: Id,
+}
+
+/// Emit the GNN forward pass: `yv = ln t̂` for each batched subgraph.
+fn gnn_forward(e: &mut Emit, flat: Id, feats: Id, adj: Id, mask: Id) -> GnnFwd {
+    let (f, h, m, b, n) = (FEAT_DIM, GNN_HIDDEN, GNN_MLP_HIDDEN, GNN_BATCH, MAX_NODES);
+    // Unpack the flat parameter vector.
+    let mut off = 0usize;
+    let mut take = |e: &mut Emit, len: usize| -> Id {
+        let s = e.slice1(flat, off, off + len);
+        off += len;
+        s
+    };
+    let w_in_flat = take(e, f * h);
+    let w_in = e.reshape(w_in_flat, &[f, h]);
+    let b_in = take(e, h);
+    let w1_flat = take(e, h * h);
+    let w1 = e.reshape(w1_flat, &[h, h]);
+    let b1 = take(e, h);
+    let wm1_flat = take(e, h * m);
+    let wm1 = e.reshape(wm1_flat, &[h, m]);
+    let bm1 = take(e, m);
+    let wm2_flat = take(e, m);
+    let wm2 = e.reshape(wm2_flat, &[m, 1]);
+    let bm2 = take(e, 1);
+    debug_assert_eq!(off, gnn_flat_len());
+
+    let bnh = [b, n, h];
+    // h0 = tanh(feats·W_in + b_in) * mask
+    let z0a = e.dot(feats, w_in, &[], &[2], &[], &[0]);
+    let b_in3 = e.bcast(b_in, &bnh, &[2]);
+    let z0 = e.bin("add", z0a, b_in3);
+    let t0 = e.un("tanh", z0);
+    let mask3 = e.bcast(mask, &bnh, &[0, 1]);
+    let h0 = e.bin("multiply", t0, mask3);
+    // One graph-conv layer: agg = adj·h0 (message passing over data deps).
+    let agg = e.dot(adj, h0, &[0], &[2], &[0], &[1]);
+    let z1a = e.dot(agg, w1, &[], &[2], &[], &[0]);
+    let b13 = e.bcast(b1, &bnh, &[2]);
+    let z1 = e.bin("add", z1a, b13);
+    let t1 = e.un("tanh", z1);
+    // Residual + re-mask, then the masked-sum fused-op embedding (eq. (2)).
+    let hs = e.bin("add", h0, t1);
+    let hm = e.bin("multiply", hs, mask3);
+    let g = e.reduce_sum(hm, &[1]); // [B, H]
+    // Regression MLP: relu hidden + linear output in log space.
+    let u1a = e.dot(g, wm1, &[], &[1], &[], &[0]);
+    let bm1b = e.bcast(bm1, &[b, m], &[1]);
+    let u1 = e.bin("add", u1a, bm1b);
+    let zero_bm = e.splat(0.0, &[b, m]);
+    let r1 = e.bin("maximum", u1, zero_bm);
+    let ya = e.dot(r1, wm2, &[], &[1], &[], &[0]);
+    let bm2b = e.bcast(bm2, &[b, 1], &[1]);
+    let y2 = e.bin("add", ya, bm2b);
+    let yv = e.reshape(y2, &[b]);
+    GnnFwd { w1, wm1, wm2, t0, t1, agg, g, u1, r1, mask3, yv }
+}
+
+/// `gnn_infer.hlo.txt`: `(flat, feats, adj, mask) -> (t̂_ms[B],)`.
+pub fn gnn_infer_hlo() -> String {
+    let (f, b, n) = (FEAT_DIM, GNN_BATCH, MAX_NODES);
+    let mut e = Emit::new();
+    let flat = e.param(0, DType::F32, &[gnn_flat_len()]);
+    let feats = e.param(1, DType::F32, &[b, n, f]);
+    let adj = e.param(2, DType::F32, &[b, n, n]);
+    let mask = e.param(3, DType::F32, &[b, n]);
+    let fwd = gnn_forward(&mut e, flat, feats, adj, mask);
+    let pred = e.un("exponential", fwd.yv);
+    e.finish("gnn_infer_offline", &[pred])
+}
+
+/// `gnn_train.hlo.txt`: one fused forward+backward+Adam step.
+/// `(flat, m, v, t, feats, adj, mask, target_ms) -> (loss, flat', m', v')`.
+pub fn gnn_train_hlo() -> String {
+    let (f, h, m_dim, b, n) = (FEAT_DIM, GNN_HIDDEN, GNN_MLP_HIDDEN, GNN_BATCH, MAX_NODES);
+    let flat_len = gnn_flat_len();
+    let mut e = Emit::new();
+    let flat = e.param(0, DType::F32, &[flat_len]);
+    let m_in = e.param(1, DType::F32, &[flat_len]);
+    let v_in = e.param(2, DType::F32, &[flat_len]);
+    let t_in = e.param(3, DType::F32, &[1]);
+    let feats = e.param(4, DType::F32, &[b, n, f]);
+    let adj = e.param(5, DType::F32, &[b, n, n]);
+    let mask = e.param(6, DType::F32, &[b, n]);
+    let targets = e.param(7, DType::F32, &[b]);
+
+    let fwd = gnn_forward(&mut e, flat, feats, adj, mask);
+    let bnh = [b, n, h];
+
+    // loss = mean((yv - ln(max(target, 1e-5)))²) — MSE in log space, so
+    // |Δln t| IS the relative error (the paper's metric).
+    let floor = e.splat(1e-5, &[b]);
+    let tmax = e.bin("maximum", targets, floor);
+    let lt = e.un("log", tmax);
+    let d = e.bin("subtract", fwd.yv, lt);
+    let dd = e.bin("multiply", d, d);
+    let loss_sum = e.reduce_sum(dd, &[0]);
+    let inv_b = e.cf(1.0 / b as f64);
+    let loss = e.bin("multiply", loss_sum, inv_b);
+
+    // ---- hand-derived backward ------------------------------------------
+    let two_over_b = e.splat(2.0 / b as f64, &[b]);
+    let dyv = e.bin("multiply", d, two_over_b);
+    let dy2 = e.reshape(dyv, &[b, 1]);
+    let dbm2 = e.reduce_sum(dy2, &[0]); // [1]
+    let dwm2 = e.dot(fwd.r1, dy2, &[], &[0], &[], &[0]); // [M,1]
+    let dr1 = e.dot(dy2, fwd.wm2, &[], &[1], &[], &[1]); // [B,M]
+    let zero_bm = e.splat(0.0, &[b, m_dim]);
+    let pos = e.cmp(fwd.u1, zero_bm, "GT");
+    let posf = e.convert_f32(pos);
+    let du1 = e.bin("multiply", dr1, posf);
+    let dbm1 = e.reduce_sum(du1, &[0]); // [M]
+    let dwm1 = e.dot(fwd.g, du1, &[], &[0], &[], &[0]); // [H,M]
+    let dg = e.dot(du1, fwd.wm1, &[], &[1], &[], &[1]); // [B,H]
+
+    // g = Σ_nodes h: every node inherits dg; gradients flow through the
+    // residual (h0 + t1) and both tanh gates.
+    let dh = e.bcast(dg, &bnh, &[0, 2]);
+    let dpre = e.bin("multiply", dh, fwd.mask3);
+    let ones = e.splat(1.0, &bnh);
+    let t1sq = e.bin("multiply", fwd.t1, fwd.t1);
+    let gate1 = e.bin("subtract", ones, t1sq);
+    let dz1 = e.bin("multiply", dpre, gate1);
+    let db1 = e.reduce_sum(dz1, &[0, 1]); // [H]
+    let dw1 = e.dot(fwd.agg, dz1, &[], &[0, 1], &[], &[0, 1]); // [H,H]
+    let dagg = e.dot(dz1, fwd.w1, &[], &[2], &[], &[1]); // [B,N,H]
+    let adj_t = e.transpose(adj, &[0, 2, 1]);
+    let dh0_agg = e.dot(adj_t, dagg, &[0], &[2], &[0], &[1]); // [B,N,H]
+    let dh0 = e.bin("add", dpre, dh0_agg);
+    let dt0 = e.bin("multiply", dh0, fwd.mask3);
+    let t0sq = e.bin("multiply", fwd.t0, fwd.t0);
+    let gate0 = e.bin("subtract", ones, t0sq);
+    let dz0 = e.bin("multiply", dt0, gate0);
+    let db_in = e.reduce_sum(dz0, &[0, 1]); // [H]
+    let dw_in = e.dot(feats, dz0, &[], &[0, 1], &[], &[0, 1]); // [F,H]
+
+    let dw_in_f = e.reshape(dw_in, &[f * h]);
+    let dw1_f = e.reshape(dw1, &[h * h]);
+    let dwm1_f = e.reshape(dwm1, &[h * m_dim]);
+    let dwm2_f = e.reshape(dwm2, &[m_dim]);
+    let grad = e.concat1(
+        &[dw_in_f, db_in, dw1_f, db1, dwm1_f, dbm1, dwm2_f, dbm2],
+        flat_len,
+    );
+
+    let (p2, m2, v2) = adam(&mut e, flat, grad, m_in, v_in, t_in, GNN_LR, flat_len);
+    e.finish("gnn_train_offline", &[loss, p2, m2, v2])
+}
+
+/// Shared bigram-LM forward: `(loss, X, softmax, T)` given flat + tokens.
+struct LmFwd {
+    loss: Id,
+    x: Id,
+    sm: Id,
+    t_onehot: Id,
+}
+
+fn lm_forward(e: &mut Emit, flat: Id, tokens: Id) -> LmFwd {
+    let (v, s, b) = (LM_VOCAB, LM_SEQ, LM_BATCH);
+    let bsv = [b, s, v];
+    let table = e.reshape(flat, &[v, v]);
+    let inp = e.slice2(tokens, (0, b), (0, s)); // [B,S] i32
+    let tgt = e.slice2(tokens, (0, b), (1, s + 1));
+    // One-hot encode via iota/compare/convert (no gather needed).
+    let io = e.iota_i32(&bsv, 2);
+    let inp_b = e.bcast(inp, &bsv, &[0, 1]);
+    let x_pred = e.cmp(io, inp_b, "EQ");
+    let x = e.convert_f32(x_pred);
+    let tgt_b = e.bcast(tgt, &bsv, &[0, 1]);
+    let t_pred = e.cmp(io, tgt_b, "EQ");
+    let t_onehot = e.convert_f32(t_pred);
+    // logits = X·E, then a numerically stable log-softmax.
+    let logits = e.dot(x, table, &[], &[2], &[], &[0]); // [B,S,V]
+    let mx = e.reduce_max(logits, &[2]); // [B,S]
+    let mxb = e.bcast(mx, &bsv, &[0, 1]);
+    let ls = e.bin("subtract", logits, mxb);
+    let ex = e.un("exponential", ls);
+    let z = e.reduce_sum(ex, &[2]); // [B,S]
+    let lz = e.un("log", z);
+    let lzb = e.bcast(lz, &bsv, &[0, 1]);
+    let lp = e.bin("subtract", ls, lzb);
+    let picked = e.bin("multiply", t_onehot, lp);
+    let ll = e.reduce_sum(picked, &[2]); // [B,S]
+    let ll_sum = e.reduce_sum(ll, &[0, 1]); // []
+    let neg_inv = e.cf(-1.0 / (b * s) as f64);
+    let loss = e.bin("multiply", ll_sum, neg_inv);
+    let zb = e.bcast(z, &bsv, &[0, 1]);
+    let sm = e.bin("divide", ex, zb);
+    LmFwd { loss, x, sm, t_onehot }
+}
+
+/// `lm_grads.hlo.txt`: `(flat, tokens[B,S+1] i32) -> (loss, grad[L])`.
+pub fn lm_grads_hlo() -> String {
+    let (v, s, b) = (LM_VOCAB, LM_SEQ, LM_BATCH);
+    let mut e = Emit::new();
+    let flat = e.param(0, DType::F32, &[lm_flat_len()]);
+    let tokens = e.param(1, DType::I32, &[b, s + 1]);
+    let fwd = lm_forward(&mut e, flat, tokens);
+    // dlogits = (softmax − onehot(target)) / (B·S); dE = Xᵀ·dlogits.
+    let diff = e.bin("subtract", fwd.sm, fwd.t_onehot);
+    let scale = e.splat(1.0 / (b * s) as f64, &[b, s, v]);
+    let dlogits = e.bin("multiply", diff, scale);
+    let de = e.dot(fwd.x, dlogits, &[], &[0, 1], &[], &[0, 1]); // [V,V]
+    let grad = e.reshape(de, &[lm_flat_len()]);
+    e.finish("lm_grads_offline", &[fwd.loss, grad])
+}
+
+/// `lm_eval.hlo.txt`: `(flat, tokens) -> (loss,)`.
+pub fn lm_eval_hlo() -> String {
+    let (s, b) = (LM_SEQ, LM_BATCH);
+    let mut e = Emit::new();
+    let flat = e.param(0, DType::F32, &[lm_flat_len()]);
+    let tokens = e.param(1, DType::I32, &[b, s + 1]);
+    let fwd = lm_forward(&mut e, flat, tokens);
+    e.finish("lm_eval_offline", &[fwd.loss])
+}
+
+/// `lm_adam.hlo.txt`: `(flat, grad, m, v, t) -> (flat', m', v')`.
+pub fn lm_adam_hlo() -> String {
+    let l = lm_flat_len();
+    let mut e = Emit::new();
+    let p = e.param(0, DType::F32, &[l]);
+    let g = e.param(1, DType::F32, &[l]);
+    let m = e.param(2, DType::F32, &[l]);
+    let v = e.param(3, DType::F32, &[l]);
+    let t = e.param(4, DType::F32, &[1]);
+    let (p2, m2, v2) = adam(&mut e, p, g, m, v, t, LM_LR, l);
+    e.finish("lm_adam_offline", &[p2, m2, v2])
+}
+
+// ---------------------------------------------------------------------------
+// Parameter initialization + manifest.
+// ---------------------------------------------------------------------------
+
+/// Deterministic initial GNN parameters (scaled-normal weights, zero
+/// biases) in the flat layout `gnn_train.hlo.txt` slices.
+pub fn gnn_init_params() -> Vec<f32> {
+    let (f, h, m) = (FEAT_DIM, GNN_HIDDEN, GNN_MLP_HIDDEN);
+    let mut rng = Rng::new(0x6E51_17);
+    let mut out = Vec::with_capacity(gnn_flat_len());
+    let mut matrix = |rng: &mut Rng, out: &mut Vec<f32>, rows: usize, cols: usize| {
+        let scale = 1.0 / (rows as f64).sqrt();
+        for _ in 0..rows * cols {
+            out.push((rng.gen_normal() * scale) as f32);
+        }
+    };
+    matrix(&mut rng, &mut out, f, h); // W_in
+    out.resize(out.len() + h, 0.0); // b_in
+    matrix(&mut rng, &mut out, h, h); // W1
+    out.resize(out.len() + h, 0.0); // b1
+    matrix(&mut rng, &mut out, h, m); // Wm1
+    out.resize(out.len() + m, 0.0); // bm1
+    matrix(&mut rng, &mut out, m, 1); // Wm2
+    out.push(0.0); // bm2
+    debug_assert_eq!(out.len(), gnn_flat_len());
+    out
+}
+
+/// Initial LM parameters: a zero logit table (uniform predictions).
+pub fn lm_init_params() -> Vec<f32> {
+    vec![0.0; lm_flat_len()]
+}
+
+fn spec(shape: &[usize], dtype: &str) -> Json {
+    Json::obj(vec![
+        ("shape", Json::arr_usize(shape)),
+        ("dtype", Json::Str(dtype.to_string())),
+    ])
+}
+
+fn artifact(file: &str, inputs: Vec<Json>, outputs: Vec<Json>) -> Json {
+    Json::obj(vec![
+        ("file", Json::Str(file.to_string())),
+        ("inputs", Json::Arr(inputs)),
+        ("outputs", Json::Arr(outputs)),
+    ])
+}
+
+/// The manifest describing every generated artifact — the same schema
+/// `python/compile/aot.py` writes.
+pub fn manifest_json() -> Json {
+    let (f, h_b, n) = (FEAT_DIM, GNN_BATCH, MAX_NODES);
+    let gp = gnn_flat_len();
+    let lp = lm_flat_len();
+    let (lv, ls, lb) = (LM_VOCAB, LM_SEQ, LM_BATCH);
+    let artifacts = Json::obj(vec![
+        (
+            "gnn_infer",
+            artifact(
+                "gnn_infer.hlo.txt",
+                vec![
+                    spec(&[gp], "float32"),
+                    spec(&[h_b, n, f], "float32"),
+                    spec(&[h_b, n, n], "float32"),
+                    spec(&[h_b, n], "float32"),
+                ],
+                vec![spec(&[h_b], "float32")],
+            ),
+        ),
+        (
+            "gnn_train",
+            artifact(
+                "gnn_train.hlo.txt",
+                vec![
+                    spec(&[gp], "float32"),
+                    spec(&[gp], "float32"),
+                    spec(&[gp], "float32"),
+                    spec(&[1], "float32"),
+                    spec(&[h_b, n, f], "float32"),
+                    spec(&[h_b, n, n], "float32"),
+                    spec(&[h_b, n], "float32"),
+                    spec(&[h_b], "float32"),
+                ],
+                vec![
+                    spec(&[], "float32"),
+                    spec(&[gp], "float32"),
+                    spec(&[gp], "float32"),
+                    spec(&[gp], "float32"),
+                ],
+            ),
+        ),
+        (
+            "lm_grads",
+            artifact(
+                "lm_grads.hlo.txt",
+                vec![spec(&[lp], "float32"), spec(&[lb, ls + 1], "int32")],
+                vec![spec(&[], "float32"), spec(&[lp], "float32")],
+            ),
+        ),
+        (
+            "lm_adam",
+            artifact(
+                "lm_adam.hlo.txt",
+                vec![
+                    spec(&[lp], "float32"),
+                    spec(&[lp], "float32"),
+                    spec(&[lp], "float32"),
+                    spec(&[lp], "float32"),
+                    spec(&[1], "float32"),
+                ],
+                vec![
+                    spec(&[lp], "float32"),
+                    spec(&[lp], "float32"),
+                    spec(&[lp], "float32"),
+                ],
+            ),
+        ),
+        (
+            "lm_eval",
+            artifact(
+                "lm_eval.hlo.txt",
+                vec![spec(&[lp], "float32"), spec(&[lb, ls + 1], "int32")],
+                vec![spec(&[], "float32")],
+            ),
+        ),
+    ]);
+    Json::obj(vec![
+        ("artifacts", artifacts),
+        (
+            "gnn",
+            Json::obj(vec![
+                ("params", Json::Str("gnn_params.f32".to_string())),
+                ("flat_len", Json::Num(gp as f64)),
+                ("batch", Json::Num(h_b as f64)),
+                ("max_nodes", Json::Num(n as f64)),
+                ("feat_dim", Json::Num(f as f64)),
+                ("n_op_kinds", Json::Num(crate::runtime::gnn::N_OP_KINDS as f64)),
+                ("lr", Json::Num(GNN_LR)),
+            ]),
+        ),
+        (
+            "lm",
+            Json::obj(vec![
+                ("params", Json::Str("lm_params.f32".to_string())),
+                ("flat_len", Json::Num(lp as f64)),
+                ("param_count", Json::Num(lp as f64)),
+                ("vocab", Json::Num(lv as f64)),
+                ("seq", Json::Num(ls as f64)),
+                ("batch", Json::Num(lb as f64)),
+                ("lr", Json::Num(LM_LR)),
+            ]),
+        ),
+        ("generator", Json::Str("rust-offline (runtime::gen, DESIGN.md §9)".to_string())),
+    ])
+}
+
+fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write the full artifact set into `dir` (HLO modules, params,
+/// manifest). The manifest is written last — it is the sentinel
+/// [`ensure_artifacts`] checks.
+pub fn write_artifacts(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    std::fs::write(dir.join("gnn_infer.hlo.txt"), gnn_infer_hlo())?;
+    std::fs::write(dir.join("gnn_train.hlo.txt"), gnn_train_hlo())?;
+    std::fs::write(dir.join("lm_grads.hlo.txt"), lm_grads_hlo())?;
+    std::fs::write(dir.join("lm_eval.hlo.txt"), lm_eval_hlo())?;
+    std::fs::write(dir.join("lm_adam.hlo.txt"), lm_adam_hlo())?;
+    write_f32(&dir.join("gnn_params.f32"), &gnn_init_params())?;
+    write_f32(&dir.join("lm_params.f32"), &lm_init_params())?;
+    std::fs::write(dir.join("manifest.json"), manifest_json().to_string())?;
+    Ok(())
+}
+
+/// Generate artifacts into `dir` unless a manifest already exists there
+/// (a prebuilt set from `python/compile/aot.py` is never overwritten).
+pub fn ensure_artifacts(dir: &Path) -> Result<()> {
+    if dir.join("manifest.json").exists() {
+        return Ok(());
+    }
+    write_artifacts(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_layout_lengths() {
+        // F=49, H=16, M=16: 784+16+256+16+256+16+16+1.
+        assert_eq!(gnn_flat_len(), 1361);
+        assert_eq!(gnn_init_params().len(), gnn_flat_len());
+        assert_eq!(lm_init_params().len(), LM_VOCAB * LM_VOCAB);
+    }
+
+    #[test]
+    fn generated_modules_parse() {
+        for (name, text) in [
+            ("gnn_infer", gnn_infer_hlo()),
+            ("gnn_train", gnn_train_hlo()),
+            ("lm_grads", lm_grads_hlo()),
+            ("lm_eval", lm_eval_hlo()),
+            ("lm_adam", lm_adam_hlo()),
+        ] {
+            let m = crate::graph::hlo_import::parse_module(&text)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(m.entry().is_ok(), "{name} has no ENTRY");
+        }
+    }
+
+    #[test]
+    fn manifest_schema_matches_runtime_expectations() {
+        let m = manifest_json();
+        assert_eq!(
+            m.get("artifacts").get("gnn_train").get("file").as_str(),
+            Some("gnn_train.hlo.txt")
+        );
+        assert_eq!(m.get("gnn").get("flat_len").as_usize(), Some(gnn_flat_len()));
+        assert_eq!(m.get("lm").get("batch").as_usize(), Some(LM_BATCH));
+    }
+}

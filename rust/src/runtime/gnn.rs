@@ -1,11 +1,14 @@
-//! The GNN Fused-Op Estimator, executed as an AOT-compiled XLA artifact.
+//! The GNN Fused-Op Estimator, executed as an AOT-compiled HLO artifact.
 //!
 //! This is the paper's §4.3 cost model running on the Rust side of the
 //! stack: [`GnnPredictor`] encodes fused-op subgraphs into the feature
-//! tensors the L2 JAX model expects (contract in `python/compile/model.py`
-//! — keep in sync), executes `gnn_infer.hlo.txt` via PJRT, and implements
-//! [`FusedOpEstimator`] so the search can use it transparently. Training
-//! (`gnn_train.hlo.txt`) runs from Rust too — see [`GnnTrainer`].
+//! tensors the estimator model expects (contract shared by
+//! `python/compile/model.py` and `runtime::gen` — keep all three in
+//! sync), executes `gnn_infer.hlo.txt` through the active runtime backend
+//! (the in-tree interpreter by default, PJRT when a real binding exists —
+//! DESIGN.md §9), and implements [`FusedOpEstimator`] so the search can
+//! use it transparently. Training (`gnn_train.hlo.txt`) runs from Rust
+//! too — see [`GnnTrainer`].
 
 use super::{lit_f32, lit_scalar, lit_to_f64s, Executable, Runtime};
 use crate::estimator::{AnalyticalFused, FusedOpEstimator};

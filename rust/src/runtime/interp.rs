@@ -1,0 +1,987 @@
+//! In-tree HLO interpreter — the default offline [`super::Runtime`]
+//! backend (DESIGN.md §9).
+//!
+//! Executes the ENTRY computation of the HLO *text* modules parsed by
+//! [`crate::graph::hlo_import`]: F32/I32 literals, the elementwise op
+//! families, `broadcast`/`reshape`/`transpose`/`slice`/`concatenate`,
+//! general `dot` (batch + multiple contracting dimensions), `reduce` with
+//! its nested to_apply computation (fast paths for add/max/min/mul
+//! bodies, a generic recursive path otherwise), `iota`, `compare`,
+//! `select`, `convert`, `parameter`/`constant`/`tuple`.
+//!
+//! This is an *executor*, not a compiler: values are dense host vectors,
+//! every instruction materializes its result, and there is no layout or
+//! fusion cleverness. That is exactly enough to run the AOT artifacts the
+//! GNN estimator and the distributed-training example need — DistIR
+//! (arXiv 2111.05426) makes the same trade to ground a strategy search in
+//! real executions. Precision: f32 storage with f64 accumulation in `dot`
+//! and `reduce`.
+
+use crate::graph::hlo_import::{parse_module, HloComputation, HloInstr, HloModule};
+use crate::graph::DType;
+use crate::xla_stub::{Elements, Literal};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// A runtime value: a dense host tensor or a tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32 { dims, .. } | Value::I32 { dims, .. } => dims,
+            Value::Tuple(_) => &[],
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    fn f32s(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            Value::F32 { dims, data } => Ok((dims, data)),
+            _ => bail!("expected f32 tensor, got {self:?}"),
+        }
+    }
+
+    fn i32s(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            Value::I32 { dims, data } => Ok((dims, data)),
+            _ => bail!("expected i32 tensor, got {self:?}"),
+        }
+    }
+
+    /// Convert from the runtime's host literal type.
+    pub fn from_literal(lit: &Literal) -> Value {
+        let dims: Vec<usize> = lit.dims.iter().map(|&d| d as usize).collect();
+        match &lit.elements {
+            Elements::F32(v) => Value::F32 { dims, data: v.clone() },
+            Elements::I32(v) => Value::I32 { dims, data: v.clone() },
+        }
+    }
+
+    /// Convert back to the runtime's host literal type (arrays only —
+    /// tuples are flattened by the caller).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        match self {
+            Value::F32 { data, .. } => {
+                Ok(Literal { elements: Elements::F32(data.clone()), dims })
+            }
+            Value::I32 { data, .. } => {
+                Ok(Literal { elements: Elements::I32(data.clone()), dims })
+            }
+            Value::Tuple(_) => bail!("cannot convert tuple to a single literal"),
+        }
+    }
+}
+
+/// Row-major strides for a dim list.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Decompose `lin` into a multi-index over `dims` (row-major).
+fn unravel(mut lin: usize, dims: &[usize], out: &mut Vec<usize>) {
+    out.clear();
+    out.resize(dims.len(), 0);
+    for i in (0..dims.len()).rev() {
+        let d = dims[i].max(1);
+        out[i] = lin % d;
+        lin /= d;
+    }
+}
+
+/// A loaded, executable HLO module.
+pub struct Interp {
+    module: HloModule,
+}
+
+impl Interp {
+    /// Parse an HLO text module into an executable form.
+    pub fn from_text(text: &str) -> Result<Interp> {
+        let module = parse_module(text)?;
+        module.entry()?; // validate early: an ENTRY must exist
+        Ok(Interp { module })
+    }
+
+    pub fn module_name(&self) -> &str {
+        &self.module.name
+    }
+
+    /// Number of parameters the ENTRY computation takes.
+    pub fn num_params(&self) -> usize {
+        self.module
+            .entry()
+            .map(|e| e.instrs.iter().filter(|i| i.opcode == "parameter").count())
+            .unwrap_or(0)
+    }
+
+    /// Execute the ENTRY computation. Returns the root value with tuples
+    /// flattened one level — matching PJRT's tupled-output convention.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let args: Vec<Value> = inputs.iter().map(Value::from_literal).collect();
+        let root = self.eval_computation(self.module.entry()?, &args)?;
+        match root {
+            Value::Tuple(vs) => vs.iter().map(Value::to_literal).collect(),
+            v => Ok(vec![v.to_literal()?]),
+        }
+    }
+
+    /// Evaluate one computation with the given arguments.
+    fn eval_computation(&self, comp: &HloComputation, args: &[Value]) -> Result<Value> {
+        let mut env: HashMap<&str, Value> = HashMap::with_capacity(comp.instrs.len());
+        let mut root_name: Option<&str> = None;
+        for instr in &comp.instrs {
+            let v = self
+                .eval_instr(instr, args, &env)
+                .with_context(|| format!("evaluating {} = {}(..)", instr.name, instr.opcode))?;
+            if instr.is_root {
+                root_name = Some(&instr.name);
+            }
+            env.insert(&instr.name, v);
+        }
+        let root = root_name
+            .or_else(|| comp.instrs.last().map(|i| i.name.as_str()))
+            .ok_or_else(|| anyhow!("computation {} is empty", comp.name))?;
+        env.remove(root).ok_or_else(|| anyhow!("root {root} not evaluated"))
+    }
+
+    fn operand<'e>(
+        &self,
+        instr: &HloInstr,
+        idx: usize,
+        env: &'e HashMap<&str, Value>,
+    ) -> Result<&'e Value> {
+        let name = instr
+            .operands
+            .get(idx)
+            .ok_or_else(|| anyhow!("{} missing operand {idx}", instr.name))?;
+        env.get(name.as_str())
+            .ok_or_else(|| anyhow!("{}: operand '{name}' not defined", instr.name))
+    }
+
+    fn eval_instr(
+        &self,
+        instr: &HloInstr,
+        args: &[Value],
+        env: &HashMap<&str, Value>,
+    ) -> Result<Value> {
+        let (out_dtype, out_dims) = match instr.shape.first_array() {
+            Some((dt, s)) => (dt, s.dims),
+            None => (DType::F32, vec![]),
+        };
+        match instr.opcode.as_str() {
+            "parameter" => {
+                let idx: usize = instr
+                    .payload
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad parameter index '{}'", instr.payload))?;
+                args.get(idx)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("parameter({idx}) but only {} inputs", args.len()))
+            }
+            "constant" => constant(&instr.payload, out_dtype, &out_dims),
+            "iota" => {
+                let d: usize = instr
+                    .attr("iota_dimension")
+                    .unwrap_or("0")
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad iota_dimension"))?;
+                iota(out_dtype, &out_dims, d)
+            }
+            "broadcast" => broadcast(self.operand(instr, 0, env)?, &out_dims, &instr.dims_attr("dimensions")),
+            "reshape" | "bitcast" | "copy" => {
+                reshaped(self.operand(instr, 0, env)?, &out_dims)
+            }
+            "convert" | "bitcast-convert" => convert(self.operand(instr, 0, env)?, out_dtype),
+            "transpose" => transpose(self.operand(instr, 0, env)?, &instr.dims_attr("dimensions")),
+            "slice" => slice(
+                self.operand(instr, 0, env)?,
+                instr.attr("slice").unwrap_or(""),
+                &out_dims,
+            ),
+            "concatenate" => {
+                let parts: Result<Vec<&Value>> =
+                    (0..instr.operands.len()).map(|i| self.operand(instr, i, env)).collect();
+                concatenate(&parts?, *instr.dims_attr("dimensions").first().unwrap_or(&0), &out_dims)
+            }
+            "dot" => dot(
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+                &instr.dims_attr("lhs_batch_dims"),
+                &instr.dims_attr("lhs_contracting_dims"),
+                &instr.dims_attr("rhs_batch_dims"),
+                &instr.dims_attr("rhs_contracting_dims"),
+            ),
+            "reduce" => {
+                let body_name = instr
+                    .attr("to_apply")
+                    .ok_or_else(|| anyhow!("reduce without to_apply"))?;
+                let body = self
+                    .module
+                    .computation(body_name)
+                    .ok_or_else(|| anyhow!("unknown computation '{body_name}'"))?;
+                self.reduce(
+                    self.operand(instr, 0, env)?,
+                    self.operand(instr, 1, env)?,
+                    &instr.dims_attr("dimensions"),
+                    body,
+                )
+            }
+            "compare" => compare(
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+                instr.attr("direction").unwrap_or("EQ"),
+            ),
+            "select" => select(
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+                self.operand(instr, 2, env)?,
+            ),
+            "tuple" => {
+                let parts: Result<Vec<Value>> = (0..instr.operands.len())
+                    .map(|i| self.operand(instr, i, env).cloned())
+                    .collect();
+                Ok(Value::Tuple(parts?))
+            }
+            "get-tuple-element" => {
+                let idx: usize = instr
+                    .attr("index")
+                    .unwrap_or("0")
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad tuple index"))?;
+                match self.operand(instr, 0, env)? {
+                    Value::Tuple(vs) => vs
+                        .get(idx)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("tuple index {idx} out of range")),
+                    _ => bail!("get-tuple-element of non-tuple"),
+                }
+            }
+            // Binary elementwise.
+            "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+            | "remainder" | "and" | "or" | "xor" => binary(
+                &instr.opcode,
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+            ),
+            // Unary elementwise.
+            "negate" | "exponential" | "exponential-minus-one" | "log" | "log-plus-one"
+            | "sqrt" | "rsqrt" | "tanh" | "logistic" | "abs" | "sign" | "floor" | "ceil"
+            | "cosine" | "sine" | "not" => unary(&instr.opcode, self.operand(instr, 0, env)?),
+            other => bail!("unsupported HLO opcode '{other}' (in-tree interpreter, DESIGN.md §9)"),
+        }
+    }
+
+    /// `reduce` with fast paths for the common scalar bodies and a generic
+    /// recursive path for anything else.
+    fn reduce(
+        &self,
+        data: &Value,
+        init: &Value,
+        dims: &[usize],
+        body: &HloComputation,
+    ) -> Result<Value> {
+        let in_dims = data.dims().to_vec();
+        for &d in dims {
+            if d >= in_dims.len() {
+                bail!("reduce dimension {d} out of range for rank {}", in_dims.len());
+            }
+        }
+        let keep: Vec<usize> =
+            (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+        let out_dims: Vec<usize> = keep.iter().map(|&d| in_dims[d]).collect();
+        let out_strides = strides(&out_dims);
+
+        // Recognize `(a, b) -> op(a, b)` bodies for the fold fast path:
+        // exactly two parameters AND the root consuming both of them raw
+        // (a body like `add(a, multiply(b, b))` must take the generic
+        // path, not be misfolded into a plain sum).
+        let fast = body.root().and_then(|r| {
+            let params: Vec<&str> = body
+                .instrs
+                .iter()
+                .filter(|i| i.opcode == "parameter")
+                .map(|i| i.name.as_str())
+                .collect();
+            let root_takes_params = r.operands.len() == 2
+                && params.len() == 2
+                && r.operands.iter().all(|o| params.contains(&o.as_str()));
+            match (root_takes_params, r.opcode.as_str()) {
+                (true, "add") | (true, "maximum") | (true, "minimum") | (true, "multiply") => {
+                    Some(r.opcode.clone())
+                }
+                _ => None,
+            }
+        });
+
+        let mut idx = Vec::new();
+        match data {
+            Value::F32 { data: xs, .. } => {
+                let (_, init_v) = init.f32s()?;
+                let init_v = *init_v.first().ok_or_else(|| anyhow!("empty reduce init"))?;
+                // f64 accumulators for the additive fast path.
+                let mut acc = vec![init_v as f64; out_dims.iter().product::<usize>().max(1)];
+                for (lin, &x) in xs.iter().enumerate() {
+                    unravel(lin, &in_dims, &mut idx);
+                    let o: usize =
+                        keep.iter().enumerate().map(|(i, &d)| idx[d] * out_strides[i]).sum();
+                    match fast.as_deref() {
+                        Some("add") => acc[o] += x as f64,
+                        Some("maximum") => acc[o] = acc[o].max(x as f64),
+                        Some("minimum") => acc[o] = acc[o].min(x as f64),
+                        Some("multiply") => acc[o] *= x as f64,
+                        _ => {
+                            let r = self.eval_computation(
+                                body,
+                                &[Value::scalar_f32(acc[o] as f32), Value::scalar_f32(x)],
+                            )?;
+                            let (_, rv) = r.f32s()?;
+                            acc[o] = rv[0] as f64;
+                        }
+                    }
+                }
+                Ok(Value::F32 {
+                    dims: out_dims,
+                    data: acc.into_iter().map(|v| v as f32).collect(),
+                })
+            }
+            Value::I32 { data: xs, .. } => {
+                let (_, init_v) = init.i32s()?;
+                let init_v = *init_v.first().ok_or_else(|| anyhow!("empty reduce init"))?;
+                let mut acc = vec![init_v; out_dims.iter().product::<usize>().max(1)];
+                for (lin, &x) in xs.iter().enumerate() {
+                    unravel(lin, &in_dims, &mut idx);
+                    let o: usize =
+                        keep.iter().enumerate().map(|(i, &d)| idx[d] * out_strides[i]).sum();
+                    match fast.as_deref() {
+                        Some("add") => acc[o] = acc[o].wrapping_add(x),
+                        Some("maximum") => acc[o] = acc[o].max(x),
+                        Some("minimum") => acc[o] = acc[o].min(x),
+                        Some("multiply") => acc[o] = acc[o].wrapping_mul(x),
+                        _ => bail!("generic reduce bodies support f32 only"),
+                    }
+                }
+                Ok(Value::I32 { dims: out_dims, data: acc })
+            }
+            Value::Tuple(_) => bail!("reduce over tuple"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op implementations (free functions; no interpreter state needed).
+// ---------------------------------------------------------------------------
+
+fn constant(payload: &str, dtype: DType, dims: &[usize]) -> Result<Value> {
+    let elems: usize = dims.iter().product();
+    let toks: Vec<&str> = payload
+        .split(|c: char| c == ',' || c == '{' || c == '}' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .collect();
+    match dtype {
+        DType::I32 => {
+            let mut vals = Vec::with_capacity(toks.len());
+            for t in &toks {
+                vals.push(match *t {
+                    "true" => 1,
+                    "false" => 0,
+                    _ => t
+                        .parse::<i64>()
+                        .map_err(|_| anyhow!("bad i32 literal '{t}'"))? as i32,
+                });
+            }
+            let data = splat_or_exact(vals, elems)?;
+            Ok(Value::I32 { dims: dims.to_vec(), data })
+        }
+        _ => {
+            let mut vals = Vec::with_capacity(toks.len());
+            for t in &toks {
+                vals.push(match *t {
+                    "inf" => f32::INFINITY,
+                    "-inf" => f32::NEG_INFINITY,
+                    "nan" => f32::NAN,
+                    _ => t.parse::<f32>().map_err(|_| anyhow!("bad f32 literal '{t}'"))?,
+                });
+            }
+            let data = splat_or_exact(vals, elems)?;
+            Ok(Value::F32 { dims: dims.to_vec(), data })
+        }
+    }
+}
+
+/// Exactly `elems` values, or a single value splatted to `elems`.
+fn splat_or_exact<T: Copy>(vals: Vec<T>, elems: usize) -> Result<Vec<T>> {
+    if vals.len() == elems {
+        Ok(vals)
+    } else if vals.len() == 1 {
+        Ok(vec![vals[0]; elems])
+    } else {
+        bail!("literal has {} values for {} elements", vals.len(), elems)
+    }
+}
+
+fn iota(dtype: DType, dims: &[usize], d: usize) -> Result<Value> {
+    if d >= dims.len() {
+        bail!("iota_dimension {d} out of range for rank {}", dims.len());
+    }
+    let elems: usize = dims.iter().product();
+    let st = strides(dims);
+    let extent = dims[d];
+    let vals = (0..elems).map(|lin| (lin / st[d]) % extent);
+    match dtype {
+        DType::I32 => Ok(Value::I32 { dims: dims.to_vec(), data: vals.map(|v| v as i32).collect() }),
+        _ => Ok(Value::F32 { dims: dims.to_vec(), data: vals.map(|v| v as f32).collect() }),
+    }
+}
+
+fn reshaped(v: &Value, out_dims: &[usize]) -> Result<Value> {
+    let n: usize = out_dims.iter().product();
+    if n != v.elems() {
+        bail!("reshape: {} elems into {:?}", v.elems(), out_dims);
+    }
+    Ok(match v {
+        Value::F32 { data, .. } => Value::F32 { dims: out_dims.to_vec(), data: data.clone() },
+        Value::I32 { data, .. } => Value::I32 { dims: out_dims.to_vec(), data: data.clone() },
+        Value::Tuple(_) => bail!("reshape of tuple"),
+    })
+}
+
+fn convert(v: &Value, target: DType) -> Result<Value> {
+    Ok(match (v, target) {
+        (Value::F32 { dims, data }, DType::I32) => Value::I32 {
+            dims: dims.clone(),
+            // XLA converts float→int by truncation toward zero.
+            data: data.iter().map(|&x| x as i32).collect(),
+        },
+        (Value::I32 { dims, data }, DType::I32) => {
+            Value::I32 { dims: dims.clone(), data: data.clone() }
+        }
+        (Value::I32 { dims, data }, _) => Value::F32 {
+            dims: dims.clone(),
+            data: data.iter().map(|&x| x as f32).collect(),
+        },
+        (Value::F32 { dims, data }, _) => {
+            Value::F32 { dims: dims.clone(), data: data.clone() }
+        }
+        (Value::Tuple(_), _) => bail!("convert of tuple"),
+    })
+}
+
+fn broadcast(v: &Value, out_dims: &[usize], mapping: &[usize]) -> Result<Value> {
+    let in_dims = v.dims().to_vec();
+    if mapping.len() != in_dims.len() {
+        bail!(
+            "broadcast dimensions {:?} don't match operand rank {}",
+            mapping,
+            in_dims.len()
+        );
+    }
+    for (k, &m) in mapping.iter().enumerate() {
+        if m >= out_dims.len() || out_dims[m] != in_dims[k] {
+            bail!("broadcast dim {k}→{m} mismatch: {:?} into {:?}", in_dims, out_dims);
+        }
+    }
+    let out_elems: usize = out_dims.iter().product();
+    let in_strides = strides(&in_dims);
+    let mut idx = Vec::new();
+    let gather = |lin: usize, idx: &mut Vec<usize>| -> usize {
+        unravel(lin, out_dims, idx);
+        mapping.iter().enumerate().map(|(k, &m)| idx[m] * in_strides[k]).sum()
+    };
+    Ok(match v {
+        Value::F32 { data, .. } => Value::F32 {
+            dims: out_dims.to_vec(),
+            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
+        },
+        Value::I32 { data, .. } => Value::I32 {
+            dims: out_dims.to_vec(),
+            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
+        },
+        Value::Tuple(_) => bail!("broadcast of tuple"),
+    })
+}
+
+fn transpose(v: &Value, perm: &[usize]) -> Result<Value> {
+    let in_dims = v.dims().to_vec();
+    if perm.len() != in_dims.len() {
+        bail!("transpose permutation {:?} vs rank {}", perm, in_dims.len());
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let out_elems: usize = out_dims.iter().product();
+    let in_strides = strides(&in_dims);
+    let mut idx = Vec::new();
+    let gather = |lin: usize, idx: &mut Vec<usize>| -> usize {
+        unravel(lin, &out_dims, idx);
+        perm.iter().enumerate().map(|(i, &p)| idx[i] * in_strides[p]).sum()
+    };
+    Ok(match v {
+        Value::F32 { data, .. } => Value::F32 {
+            dims: out_dims.clone(),
+            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
+        },
+        Value::I32 { data, .. } => Value::I32 {
+            dims: out_dims.clone(),
+            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
+        },
+        Value::Tuple(_) => bail!("transpose of tuple"),
+    })
+}
+
+/// Parse `{[0:5], [2:4:1]}` into per-dimension (start, stride).
+fn parse_slice_attr(attr: &str, rank: usize) -> Result<Vec<(usize, usize)>> {
+    let inner = attr.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim().trim_start_matches('[').trim_end_matches(']');
+        if part.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = part.split(':').collect();
+        let start: usize =
+            fields.first().unwrap_or(&"0").trim().parse().unwrap_or(0);
+        let stride: usize = fields.get(2).map(|s| s.trim().parse().unwrap_or(1)).unwrap_or(1);
+        out.push((start, stride.max(1)));
+    }
+    if out.len() != rank {
+        bail!("slice attr '{attr}' has {} dims, operand rank {rank}", out.len());
+    }
+    Ok(out)
+}
+
+fn slice(v: &Value, attr: &str, out_dims: &[usize]) -> Result<Value> {
+    let in_dims = v.dims().to_vec();
+    let spec = parse_slice_attr(attr, in_dims.len())?;
+    let out_elems: usize = out_dims.iter().product();
+    let in_strides = strides(&in_dims);
+    let mut idx = Vec::new();
+    let gather = |lin: usize, idx: &mut Vec<usize>| -> Result<usize> {
+        unravel(lin, out_dims, idx);
+        let mut o = 0usize;
+        for (d, &(start, stride)) in spec.iter().enumerate() {
+            let i = start + idx[d] * stride;
+            if i >= in_dims[d] {
+                bail!("slice index {i} out of bounds for dim {d} (extent {})", in_dims[d]);
+            }
+            o += i * in_strides[d];
+        }
+        Ok(o)
+    };
+    match v {
+        Value::F32 { data, .. } => {
+            let mut out = Vec::with_capacity(out_elems);
+            for l in 0..out_elems {
+                out.push(data[gather(l, &mut idx)?]);
+            }
+            Ok(Value::F32 { dims: out_dims.to_vec(), data: out })
+        }
+        Value::I32 { data, .. } => {
+            let mut out = Vec::with_capacity(out_elems);
+            for l in 0..out_elems {
+                out.push(data[gather(l, &mut idx)?]);
+            }
+            Ok(Value::I32 { dims: out_dims.to_vec(), data: out })
+        }
+        Value::Tuple(_) => bail!("slice of tuple"),
+    }
+}
+
+fn concatenate(parts: &[&Value], dim: usize, out_dims: &[usize]) -> Result<Value> {
+    if parts.is_empty() {
+        bail!("concatenate with no operands");
+    }
+    if dim >= out_dims.len() {
+        bail!("concatenate dim {dim} out of range for rank {}", out_dims.len());
+    }
+    // Validate operand shapes against the declared result before writing:
+    // every non-concat extent must match, and the concat extents must sum
+    // to the declared one (a mismatch would otherwise index out of bounds
+    // or leave silent zeros).
+    let mut total = 0usize;
+    for part in parts {
+        let pd = part.dims();
+        if pd.len() != out_dims.len() {
+            bail!("concatenate rank mismatch: {:?} vs {:?}", pd, out_dims);
+        }
+        for (d, (&pe, &oe)) in pd.iter().zip(out_dims).enumerate() {
+            if d != dim && pe != oe {
+                bail!("concatenate extent mismatch at dim {d}: {:?} vs {:?}", pd, out_dims);
+            }
+        }
+        total += pd[dim];
+    }
+    if total != out_dims[dim] {
+        bail!(
+            "concatenate extents sum to {total} but result declares {} along dim {dim}",
+            out_dims[dim]
+        );
+    }
+    let out_elems: usize = out_dims.iter().product();
+    let out_strides = strides(out_dims);
+    let is_f32 = matches!(parts[0], Value::F32 { .. });
+    let mut out_f = vec![0.0f32; if is_f32 { out_elems } else { 0 }];
+    let mut out_i = vec![0i32; if is_f32 { 0 } else { out_elems }];
+    let mut offset = 0usize;
+    let mut idx = Vec::new();
+    for part in parts {
+        if matches!(part, Value::F32 { .. }) != is_f32 {
+            bail!("concatenate: mixed element types");
+        }
+        let in_dims = part.dims().to_vec();
+        if dim >= in_dims.len() {
+            bail!("concatenate dim {dim} out of range");
+        }
+        let n = part.elems();
+        for lin in 0..n {
+            unravel(lin, &in_dims, &mut idx);
+            idx[dim] += offset;
+            let o: usize = idx.iter().zip(&out_strides).map(|(&i, &s)| i * s).sum();
+            match part {
+                Value::F32 { data, .. } => out_f[o] = data[lin],
+                Value::I32 { data, .. } => out_i[o] = data[lin],
+                Value::Tuple(_) => bail!("concatenate of tuple"),
+            }
+        }
+        offset += in_dims[dim];
+    }
+    Ok(if is_f32 {
+        Value::F32 { dims: out_dims.to_vec(), data: out_f }
+    } else {
+        Value::I32 { dims: out_dims.to_vec(), data: out_i }
+    })
+}
+
+/// General dot: batch dims + any number of contracting dims per side.
+/// Output dims are `[batch (lhs order), lhs free, rhs free]` — XLA's
+/// DotGeneral convention. f32 with f64 accumulation.
+fn dot(
+    lhs: &Value,
+    rhs: &Value,
+    lb: &[usize],
+    lc: &[usize],
+    rb: &[usize],
+    rc: &[usize],
+) -> Result<Value> {
+    let (ldims, ldata) = lhs.f32s()?;
+    let (rdims, rdata) = rhs.f32s()?;
+    if lb.len() != rb.len() || lc.len() != rc.len() {
+        bail!("dot: batch/contracting dim count mismatch");
+    }
+    for (&a, &b) in lb.iter().zip(rb) {
+        if ldims[a] != rdims[b] {
+            bail!("dot: batch extent mismatch {} vs {}", ldims[a], rdims[b]);
+        }
+    }
+    for (&a, &b) in lc.iter().zip(rc) {
+        if ldims[a] != rdims[b] {
+            bail!("dot: contraction extent mismatch {} vs {}", ldims[a], rdims[b]);
+        }
+    }
+    let lfree: Vec<usize> =
+        (0..ldims.len()).filter(|d| !lb.contains(d) && !lc.contains(d)).collect();
+    let rfree: Vec<usize> =
+        (0..rdims.len()).filter(|d| !rb.contains(d) && !rc.contains(d)).collect();
+    let mut out_dims: Vec<usize> = lb.iter().map(|&d| ldims[d]).collect();
+    out_dims.extend(lfree.iter().map(|&d| ldims[d]));
+    out_dims.extend(rfree.iter().map(|&d| rdims[d]));
+    let out_elems: usize = out_dims.iter().product::<usize>().max(1);
+
+    let lstr = strides(ldims);
+    let rstr = strides(rdims);
+    // Precompute (lhs offset, rhs offset) for every contraction index.
+    let csizes: Vec<usize> = lc.iter().map(|&d| ldims[d]).collect();
+    let celems: usize = csizes.iter().product::<usize>().max(1);
+    let mut coffs = Vec::with_capacity(celems);
+    let mut cidx = Vec::new();
+    for clin in 0..celems {
+        unravel(clin, &csizes, &mut cidx);
+        let lo: usize = cidx.iter().zip(lc).map(|(&i, &d)| i * lstr[d]).sum();
+        let ro: usize = cidx.iter().zip(rc).map(|(&i, &d)| i * rstr[d]).sum();
+        coffs.push((lo, ro));
+    }
+
+    let mut out = Vec::with_capacity(out_elems);
+    let mut oidx = Vec::new();
+    for olin in 0..out_elems {
+        unravel(olin, &out_dims, &mut oidx);
+        let nb = lb.len();
+        let nlf = lfree.len();
+        let mut lbase = 0usize;
+        let mut rbase = 0usize;
+        for (i, &d) in lb.iter().enumerate() {
+            lbase += oidx[i] * lstr[d];
+        }
+        for (i, &d) in rb.iter().enumerate() {
+            rbase += oidx[i] * rstr[d];
+        }
+        for (i, &d) in lfree.iter().enumerate() {
+            lbase += oidx[nb + i] * lstr[d];
+        }
+        for (i, &d) in rfree.iter().enumerate() {
+            rbase += oidx[nb + nlf + i] * rstr[d];
+        }
+        let mut acc = 0.0f64;
+        for &(lo, ro) in &coffs {
+            acc += ldata[lbase + lo] as f64 * rdata[rbase + ro] as f64;
+        }
+        out.push(acc as f32);
+    }
+    Ok(Value::F32 { dims: out_dims, data: out })
+}
+
+fn binary(op: &str, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims() != b.dims() {
+        bail!("{op}: shape mismatch {:?} vs {:?}", a.dims(), b.dims());
+    }
+    match (a, b) {
+        (Value::F32 { dims, data: xa }, Value::F32 { data: xb, .. }) => {
+            let f: fn(f32, f32) -> f32 = match op {
+                "add" => |x, y| x + y,
+                "subtract" => |x, y| x - y,
+                "multiply" => |x, y| x * y,
+                "divide" => |x, y| x / y,
+                "maximum" => f32::max,
+                "minimum" => f32::min,
+                "power" => f32::powf,
+                "remainder" => |x, y| x % y,
+                _ => bail!("{op} unsupported on f32"),
+            };
+            Ok(Value::F32 {
+                dims: dims.clone(),
+                data: xa.iter().zip(xb).map(|(&x, &y)| f(x, y)).collect(),
+            })
+        }
+        (Value::I32 { dims, data: xa }, Value::I32 { data: xb, .. }) => {
+            let f: fn(i32, i32) -> i32 = match op {
+                "add" => i32::wrapping_add,
+                "subtract" => i32::wrapping_sub,
+                "multiply" => i32::wrapping_mul,
+                "divide" => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
+                "maximum" => i32::max,
+                "minimum" => i32::min,
+                "remainder" => |x, y| if y == 0 { 0 } else { x.wrapping_rem(y) },
+                "and" => |x, y| x & y,
+                "or" => |x, y| x | y,
+                "xor" => |x, y| x ^ y,
+                _ => bail!("{op} unsupported on i32"),
+            };
+            Ok(Value::I32 {
+                dims: dims.clone(),
+                data: xa.iter().zip(xb).map(|(&x, &y)| f(x, y)).collect(),
+            })
+        }
+        _ => bail!("{op}: mixed or tuple operand types"),
+    }
+}
+
+fn unary(op: &str, a: &Value) -> Result<Value> {
+    match a {
+        Value::F32 { dims, data } => {
+            let f: fn(f32) -> f32 = match op {
+                "negate" => |x| -x,
+                "exponential" => f32::exp,
+                "exponential-minus-one" => f32::exp_m1,
+                "log" => f32::ln,
+                "log-plus-one" => f32::ln_1p,
+                "sqrt" => f32::sqrt,
+                "rsqrt" => |x| 1.0 / x.sqrt(),
+                "tanh" => f32::tanh,
+                "logistic" => |x| 1.0 / (1.0 + (-x).exp()),
+                "abs" => f32::abs,
+                "sign" => f32::signum,
+                "floor" => f32::floor,
+                "ceil" => f32::ceil,
+                "cosine" => f32::cos,
+                "sine" => f32::sin,
+                _ => bail!("{op} unsupported on f32"),
+            };
+            Ok(Value::F32 { dims: dims.clone(), data: data.iter().map(|&x| f(x)).collect() })
+        }
+        Value::I32 { dims, data } => {
+            let f: fn(i32) -> i32 = match op {
+                "negate" => |x| x.wrapping_neg(),
+                "abs" => i32::wrapping_abs,
+                "sign" => i32::signum,
+                "not" => |x| if x == 0 { 1 } else { 0 }, // pred semantics
+                _ => bail!("{op} unsupported on i32"),
+            };
+            Ok(Value::I32 { dims: dims.clone(), data: data.iter().map(|&x| f(x)).collect() })
+        }
+        Value::Tuple(_) => bail!("{op} of tuple"),
+    }
+}
+
+fn compare(a: &Value, b: &Value, direction: &str) -> Result<Value> {
+    if a.dims() != b.dims() {
+        bail!("compare: shape mismatch {:?} vs {:?}", a.dims(), b.dims());
+    }
+    let cmp = |ord: std::cmp::Ordering| -> bool {
+        match direction {
+            "EQ" => ord.is_eq(),
+            "NE" => ord.is_ne(),
+            "LT" => ord.is_lt(),
+            "LE" => ord.is_le(),
+            "GT" => ord.is_gt(),
+            "GE" => ord.is_ge(),
+            _ => false,
+        }
+    };
+    let data: Vec<i32> = match (a, b) {
+        (Value::F32 { data: xa, .. }, Value::F32 { data: xb, .. }) => xa
+            .iter()
+            .zip(xb)
+            // XLA totalorder-free comparison semantics: any comparison
+            // involving NaN is false, except NE which is true.
+            .map(|(&x, &y)| match x.partial_cmp(&y) {
+                Some(ord) => cmp(ord) as i32,
+                None => (direction == "NE") as i32,
+            })
+            .collect(),
+        (Value::I32 { data: xa, .. }, Value::I32 { data: xb, .. }) => {
+            xa.iter().zip(xb).map(|(&x, &y)| cmp(x.cmp(&y)) as i32).collect()
+        }
+        _ => bail!("compare: mixed operand types"),
+    };
+    Ok(Value::I32 { dims: a.dims().to_vec(), data })
+}
+
+fn select(pred: &Value, on_true: &Value, on_false: &Value) -> Result<Value> {
+    let (_, p) = pred.i32s()?;
+    if pred.dims() != on_true.dims() || on_true.dims() != on_false.dims() {
+        bail!("select: shape mismatch");
+    }
+    Ok(match (on_true, on_false) {
+        (Value::F32 { dims, data: xt }, Value::F32 { data: xf, .. }) => Value::F32 {
+            dims: dims.clone(),
+            data: p
+                .iter()
+                .zip(xt.iter().zip(xf))
+                .map(|(&c, (&t, &f))| if c != 0 { t } else { f })
+                .collect(),
+        },
+        (Value::I32 { dims, data: xt }, Value::I32 { data: xf, .. }) => Value::I32 {
+            dims: dims.clone(),
+            data: p
+                .iter()
+                .zip(xt.iter().zip(xf))
+                .map(|(&c, (&t, &f))| if c != 0 { t } else { f })
+                .collect(),
+        },
+        _ => bail!("select: mixed or tuple operand types"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run1(text: &str, inputs: &[Literal]) -> Vec<Literal> {
+        Interp::from_text(text).unwrap().run(inputs).unwrap()
+    }
+
+    fn f32lit(data: &[f32], dims: &[i64]) -> Literal {
+        Literal::vec1(data).reshape(dims).unwrap()
+    }
+
+    #[test]
+    fn parameter_roundtrip_through_tuple() {
+        let text = "HloModule t\nENTRY main {\n  p = f32[2,2]{1,0} parameter(0)\n  ROOT r = (f32[2,2]) tuple(p)\n}\n";
+        let out = run1(text, &[f32lit(&[1.0, 2.0, 3.0, 4.0], &[2, 2])]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(out[0].dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn dot_matches_hand_computed_matmul() {
+        // [2,3] x [3,2]: classic matmul.
+        let text = "HloModule t\nENTRY main {\n  a = f32[2,3]{1,0} parameter(0)\n  b = f32[3,2]{1,0} parameter(1)\n  ROOT d = f32[2,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let a = f32lit(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let b = f32lit(&[7.0, 8.0, 9.0, 10.0, 11.0, 12.0], &[3, 2]);
+        let out = run1(text, &[a, b]);
+        // Row 0: [1,2,3]·[7,9,11]=58, [1,2,3]·[8,10,12]=64
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn batched_dot_with_batch_dims() {
+        // [2,2,2] x [2,2,2] batch over dim 0.
+        let text = "HloModule t\nENTRY main {\n  a = f32[2,2,2]{2,1,0} parameter(0)\n  b = f32[2,2,2]{2,1,0} parameter(1)\n  ROOT d = f32[2,2,2]{2,1,0} dot(a, b), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}\n}\n";
+        let a = f32lit(&[1.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 2.0], &[2, 2, 2]); // [I, 2I]
+        let b = f32lit(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], &[2, 2, 2]);
+        let out = run1(text, &[a, b]);
+        assert_eq!(
+            out[0].to_vec::<f32>().unwrap(),
+            vec![1.0, 2.0, 3.0, 4.0, 10.0, 12.0, 14.0, 16.0]
+        );
+    }
+
+    #[test]
+    fn reduce_sum_and_max_with_nested_bodies() {
+        let text = "HloModule t\nadd_body {\n  x = f32[] parameter(0)\n  y = f32[] parameter(1)\n  ROOT s = f32[] add(x, y)\n}\nmax_body {\n  x = f32[] parameter(0)\n  y = f32[] parameter(1)\n  ROOT m = f32[] maximum(x, y)\n}\nENTRY main {\n  p = f32[2,3]{1,0} parameter(0)\n  zero = f32[] constant(0)\n  ninf = f32[] constant(-inf)\n  s = f32[2]{0} reduce(p, zero), dimensions={1}, to_apply=add_body\n  m = f32[3]{0} reduce(p, ninf), dimensions={0}, to_apply=max_body\n  ROOT r = (f32[2], f32[3]) tuple(s, m)\n}\n";
+        let p = f32lit(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let out = run1(text, &[p]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn broadcast_transpose_slice_concat() {
+        let text = "HloModule t\nENTRY main {\n  v = f32[2]{0} parameter(0)\n  b = f32[2,3]{1,0} broadcast(v), dimensions={0}\n  t = f32[3,2]{1,0} transpose(b), dimensions={1,0}\n  s = f32[2,2]{1,0} slice(t), slice={[1:3], [0:2]}\n  ROOT c = f32[4,2]{1,0} concatenate(s, s), dimensions={0}\n}\n";
+        let out = run1(text, &[f32lit(&[5.0, 9.0], &[2])]);
+        // b rows: [5,5,5],[9,9,9]; t: [[5,9],[5,9],[5,9]]; s: rows 1..3 → [[5,9],[5,9]]
+        assert_eq!(out[0].dims, vec![4, 2]);
+        assert_eq!(
+            out[0].to_vec::<f32>().unwrap(),
+            vec![5.0, 9.0, 5.0, 9.0, 5.0, 9.0, 5.0, 9.0]
+        );
+    }
+
+    #[test]
+    fn iota_compare_convert_one_hot() {
+        // One-hot encode i32 indices into f32 rows — the LM embedding trick.
+        let text = "HloModule t\nENTRY main {\n  ix = s32[2]{0} parameter(0)\n  io = s32[2,4]{1,0} iota(), iota_dimension=1\n  bx = s32[2,4]{1,0} broadcast(ix), dimensions={0}\n  eq = pred[2,4]{1,0} compare(io, bx), direction=EQ\n  ROOT oh = f32[2,4]{1,0} convert(eq)\n}\n";
+        let ix = Literal::vec1(&[2i32, 0]).reshape(&[2]).unwrap();
+        let out = run1(text, &[ix]);
+        assert_eq!(
+            out[0].to_vec::<f32>().unwrap(),
+            vec![0.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn elementwise_and_scalar_constants() {
+        let text = "HloModule t\nENTRY main {\n  p = f32[3]{0} parameter(0)\n  c = f32[] constant(2)\n  cb = f32[3]{0} broadcast(c), dimensions={}\n  m = f32[3]{0} multiply(p, cb)\n  e = f32[3]{0} exponential(m)\n  ROOT l = f32[3]{0} log(e)\n}\n";
+        let out = run1(text, &[f32lit(&[0.5, 1.0, -1.0], &[3])]);
+        let got = out[0].to_vec::<f32>().unwrap();
+        for (g, want) in got.iter().zip([1.0f32, 2.0, -2.0]) {
+            assert!((g - want).abs() < 1e-5, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn unsupported_opcode_errors_cleanly() {
+        let text = "HloModule t\nENTRY main {\n  p = f32[2]{0} parameter(0)\n  ROOT s = f32[2]{0} sort(p)\n}\n";
+        let interp = Interp::from_text(text).unwrap();
+        let err = interp.run(&[f32lit(&[2.0, 1.0], &[2])]).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported HLO opcode"));
+    }
+}

@@ -1,21 +1,76 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and execute them from Rust — Python is never on
-//! this path.
+//! Runtime: load AOT-compiled HLO artifacts and execute them from Rust —
+//! Python is never on this path (DESIGN.md §9).
 //!
-//! The interchange format is HLO *text* (see aot.py's module docs for why
-//! not serialized protos). `manifest.json` carries the static input/output
-//! shapes of every artifact plus the initial flat parameter vectors.
+//! The interchange format is HLO *text* (see `python/compile/aot.py`'s
+//! module docs for why not serialized protos). `manifest.json` carries the
+//! static input/output shapes of every artifact plus the initial flat
+//! parameter vectors.
+//!
+//! Two execution backends sit behind one [`Runtime`] API:
+//!
+//! * [`BackendKind::Interp`] (default) — the in-tree HLO interpreter
+//!   ([`interp`]). Fully offline: when the artifact directory is empty it
+//!   is bootstrapped by the generator ([`gen`]), so `Runtime::new`
+//!   succeeds with zero setup and the GNN-estimator / distributed-training
+//!   paths run for real.
+//! * [`BackendKind::Pjrt`] — the PJRT client path. The real `xla` crate is
+//!   unavailable offline, so this goes through the API-compatible typed
+//!   stub in `rust/src/xla_stub.rs` and fails with a clear message at
+//!   construction; when a real binding lands, only the stub changes.
+//!
+//! Select with `DISCO_BACKEND=interp|pjrt` (CLI: `--backend`).
 
+pub mod gen;
 pub mod gnn;
+pub mod interp;
 pub mod trainer;
 
 use crate::util::json::Json;
-// The real `xla` crate is unavailable offline; an API-compatible typed
-// stub keeps this module compiling and makes the backend-missing failure
-// mode explicit at `Runtime::new` (see rust/src/xla_stub.rs).
 use crate::xla_stub as xla;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
+
+/// Which execution engine backs [`Runtime`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// In-tree HLO interpreter (offline default).
+    Interp,
+    /// PJRT client (requires a real `xla` binding; stubbed offline).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interp" | "interpreter" => Some(BackendKind::Interp),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Interp => "interp",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Backend selected by `$DISCO_BACKEND` (default: the interpreter).
+    /// A set-but-unrecognized value warns loudly instead of silently
+    /// running a different backend than the one requested.
+    pub fn from_env() -> BackendKind {
+        match std::env::var("DISCO_BACKEND") {
+            Ok(s) => BackendKind::parse(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "warning: DISCO_BACKEND='{s}' not recognized (expected interp|pjrt); \
+                     using the interpreter backend"
+                );
+                BackendKind::Interp
+            }),
+            Err(_) => BackendKind::Interp,
+        }
+    }
+}
 
 /// Shape+dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,7 +116,10 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| {
-                format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+                format!(
+                    "reading {}/manifest.json (run `disco gen-artifacts` or `make artifacts`)",
+                    dir.display()
+                )
             })?;
         let raw = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
         Ok(Manifest { dir: dir.to_path_buf(), raw })
@@ -113,36 +171,103 @@ impl Manifest {
     }
 }
 
-/// A compiled artifact ready to execute on the PJRT CPU client.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+/// The engine behind one loaded artifact.
+enum Engine {
+    Interp(interp::Interp),
+    Pjrt(xla::PjRtLoadedExecutable),
 }
 
-/// Shared PJRT CPU client + manifest.
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    engine: Engine,
+}
+
+/// Artifact manifest + execution backend.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
+    backend: BackendKind,
+    /// Only constructed on the PJRT path.
+    client: Option<xla::PjRtClient>,
 }
 
 impl Runtime {
+    /// Open the artifact directory with the environment-selected backend
+    /// (interpreter by default — succeeds offline; an empty directory is
+    /// bootstrapped by [`gen::ensure_artifacts`]).
     pub fn new(dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest: Manifest::load(dir)? })
+        Self::with_backend(dir, BackendKind::from_env())
+    }
+
+    pub fn with_backend(dir: &Path, backend: BackendKind) -> Result<Runtime> {
+        let client = match backend {
+            BackendKind::Interp => {
+                gen::ensure_artifacts(dir)?;
+                None
+            }
+            BackendKind::Pjrt => Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?,
+            ),
+        };
+        let manifest = Manifest::load(dir)?;
+        if backend == BackendKind::Interp {
+            // Refuse prebuilt sets the interpreter cannot execute up
+            // front (aot.py's JAX-lowered modules use custom-calls and
+            // gather/while the in-tree executor doesn't implement),
+            // instead of failing deep inside a run with "unsupported
+            // HLO opcode". Rust-generated sets carry a generator stamp.
+            let stamp = manifest.raw.get("generator").as_str().unwrap_or("");
+            if !stamp.starts_with("rust-offline") {
+                return Err(anyhow!(
+                    "{}: artifact set was not produced by `disco gen-artifacts` and is \
+                     not executable by the in-tree interpreter; use `--backend pjrt` \
+                     (requires a real xla binding), or point DISCO_ARTIFACTS at a \
+                     different directory / regenerate with `disco gen-artifacts`",
+                    dir.display()
+                ));
+            }
+        }
+        Ok(Runtime { manifest, backend, client })
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Load + compile one artifact.
     pub fn load(&self, name: &str) -> Result<Executable> {
         let spec = self.manifest.artifact(name)?;
         let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        Ok(Executable { spec, exe })
+        let engine = match self.backend {
+            BackendKind::Interp => {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                let it = interp::Interp::from_text(&text)
+                    .with_context(|| format!("parsing {}", path.display()))?;
+                if it.num_params() != spec.inputs.len() {
+                    return Err(anyhow!(
+                        "{name}: module takes {} parameters, manifest says {}",
+                        it.num_params(),
+                        spec.inputs.len()
+                    ));
+                }
+                Engine::Interp(it)
+            }
+            BackendKind::Pjrt => {
+                let client = self
+                    .client
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("PJRT client not initialized"))?;
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                Engine::Pjrt(exe)
+            }
+        };
+        Ok(Executable { spec, engine })
     }
 }
 
@@ -157,15 +282,32 @@ impl Executable {
                 inputs.len()
             ));
         }
-        let out = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.file))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: the result is always a tuple.
-        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+        for (i, (lit, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            let n: i64 = lit.dims.iter().product();
+            if n as usize != spec.elems() {
+                return Err(anyhow!(
+                    "artifact {} input {i}: {} elements for spec {:?}",
+                    self.spec.file,
+                    n,
+                    spec.shape
+                ));
+            }
+        }
+        match &self.engine {
+            Engine::Interp(it) => it
+                .run(inputs)
+                .with_context(|| format!("interpreting {}", self.spec.file)),
+            Engine::Pjrt(exe) => {
+                let out = exe
+                    .execute::<xla::Literal>(inputs)
+                    .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.file))?;
+                let lit = out[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                // aot.py lowers with return_tuple=True: always a tuple.
+                lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+            }
+        }
     }
 }
 
@@ -203,4 +345,61 @@ pub fn lit_to_f64s(lit: &xla::Literal) -> Result<Vec<f64>> {
 pub fn lit_scalar(lit: &xla::Literal) -> Result<f32> {
     let v = lit_to_f32(lit)?;
     v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("disco-rt-test-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn interp_backend_bootstraps_and_loads_every_artifact() {
+        let dir = tmp_dir("boot");
+        let rt = Runtime::with_backend(&dir, BackendKind::Interp).unwrap();
+        assert_eq!(rt.backend().name(), "interp");
+        for name in ["gnn_infer", "gnn_train", "lm_grads", "lm_adam", "lm_eval"] {
+            let exe = rt.load(name).unwrap();
+            assert!(!exe.spec.inputs.is_empty(), "{name}");
+        }
+        // Params round-trip through the manifest.
+        let params = rt
+            .manifest
+            .load_f32(rt.manifest.raw.get("gnn").get("params").as_str().unwrap())
+            .unwrap();
+        assert_eq!(params.len(), gen::gnn_flat_len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pjrt_backend_still_fails_cleanly_offline() {
+        let dir = tmp_dir("pjrt");
+        let err = Runtime::with_backend(&dir, BackendKind::Pjrt).unwrap_err();
+        assert!(format!("{err:#}").contains("not available"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_parse_and_env_default() {
+        assert_eq!(BackendKind::parse("interp"), Some(BackendKind::Interp));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("zzz"), None);
+    }
+
+    #[test]
+    fn run_rejects_wrong_input_arity_and_shape() {
+        let dir = tmp_dir("arity");
+        let rt = Runtime::with_backend(&dir, BackendKind::Interp).unwrap();
+        let exe = rt.load("lm_adam").unwrap();
+        assert!(exe.run(&[]).is_err());
+        let l = gen::lm_flat_len();
+        let bad = lit_f32(&[0.0; 7], &[7]).unwrap();
+        let good = lit_f32(&vec![0.0; l], &[l]).unwrap();
+        let t = lit_f32(&[1.0], &[1]).unwrap();
+        let out = exe.run(&[bad, good.clone(), good.clone(), good.clone(), t.clone()]);
+        assert!(out.is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

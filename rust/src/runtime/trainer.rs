@@ -1,10 +1,12 @@
-//! Distributed transformer-LM training driven from Rust — the enactment
-//! path the end-to-end example exercises.
+//! Distributed LM training driven from Rust — the enactment path the
+//! end-to-end example exercises.
 //!
 //! Synchronous data parallelism over `world` worker threads:
 //!
 //! 1. each worker executes `lm_grads.hlo.txt` (loss + flat gradient) on
-//!    its own PJRT CPU executable and its own shard of the token stream;
+//!    its own executable — the in-tree HLO interpreter by default, a
+//!    PJRT CPU client when a real binding is present (DESIGN.md §9) —
+//!    over its own shard of the token stream;
 //! 2. gradients are averaged with the **real** ring AllReduce
 //!    ([`crate::collective`]) — reduce-scatter + all-gather over the
 //!    worker ring, exactly the collective the paper's clusters run;
@@ -108,6 +110,11 @@ impl Corpus {
 /// Run synchronous data-parallel training. Returns the loss log.
 pub fn train_distributed(cfg: &TrainConfig) -> Result<TrainResult> {
     let start = std::time::Instant::now();
+    // On the interpreter backend an empty artifact dir is bootstrapped
+    // in-process (DESIGN.md §9) before the manifest is read.
+    if super::BackendKind::from_env() == super::BackendKind::Interp {
+        super::gen::ensure_artifacts(&cfg.artifacts)?;
+    }
     // Read static config from the manifest once.
     let manifest = super::Manifest::load(&cfg.artifacts)?;
     let lm = manifest.raw.get("lm");

@@ -1,6 +1,6 @@
 //! Simulated-annealing search over the same joint op/tensor-fusion move
 //! set — the design-choice ablation for the paper's backtracking
-//! algorithm (DESIGN.md §5). Same moves, same cost model, different
+//! algorithm (DESIGN.md §4). Same moves, same cost model, different
 //! exploration: a single walker accepts worsening moves with probability
 //! `exp(−Δ/T)` under a geometric cooling schedule, instead of maintaining
 //! a pruned priority queue of candidates.

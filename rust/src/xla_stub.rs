@@ -4,11 +4,14 @@
 //! [`crate::runtime`] uses, so that module compiles unchanged; every entry
 //! point that would need a real XLA runtime returns an error instead.
 //!
-//! [`Runtime::new`](crate::runtime::Runtime::new) therefore fails with a
-//! clear message, and every caller already handles that path (the GNN
-//! estimator falls back to the analytical model, integration tests skip
-//! when artifacts are missing). Literal construction/readback is
-//! implemented for real so pure data plumbing stays testable.
+//! Since the in-tree HLO interpreter landed (DESIGN.md §9), this stub is
+//! only reached when the PJRT backend is explicitly selected
+//! (`DISCO_BACKEND=pjrt` / `--backend pjrt`):
+//! [`Runtime::with_backend`](crate::runtime::Runtime::with_backend) then
+//! fails with a clear message at construction. The default interpreter
+//! backend executes artifacts for real, offline. [`Literal`] remains the
+//! host-tensor interchange type for *both* backends, so its
+//! construction/readback is implemented for real.
 
 use std::fmt;
 use std::path::Path;

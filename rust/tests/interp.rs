@@ -1,0 +1,239 @@
+//! Interpreter + generated-artifact golden tests (DESIGN.md §7/§9).
+//!
+//! The semantics of individual HLO ops are unit-tested inside
+//! `runtime::interp`; these integration tests check the *composition*:
+//! the generated training artifacts compute correct losses and — the
+//! strongest check we have — gradients that match finite differences
+//! through the interpreter, and the GNN estimator behaves sanely next to
+//! the analytical model on real model-zoo samples.
+
+use disco::bench::gnn_pipeline::generate_samples;
+use disco::bench::BenchOptions;
+use disco::estimator::{AnalyticalFused, FusedOpEstimator};
+use disco::graph::{FusedGroup, OpKind, OrigOp};
+use disco::runtime::gnn::{encode_group, FEAT_DIM, MAX_NODES};
+use disco::runtime::interp::Interp;
+use disco::runtime::{gen, lit_f32, lit_scalar, lit_to_f32, BackendKind, Runtime};
+
+fn chain_group(n: usize, time_ms: f64) -> FusedGroup {
+    FusedGroup {
+        ops: (0..n)
+            .map(|i| OrigOp {
+                orig_id: i,
+                kind: OpKind::Mul,
+                flops: 1e6,
+                bytes_in: 4e5,
+                bytes_out: 4e5,
+                time_ms,
+                duplicated: false,
+            })
+            .collect(),
+        edges: (1..n).map(|i| (i - 1, i)).collect(),
+    }
+}
+
+/// Encode GNN_BATCH chain groups into the (feats, adj, mask) batch.
+fn gnn_batch_inputs() -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let b = gen::GNN_BATCH;
+    let mut feats = vec![0.0f32; b * MAX_NODES * FEAT_DIM];
+    let mut adj = vec![0.0f32; b * MAX_NODES * MAX_NODES];
+    let mut mask = vec![0.0f32; b * MAX_NODES];
+    let mut targets = vec![0.0f32; b];
+    for slot in 0..b {
+        let g = chain_group(2 + slot, 0.02 + 0.01 * slot as f64);
+        let ok = encode_group(
+            &g,
+            4e5,
+            4e5,
+            &mut feats[slot * MAX_NODES * FEAT_DIM..(slot + 1) * MAX_NODES * FEAT_DIM],
+            &mut adj[slot * MAX_NODES * MAX_NODES..(slot + 1) * MAX_NODES * MAX_NODES],
+            &mut mask[slot * MAX_NODES..(slot + 1) * MAX_NODES],
+        );
+        assert!(ok);
+        targets[slot] = 0.02 + 0.013 * slot as f32;
+    }
+    (feats, adj, mask, targets)
+}
+
+/// Run the generated gnn_train module once; returns (loss, grad) where the
+/// gradient is recovered from the Adam state: with m=0 in, m' = 0.1·g.
+fn gnn_train_step(interp: &Interp, params: &[f32]) -> (f64, Vec<f32>) {
+    let n = params.len();
+    let b = gen::GNN_BATCH;
+    let (feats, adj, mask, targets) = gnn_batch_inputs();
+    let zeros = vec![0.0f32; n];
+    let out = interp
+        .run(&[
+            lit_f32(params, &[n]).unwrap(),
+            lit_f32(&zeros, &[n]).unwrap(),
+            lit_f32(&zeros, &[n]).unwrap(),
+            lit_f32(&[1.0], &[1]).unwrap(),
+            lit_f32(&feats, &[b, MAX_NODES, FEAT_DIM]).unwrap(),
+            lit_f32(&adj, &[b, MAX_NODES, MAX_NODES]).unwrap(),
+            lit_f32(&mask, &[b, MAX_NODES]).unwrap(),
+            lit_f32(&targets, &[b]).unwrap(),
+        ])
+        .unwrap();
+    let loss = lit_scalar(&out[0]).unwrap() as f64;
+    let m2 = lit_to_f32(&out[2]).unwrap();
+    let grad: Vec<f32> = m2.iter().map(|&m| m * 10.0).collect();
+    (loss, grad)
+}
+
+#[test]
+fn gnn_train_gradients_match_finite_differences() {
+    let interp = Interp::from_text(&gen::gnn_train_hlo()).unwrap();
+    let params = gen::gnn_init_params();
+    let (loss0, grad) = gnn_train_step(&interp, &params);
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss0={loss0}");
+
+    // One probe index inside every parameter block of the flat layout.
+    let (f, h, m) = (FEAT_DIM, 16usize, 16usize);
+    let w_in = f * h;
+    let probes = [
+        0,                          // W_in
+        w_in + 3,                   // b_in
+        w_in + h + 7,               // W1
+        w_in + h + h * h + 1,       // b1
+        w_in + h + h * h + h + 5,   // Wm1
+        gen::gnn_flat_len() - m - 2, // bm1 (just before Wm2 block)
+        gen::gnn_flat_len() - 2,    // Wm2 last element
+        gen::gnn_flat_len() - 1,    // bm2
+    ];
+    let eps = 1e-2f32;
+    for &i in &probes {
+        let mut up = params.clone();
+        up[i] += eps;
+        let (lu, _) = gnn_train_step(&interp, &up);
+        let mut dn = params.clone();
+        dn[i] -= eps;
+        let (ld, _) = gnn_train_step(&interp, &dn);
+        let fd = (lu - ld) / (2.0 * eps as f64);
+        let g = grad[i] as f64;
+        let tol = 0.05 * g.abs().max(1.0);
+        assert!(
+            (fd - g).abs() < tol,
+            "param {i}: finite-diff {fd:.5} vs analytic {g:.5}"
+        );
+    }
+}
+
+#[test]
+fn gnn_infer_matches_train_side_forward() {
+    // exp(yv) from the infer module must be consistent with the loss the
+    // train module reports: loss = mean((ln pred − ln target)²).
+    let infer = Interp::from_text(&gen::gnn_infer_hlo()).unwrap();
+    let train = Interp::from_text(&gen::gnn_train_hlo()).unwrap();
+    let params = gen::gnn_init_params();
+    let n = params.len();
+    let b = gen::GNN_BATCH;
+    let (feats, adj, mask, targets) = gnn_batch_inputs();
+    let out = infer
+        .run(&[
+            lit_f32(&params, &[n]).unwrap(),
+            lit_f32(&feats, &[b, MAX_NODES, FEAT_DIM]).unwrap(),
+            lit_f32(&adj, &[b, MAX_NODES, MAX_NODES]).unwrap(),
+            lit_f32(&mask, &[b, MAX_NODES]).unwrap(),
+        ])
+        .unwrap();
+    let preds = lit_to_f32(&out[0]).unwrap();
+    assert_eq!(preds.len(), b);
+    assert!(preds.iter().all(|p| p.is_finite() && *p > 0.0), "{preds:?}");
+    let expected_loss = preds
+        .iter()
+        .zip(&targets)
+        .map(|(&p, &t)| {
+            let d = (p as f64).ln() - (t as f64).max(1e-5).ln();
+            d * d
+        })
+        .sum::<f64>()
+        / b as f64;
+    let (loss, _) = gnn_train_step(&train, &params);
+    assert!(
+        (loss - expected_loss).abs() < 1e-3 * expected_loss.max(1.0),
+        "train loss {loss} vs recomputed {expected_loss}"
+    );
+}
+
+#[test]
+fn lm_loss_at_zero_params_is_uniform_entropy() {
+    let interp = Interp::from_text(&gen::lm_eval_hlo()).unwrap();
+    let l = gen::lm_flat_len();
+    let (b, s, v) = (gen::LM_BATCH, gen::LM_SEQ, gen::LM_VOCAB);
+    let tokens: Vec<i32> = (0..b * (s + 1)).map(|i| (i * 7 % 96) as i32 + 32).collect();
+    let out = interp
+        .run(&[
+            lit_f32(&vec![0.0; l], &[l]).unwrap(),
+            disco::runtime::lit_i32(&tokens, &[b, s + 1]).unwrap(),
+        ])
+        .unwrap();
+    let loss = lit_scalar(&out[0]).unwrap() as f64;
+    let uniform = (v as f64).ln();
+    assert!(
+        (loss - uniform).abs() < 1e-3,
+        "uniform-logit loss {loss} vs ln({v}) = {uniform}"
+    );
+}
+
+#[test]
+fn lm_adam_moves_params_against_gradient() {
+    let interp = Interp::from_text(&gen::lm_adam_hlo()).unwrap();
+    let l = gen::lm_flat_len();
+    let p = vec![0.5f32; l];
+    let mut g = vec![0.0f32; l];
+    g[0] = 1.0; // positive gradient → param must decrease
+    g[1] = -1.0; // negative gradient → param must increase
+    let zeros = vec![0.0f32; l];
+    let out = interp
+        .run(&[
+            lit_f32(&p, &[l]).unwrap(),
+            lit_f32(&g, &[l]).unwrap(),
+            lit_f32(&zeros, &[l]).unwrap(),
+            lit_f32(&zeros, &[l]).unwrap(),
+            lit_f32(&[1.0], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let p2 = lit_to_f32(&out[0]).unwrap();
+    assert!(p2[0] < 0.5, "p2[0]={}", p2[0]);
+    assert!(p2[1] > 0.5, "p2[1]={}", p2[1]);
+    // Zero gradient → parameter untouched (Adam has no weight decay).
+    assert!((p2[2] - 0.5).abs() < 1e-7, "p2[2]={}", p2[2]);
+    // Bias-corrected first step ≈ lr · sign(g).
+    let lr = gen::LM_LR as f32;
+    assert!((0.5 - p2[0] - lr).abs() < lr * 0.05, "step={}", 0.5 - p2[0]);
+}
+
+#[test]
+fn gnn_and_analytical_predictions_are_finite_and_sane_on_zoo() {
+    // Parity satellite: on real model-zoo fused-op samples, the (untrained)
+    // GNN estimator and the analytical model must both produce finite,
+    // positive, same-ballpark predictions, and the GNN's batch path must
+    // agree with its scalar path.
+    let opts = BenchOptions::default();
+    let samples = generate_samples(&opts, 8, 12, 0x51EE);
+    assert!(samples.len() >= 24);
+    let dir = std::env::temp_dir().join(format!("disco-parity-{}", std::process::id()));
+    let rt = Runtime::with_backend(&dir, BackendKind::Interp).unwrap();
+    let fallback = AnalyticalFused { launch_ms: 0.005, bw_bytes_per_ms: 4.8e8 };
+    let pred = disco::runtime::gnn::GnnPredictor::load(&rt, fallback).unwrap();
+
+    let items: Vec<(FusedGroup, f64, f64)> = samples
+        .iter()
+        .take(40)
+        .map(|s| (s.group.clone(), s.bytes_in, s.bytes_out))
+        .collect();
+    let gnn = pred.predict(&items).unwrap();
+    let ana = AnalyticalFused { launch_ms: 0.005, bw_bytes_per_ms: 4.8e8 };
+    for ((group, bi, bo), &g) in items.iter().zip(&gnn) {
+        let a = ana.estimate_ms(group, *bi, *bo);
+        assert!(g.is_finite() && g > 0.0, "gnn pred {g}");
+        assert!(a.is_finite() && a > 0.0, "analytical pred {a}");
+        // Untrained net vs white-box heuristic: same universe, not equal.
+        assert!((g / a).ln().abs() < 20.0, "gnn {g} vs analytical {a}");
+    }
+    // Scalar path consistency (same artifact, same encoding).
+    let (g0, bi0, bo0) = &items[0];
+    let single = pred.estimate_ms(g0, *bi0, *bo0);
+    assert!((single - gnn[0]).abs() < 1e-9, "batch {} vs scalar {single}", gnn[0]);
+    std::fs::remove_dir_all(&dir).ok();
+}
