@@ -45,23 +45,34 @@ fn main() {
     }
 
     // Hot-path A/B on the acceptance workload (transformer_base, 12
-    // workers) → BENCH_search.json at the repo root.
+    // workers) → BENCH_search.json at the repo root. Three arms: PR-0
+    // "before", PR-1 "after" (allocation-free, full sims) and "delta"
+    // (cost tables + checkpointed delta simulation, current default).
     let opts = BenchOptions { scale: Scale::Full, ..Default::default() };
     match write_search_perf_record(&opts) {
         Ok((record, path)) => {
-            for (tag, m) in [("before", &record.before), ("after", &record.after)] {
+            for (tag, m) in [
+                ("before", &record.before),
+                ("after", &record.after),
+                ("delta", &record.delta),
+            ] {
                 println!(
-                    "hotpath/{tag:<7} {:>6} evals in {:>6.2}s = {:>7.0} evals/s   arena peak {:.2} MB   best {:.2} ms",
+                    "hotpath/{tag:<7} {:>6} evals (+{} resims) in {:>6.2}s = {:>7.0} evals/s   arena peak {:.2} MB   best {:.2} ms   cache {}h/{}m/{}e",
                     m.evals,
+                    m.resims,
                     m.seconds,
                     m.evals_per_sec,
                     m.peak_arena_bytes as f64 / 1e6,
                     m.best_cost_ms,
+                    m.cache_hits,
+                    m.cache_misses,
+                    m.cache_evictions,
                 );
             }
             println!(
-                "hotpath ratio: {:.2}x evals/s, {:.2}x smaller arena  -> {}",
+                "hotpath ratios: after/before {:.2}x evals/s, delta/after {:.2}x evals/s, {:.2}x smaller arena  -> {}",
                 record.throughput_ratio(),
+                record.delta_ratio(),
                 record.arena_ratio(),
                 path.display()
             );

@@ -6,11 +6,15 @@
 
 use disco::device::DeviceModel;
 use disco::estimator::CostEstimator;
+use disco::fusion::{fuse_ops_explain, op_fusion_candidates, FusionKind};
 use disco::models::{build, ModelKind, ModelSpec};
 use disco::network::Cluster;
 use disco::profiler::profile;
 use disco::sim::hifi::{execute_real, HifiOptions};
-use disco::sim::{simulate, simulate_in, NoRecord, SimOptions, SimWorkspace};
+use disco::sim::{
+    simulate, simulate_ckpt_in, simulate_delta, simulate_in, simulate_table_in, CheckpointLog,
+    CostTable, NoRecord, SimOptions, SimWorkspace,
+};
 use disco::util::timer::{bench_quick, black_box};
 
 fn main() {
@@ -34,16 +38,66 @@ fn main() {
             black_box(simulate(&g, &est, SimOptions::default()));
         });
 
-        // After: reused workspace + cached CSR (the search hot path).
+        // After: reused workspace + cached CSR (the PR-1 hot path).
         let mut ws = SimWorkspace::new();
         let reused = bench_quick(&format!("simulate/reused-ws/{name} ({ops} ops)"), || {
             black_box(simulate_in(&g, &est, SimOptions::default(), &mut NoRecord, &mut ws));
         });
 
-        let ops_per_ms = ops as f64 / (reused.mean_ns / 1e6);
+        // Cost-table event loop: per-node costs resolved once per call
+        // into flat arrays, zero dyn calls / locks per scheduled event
+        // (build included in the measurement — the search rebuilds the
+        // table per candidate).
+        let mut table = CostTable::new();
+        let tabled = bench_quick(&format!("simulate/cost-table/{name} ({ops} ops)"), || {
+            table.build_in(&g, &est);
+            black_box(simulate_table_in(&g, &table, SimOptions::default(), &mut NoRecord, &mut ws));
+        });
+
+        // Delta replay: parent simulated once with checkpoints (outside
+        // the timed loop, as in the search where ≤3 children share it),
+        // then each iteration replays one late-mutation child's suffix.
+        let parent = g.clone();
+        let mut parent_table = CostTable::new();
+        parent_table.build_in(&parent, &est);
+        let mut log = CheckpointLog::new();
+        let _ = simulate_ckpt_in(
+            &parent,
+            &parent_table,
+            SimOptions::default(),
+            &mut NoRecord,
+            &mut ws,
+            &mut log,
+            0,
+        );
+        let mut child = parent.clone();
+        let (p, s) = *op_fusion_candidates(&parent).last().expect("no fusion candidates");
+        let fx = fuse_ops_explain(&mut child, p, s, FusionKind::NonDuplicate)
+            .or_else(|_| fuse_ops_explain(&mut child, p, s, FusionKind::Duplicate))
+            .expect("fusion failed");
+        let mut frontier = vec![p, s];
+        fx.extend_frontier(&child, &mut frontier);
+        let mut child_table = CostTable::new();
+        child_table.extend_in(&parent_table, &child, &est);
+        let delta = bench_quick(&format!("simulate/delta-replay/{name} ({ops} ops)"), || {
+            black_box(simulate_delta(
+                &parent,
+                &log,
+                &child,
+                &frontier,
+                &child_table,
+                SimOptions::default(),
+                &mut NoRecord,
+                &mut ws,
+            ));
+        });
+
+        let ops_per_ms = ops as f64 / (tabled.mean_ns / 1e6);
         println!(
-            "  -> {ops_per_ms:.0} simulated ops/ms reused ({:.2}x vs fresh-alloc)",
-            fresh.mean_ns / reused.mean_ns
+            "  -> {ops_per_ms:.0} simulated ops/ms cost-table ({:.2}x vs fresh-alloc, {:.2}x vs reused-ws); delta replay {:.2}x vs cost-table",
+            fresh.mean_ns / tabled.mean_ns,
+            reused.mean_ns / tabled.mean_ns,
+            tabled.mean_ns / delta.mean_ns,
         );
     }
 

@@ -430,11 +430,13 @@ pub fn ext_parameter_server(opts: &BenchOptions) -> String {
 }
 
 /// §Perf — search hot-path A/B: evals/sec and peak candidate-arena bytes
-/// with the pre-refactor engine behavior (eager clone arena, per-eval
-/// scratch allocations, full candidate re-enumeration, serial eval)
-/// versus the current engine (delta candidates, reused workspaces,
-/// incremental candidate pool, parallel eval). Also writes
-/// `BENCH_search.json` at the repo root.
+/// across three engine generations — "before" (PR-0: eager clone arena,
+/// per-eval scratch allocations, full candidate re-enumeration, serial
+/// eval), "after" (PR-1: allocation-free, full simulation per candidate)
+/// and "delta" (current: flat cost tables + checkpointed delta
+/// simulation) — plus the estimator prediction-memo counters
+/// (hits/misses/evictions; the memo is bounded with FIFO eviction).
+/// Also writes `BENCH_search.json` at the repo root.
 pub fn perf_search(opts: &BenchOptions) -> String {
     let (record, path) = match super::write_search_perf_record(opts) {
         Ok(ok) => ok,
@@ -445,22 +447,38 @@ pub fn perf_search(opts: &BenchOptions) -> String {
             "§Perf — search hot path, {} on {} workers (budget {}, seed {:#x})",
             record.model, record.workers, record.unchanged_limit, record.seed
         ),
-        &["engine", "evals", "seconds", "evals/sec", "peak arena MB", "best (ms)"],
+        &[
+            "engine",
+            "evals",
+            "resims",
+            "seconds",
+            "evals/sec",
+            "peak arena MB",
+            "best (ms)",
+            "cache h/m/evict",
+        ],
     );
-    for (name, m) in [("before", &record.before), ("after", &record.after)] {
+    for (name, m) in [
+        ("before", &record.before),
+        ("after", &record.after),
+        ("delta", &record.delta),
+    ] {
         t.row(vec![
             name.to_string(),
             m.evals.to_string(),
+            m.resims.to_string(),
             format!("{:.2}", m.seconds),
             format!("{:.0}", m.evals_per_sec),
             format!("{:.2}", m.peak_arena_bytes as f64 / 1e6),
             fmt_ms(m.best_cost_ms),
+            format!("{}/{}/{}", m.cache_hits, m.cache_misses, m.cache_evictions),
         ]);
     }
     let mut out = t.to_markdown();
     out.push_str(&format!(
-        "\nthroughput ratio: {:.2}x; arena ratio: {:.2}x; record: {}\n",
+        "\nafter/before throughput: {:.2}x; delta/after throughput: {:.2}x; arena ratio: {:.2}x; record: {}\n",
         record.throughput_ratio(),
+        record.delta_ratio(),
         record.arena_ratio(),
         path.display()
     ));

@@ -221,18 +221,26 @@ pub fn run_all_schemes(p: &Prepared, opts: &BenchOptions) -> (Vec<SchemeResult>,
 pub struct HotPathModeStats {
     pub evals: u64,
     pub steps: u64,
+    /// Checkpointed parent re-simulations (delta-sim arm only).
+    pub resims: u64,
     pub seconds: f64,
     pub evals_per_sec: f64,
     pub peak_arena_bytes: usize,
     pub best_cost_ms: f64,
+    /// Estimator prediction-memo counters for the arm's run.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
 }
 
-/// Before/after measurement of the search hot path on the acceptance
+/// Three-arm measurement of the search hot path on the acceptance
 /// workload (`transformer_base`, 12 workers — paper cluster A).
-/// "Before" pins the pre-refactor engine behavior through the
-/// [`SearchConfig`] toggles: eager full-clone arena, fresh scratch
-/// allocations per eval, full candidate re-enumeration per mutation,
-/// serial evaluation. "After" is the default engine.
+/// "Before" pins the PR-0 engine behavior through the [`SearchConfig`]
+/// toggles (eager full-clone arena, fresh scratch allocations per eval,
+/// full candidate re-enumeration per mutation, serial evaluation);
+/// "after" is the PR-1 allocation-free engine with full per-candidate
+/// simulation; "delta" adds flat cost tables + checkpointed delta
+/// simulation (the current default engine).
 #[derive(Debug, Clone)]
 pub struct HotPathRecord {
     pub model: &'static str,
@@ -241,6 +249,7 @@ pub struct HotPathRecord {
     pub seed: u64,
     pub before: HotPathModeStats,
     pub after: HotPathModeStats,
+    pub delta: HotPathModeStats,
 }
 
 impl HotPathRecord {
@@ -249,6 +258,16 @@ impl HotPathRecord {
             0.0
         } else {
             self.after.evals_per_sec / self.before.evals_per_sec
+        }
+    }
+
+    /// Delta-sim arm vs the PR-1 "after" arm (the ISSUE 3 acceptance
+    /// metric: ≥ 2× further evals/sec).
+    pub fn delta_ratio(&self) -> f64 {
+        if self.after.evals_per_sec == 0.0 {
+            0.0
+        } else {
+            self.delta.evals_per_sec / self.after.evals_per_sec
         }
     }
 
@@ -266,10 +285,14 @@ impl HotPathRecord {
             Json::obj(vec![
                 ("evals", Json::Num(m.evals as f64)),
                 ("steps", Json::Num(m.steps as f64)),
+                ("resims", Json::Num(m.resims as f64)),
                 ("seconds", Json::Num(m.seconds)),
                 ("evals_per_sec", Json::Num(m.evals_per_sec)),
                 ("peak_arena_bytes", Json::Num(m.peak_arena_bytes as f64)),
                 ("best_cost_ms", Json::Num(m.best_cost_ms)),
+                ("cache_hits", Json::Num(m.cache_hits as f64)),
+                ("cache_misses", Json::Num(m.cache_misses as f64)),
+                ("cache_evictions", Json::Num(m.cache_evictions as f64)),
             ])
         };
         Json::obj(vec![
@@ -281,7 +304,9 @@ impl HotPathRecord {
             ("measured", Json::Bool(true)),
             ("before", mode(&self.before)),
             ("after", mode(&self.after)),
+            ("delta", mode(&self.delta)),
             ("evals_per_sec_ratio", Json::Num(self.throughput_ratio())),
+            ("delta_evals_per_sec_ratio", Json::Num(self.delta_ratio())),
             ("peak_arena_bytes_ratio", Json::Num(self.arena_ratio())),
         ])
     }
@@ -295,19 +320,25 @@ fn timed_search(
     let t = std::time::Instant::now();
     let r = backtracking_search(graph, est, cfg);
     let seconds = t.elapsed().as_secs_f64();
+    let cache = est.cache_detail();
     HotPathModeStats {
         evals: r.evals,
         steps: r.steps,
+        resims: r.resims,
         seconds,
         evals_per_sec: if seconds > 0.0 { r.evals as f64 / seconds } else { 0.0 },
         peak_arena_bytes: r.peak_arena_bytes,
         best_cost_ms: r.best_cost_ms,
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
+        cache_evictions: cache.evictions,
     }
 }
 
-/// Measure the search hot path before/after on the acceptance workload.
-/// Always uses the *full* `transformer_base` spec (the record is about
-/// engine throughput, not CI speed); `opts.scale` only sizes the budget.
+/// Measure the search hot path (before / after / delta) on the acceptance
+/// workload. Always uses the *full* `transformer_base` spec (the record
+/// is about engine throughput, not CI speed); `opts.scale` only sizes the
+/// budget.
 pub fn search_hot_path_record(opts: &BenchOptions) -> HotPathRecord {
     let cluster = Cluster::cluster_a();
     let device = BenchOptions::device_for(&cluster);
@@ -323,16 +354,25 @@ pub fn search_hot_path_record(opts: &BenchOptions) -> HotPathRecord {
         delta_candidates: false,
         reuse_workspaces: false,
         incremental_candidates: false,
+        cost_table: false,
+        delta_sim: false,
         ..base.clone()
     };
+    // PR-1 engine: everything allocation-free, but every candidate fully
+    // simulated with per-event dyn-dispatched costs.
+    let after_cfg = SearchConfig { cost_table: false, delta_sim: false, ..base.clone() };
     // Fresh estimator (cold prediction memo) and fresh graph (cold CSR
-    // cache) per arm — sharing them would hand the second run a
-    // pre-warmed cache and bias the throughput ratio by run order.
+    // cache) per arm — sharing them would hand a later run a pre-warmed
+    // cache and bias the throughput ratios by run order.
     let before = {
         let est = CostEstimator::oracle(&profile, &device);
         timed_search(&graph.clone(), &est, &before_cfg)
     };
     let after = {
+        let est = CostEstimator::oracle(&profile, &device);
+        timed_search(&graph.clone(), &est, &after_cfg)
+    };
+    let delta = {
         let est = CostEstimator::oracle(&profile, &device);
         timed_search(&graph.clone(), &est, &base)
     };
@@ -343,6 +383,7 @@ pub fn search_hot_path_record(opts: &BenchOptions) -> HotPathRecord {
         seed: opts.seed,
         before,
         after,
+        delta,
     }
 }
 

@@ -24,9 +24,61 @@ use crate::graph::{FusedGroup, Node, OpKind};
 use crate::network::{Cluster, CommModel};
 use crate::profiler::ProfileData;
 use crate::sim::CostSource;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Default capacity of the fused-op prediction memo: ~64k entries ≈ a
+/// couple of MB including map overhead. Large enough that a full search
+/// on the paper workloads never evicts; small enough that a long-lived
+/// service process (many searches over many models) stays bounded.
+pub const DEFAULT_MEMO_CAPACITY: usize = 1 << 16;
+
+/// Bounded signature → prediction memo with FIFO eviction. Evicting a
+/// live signature only costs a recompute (predictions are deterministic),
+/// so the cheap policy is correct; FIFO keeps the critical section to a
+/// hash insert + a deque push.
+#[derive(Debug, Default)]
+struct Memo {
+    map: HashMap<u64, f64>,
+    order: VecDeque<u64>,
+    cap: usize,
+    evictions: u64,
+}
+
+impl Memo {
+    fn with_capacity(cap: usize) -> Memo {
+        Memo { cap: cap.max(1), ..Memo::default() }
+    }
+
+    fn get(&self, sig: u64) -> Option<f64> {
+        self.map.get(&sig).copied()
+    }
+
+    fn insert(&mut self, sig: u64, t: f64) {
+        if self.map.insert(sig, t).is_none() {
+            self.order.push_back(sig);
+            while self.map.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                    self.evictions += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Snapshot of the prediction-memo counters (`disco bench perf` table).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
 
 /// Strategy for predicting fused-op execution time.
 pub trait FusedOpEstimator {
@@ -98,13 +150,17 @@ impl FusedOpEstimator for OracleFused {
 /// The full cost model handed to the simulator. `Sync`: the search's
 /// parallel candidate evaluation shares one estimator across worker
 /// threads, so the prediction memo is a `Mutex` and the stats are atomics
-/// (cached *values* are deterministic — only the hit/miss split varies
-/// with thread interleaving).
+/// (cached *values* are deterministic — only the hit/miss/eviction split
+/// varies with thread interleaving). The memo is **bounded**
+/// ([`DEFAULT_MEMO_CAPACITY`], FIFO eviction) so a long-lived process
+/// cannot grow it without limit; with the search's table-driven
+/// evaluation (`sim::CostTable`) it is consulted only at table-build
+/// time, never inside the simulator event loop.
 pub struct CostEstimator<'a> {
     pub profile: &'a ProfileData,
     pub comm: CommModel,
     pub fused: Box<dyn FusedOpEstimator + Sync + 'a>,
-    cache: Mutex<HashMap<u64, f64>>,
+    cache: Mutex<Memo>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -115,10 +171,17 @@ impl<'a> CostEstimator<'a> {
             profile,
             comm: profile.comm,
             fused,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(Memo::with_capacity(DEFAULT_MEMO_CAPACITY)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// Override the prediction-memo capacity (entries, min 1). Eviction
+    /// never changes results — only the recompute rate.
+    pub fn with_cache_capacity(self, cap: usize) -> Self {
+        self.cache.lock().unwrap().cap = cap.max(1);
+        self
     }
 
     /// Analytical-backend estimator (searcher without a GNN).
@@ -136,6 +199,19 @@ impl<'a> CostEstimator<'a> {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
+    /// Full memo counters including evictions and occupancy
+    /// (`disco bench perf` markdown table).
+    pub fn cache_detail(&self) -> MemoStats {
+        let memo = self.cache.lock().unwrap();
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: memo.evictions,
+            len: memo.map.len(),
+            capacity: memo.cap,
+        }
+    }
+
     /// Batch-predict every not-yet-cached fused op of `graph` in one
     /// backend call (the search invokes this before each `Cost(H')`
     /// evaluation so GNN queries arrive in batches, not one-by-one).
@@ -149,7 +225,7 @@ impl<'a> CostEstimator<'a> {
             for n in graph.live() {
                 if let Some(group) = &n.fused {
                     let sig = group.signature();
-                    if !cache.contains_key(&sig) && !pending.iter().any(|(s, _)| *s == sig) {
+                    if cache.get(sig).is_none() && !pending.iter().any(|(s, _)| *s == sig) {
                         let mut g = group.clone();
                         self.profile.annotate_group(&mut g);
                         pending.push((sig, (g, n.bytes_in, n.bytes_out)));
@@ -173,7 +249,7 @@ impl<'a> CostEstimator<'a> {
     fn fused_time(&self, node: &Node) -> f64 {
         let group = node.fused.as_ref().expect("fused node without group");
         let sig = group.signature();
-        if let Some(&t) = self.cache.lock().unwrap().get(&sig) {
+        if let Some(t) = self.cache.lock().unwrap().get(sig) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
@@ -278,6 +354,28 @@ mod tests {
         // White-box heuristic: right order of magnitude, not exact.
         assert!(pred > 0.0);
         assert!((pred - truth).abs() / truth < 0.8, "pred={pred} truth={truth}");
+    }
+
+    #[test]
+    fn bounded_memo_evicts_without_changing_predictions() {
+        let (mut g, d, _c, prof) = setup();
+        let f1 = fuse_ops(&mut g, 1, 2, FusionKind::NonDuplicate).unwrap();
+        let f2 = fuse_ops(&mut g, 3, 4, FusionKind::NonDuplicate).unwrap();
+        // Capacity 1: the second distinct signature evicts the first.
+        let est = CostEstimator::oracle(&prof, &d).with_cache_capacity(1);
+        let a1 = est.compute_time_ms(&g.nodes[f1]);
+        let a2 = est.compute_time_ms(&g.nodes[f2]);
+        let s = est.cache_detail();
+        assert_eq!(s.capacity, 1);
+        assert_eq!(s.len, 1);
+        assert_eq!(s.evictions, 1);
+        // Re-querying the evicted signature recomputes the same value.
+        let b1 = est.compute_time_ms(&g.nodes[f1]);
+        assert_eq!(a1, b1);
+        assert_eq!(a2, est.compute_time_ms(&g.nodes[f2]));
+        let s2 = est.cache_detail();
+        assert!(s2.evictions >= 2, "evictions={}", s2.evictions);
+        assert_eq!(s2.len, 1);
     }
 
     #[test]

@@ -123,9 +123,32 @@ fn external_input_bytes(g: &TrainingGraph, inputs: &[NodeId]) -> f64 {
     inputs.iter().map(|&i| g.nodes[i].bytes_out).sum()
 }
 
-/// What a successful op-fusion rewrite did to the graph, beyond creating
-/// the fused node — enough for incremental maintenance of derived state
-/// (the search's [`CandidateSet`]) without rescanning the graph.
+/// Collapse duplicate references to the newly-created `fused` node in a
+/// rewritten consumer's input list (a consumer of both rewrite operands
+/// lists the fused node twice after redirection), preserving every other
+/// operand — including pre-existing legitimate duplicates like x·x, even
+/// when the same consumer was redirected. A rewrite must not edit edges
+/// it didn't create: the delta simulator relies on [`FusionEffects`]
+/// plus the fused node's input list covering every node whose adjacency
+/// changed, and an unrelated operand's consumer count is outside that
+/// set.
+fn dedup_fused_ref_in_place(ins: &mut Vec<NodeId>, fused: NodeId) {
+    let mut seen = false;
+    ins.retain(|&i| {
+        if i == fused {
+            if seen {
+                return false;
+            }
+            seen = true;
+        }
+        true
+    });
+}
+
+/// What a successful rewrite did to the graph, beyond creating the fused
+/// node — enough for incremental maintenance of derived state (the
+/// search's [`CandidateSet`], the delta simulator's mutation frontier)
+/// without rescanning the graph.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FusionEffects {
     /// Id of the new fused node.
@@ -134,8 +157,26 @@ pub struct FusionEffects {
     /// ascending node-id order) — exactly the consumers of `fused`.
     pub redirected: Vec<NodeId>,
     /// Whether the predecessor was tombstoned (false only for duplicate
-    /// fusion that kept the replica live).
+    /// fusion that kept the replica live; always true for AR fusion,
+    /// which tombstones both constituents).
     pub pred_deleted: bool,
+}
+
+impl FusionEffects {
+    /// Append every node this rewrite structurally touched to `out`: the
+    /// fused node, the consumers whose inputs were redirected, and the
+    /// fused node's inputs (their consumer sets — and hence simulator
+    /// refcounts — changed). Together with the mutation's operands
+    /// (pred/succ or a/b, which the caller records anyway) this is the
+    /// complete set of nodes whose scheduler state can differ from the
+    /// parent graph's — the *mutation frontier* consumed by
+    /// [`crate::sim::simulate_delta`]. `g` must be the graph state right
+    /// after the rewrite (the fused node's input list is read from it).
+    pub fn extend_frontier(&self, g: &TrainingGraph, out: &mut Vec<NodeId>) {
+        out.push(self.fused);
+        out.extend_from_slice(&self.redirected);
+        out.extend_from_slice(&g.nodes[self.fused].inputs);
+    }
 }
 
 /// Fuse predecessor `pred` into successor `succ`. Returns the id of the new
@@ -266,19 +307,12 @@ pub fn fuse_ops_explain(
         }
         if hit {
             redirected.push(n);
+            // A rewritten consumer may now list the fused node twice (it
+            // consumed both pred and succ); collapse that — and only that
+            // — to keep byte accounting sane (see dedup_fused_ref_in_place
+            // for why no other operand may be touched).
+            dedup_fused_ref_in_place(&mut g.nodes[n].inputs, fused_id);
         }
-        // A consumer may now list the fused node twice (it consumed both
-        // pred and succ); dedup to keep byte accounting sane.
-        let ins = &mut g.nodes[n].inputs;
-        let mut seen = Vec::with_capacity(ins.len());
-        ins.retain(|&i| {
-            if seen.contains(&i) {
-                false
-            } else {
-                seen.push(i);
-                true
-            }
-        });
     }
 
     // Tombstones.
@@ -354,6 +388,17 @@ pub fn fuse_allreduce(
     a: NodeId,
     b: NodeId,
 ) -> Result<NodeId, FusionError> {
+    fuse_allreduce_explain(g, a, b).map(|fx| fx.fused)
+}
+
+/// [`fuse_allreduce`] returning the full [`FusionEffects`] record (both
+/// constituents are tombstoned; `redirected` holds the optimizer updates
+/// rewired onto the fused instruction).
+pub fn fuse_allreduce_explain(
+    g: &mut TrainingGraph,
+    a: NodeId,
+    b: NodeId,
+) -> Result<FusionEffects, FusionError> {
     if a == b {
         return Err(FusionError::SelfFusion);
     }
@@ -397,33 +442,31 @@ pub fn fuse_allreduce(
     });
 
     // Redirect consumers (optimizer updates) of both AllReduces.
+    let mut redirected: Vec<NodeId> = Vec::new();
     for n in 0..fused_id {
         if g.nodes[n].deleted {
             continue;
         }
+        let mut hit = false;
         for idx in 0..g.nodes[n].inputs.len() {
             let i = g.nodes[n].inputs[idx];
             if i == a || i == b {
                 g.nodes[n].inputs[idx] = fused_id;
+                hit = true;
             }
         }
-        let ins = &mut g.nodes[n].inputs;
-        let mut seen = Vec::with_capacity(ins.len());
-        ins.retain(|&i| {
-            if seen.contains(&i) {
-                false
-            } else {
-                seen.push(i);
-                true
-            }
-        });
+        if hit {
+            redirected.push(n);
+            // A consumer of both constituents now lists the fused AR twice.
+            dedup_fused_ref_in_place(&mut g.nodes[n].inputs, fused_id);
+        }
     }
     g.nodes[a].deleted = true;
     g.nodes[b].deleted = true;
 
     g.invalidate_adjacency();
     debug_assert!(g.validate().is_ok(), "AR fusion broke the graph");
-    Ok(fused_id)
+    Ok(FusionEffects { fused: fused_id, redirected, pred_deleted: true })
 }
 
 /// Candidate (pred, succ) op-fusion pairs in the current graph.
@@ -494,14 +537,15 @@ impl CandidateSet {
     }
 
     /// Apply an op fusion through the set, patching the pair pool from the
-    /// rewrite's [`FusionEffects`].
+    /// rewrite's [`FusionEffects`] (returned for the caller's own
+    /// incremental state — the search's delta-sim mutation frontier).
     pub fn apply_op_fusion(
         &mut self,
         g: &mut TrainingGraph,
         pred: NodeId,
         succ: NodeId,
         kind: FusionKind,
-    ) -> Result<NodeId, FusionError> {
+    ) -> Result<FusionEffects, FusionError> {
         let fx = fuse_ops_explain(g, pred, succ, kind)?;
         // `succ` is always tombstoned; `pred` only when the rewrite says so
         // (duplicate fusion keeps the replica live, and its other pairs
@@ -521,7 +565,7 @@ impl CandidateSet {
                 self.pairs.push((f, c));
             }
         }
-        Ok(f)
+        Ok(fx)
     }
 
     /// Apply an AllReduce fusion through the set, patching the AR pool.
@@ -530,11 +574,11 @@ impl CandidateSet {
         g: &mut TrainingGraph,
         a: NodeId,
         b: NodeId,
-    ) -> Result<NodeId, FusionError> {
-        let f = fuse_allreduce(g, a, b)?;
+    ) -> Result<FusionEffects, FusionError> {
+        let fx = fuse_allreduce_explain(g, a, b)?;
         self.ars.retain(|&x| x != a && x != b);
-        self.ars.push(f);
-        Ok(f)
+        self.ars.push(fx.fused);
+        Ok(fx)
     }
 }
 
@@ -741,6 +785,77 @@ mod tests {
         assert!(cands.contains(&(m1, m2)));
         // The constant is not a fusible pred.
         assert!(cands.iter().all(|&(p, _)| p != 0));
+    }
+
+    #[test]
+    fn ar_fusion_effects_record_redirects() {
+        let mut b = GraphBuilder::new("fx", 4);
+        let x = b.constant("x", &[256]);
+        let g1 = b.compute(OpKind::Mul, "g1", &[x], &[256], Role::Backward);
+        let g2 = b.compute(OpKind::Mul, "g2", &[g1], &[128], Role::Backward);
+        let p1 = b.param("w1", &[256]);
+        let p2 = b.param("w2", &[128]);
+        let ar1 = b.allreduce("ar1", g1, &[256]);
+        let ar2 = b.allreduce("ar2", g2, &[128]);
+        let u1 = b.optimizer_update("u1", &[ar1, p1]);
+        let u2 = b.optimizer_update("u2", &[ar2, p2]);
+        let mut g = b.finish();
+        let fx = fuse_allreduce_explain(&mut g, ar1, ar2).unwrap();
+        assert!(fx.pred_deleted);
+        assert_eq!(fx.redirected, vec![u1, u2]);
+        assert_eq!(g.nodes[u1].inputs, vec![fx.fused, p1]);
+        // Frontier covers the fused AR, the rewired optimizer updates and
+        // the gradient producers whose consumer sets changed.
+        let mut frontier = vec![ar1, ar2];
+        fx.extend_frontier(&g, &mut frontier);
+        for id in [ar1, ar2, fx.fused, u1, u2, g1, g2] {
+            assert!(frontier.contains(&id), "frontier missing {id}");
+        }
+    }
+
+    #[test]
+    fn op_fusion_frontier_covers_touched_nodes() {
+        let (mut g, x, m1, m2, ar) = diamond();
+        let fx = fuse_ops_explain(&mut g, m1, m2, FusionKind::NonDuplicate).unwrap();
+        let mut frontier = vec![m1, m2];
+        fx.extend_frontier(&g, &mut frontier);
+        // x feeds the fused kernel now; ar and sig were redirected.
+        let sig = g.live().find(|n| n.kind == OpKind::Sigmoid).map(|n| n.id).unwrap();
+        for id in [m1, m2, fx.fused, x, ar, sig] {
+            assert!(frontier.contains(&id), "frontier missing {id}");
+        }
+    }
+
+    #[test]
+    fn redirect_preserves_unrelated_duplicate_operands() {
+        // sq consumes m twice (x·x style) AND the fusion predecessor:
+        // redirection must rewrite only the p1 reference, leaving the
+        // legitimate duplicate m-edges intact.
+        let mut b = GraphBuilder::new("rd", 2);
+        let x = b.constant("x", &[16]);
+        let m = b.compute(OpKind::Mul, "m", &[x], &[16], Role::Forward);
+        let p1 = b.compute(OpKind::Add, "p1", &[x], &[16], Role::Forward);
+        let p2 = b.compute(OpKind::Add, "p2", &[p1], &[16], Role::Forward);
+        let sq = b.compute(OpKind::Mul, "sq", &[m, m, p1], &[16], Role::Forward);
+        let mut g = b.finish();
+        let fx = fuse_ops_explain(&mut g, p1, p2, FusionKind::NonDuplicate).unwrap();
+        assert_eq!(g.nodes[sq].inputs, vec![m, m, fx.fused]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn consumer_of_both_operands_gets_single_fused_ref() {
+        // c consumes pred AND succ: after redirection both references
+        // point at the fused node and must collapse to one.
+        let mut b = GraphBuilder::new("cb", 2);
+        let x = b.constant("x", &[16]);
+        let p = b.compute(OpKind::Add, "p", &[x], &[16], Role::Forward);
+        let s = b.compute(OpKind::Mul, "s", &[p], &[16], Role::Forward);
+        let c = b.compute(OpKind::Add, "c", &[p, s], &[16], Role::Forward);
+        let mut g = b.finish();
+        let fx = fuse_ops_explain(&mut g, p, s, FusionKind::NonDuplicate).unwrap();
+        assert_eq!(g.nodes[c].inputs, vec![fx.fused]);
+        assert!(g.validate().is_ok());
     }
 
     #[test]

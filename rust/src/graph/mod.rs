@@ -244,6 +244,47 @@ impl SuccCsr {
     }
 }
 
+/// Reusable node-id marker with O(1) epoch-based reset: `reset` bumps a
+/// generation counter instead of zero-filling, so clearing between uses
+/// is free no matter the graph size. Used by the delta simulator to flag
+/// a mutation frontier's one-hop closure per candidate without per-eval
+/// allocation. Call [`NodeFlags::reset`] before each use.
+#[derive(Debug, Default)]
+pub struct NodeFlags {
+    epoch: u32,
+    marks: Vec<u32>,
+}
+
+impl NodeFlags {
+    pub fn new() -> NodeFlags {
+        NodeFlags::default()
+    }
+
+    /// Clear all marks and size for `n` node ids. Keeps capacity.
+    pub fn reset(&mut self, n: usize) {
+        if self.marks.len() < n {
+            self.marks.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Generation counter wrapped: hard-clear once every 2^32 resets
+            // so stale marks from the previous epoch-0 era can't alias.
+            self.marks.iter_mut().for_each(|m| *m = 0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    pub fn mark(&mut self, id: NodeId) {
+        self.marks[id] = self.epoch;
+    }
+
+    #[inline]
+    pub fn is_marked(&self, id: NodeId) -> bool {
+        self.marks[id] == self.epoch
+    }
+}
+
 /// A whole training-iteration graph for one worker replica, plus the
 /// data-parallel context (worker count) its AllReduces span.
 #[derive(Debug)]
@@ -644,6 +685,23 @@ mod tests {
         let n = g2.nodes[1].clone();
         g2.push(n);
         assert!(g2.approx_bytes() > b);
+    }
+
+    #[test]
+    fn node_flags_epoch_reset() {
+        let mut f = NodeFlags::new();
+        f.reset(4);
+        assert!(!f.is_marked(0));
+        f.mark(0);
+        f.mark(3);
+        assert!(f.is_marked(0) && f.is_marked(3) && !f.is_marked(1));
+        // Reset clears without touching the backing store.
+        f.reset(4);
+        assert!(!f.is_marked(0) && !f.is_marked(3));
+        // Growing keeps old-capacity slots unmarked.
+        f.mark(1);
+        f.reset(8);
+        assert!((0..8).all(|i| !f.is_marked(i)));
     }
 
     #[test]

@@ -137,6 +137,7 @@ pub fn anneal_search(
         initial_cost_ms: initial_cost,
         steps: cfg.steps as u64,
         evals,
+        resims: 0,
         peak_arena_bytes,
         elapsed: start.elapsed(),
     }

@@ -38,9 +38,10 @@
 pub mod anneal;
 
 use crate::fusion::{self, CandidateSet, FusionKind, Mutation};
-use crate::graph::TrainingGraph;
+use crate::graph::{NodeId, TrainingGraph};
 use crate::sim::{
-    simulate, simulate_in, CostSource, NoRecord, OrderedF64, SimOptions, SimWorkspace,
+    simulate, simulate_ckpt_in, simulate_delta, simulate_in, simulate_table_in, CheckpointLog,
+    CostSource, CostTable, NoRecord, OrderedF64, SimOptions, SimWorkspace,
 };
 use crate::util::rng::Rng;
 use std::cmp::Reverse;
@@ -134,6 +135,23 @@ pub struct SearchConfig {
     /// simulation is a few microseconds and per-step thread spawn/join
     /// overhead would exceed the parallel win. Never affects results.
     pub parallel_min_nodes: usize,
+    /// Resolve every live node's cost into a flat [`CostTable`] per
+    /// candidate and drive the simulator off the table (true) instead of
+    /// calling the cost source per scheduled event (false, the pre-table
+    /// engine). Never changes results — costs are deterministic per node
+    /// (`prop_search_delta_sim_matches_full`).
+    pub cost_table: bool,
+    /// Evaluate candidates incrementally: simulate the dequeued parent
+    /// once recording schedule checkpoints, then replay only each child's
+    /// affected suffix from its mutation frontier (true), instead of a
+    /// full simulation per child (false). Bit-identical results either
+    /// way (`prop_delta_sim_matches_full`); the toggle exists as the A/B
+    /// arm of `BENCH_search.json`. Implies table-driven evaluation for
+    /// the per-step batch regardless of `cost_table`.
+    pub delta_sim: bool,
+    /// Checkpoint cadence for the parent simulation, in scheduled events
+    /// (0 = auto: n/8, at least 32).
+    pub ckpt_every: usize,
 }
 
 impl Default for SearchConfig {
@@ -152,6 +170,9 @@ impl Default for SearchConfig {
             reuse_workspaces: true,
             incremental_candidates: true,
             parallel_min_nodes: 128,
+            cost_table: true,
+            delta_sim: true,
+            ckpt_every: 0,
         }
     }
 }
@@ -164,8 +185,13 @@ pub struct SearchResult {
     pub initial_cost_ms: f64,
     /// Queue dequeues performed.
     pub steps: u64,
-    /// Simulator evaluations performed.
+    /// Candidate evaluations performed (the metric the paper budgets).
     pub evals: u64,
+    /// Checkpointed parent re-simulations performed by the delta-sim
+    /// engine (0 when `delta_sim` is off). Not counted in `evals`, so
+    /// the toggle never changes the comparable fields; the cost shows up
+    /// in wall time, which is what the A/B record measures.
+    pub resims: u64,
     /// High-water mark of candidate-storage memory (arena entries +
     /// rematerialization memo), approximate bytes.
     pub peak_arena_bytes: usize,
@@ -185,6 +211,10 @@ impl SearchResult {
 /// Apply method `m` up to `n` times with random operands drawn from
 /// `cset`, recording each rewrite that succeeded. Invalid applications
 /// (paper's validity check) are skipped, with a few retries each.
+/// When `frontier` is given it accumulates every node the rewrites
+/// touched (operands plus [`fusion::FusionEffects`]) — the delta
+/// simulator's mutation frontier. Pass `None` when `delta_sim` is off so
+/// the A/B baseline arms don't pay for collection they won't use.
 fn random_apply(
     g: &mut TrainingGraph,
     cset: &mut CandidateSet,
@@ -192,6 +222,7 @@ fn random_apply(
     n: usize,
     rng: &mut Rng,
     incremental: bool,
+    mut frontier: Option<&mut Vec<NodeId>>,
 ) -> Vec<Mutation> {
     let mut muts = Vec::new();
     for _ in 0..n {
@@ -208,8 +239,13 @@ fn random_apply(
                 let mut ok = false;
                 for _ in 0..4 {
                     let Some(&(p, s)) = rng.choose(cset.op_pairs()) else { break };
-                    if cset.apply_op_fusion(g, p, s, kind).is_ok() {
+                    if let Ok(fx) = cset.apply_op_fusion(g, p, s, kind) {
                         muts.push(Mutation::FuseOps { pred: p, succ: s, kind });
+                        if let Some(f) = frontier.as_deref_mut() {
+                            f.push(p);
+                            f.push(s);
+                            fx.extend_frontier(g, f);
+                        }
                         ok = true;
                         break;
                     }
@@ -222,8 +258,13 @@ fn random_apply(
                     let Some(&a) = rng.choose(cset.allreduces()) else { break };
                     let neighbors = fusion::ar_neighbors(g, a);
                     let Some(&b) = rng.choose(&neighbors) else { continue };
-                    if cset.apply_ar_fusion(g, a, b).is_ok() {
+                    if let Ok(fx) = cset.apply_ar_fusion(g, a, b) {
                         muts.push(Mutation::FuseAllReduce { a, b });
+                        if let Some(f) = frontier.as_deref_mut() {
+                            f.push(a);
+                            f.push(b);
+                            fx.extend_frontier(g, f);
+                        }
                         ok = true;
                         break;
                     }
@@ -256,13 +297,25 @@ enum Stored {
 /// always correct.
 const REMAT_MEMO: usize = 8;
 
+/// Per-slot fixed overhead of one arena entry (the `Stored` enum plus its
+/// `entry_bytes` companion), charged to the accounting when a fresh slot
+/// is allocated and reclaimed by slot reuse — so unbounded `Taken`-slot
+/// growth would show up in `peak_arena_bytes` rather than hide.
+const SLOT_BYTES: usize = std::mem::size_of::<Stored>() + std::mem::size_of::<usize>();
+
 /// Candidate arena: delta-encoded entries plus a bounded memo of
 /// materialized graphs, with byte accounting for the perf record.
+/// Eager-mode entries are consumed exactly once by their dequeue, so
+/// consumed slots go on a free list and are reused by later pushes —
+/// the arena stays bounded by queue depth, not by candidates ever
+/// enqueued (delta entries reference parents by index and are never
+/// consumed, so reuse only ever sees genuinely dead slots).
 struct Arena {
     entries: Vec<Stored>,
     entry_bytes: Vec<usize>,
     memo: HashMap<usize, TrainingGraph>,
     memo_order: VecDeque<usize>,
+    free: Vec<usize>,
     live_bytes: usize,
     peak_bytes: usize,
 }
@@ -274,6 +327,7 @@ impl Arena {
             entry_bytes: Vec::new(),
             memo: HashMap::new(),
             memo_order: VecDeque::new(),
+            free: Vec::new(),
             live_bytes: 0,
             peak_bytes: 0,
         };
@@ -285,33 +339,43 @@ impl Arena {
         self.peak_bytes = self.peak_bytes.max(self.live_bytes);
     }
 
-    fn push_graph(&mut self, g: TrainingGraph) -> usize {
-        let bytes = g.approx_bytes();
-        self.entries.push(Stored::Graph(g));
-        self.entry_bytes.push(bytes);
+    /// Store `s` in a reclaimed slot if one is free, else append.
+    fn alloc_slot(&mut self, s: Stored, bytes: usize) -> usize {
+        let idx = if let Some(idx) = self.free.pop() {
+            self.entries[idx] = s;
+            self.entry_bytes[idx] = bytes;
+            idx
+        } else {
+            self.entries.push(s);
+            self.entry_bytes.push(bytes);
+            self.live_bytes += SLOT_BYTES;
+            self.entries.len() - 1
+        };
         self.live_bytes += bytes;
         self.note();
-        self.entries.len() - 1
+        idx
+    }
+
+    fn push_graph(&mut self, g: TrainingGraph) -> usize {
+        let bytes = g.approx_bytes();
+        self.alloc_slot(Stored::Graph(g), bytes)
     }
 
     fn push_delta(&mut self, parent: usize, muts: Vec<Mutation>) -> usize {
-        let bytes = std::mem::size_of::<Stored>()
-            + muts.capacity() * std::mem::size_of::<Mutation>();
-        self.entries.push(Stored::Delta { parent, muts });
-        self.entry_bytes.push(bytes);
-        self.live_bytes += bytes;
-        self.note();
-        self.entries.len() - 1
+        let bytes = muts.capacity() * std::mem::size_of::<Mutation>();
+        self.alloc_slot(Stored::Delta { parent, muts }, bytes)
     }
 
-    /// Eager-mode dequeue: move the stored clone out.
+    /// Eager-mode dequeue: move the stored clone out and reclaim the slot.
     fn take_graph(&mut self, idx: usize) -> TrainingGraph {
         self.live_bytes -= self.entry_bytes[idx];
         self.entry_bytes[idx] = 0;
-        match std::mem::replace(&mut self.entries[idx], Stored::Taken) {
+        let g = match std::mem::replace(&mut self.entries[idx], Stored::Taken) {
             Stored::Graph(g) => g,
             _ => panic!("candidate {idx} is not an eager graph"),
-        }
+        };
+        self.free.push(idx);
+        g
     }
 
     /// Delta-mode dequeue: walk up to the nearest materialized ancestor
@@ -361,25 +425,116 @@ impl Arena {
     }
 }
 
-/// One mutated candidate awaiting evaluation.
+/// One mutated candidate awaiting evaluation: the rematerializable delta
+/// (`muts`) plus the union of nodes the rewrites touched (`frontier`,
+/// the delta simulator's divergence set).
 struct Prepared {
     graph: TrainingGraph,
     muts: Vec<Mutation>,
+    frontier: Vec<NodeId>,
 }
 
+/// Full (non-incremental) evaluation of one candidate. With
+/// `cfg.cost_table` the per-node costs are resolved once into `table`
+/// and the event loop runs lock- and dispatch-free; otherwise the
+/// pre-table dyn path is used (the A/B arm).
 #[inline]
 fn eval_one(
     graph: &TrainingGraph,
     costs: &dyn CostSource,
     cfg: &SearchConfig,
     ws: &mut SimWorkspace,
+    table: &mut CostTable,
 ) -> f64 {
-    costs.prepare(graph); // batched GNN prefetch (no-op for other sources)
-    if cfg.reuse_workspaces {
-        simulate_in(graph, costs, cfg.sim, &mut NoRecord, ws).makespan_ms
+    if cfg.cost_table {
+        table.build_in(graph, costs); // includes the batched GNN prefetch
+        if cfg.reuse_workspaces {
+            simulate_table_in(graph, table, cfg.sim, &mut NoRecord, ws).makespan_ms
+        } else {
+            simulate_table_in(graph, table, cfg.sim, &mut NoRecord, &mut SimWorkspace::new())
+                .makespan_ms
+        }
     } else {
-        simulate(graph, costs, cfg.sim).makespan_ms
+        costs.prepare(graph); // batched GNN prefetch (no-op for other sources)
+        if cfg.reuse_workspaces {
+            simulate_in(graph, costs, cfg.sim, &mut NoRecord, ws).makespan_ms
+        } else {
+            simulate(graph, costs, cfg.sim).makespan_ms
+        }
     }
+}
+
+/// Incremental evaluation of one child against its parent's checkpointed
+/// schedule: derive the child's cost table from the parent's (O(new
+/// nodes) estimator work) and replay only the suffix of the schedule its
+/// mutation frontier can influence. Bit-identical to [`eval_one`].
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn eval_delta(
+    parent: &TrainingGraph,
+    log: &CheckpointLog,
+    parent_table: &CostTable,
+    p: &Prepared,
+    costs: &dyn CostSource,
+    cfg: &SearchConfig,
+    ws: &mut SimWorkspace,
+    table: &mut CostTable,
+) -> f64 {
+    table.extend_in(parent_table, &p.graph, costs);
+    if cfg.reuse_workspaces {
+        simulate_delta(parent, log, &p.graph, &p.frontier, table, cfg.sim, &mut NoRecord, ws)
+            .makespan_ms
+    } else {
+        simulate_delta(
+            parent,
+            log,
+            &p.graph,
+            &p.frontier,
+            table,
+            cfg.sim,
+            &mut NoRecord,
+            &mut SimWorkspace::new(),
+        )
+        .makespan_ms
+    }
+}
+
+/// Evaluate `batch` on up to `threads` scoped workers: the batch is split
+/// into contiguous chunks, each worker evaluating its chunk serially into
+/// a disjoint result slice (order-preserving, so the caller's merge stays
+/// deterministic). Shared by the delta and full evaluation arms.
+fn eval_batch_parallel<F>(
+    batch: &[Prepared],
+    ws_pool: &mut [SimWorkspace],
+    tables: &mut [CostTable],
+    threads: usize,
+    eval: F,
+) -> Vec<f64>
+where
+    F: Fn(&Prepared, &mut SimWorkspace, &mut CostTable) -> f64 + Sync,
+{
+    let workers = threads.min(batch.len());
+    let per = batch.len().div_ceil(workers);
+    let mut out = vec![0.0f64; batch.len()];
+    let eval = &eval;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = batch
+            .chunks(per)
+            .zip(out.chunks_mut(per))
+            .zip(ws_pool.iter_mut().zip(tables.iter_mut()))
+            .map(|((items, slots), (ws, table))| {
+                s.spawn(move || {
+                    for (p, slot) in items.iter().zip(slots.iter_mut()) {
+                        *slot = eval(p, ws, table);
+                    }
+                })
+            })
+            .collect();
+        for handle in handles {
+            handle.join().expect("candidate evaluation worker panicked");
+        }
+    });
+    out
 }
 
 /// Run Alg. 1 on `input` using `costs` as the simulator's cost source.
@@ -395,8 +550,14 @@ pub fn backtracking_search(
     let methods = cfg.methods.enabled();
     let threads = cfg.eval_threads.max(1);
     let mut ws_pool: Vec<SimWorkspace> = (0..threads).map(|_| SimWorkspace::new()).collect();
+    // Per-thread scratch cost tables plus the step-shared parent table
+    // and checkpoint log of the delta-sim engine.
+    let mut tables: Vec<CostTable> = (0..threads).map(|_| CostTable::new()).collect();
+    let mut parent_table = CostTable::new();
+    let mut ckpt_log = CheckpointLog::new();
+    let mut resims = 0u64;
 
-    let initial_cost = eval_one(input, costs, cfg, &mut ws_pool[0]);
+    let initial_cost = eval_one(input, costs, cfg, &mut ws_pool[0], &mut tables[0]);
     let mut best = input.clone();
     let mut best_cost = initial_cost;
 
@@ -440,50 +601,69 @@ pub fn backtracking_search(
             }
             let mut candidate = h.clone();
             let mut cset = base_cset.clone();
-            let muts =
-                random_apply(&mut candidate, &mut cset, m, n, &mut rng, cfg.incremental_candidates);
+            let mut frontier = Vec::new();
+            let muts = random_apply(
+                &mut candidate,
+                &mut cset,
+                m,
+                n,
+                &mut rng,
+                cfg.incremental_candidates,
+                if cfg.delta_sim { Some(&mut frontier) } else { None },
+            );
             if muts.is_empty() {
                 continue;
             }
             if !seen.insert(candidate.fingerprint()) {
                 continue;
             }
-            batch.push(Prepared { graph: candidate, muts });
+            batch.push(Prepared { graph: candidate, muts, frontier });
         }
 
         // --- evaluation: the expensive part, parallel when it pays -------
         // At most `eval_threads` workers: the batch is split into
         // contiguous chunks, each worker evaluating its chunk serially
         // into a disjoint result slice (order-preserving, so the merge
-        // below stays deterministic).
-        let batch_costs: Vec<f64> = if threads > 1
-            && batch.len() > 1
-            && h.nodes.len() >= cfg.parallel_min_nodes
-        {
-            let workers = threads.min(batch.len());
-            let per = batch.len().div_ceil(workers);
-            let mut out = vec![0.0f64; batch.len()];
-            std::thread::scope(|s| {
-                let handles: Vec<_> = batch
-                    .chunks(per)
-                    .zip(out.chunks_mut(per))
-                    .zip(ws_pool.iter_mut())
-                    .map(|((items, slots), ws)| {
-                        s.spawn(move || {
-                            for (p, slot) in items.iter().zip(slots.iter_mut()) {
-                                *slot = eval_one(&p.graph, costs, cfg, ws);
-                            }
-                        })
-                    })
-                    .collect();
-                for handle in handles {
-                    handle.join().expect("candidate evaluation worker panicked");
-                }
-            });
-            out
+        // below stays deterministic). With `delta_sim`, the parent is
+        // first simulated once with schedule checkpoints; the ≤3 children
+        // share that log (read-only) and replay only their suffixes.
+        let parallel =
+            threads > 1 && batch.len() > 1 && h.nodes.len() >= cfg.parallel_min_nodes;
+        let batch_costs: Vec<f64> = if batch.is_empty() {
+            Vec::new()
+        } else if cfg.delta_sim {
+            parent_table.build_in(&h, costs);
+            simulate_ckpt_in(
+                &h,
+                &parent_table,
+                cfg.sim,
+                &mut NoRecord,
+                &mut ws_pool[0],
+                &mut ckpt_log,
+                cfg.ckpt_every,
+            );
+            resims += 1;
+            if parallel {
+                let (h_ref, log_ref, ptab_ref) = (&h, &ckpt_log, &parent_table);
+                eval_batch_parallel(&batch, &mut ws_pool, &mut tables, threads, |p, ws, table| {
+                    eval_delta(h_ref, log_ref, ptab_ref, p, costs, cfg, ws, table)
+                })
+            } else {
+                let ws = &mut ws_pool[0];
+                let table = &mut tables[0];
+                batch
+                    .iter()
+                    .map(|p| eval_delta(&h, &ckpt_log, &parent_table, p, costs, cfg, ws, table))
+                    .collect()
+            }
+        } else if parallel {
+            eval_batch_parallel(&batch, &mut ws_pool, &mut tables, threads, |p, ws, table| {
+                eval_one(&p.graph, costs, cfg, ws, table)
+            })
         } else {
             let ws = &mut ws_pool[0];
-            batch.iter().map(|p| eval_one(&p.graph, costs, cfg, ws)).collect()
+            let table = &mut tables[0];
+            batch.iter().map(|p| eval_one(&p.graph, costs, cfg, ws, table)).collect()
         };
 
         // --- deterministic merge, in method order ------------------------
@@ -521,6 +701,7 @@ pub fn backtracking_search(
         initial_cost_ms: initial_cost,
         steps,
         evals,
+        resims,
         peak_arena_bytes: arena.peak_bytes,
         elapsed: start.elapsed(),
     }
@@ -620,6 +801,16 @@ mod tests {
         // delta-vs-eager comparison lives in the perf record, where queue
         // depth makes the gap unambiguous).
         assert!(delta.peak_arena_bytes > 0 && eager.peak_arena_bytes > 0);
+        // Regression guard for eager-slot reclamation: with consumed slots
+        // reused, peak accounting is bounded by queue capacity times a
+        // (generous) per-candidate size — not by total candidates ever
+        // enqueued across the run.
+        let per_candidate = 8 * g.approx_bytes();
+        assert!(
+            eager.peak_arena_bytes <= (eager_cfg.max_queue + 2) * per_candidate,
+            "eager arena accounting unbounded: {} bytes",
+            eager.peak_arena_bytes
+        );
     }
 
     #[test]
@@ -653,11 +844,83 @@ mod tests {
             delta_candidates: false,
             reuse_workspaces: false,
             incremental_candidates: false,
+            cost_table: false,
+            delta_sim: false,
             ..quick_cfg()
         };
         let r = backtracking_search(&g, &est, &cfg);
         assert!(r.best_cost_ms <= r.initial_cost_ms);
         assert!(r.best.validate().is_ok());
+        assert_eq!(r.resims, 0);
+    }
+
+    #[test]
+    fn delta_sim_and_cost_table_toggles_do_not_change_result() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let delta = backtracking_search(&g, &est, &quick_cfg()); // delta_sim + cost_table on
+        let table_only =
+            backtracking_search(&g, &est, &SearchConfig { delta_sim: false, ..quick_cfg() });
+        let dyn_full = backtracking_search(
+            &g,
+            &est,
+            &SearchConfig { delta_sim: false, cost_table: false, ..quick_cfg() },
+        );
+        for (name, r) in [("table_only", &table_only), ("dyn_full", &dyn_full)] {
+            assert_eq!(delta.best_cost_ms, r.best_cost_ms, "{name}");
+            assert_eq!(delta.evals, r.evals, "{name}");
+            assert_eq!(delta.steps, r.steps, "{name}");
+            assert_eq!(delta.best.fingerprint(), r.best.fingerprint(), "{name}");
+        }
+        assert!(delta.resims > 0, "delta engine records parent re-sims");
+        assert_eq!(table_only.resims, 0);
+        assert_eq!(dyn_full.resims, 0);
+    }
+
+    #[test]
+    fn delta_sim_checkpoint_cadence_never_changes_result() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let auto = backtracking_search(&g, &est, &quick_cfg());
+        for every in [1usize, 7, 10_000] {
+            let r = backtracking_search(
+                &g,
+                &est,
+                &SearchConfig { ckpt_every: every, ..quick_cfg() },
+            );
+            assert_eq!(auto.best_cost_ms, r.best_cost_ms, "every={every}");
+            assert_eq!(auto.evals, r.evals, "every={every}");
+            assert_eq!(auto.best.fingerprint(), r.best.fingerprint(), "every={every}");
+        }
+    }
+
+    #[test]
+    fn eager_arena_reclaims_consumed_slots() {
+        let g = workload();
+        let mut arena = Arena::new(g.clone());
+        let baseline_live = arena.live_bytes;
+        let mut idx = arena.push_graph(g.clone());
+        let peak_two_resident = arena.peak_bytes;
+        // A long eager run consumes and re-enqueues candidates constantly;
+        // consumed slots must be reused, not left as dead `Taken` entries.
+        for _ in 0..200 {
+            let taken = arena.take_graph(idx);
+            idx = arena.push_graph(taken);
+        }
+        assert_eq!(arena.entries.len(), 2, "consumed slots were not reused");
+        assert_eq!(arena.free.len(), 0);
+        // Accounting regression: peak never exceeds two resident graphs'
+        // worth, and taking returns live_bytes to the root baseline (plus
+        // the one extra slot the arena legitimately still owns).
+        assert_eq!(arena.peak_bytes, peak_two_resident);
+        let _ = arena.take_graph(idx);
+        assert_eq!(arena.live_bytes, baseline_live + SLOT_BYTES);
     }
 
     #[test]

@@ -13,11 +13,28 @@
 //! * the **high-fidelity "real execution"** ([`hifi`]) that substitutes for
 //!   the paper's physical testbed: per-op noise, per-worker jitter and
 //!   AllReduce straggler synchronization (see DESIGN.md §2).
+//!
+//! ## Incremental evaluation (search hot path, `rust/PERF.md` §5)
+//!
+//! Two layers make per-candidate evaluation cost proportional to the
+//! *affected suffix* of the schedule instead of the whole graph:
+//!
+//! * [`CostTable`] — every live node's time resolved once per candidate
+//!   into flat `Vec<f64>`s indexed by arena id, so the event loop performs
+//!   zero dyn-dispatched cost calls, zero signature hashes and zero lock
+//!   acquisitions per scheduled event ([`simulate_table_in`]).
+//! * [`CheckpointLog`] / [`simulate_delta`] — a parent evaluation records
+//!   periodic snapshots of the full scheduler state
+//!   ([`simulate_ckpt_in`]); a child that differs by a few recorded
+//!   mutations restores the latest checkpoint preceding the first event
+//!   its mutation frontier can influence and replays only the suffix.
+//!   Results are bit-identical to a full simulation (property-tested, no
+//!   float tolerance).
 
 pub mod hifi;
 pub mod trace;
 
-use crate::graph::{Node, NodeId, OpKind, TrainingGraph};
+use crate::graph::{Node, NodeFlags, NodeId, OpKind, TrainingGraph};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -117,17 +134,122 @@ pub fn fo_bound(graph: &TrainingGraph, costs: &dyn CostSource) -> f64 {
     comp.max(comm)
 }
 
+/// Flat per-node cost table: every live node's execution time resolved
+/// once per candidate, indexed by arena id. The table-driven event loop
+/// ([`simulate_table_in`]) reads these arrays instead of calling
+/// [`CostSource`] per event — the dyn dispatch, fused-group signature
+/// hash and estimator-memo lock all happen at *table-build* time, never
+/// inside the scheduler.
+///
+/// Requires the cost source to be deterministic per node (the searcher's
+/// estimators are — predictions are memoized by structural signature);
+/// noisy sources like [`hifi`] must keep using the dyn path, because a
+/// table resolves costs in arena order, not schedule order.
+#[derive(Debug, Clone, Default)]
+pub struct CostTable {
+    compute: Vec<f64>,
+    comm: Vec<f64>,
+}
+
+impl CostTable {
+    pub fn new() -> CostTable {
+        CostTable::default()
+    }
+
+    /// Build the table for `graph`, reusing this table's capacity. Calls
+    /// `costs.prepare` first so batched backends (the GNN estimator)
+    /// resolve every fused-op prediction in one backend call.
+    pub fn build_in(&mut self, graph: &TrainingGraph, costs: &dyn CostSource) {
+        costs.prepare(graph);
+        let n = graph.nodes.len();
+        self.compute.clear();
+        self.compute.resize(n, 0.0);
+        self.comm.clear();
+        self.comm.resize(n, 0.0);
+        self.fill(graph, costs, 0);
+    }
+
+    /// Fresh table for `graph` (convenience wrapper over [`build_in`]).
+    ///
+    /// [`build_in`]: CostTable::build_in
+    pub fn build(graph: &TrainingGraph, costs: &dyn CostSource) -> CostTable {
+        let mut t = CostTable::new();
+        t.build_in(graph, costs);
+        t
+    }
+
+    /// Derive a child candidate's table from its parent's: surviving ids
+    /// keep the parent's entries (per-node costs depend only on the node,
+    /// which rewrites never edit in place — fusion appends new nodes and
+    /// tombstones old ones), so only the appended ids are resolved
+    /// through `costs`. This is what makes per-candidate estimator work
+    /// O(mutations), not O(graph).
+    pub fn extend_in(
+        &mut self,
+        parent: &CostTable,
+        graph: &TrainingGraph,
+        costs: &dyn CostSource,
+    ) {
+        costs.prepare(graph);
+        let n = graph.nodes.len();
+        let base = parent.compute.len().min(n);
+        self.compute.clear();
+        self.compute.extend_from_slice(&parent.compute[..base]);
+        self.compute.resize(n, 0.0);
+        self.comm.clear();
+        self.comm.extend_from_slice(&parent.comm[..base]);
+        self.comm.resize(n, 0.0);
+        self.fill(graph, costs, base);
+    }
+
+    fn fill(&mut self, graph: &TrainingGraph, costs: &dyn CostSource, from: NodeId) {
+        for node in graph.live() {
+            if node.id < from {
+                continue;
+            }
+            match node.kind {
+                OpKind::AllReduce => self.comm[node.id] = costs.comm_time_ms(node.bytes_out),
+                OpKind::Parameter | OpKind::Constant => {}
+                _ => self.compute[node.id] = costs.compute_time_ms(node),
+            }
+        }
+    }
+
+    /// Resolved compute time of node `id` (0 for comm/param/const ids).
+    #[inline]
+    pub fn compute_ms(&self, id: NodeId) -> f64 {
+        self.compute[id]
+    }
+
+    /// Resolved AllReduce time of node `id` (0 for non-comm ids).
+    #[inline]
+    pub fn comm_ms(&self, id: NodeId) -> f64 {
+        self.comm[id]
+    }
+
+    /// Number of arena slots covered.
+    pub fn len(&self) -> usize {
+        self.compute.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.compute.is_empty()
+    }
+}
+
 /// Reusable per-evaluation scratch state for [`simulate_in`]: the ready
-/// heap, in-degrees, ready times and memory refcounts. One workspace per
-/// simulating thread; reusing it across evaluations makes a full search
-/// perform zero per-eval scratch allocations once the vectors have grown
-/// to the largest graph seen (see `rust/PERF.md`).
+/// heap, in-degrees, ready times, memory refcounts and the delta-sim
+/// frontier flags. One workspace per simulating thread; reusing it across
+/// evaluations makes a full search perform zero per-eval scratch
+/// allocations once the vectors have grown to the largest graph seen
+/// (see `rust/PERF.md`).
 #[derive(Debug, Default)]
 pub struct SimWorkspace {
     indeg: Vec<u32>,
     ready: Vec<f64>,
     consumers_left: Vec<u32>,
     heap: BinaryHeap<Reverse<(OrderedF64, u32, u32)>>,
+    flags: NodeFlags,
 }
 
 impl SimWorkspace {
@@ -144,6 +266,140 @@ impl SimWorkspace {
         self.consumers_left.clear();
         self.consumers_left.resize(n, 0);
         self.heap.clear();
+    }
+}
+
+/// All mutable scalar state of one simulation — split out so a
+/// [`CheckpointLog`] can snapshot and restore it wholesale. Accumulator
+/// arithmetic happens in event order on these fields, so a restored
+/// prefix is bit-identical to having replayed it.
+#[derive(Debug, Clone, Copy, Default)]
+struct SimState {
+    seq: u32,
+    device_free: f64,
+    channel_free: f64,
+    comp_busy: f64,
+    comm_busy: f64,
+    comp_idle: f64,
+    comm_idle: f64,
+    kernels: usize,
+    allreduces: usize,
+    makespan: f64,
+    scheduled: usize,
+    live_bytes: f64,
+    peak_bytes: f64,
+}
+
+impl SimState {
+    fn result(&self) -> SimResult {
+        SimResult {
+            makespan_ms: self.makespan,
+            comp_busy_ms: self.comp_busy,
+            comm_busy_ms: self.comm_busy,
+            comp_idle_ms: self.comp_idle,
+            comm_idle_ms: self.comm_idle,
+            kernels: self.kernels,
+            allreduces: self.allreduces,
+            peak_bytes: self.peak_bytes,
+        }
+    }
+}
+
+/// One snapshot of scheduler state, taken *before* event
+/// `events_done` was popped: events `0..events_done` are already applied.
+#[derive(Debug, Clone, Default)]
+struct SimCheckpoint {
+    events_done: usize,
+    state: SimState,
+    heap: BinaryHeap<Reverse<(OrderedF64, u32, u32)>>,
+    indeg: Vec<u32>,
+    ready: Vec<f64>,
+    consumers_left: Vec<u32>,
+}
+
+/// Periodic scheduler snapshots plus the scheduled-event order of one
+/// parent evaluation ([`simulate_ckpt_in`]). Children sharing the parent
+/// restore the latest snapshot that precedes their mutation frontier and
+/// replay only the suffix ([`simulate_delta`]). Reused across steps —
+/// snapshot buffers keep their capacity.
+#[derive(Debug, Default)]
+pub struct CheckpointLog {
+    every: usize,
+    sched_order: Vec<u32>,
+    snaps: Vec<SimCheckpoint>,
+    used: usize,
+}
+
+impl CheckpointLog {
+    pub fn new() -> CheckpointLog {
+        CheckpointLog::default()
+    }
+
+    /// Snapshot cadence: one every `every` events (`0` = auto, n/8
+    /// clamped to ≥ 32 — a handful of snapshots per evaluation, so the
+    /// recording overhead stays a small fraction of the event loop).
+    fn reset(&mut self, every: usize, n: usize) {
+        self.every = if every > 0 { every } else { (n / 8).max(32) };
+        self.sched_order.clear();
+        self.used = 0;
+    }
+
+    /// Events the recorded parent evaluation scheduled.
+    pub fn events(&self) -> usize {
+        self.sched_order.len()
+    }
+
+    /// Snapshots currently held.
+    pub fn snapshots(&self) -> usize {
+        self.used
+    }
+
+    fn snap(&mut self, events_done: usize, st: &SimState, ws: &SimWorkspace) {
+        if self.used == self.snaps.len() {
+            self.snaps.push(SimCheckpoint::default());
+        }
+        let s = &mut self.snaps[self.used];
+        s.events_done = events_done;
+        s.state = *st;
+        s.heap.clone_from(&ws.heap);
+        s.indeg.clone_from(&ws.indeg);
+        s.ready.clone_from(&ws.ready);
+        s.consumers_left.clone_from(&ws.consumers_left);
+        self.used += 1;
+    }
+}
+
+/// Monomorphized per-node cost lookup for the event loop: the table
+/// variant compiles to two array reads — no virtual call, no hash, no
+/// lock per scheduled event.
+trait NodeCosts {
+    fn compute(&self, node: &Node) -> f64;
+    fn comm(&self, node: &Node) -> f64;
+}
+
+struct DynCosts<'a>(&'a dyn CostSource);
+
+impl NodeCosts for DynCosts<'_> {
+    #[inline]
+    fn compute(&self, node: &Node) -> f64 {
+        self.0.compute_time_ms(node)
+    }
+    #[inline]
+    fn comm(&self, node: &Node) -> f64 {
+        self.0.comm_time_ms(node.bytes_out)
+    }
+}
+
+struct TableCosts<'a>(&'a CostTable);
+
+impl NodeCosts for TableCosts<'_> {
+    #[inline]
+    fn compute(&self, node: &Node) -> f64 {
+        self.0.compute[node.id]
+    }
+    #[inline]
+    fn comm(&self, node: &Node) -> f64 {
+        self.0.comm[node.id]
     }
 }
 
@@ -171,7 +427,8 @@ pub fn simulate_with<R: Recorder>(
 
 /// Core event loop: [`simulate_with`] threaded through a caller-owned
 /// [`SimWorkspace`]. Bit-identical to a fresh-workspace run (property
-/// test `prop_sim_workspace_reuse_identical`).
+/// test `prop_sim_workspace_reuse_identical`). This is the dyn-dispatch
+/// path; the search hot path uses [`simulate_table_in`].
 pub fn simulate_in<R: Recorder>(
     graph: &TrainingGraph,
     costs: &dyn CostSource,
@@ -179,15 +436,171 @@ pub fn simulate_in<R: Recorder>(
     rec: &mut R,
     ws: &mut SimWorkspace,
 ) -> SimResult {
-    let n = graph.nodes.len();
+    let mut st = SimState::default();
+    init_state(graph, ws, &mut st);
+    event_loop(graph, &DynCosts(costs), opts, rec, ws, &mut st, None);
+    debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
+    st.result()
+}
+
+/// [`simulate_in`] driven by a pre-resolved [`CostTable`]: the event loop
+/// performs zero dyn-dispatched cost calls and zero lock acquisitions per
+/// scheduled event. Bit-identical to the dyn path for deterministic cost
+/// sources (property test `prop_cost_table_matches_dyn_lookup`).
+pub fn simulate_table_in<R: Recorder>(
+    graph: &TrainingGraph,
+    table: &CostTable,
+    opts: SimOptions,
+    rec: &mut R,
+    ws: &mut SimWorkspace,
+) -> SimResult {
+    let mut st = SimState::default();
+    init_state(graph, ws, &mut st);
+    event_loop(graph, &TableCosts(table), opts, rec, ws, &mut st, None);
+    debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
+    st.result()
+}
+
+/// [`simulate_table_in`] that additionally records `log`: periodic
+/// scheduler snapshots (every `every` events; 0 = auto) plus the
+/// scheduled-event order, for subsequent [`simulate_delta`] calls against
+/// children of this graph.
+pub fn simulate_ckpt_in<R: Recorder>(
+    graph: &TrainingGraph,
+    table: &CostTable,
+    opts: SimOptions,
+    rec: &mut R,
+    ws: &mut SimWorkspace,
+    log: &mut CheckpointLog,
+    every: usize,
+) -> SimResult {
+    let mut st = SimState::default();
+    init_state(graph, ws, &mut st);
+    log.reset(every, graph.nodes.len());
+    event_loop(graph, &TableCosts(table), opts, rec, ws, &mut st, Some(log));
+    debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
+    st.result()
+}
+
+/// Simulate `child` — `parent` plus a recorded mutation sequence — by
+/// restoring the latest checkpoint of the parent's evaluation that
+/// precedes the first event the mutations can influence, then replaying
+/// only the suffix. `frontier` is the union of nodes each rewrite
+/// touched, as collected by [`crate::fusion::FusionEffects::extend_frontier`]
+/// plus the mutation operands; `table` is the *child's* cost table
+/// (see [`CostTable::extend_in`]).
+///
+/// Bit-identical to `simulate_table_in(child, …)` — no float tolerance
+/// (property test `prop_delta_sim_matches_full`). The recorder only
+/// observes the replayed suffix, so the search passes [`NoRecord`].
+///
+/// Correctness sketch: parent and child runs pop identical events with
+/// identical state updates until the first event `u` whose processing
+/// touches a differing slot — `u` itself differs, or it reads the
+/// refcount of a differing input, or it decrements the indegree of a
+/// differing successor. All three imply `u` is in the frontier's one-hop
+/// closure over the *parent* adjacency, which is exactly the flag set
+/// scanned below. Frontier slots themselves are untouched before that
+/// event, so re-initializing them from the child graph after restoring
+/// the snapshot reproduces the child's exact state at that point.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_delta<R: Recorder>(
+    parent: &TrainingGraph,
+    log: &CheckpointLog,
+    child: &TrainingGraph,
+    frontier: &[NodeId],
+    table: &CostTable,
+    opts: SimOptions,
+    rec: &mut R,
+    ws: &mut SimWorkspace,
+) -> SimResult {
+    let parent_len = parent.nodes.len();
+    let child_len = child.nodes.len();
+    debug_assert!(child_len >= parent_len, "child arenas only append");
+    // Degenerate guard: an appended live node with no inputs would belong
+    // in the *initial* ready heap, which no restored parent snapshot can
+    // contain. Fusion rewrites never produce one (a fused kernel always
+    // keeps at least one external operand), but arbitrary imported graphs
+    // could — fall back to the full table simulation, which is
+    // bit-identical by contract.
+    if child.nodes[parent_len..]
+        .iter()
+        .any(|n| !n.deleted && n.inputs.is_empty())
+    {
+        return simulate_table_in(child, table, opts, rec, ws);
+    }
+    let csucc = child.succ_csr();
+
+    // --- divergence bound: frontier ∪ parent-inputs ∪ parent-consumers --
+    ws.flags.reset(parent_len);
+    let psucc = parent.succ_csr();
+    for &a in frontier {
+        if a >= parent_len {
+            continue; // node appended by an earlier mutation: not in the parent schedule
+        }
+        ws.flags.mark(a);
+        for &i in &parent.nodes[a].inputs {
+            ws.flags.mark(i);
+        }
+        for &c in psucc.row(a) {
+            ws.flags.mark(c as NodeId);
+        }
+    }
+    let d = log
+        .sched_order
+        .iter()
+        .position(|&id| ws.flags.is_marked(id as NodeId))
+        .unwrap_or(log.sched_order.len());
+
+    // --- restore the latest snapshot with events_done <= d --------------
+    let cp = log.snaps[..log.used]
+        .iter()
+        .rev()
+        .find(|s| s.events_done <= d)
+        .expect("checkpoint log missing the initial snapshot");
+    let mut st = cp.state;
+    ws.heap.clone_from(&cp.heap);
+    ws.indeg.clone_from(&cp.indeg);
+    ws.indeg.resize(child_len, 0);
+    ws.ready.clone_from(&cp.ready);
+    ws.ready.resize(child_len, 0.0);
+    ws.consumers_left.clone_from(&cp.consumers_left);
+    ws.consumers_left.resize(child_len, 0);
+
+    // --- patch to child-initial values ----------------------------------
+    // Appended nodes were never initialized by the parent run; frontier
+    // nodes were initialized with parent wiring. Both sets are untouched
+    // by the restored prefix (their first interaction is event >= d), so
+    // child-initial values are exact. Appended fused nodes always have
+    // inputs, so none belongs in the (restored) initial ready heap.
+    for id in parent_len..child_len {
+        let node = &child.nodes[id];
+        if node.deleted {
+            continue; // absorbed by a later mutation of the same candidate
+        }
+        ws.indeg[id] = node.inputs.len() as u32;
+        ws.ready[id] = 0.0;
+        ws.consumers_left[id] = csucc.out_degree(id) as u32;
+    }
+    for &a in frontier {
+        if a >= parent_len || child.nodes[a].deleted {
+            continue; // deleted slots are never read by the child's event loop
+        }
+        ws.indeg[a] = child.nodes[a].inputs.len() as u32;
+        ws.ready[a] = 0.0;
+        ws.consumers_left[a] = csucc.out_degree(a) as u32;
+    }
+
+    // --- replay the suffix ----------------------------------------------
+    event_loop(child, &TableCosts(table), opts, rec, ws, &mut st, None);
+    debug_assert_eq!(st.scheduled, child.live_count(), "delta replay lost events");
+    st.result()
+}
+
+/// Seed workspace + state for a from-scratch run of `graph`.
+fn init_state(graph: &TrainingGraph, ws: &mut SimWorkspace, st: &mut SimState) {
     let succ = graph.succ_csr();
-    ws.reset(n);
-
-    // (ready_time, seq, id) min-heap over BOTH resources; popping in global
-    // ready order keeps each resource's discipline consistent (a newly
-    // enabled node is never ready earlier than the node that enabled it).
-    let mut seq = 0u32;
-
+    ws.reset(graph.nodes.len());
     for node in graph.live() {
         ws.indeg[node.id] = node.inputs.len() as u32;
         // Memory refcounting: an intermediate lives from its producer's
@@ -195,28 +608,42 @@ pub fn simulate_in<R: Recorder>(
         // constants are persistent state, excluded from the peak.
         ws.consumers_left[node.id] = succ.out_degree(node.id) as u32;
         if node.inputs.is_empty() {
-            ws.heap.push(Reverse((OrderedF64(0.0), seq, node.id as u32)));
-            seq += 1;
+            ws.heap.push(Reverse((OrderedF64(0.0), st.seq, node.id as u32)));
+            st.seq += 1;
         }
     }
+}
 
-    let mut device_free = 0.0f64;
-    let mut channel_free = 0.0f64;
-    let mut comp_busy = 0.0f64;
-    let mut comm_busy = 0.0f64;
-    let mut comp_idle = 0.0f64;
-    let mut comm_idle = 0.0f64;
-    let mut kernels = 0usize;
-    let mut allreduces = 0usize;
-    let mut makespan = 0.0f64;
-    let mut scheduled = 0usize;
-
-    let mut live_bytes = 0.0f64;
-    let mut peak_bytes = 0.0f64;
+/// The event loop shared by every entry point, generic over the cost
+/// lookup (monomorphized — the table variant has no per-event dyn call)
+/// and resumable from any [`SimState`] + workspace pair.
+///
+/// (ready_time, seq, id) min-heap over BOTH resources; popping in global
+/// ready order keeps each resource's discipline consistent (a newly
+/// enabled node is never ready earlier than the node that enabled it).
+fn event_loop<C: NodeCosts, R: Recorder>(
+    graph: &TrainingGraph,
+    costs: &C,
+    opts: SimOptions,
+    rec: &mut R,
+    ws: &mut SimWorkspace,
+    st: &mut SimState,
+    mut log: Option<&mut CheckpointLog>,
+) {
+    let succ = graph.succ_csr();
     let transient =
         |node: &Node| !matches!(node.kind, OpKind::Parameter | OpKind::Constant);
 
-    while let Some(Reverse((OrderedF64(rt), _s, id))) = ws.heap.pop() {
+    loop {
+        if let Some(l) = log.as_deref_mut() {
+            if st.scheduled % l.every == 0 {
+                l.snap(st.scheduled, st, ws);
+            }
+        }
+        let Some(Reverse((OrderedF64(rt), _s, id))) = ws.heap.pop() else { break };
+        if let Some(l) = log.as_deref_mut() {
+            l.sched_order.push(id);
+        }
         let id = id as NodeId;
         let node = &graph.nodes[id];
         let done = match node.kind {
@@ -224,39 +651,39 @@ pub fn simulate_in<R: Recorder>(
                 if opts.ignore_comm {
                     rt
                 } else {
-                    let start = (rt + opts.straggler_ms).max(channel_free);
-                    comm_idle += start - channel_free;
-                    let t = costs.comm_time_ms(node.bytes_out);
-                    channel_free = start + t;
-                    comm_busy += t;
-                    allreduces += 1;
-                    rec.record(node, start, channel_free, true);
-                    channel_free
+                    let start = (rt + opts.straggler_ms).max(st.channel_free);
+                    st.comm_idle += start - st.channel_free;
+                    let t = costs.comm(node);
+                    st.channel_free = start + t;
+                    st.comm_busy += t;
+                    st.allreduces += 1;
+                    rec.record(node, start, st.channel_free, true);
+                    st.channel_free
                 }
             }
             OpKind::Parameter | OpKind::Constant => rt,
             _ => {
-                let t = costs.compute_time_ms(node);
-                let start = rt.max(device_free);
-                comp_idle += start - device_free;
-                device_free = start + t;
-                comp_busy += t;
-                kernels += 1;
-                rec.record(node, start, device_free, false);
-                device_free
+                let t = costs.compute(node);
+                let start = rt.max(st.device_free);
+                st.comp_idle += start - st.device_free;
+                st.device_free = start + t;
+                st.comp_busy += t;
+                st.kernels += 1;
+                rec.record(node, start, st.device_free, false);
+                st.device_free
             }
         };
-        makespan = makespan.max(done);
-        scheduled += 1;
+        st.makespan = st.makespan.max(done);
+        st.scheduled += 1;
 
         if transient(node) {
-            live_bytes += node.bytes_out;
-            peak_bytes = peak_bytes.max(live_bytes);
+            st.live_bytes += node.bytes_out;
+            st.peak_bytes = st.peak_bytes.max(st.live_bytes);
         }
         for &i in &node.inputs {
             ws.consumers_left[i] -= 1;
             if ws.consumers_left[i] == 0 && transient(&graph.nodes[i]) {
-                live_bytes -= graph.nodes[i].bytes_out;
+                st.live_bytes -= graph.nodes[i].bytes_out;
             }
         }
 
@@ -265,22 +692,10 @@ pub fn simulate_in<R: Recorder>(
             ws.ready[v] = ws.ready[v].max(done);
             ws.indeg[v] -= 1;
             if ws.indeg[v] == 0 {
-                ws.heap.push(Reverse((OrderedF64(ws.ready[v]), seq, v as u32)));
-                seq += 1;
+                ws.heap.push(Reverse((OrderedF64(ws.ready[v]), st.seq, v as u32)));
+                st.seq += 1;
             }
         }
-    }
-    debug_assert_eq!(scheduled, graph.live_count(), "graph has a cycle?");
-
-    SimResult {
-        makespan_ms: makespan,
-        comp_busy_ms: comp_busy,
-        comm_busy_ms: comm_busy,
-        comp_idle_ms: comp_idle,
-        comm_idle_ms: comm_idle,
-        kernels,
-        allreduces,
-        peak_bytes,
     }
 }
 
@@ -431,6 +846,170 @@ mod tests {
         // the channel sat idle 0..1 waiting for the gradient.
         assert_eq!(r.comp_idle_ms, 10.0);
         assert_eq!(r.comm_idle_ms, 1.0);
+    }
+
+    #[test]
+    fn cost_table_matches_dyn_path() {
+        let g = bp_chain(6);
+        let c = Fixed { comp: 0.7, comm: 1.3 };
+        let table = CostTable::build(&g, &c);
+        for n in g.live() {
+            match n.kind {
+                OpKind::AllReduce => {
+                    assert_eq!(table.comm_ms(n.id), c.comm_time_ms(n.bytes_out))
+                }
+                OpKind::Parameter | OpKind::Constant => {
+                    assert_eq!(table.compute_ms(n.id), 0.0)
+                }
+                _ => assert_eq!(table.compute_ms(n.id), c.compute_time_ms(n)),
+            }
+        }
+        for opts in [
+            SimOptions::default(),
+            SimOptions { straggler_ms: 0.4, ignore_comm: false },
+            SimOptions { straggler_ms: 0.0, ignore_comm: true },
+        ] {
+            let dynr = simulate(&g, &c, opts);
+            let tabr =
+                simulate_table_in(&g, &table, opts, &mut NoRecord, &mut SimWorkspace::new());
+            assert_eq!(dynr, tabr);
+        }
+    }
+
+    #[test]
+    fn delta_replay_matches_full_after_fusion() {
+        use crate::fusion::{fuse_ops_explain, FusionKind};
+        let parent = bp_chain(8);
+        let c = Fixed { comp: 0.7, comm: 1.3 };
+        // Fuse two adjacent backward ops (late in the chain for a short
+        // suffix; correctness must hold for any checkpoint cadence).
+        let (p, s) = {
+            let pairs = crate::fusion::op_fusion_candidates(&parent);
+            *pairs.last().unwrap()
+        };
+        let mut child = parent.clone();
+        let fx = fuse_ops_explain(&mut child, p, s, FusionKind::NonDuplicate).unwrap();
+        let mut frontier = vec![p, s];
+        fx.extend_frontier(&child, &mut frontier);
+
+        for opts in [
+            SimOptions::default(),
+            SimOptions { straggler_ms: 0.3, ignore_comm: false },
+            SimOptions { straggler_ms: 0.0, ignore_comm: true },
+        ] {
+            for every in [1usize, 3, 1000] {
+                let mut ws = SimWorkspace::new();
+                let parent_table = CostTable::build(&parent, &c);
+                let mut log = CheckpointLog::new();
+                let _ = simulate_ckpt_in(
+                    &parent,
+                    &parent_table,
+                    opts,
+                    &mut NoRecord,
+                    &mut ws,
+                    &mut log,
+                    every,
+                );
+                assert_eq!(log.events(), parent.live_count());
+                assert!(log.snapshots() >= 1);
+                let mut child_table = CostTable::new();
+                child_table.extend_in(&parent_table, &child, &c);
+                let delta = simulate_delta(
+                    &parent,
+                    &log,
+                    &child,
+                    &frontier,
+                    &child_table,
+                    opts,
+                    &mut NoRecord,
+                    &mut ws,
+                );
+                let full = simulate_table_in(
+                    &child,
+                    &child_table,
+                    opts,
+                    &mut NoRecord,
+                    &mut SimWorkspace::new(),
+                );
+                assert_eq!(delta, full, "every={every} opts={opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_preserves_duplicate_operand_consumers() {
+        use crate::fusion::{fuse_ops_explain, FusionKind};
+        // sq consumes m twice (x·x style). An unrelated fusion must leave
+        // sq's operand list — and hence its indegree and the delta replay —
+        // untouched.
+        let mut b = GraphBuilder::new("dup", 4);
+        let x = b.constant("x", &[64]);
+        let m = b.compute(OpKind::Mul, "m", &[x], &[64], Role::Forward);
+        let sq = b.compute(OpKind::Mul, "sq", &[m, m], &[64], Role::Forward);
+        let t1 = b.compute(OpKind::Tanh, "t1", &[sq], &[64], Role::Backward);
+        let t2 = b.compute(OpKind::Sigmoid, "t2", &[t1], &[64], Role::Backward);
+        b.allreduce("ar", t2, &[64]);
+        let parent = b.finish();
+        assert_eq!(parent.nodes[sq].inputs, vec![m, m]);
+
+        let mut child = parent.clone();
+        let fx = fuse_ops_explain(&mut child, t1, t2, FusionKind::NonDuplicate).unwrap();
+        assert_eq!(child.nodes[sq].inputs, vec![m, m], "unrelated fusion edited sq");
+        let mut frontier = vec![t1, t2];
+        fx.extend_frontier(&child, &mut frontier);
+
+        let c = Fixed { comp: 0.5, comm: 1.1 };
+        let mut ws = SimWorkspace::new();
+        let parent_table = CostTable::build(&parent, &c);
+        let mut log = CheckpointLog::new();
+        let _ = simulate_ckpt_in(
+            &parent,
+            &parent_table,
+            SimOptions::default(),
+            &mut NoRecord,
+            &mut ws,
+            &mut log,
+            2,
+        );
+        let mut child_table = CostTable::new();
+        child_table.extend_in(&parent_table, &child, &c);
+        let delta = simulate_delta(
+            &parent,
+            &log,
+            &child,
+            &frontier,
+            &child_table,
+            SimOptions::default(),
+            &mut NoRecord,
+            &mut ws,
+        );
+        let full = simulate_table_in(
+            &child,
+            &child_table,
+            SimOptions::default(),
+            &mut NoRecord,
+            &mut SimWorkspace::new(),
+        );
+        assert_eq!(delta, full);
+    }
+
+    #[test]
+    fn extended_table_matches_fresh_build() {
+        use crate::fusion::{fuse_ops, FusionKind};
+        let parent = bp_chain(5);
+        let c = Fixed { comp: 0.9, comm: 0.2 };
+        let parent_table = CostTable::build(&parent, &c);
+        let mut child = parent.clone();
+        let (p, s) = *crate::fusion::op_fusion_candidates(&parent).first().unwrap();
+        fuse_ops(&mut child, p, s, FusionKind::NonDuplicate).unwrap();
+        let mut extended = CostTable::new();
+        extended.extend_in(&parent_table, &child, &c);
+        let fresh = CostTable::build(&child, &c);
+        assert_eq!(extended.len(), fresh.len());
+        for n in child.live() {
+            assert_eq!(extended.compute_ms(n.id), fresh.compute_ms(n.id), "node {}", n.id);
+            assert_eq!(extended.comm_ms(n.id), fresh.comm_ms(n.id), "node {}", n.id);
+        }
     }
 
     #[test]

@@ -130,6 +130,15 @@ impl Config {
             if let Some(p) = s.get("parallel_min_nodes").as_usize() {
                 cfg.search.parallel_min_nodes = p;
             }
+            if let Some(ct) = s.get("cost_table").as_bool() {
+                cfg.search.cost_table = ct;
+            }
+            if let Some(ds) = s.get("delta_sim").as_bool() {
+                cfg.search.delta_sim = ds;
+            }
+            if let Some(ce) = s.get("ckpt_every").as_usize() {
+                cfg.search.ckpt_every = ce;
+            }
         }
         Ok(cfg)
     }

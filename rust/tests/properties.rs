@@ -4,13 +4,16 @@
 use disco::collective::run_workers;
 use disco::device::DeviceModel;
 use disco::estimator::CostEstimator;
-use disco::fusion::{self, FusionKind};
+use disco::fusion::{self, CandidateSet, FusionKind};
 use disco::graph::builder::GraphBuilder;
-use disco::graph::{OpKind, Role, TrainingGraph};
+use disco::graph::{NodeId, OpKind, Role, TrainingGraph};
 use disco::network::Cluster;
 use disco::prop_assert;
 use disco::search::{backtracking_search, SearchConfig};
-use disco::sim::{fo_bound, simulate, simulate_in, CostSource, NoRecord, SimOptions, SimWorkspace};
+use disco::sim::{
+    fo_bound, simulate, simulate_ckpt_in, simulate_delta, simulate_in, simulate_table_in,
+    CheckpointLog, CostSource, CostTable, NoRecord, SimOptions, SimWorkspace,
+};
 use disco::util::prop::{check, CaseResult, PropConfig};
 use disco::util::rng::Rng;
 
@@ -184,6 +187,196 @@ fn prop_sim_workspace_reuse_identical() {
         let fresh = simulate(&g, &Unit, opts);
         let reused = simulate_in(&g, &Unit, opts, &mut NoRecord, &mut ws);
         prop_assert!(fresh == reused, "workspace reuse diverged: {fresh:?} vs {reused:?}");
+        CaseResult::Pass
+    });
+}
+
+/// Apply a random mutation sequence through a [`CandidateSet`] the way
+/// the search does, collecting the delta simulator's mutation frontier.
+/// Returns the number of rewrites applied.
+fn random_tracked_rewrites(
+    g: &mut TrainingGraph,
+    rng: &mut Rng,
+    tries: usize,
+    frontier: &mut Vec<NodeId>,
+) -> usize {
+    let mut cset = CandidateSet::build(g);
+    let mut applied = 0;
+    for _ in 0..tries {
+        if rng.gen_bool(0.6) {
+            let Some(&(p, s)) = rng.choose(cset.op_pairs()) else { continue };
+            let kind = if rng.gen_bool(0.5) {
+                FusionKind::NonDuplicate
+            } else {
+                FusionKind::Duplicate
+            };
+            if let Ok(fx) = cset.apply_op_fusion(g, p, s, kind) {
+                frontier.push(p);
+                frontier.push(s);
+                fx.extend_frontier(g, frontier);
+                applied += 1;
+            }
+        } else {
+            let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+            let nbrs = fusion::ar_neighbors(g, a);
+            let Some(&b) = rng.choose(&nbrs) else { continue };
+            if let Ok(fx) = cset.apply_ar_fusion(g, a, b) {
+                frontier.push(a);
+                frontier.push(b);
+                fx.extend_frontier(g, frontier);
+                applied += 1;
+            }
+        }
+    }
+    applied
+}
+
+#[test]
+fn prop_cost_table_matches_dyn_lookup() {
+    // Every live node's table entry must be bitwise equal to the dyn
+    // lookup, and table-driven simulation bit-identical to the dyn loop.
+    check("cost-table-vs-dyn", PropConfig { cases: 64, seed: 0x7AB1E }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let mut g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        random_rewrites(&mut g, rng, 8);
+        let est = CostEstimator::oracle(&prof, &device);
+        let table = CostTable::build(&g, &est);
+        for n in g.live() {
+            match n.kind {
+                OpKind::AllReduce => {
+                    let want = est.comm_time_ms(n.bytes_out);
+                    prop_assert!(
+                        table.comm_ms(n.id) == want,
+                        "comm table diverged at {}: {} vs {want}",
+                        n.id,
+                        table.comm_ms(n.id)
+                    );
+                }
+                OpKind::Parameter | OpKind::Constant => {}
+                _ => {
+                    let want = est.compute_time_ms(n);
+                    prop_assert!(
+                        table.compute_ms(n.id) == want,
+                        "compute table diverged at {}: {} vs {want}",
+                        n.id,
+                        table.compute_ms(n.id)
+                    );
+                }
+            }
+        }
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.3) { 0.25 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.2),
+        };
+        let dynr = simulate(&g, &est, opts);
+        let tabr = simulate_table_in(&g, &table, opts, &mut NoRecord, &mut SimWorkspace::new());
+        prop_assert!(dynr == tabr, "table sim diverged: {dynr:?} vs {tabr:?}");
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_delta_sim_matches_full() {
+    // The tentpole contract: restoring a parent checkpoint and replaying
+    // only the mutation-affected suffix must be BIT-IDENTICAL to a full
+    // simulation of the child — across random graphs, random mutation
+    // sequences, the SimOptions matrix and every checkpoint cadence.
+    check("delta-sim-vs-full", PropConfig { cases: 96, seed: 0xDE17A5 }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let mut parent = random_graph(rng);
+        let prof = disco::profiler::profile(&parent, &device, &cluster, 1, 5);
+        // Parents deep in the search tree are themselves mutated.
+        let parent_muts = rng.gen_range_inclusive(0, 4);
+        random_rewrites(&mut parent, rng, parent_muts);
+        let mut child = parent.clone();
+        let mut frontier: Vec<NodeId> = Vec::new();
+        let tries = rng.gen_range_inclusive(1, 6);
+        if random_tracked_rewrites(&mut child, rng, tries, &mut frontier) == 0 {
+            return CaseResult::Discard;
+        }
+        let est = CostEstimator::oracle(&prof, &device);
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.4) { 0.3 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.25),
+        };
+        let every = match rng.gen_range(4) {
+            0 => 1,
+            1 => rng.gen_range_inclusive(2, 9),
+            2 => 0, // auto
+            _ => 10_000,
+        };
+        let mut ws = SimWorkspace::new();
+        let parent_table = CostTable::build(&parent, &est);
+        let mut log = CheckpointLog::new();
+        let _ = simulate_ckpt_in(
+            &parent,
+            &parent_table,
+            opts,
+            &mut NoRecord,
+            &mut ws,
+            &mut log,
+            every,
+        );
+        let mut child_table = CostTable::new();
+        child_table.extend_in(&parent_table, &child, &est);
+        let delta = simulate_delta(
+            &parent,
+            &log,
+            &child,
+            &frontier,
+            &child_table,
+            opts,
+            &mut NoRecord,
+            &mut ws,
+        );
+        let full =
+            simulate_table_in(&child, &child_table, opts, &mut NoRecord, &mut SimWorkspace::new());
+        prop_assert!(
+            delta == full,
+            "delta sim diverged (every={every}, opts={opts:?}): {delta:?} vs {full:?}"
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_search_delta_sim_matches_full() {
+    // The delta_sim / cost_table engine toggles must never change the
+    // search trajectory for a seed.
+    check("search-deltasim-vs-full", PropConfig { cases: 8, seed: 0xC0517 }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        let est = CostEstimator::oracle(&prof, &device);
+        let base = SearchConfig {
+            unchanged_limit: 30,
+            max_queue: 32,
+            seed: rng.next_u64(),
+            eval_threads: 1,
+            ckpt_every: rng.gen_range_inclusive(0, 16),
+            ..Default::default()
+        };
+        let delta = backtracking_search(&g, &est, &base);
+        let full_cfg = SearchConfig { delta_sim: false, cost_table: false, ..base };
+        let full = backtracking_search(&g, &est, &full_cfg);
+        prop_assert!(
+            delta.best_cost_ms == full.best_cost_ms
+                && delta.evals == full.evals
+                && delta.steps == full.steps,
+            "trajectory diverged: {}ms/{} vs {}ms/{}",
+            delta.best_cost_ms,
+            delta.evals,
+            full.best_cost_ms,
+            full.evals
+        );
+        prop_assert!(
+            delta.best.fingerprint() == full.best.fingerprint(),
+            "best modules differ"
+        );
         CaseResult::Pass
     });
 }
