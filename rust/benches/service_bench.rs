@@ -1,0 +1,104 @@
+//! Strategy-service microbenches: canonical-fingerprint throughput, plan
+//! store put/get, and the request-level payoff — cold search vs store
+//! hit vs warm-started search on the acceptance workload. These are the
+//! engineering numbers behind DESIGN.md §11's amortization claim: a
+//! store hit replaces an entire profile + search with one mutation
+//! replay.
+
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::models::{build, ModelSpec};
+use disco::network::Cluster;
+use disco::profiler::profile;
+use disco::search::{backtracking_search, backtracking_search_seeded, SearchConfig};
+use disco::service::{graph_fingerprint, GraphSketch, PlanRecord, PlanStore};
+use disco::util::timer::black_box;
+use std::time::Instant;
+
+fn main() {
+    let cluster = Cluster::cluster_a();
+    let device = DeviceModel::gtx1080ti();
+    let g = build(&ModelSpec::transformer_base(), cluster.num_devices());
+
+    // Canonical fingerprint throughput (two FNV lanes over the arena).
+    let iters = 200;
+    let start = Instant::now();
+    for _ in 0..iters {
+        black_box(graph_fingerprint(&g).unwrap());
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "service/fingerprint    {:>5} live nodes   {:>8.1} us/fp   ({:.0} fps/s)",
+        g.live_count(),
+        per * 1e6,
+        1.0 / per
+    );
+
+    // Store put/get on an in-memory index (the disk append is one
+    // JSONL line; load cost is measured by reopening in tests).
+    let sketch = GraphSketch::of(&g);
+    let mut store = PlanStore::in_memory(4096);
+    let n = 2000usize;
+    let start = Instant::now();
+    for i in 0..n {
+        let rec = PlanRecord {
+            key: format!("{i:032x}"),
+            graph_fp: format!("{:032x}", i / 4),
+            arena_fp: i as u64,
+            model: "bench".into(),
+            sketch: sketch.clone(),
+            muts: Vec::new(),
+            best_cost_ms: i as f64,
+            initial_cost_ms: 2.0 * i as f64,
+            evals: 1,
+            steps: 1,
+            elapsed_ms: 0.0,
+        };
+        store.put(rec).unwrap();
+    }
+    let put_s = start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    for i in 0..n {
+        black_box(store.get(&format!("{i:032x}")));
+    }
+    let get_s = start.elapsed().as_secs_f64();
+    println!(
+        "service/store          {n} records   put {:>7.1} us/op   get {:>7.1} us/op",
+        put_s / n as f64 * 1e6,
+        get_s / n as f64 * 1e6
+    );
+
+    // Request-level: cold search vs warm-started search vs replay-only
+    // (what a store hit costs the server).
+    let prof = profile(&g, &device, &cluster, 2, 1);
+    let est = CostEstimator::oracle(&prof, &device);
+    let cfg = SearchConfig { unchanged_limit: 150, seed: 3, track_best_path: true, ..Default::default() };
+    let start = Instant::now();
+    let cold = backtracking_search(&g, &est, &cfg);
+    let cold_s = start.elapsed().as_secs_f64();
+    let seeds = vec![cold.best_path.clone()];
+    let start = Instant::now();
+    let warm = backtracking_search_seeded(&g, &est, &cfg, &seeds);
+    let warm_s = start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let mut replayed = g.clone();
+    for m in &cold.best_path {
+        m.replay(&mut replayed).unwrap();
+    }
+    let hit_s = start.elapsed().as_secs_f64();
+    black_box(replayed);
+    println!(
+        "service/plan           cold {:>7.2}s ({} evals)   warm {:>7.2}s (saved {} steps)   hit {:>9.2} ms",
+        cold_s,
+        cold.evals,
+        warm_s,
+        warm.steps_saved,
+        hit_s * 1e3
+    );
+    println!(
+        "service/plan           warm best {:.3} ms <= cold best {:.3} ms   hit speedup over cold: {:.0}x",
+        warm.best_cost_ms,
+        cold.best_cost_ms,
+        cold_s / hit_s.max(1e-9)
+    );
+}

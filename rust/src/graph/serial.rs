@@ -132,19 +132,30 @@ fn node_from(j: &Json) -> Option<Node> {
 }
 
 impl TrainingGraph {
-    /// Serialize to a JSON string (stable field order).
-    pub fn to_json(&self) -> String {
+    /// Serialize to a [`Json`] value (stable field order). The encoding
+    /// is **lossless for every `Node` field** — in particular shapes,
+    /// dtypes, flops/byte traffic, fused-group contents and duplicate
+    /// operand edges (`inputs` like `[x, x]` keep their multiplicity),
+    /// everything the strategy service's canonical fingerprint hashes —
+    /// so `from_json_value(to_json_value(g)) == g` exactly
+    /// (`prop_serial_roundtrip_lossless` in tests/properties.rs). Used
+    /// directly by the `disco serve` wire protocol to embed graphs in
+    /// request/response frames.
+    pub fn to_json_value(&self) -> Json {
         Json::obj(vec![
             ("name", Json::Str(self.name.clone())),
             ("num_workers", Json::Num(self.num_workers as f64)),
             ("nodes", Json::Arr(self.nodes.iter().map(node_json).collect())),
         ])
-        .to_string()
     }
 
-    /// Parse a graph back from [`TrainingGraph::to_json`] output.
-    pub fn from_json(s: &str) -> anyhow::Result<TrainingGraph> {
-        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+    /// Serialize to a JSON string (stable field order).
+    pub fn to_json(&self) -> String {
+        self.to_json_value().to_string()
+    }
+
+    /// Parse a graph back from a [`TrainingGraph::to_json_value`] value.
+    pub fn from_json_value(j: &Json) -> anyhow::Result<TrainingGraph> {
         let nodes: Option<Vec<Node>> =
             j.get("nodes").as_arr().ok_or_else(|| anyhow::anyhow!("missing nodes"))?
                 .iter()
@@ -162,6 +173,12 @@ impl TrainingGraph {
         );
         g.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(g)
+    }
+
+    /// Parse a graph back from [`TrainingGraph::to_json`] output.
+    pub fn from_json(s: &str) -> anyhow::Result<TrainingGraph> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json_value(&j)
     }
 }
 
@@ -216,5 +233,41 @@ mod tests {
     fn rejects_corrupt() {
         assert!(TrainingGraph::from_json("{").is_err());
         assert!(TrainingGraph::from_json("{\"name\":\"x\"}").is_err());
+    }
+
+    #[test]
+    fn roundtrip_preserves_duplicate_operand_edges() {
+        // x·x-style duplicate operand edges are semantically load-bearing
+        // (PR 3's fusion fix) and the service fingerprint hashes operand
+        // multiplicity — serialization must not dedup them.
+        let mut b = GraphBuilder::new("rt3", 2);
+        let x = b.constant("x", &[32]);
+        let m = b.compute(OpKind::Mul, "sq", &[x, x], &[32], Role::Forward);
+        let _ = b.compute(OpKind::Add, "a", &[m, m], &[32], Role::Forward);
+        let g = b.finish();
+        assert_eq!(g.nodes[m].inputs, vec![x, x]);
+        let g2 = TrainingGraph::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g2.nodes[m].inputs, vec![x, x]);
+        assert_eq!(g2.nodes[m].orig_inputs, vec![x, x]);
+    }
+
+    #[test]
+    fn roundtrip_after_fusion_preserves_tombstones_and_groups() {
+        use crate::fusion::{fuse_ops, FusionKind};
+        let mut b = GraphBuilder::new("rt4", 4);
+        let x = b.constant("x", &[512]);
+        let m1 = b.compute(OpKind::Mul, "m1", &[x], &[512], Role::Forward);
+        let m2 = b.compute(OpKind::Tanh, "m2", &[m1], &[512], Role::Forward);
+        let _ = b.compute(OpKind::Relu, "r", &[m2], &[512], Role::Forward);
+        let mut g = b.finish();
+        let f = fuse_ops(&mut g, m1, m2, FusionKind::NonDuplicate).unwrap();
+        let g2 = TrainingGraph::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, g2);
+        assert!(g2.nodes[m1].deleted && g2.nodes[m2].deleted);
+        assert_eq!(
+            g2.nodes[f].fused.as_ref().unwrap().signature(),
+            g.nodes[f].fused.as_ref().unwrap().signature()
+        );
     }
 }

@@ -23,6 +23,12 @@
 //! averaging in the end-to-end example. See `DESIGN.md` for the full
 //! substitution table.
 //!
+//! Search results are pure functions of their inputs, so the [`service`]
+//! layer turns the compiler into a long-running, cache-amortized server:
+//! strategies are stored under canonical content fingerprints, identical
+//! requests replay the cached plan without simulating, and similar
+//! requests warm-start the search (`disco serve` / `disco plan`).
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -55,6 +61,7 @@ pub mod fusion;
 pub mod estimator;
 pub mod sim;
 pub mod search;
+pub mod service;
 pub mod baselines;
 pub mod collective;
 pub mod runtime;

@@ -3,6 +3,11 @@
 //! ```text
 //! disco search    --model transformer --cluster a [--alpha 1.05 --beta 10]
 //!                 [--estimator analytical|gnn|oracle] [--out strategy.json]
+//! disco serve     [--addr 127.0.0.1:7077] [--store plans.jsonl|none]
+//!                 [--capacity 512] [--no-warm] [--no-nearest] [--stop]
+//! disco plan      --model transformer [--graph module.json] [--cluster a]
+//!                 [--addr HOST:PORT] [--store plans.jsonl] [--unchanged 150]
+//!                 [--expect store|warm|cold] [--out strategy.json]
 //! disco enact     --strategy strategy.json --world 4 [--iterations 10]
 //! disco worker    --connect 127.0.0.1:7100 --rank 0 [--cluster a]
 //! disco profile   --model vgg19 --cluster a
@@ -99,6 +104,191 @@ fn cmd_search(args: &Args) -> Result<()> {
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.best.to_json())?;
         println!("wrote optimized strategy to {path}");
+    }
+    Ok(())
+}
+
+/// Service configuration from `--config` (service section) overridden by
+/// direct flags.
+fn serve_options(args: &Args) -> Result<disco::service::ServeOptions> {
+    let svc = match args.get("config") {
+        Some(path) => disco::util::config::Config::from_file(path)?.service,
+        None => disco::service::ServiceConfig::default(),
+    };
+    let mut opts = svc.serve_options();
+    if let Some(addr) = args.get("addr") {
+        opts.addr = addr.to_string();
+    }
+    if let Some(store) = args.get("store") {
+        opts.store_path = if store == "none" { None } else { Some(store.to_string()) };
+    }
+    opts.capacity = args.get_usize("capacity", opts.capacity);
+    if args.has_flag("no-warm") {
+        opts.warm.enabled = false;
+    }
+    if args.has_flag("no-nearest") {
+        opts.warm.nearest = false;
+    }
+    Ok(opts)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = serve_options(args)?;
+    if args.has_flag("stop") {
+        let resp = disco::service::request(
+            &opts.addr,
+            &disco::util::json::Json::obj(vec![(
+                "cmd",
+                disco::util::json::Json::Str("shutdown".into()),
+            )]),
+        )?;
+        if resp.get("ok").as_bool() != Some(true) {
+            return Err(anyhow!("server refused shutdown: {}", resp.to_string()));
+        }
+        println!("disco serve at {} shutting down", opts.addr);
+        return Ok(());
+    }
+    let server = disco::service::Server::bind(&opts)?;
+    println!(
+        "disco strategy service listening on {} (store: {}, capacity {}, warm-start {}, nearest {})",
+        server.local_addr(),
+        opts.store_path.as_deref().unwrap_or("memory-only"),
+        opts.capacity,
+        opts.warm.enabled,
+        opts.warm.nearest,
+    );
+    server.run()
+}
+
+/// The graph a `plan` request is about: an explicit serialized module
+/// (`--graph file.json`) or a model-zoo build.
+fn plan_graph(args: &Args, cluster: &Cluster) -> Result<TrainingGraph> {
+    match args.get("graph") {
+        Some(path) => TrainingGraph::from_json(&std::fs::read_to_string(path)?),
+        None => {
+            let opts = bench_opts(args)?;
+            let kind = model_of(args)?;
+            Ok(disco::models::build(&opts.spec(kind), cluster.num_devices()))
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    use disco::util::json::Json;
+    let cluster_name = args.get_or("cluster", "a");
+    let cluster = cluster_of(args);
+    let graph = plan_graph(args, &cluster)?;
+    let unchanged = args.get_usize("unchanged", 150);
+    let seed = args.get_u64("seed", 0xD15C0);
+    let estimator = args.get_or("estimator", "analytical").to_string();
+    if EstimatorKind::parse(&estimator).is_none() {
+        return Err(anyhow!("estimator must be analytical|gnn|oracle (got '{estimator}')"));
+    }
+
+    let (source, best_ms, initial_ms, evals, steps_saved, strategy_json) =
+        if let Some(addr) = args.get("addr") {
+            // Remote mode: ask a running `disco serve`.
+            let mut fields = vec![
+                ("cmd", Json::Str("plan".into())),
+                ("graph", graph.to_json_value()),
+                ("cluster", Json::Str(cluster_name.to_string())),
+                ("estimator", Json::Str(estimator)),
+                // Decimal string: JSON numbers are f64 and would round
+                // u64 seeds above 2^53 (the server accepts both forms).
+                ("seed", Json::Str(seed.to_string())),
+                ("alpha", Json::Num(args.get_f64("alpha", 1.05))),
+                ("beta", Json::Num(args.get_usize("beta", 10) as f64)),
+                ("unchanged", Json::Num(unchanged as f64)),
+            ];
+            // Same flags as local mode, forwarded as per-request policy.
+            if args.has_flag("no-warm") {
+                fields.push(("warm", Json::Bool(false)));
+            }
+            if args.has_flag("no-nearest") {
+                fields.push(("nearest", Json::Bool(false)));
+            }
+            let req = Json::obj(fields);
+            let resp = disco::service::request(addr, &req)?;
+            if resp.get("ok").as_bool() != Some(true) {
+                return Err(anyhow!(
+                    "server error: {}",
+                    resp.get("error").as_str().unwrap_or("unknown")
+                ));
+            }
+            (
+                resp.get("source").as_str().unwrap_or("?").to_string(),
+                resp.get("best_cost_ms").as_f64().unwrap_or(f64::NAN),
+                resp.get("initial_cost_ms").as_f64().unwrap_or(f64::NAN),
+                resp.get("evals").as_usize().unwrap_or(0) as u64,
+                resp.get("steps_saved").as_usize().unwrap_or(0) as u64,
+                resp.get("strategy").clone(),
+            )
+        } else {
+            // Local mode: resolve against the store in-process.
+            let device = BenchOptions::device_for(&cluster);
+            let store_path = args.get_or("store", "plans.jsonl").to_string();
+            let mut store =
+                disco::service::open_store(Some(store_path.as_str()), args.get_usize("capacity", 512))?;
+            let mut cfg = SearchConfig {
+                alpha: args.get_f64("alpha", 1.05),
+                beta: args.get_usize("beta", 10),
+                unchanged_limit: unchanged,
+                seed,
+                ..Default::default()
+            };
+            cfg.track_best_path = true;
+            let est_name = if estimator == "analytical" { "analytical" } else { "oracle" };
+            let env = disco::service::env_fingerprint(&cluster, &device, est_name, &cfg);
+            let gfp = disco::service::graph_fingerprint(&graph)
+                .map_err(|e| anyhow!("unfingerprintable graph: {e}"))?;
+            let key_hex = disco::service::plan_key(gfp, env).hex();
+            // Store hits never profile or estimate — check before paying
+            // for the profiler (same contract as the server path).
+            let hit = store.get(&key_hex).and_then(|rec| {
+                disco::service::try_replay_hit(rec, &graph)
+                    .map(|best| (rec.best_cost_ms, rec.initial_cost_ms, best))
+            });
+            if let Some((best_ms, init_ms, best)) = hit {
+                ("store".to_string(), best_ms, init_ms, 0, 0, best.to_json_value())
+            } else {
+                let profile = disco::profiler::profile(&graph, &device, &cluster, 3, cfg.seed);
+                let est = if est_name == "analytical" {
+                    CostEstimator::analytical(&profile, &cluster)
+                } else {
+                    CostEstimator::oracle(&profile, &device)
+                };
+                let warm = disco::service::WarmOptions {
+                    enabled: !args.has_flag("no-warm"),
+                    nearest: !args.has_flag("no-nearest"),
+                    ..Default::default()
+                };
+                let out =
+                    disco::service::plan_with_store(&graph, &est, &cfg, env, &mut store, &warm)?;
+                (
+                    out.source.name().to_string(),
+                    out.best_cost_ms,
+                    out.initial_cost_ms,
+                    out.evals,
+                    out.steps_saved,
+                    out.best.to_json_value(),
+                )
+            }
+        };
+
+    println!(
+        "plan[{source}] {}: {initial_ms:.3} ms → {best_ms:.3} ms ({:.1}% faster); {evals} evals, {steps_saved} steps saved",
+        graph.name,
+        (initial_ms / best_ms - 1.0) * 100.0,
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, strategy_json.to_string())?;
+        println!("wrote optimized strategy to {path}");
+    }
+    if let Some(expect) = args.get("expect") {
+        if expect != source {
+            return Err(anyhow!("expected plan source '{expect}', got '{source}'"));
+        }
+        println!("plan source matched --expect {expect}");
     }
     Ok(())
 }
@@ -380,7 +570,7 @@ fn cmd_import_hlo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: disco <search|enact|worker|profile|bench|train-gnn|e2e|import-hlo|gen-artifacts> [options]
+const USAGE: &str = "usage: disco <search|serve|plan|enact|worker|profile|bench|train-gnn|e2e|import-hlo|gen-artifacts> [options]
   run `disco <cmd> --help` conventions: see rust/src/main.rs module docs";
 
 fn main() {
@@ -397,6 +587,8 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
         "enact" => cmd_enact(&args),
         "worker" => cmd_worker(&args),
         "profile" => cmd_profile(&args),

@@ -139,6 +139,9 @@ pub fn anneal_search(
         evals,
         resims: 0,
         peak_arena_bytes,
+        warm_hits: 0,
+        steps_saved: 0,
+        best_path: Vec::new(),
         elapsed: start.elapsed(),
     }
 }

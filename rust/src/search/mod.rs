@@ -152,6 +152,14 @@ pub struct SearchConfig {
     /// Checkpoint cadence for the parent simulation, in scheduled events
     /// (0 = auto: n/8, at least 32).
     pub ckpt_every: usize,
+    /// Record the mutation path from the input graph to every enqueued
+    /// candidate so [`SearchResult::best_path`] holds the exact rewrite
+    /// sequence that produced the winner (the strategy service persists
+    /// it as the plan — DESIGN.md §11). Pure observation: never changes
+    /// the search trajectory, only adds one small `Vec<Mutation>` clone
+    /// per enqueued candidate, so it is off by default to keep the hot
+    /// path's allocation profile identical to the A/B record's.
+    pub track_best_path: bool,
 }
 
 impl Default for SearchConfig {
@@ -173,6 +181,7 @@ impl Default for SearchConfig {
             cost_table: true,
             delta_sim: true,
             ckpt_every: 0,
+            track_best_path: false,
         }
     }
 }
@@ -195,6 +204,17 @@ pub struct SearchResult {
     /// High-water mark of candidate-storage memory (arena entries +
     /// rematerialization memo), approximate bytes.
     pub peak_arena_bytes: usize,
+    /// Warm-start seeds (cached plans) that replayed into a valid, novel
+    /// candidate (0 for cold searches).
+    pub warm_hits: u64,
+    /// Total mutations successfully replayed from warm-start seeds —
+    /// rewrites the search was handed instead of having to rediscover.
+    pub steps_saved: u64,
+    /// The exact mutation sequence that turns the input graph into
+    /// `best`. Populated only when [`SearchConfig::track_best_path`] is
+    /// set (empty means "best == input" in that mode); always empty
+    /// otherwise.
+    pub best_path: Vec<Mutation>,
     pub elapsed: Duration,
 }
 
@@ -298,10 +318,12 @@ enum Stored {
 const REMAT_MEMO: usize = 8;
 
 /// Per-slot fixed overhead of one arena entry (the `Stored` enum plus its
-/// `entry_bytes` companion), charged to the accounting when a fresh slot
-/// is allocated and reclaimed by slot reuse — so unbounded `Taken`-slot
-/// growth would show up in `peak_arena_bytes` rather than hide.
-const SLOT_BYTES: usize = std::mem::size_of::<Stored>() + std::mem::size_of::<usize>();
+/// `entry_bytes` and `paths` companions), charged to the accounting when a
+/// fresh slot is allocated and reclaimed by slot reuse — so unbounded
+/// `Taken`-slot growth would show up in `peak_arena_bytes` rather than hide.
+const SLOT_BYTES: usize = std::mem::size_of::<Stored>()
+    + std::mem::size_of::<usize>()
+    + std::mem::size_of::<Vec<Mutation>>();
 
 /// Candidate arena: delta-encoded entries plus a bounded memo of
 /// materialized graphs, with byte accounting for the perf record.
@@ -313,6 +335,10 @@ const SLOT_BYTES: usize = std::mem::size_of::<Stored>() + std::mem::size_of::<us
 struct Arena {
     entries: Vec<Stored>,
     entry_bytes: Vec<usize>,
+    /// Mutation path from the root graph to each entry (parallel to
+    /// `entries`; all empty unless `track_best_path` is on, and empty
+    /// `Vec`s never allocate).
+    paths: Vec<Vec<Mutation>>,
     memo: HashMap<usize, TrainingGraph>,
     memo_order: VecDeque<usize>,
     free: Vec<usize>,
@@ -325,13 +351,14 @@ impl Arena {
         let mut a = Arena {
             entries: Vec::new(),
             entry_bytes: Vec::new(),
+            paths: Vec::new(),
             memo: HashMap::new(),
             memo_order: VecDeque::new(),
             free: Vec::new(),
             live_bytes: 0,
             peak_bytes: 0,
         };
-        a.push_graph(root);
+        a.push_graph(root, Vec::new());
         a
     }
 
@@ -340,14 +367,16 @@ impl Arena {
     }
 
     /// Store `s` in a reclaimed slot if one is free, else append.
-    fn alloc_slot(&mut self, s: Stored, bytes: usize) -> usize {
+    fn alloc_slot(&mut self, s: Stored, bytes: usize, path: Vec<Mutation>) -> usize {
         let idx = if let Some(idx) = self.free.pop() {
             self.entries[idx] = s;
             self.entry_bytes[idx] = bytes;
+            self.paths[idx] = path;
             idx
         } else {
             self.entries.push(s);
             self.entry_bytes.push(bytes);
+            self.paths.push(path);
             self.live_bytes += SLOT_BYTES;
             self.entries.len() - 1
         };
@@ -356,17 +385,26 @@ impl Arena {
         idx
     }
 
-    fn push_graph(&mut self, g: TrainingGraph) -> usize {
-        let bytes = g.approx_bytes();
-        self.alloc_slot(Stored::Graph(g), bytes)
+    fn push_graph(&mut self, g: TrainingGraph, path: Vec<Mutation>) -> usize {
+        let bytes =
+            g.approx_bytes() + path.capacity() * std::mem::size_of::<Mutation>();
+        self.alloc_slot(Stored::Graph(g), bytes, path)
     }
 
-    fn push_delta(&mut self, parent: usize, muts: Vec<Mutation>) -> usize {
-        let bytes = muts.capacity() * std::mem::size_of::<Mutation>();
-        self.alloc_slot(Stored::Delta { parent, muts }, bytes)
+    fn push_delta(&mut self, parent: usize, muts: Vec<Mutation>, path: Vec<Mutation>) -> usize {
+        let bytes =
+            (muts.capacity() + path.capacity()) * std::mem::size_of::<Mutation>();
+        self.alloc_slot(Stored::Delta { parent, muts }, bytes, path)
     }
 
-    /// Eager-mode dequeue: move the stored clone out and reclaim the slot.
+    /// Root-to-entry mutation path (empty unless path tracking is on).
+    fn path(&self, idx: usize) -> &[Mutation] {
+        &self.paths[idx]
+    }
+
+    /// Eager-mode dequeue: move the stored clone out and reclaim the slot
+    /// (including its path — the accounting subtracts the path bytes, so
+    /// the allocation must go too).
     fn take_graph(&mut self, idx: usize) -> TrainingGraph {
         self.live_bytes -= self.entry_bytes[idx];
         self.entry_bytes[idx] = 0;
@@ -374,6 +412,7 @@ impl Arena {
             Stored::Graph(g) => g,
             _ => panic!("candidate {idx} is not an eager graph"),
         };
+        self.paths[idx] = Vec::new();
         self.free.push(idx);
         g
     }
@@ -545,6 +584,26 @@ pub fn backtracking_search(
     costs: &(dyn CostSource + Sync),
     cfg: &SearchConfig,
 ) -> SearchResult {
+    backtracking_search_seeded(input, costs, cfg, &[])
+}
+
+/// [`backtracking_search`] warm-started from cached plans: each seed is a
+/// mutation sequence recorded by an earlier search (the strategy
+/// service's plan store — DESIGN.md §11). Seeds are replayed *best
+/// effort* onto `input` before the main loop — mutations that no longer
+/// apply (the seed came from a perturbed or merely similar graph) are
+/// skipped, and whatever replays becomes an ordinary evaluated, enqueued
+/// candidate. Seeding therefore never compromises validity, and with an
+/// empty seed list the function is exactly the cold search. Seed
+/// processing draws nothing from the RNG and does not touch the
+/// `unchanged` stop counter, so a given (seed list, config seed) pair is
+/// fully deterministic.
+pub fn backtracking_search_seeded(
+    input: &TrainingGraph,
+    costs: &(dyn CostSource + Sync),
+    cfg: &SearchConfig,
+    seeds: &[Vec<Mutation>],
+) -> SearchResult {
     let start = Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let methods = cfg.methods.enabled();
@@ -573,7 +632,48 @@ pub fn backtracking_search(
     let mut steps = 0u64;
     let mut evals = 1u64;
     let mut seq = 1u64;
+    let mut warm_hits = 0u64;
+    let mut steps_saved = 0u64;
+    let mut best_path: Vec<Mutation> = Vec::new();
     let mut batch: Vec<Prepared> = Vec::with_capacity(methods.len());
+
+    // --- warm-start seeds: replay cached plans, evaluate, enqueue --------
+    for seed in seeds {
+        let mut candidate = input.clone();
+        let mut applied: Vec<Mutation> = Vec::new();
+        for m in seed {
+            if m.replay(&mut candidate).is_ok() {
+                applied.push(*m);
+            }
+        }
+        if applied.is_empty() || !seen.insert(candidate.fingerprint()) {
+            continue;
+        }
+        debug_assert!(candidate.validate().is_ok());
+        let cost = eval_one(&candidate, costs, cfg, &mut ws_pool[0], &mut tables[0]);
+        evals += 1;
+        warm_hits += 1;
+        steps_saved += applied.len() as u64;
+        if cost < best_cost {
+            best_cost = cost;
+            best = candidate.clone();
+            if cfg.track_best_path {
+                best_path = applied.clone();
+            }
+        }
+        if cost <= cfg.alpha * best_cost && queue.len() < cfg.max_queue {
+            let path = if cfg.track_best_path { applied.clone() } else { Vec::new() };
+            // The root (arena slot 0) is a materialized `Stored::Graph`,
+            // so delta entries can parent on it directly.
+            let slot = if cfg.delta_candidates {
+                arena.push_delta(0, applied, path)
+            } else {
+                arena.push_graph(candidate, path)
+            };
+            queue.push(Reverse((OrderedF64(cost), seq, slot)));
+            seq += 1;
+        }
+    }
 
     while let Some(Reverse((_, _, idx))) = queue.pop() {
         if unchanged >= cfg.unchanged_limit {
@@ -582,6 +682,10 @@ pub fn backtracking_search(
         if cfg.max_seconds > 0.0 && start.elapsed().as_secs_f64() > cfg.max_seconds {
             break;
         }
+        // Capture the parent's root-path before this step's pushes can
+        // reuse the slot (eager mode reclaims consumed slots eagerly).
+        let parent_path: Vec<Mutation> =
+            if cfg.track_best_path { arena.path(idx).to_vec() } else { Vec::new() };
         let h = if cfg.delta_candidates {
             arena.materialize(idx)
         } else {
@@ -673,16 +777,28 @@ pub fn backtracking_search(
             if cost < best_cost {
                 best_cost = cost;
                 best = prepared.graph.clone();
+                if cfg.track_best_path {
+                    best_path.clear();
+                    best_path.extend_from_slice(&parent_path);
+                    best_path.extend_from_slice(&prepared.muts);
+                }
                 unchanged = 0;
             } else {
                 unchanged += 1;
             }
             if cost <= cfg.alpha * best_cost && queue.len() < cfg.max_queue {
+                let child_path = if cfg.track_best_path {
+                    let mut p = parent_path.clone();
+                    p.extend_from_slice(&prepared.muts);
+                    p
+                } else {
+                    Vec::new()
+                };
                 let slot = if cfg.delta_candidates {
                     h_is_parent = true;
-                    arena.push_delta(idx, prepared.muts)
+                    arena.push_delta(idx, prepared.muts, child_path)
                 } else {
-                    arena.push_graph(prepared.graph)
+                    arena.push_graph(prepared.graph, child_path)
                 };
                 queue.push(Reverse((OrderedF64(cost), seq, slot)));
                 seq += 1;
@@ -703,6 +819,9 @@ pub fn backtracking_search(
         evals,
         resims,
         peak_arena_bytes: arena.peak_bytes,
+        warm_hits,
+        steps_saved,
+        best_path,
         elapsed: start.elapsed(),
     }
 }
@@ -905,13 +1024,13 @@ mod tests {
         let g = workload();
         let mut arena = Arena::new(g.clone());
         let baseline_live = arena.live_bytes;
-        let mut idx = arena.push_graph(g.clone());
+        let mut idx = arena.push_graph(g.clone(), Vec::new());
         let peak_two_resident = arena.peak_bytes;
         // A long eager run consumes and re-enqueues candidates constantly;
         // consumed slots must be reused, not left as dead `Taken` entries.
         for _ in 0..200 {
             let taken = arena.take_graph(idx);
-            idx = arena.push_graph(taken);
+            idx = arena.push_graph(taken, Vec::new());
         }
         assert_eq!(arena.entries.len(), 2, "consumed slots were not reused");
         assert_eq!(arena.free.len(), 0);
@@ -921,6 +1040,79 @@ mod tests {
         assert_eq!(arena.peak_bytes, peak_two_resident);
         let _ = arena.take_graph(idx);
         assert_eq!(arena.live_bytes, baseline_live + SLOT_BYTES);
+    }
+
+    #[test]
+    fn track_best_path_toggle_never_changes_results_and_replays_to_best() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let off = backtracking_search(&g, &est, &quick_cfg());
+        let tracked_cfg = SearchConfig { track_best_path: true, ..quick_cfg() };
+        let on = backtracking_search(&g, &est, &tracked_cfg);
+        assert_eq!(off.best_cost_ms, on.best_cost_ms);
+        assert_eq!(off.evals, on.evals);
+        assert_eq!(off.steps, on.steps);
+        assert_eq!(off.best.fingerprint(), on.best.fingerprint());
+        assert!(off.best_path.is_empty(), "path tracked while toggle off");
+        // The recorded path, replayed on the input, reproduces `best`.
+        let mut replayed = g.clone();
+        for m in &on.best_path {
+            m.replay(&mut replayed).expect("best_path replay failed");
+        }
+        assert_eq!(replayed.fingerprint(), on.best.fingerprint());
+        assert!(!on.best_path.is_empty(), "search improved but path empty");
+    }
+
+    #[test]
+    fn seeded_search_cost_at_most_seed_cost_and_counts_saved_steps() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = SearchConfig { track_best_path: true, ..quick_cfg() };
+        let cold = backtracking_search(&g, &est, &cfg);
+        assert!(cold.best_cost_ms < cold.initial_cost_ms);
+        // Warm-start from the cold run's own winning plan: the seed
+        // candidate replays exactly, so the warm best can never be worse
+        // than the cached plan's cost.
+        let seeds = vec![cold.best_path.clone()];
+        let warm = backtracking_search_seeded(&g, &est, &cfg, &seeds);
+        assert!(
+            warm.best_cost_ms <= cold.best_cost_ms + 1e-9,
+            "warm {} > cached {}",
+            warm.best_cost_ms,
+            cold.best_cost_ms
+        );
+        assert_eq!(warm.warm_hits, 1);
+        assert_eq!(warm.steps_saved, cold.best_path.len() as u64);
+        assert!(warm.best.validate().is_ok());
+        // Determinism of the seeded run.
+        let warm2 = backtracking_search_seeded(&g, &est, &cfg, &seeds);
+        assert_eq!(warm.best_cost_ms, warm2.best_cost_ms);
+        assert_eq!(warm.evals, warm2.evals);
+    }
+
+    #[test]
+    fn empty_seed_list_is_exactly_cold_search() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let a = backtracking_search(&g, &est, &quick_cfg());
+        let b = backtracking_search_seeded(&g, &est, &quick_cfg(), &[]);
+        assert_eq!(a.best_cost_ms, b.best_cost_ms);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.warm_hits, 0);
+        assert_eq!(a.steps_saved, 0);
+        // A seed that replays nothing (empty mutation list) is skipped.
+        let c2 = backtracking_search_seeded(&g, &est, &quick_cfg(), &[Vec::new()]);
+        assert_eq!(c2.best_cost_ms, a.best_cost_ms);
+        assert_eq!(c2.warm_hits, 0);
     }
 
     #[test]

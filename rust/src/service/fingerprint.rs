@@ -1,0 +1,498 @@
+//! Content-addressed identity for (training graph, environment) pairs —
+//! the key of the strategy service's plan store (DESIGN.md §11).
+//!
+//! A plan is reusable exactly when *everything that determines the search
+//! result* is identical, so the key has two halves:
+//!
+//! * [`graph_fingerprint`] — a canonical hash of the live graph
+//!   structure. It is **relabeling-invariant** (isomorphic graphs that
+//!   differ only in arena numbering or node/graph names hash equal) and
+//!   **semantics-sensitive** (any change to an op kind, role, dtype,
+//!   shape, FLOPs, byte traffic, wiring — including duplicate operand
+//!   edges like `x·x` — a fused group's contents, or the worker count
+//!   produces a different hash). Node hashes are computed bottom-up in
+//!   topological order, so a node's hash depends only on its own features
+//!   and its operands' hashes, never on arena indices; the graph hash is
+//!   the sorted multiset of live node hashes.
+//! * [`env_fingerprint`] — the cluster, device, estimator and the
+//!   result-relevant search hyper-parameters. Engine toggles that are
+//!   property-tested to never change results (`eval_threads`,
+//!   `delta_candidates`, `reuse_workspaces`, `parallel_min_nodes`,
+//!   `cost_table`, `delta_sim`, `ckpt_every`, `track_best_path`) are
+//!   deliberately excluded; `incremental_candidates` *is* included
+//!   because it legitimately steers the random trajectory.
+//!
+//! Hashes use an explicit FNV-1a so fingerprints are stable across
+//! platforms, Rust versions and process runs — they live on disk.
+//! Both halves are 128-bit (two independently-seeded 64-bit lanes), so
+//! accidental collisions are out of the picture at plan-store scale.
+//!
+//! [`GraphSketch`] is the companion *similarity* summary used by
+//! warm-starting: a coarse feature vector (op-kind histogram, FLOPs,
+//! gradient bytes, worker count) with an L1-style distance, for picking
+//! the nearest cached plan when no exact fingerprint match exists.
+
+use crate::device::DeviceModel;
+use crate::graph::{FusedGroup, GraphError, OpKind, OrigOp, TrainingGraph};
+use crate::network::Cluster;
+use crate::search::SearchConfig;
+use crate::util::json::Json;
+
+/// Streaming FNV-1a 64-bit hasher with an explicit seed. Stable by
+/// construction (unlike `DefaultHasher`, whose algorithm is not
+/// guaranteed across Rust releases — fine for in-process memo keys,
+/// wrong for on-disk identities).
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+impl Fnv64 {
+    pub fn new(seed: u64) -> Fnv64 {
+        let mut h = Fnv64(FNV_OFFSET);
+        h.u64(seed);
+        h
+    }
+
+    #[inline]
+    pub fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    #[inline]
+    pub fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    #[inline]
+    pub fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    /// Hashes the bit pattern: -0.0 ≠ 0.0 and every NaN payload is
+    /// distinct, which is exactly right for "did the input change".
+    #[inline]
+    pub fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        for &b in s.as_bytes() {
+            self.byte(b);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// A 128-bit content fingerprint (two independently-seeded FNV lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl Fingerprint {
+    /// 32-char lowercase hex form — the plan store's record key.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+
+    /// Parse [`Fingerprint::hex`] output.
+    pub fn parse(s: &str) -> Option<Fingerprint> {
+        if s.len() != 32 {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(Fingerprint { hi, lo })
+    }
+
+    /// Combine two fingerprints (order-sensitive) into one — used to fuse
+    /// the graph and environment halves into the plan key.
+    pub fn combine(a: Fingerprint, b: Fingerprint) -> Fingerprint {
+        let lane = |seed: u64| {
+            let mut f = Fnv64::new(seed);
+            f.u64(a.hi);
+            f.u64(a.lo);
+            f.u64(b.hi);
+            f.u64(b.lo);
+            f.finish()
+        };
+        Fingerprint { hi: lane(0xC0FF_EE01), lo: lane(0xC0FF_EE02) }
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+/// Content key of one fused-group member — everything cost-relevant,
+/// nothing arena-relevant (`orig_id` is an arena index and `time_ms` is a
+/// profiler annotation, so both are excluded).
+fn orig_op_key(o: &OrigOp, seed: u64) -> u64 {
+    let mut f = Fnv64::new(seed);
+    f.str(o.kind.name());
+    f.f64(o.flops);
+    f.f64(o.bytes_in);
+    f.f64(o.bytes_out);
+    f.byte(o.duplicated as u8);
+    f.finish()
+}
+
+/// Canonical hash of a fused group: sorted multisets of member keys and
+/// of (producer key, consumer key) edges — invariant under member
+/// reordering and arena relabeling, sensitive to any member or wiring
+/// change.
+fn group_hash(g: &FusedGroup, seed: u64) -> u64 {
+    let keys: Vec<u64> = g.ops.iter().map(|o| orig_op_key(o, seed)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort_unstable();
+    let mut edges: Vec<(u64, u64)> =
+        g.edges.iter().map(|&(a, b)| (keys[a], keys[b])).collect();
+    edges.sort_unstable();
+    let mut f = Fnv64::new(seed ^ 0xF05E_D0A7);
+    f.usize(sorted.len());
+    for k in sorted {
+        f.u64(k);
+    }
+    f.usize(edges.len());
+    for (a, b) in edges {
+        f.u64(a);
+        f.u64(b);
+    }
+    f.finish()
+}
+
+/// One lane of the canonical graph hash: bottom-up node hashes over a
+/// topological order, combined as a sorted multiset.
+fn graph_lane(g: &TrainingGraph, seed: u64) -> Result<u64, GraphError> {
+    let order = g.topo_order()?;
+    let mut node_hash = vec![0u64; g.nodes.len()];
+    for &id in &order {
+        let n = &g.nodes[id];
+        let mut f = Fnv64::new(seed);
+        f.str(n.kind.name());
+        f.str(n.role.name());
+        f.str(n.dtype.name());
+        f.usize(n.shape.dims.len());
+        for &d in &n.shape.dims {
+            f.usize(d);
+        }
+        f.f64(n.flops);
+        f.f64(n.bytes_in);
+        f.f64(n.bytes_out);
+        // Operand order and multiplicity preserved: `mul(x, x)` hashes
+        // differently from `mul(x, y)` even when x and y hash equal as
+        // subtrees do not, and a dropped duplicate edge changes the hash.
+        f.usize(n.inputs.len());
+        for &i in &n.inputs {
+            f.u64(node_hash[i]);
+        }
+        match &n.fused {
+            Some(grp) => f.u64(group_hash(grp, seed)),
+            None => f.u64(0),
+        }
+        // Constituent *identities* are arena ids (relabeling-sensitive)
+        // and carry no cost information beyond their count — byte totals
+        // already live in `bytes_out`.
+        f.usize(n.ar_constituents.len());
+        node_hash[id] = f.finish();
+    }
+    let mut live: Vec<u64> = order.iter().map(|&id| node_hash[id]).collect();
+    live.sort_unstable();
+    let mut f = Fnv64::new(seed ^ 0x6AFF_1E55);
+    f.usize(g.num_workers);
+    f.usize(live.len());
+    for h in live {
+        f.u64(h);
+    }
+    Ok(f.finish())
+}
+
+/// Canonical, relabeling-invariant fingerprint of a live training graph.
+/// Graph and node *names* are excluded by design — identity is structure,
+/// not labels. Errors only on a cyclic graph (which `validate` rejects
+/// everywhere else too).
+pub fn graph_fingerprint(g: &TrainingGraph) -> Result<Fingerprint, GraphError> {
+    Ok(Fingerprint { hi: graph_lane(g, 0x5EED_0001)?, lo: graph_lane(g, 0x5EED_0002)? })
+}
+
+/// Stable, id-*sensitive* arena fingerprint — the exact-replay
+/// precondition persisted in plan records: a cached mutation sequence
+/// may only be blind-replayed onto a graph whose arena numbering matches
+/// the one it was recorded against. Hashes the same structural fields as
+/// [`TrainingGraph::fingerprint`] (ids, kinds, wiring, fused groups, AR
+/// constituents) but over the explicit FNV basis, because
+/// `TrainingGraph::fingerprint` is built on `DefaultHasher`, whose
+/// output is not guaranteed stable across Rust releases — fine for
+/// in-process candidate dedup, wrong for on-disk identities.
+pub fn arena_fingerprint(g: &TrainingGraph) -> u64 {
+    let mut f = Fnv64::new(0xA12E_A0F1);
+    for n in g.live() {
+        f.usize(n.id);
+        f.str(n.kind.name());
+        f.usize(n.inputs.len());
+        for &i in &n.inputs {
+            f.usize(i);
+        }
+        match &n.fused {
+            Some(grp) => f.u64(group_hash(grp, 0xA12E_A0F2)),
+            None => f.u64(0),
+        }
+        f.usize(n.ar_constituents.len());
+        for &a in &n.ar_constituents {
+            f.usize(a);
+        }
+    }
+    f.finish()
+}
+
+/// Fingerprint of everything outside the graph that determines a search
+/// result: cluster, device, estimator backend, simulation knobs and the
+/// trajectory-relevant search hyper-parameters.
+pub fn env_fingerprint(
+    cluster: &Cluster,
+    device: &DeviceModel,
+    estimator: &str,
+    cfg: &SearchConfig,
+) -> Fingerprint {
+    let lane = |seed: u64| {
+        let mut f = Fnv64::new(seed);
+        f.str(&cluster.name);
+        f.usize(cluster.machines);
+        f.usize(cluster.gpus_per_machine);
+        f.f64(cluster.nic_bw);
+        f.f64(cluster.overhead_ms);
+        f.f64(cluster.noise_sigma);
+        let d = &device.spec;
+        f.str(&d.name);
+        f.f64(d.peak_flops);
+        f.f64(d.mem_bw);
+        f.f64(d.launch_overhead_ms);
+        f.f64(d.onchip_bytes);
+        f.f64(d.noise_sigma);
+        f.str(estimator);
+        f.f64(cfg.alpha);
+        f.usize(cfg.beta);
+        f.usize(cfg.unchanged_limit);
+        f.usize(cfg.max_queue);
+        f.f64(cfg.max_seconds);
+        f.u64(cfg.seed);
+        f.byte(cfg.methods.nondup_fusion as u8);
+        f.byte(cfg.methods.dup_fusion as u8);
+        f.byte(cfg.methods.ar_fusion as u8);
+        f.byte(cfg.incremental_candidates as u8);
+        f.f64(cfg.sim.straggler_ms);
+        f.byte(cfg.sim.ignore_comm as u8);
+        f.finish()
+    };
+    Fingerprint { hi: lane(0xE4B0_0001), lo: lane(0xE4B0_0002) }
+}
+
+/// The plan store's record key: graph identity ⊕ environment identity.
+pub fn plan_key(graph_fp: Fingerprint, env_fp: Fingerprint) -> Fingerprint {
+    Fingerprint::combine(graph_fp, env_fp)
+}
+
+/// Coarse similarity summary of a graph, for nearest-plan warm-starting.
+/// Cheap to compute, cheap to store, and deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSketch {
+    /// Live-node counts per op kind, indexed by
+    /// [`OpKind::feature_index`]; the final slot aggregates kinds outside
+    /// the feature vocabulary (`Fused`, control flow).
+    pub kind_counts: Vec<u32>,
+    pub live: u32,
+    pub allreduces: u32,
+    pub num_workers: u32,
+    pub total_flops: f64,
+    pub grad_bytes: f64,
+}
+
+impl GraphSketch {
+    pub fn of(g: &TrainingGraph) -> GraphSketch {
+        let mut kind_counts = vec![0u32; OpKind::ALL.len() + 1];
+        for n in g.live() {
+            kind_counts[n.kind.feature_index()] += 1;
+        }
+        GraphSketch {
+            kind_counts,
+            live: g.live_count() as u32,
+            allreduces: g.allreduces().len() as u32,
+            num_workers: g.num_workers as u32,
+            total_flops: g.total_flops(),
+            grad_bytes: g.total_gradient_bytes(),
+        }
+    }
+
+    /// Symmetric distance: 0 for identical sketches, growing with
+    /// histogram, scale and topology-class differences. Log-ratio terms
+    /// keep FLOPs/bytes comparable across magnitudes.
+    pub fn distance(&self, other: &GraphSketch) -> f64 {
+        let hist: f64 = self
+            .kind_counts
+            .iter()
+            .zip(&other.kind_counts)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .sum::<f64>()
+            + (self.kind_counts.len() as f64 - other.kind_counts.len() as f64).abs();
+        let log_ratio = |a: f64, b: f64| (a.max(1.0) / b.max(1.0)).log2().abs();
+        hist + 8.0 * log_ratio(self.total_flops, other.total_flops)
+            + 2.0 * log_ratio(self.grad_bytes, other.grad_bytes)
+            + 4.0 * (self.allreduces as f64 - other.allreduces as f64).abs()
+            + 16.0 * f64::from(self.num_workers != other.num_workers)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kinds", Json::Arr(self.kind_counts.iter().map(|&c| Json::Num(c as f64)).collect())),
+            ("live", Json::Num(self.live as f64)),
+            ("ars", Json::Num(self.allreduces as f64)),
+            ("workers", Json::Num(self.num_workers as f64)),
+            ("flops", Json::Num(self.total_flops)),
+            ("grad_bytes", Json::Num(self.grad_bytes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<GraphSketch> {
+        Some(GraphSketch {
+            kind_counts: j
+                .get("kinds")
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as u32))
+                .collect::<Option<Vec<u32>>>()?,
+            live: j.get("live").as_usize()? as u32,
+            allreduces: j.get("ars").as_usize()? as u32,
+            num_workers: j.get("workers").as_usize()? as u32,
+            total_flops: j.get("flops").as_f64()?,
+            grad_bytes: j.get("grad_bytes").as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::Role;
+
+    fn tiny() -> TrainingGraph {
+        let mut b = GraphBuilder::new("fp-tiny", 4);
+        let p = b.param("w", &[64, 64]);
+        let m = b.compute(OpKind::MatMul, "mm", &[p, p], &[64, 64], Role::Forward);
+        let r = b.compute(OpKind::Relu, "relu", &[m], &[64, 64], Role::Forward);
+        let gr = b.compute(OpKind::MatMul, "grad", &[r], &[64, 64], Role::Backward);
+        let ar = b.allreduce("ar", gr, &[64, 64]);
+        b.optimizer_update("apply", &[ar, p]);
+        b.finish()
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let fp = Fingerprint { hi: 0xDEAD_BEEF_0123_4567, lo: 0x89AB_CDEF_0000_0001 };
+        assert_eq!(Fingerprint::parse(&fp.hex()), Some(fp));
+        assert_eq!(Fingerprint::parse("xyz"), None);
+        assert_eq!(Fingerprint::parse(&"0".repeat(31)), None);
+    }
+
+    #[test]
+    fn fingerprint_deterministic_and_name_blind() {
+        let a = tiny();
+        let mut b = tiny();
+        b.name = "renamed".into();
+        for n in b.nodes.iter_mut() {
+            n.name = format!("n{}", n.id);
+        }
+        b.invalidate_adjacency();
+        assert_eq!(graph_fingerprint(&a).unwrap(), graph_fingerprint(&b).unwrap());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_shape_kind_flops_and_workers() {
+        let base = graph_fingerprint(&tiny()).unwrap();
+        let mut s = tiny();
+        s.nodes[2].shape.dims[0] = 32;
+        assert_ne!(graph_fingerprint(&s).unwrap(), base);
+        let mut k = tiny();
+        k.nodes[2].kind = OpKind::Gelu;
+        assert_ne!(graph_fingerprint(&k).unwrap(), base);
+        let mut f = tiny();
+        f.nodes[1].flops *= 2.0;
+        assert_ne!(graph_fingerprint(&f).unwrap(), base);
+        let mut w = tiny();
+        w.num_workers = 8;
+        assert_ne!(graph_fingerprint(&w).unwrap(), base);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_duplicate_operand_edges() {
+        // mul(x, x) vs mul(x, y) with y structurally identical to x: the
+        // duplicate edge itself must be visible.
+        let mut b1 = GraphBuilder::new("dup", 2);
+        let x = b1.constant("x", &[16]);
+        b1.compute(OpKind::Mul, "m", &[x, x], &[16], Role::Forward);
+        let g1 = b1.finish();
+        let mut b2 = GraphBuilder::new("dup", 2);
+        let x = b2.constant("x", &[16]);
+        let y = b2.constant("y", &[16]);
+        b2.compute(OpKind::Mul, "m", &[x, y], &[16], Role::Forward);
+        let g2 = b2.finish();
+        assert_ne!(
+            graph_fingerprint(&g1).unwrap(),
+            graph_fingerprint(&g2).unwrap()
+        );
+    }
+
+    #[test]
+    fn env_fingerprint_sensitive_to_cluster_and_params() {
+        let cfg = SearchConfig::default();
+        let d = DeviceModel::gtx1080ti();
+        let a = env_fingerprint(&Cluster::cluster_a(), &d, "analytical", &cfg);
+        let b = env_fingerprint(&Cluster::cluster_b(), &d, "analytical", &cfg);
+        assert_ne!(a, b);
+        let oracle = env_fingerprint(&Cluster::cluster_a(), &d, "oracle", &cfg);
+        assert_ne!(a, oracle);
+        let seeded =
+            env_fingerprint(&Cluster::cluster_a(), &d, "analytical", &SearchConfig { seed: 1, ..SearchConfig::default() });
+        assert_ne!(a, seeded);
+        // Engine toggles that never change results do not change the key.
+        let toggled = env_fingerprint(
+            &Cluster::cluster_a(),
+            &d,
+            "analytical",
+            &SearchConfig { eval_threads: 1, delta_sim: false, ..SearchConfig::default() },
+        );
+        assert_eq!(a, toggled);
+    }
+
+    #[test]
+    fn sketch_distance_zero_iff_same_shape_of_workload() {
+        let a = GraphSketch::of(&tiny());
+        let b = GraphSketch::of(&tiny());
+        assert_eq!(a.distance(&b), 0.0);
+        let mut g = tiny();
+        g.nodes[2].deleted = true;
+        g.invalidate_adjacency();
+        let c = GraphSketch::of(&g);
+        assert!(a.distance(&c) > 0.0);
+        assert_eq!(a.distance(&c), c.distance(&a));
+    }
+
+    #[test]
+    fn sketch_json_roundtrip() {
+        let s = GraphSketch::of(&tiny());
+        let j = s.to_json().to_string();
+        let s2 = GraphSketch::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, s2);
+    }
+}

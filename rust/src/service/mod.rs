@@ -1,0 +1,72 @@
+//! Strategy service: content-addressed plan caching, warm-started search
+//! and the `disco serve`/`disco plan` front-end (DESIGN.md §11).
+//!
+//! DisCo's backtracking search is expensive and its output is a pure
+//! function of (training graph, cluster/device, estimator, search
+//! hyper-parameters). This layer exploits that purity the way auto-tuning
+//! systems exploit tuning records: every search result is persisted under
+//! a canonical content fingerprint, identical requests are served back by
+//! *replaying* the recorded mutation sequence (zero simulator
+//! invocations), and similar requests warm-start the search from cached
+//! plans instead of rediscovering their rewrites.
+//!
+//! * [`fingerprint`] — relabeling-invariant graph hashing + environment
+//!   keys + similarity sketches;
+//! * [`store`] — the persistent JSONL plan store with a bounded LRU
+//!   index;
+//! * [`warm`] — hit → warm → cold plan resolution;
+//! * [`server`] — the threaded TCP front-end with per-fingerprint request
+//!   coalescing.
+
+pub mod fingerprint;
+pub mod server;
+pub mod store;
+pub mod warm;
+
+pub use fingerprint::{
+    arena_fingerprint, env_fingerprint, graph_fingerprint, plan_key, Fingerprint, GraphSketch,
+};
+pub use server::{request, Server, ServeOptions};
+pub use store::{open_store, PlanRecord, PlanStore, RECORD_VERSION};
+pub use warm::{plan_with_store, try_replay_hit, PlanOutcome, PlanSource, WarmOptions};
+
+/// Config-file `service` section (`disco serve --config svc.json`): store
+/// location, LRU capacity and warm-start policy.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub addr: String,
+    /// JSONL store path; `None` (config string `"none"`) = memory-only.
+    pub store_path: Option<String>,
+    pub capacity: usize,
+    pub warm_start: bool,
+    /// Allow seeding from the nearest-sketch plan of a different graph.
+    pub nearest: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:7077".to_string(),
+            store_path: Some("plans.jsonl".to_string()),
+            capacity: 512,
+            warm_start: true,
+            nearest: true,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Lower into the server's runtime options.
+    pub fn serve_options(&self) -> ServeOptions {
+        ServeOptions {
+            addr: self.addr.clone(),
+            store_path: self.store_path.clone(),
+            capacity: self.capacity,
+            warm: WarmOptions {
+                enabled: self.warm_start,
+                nearest: self.nearest,
+                ..WarmOptions::default()
+            },
+        }
+    }
+}

@@ -1,0 +1,553 @@
+//! `disco serve` — a std-only threaded TCP front-end for the strategy
+//! service (DESIGN.md §11).
+//!
+//! Wire protocol: length-prefixed JSON — each message is a big-endian
+//! `u32` byte count followed by one UTF-8 JSON document. A connection may
+//! carry any number of request/response pairs. Commands:
+//!
+//! * `{"cmd":"plan", "graph":{…}, "cluster":"a|b|single",
+//!   "estimator":"analytical|oracle|gnn", "seed":"N", "alpha":F,
+//!   "beta":N, "unchanged":N, "warm":bool}` — resolve a strategy for the
+//!   serialized [`TrainingGraph`]; everything but `graph` is optional.
+//!   `seed` travels as a decimal *string* (JSON numbers are f64 and
+//!   would round u64 seeds above 2^53); plain numbers are also accepted.
+//!   `warm`/`nearest` override the server's warm-start policy per
+//!   request.
+//! * `{"cmd":"stats"}` — counters + store occupancy.
+//! * `{"cmd":"ping"}` — liveness.
+//! * `{"cmd":"shutdown"}` — drain and stop accepting.
+//!
+//! **Request coalescing:** concurrent `plan` requests with the same plan
+//! fingerprint trigger exactly one search. The first thread to register
+//! the key in the in-flight table becomes the leader; followers block on
+//! the key's gate and re-resolve from the store once the leader
+//! publishes. The leader re-checks the store after winning leadership
+//! (classic double-checked locking), and the record is stored *before*
+//! the gate is removed, so a second search for the same key is impossible
+//! — asserted by the coalescing test. Store hits never profile, estimate
+//! or simulate anything.
+
+use super::fingerprint::{env_fingerprint, graph_fingerprint, plan_key, GraphSketch};
+use super::store::PlanStore;
+use super::warm::{record_from, seeds_from_store, try_replay_hit, PlanSource, WarmOptions};
+use crate::device::DeviceModel;
+use crate::estimator::CostEstimator;
+use crate::graph::TrainingGraph;
+use crate::network::Cluster;
+use crate::profiler;
+use crate::search::{backtracking_search_seeded, SearchConfig};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Frames larger than this are rejected (a corrupt length prefix must
+/// not make the server try to allocate gigabytes).
+const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Default `unchanged_limit` for served searches — service latency over
+/// paper-budget exhaustiveness; requests override per call.
+const SERVE_UNCHANGED_LIMIT: usize = 150;
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame(stream: &mut TcpStream, body: &str) -> std::io::Result<()> {
+    let bytes = body.as_bytes();
+    stream.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    stream.write_all(bytes)?;
+    stream.flush()
+}
+
+/// Read one length-prefixed JSON frame (plain blocking form — the
+/// client side, whose streams have no read timeout).
+pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let n = frame_len(len)?;
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+fn frame_len(len: [u8; 4]) -> std::io::Result<usize> {
+    let n = u32::from_be_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        ));
+    }
+    Ok(n)
+}
+
+/// Fill `buf[*filled..]` from a stream that has a read timeout,
+/// *without* abandoning a partial read: a timeout after bytes were
+/// consumed must keep waiting (giving up mid-frame would desync the
+/// protocol — TCP gives no atomicity between the length prefix and the
+/// body). A timeout with nothing consumed yet returns `Ok(false)` (an
+/// idle tick); `give_up` aborts a mid-frame stall (server shutdown).
+fn read_full_timed(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    filled: &mut usize,
+    give_up: &AtomicBool,
+) -> std::io::Result<bool> {
+    while *filled < buf.len() {
+        match stream.read(&mut buf[*filled..]) {
+            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => *filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if *filled == 0 {
+                    return Ok(false);
+                }
+                if give_up.load(Ordering::SeqCst) {
+                    return Err(e);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Server-side frame read on a timeout-bearing stream: `Ok(None)` is an
+/// idle tick (no frame started — caller checks for shutdown and keeps
+/// the connection), `Ok(Some(body))` is a complete frame.
+fn read_frame_idle(
+    stream: &mut TcpStream,
+    give_up: &AtomicBool,
+) -> std::io::Result<Option<String>> {
+    let mut len = [0u8; 4];
+    let mut filled = 0usize;
+    // Idle ticks are only possible before the first byte of the length
+    // prefix; after that the frame must complete.
+    if !read_full_timed(stream, &mut len, &mut filled, give_up)? {
+        return Ok(None);
+    }
+    let n = frame_len(len)?;
+    let mut buf = vec![0u8; n];
+    let mut body_filled = 0usize;
+    while !read_full_timed(stream, &mut buf, &mut body_filled, give_up)? {
+        // Timeout between prefix and body with zero body bytes: still
+        // mid-frame, keep waiting unless shutting down.
+        if give_up.load(Ordering::SeqCst) {
+            return Err(std::io::ErrorKind::TimedOut.into());
+        }
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+/// One request/response round-trip against a running server.
+pub fn request(addr: &str, req: &Json) -> Result<Json> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to disco serve at {addr}"))?;
+    write_frame(&mut stream, &req.to_string())?;
+    let reply = read_frame(&mut stream)?;
+    Json::parse(&reply).map_err(|e| anyhow!("bad server reply: {e}"))
+}
+
+/// Server configuration (CLI flags / config-file `service` section).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub addr: String,
+    /// JSONL store path; `None` = memory-only.
+    pub store_path: Option<String>,
+    pub capacity: usize,
+    pub warm: WarmOptions,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7077".to_string(),
+            store_path: Some("plans.jsonl".to_string()),
+            capacity: 512,
+            warm: WarmOptions::default(),
+        }
+    }
+}
+
+/// Gate a coalesced key's followers wait on.
+#[derive(Default)]
+struct Gate {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Shared server state.
+struct State {
+    store: Mutex<PlanStore>,
+    inflight: Mutex<HashMap<String, Arc<Gate>>>,
+    warm: WarmOptions,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    // Counters (surfaced by the `stats` command).
+    requests: AtomicU64,
+    searches: AtomicU64,
+    store_hits: AtomicU64,
+    warm_starts: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+/// Removes the in-flight entry and opens the gate even if the leader's
+/// search fails or panics — followers must never wait forever.
+struct InflightGuard<'a> {
+    state: &'a State,
+    key: String,
+    gate: Arc<Gate>,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.state.inflight.lock().unwrap().remove(&self.key);
+        self.gate.open();
+    }
+}
+
+/// The strategy server. `bind` then `run`; `run` returns after a
+/// `shutdown` command has been served and live handlers drained.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<State>,
+}
+
+impl Server {
+    pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding disco serve to {}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        let store = super::store::open_store(opts.store_path.as_deref(), opts.capacity)?;
+        Ok(Server {
+            listener,
+            state: Arc::new(State {
+                store: Mutex::new(store),
+                inflight: Mutex::new(HashMap::new()),
+                warm: opts.warm.clone(),
+                shutdown: AtomicBool::new(false),
+                addr,
+                requests: AtomicU64::new(0),
+                searches: AtomicU64::new(0),
+                store_hits: AtomicU64::new(0),
+                warm_starts: AtomicU64::new(0),
+                coalesced: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// The bound address (useful with `--addr 127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Accept-and-dispatch loop; one thread per connection.
+    pub fn run(self) -> Result<()> {
+        let mut handles = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    // Bounded read blocking so idle keep-alive connections
+                    // notice shutdown instead of pinning the final join
+                    // forever.
+                    let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
+                    let state = Arc::clone(&self.state);
+                    // Reap finished handlers so a long-running server
+                    // doesn't accumulate one dead JoinHandle per
+                    // connection ever accepted.
+                    handles.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
+                    handles.push(std::thread::spawn(move || handle_conn(&state, s)));
+                }
+                Err(e) => eprintln!("disco serve: accept failed: {e}"),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(state: &State, mut stream: TcpStream) {
+    loop {
+        let body = match read_frame_idle(&mut stream, &state.shutdown) {
+            // Idle tick (connection open, no frame started): keep
+            // serving unless the server is shutting down.
+            Ok(None) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Ok(Some(b)) => b,
+            Err(_) => return, // client closed (or sent garbage): drop the connection
+        };
+        let reply = dispatch(state, &body);
+        if write_frame(&mut stream, &reply.to_string()).is_err() {
+            return;
+        }
+        if state.shutdown.load(Ordering::SeqCst) {
+            // Nudge the acceptor out of its blocking `accept`.
+            let _ = TcpStream::connect(state.addr);
+            return;
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+}
+
+fn dispatch(state: &State, body: &str) -> Json {
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("bad request json: {e}")),
+    };
+    match req.get("cmd").as_str() {
+        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        Some("stats") => stats_json(state),
+        Some("shutdown") => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))])
+        }
+        Some("plan") => match handle_plan(state, &req) {
+            Ok(resp) => resp,
+            Err(e) => err_json(&format!("{e:#}")),
+        },
+        _ => err_json("unknown cmd (expected plan|stats|ping|shutdown)"),
+    }
+}
+
+fn stats_json(state: &State) -> Json {
+    let store = state.store.lock().unwrap();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
+        ("searches", Json::Num(state.searches.load(Ordering::Relaxed) as f64)),
+        ("store_hits", Json::Num(state.store_hits.load(Ordering::Relaxed) as f64)),
+        ("warm_starts", Json::Num(state.warm_starts.load(Ordering::Relaxed) as f64)),
+        ("coalesced", Json::Num(state.coalesced.load(Ordering::Relaxed) as f64)),
+        ("store_len", Json::Num(store.len() as f64)),
+        ("store_capacity", Json::Num(store.capacity() as f64)),
+        ("store_evictions", Json::Num(store.evictions as f64)),
+        (
+            "store_path",
+            match store.path() {
+                Some(p) => Json::Str(p.display().to_string()),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Cluster preset + matching device (mirrors the CLI's convention:
+/// cluster B runs T4s, everything else 1080 Tis).
+fn cluster_device(name: &str) -> Result<(Cluster, DeviceModel)> {
+    let cluster = match name {
+        "a" => Cluster::cluster_a(),
+        "b" => Cluster::cluster_b(),
+        "single" => Cluster::single_device(),
+        other => return Err(anyhow!("unknown cluster '{other}' (expected a|b|single)")),
+    };
+    let device =
+        if cluster.name == "B" { DeviceModel::tesla_t4() } else { DeviceModel::gtx1080ti() };
+    Ok((cluster, device))
+}
+
+/// Store-hit resolution shared by the fast path and the leader's
+/// double-check: replay the cached record if present and exact. Counts
+/// a `store_hits` and builds the response; `None` means "no usable
+/// record — keep going".
+fn try_store_hit(
+    state: &State,
+    key_hex: &str,
+    gfp_hex: &str,
+    graph: &TrainingGraph,
+    start: Instant,
+) -> Option<Json> {
+    let mut store = state.store.lock().unwrap();
+    let rec = store.get(key_hex)?;
+    let best = try_replay_hit(rec, graph)?;
+    let (best_ms, init_ms) = (rec.best_cost_ms, rec.initial_cost_ms);
+    drop(store);
+    state.store_hits.fetch_add(1, Ordering::Relaxed);
+    Some(plan_json(
+        key_hex,
+        gfp_hex,
+        PlanSource::Store,
+        &best,
+        best_ms,
+        init_ms,
+        0,
+        0,
+        0,
+        start.elapsed().as_secs_f64() * 1e3,
+    ))
+}
+
+fn handle_plan(state: &State, req: &Json) -> Result<Json> {
+    let graph = TrainingGraph::from_json_value(req.get("graph"))
+        .map_err(|e| anyhow!("bad graph: {e}"))?;
+    let (cluster, device) = cluster_device(req.get("cluster").as_str().unwrap_or("a"))?;
+    let estimator = match req.get("estimator").as_str().unwrap_or("analytical") {
+        "analytical" => "analytical",
+        // As in the bench harness, GNN falls back to oracle when no
+        // trained predictor is wired into the process.
+        "oracle" | "gnn" => "oracle",
+        other => return Err(anyhow!("unknown estimator '{other}'")),
+    };
+    // `seed` is a u64; JSON numbers are f64 and round above 2^53, so the
+    // CLI transmits it as a decimal string. Plain numbers stay accepted
+    // for hand-written clients with small seeds.
+    let seed = match req.get("seed") {
+        Json::Null => 0xD15C0,
+        Json::Str(s) => s.parse::<u64>().map_err(|_| anyhow!("bad seed '{s}'"))?,
+        n => n.as_usize().ok_or_else(|| anyhow!("seed must be a number or string"))? as u64,
+    };
+    let cfg = SearchConfig {
+        alpha: req.get("alpha").as_f64().unwrap_or(1.05),
+        beta: req.get("beta").as_usize().unwrap_or(10),
+        unchanged_limit: req.get("unchanged").as_usize().unwrap_or(SERVE_UNCHANGED_LIMIT),
+        seed,
+        track_best_path: true,
+        ..SearchConfig::default()
+    };
+    let mut warm = state.warm.clone();
+    if let Some(enabled) = req.get("warm").as_bool() {
+        warm.enabled = enabled;
+    }
+    if let Some(nearest) = req.get("nearest").as_bool() {
+        warm.nearest = nearest;
+    }
+
+    let start = Instant::now();
+    let gfp = graph_fingerprint(&graph).map_err(|e| anyhow!("unfingerprintable graph: {e}"))?;
+    let gfp_hex = gfp.hex();
+    let env = env_fingerprint(&cluster, &device, estimator, &cfg);
+    let key = plan_key(gfp, env);
+    let key_hex = key.hex();
+    let sketch = GraphSketch::of(&graph);
+
+    loop {
+        // Fast path: serve from the store — no profiling, no simulation.
+        if let Some(resp) = try_store_hit(state, &key_hex, &gfp_hex, &graph, start) {
+            return Ok(resp);
+        }
+
+        // Coalesce: exactly one leader per in-flight key.
+        let follower_gate = {
+            let mut inflight = state.inflight.lock().unwrap();
+            match inflight.get(&key_hex) {
+                Some(gate) => Some(Arc::clone(gate)),
+                None => {
+                    inflight.insert(key_hex.clone(), Arc::new(Gate::default()));
+                    None
+                }
+            }
+        };
+        if let Some(gate) = follower_gate {
+            state.coalesced.fetch_add(1, Ordering::Relaxed);
+            gate.wait();
+            continue; // leader published (or failed) — re-resolve
+        }
+
+        let gate = Arc::clone(state.inflight.lock().unwrap().get(&key_hex).expect("own gate"));
+        let _guard = InflightGuard { state, key: key_hex.clone(), gate };
+
+        // Double-check: a previous leader may have published between our
+        // store miss and winning leadership.
+        if let Some(resp) = try_store_hit(state, &key_hex, &gfp_hex, &graph, start) {
+            return Ok(resp);
+        }
+        let seeds = {
+            let store = state.store.lock().unwrap();
+            seeds_from_store(&store, &key_hex, &gfp_hex, &sketch, &warm)
+        };
+
+        // Leader search — outside every lock, so distinct keys plan
+        // concurrently.
+        let profile = profiler::profile(&graph, &device, &cluster, 3, cfg.seed);
+        let est = match estimator {
+            "analytical" => CostEstimator::analytical(&profile, &cluster),
+            _ => CostEstimator::oracle(&profile, &device),
+        };
+        let r = backtracking_search_seeded(&graph, &est, &cfg, &seeds);
+        state.searches.fetch_add(1, Ordering::Relaxed);
+        if r.warm_hits > 0 {
+            state.warm_starts.fetch_add(1, Ordering::Relaxed);
+        }
+        let rec = record_from(&key, &gfp, &graph, sketch.clone(), &r);
+        state.store.lock().unwrap().put(rec)?;
+        // `_guard` drops here: inflight entry removed AFTER the record is
+        // in the store, so followers always resolve to a hit.
+        let source = if r.warm_hits > 0 { PlanSource::Warm } else { PlanSource::Cold };
+        return Ok(plan_json(
+            &key_hex,
+            &gfp_hex,
+            source,
+            &r.best,
+            r.best_cost_ms,
+            r.initial_cost_ms,
+            r.evals,
+            r.warm_hits,
+            r.steps_saved,
+            start.elapsed().as_secs_f64() * 1e3,
+        ));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_json(
+    key: &str,
+    graph_fp: &str,
+    source: PlanSource,
+    best: &TrainingGraph,
+    best_cost_ms: f64,
+    initial_cost_ms: f64,
+    evals: u64,
+    warm_hits: u64,
+    steps_saved: u64,
+    elapsed_ms: f64,
+) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("key", Json::Str(key.to_string())),
+        ("graph_fp", Json::Str(graph_fp.to_string())),
+        ("source", Json::Str(source.name().to_string())),
+        ("best_cost_ms", Json::Num(best_cost_ms)),
+        ("initial_cost_ms", Json::Num(initial_cost_ms)),
+        ("evals", Json::Num(evals as f64)),
+        ("warm_hits", Json::Num(warm_hits as f64)),
+        ("steps_saved", Json::Num(steps_saved as f64)),
+        ("elapsed_ms", Json::Num(elapsed_ms)),
+        ("strategy", best.to_json_value()),
+    ])
+}

@@ -1,0 +1,494 @@
+//! Persistent, content-addressed plan store (DESIGN.md §11).
+//!
+//! One [`PlanRecord`] per (graph, environment) fingerprint, holding the
+//! winning [`Mutation`] sequence and its costs — the auto-tuning-record
+//! pattern: a strategy is an artifact keyed by the program, computed once
+//! and replayed thereafter. Storage is JSON-lines on disk (append-only
+//! via [`crate::util::json`], last write per key wins on load, corrupt or
+//! version-mismatched lines are skipped, the file is compacted when
+//! appends outgrow the live set) with a bounded in-memory LRU index, so a
+//! long-running `disco serve` process stays within a fixed footprint no
+//! matter how many distinct workloads pass through it.
+
+use super::fingerprint::GraphSketch;
+use crate::fusion::{FusionKind, Mutation};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// On-disk record layout version; bump on breaking changes. Loading skips
+/// records with any other version (they just get re-searched).
+pub const RECORD_VERSION: u64 = 1;
+
+/// When the JSONL file holds more than this many lines per live record,
+/// `put` rewrites it from the in-memory index (append-only compaction
+/// threshold).
+const COMPACT_FACTOR: usize = 4;
+
+fn mutation_json(m: &Mutation) -> Json {
+    match *m {
+        Mutation::FuseOps { pred, succ, kind } => Json::obj(vec![
+            ("t", Json::Str("ops".into())),
+            ("p", Json::Num(pred as f64)),
+            ("s", Json::Num(succ as f64)),
+            (
+                "k",
+                Json::Str(
+                    match kind {
+                        FusionKind::NonDuplicate => "nd",
+                        FusionKind::Duplicate => "d",
+                    }
+                    .into(),
+                ),
+            ),
+        ]),
+        Mutation::FuseAllReduce { a, b } => Json::obj(vec![
+            ("t", Json::Str("ar".into())),
+            ("a", Json::Num(a as f64)),
+            ("b", Json::Num(b as f64)),
+        ]),
+    }
+}
+
+fn mutation_from(j: &Json) -> Option<Mutation> {
+    match j.get("t").as_str()? {
+        "ops" => Some(Mutation::FuseOps {
+            pred: j.get("p").as_usize()?,
+            succ: j.get("s").as_usize()?,
+            kind: match j.get("k").as_str()? {
+                "nd" => FusionKind::NonDuplicate,
+                "d" => FusionKind::Duplicate,
+                _ => return None,
+            },
+        }),
+        "ar" => Some(Mutation::FuseAllReduce {
+            a: j.get("a").as_usize()?,
+            b: j.get("b").as_usize()?,
+        }),
+        _ => None,
+    }
+}
+
+/// One cached strategy: the plan (mutation sequence), its provenance and
+/// its search statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRecord {
+    /// Plan-store key: `plan_key(graph_fp, env_fp)` in hex.
+    pub key: String,
+    /// Canonical graph-only fingerprint in hex (warm-start lookup across
+    /// environments).
+    pub graph_fp: String,
+    /// The id-*sensitive*, FNV-stable
+    /// [`super::fingerprint::arena_fingerprint`] of the exact input
+    /// arena the mutations were recorded against. Exact replay (the
+    /// zero-simulation cache-hit path) requires this to match; an
+    /// isomorphic-but-relabeled graph falls back to warm-starting
+    /// instead.
+    pub arena_fp: u64,
+    /// Graph name at record time — informational only.
+    pub model: String,
+    pub sketch: GraphSketch,
+    /// The winning mutation sequence, replayable on the recorded graph.
+    pub muts: Vec<Mutation>,
+    pub best_cost_ms: f64,
+    pub initial_cost_ms: f64,
+    pub evals: u64,
+    pub steps: u64,
+    pub elapsed_ms: f64,
+}
+
+impl PlanRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::Num(RECORD_VERSION as f64)),
+            ("key", Json::Str(self.key.clone())),
+            ("graph_fp", Json::Str(self.graph_fp.clone())),
+            // u64 doesn't fit f64 exactly; store as hex text.
+            ("arena_fp", Json::Str(format!("{:016x}", self.arena_fp))),
+            ("model", Json::Str(self.model.clone())),
+            ("sketch", self.sketch.to_json()),
+            ("muts", Json::Arr(self.muts.iter().map(mutation_json).collect())),
+            ("best_ms", Json::Num(self.best_cost_ms)),
+            ("initial_ms", Json::Num(self.initial_cost_ms)),
+            ("evals", Json::Num(self.evals as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("elapsed_ms", Json::Num(self.elapsed_ms)),
+        ])
+    }
+
+    /// Parse one record; `None` for any malformed or version-mismatched
+    /// value (the loader's skip-don't-fail contract).
+    pub fn from_json(j: &Json) -> Option<PlanRecord> {
+        if j.get("v").as_usize()? as u64 != RECORD_VERSION {
+            return None;
+        }
+        Some(PlanRecord {
+            key: j.get("key").as_str()?.to_string(),
+            graph_fp: j.get("graph_fp").as_str()?.to_string(),
+            arena_fp: u64::from_str_radix(j.get("arena_fp").as_str()?, 16).ok()?,
+            model: j.get("model").as_str()?.to_string(),
+            sketch: GraphSketch::from_json(j.get("sketch"))?,
+            muts: j
+                .get("muts")
+                .as_arr()?
+                .iter()
+                .map(mutation_from)
+                .collect::<Option<Vec<Mutation>>>()?,
+            best_cost_ms: j.get("best_ms").as_f64()?,
+            initial_cost_ms: j.get("initial_ms").as_f64()?,
+            evals: j.get("evals").as_usize()? as u64,
+            steps: j.get("steps").as_usize()? as u64,
+            elapsed_ms: j.get("elapsed_ms").as_f64()?,
+        })
+    }
+}
+
+/// Bounded plan cache: in-memory LRU index over an append-only JSONL file
+/// (or memory-only when opened without a path).
+#[derive(Debug)]
+pub struct PlanStore {
+    path: Option<PathBuf>,
+    capacity: usize,
+    map: HashMap<String, PlanRecord>,
+    /// Last-access stamp per live key (monotonic `clock` values): O(1)
+    /// recency bumps on every get/put; the O(capacity) scan for the
+    /// minimum happens only when evicting, which is rare relative to
+    /// lookups.
+    recency: HashMap<String, u64>,
+    clock: u64,
+    /// Lines currently on disk (appends since the last compaction plus
+    /// the loaded base) — drives the compaction heuristic.
+    disk_lines: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Lines skipped at load time (corrupt / old version).
+    pub skipped: u64,
+}
+
+impl PlanStore {
+    /// Memory-only store (tests, `--store none`).
+    pub fn in_memory(capacity: usize) -> PlanStore {
+        PlanStore {
+            path: None,
+            capacity: capacity.max(1),
+            map: HashMap::new(),
+            recency: HashMap::new(),
+            clock: 0,
+            disk_lines: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Open (creating if absent) a JSONL-backed store. Later lines win on
+    /// duplicate keys; unreadable lines are counted in `skipped` and
+    /// dropped; anything beyond `capacity` is evicted oldest-first.
+    pub fn open(path: &Path, capacity: usize) -> Result<PlanStore> {
+        let mut store = PlanStore::in_memory(capacity);
+        store.path = Some(path.to_path_buf());
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading plan store {}", path.display()))?;
+            let mut lines = 0usize;
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                lines += 1;
+                match Json::parse(line).ok().and_then(|j| PlanRecord::from_json(&j)) {
+                    Some(rec) => store.index(rec),
+                    None => store.skipped += 1,
+                }
+            }
+            store.disk_lines = lines;
+            // Reclaim the file when load dropped duplicates, corrupt
+            // lines or over-capacity records.
+            if lines != store.map.len() {
+                store.compact()?;
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    fn touch(&mut self, key: &str) {
+        self.clock += 1;
+        self.recency.insert(key.to_string(), self.clock);
+    }
+
+    /// Insert into the index (no disk IO), evicting LRU overflow.
+    fn index(&mut self, rec: PlanRecord) {
+        let key = rec.key.clone();
+        self.map.insert(key.clone(), rec);
+        self.touch(&key);
+        while self.map.len() > self.capacity {
+            let oldest = self
+                .recency
+                .iter()
+                .min_by_key(|&(_, &stamp)| stamp)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                    self.recency.remove(&k);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Cache lookup; bumps LRU recency and the hit/miss counters.
+    pub fn get(&mut self, key: &str) -> Option<&PlanRecord> {
+        if self.map.contains_key(key) {
+            self.hits += 1;
+            self.touch(key);
+            self.map.get(key)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Lookup without touching recency or counters.
+    pub fn peek(&self, key: &str) -> Option<&PlanRecord> {
+        self.map.get(key)
+    }
+
+    /// Insert (or overwrite) a record and persist it.
+    pub fn put(&mut self, rec: PlanRecord) -> Result<()> {
+        let line = rec.to_json().to_string();
+        self.index(rec);
+        if let Some(path) = self.path.clone() {
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("appending to plan store {}", path.display()))?;
+            writeln!(f, "{line}")?;
+            self.disk_lines += 1;
+            if self.disk_lines > COMPACT_FACTOR * self.map.len().max(4) {
+                self.compact()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rewrite the backing file to exactly the live records, LRU order
+    /// (so a future load reconstructs the same recency).
+    pub fn compact(&mut self) -> Result<()> {
+        let Some(path) = self.path.clone() else { return Ok(()) };
+        let mut keys: Vec<&String> = self.map.keys().collect();
+        keys.sort_by_key(|k| self.recency.get(*k).copied().unwrap_or(0));
+        let mut out = String::new();
+        for key in keys {
+            if let Some(rec) = self.map.get(key) {
+                out.push_str(&rec.to_json().to_string());
+                out.push('\n');
+            }
+        }
+        std::fs::write(&path, out)
+            .with_context(|| format!("compacting plan store {}", path.display()))?;
+        self.disk_lines = self.map.len();
+        Ok(())
+    }
+
+    /// All records for one canonical graph fingerprint (any environment),
+    /// in deterministic key order — warm-start seed candidates.
+    pub fn by_graph_fp(&self, graph_fp: &str) -> Vec<&PlanRecord> {
+        let mut out: Vec<&PlanRecord> =
+            self.map.values().filter(|r| r.graph_fp == graph_fp).collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// The record whose sketch is nearest to `sketch` (ties broken by
+    /// key for determinism), excluding `exclude_key`, within
+    /// `max_distance`.
+    pub fn nearest(
+        &self,
+        sketch: &GraphSketch,
+        exclude_key: &str,
+        max_distance: f64,
+    ) -> Option<&PlanRecord> {
+        self.map
+            .values()
+            .filter(|r| r.key != exclude_key)
+            .map(|r| (r.sketch.distance(sketch), r))
+            .filter(|(d, _)| *d <= max_distance)
+            .min_by(|(da, a), (db, b)| {
+                da.partial_cmp(db)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| a.key.cmp(&b.key))
+            })
+            .map(|(_, r)| r)
+    }
+}
+
+/// Convenience for CLI/config plumbing: `None`/`"none"` → memory-only.
+pub fn open_store(path: Option<&str>, capacity: usize) -> Result<PlanStore> {
+    match path {
+        None => Ok(PlanStore::in_memory(capacity)),
+        Some("none") => Ok(PlanStore::in_memory(capacity)),
+        Some(p) if p.is_empty() => Err(anyhow!("empty plan-store path")),
+        Some(p) => PlanStore::open(Path::new(p), capacity),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(key: &str, gfp: &str, cost: f64) -> PlanRecord {
+        PlanRecord {
+            key: key.to_string(),
+            graph_fp: gfp.to_string(),
+            arena_fp: 0xABCD,
+            model: "m".into(),
+            sketch: GraphSketch {
+                kind_counts: vec![1, 2, 0],
+                live: 3,
+                allreduces: 1,
+                num_workers: 4,
+                total_flops: cost * 10.0,
+                grad_bytes: 64.0,
+            },
+            muts: vec![
+                Mutation::FuseOps { pred: 1, succ: 2, kind: FusionKind::NonDuplicate },
+                Mutation::FuseAllReduce { a: 4, b: 5 },
+            ],
+            best_cost_ms: cost,
+            initial_cost_ms: cost * 2.0,
+            evals: 10,
+            steps: 5,
+            elapsed_ms: 1.5,
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = record("k1", "g1", 3.25);
+        let j = r.to_json().to_string();
+        let r2 = PlanRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn version_mismatch_is_skipped() {
+        let mut j = record("k1", "g1", 1.0).to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".into(), Json::Num((RECORD_VERSION + 1) as f64));
+        }
+        assert!(PlanRecord::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut s = PlanStore::in_memory(2);
+        s.put(record("a", "g", 1.0)).unwrap();
+        s.put(record("b", "g", 2.0)).unwrap();
+        assert!(s.get("a").is_some()); // bump a → b is now LRU
+        s.put(record("c", "g", 3.0)).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.peek("b").is_none(), "b should have been evicted");
+        assert!(s.peek("a").is_some() && s.peek("c").is_some());
+        assert_eq!(s.evictions, 1);
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert!(s.get("zz").is_none());
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn nearest_picks_minimal_distance_deterministically() {
+        let mut s = PlanStore::in_memory(8);
+        let mut far = record("far", "g1", 1.0);
+        far.sketch.total_flops = 1e12;
+        far.sketch.allreduces = 9;
+        s.put(far).unwrap();
+        s.put(record("near", "g2", 1.0)).unwrap();
+        let probe = record("probe", "g3", 1.0).sketch;
+        let n = s.nearest(&probe, "none", f64::INFINITY).unwrap();
+        assert_eq!(n.key, "near");
+        // Excluding the winner falls back to the next one.
+        let n2 = s.nearest(&probe, "near", f64::INFINITY).unwrap();
+        assert_eq!(n2.key, "far");
+        // A tight radius excludes everything.
+        assert!(s.nearest(&probe, "none", -1.0).is_none());
+    }
+
+    #[test]
+    fn by_graph_fp_sorted() {
+        let mut s = PlanStore::in_memory(8);
+        s.put(record("b", "g1", 1.0)).unwrap();
+        s.put(record("a", "g1", 1.0)).unwrap();
+        s.put(record("c", "g2", 1.0)).unwrap();
+        let got: Vec<&str> = s.by_graph_fp("g1").iter().map(|r| r.key.as_str()).collect();
+        assert_eq!(got, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn persistence_last_write_wins_and_corrupt_lines_skipped() {
+        let dir = std::env::temp_dir().join(format!("disco-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = PlanStore::open(&path, 8).unwrap();
+            s.put(record("a", "g", 1.0)).unwrap();
+            s.put(record("b", "g", 2.0)).unwrap();
+            s.put(record("a", "g", 9.0)).unwrap(); // overwrite
+        }
+        // Corrupt trailing line must not poison the load.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{ not json").unwrap();
+        }
+        let s = PlanStore::open(&path, 8).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.peek("a").unwrap().best_cost_ms, 9.0);
+        assert_eq!(s.skipped, 1);
+        // Load compacted away the duplicate and the corrupt line.
+        let reread = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(reread.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reopen_respects_capacity() {
+        let dir = std::env::temp_dir().join(format!("disco-store-cap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = PlanStore::open(&path, 8).unwrap();
+            for i in 0..6 {
+                s.put(record(&format!("k{i}"), "g", i as f64)).unwrap();
+            }
+        }
+        let s = PlanStore::open(&path, 3).unwrap();
+        assert_eq!(s.len(), 3);
+        // Oldest-first eviction: the newest three survive.
+        assert!(s.peek("k5").is_some() && s.peek("k4").is_some() && s.peek("k3").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+}

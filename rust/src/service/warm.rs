@@ -1,0 +1,350 @@
+//! Plan resolution: store hit → warm-started search → cold search
+//! (DESIGN.md §11).
+//!
+//! Three outcomes, in strictly decreasing cheapness:
+//!
+//! 1. **Store hit** — the plan key (canonical graph fingerprint ⊕
+//!    environment fingerprint) is cached *and* the record's id-sensitive
+//!    arena fingerprint matches, so the recorded mutation sequence
+//!    replays exactly. The strategy is reproduced with **zero simulator
+//!    invocations** — no profiling, no cost estimation, no scheduling.
+//! 2. **Warm start** — no exact record, but the store holds plans for
+//!    the same canonical graph under other environments, or for the
+//!    nearest-sketch graph. Their mutation sequences seed
+//!    [`backtracking_search_seeded`], which replays whatever still
+//!    applies and keeps searching from there
+//!    ([`crate::search::SearchResult::steps_saved`] counts the replayed
+//!    rewrites).
+//! 3. **Cold** — nothing usable cached; ordinary search. Either way the
+//!    result is recorded, so the next identical request is outcome 1.
+
+use super::fingerprint::{
+    arena_fingerprint, graph_fingerprint, plan_key, Fingerprint, GraphSketch,
+};
+use super::store::{PlanRecord, PlanStore};
+use crate::fusion::Mutation;
+use crate::graph::TrainingGraph;
+use crate::search::{backtracking_search_seeded, SearchConfig, SearchResult};
+use crate::sim::CostSource;
+use anyhow::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// Warm-start policy knobs (config-file section `service`).
+#[derive(Debug, Clone)]
+pub struct WarmOptions {
+    /// Master switch: when false, misses go straight to a cold search.
+    pub enabled: bool,
+    /// Also consider the nearest-sketch plan of a *different* graph.
+    pub nearest: bool,
+    /// Maximum number of cached plans used as seeds.
+    pub max_seeds: usize,
+    /// Sketch-distance radius beyond which a nearest plan is ignored
+    /// (seeding from a wildly different workload is wasted replay work).
+    pub max_distance: f64,
+}
+
+impl Default for WarmOptions {
+    fn default() -> Self {
+        WarmOptions { enabled: true, nearest: true, max_seeds: 2, max_distance: 256.0 }
+    }
+}
+
+/// Where a served plan came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Exact record replayed; zero simulator invocations.
+    Store,
+    /// Searched, seeded by at least one cached plan.
+    Warm,
+    /// Searched from scratch.
+    Cold,
+}
+
+impl PlanSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanSource::Store => "store",
+            PlanSource::Warm => "warm",
+            PlanSource::Cold => "cold",
+        }
+    }
+}
+
+/// A resolved plan, however it was obtained.
+#[derive(Debug)]
+pub struct PlanOutcome {
+    /// Plan-store key (hex).
+    pub key: String,
+    /// Canonical graph fingerprint (hex).
+    pub graph_fp: String,
+    pub source: PlanSource,
+    /// The optimized module.
+    pub best: TrainingGraph,
+    pub best_cost_ms: f64,
+    pub initial_cost_ms: f64,
+    /// Candidate evaluations performed serving this request (0 on a
+    /// store hit — the acceptance criterion's "zero simulator
+    /// invocations" is observable here and asserted with a panicking
+    /// cost source in the tests).
+    pub evals: u64,
+    pub steps: u64,
+    pub warm_hits: u64,
+    pub steps_saved: u64,
+    pub elapsed: Duration,
+}
+
+/// Replay a cached record onto `graph` if and only if it was recorded
+/// against this exact arena (stable id-sensitive
+/// [`arena_fingerprint`]) and every mutation re-applies onto a valid
+/// module. `None` means "treat as a miss".
+pub fn try_replay_hit(rec: &PlanRecord, graph: &TrainingGraph) -> Option<TrainingGraph> {
+    if rec.arena_fp != arena_fingerprint(graph) {
+        return None;
+    }
+    let mut g = graph.clone();
+    for m in &rec.muts {
+        m.replay(&mut g).ok()?;
+    }
+    g.validate().ok()?;
+    Some(g)
+}
+
+/// Collect warm-start seeds for a missed key: plans of the same canonical
+/// graph under other environments first (their rewrites are known-legal
+/// on an identical structure), then the nearest-sketch plan. Deduped,
+/// capped at `warm.max_seeds`, deterministic order.
+pub fn seeds_from_store(
+    store: &PlanStore,
+    key: &str,
+    graph_fp: &str,
+    sketch: &GraphSketch,
+    warm: &WarmOptions,
+) -> Vec<Vec<Mutation>> {
+    if !warm.enabled {
+        return Vec::new();
+    }
+    let mut seen_keys: Vec<&str> = vec![key];
+    let mut seeds: Vec<Vec<Mutation>> = Vec::new();
+    for rec in store.by_graph_fp(graph_fp) {
+        if seeds.len() >= warm.max_seeds {
+            return seeds;
+        }
+        if rec.muts.is_empty() || seen_keys.contains(&rec.key.as_str()) {
+            continue;
+        }
+        seen_keys.push(&rec.key);
+        seeds.push(rec.muts.clone());
+    }
+    if warm.nearest && seeds.len() < warm.max_seeds {
+        if let Some(rec) = store.nearest(sketch, key, warm.max_distance) {
+            if !rec.muts.is_empty() && !seen_keys.contains(&rec.key.as_str()) {
+                seeds.push(rec.muts.clone());
+            }
+        }
+    }
+    seeds
+}
+
+/// Build the persistent record for a finished search.
+pub fn record_from(
+    key: &Fingerprint,
+    graph_fp: &Fingerprint,
+    graph: &TrainingGraph,
+    sketch: GraphSketch,
+    r: &SearchResult,
+) -> PlanRecord {
+    PlanRecord {
+        key: key.hex(),
+        graph_fp: graph_fp.hex(),
+        arena_fp: arena_fingerprint(graph),
+        model: graph.name.clone(),
+        sketch,
+        muts: r.best_path.clone(),
+        best_cost_ms: r.best_cost_ms,
+        initial_cost_ms: r.initial_cost_ms,
+        evals: r.evals,
+        steps: r.steps,
+        elapsed_ms: r.elapsed.as_secs_f64() * 1e3,
+    }
+}
+
+/// Resolve a plan for `graph` through the store: hit → warm → cold, then
+/// record. Single-threaded convenience used by `disco plan` local mode
+/// and the tests; the server composes the same helpers around its own
+/// locking and request coalescing.
+///
+/// `env_fp` must come from [`super::fingerprint::env_fingerprint`] over
+/// the same estimator/cluster/config the caller passes here — the store
+/// key is only as honest as that pairing.
+pub fn plan_with_store(
+    graph: &TrainingGraph,
+    costs: &(dyn CostSource + Sync),
+    cfg: &SearchConfig,
+    env_fp: Fingerprint,
+    store: &mut PlanStore,
+    warm: &WarmOptions,
+) -> Result<PlanOutcome> {
+    let start = Instant::now();
+    let gfp = graph_fingerprint(graph).map_err(|e| anyhow!("unfingerprintable graph: {e}"))?;
+    let key = plan_key(gfp, env_fp);
+    let key_hex = key.hex();
+
+    if let Some(rec) = store.get(&key_hex) {
+        if let Some(best) = try_replay_hit(rec, graph) {
+            return Ok(PlanOutcome {
+                key: key_hex,
+                graph_fp: gfp.hex(),
+                source: PlanSource::Store,
+                best,
+                best_cost_ms: rec.best_cost_ms,
+                initial_cost_ms: rec.initial_cost_ms,
+                evals: 0,
+                steps: 0,
+                warm_hits: 0,
+                steps_saved: 0,
+                elapsed: start.elapsed(),
+            });
+        }
+    }
+
+    let sketch = GraphSketch::of(graph);
+    let seeds = seeds_from_store(store, &key_hex, &gfp.hex(), &sketch, warm);
+    let cfg = SearchConfig { track_best_path: true, ..cfg.clone() };
+    let r = backtracking_search_seeded(graph, costs, &cfg, &seeds);
+    store.put(record_from(&key, &gfp, graph, sketch, &r))?;
+    Ok(PlanOutcome {
+        key: key_hex,
+        graph_fp: gfp.hex(),
+        source: if r.warm_hits > 0 { PlanSource::Warm } else { PlanSource::Cold },
+        best: r.best,
+        best_cost_ms: r.best_cost_ms,
+        initial_cost_ms: r.initial_cost_ms,
+        evals: r.evals,
+        steps: r.steps,
+        warm_hits: r.warm_hits,
+        steps_saved: r.steps_saved,
+        elapsed: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceModel;
+    use crate::estimator::CostEstimator;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::{OpKind, Role};
+    use crate::network::Cluster;
+    use crate::profiler;
+    use crate::service::fingerprint::env_fingerprint;
+
+    fn workload() -> TrainingGraph {
+        let mut b = GraphBuilder::new("warm-wl", 12);
+        let x = b.constant("x", &[1 << 16]);
+        let mut prev = x;
+        for i in 0..5 {
+            let m = b.compute(OpKind::Mul, &format!("m{i}"), &[prev], &[1 << 16], Role::Forward);
+            let t = b.compute(OpKind::Tanh, &format!("t{i}"), &[m], &[1 << 16], Role::Forward);
+            prev = t;
+        }
+        let mut grad = prev;
+        for i in 0..5 {
+            let gop =
+                b.compute(OpKind::Mul, &format!("bg{i}"), &[grad], &[1 << 12], Role::Backward);
+            let p = b.param(&format!("w{i}"), &[1 << 12]);
+            let ar = b.allreduce(&format!("ar{i}"), gop, &[1 << 12]);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+            grad = gop;
+        }
+        b.finish()
+    }
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { unchanged_limit: 50, max_queue: 64, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = quick_cfg();
+        let env = env_fingerprint(&c, &d, "oracle", &cfg);
+        let mut store = PlanStore::in_memory(8);
+        let warm = WarmOptions::default();
+        let first = plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap();
+        assert_eq!(first.source, PlanSource::Cold);
+        assert!(first.evals > 0);
+        let second = plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap();
+        assert_eq!(second.source, PlanSource::Store);
+        assert_eq!(second.evals, 0);
+        assert_eq!(second.best_cost_ms, first.best_cost_ms);
+        assert_eq!(second.best.fingerprint(), first.best.fingerprint());
+        assert!(second.best.validate().is_ok());
+    }
+
+    #[test]
+    fn env_change_is_a_miss() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = quick_cfg();
+        let mut store = PlanStore::in_memory(8);
+        let warm = WarmOptions::default();
+        let env_a = env_fingerprint(&c, &d, "oracle", &cfg);
+        let _ = plan_with_store(&g, &est, &cfg, env_a, &mut store, &warm).unwrap();
+        // Same graph, different seed → different env key → not a store
+        // hit, but warm-started from the sibling plan.
+        let cfg2 = SearchConfig { seed: 11, ..quick_cfg() };
+        let env_b = env_fingerprint(&c, &d, "oracle", &cfg2);
+        let out = plan_with_store(&g, &est, &cfg2, env_b, &mut store, &warm).unwrap();
+        assert_eq!(out.source, PlanSource::Warm);
+        assert!(out.warm_hits > 0);
+        assert!(out.steps_saved > 0);
+    }
+
+    #[test]
+    fn replay_hit_rejects_relabeled_arena() {
+        let g = workload();
+        let rec = PlanRecord {
+            key: "k".into(),
+            graph_fp: "g".into(),
+            arena_fp: arena_fingerprint(&g) ^ 1, // wrong arena
+            model: g.name.clone(),
+            sketch: GraphSketch::of(&g),
+            muts: Vec::new(),
+            best_cost_ms: 1.0,
+            initial_cost_ms: 2.0,
+            evals: 1,
+            steps: 1,
+            elapsed_ms: 0.1,
+        };
+        assert!(try_replay_hit(&rec, &g).is_none());
+        let rec2 = PlanRecord { arena_fp: arena_fingerprint(&g), ..rec };
+        // Empty plan replays to the input itself.
+        assert_eq!(try_replay_hit(&rec2, &g).unwrap().fingerprint(), g.fingerprint());
+    }
+
+    #[test]
+    fn disabled_warm_start_stays_cold() {
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let cfg = quick_cfg();
+        let mut store = PlanStore::in_memory(8);
+        let warm_off = WarmOptions { enabled: false, ..WarmOptions::default() };
+        let env_a = env_fingerprint(&c, &d, "oracle", &cfg);
+        let _ = plan_with_store(&g, &est, &cfg, env_a, &mut store, &warm_off).unwrap();
+        let cfg2 = SearchConfig { seed: 11, ..quick_cfg() };
+        let env_b = env_fingerprint(&c, &d, "oracle", &cfg2);
+        let out = plan_with_store(&g, &est, &cfg2, env_b, &mut store, &warm_off).unwrap();
+        assert_eq!(out.source, PlanSource::Cold);
+        assert_eq!(out.steps_saved, 0);
+    }
+}

@@ -8,15 +8,22 @@
 //!   "device":  {"preset": "tesla_t4", "peak_tflops": 8.1,
 //!                "mem_gbps": 300, "onchip_mb": 4},
 //!   "search":  {"alpha": 1.05, "beta": 10, "unchanged_limit": 1000,
-//!                "seed": 7}
+//!                "seed": 7},
+//!   "service": {"addr": "127.0.0.1:7077", "store_path": "plans.jsonl",
+//!                "capacity": 512, "warm_start": true, "nearest": true}
 //! }
 //! ```
 //!
-//! Every field is optional; omitted ones keep the preset/default.
+//! Every field is optional; omitted ones keep the preset/default. The
+//! `service` section configures `disco serve`'s plan store (DESIGN.md
+//! §11): `store_path` (JSONL file; the string `"none"` = memory-only),
+//! `capacity` (LRU bound on cached plans) and the `warm_start`/`nearest`
+//! toggles.
 
 use crate::device::DeviceModel;
 use crate::network::Cluster;
 use crate::search::SearchConfig;
+use crate::service::ServiceConfig;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -26,6 +33,7 @@ pub struct Config {
     pub cluster: Cluster,
     pub device: DeviceModel,
     pub search: SearchConfig,
+    pub service: ServiceConfig,
 }
 
 impl Default for Config {
@@ -34,6 +42,7 @@ impl Default for Config {
             cluster: Cluster::cluster_a(),
             device: DeviceModel::gtx1080ti(),
             search: SearchConfig::default(),
+            service: ServiceConfig::default(),
         }
     }
 }
@@ -139,6 +148,31 @@ impl Config {
             if let Some(ce) = s.get("ckpt_every").as_usize() {
                 cfg.search.ckpt_every = ce;
             }
+            if let Some(t) = s.get("track_best_path").as_bool() {
+                cfg.search.track_best_path = t;
+            }
+        }
+
+        let v = j.get("service");
+        if *v != Json::Null {
+            if let Some(a) = v.get("addr").as_str() {
+                cfg.service.addr = a.to_string();
+            }
+            match v.get("store_path") {
+                Json::Null => {}
+                Json::Str(p) if p == "none" => cfg.service.store_path = None,
+                Json::Str(p) => cfg.service.store_path = Some(p.clone()),
+                other => return Err(anyhow!("service.store_path must be a string, got {other:?}")),
+            }
+            if let Some(c) = v.get("capacity").as_usize() {
+                cfg.service.capacity = c;
+            }
+            if let Some(w) = v.get("warm_start").as_bool() {
+                cfg.service.warm_start = w;
+            }
+            if let Some(n) = v.get("nearest").as_bool() {
+                cfg.service.nearest = n;
+            }
         }
         Ok(cfg)
     }
@@ -188,6 +222,29 @@ mod tests {
         // Defaults are the fast engine.
         let d = Config::from_json_str("{}").unwrap();
         assert!(d.search.delta_candidates && d.search.reuse_workspaces);
+    }
+
+    #[test]
+    fn service_section_applies() {
+        let c = Config::from_json_str(
+            r#"{"service": {"addr": "0.0.0.0:9000", "store_path": "cache/plans.jsonl",
+                 "capacity": 64, "warm_start": false, "nearest": false},
+                "search": {"track_best_path": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.service.addr, "0.0.0.0:9000");
+        assert_eq!(c.service.store_path.as_deref(), Some("cache/plans.jsonl"));
+        assert_eq!(c.service.capacity, 64);
+        assert!(!c.service.warm_start && !c.service.nearest);
+        assert!(c.search.track_best_path);
+        // Memory-only spelling.
+        let m = Config::from_json_str(r#"{"service": {"store_path": "none"}}"#).unwrap();
+        assert_eq!(m.service.store_path, None);
+        // Defaults.
+        let d = Config::from_json_str("{}").unwrap();
+        assert!(d.service.warm_start && d.service.nearest);
+        assert_eq!(d.service.capacity, 512);
+        assert!(!d.search.track_best_path);
     }
 
     #[test]

@@ -529,3 +529,71 @@ fn prop_coordinator_consistent_broadcast() {
         }
     });
 }
+
+#[test]
+fn prop_serial_roundtrip_lossless() {
+    // JSON (de)serialization must preserve EVERYTHING the strategy
+    // service's canonical fingerprint hashes — shapes, dtypes, flops,
+    // byte traffic, fused-group contents, tombstones and duplicate
+    // operand edges — across arbitrary post-fusion graph states.
+    check("serial-roundtrip", PropConfig { cases: 48, seed: 0x5E41A1 }, |rng| {
+        let mut g = random_graph(rng);
+        random_rewrites(&mut g, rng, rng.gen_range_inclusive(0, 8));
+        let text = g.to_json();
+        let back = match TrainingGraph::from_json(&text) {
+            Ok(b) => b,
+            Err(e) => return CaseResult::Fail(format!("reparse failed: {e}")),
+        };
+        prop_assert!(g == back, "round-trip not structurally identical");
+        prop_assert!(
+            g.fingerprint() == back.fingerprint(),
+            "arena fingerprint drifted across serialization"
+        );
+        let a = disco::service::graph_fingerprint(&g).unwrap();
+        let b = disco::service::graph_fingerprint(&back).unwrap();
+        prop_assert!(a == b, "canonical fingerprint drifted: {a} vs {b}");
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_track_best_path_is_pure_observation() {
+    // The service's path tracking must never steer the search, and the
+    // recorded path must replay the input into exactly the winner.
+    check("search-best-path", PropConfig { cases: 8, seed: 0xBE57 }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        let est = CostEstimator::oracle(&prof, &device);
+        let base = SearchConfig {
+            unchanged_limit: 30,
+            max_queue: 32,
+            seed: rng.next_u64(),
+            eval_threads: 1,
+            ..Default::default()
+        };
+        let off = backtracking_search(&g, &est, &base);
+        let on_cfg = SearchConfig { track_best_path: true, ..base };
+        let on = backtracking_search(&g, &est, &on_cfg);
+        prop_assert!(
+            off.best_cost_ms == on.best_cost_ms
+                && off.evals == on.evals
+                && off.steps == on.steps
+                && off.best.fingerprint() == on.best.fingerprint(),
+            "path tracking changed the trajectory"
+        );
+        prop_assert!(off.best_path.is_empty(), "path recorded while tracking off");
+        let mut replayed = g.clone();
+        for m in &on.best_path {
+            if let Err(e) = m.replay(&mut replayed) {
+                return CaseResult::Fail(format!("best_path replay failed: {e}"));
+            }
+        }
+        prop_assert!(
+            replayed.fingerprint() == on.best.fingerprint(),
+            "best_path does not reproduce the winner"
+        );
+        CaseResult::Pass
+    });
+}

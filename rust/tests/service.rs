@@ -1,0 +1,462 @@
+//! Strategy-service integration tests (DESIGN.md §11): canonical
+//! fingerprint properties, zero-simulation store hits, warm-start on
+//! perturbed graphs, and the `disco serve` TCP front-end with request
+//! coalescing. Everything here is deterministic per seed.
+
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::graph::builder::GraphBuilder;
+use disco::graph::{Node, OpKind, Role, TrainingGraph};
+use disco::network::Cluster;
+use disco::profiler;
+use disco::prop_assert;
+use disco::search::SearchConfig;
+use disco::service::{
+    env_fingerprint, graph_fingerprint, plan_with_store, request, PlanSource, PlanStore,
+    ServeOptions, Server, WarmOptions,
+};
+use disco::sim::CostSource;
+use disco::util::json::Json;
+use disco::util::prop::{check, CaseResult, PropConfig};
+use disco::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Shared workloads
+// ---------------------------------------------------------------------------
+
+/// Fusion-rich training workload; `extra` appends additional forward ops
+/// at the end of the arena, so the common prefix keeps identical node ids
+/// — a realistic "the model grew a little" perturbation.
+fn workload(extra: usize) -> TrainingGraph {
+    let mut b = GraphBuilder::new("svc-wl", 12);
+    let x = b.constant("x", &[1 << 16]);
+    let mut prev = x;
+    for i in 0..5 {
+        let m = b.compute(OpKind::Mul, &format!("m{i}"), &[prev], &[1 << 16], Role::Forward);
+        let t = b.compute(OpKind::Tanh, &format!("t{i}"), &[m], &[1 << 16], Role::Forward);
+        prev = t;
+    }
+    let mut grad = prev;
+    for i in 0..5 {
+        let gop = b.compute(OpKind::Mul, &format!("bg{i}"), &[grad], &[1 << 12], Role::Backward);
+        let p = b.param(&format!("w{i}"), &[1 << 12]);
+        let ar = b.allreduce(&format!("ar{i}"), gop, &[1 << 12]);
+        b.optimizer_update(&format!("u{i}"), &[ar, p]);
+        grad = gop;
+    }
+    let mut tail = prev;
+    for i in 0..extra {
+        tail = b.compute(OpKind::Sigmoid, &format!("x{i}"), &[tail], &[1 << 16], Role::Forward);
+    }
+    b.finish()
+}
+
+fn quick_cfg() -> SearchConfig {
+    SearchConfig { unchanged_limit: 50, max_queue: 64, seed: 7, ..Default::default() }
+}
+
+/// Random layered DAG (mirrors tests/properties.rs) for fingerprint
+/// properties.
+fn random_graph(rng: &mut Rng) -> TrainingGraph {
+    let layers = rng.gen_range_inclusive(2, 5);
+    let width = rng.gen_range_inclusive(1, 4);
+    let mut b = GraphBuilder::new("fp-prop", rng.gen_range_inclusive(2, 16));
+    let mut prev: Vec<usize> = vec![b.constant("x", &[256])];
+    let kinds =
+        [OpKind::Mul, OpKind::Add, OpKind::Tanh, OpKind::Sigmoid, OpKind::MatMul, OpKind::Reduce];
+    for l in 0..layers {
+        let mut cur = Vec::new();
+        for w in 0..width {
+            let k = *rng.choose(&kinds).unwrap();
+            let mut ins = vec![prev[rng.gen_range(prev.len())]];
+            if rng.gen_bool(0.4) {
+                ins.push(prev[rng.gen_range(prev.len())]); // duplicates allowed
+            }
+            let dims = [256usize >> rng.gen_range(3)];
+            let role = if l >= layers / 2 { Role::Backward } else { Role::Forward };
+            cur.push(b.compute(k, &format!("l{l}w{w}"), &ins, &dims, role));
+        }
+        prev = cur;
+    }
+    let bwd: Vec<usize> = b
+        .graph()
+        .live()
+        .filter(|n| n.role == Role::Backward)
+        .map(|n| n.id)
+        .collect();
+    for (i, &id) in bwd.iter().enumerate() {
+        if rng.gen_bool(0.6) {
+            let dims: Vec<usize> = b.graph().nodes[id].shape.dims.clone();
+            let p = b.param(&format!("w{i}"), &dims);
+            let ar = b.allreduce(&format!("ar{i}"), id, &dims);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+        }
+    }
+    b.finish()
+}
+
+/// Isomorphic copy of `g` under a random arena permutation — same graph,
+/// different node ids and arena order.
+fn relabel(g: &TrainingGraph, rng: &mut Rng) -> TrainingGraph {
+    let n = g.nodes.len();
+    let mut perm: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.gen_range(i + 1);
+        perm.swap(i, j);
+    }
+    let mut nodes: Vec<Option<Node>> = vec![None; n];
+    for (old, node) in g.nodes.iter().enumerate() {
+        let mut m = node.clone();
+        m.id = perm[old];
+        m.inputs = node.inputs.iter().map(|&i| perm[i]).collect();
+        m.orig_inputs = node.orig_inputs.iter().map(|&i| perm[i]).collect();
+        m.ar_constituents = node.ar_constituents.iter().map(|&i| perm[i]).collect();
+        if let Some(grp) = &mut m.fused {
+            for o in &mut grp.ops {
+                o.orig_id = perm[o.orig_id];
+            }
+        }
+        nodes[perm[old]] = Some(m);
+    }
+    TrainingGraph::from_parts(
+        g.name.clone(),
+        nodes.into_iter().map(|n| n.unwrap()).collect(),
+        g.num_workers,
+    )
+}
+
+/// A cost source that fails the test if the simulator consults it — the
+/// store-hit path must involve zero simulator invocations.
+struct PanicCost;
+
+impl CostSource for PanicCost {
+    fn compute_time_ms(&self, node: &Node) -> f64 {
+        panic!("store-hit path invoked the simulator for node {}", node.id);
+    }
+
+    fn comm_time_ms(&self, bytes: f64) -> f64 {
+        panic!("store-hit path priced an AllReduce of {bytes} bytes");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprint properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fingerprint_invariant_under_relabeling() {
+    check("fp-relabel-invariant", PropConfig { cases: 64, seed: 0xF1A7 }, |rng| {
+        let g = random_graph(rng);
+        let h = relabel(&g, rng);
+        prop_assert!(h.validate().is_ok(), "relabeled graph invalid");
+        let a = graph_fingerprint(&g).unwrap();
+        let b = graph_fingerprint(&h).unwrap();
+        prop_assert!(a == b, "relabeling changed fingerprint: {a} vs {b}");
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_fingerprint_sensitive_to_semantic_edits() {
+    check("fp-sensitive", PropConfig { cases: 64, seed: 0xF1A8 }, |rng| {
+        let g = random_graph(rng);
+        let base = graph_fingerprint(&g).unwrap();
+        // Pick a random live compute node and perturb one feature.
+        let targets: Vec<usize> = g
+            .live()
+            .filter(|n| n.kind.is_fusible_compute() && !n.shape.dims.is_empty())
+            .map(|n| n.id)
+            .collect();
+        let Some(&id) = rng.choose(&targets) else {
+            return CaseResult::Discard;
+        };
+        let mut shape = g.clone();
+        shape.nodes[id].shape.dims[0] += 1;
+        prop_assert!(
+            graph_fingerprint(&shape).unwrap() != base,
+            "shape edit on node {id} not detected"
+        );
+        let mut flops = g.clone();
+        flops.nodes[id].flops += 1.0;
+        prop_assert!(
+            graph_fingerprint(&flops).unwrap() != base,
+            "flops edit on node {id} not detected"
+        );
+        let mut kind = g.clone();
+        kind.nodes[id].kind =
+            if kind.nodes[id].kind == OpKind::Gelu { OpKind::Relu } else { OpKind::Gelu };
+        prop_assert!(
+            graph_fingerprint(&kind).unwrap() != base,
+            "kind edit on node {id} not detected"
+        );
+        let mut workers = g.clone();
+        workers.num_workers += 1;
+        prop_assert!(
+            graph_fingerprint(&workers).unwrap() != base,
+            "worker-count edit not detected"
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn env_fingerprint_separates_cluster_estimator_and_seed() {
+    let cfg = quick_cfg();
+    let d = DeviceModel::gtx1080ti();
+    let a = env_fingerprint(&Cluster::cluster_a(), &d, "analytical", &cfg);
+    assert_ne!(a, env_fingerprint(&Cluster::cluster_b(), &d, "analytical", &cfg));
+    assert_ne!(a, env_fingerprint(&Cluster::cluster_a(), &d, "oracle", &cfg));
+    assert_ne!(
+        a,
+        env_fingerprint(
+            &Cluster::cluster_a(),
+            &d,
+            "analytical",
+            &SearchConfig { seed: 8, ..quick_cfg() }
+        )
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Store-hit and warm-start acceptance paths
+// ---------------------------------------------------------------------------
+
+/// Acceptance: the second plan for an identical graph is served from the
+/// store with ZERO simulator invocations — enforced by handing the
+/// second request a cost source that panics on any query.
+#[test]
+fn second_plan_is_store_hit_with_zero_simulator_invocations() {
+    let g = workload(0);
+    let d = DeviceModel::gtx1080ti();
+    let c = Cluster::cluster_a();
+    let prof = profiler::profile(&g, &d, &c, 2, 5);
+    let est = CostEstimator::oracle(&prof, &d);
+    let cfg = quick_cfg();
+    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let mut store = PlanStore::in_memory(16);
+    let warm = WarmOptions::default();
+
+    let first = plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap();
+    assert_eq!(first.source, PlanSource::Cold);
+    assert!(first.best_cost_ms < first.initial_cost_ms, "search should improve");
+
+    // Identical request, panicking cost source: any simulation panics.
+    let second = plan_with_store(&g, &PanicCost, &cfg, env, &mut store, &warm).unwrap();
+    assert_eq!(second.source, PlanSource::Store);
+    assert_eq!(second.evals, 0);
+    assert_eq!(second.best_cost_ms, first.best_cost_ms);
+    assert_eq!(second.best.fingerprint(), first.best.fingerprint());
+    assert!(second.best.validate().is_ok());
+}
+
+/// Acceptance: warm-starting from a cached plan of a *perturbed* graph
+/// reports `steps_saved > 0`, and the warm search result is valid.
+#[test]
+fn warm_start_on_perturbed_graph_saves_steps() {
+    let base = workload(0);
+    let perturbed = workload(3);
+    assert_ne!(
+        graph_fingerprint(&base).unwrap(),
+        graph_fingerprint(&perturbed).unwrap()
+    );
+    let d = DeviceModel::gtx1080ti();
+    let c = Cluster::cluster_a();
+    let cfg = quick_cfg();
+    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let mut store = PlanStore::in_memory(16);
+    let warm = WarmOptions::default();
+
+    let prof_base = profiler::profile(&base, &d, &c, 2, 5);
+    let est_base = CostEstimator::oracle(&prof_base, &d);
+    let first = plan_with_store(&base, &est_base, &cfg, env, &mut store, &warm).unwrap();
+    assert_eq!(first.source, PlanSource::Cold);
+
+    let prof_p = profiler::profile(&perturbed, &d, &c, 2, 5);
+    let est_p = CostEstimator::oracle(&prof_p, &d);
+    let out = plan_with_store(&perturbed, &est_p, &cfg, env, &mut store, &warm).unwrap();
+    assert_eq!(out.source, PlanSource::Warm);
+    assert!(out.warm_hits > 0);
+    assert!(out.steps_saved > 0, "no cached rewrites replayed onto the perturbed graph");
+    assert!(out.best.validate().is_ok());
+    assert!(out.best_cost_ms <= out.initial_cost_ms);
+
+    // Determinism: the same warm request on a fresh store with the same
+    // cached plan resolves identically.
+    let mut store2 = PlanStore::in_memory(16);
+    let _ = plan_with_store(&base, &est_base, &cfg, env, &mut store2, &warm).unwrap();
+    let out2 = plan_with_store(&perturbed, &est_p, &cfg, env, &mut store2, &warm).unwrap();
+    assert_eq!(out.best_cost_ms, out2.best_cost_ms);
+    assert_eq!(out.steps_saved, out2.steps_saved);
+}
+
+/// A relabeled (isomorphic) graph shares the canonical fingerprint but
+/// not the arena fingerprint: it must NOT be served by blind replay; it
+/// warm-starts instead. Validity is never compromised.
+#[test]
+fn relabeled_graph_is_not_blindly_replayed() {
+    let g = workload(0);
+    let mut rng = Rng::new(42);
+    let relabeled = relabel(&g, &mut rng);
+    assert_eq!(
+        graph_fingerprint(&g).unwrap(),
+        graph_fingerprint(&relabeled).unwrap()
+    );
+    assert_ne!(
+        disco::service::arena_fingerprint(&g),
+        disco::service::arena_fingerprint(&relabeled)
+    );
+
+    let d = DeviceModel::gtx1080ti();
+    let c = Cluster::cluster_a();
+    let cfg = quick_cfg();
+    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let mut store = PlanStore::in_memory(16);
+    let warm = WarmOptions::default();
+    let prof = profiler::profile(&g, &d, &c, 2, 5);
+    let est = CostEstimator::oracle(&prof, &d);
+    let _ = plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap();
+
+    let prof_r = profiler::profile(&relabeled, &d, &c, 2, 5);
+    let est_r = CostEstimator::oracle(&prof_r, &d);
+    let out = plan_with_store(&relabeled, &est_r, &cfg, env, &mut store, &warm).unwrap();
+    assert_ne!(out.source, PlanSource::Store, "must not replay onto a different arena");
+    assert!(out.best.validate().is_ok());
+}
+
+/// Store hits survive a process restart (JSONL persistence).
+#[test]
+fn store_hit_survives_reopen() {
+    let dir = std::env::temp_dir().join(format!("disco-svc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("reopen.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let g = workload(0);
+    let d = DeviceModel::gtx1080ti();
+    let c = Cluster::cluster_a();
+    let prof = profiler::profile(&g, &d, &c, 2, 5);
+    let est = CostEstimator::oracle(&prof, &d);
+    let cfg = quick_cfg();
+    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let warm = WarmOptions::default();
+    let first_cost = {
+        let mut store = PlanStore::open(&path, 16).unwrap();
+        plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap().best_cost_ms
+    };
+    let mut reopened = PlanStore::open(&path, 16).unwrap();
+    let out = plan_with_store(&g, &PanicCost, &cfg, env, &mut reopened, &warm).unwrap();
+    assert_eq!(out.source, PlanSource::Store);
+    assert_eq!(out.best_cost_ms, first_cost);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end
+// ---------------------------------------------------------------------------
+
+fn plan_request(graph: &TrainingGraph, unchanged: usize) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("plan".into())),
+        ("graph", graph.to_json_value()),
+        ("cluster", Json::Str("a".into())),
+        ("estimator", Json::Str("oracle".into())),
+        ("seed", Json::Num(7.0)),
+        ("unchanged", Json::Num(unchanged as f64)),
+    ])
+}
+
+fn spawn_server() -> (String, std::thread::JoinHandle<()>) {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        store_path: None,
+        capacity: 32,
+        warm: WarmOptions::default(),
+    };
+    let server = Server::bind(&opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+#[test]
+fn serve_end_to_end_second_request_is_store_hit() {
+    let (addr, handle) = spawn_server();
+    let g = workload(0);
+
+    let ping = request(&addr, &Json::obj(vec![("cmd", Json::Str("ping".into()))])).unwrap();
+    assert_eq!(ping.get("ok").as_bool(), Some(true));
+
+    let first = request(&addr, &plan_request(&g, 40)).unwrap();
+    assert_eq!(first.get("ok").as_bool(), Some(true), "plan failed: {first:?}");
+    assert_eq!(first.get("source").as_str(), Some("cold"));
+    assert!(first.get("evals").as_usize().unwrap() > 0);
+
+    let second = request(&addr, &plan_request(&g, 40)).unwrap();
+    assert_eq!(second.get("source").as_str(), Some("store"));
+    assert_eq!(second.get("evals").as_usize(), Some(0));
+    assert_eq!(
+        second.get("best_cost_ms").as_f64(),
+        first.get("best_cost_ms").as_f64()
+    );
+    // The returned strategy deserializes into a valid module.
+    let strategy = TrainingGraph::from_json_value(second.get("strategy")).unwrap();
+    assert!(strategy.validate().is_ok());
+
+    let stats = request(&addr, &Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("searches").as_usize(), Some(1));
+    assert_eq!(stats.get("store_hits").as_usize(), Some(1));
+
+    let bye = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    assert_eq!(bye.get("ok").as_bool(), Some(true));
+    handle.join().unwrap();
+}
+
+/// Concurrent identical requests trigger exactly one search: the others
+/// either coalesce onto the in-flight leader or hit the freshly stored
+/// record — never a second search.
+#[test]
+fn serve_coalesces_concurrent_identical_requests() {
+    let (addr, handle) = spawn_server();
+    let g = workload(0);
+    let clients = 4;
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(clients));
+    let mut joins = Vec::new();
+    for _ in 0..clients {
+        let addr = addr.clone();
+        let g = g.clone();
+        let barrier = std::sync::Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            barrier.wait();
+            request(&addr, &plan_request(&g, 60)).unwrap()
+        }));
+    }
+    let responses: Vec<Json> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let costs: Vec<f64> =
+        responses.iter().map(|r| r.get("best_cost_ms").as_f64().unwrap()).collect();
+    assert!(costs.iter().all(|&c| c == costs[0]), "divergent answers: {costs:?}");
+    assert_eq!(
+        responses.iter().filter(|r| r.get("source").as_str() == Some("cold")).count(),
+        1,
+        "exactly one client should have run the search"
+    );
+
+    let stats = request(&addr, &Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("searches").as_usize(), Some(1), "coalescing failed: {stats:?}");
+    let hits = stats.get("store_hits").as_usize().unwrap();
+    assert_eq!(hits, (clients - 1), "every non-leader resolves to a store hit");
+
+    let _ = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn serve_rejects_malformed_requests() {
+    let (addr, handle) = spawn_server();
+    let bad = request(&addr, &Json::obj(vec![("cmd", Json::Str("nope".into()))])).unwrap();
+    assert_eq!(bad.get("ok").as_bool(), Some(false));
+    let no_graph = request(&addr, &Json::obj(vec![("cmd", Json::Str("plan".into()))])).unwrap();
+    assert_eq!(no_graph.get("ok").as_bool(), Some(false));
+    assert!(no_graph.get("error").as_str().unwrap().contains("graph"));
+    let _ = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    handle.join().unwrap();
+}
