@@ -30,10 +30,23 @@ use std::collections::HashMap;
 // Structured module form (shared by graph import and the interpreter).
 // ---------------------------------------------------------------------------
 
+/// Primitive element type of one HLO array, as the interpreter needs it
+/// (the byte-accounting [`DType`] folds pred/s32/u32 together; execution
+/// must keep pred narrowing distinct from integer truncation). `f64`
+/// maps to F32 storage; `s64`/`u32`/`u8` map to S32 storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prim {
+    F32,
+    F16,
+    BF16,
+    S32,
+    Pred,
+}
+
 /// Shape of one HLO value: an array or a (possibly nested) tuple.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HloShape {
-    Array { dtype: DType, shape: Shape },
+    Array { dtype: DType, prim: Prim, shape: Shape },
     Tuple(Vec<HloShape>),
 }
 
@@ -56,11 +69,12 @@ impl HloShape {
             return Some(HloShape::Tuple(elems));
         }
         let bracket = s.find('[')?;
-        let dtype = match &s[..bracket] {
-            "f32" | "f64" => DType::F32,
-            "f16" => DType::F16,
-            "bf16" => DType::BF16,
-            _ => DType::I32, // s32/u32/pred/s64…: byte accounting only
+        let (dtype, prim) = match &s[..bracket] {
+            "f32" | "f64" => (DType::F32, Prim::F32),
+            "f16" => (DType::F16, Prim::F16),
+            "bf16" => (DType::BF16, Prim::BF16),
+            "pred" => (DType::I32, Prim::Pred),
+            _ => (DType::I32, Prim::S32), // s32/u32/s64/u8…
         };
         let rest = &s[bracket + 1..];
         let close = rest.find(']')?;
@@ -70,15 +84,23 @@ impl HloShape {
         } else {
             dims_str.split(',').map(|d| d.trim().parse().ok()).collect::<Option<_>>()?
         };
-        Some(HloShape::Array { dtype, shape: Shape { dims } })
+        Some(HloShape::Array { dtype, prim, shape: Shape { dims } })
     }
 
     /// First array shape (tuples recurse into their first element) — the
     /// single-tensor view the graph importer uses for tuple-typed nodes.
     pub fn first_array(&self) -> Option<(DType, Shape)> {
         match self {
-            HloShape::Array { dtype, shape } => Some((*dtype, shape.clone())),
+            HloShape::Array { dtype, shape, .. } => Some((*dtype, shape.clone())),
             HloShape::Tuple(elems) => elems.first()?.first_array(),
+        }
+    }
+
+    /// First array's primitive type + shape — the interpreter's view.
+    pub fn first_prim(&self) -> Option<(Prim, Shape)> {
+        match self {
+            HloShape::Array { prim, shape, .. } => Some((*prim, shape.clone())),
+            HloShape::Tuple(elems) => elems.first()?.first_prim(),
         }
     }
 
@@ -610,6 +632,12 @@ ENTRY main.9 {
         assert_eq!(parse_type("f32[]").unwrap().1.dims, Vec::<usize>::new());
         assert_eq!(parse_type("s32[3]{0}").unwrap().0, DType::I32);
         assert_eq!(parse_type("bf16[2,2]{1,0}").unwrap().0, DType::BF16);
+        // The interpreter-facing primitive type keeps pred distinct from
+        // the I32 byte-accounting bucket.
+        assert_eq!(HloShape::parse("pred[4]").unwrap().first_prim().unwrap().0, Prim::Pred);
+        assert_eq!(HloShape::parse("s32[4]").unwrap().first_prim().unwrap().0, Prim::S32);
+        assert_eq!(HloShape::parse("f16[4]").unwrap().first_prim().unwrap().0, Prim::F16);
+        assert_eq!(HloShape::parse("f64[4]").unwrap().first_prim().unwrap().0, Prim::F32);
         // Tuple takes the first element.
         assert_eq!(parse_type("(f32[5]{0}, s32[2]{0})").unwrap().1.dims, vec![5]);
         assert!(parse_type("garbage").is_none());

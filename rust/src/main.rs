@@ -16,6 +16,7 @@
 //! disco train-gnn [--per-model 800] [--epochs 30]
 //! disco e2e       [--workers 4] [--steps 200]
 //! disco gen-artifacts [--out artifacts]
+//! disco run-hlo <case.hlo>          # conformance-corpus authoring
 //! ```
 //!
 //! Every runtime-touching command accepts `--backend interp|pjrt`
@@ -526,6 +527,35 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Execute one HLO text module through the in-tree interpreter — the
+/// conformance-corpus authoring loop (DESIGN.md §9). Inputs come from
+/// the file's `// input:` directives; actual outputs print as
+/// ready-to-paste `// expect:` lines, and any `// expect:` directives
+/// already present are verified (non-zero exit on mismatch).
+fn cmd_run_hlo(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: disco run-hlo <case.hlo>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let case = disco::runtime::corpus::parse_case(path, &text)?;
+    let verified = !case.expects.is_empty();
+    let out = disco::runtime::corpus::run_case(&case)?;
+    println!(
+        "{path}: {} input(s) → {} output(s){}",
+        case.inputs.len(),
+        out.len(),
+        if verified { "; all expect directives matched" } else { "" }
+    );
+    for line in disco::runtime::corpus::render_expects(&text, &out) {
+        println!("{line}");
+    }
+    if !verified {
+        println!("// (no expect directives present — paste the lines above into {path})");
+    }
+    Ok(())
+}
+
 fn cmd_import_hlo(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -570,7 +600,7 @@ fn cmd_import_hlo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: disco <search|serve|plan|enact|worker|profile|bench|train-gnn|e2e|import-hlo|gen-artifacts> [options]
+const USAGE: &str = "usage: disco <search|serve|plan|enact|worker|profile|bench|train-gnn|e2e|import-hlo|run-hlo|gen-artifacts> [options]
   run `disco <cmd> --help` conventions: see rust/src/main.rs module docs";
 
 fn main() {
@@ -596,6 +626,7 @@ fn main() {
         "train-gnn" => cmd_train_gnn(&args),
         "e2e" => cmd_e2e(&args),
         "import-hlo" => cmd_import_hlo(&args),
+        "run-hlo" => cmd_run_hlo(&args),
         "gen-artifacts" => cmd_gen_artifacts(&args),
         "export-samples" => cmd_export_samples(&args),
         "trace" => cmd_trace(&args),

@@ -1,0 +1,371 @@
+//! Golden-conformance-corpus format and runner (DESIGN.md §9).
+//!
+//! A corpus case is an ordinary HLO text file whose leading comment
+//! lines carry the test vector, so every case stays a valid module that
+//! any HLO tool can read:
+//!
+//! ```text
+//! // case: gather picks rows of an embedding table
+//! // input: f32[4,2] = 0 0.5 1 1.5 2 2.5 3 3.5
+//! // input: s32[3,1] = 2 0 3
+//! // expect: f32[3,2] = 2 2.5 0 0.5 3 3.5
+//! // tol: 1e-5
+//! // ulp: 1
+//! HloModule gather_rows
+//! ENTRY main { … }
+//! ```
+//!
+//! Inputs become interchange literals (floats → f32, integers/pred →
+//! i32; the module's declared parameter types narrow storage on entry).
+//! Expected values compare against the flattened root tuple in order:
+//! integer/pred outputs must match **exactly**; f32 within `tol`
+//! (absolute + relative, default 1e-5); f16/bf16 within `ulp` ULPs
+//! (default 1) after narrowing the expected decimals into the storage
+//! format — narrowing the widened interpreter output is lossless, so
+//! the comparison happens on storage bit patterns.
+//!
+//! `disco run-hlo <file>` runs one case and prints the actual outputs
+//! as ready-to-paste `// expect:` lines — the corpus authoring loop.
+//! The table-driven test over `rust/tests/hlo_corpus/` lives in
+//! `tests/interp.rs` and lists every failing file by name.
+
+use crate::graph::hlo_import::{HloShape, Prim};
+use crate::runtime::interp::Interp;
+use crate::runtime::value::{f32_to_bf16_bits, f32_to_f16_bits, ulp_diff_16, VType};
+use crate::xla_stub::Literal;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One `// expect:` directive.
+#[derive(Debug, Clone)]
+pub struct Expected {
+    pub prim: Prim,
+    pub dims: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+/// A parsed corpus case: module text plus its test vector.
+#[derive(Debug, Clone)]
+pub struct CorpusCase {
+    pub name: String,
+    pub text: String,
+    pub inputs: Vec<Literal>,
+    pub expects: Vec<Expected>,
+    /// Absolute+relative tolerance for f32 outputs.
+    pub tol: f64,
+    /// Max ULP distance for f16/bf16 outputs.
+    pub ulp: u32,
+}
+
+fn parse_typed_values(spec: &str) -> Result<(Prim, Vec<usize>, Vec<f64>)> {
+    let (ty, vals) = spec
+        .split_once('=')
+        .ok_or_else(|| anyhow!("directive needs 'type = values', got '{spec}'"))?;
+    let shape = HloShape::parse(ty.trim())
+        .ok_or_else(|| anyhow!("bad type '{}' in directive", ty.trim()))?;
+    let (prim, s) = shape
+        .first_prim()
+        .ok_or_else(|| anyhow!("tuple types are not valid in directives"))?;
+    let dims = s.dims;
+    let elems: usize = dims.iter().product();
+    let mut out = Vec::new();
+    for tok in vals.split_whitespace() {
+        out.push(match tok {
+            "inf" => f64::INFINITY,
+            "-inf" => f64::NEG_INFINITY,
+            "nan" => f64::NAN,
+            "true" => 1.0,
+            "false" => 0.0,
+            _ => tok
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad value '{tok}' in directive"))?,
+        });
+    }
+    if out.len() == 1 && elems != 1 {
+        out = vec![out[0]; elems];
+    }
+    if out.len() != elems {
+        bail!("directive '{}' has {} values for {} elements", ty.trim(), out.len(), elems);
+    }
+    Ok((prim, dims, out))
+}
+
+/// Parse one corpus file's directives; the whole text stays the module
+/// source (the HLO parser skips comment lines).
+pub fn parse_case(name: &str, text: &str) -> Result<CorpusCase> {
+    let mut inputs = Vec::new();
+    let mut expects = Vec::new();
+    let mut tol = 1e-5f64;
+    let mut ulp = 1u32;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let Some(rest) = line.strip_prefix("//") else { continue };
+        let rest = rest.trim();
+        let at = |e: anyhow::Error| e.context(format!("{name}:{}", ln + 1));
+        if let Some(spec) = rest.strip_prefix("input:") {
+            let (prim, dims, vals) = parse_typed_values(spec).map_err(at)?;
+            let ldims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = if VType::of(prim).is_float() {
+                let data: Vec<f32> = vals.iter().map(|&v| v as f32).collect();
+                Literal::vec1(&data).reshape(&ldims)
+            } else {
+                let data: Vec<i32> = vals.iter().map(|&v| v as i32).collect();
+                Literal::vec1(&data).reshape(&ldims)
+            }
+            .map_err(|e| anyhow!("{name}:{}: {e:?}", ln + 1))?;
+            inputs.push(lit);
+        } else if let Some(spec) = rest.strip_prefix("expect:") {
+            let (prim, dims, vals) = parse_typed_values(spec).map_err(at)?;
+            expects.push(Expected { prim, dims, vals });
+        } else if let Some(v) = rest.strip_prefix("tol:") {
+            tol = v.trim().parse().map_err(|_| anyhow!("{name}:{}: bad tol", ln + 1))?;
+        } else if let Some(v) = rest.strip_prefix("ulp:") {
+            ulp = v.trim().parse().map_err(|_| anyhow!("{name}:{}: bad ulp", ln + 1))?;
+        }
+    }
+    Ok(CorpusCase {
+        name: name.to_string(),
+        text: text.to_string(),
+        inputs,
+        expects,
+        tol,
+        ulp,
+    })
+}
+
+/// Compare one output against its `// expect:` directive.
+fn check_output(
+    case: &CorpusCase,
+    idx: usize,
+    exp: &Expected,
+    got: &Literal,
+) -> Result<()> {
+    let got_dims: Vec<usize> = got.dims.iter().map(|&d| d as usize).collect();
+    if got_dims != exp.dims {
+        bail!(
+            "{}: output {idx} shape {:?}, expected {:?}",
+            case.name,
+            got_dims,
+            exp.dims
+        );
+    }
+    match VType::of(exp.prim) {
+        VType::I32 | VType::Pred => {
+            let xs = got
+                .to_vec::<i32>()
+                .map_err(|_| anyhow!("{}: output {idx} is not integer-typed", case.name))?;
+            for (i, (&g, &w)) in xs.iter().zip(&exp.vals).enumerate() {
+                if g as f64 != w {
+                    bail!(
+                        "{}: output {idx} [{i}] = {g}, expected {w} (exact integer match)",
+                        case.name
+                    );
+                }
+            }
+        }
+        VType::F32 => {
+            let xs = got
+                .to_vec::<f32>()
+                .map_err(|_| anyhow!("{}: output {idx} is not float-typed", case.name))?;
+            for (i, (&g, &w)) in xs.iter().zip(&exp.vals).enumerate() {
+                let ok = if w.is_nan() {
+                    (g as f64).is_nan()
+                } else if w.is_infinite() {
+                    g as f64 == w
+                } else {
+                    (g as f64 - w).abs() <= case.tol * (1.0 + w.abs())
+                };
+                if !ok {
+                    bail!(
+                        "{}: output {idx} [{i}] = {g}, expected {w} (tol {})",
+                        case.name,
+                        case.tol
+                    );
+                }
+            }
+        }
+        vt @ (VType::F16 | VType::BF16) => {
+            // The interpreter widens f16/bf16 outputs to f32 losslessly;
+            // narrowing both sides back recovers the storage bits.
+            let xs = got
+                .to_vec::<f32>()
+                .map_err(|_| anyhow!("{}: output {idx} is not float-typed", case.name))?;
+            let is_bf = vt == VType::BF16;
+            let narrow = |x: f32| if is_bf { f32_to_bf16_bits(x) } else { f32_to_f16_bits(x) };
+            for (i, (&g, &w)) in xs.iter().zip(&exp.vals).enumerate() {
+                let d = ulp_diff_16(narrow(g), narrow(w as f32), is_bf);
+                if d > case.ulp {
+                    bail!(
+                        "{}: output {idx} [{i}] = {g}, expected {w} ({d} ULPs apart, \
+                         allowed {})",
+                        case.name,
+                        case.ulp
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute one case end-to-end: parse the module, run the inputs,
+/// compare every output. Returns the actual outputs so callers (the
+/// `run-hlo` CLI) can print them.
+pub fn run_case(case: &CorpusCase) -> Result<Vec<Literal>> {
+    let interp = Interp::from_text(&case.text)
+        .with_context(|| format!("{}: parsing module", case.name))?;
+    if interp.num_params() != case.inputs.len() {
+        bail!(
+            "{}: module takes {} parameters, {} input directives given",
+            case.name,
+            interp.num_params(),
+            case.inputs.len()
+        );
+    }
+    let out = interp
+        .run(&case.inputs)
+        .with_context(|| format!("{}: executing", case.name))?;
+    if !case.expects.is_empty() {
+        if out.len() != case.expects.len() {
+            bail!(
+                "{}: module produced {} outputs, {} expect directives given",
+                case.name,
+                out.len(),
+                case.expects.len()
+            );
+        }
+        for (idx, (exp, got)) in case.expects.iter().zip(&out).enumerate() {
+            check_output(case, idx, exp, got)?;
+        }
+    }
+    Ok(out)
+}
+
+/// Load + run one corpus file from disk.
+pub fn run_file(path: &std::path::Path) -> Result<Vec<Literal>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string());
+    let case = parse_case(&name, &text)?;
+    run_case(&case)
+}
+
+/// Render actual outputs as ready-to-paste `// expect:` directives,
+/// using the module's declared output types.
+pub fn render_expects(text: &str, outputs: &[Literal]) -> Vec<String> {
+    let shapes = Interp::from_text(text).map(|i| i.output_shapes()).unwrap_or_default();
+    outputs
+        .iter()
+        .enumerate()
+        .map(|(i, lit)| {
+            let (prim, dims) = shapes
+                .get(i)
+                .cloned()
+                .unwrap_or((Prim::F32, lit.dims.iter().map(|&d| d as usize).collect()));
+            let ty = match prim {
+                Prim::F32 => "f32",
+                Prim::F16 => "f16",
+                Prim::BF16 => "bf16",
+                Prim::S32 => "s32",
+                Prim::Pred => "pred",
+            };
+            let dims_s: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+            let vals = match lit.to_vec::<f32>() {
+                Ok(xs) => xs.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(" "),
+                Err(_) => lit
+                    .to_vec::<i32>()
+                    .map(|xs| xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" "))
+                    .unwrap_or_default(),
+            };
+            format!("// expect: {ty}[{}] = {vals}", dims_s.join(","))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CASE: &str = "\
+// case: add two vectors
+// input: f32[3] = 1 2 3
+// input: f32[3] = 10 20 30
+// expect: f32[3] = 11 22 33
+HloModule add_vec
+ENTRY main {
+  a = f32[3] parameter(0)
+  b = f32[3] parameter(1)
+  ROOT r = f32[3] add(a, b)
+}
+";
+
+    #[test]
+    fn case_parses_runs_and_verifies() {
+        let case = parse_case("add_vec.hlo", CASE).unwrap();
+        assert_eq!(case.inputs.len(), 2);
+        assert_eq!(case.expects.len(), 1);
+        let out = run_case(&case).unwrap();
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn mismatch_reports_case_name_and_index() {
+        let bad = CASE.replace("11 22 33", "11 22 34");
+        let case = parse_case("add_vec.hlo", &bad).unwrap();
+        let err = format!("{:#}", run_case(&case).unwrap_err());
+        assert!(err.contains("add_vec.hlo"), "{err}");
+        assert!(err.contains("[2]"), "{err}");
+    }
+
+    #[test]
+    fn integer_outputs_require_exact_match() {
+        let text = "\
+// input: s32[2] = 3 4
+// expect: s32[2] = 4 5
+HloModule inc
+ENTRY main {
+  a = s32[2] parameter(0)
+  c = s32[] constant(1)
+  cb = s32[2] broadcast(c), dimensions={}
+  ROOT r = s32[2] add(a, cb)
+}
+";
+        let case = parse_case("inc.hlo", text).unwrap();
+        run_case(&case).unwrap();
+        let off = text.replace("= 4 5", "= 4 6");
+        let case = parse_case("inc.hlo", &off).unwrap();
+        assert!(run_case(&case).is_err());
+    }
+
+    #[test]
+    fn f16_outputs_compare_in_ulps() {
+        let text = "\
+// input: f32[2] = 1.0 2.0
+// expect: f16[2] = 1.0 2.0
+HloModule cvt
+ENTRY main {
+  a = f32[2] parameter(0)
+  ROOT r = f16[2] convert(a)
+}
+";
+        let case = parse_case("cvt.hlo", text).unwrap();
+        run_case(&case).unwrap();
+        // One f16 ULP off (1.0009765625) passes at ulp:1, fails at ulp:0.
+        let near = text.replace("expect: f16[2] = 1.0 2.0", "expect: f16[2] = 1.001 2.0");
+        let case = parse_case("cvt.hlo", &near).unwrap();
+        run_case(&case).unwrap();
+        let strict = near.replace("// input", "// ulp: 0\n// input");
+        let case = parse_case("cvt.hlo", &strict).unwrap();
+        assert!(run_case(&case).is_err());
+    }
+
+    #[test]
+    fn render_expects_roundtrips() {
+        let case = parse_case("add_vec.hlo", CASE).unwrap();
+        let out = run_case(&case).unwrap();
+        let lines = render_expects(CASE, &out);
+        assert_eq!(lines, vec!["// expect: f32[3] = 11 22 33"]);
+    }
+}

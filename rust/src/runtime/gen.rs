@@ -42,6 +42,21 @@ pub const GNN_BATCH: usize = 8;
 /// and examples, and Adam's per-step movement is ≈ lr.
 pub const GNN_LR: f64 = 2e-2;
 
+/// Vocabulary of the mixed-precision embedding probe model
+/// (`embed_grads.hlo.txt`).
+pub const EMBED_VOCAB: usize = 16;
+/// Embedding width of the probe model.
+pub const EMBED_DIM: usize = 8;
+/// Batch of the probe model.
+pub const EMBED_BATCH: usize = 2;
+/// Sequence length of the probe model (the `while` trip count).
+pub const EMBED_SEQ: usize = 4;
+
+/// Flat parameter length of the embedding probe model (the table).
+pub fn embed_flat_len() -> usize {
+    EMBED_VOCAB * EMBED_DIM
+}
+
 /// Bigram-LM vocabulary (the synthetic corpus is ASCII, < 128).
 pub const LM_VOCAB: usize = 128;
 /// Token window length per example.
@@ -596,6 +611,145 @@ pub fn lm_adam_hlo() -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Interpreter-coverage artifacts: the new op families (gather/scatter,
+// while/conditional, dynamic slicing, pad/reverse/clamp, f16/bf16) each
+// appear in at least one generated module, so the artifact set itself
+// pins the interpreter's coverage — not just the test corpus. These two
+// modules need nested while/conditional bodies, which the ENTRY-only
+// `Emit` builder doesn't model, so they are written as documented
+// templates instead.
+// ---------------------------------------------------------------------------
+
+/// `embed_grads.hlo.txt` — a representative JAX-lowered-style training
+/// step: `(flat[V·D], tokens[B,S] s32, targets[B]) -> (loss, grad[V·D])`.
+///
+/// Forward: the flat table reshapes to `E[V,D]`, passes through a
+/// mixed-precision f16 cast pair (master weights stay f32), embeds the
+/// tokens via general-dimension-numbers `gather`, pools over the
+/// sequence with a real `while` loop (`dynamic-slice` per step), and
+/// predicts `Σ_d pooled[b,d]` clamped into ±8. Loss is `½ Σ_b (pred −
+/// target)²`.
+///
+/// Backward (hand-derived): `dpred = (pred − target) · clamp-gate`,
+/// broadcast back over the pooled sum and the sequence, and accumulated
+/// into the table with a scatter-add — the gradient of gather. Finite
+/// differences validate it end-to-end in `tests/interp.rs`, including
+/// through the while-loop call-frame path.
+pub fn embed_grads_hlo() -> String {
+    let (v, d, b, s) = (EMBED_VOCAB, EMBED_DIM, EMBED_BATCH, EMBED_SEQ);
+    let l = embed_flat_len();
+    let carried = format!("(s32[], f32[{b},{d}], f32[{b},{s},{d}])");
+    format!(
+        r#"HloModule embed_grads_offline
+
+sum_f32 {{
+  sa = f32[] parameter(0)
+  sb = f32[] parameter(1)
+  ROOT sr = f32[] add(sa, sb)
+}}
+
+pool_cond {{
+  pct = {carried} parameter(0)
+  pci = s32[] get-tuple-element(pct), index=0
+  pcs = s32[] constant({s})
+  ROOT pclt = pred[] compare(pci, pcs), direction=LT
+}}
+
+pool_body {{
+  pbt = {carried} parameter(0)
+  pbi = s32[] get-tuple-element(pbt), index=0
+  pbacc = f32[{b},{d}] get-tuple-element(pbt), index=1
+  pbemb = f32[{b},{s},{d}] get-tuple-element(pbt), index=2
+  pbz = s32[] constant(0)
+  pbsl = f32[{b},1,{d}] dynamic-slice(pbemb, pbz, pbi, pbz), dynamic_slice_sizes={{{b},1,{d}}}
+  pbslr = f32[{b},{d}] reshape(pbsl)
+  pbacc2 = f32[{b},{d}] add(pbacc, pbslr)
+  pbone = s32[] constant(1)
+  pbi2 = s32[] add(pbi, pbone)
+  ROOT pbr = {carried} tuple(pbi2, pbacc2, pbemb)
+}}
+
+ENTRY main {{
+  flat = f32[{l}] parameter(0)
+  tokens = s32[{b},{s}] parameter(1)
+  targets = f32[{b}] parameter(2)
+  e = f32[{v},{d}] reshape(flat)
+  eh = f16[{v},{d}] convert(e)
+  ef = f32[{v},{d}] convert(eh)
+  ixr = s32[{b},{s},1] reshape(tokens)
+  emb = f32[{b},{s},{d}] gather(ef, ixr), offset_dims={{2}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1,{d}}}
+  zero_i = s32[] constant(0)
+  zero_f = f32[] constant(0)
+  zacc = f32[{b},{d}] broadcast(zero_f), dimensions={{}}
+  init = {carried} tuple(zero_i, zacc, emb)
+  w = {carried} while(init), condition=pool_cond, body=pool_body
+  pooled = f32[{b},{d}] get-tuple-element(w), index=1
+  pred_raw = f32[{b}] reduce(pooled, zero_f), dimensions={{1}}, to_apply=sum_f32
+  lo = f32[] constant(-8)
+  hi = f32[] constant(8)
+  predc = f32[{b}] clamp(lo, pred_raw, hi)
+  diff = f32[{b}] subtract(predc, targets)
+  dd = f32[{b}] multiply(diff, diff)
+  loss_sum = f32[] reduce(dd, zero_f), dimensions={{0}}, to_apply=sum_f32
+  half = f32[] constant(0.5)
+  loss = f32[] multiply(loss_sum, half)
+  lob = f32[{b}] broadcast(lo), dimensions={{}}
+  hib = f32[{b}] broadcast(hi), dimensions={{}}
+  in_lo = pred[{b}] compare(pred_raw, lob), direction=GT
+  in_hi = pred[{b}] compare(pred_raw, hib), direction=LT
+  in_band = pred[{b}] and(in_lo, in_hi)
+  gate = f32[{b}] convert(in_band)
+  dpred = f32[{b}] multiply(diff, gate)
+  dpool = f32[{b},{d}] broadcast(dpred), dimensions={{0}}
+  demb = f32[{b},{s},{d}] broadcast(dpool), dimensions={{0,2}}
+  ztab = f32[{v},{d}] broadcast(zero_f), dimensions={{}}
+  dtab = f32[{v},{d}] scatter(ztab, ixr, demb), update_window_dims={{2}}, inserted_window_dims={{0}}, scatter_dims_to_operand_dims={{0}}, index_vector_dim=2, to_apply=sum_f32
+  grad = f32[{l}] reshape(dtab)
+  ROOT out = (f32[], f32[{l}]) tuple(loss, grad)
+}}
+"#
+    )
+}
+
+/// `probe_ops.hlo.txt` — one artifact touching the remaining new
+/// families with deterministic arithmetic: `pad` (with interior),
+/// `reverse`, predicated `conditional` with nested branch bodies,
+/// `dynamic-update-slice`, and a bf16 storage round-trip.
+/// `(v[4], sel pred) -> (pad[10], cond[4], dus[4], bf16_roundtrip[4])`.
+pub fn probe_ops_hlo() -> String {
+    r#"HloModule probe_ops_offline
+
+neg_branch {
+  nx = f32[4] parameter(0)
+  ROOT nr = f32[4] negate(nx)
+}
+
+half_branch {
+  hx = f32[4] parameter(0)
+  hc = f32[] constant(0.5)
+  hb = f32[4] broadcast(hc), dimensions={}
+  ROOT hr = f32[4] multiply(hx, hb)
+}
+
+ENTRY main {
+  v = f32[4] parameter(0)
+  sel = pred[] parameter(1)
+  z = f32[] constant(0)
+  p = f32[10] pad(v, z), padding=1_2_1
+  rv = f32[4] reverse(v), dimensions={0}
+  c = f32[4] conditional(sel, v, rv), true_computation=neg_branch, false_computation=half_branch
+  u = f32[2] slice(v), slice={[0:2]}
+  two = s32[] constant(2)
+  du = f32[4] dynamic-update-slice(rv, u, two)
+  bh = bf16[4] convert(v)
+  bf = f32[4] convert(bh)
+  ROOT t = (f32[10], f32[4], f32[4], f32[4]) tuple(p, c, du, bf)
+}
+"#
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
 // Parameter initialization + manifest.
 // ---------------------------------------------------------------------------
 
@@ -720,6 +874,31 @@ pub fn manifest_json() -> Json {
                 vec![spec(&[], "float32")],
             ),
         ),
+        (
+            "embed_grads",
+            artifact(
+                "embed_grads.hlo.txt",
+                vec![
+                    spec(&[embed_flat_len()], "float32"),
+                    spec(&[EMBED_BATCH, EMBED_SEQ], "int32"),
+                    spec(&[EMBED_BATCH], "float32"),
+                ],
+                vec![spec(&[], "float32"), spec(&[embed_flat_len()], "float32")],
+            ),
+        ),
+        (
+            "probe_ops",
+            artifact(
+                "probe_ops.hlo.txt",
+                vec![spec(&[4], "float32"), spec(&[], "pred")],
+                vec![
+                    spec(&[10], "float32"),
+                    spec(&[4], "float32"),
+                    spec(&[4], "float32"),
+                    spec(&[4], "float32"),
+                ],
+            ),
+        ),
     ]);
     Json::obj(vec![
         ("artifacts", artifacts),
@@ -770,6 +949,8 @@ pub fn write_artifacts(dir: &Path) -> Result<()> {
     std::fs::write(dir.join("lm_grads.hlo.txt"), lm_grads_hlo())?;
     std::fs::write(dir.join("lm_eval.hlo.txt"), lm_eval_hlo())?;
     std::fs::write(dir.join("lm_adam.hlo.txt"), lm_adam_hlo())?;
+    std::fs::write(dir.join("embed_grads.hlo.txt"), embed_grads_hlo())?;
+    std::fs::write(dir.join("probe_ops.hlo.txt"), probe_ops_hlo())?;
     write_f32(&dir.join("gnn_params.f32"), &gnn_init_params())?;
     write_f32(&dir.join("lm_params.f32"), &lm_init_params())?;
     std::fs::write(dir.join("manifest.json"), manifest_json().to_string())?;
@@ -805,6 +986,8 @@ mod tests {
             ("lm_grads", lm_grads_hlo()),
             ("lm_eval", lm_eval_hlo()),
             ("lm_adam", lm_adam_hlo()),
+            ("embed_grads", embed_grads_hlo()),
+            ("probe_ops", probe_ops_hlo()),
         ] {
             let m = crate::graph::hlo_import::parse_module(&text)
                 .unwrap_or_else(|e| panic!("{name}: {e}"));

@@ -2,89 +2,38 @@
 //! backend (DESIGN.md §9).
 //!
 //! Executes the ENTRY computation of the HLO *text* modules parsed by
-//! [`crate::graph::hlo_import`]: F32/I32 literals, the elementwise op
-//! families, `broadcast`/`reshape`/`transpose`/`slice`/`concatenate`,
-//! general `dot` (batch + multiple contracting dimensions), `reduce` with
-//! its nested to_apply computation (fast paths for add/max/min/mul
-//! bodies, a generic recursive path otherwise), `iota`, `compare`,
-//! `select`, `convert`, `parameter`/`constant`/`tuple`.
+//! [`crate::graph::hlo_import`]. Coverage (the op table lives in
+//! DESIGN.md §9): the elementwise families, `broadcast`/`reshape`/
+//! `transpose`/`slice`/`concatenate`/`reverse`/`pad`/`clamp`, general
+//! `dot` (batch + multiple contracting dimensions), `reduce` with its
+//! nested to_apply computation, `gather`/`scatter` in the general
+//! dimension-numbers form, `dynamic-slice`/`dynamic-update-slice`,
+//! control flow (`while`, `conditional` in both predicated and indexed
+//! forms, `call`) executing their nested computation bodies through a
+//! real call frame, `iota`/`compare`/`select`/`convert`, tuples, and an
+//! f16/bf16/s32/pred storage layer ([`super::value`]).
 //!
 //! This is an *executor*, not a compiler: values are dense host vectors,
 //! every instruction materializes its result, and there is no layout or
-//! fusion cleverness. That is exactly enough to run the AOT artifacts the
-//! GNN estimator and the distributed-training example need — DistIR
-//! (arXiv 2111.05426) makes the same trade to ground a strategy search in
-//! real executions. Precision: f32 storage with f64 accumulation in `dot`
-//! and `reduce`.
+//! fusion cleverness. That is exactly enough to run JAX-lowered training
+//! artifacts in-tree — DistIR (arXiv 2111.05426) makes the same trade to
+//! ground a strategy search in real executions. Precision contract:
+//! ops compute in f32 and round once into the declared storage type;
+//! `dot` and `reduce` accumulate in f64 regardless of storage type.
+//! Semantics are pinned by the golden conformance corpus in
+//! `rust/tests/hlo_corpus/` (authoring workflow: `disco run-hlo`).
 
-use crate::graph::hlo_import::{parse_module, HloComputation, HloInstr, HloModule};
-use crate::graph::DType;
-use crate::xla_stub::{Elements, Literal};
+use crate::graph::hlo_import::{parse_module, HloComputation, HloInstr, HloModule, Prim};
+use crate::runtime::value::VType;
+pub use crate::runtime::value::Value;
+use crate::xla_stub::Literal;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 
-/// A runtime value: a dense host tensor or a tuple.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Value {
-    F32 { dims: Vec<usize>, data: Vec<f32> },
-    I32 { dims: Vec<usize>, data: Vec<i32> },
-    Tuple(Vec<Value>),
-}
-
-impl Value {
-    pub fn scalar_f32(v: f32) -> Value {
-        Value::F32 { dims: vec![], data: vec![v] }
-    }
-
-    pub fn dims(&self) -> &[usize] {
-        match self {
-            Value::F32 { dims, .. } | Value::I32 { dims, .. } => dims,
-            Value::Tuple(_) => &[],
-        }
-    }
-
-    pub fn elems(&self) -> usize {
-        self.dims().iter().product()
-    }
-
-    fn f32s(&self) -> Result<(&[usize], &[f32])> {
-        match self {
-            Value::F32 { dims, data } => Ok((dims, data)),
-            _ => bail!("expected f32 tensor, got {self:?}"),
-        }
-    }
-
-    fn i32s(&self) -> Result<(&[usize], &[i32])> {
-        match self {
-            Value::I32 { dims, data } => Ok((dims, data)),
-            _ => bail!("expected i32 tensor, got {self:?}"),
-        }
-    }
-
-    /// Convert from the runtime's host literal type.
-    pub fn from_literal(lit: &Literal) -> Value {
-        let dims: Vec<usize> = lit.dims.iter().map(|&d| d as usize).collect();
-        match &lit.elements {
-            Elements::F32(v) => Value::F32 { dims, data: v.clone() },
-            Elements::I32(v) => Value::I32 { dims, data: v.clone() },
-        }
-    }
-
-    /// Convert back to the runtime's host literal type (arrays only —
-    /// tuples are flattened by the caller).
-    pub fn to_literal(&self) -> Result<Literal> {
-        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
-        match self {
-            Value::F32 { data, .. } => {
-                Ok(Literal { elements: Elements::F32(data.clone()), dims })
-            }
-            Value::I32 { data, .. } => {
-                Ok(Literal { elements: Elements::I32(data.clone()), dims })
-            }
-            Value::Tuple(_) => bail!("cannot convert tuple to a single literal"),
-        }
-    }
-}
+/// Hard cap on `while` trip counts — loops in real artifacts run for
+/// thousands of iterations, not millions; past this the condition is
+/// almost certainly never turning false.
+const WHILE_ITER_CAP: usize = 1_000_000;
 
 /// Row-major strides for a dim list.
 fn strides(dims: &[usize]) -> Vec<usize> {
@@ -131,18 +80,61 @@ impl Interp {
             .unwrap_or(0)
     }
 
+    /// Declared (prim, dims) of each ENTRY parameter, in parameter order.
+    pub fn param_shapes(&self) -> Vec<(Prim, Vec<usize>)> {
+        let Ok(entry) = self.module.entry() else { return Vec::new() };
+        let mut out: Vec<(usize, (Prim, Vec<usize>))> = entry
+            .instrs
+            .iter()
+            .filter(|i| i.opcode == "parameter")
+            .filter_map(|i| {
+                let idx: usize = i.payload.trim().parse().ok()?;
+                let (p, s) = i.shape.first_prim()?;
+                Some((idx, (p, s.dims)))
+            })
+            .collect();
+        out.sort_by_key(|(idx, _)| *idx);
+        out.into_iter().map(|(_, ps)| ps).collect()
+    }
+
+    /// Declared (prim, dims) of each ENTRY output, with the root tuple
+    /// flattened one level (mirroring [`Interp::run`]).
+    pub fn output_shapes(&self) -> Vec<(Prim, Vec<usize>)> {
+        use crate::graph::hlo_import::HloShape;
+        let Ok(entry) = self.module.entry() else { return Vec::new() };
+        let Some(root) = entry.root() else { return Vec::new() };
+        match &root.shape {
+            HloShape::Tuple(elems) => elems
+                .iter()
+                .filter_map(|e| e.first_prim())
+                .map(|(p, s)| (p, s.dims))
+                .collect(),
+            arr => arr.first_prim().map(|(p, s)| vec![(p, s.dims)]).unwrap_or_default(),
+        }
+    }
+
     /// Execute the ENTRY computation. Returns the root value with tuples
     /// flattened one level — matching PJRT's tupled-output convention.
     pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let args: Vec<Value> = inputs.iter().map(Value::from_literal).collect();
-        let root = self.eval_computation(self.module.entry()?, &args)?;
+        let root = self.run_values(&args)?;
         match root {
             Value::Tuple(vs) => vs.iter().map(Value::to_literal).collect(),
             v => Ok(vec![v.to_literal()?]),
         }
     }
 
-    /// Evaluate one computation with the given arguments.
+    /// Execute the ENTRY computation on already-typed values, returning
+    /// the raw root value (tuples not flattened) — the corpus runner's
+    /// entry point.
+    pub fn run_values(&self, args: &[Value]) -> Result<Value> {
+        self.eval_computation(self.module.entry()?, args)
+    }
+
+    /// Evaluate one computation with the given arguments — one call
+    /// frame. Nested bodies (reduce/scatter combiners, while condition
+    /// and body, conditional branches, call targets) recurse through
+    /// here with their own environments.
     fn eval_computation(&self, comp: &HloComputation, args: &[Value]) -> Result<Value> {
         let mut env: HashMap<&str, Value> = HashMap::with_capacity(comp.instrs.len());
         let mut root_name: Option<&str> = None;
@@ -175,15 +167,26 @@ impl Interp {
             .ok_or_else(|| anyhow!("{}: operand '{name}' not defined", instr.name))
     }
 
+    /// Nested computation cited by an attribute (`to_apply=`,
+    /// `condition=`, `body=`, …).
+    fn body(&self, instr: &HloInstr, key: &str) -> Result<&HloComputation> {
+        let name = instr
+            .attr(key)
+            .ok_or_else(|| anyhow!("{} without {key}= attribute", instr.opcode))?;
+        self.module
+            .computation(name)
+            .ok_or_else(|| anyhow!("unknown computation '{name}'"))
+    }
+
     fn eval_instr(
         &self,
         instr: &HloInstr,
         args: &[Value],
         env: &HashMap<&str, Value>,
     ) -> Result<Value> {
-        let (out_dtype, out_dims) = match instr.shape.first_array() {
-            Some((dt, s)) => (dt, s.dims),
-            None => (DType::F32, vec![]),
+        let (out_vt, out_dims) = match instr.shape.first_prim() {
+            Some((p, s)) => (VType::of(p), s.dims),
+            None => (VType::F32, vec![]),
         };
         match instr.opcode.as_str() {
             "parameter" => {
@@ -192,11 +195,20 @@ impl Interp {
                     .trim()
                     .parse()
                     .map_err(|_| anyhow!("bad parameter index '{}'", instr.payload))?;
-                args.get(idx)
-                    .cloned()
-                    .ok_or_else(|| anyhow!("parameter({idx}) but only {} inputs", args.len()))
+                let v = args
+                    .get(idx)
+                    .ok_or_else(|| anyhow!("parameter({idx}) but only {} inputs", args.len()))?;
+                // Array parameters adopt their declared storage type —
+                // f32 interchange literals narrow into f16/bf16 here.
+                // Tuple-typed parameters (while/conditional frames) pass
+                // through untouched.
+                match (v, v.vtype()) {
+                    (Value::Tuple(_), _) => Ok(v.clone()),
+                    (_, Some(vt)) if vt == out_vt => Ok(v.clone()),
+                    _ => v.cast(out_vt),
+                }
             }
-            "constant" => constant(&instr.payload, out_dtype, &out_dims),
+            "constant" => constant(&instr.payload, out_vt, &out_dims),
             "iota" => {
                 let d: usize = instr
                     .attr("iota_dimension")
@@ -204,17 +216,24 @@ impl Interp {
                     .trim()
                     .parse()
                     .map_err(|_| anyhow!("bad iota_dimension"))?;
-                iota(out_dtype, &out_dims, d)
+                iota(out_vt, &out_dims, d)
             }
             "broadcast" => broadcast(self.operand(instr, 0, env)?, &out_dims, &instr.dims_attr("dimensions")),
             "reshape" | "bitcast" | "copy" => {
                 reshaped(self.operand(instr, 0, env)?, &out_dims)
             }
-            "convert" | "bitcast-convert" => convert(self.operand(instr, 0, env)?, out_dtype),
+            "convert" | "bitcast-convert" => self.operand(instr, 0, env)?.cast(out_vt),
             "transpose" => transpose(self.operand(instr, 0, env)?, &instr.dims_attr("dimensions")),
             "slice" => slice(
                 self.operand(instr, 0, env)?,
                 instr.attr("slice").unwrap_or(""),
+                &out_dims,
+            ),
+            "reverse" => reverse(self.operand(instr, 0, env)?, &instr.dims_attr("dimensions")),
+            "pad" => pad(
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+                instr.attr("padding").unwrap_or(""),
                 &out_dims,
             ),
             "concatenate" => {
@@ -222,6 +241,10 @@ impl Interp {
                     (0..instr.operands.len()).map(|i| self.operand(instr, i, env)).collect();
                 concatenate(&parts?, *instr.dims_attr("dimensions").first().unwrap_or(&0), &out_dims)
             }
+            "dynamic-slice" => self.dynamic_slice(instr, env, &out_dims),
+            "dynamic-update-slice" => self.dynamic_update_slice(instr, env, out_vt),
+            "gather" => self.gather(instr, env, &out_dims),
+            "scatter" => self.scatter(instr, env, out_vt),
             "dot" => dot(
                 self.operand(instr, 0, env)?,
                 self.operand(instr, 1, env)?,
@@ -229,22 +252,15 @@ impl Interp {
                 &instr.dims_attr("lhs_contracting_dims"),
                 &instr.dims_attr("rhs_batch_dims"),
                 &instr.dims_attr("rhs_contracting_dims"),
+                out_vt,
             ),
-            "reduce" => {
-                let body_name = instr
-                    .attr("to_apply")
-                    .ok_or_else(|| anyhow!("reduce without to_apply"))?;
-                let body = self
-                    .module
-                    .computation(body_name)
-                    .ok_or_else(|| anyhow!("unknown computation '{body_name}'"))?;
-                self.reduce(
-                    self.operand(instr, 0, env)?,
-                    self.operand(instr, 1, env)?,
-                    &instr.dims_attr("dimensions"),
-                    body,
-                )
-            }
+            "reduce" => self.reduce(
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+                &instr.dims_attr("dimensions"),
+                self.body(instr, "to_apply")?,
+                out_vt,
+            ),
             "compare" => compare(
                 self.operand(instr, 0, env)?,
                 self.operand(instr, 1, env)?,
@@ -254,6 +270,13 @@ impl Interp {
                 self.operand(instr, 0, env)?,
                 self.operand(instr, 1, env)?,
                 self.operand(instr, 2, env)?,
+                out_vt,
+            ),
+            "clamp" => clamp(
+                self.operand(instr, 0, env)?,
+                self.operand(instr, 1, env)?,
+                self.operand(instr, 2, env)?,
+                out_vt,
             ),
             "tuple" => {
                 let parts: Result<Vec<Value>> = (0..instr.operands.len())
@@ -276,29 +299,510 @@ impl Interp {
                     _ => bail!("get-tuple-element of non-tuple"),
                 }
             }
+            "while" => {
+                let cond = self.body(instr, "condition")?;
+                let body = self.body(instr, "body")?;
+                let mut carried = self.operand(instr, 0, env)?.clone();
+                for it in 0usize.. {
+                    if it > WHILE_ITER_CAP {
+                        bail!("while exceeded {WHILE_ITER_CAP} iterations (runaway condition?)");
+                    }
+                    let c = self
+                        .eval_computation(cond, std::slice::from_ref(&carried))
+                        .context("while condition")?;
+                    if c.scalar()? == 0.0 {
+                        break;
+                    }
+                    carried = self
+                        .eval_computation(body, std::slice::from_ref(&carried))
+                        .context("while body")?;
+                }
+                Ok(carried)
+            }
+            "conditional" => self.conditional(instr, env),
+            // NOTE: `map` is deliberately NOT routed here — it applies
+            // its body per element, not once, and mis-executing it as a
+            // call would be silently wrong. It stays unsupported.
+            "call" if instr.attr("to_apply").is_some() => {
+                let comp = self.body(instr, "to_apply")?;
+                let call_args: Result<Vec<Value>> = (0..instr.operands.len())
+                    .map(|i| self.operand(instr, i, env).cloned())
+                    .collect();
+                self.eval_computation(comp, &call_args?)
+            }
             // Binary elementwise.
             "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
-            | "remainder" | "and" | "or" | "xor" => binary(
+            | "remainder" | "and" | "or" | "xor" | "atan2" => binary(
                 &instr.opcode,
                 self.operand(instr, 0, env)?,
                 self.operand(instr, 1, env)?,
+                out_vt,
             ),
             // Unary elementwise.
             "negate" | "exponential" | "exponential-minus-one" | "log" | "log-plus-one"
-            | "sqrt" | "rsqrt" | "tanh" | "logistic" | "abs" | "sign" | "floor" | "ceil"
-            | "cosine" | "sine" | "not" => unary(&instr.opcode, self.operand(instr, 0, env)?),
+            | "sqrt" | "rsqrt" | "cbrt" | "tanh" | "logistic" | "abs" | "sign" | "floor"
+            | "ceil" | "round-nearest-afz" | "round-nearest-even" | "cosine" | "sine"
+            | "not" | "is-finite" => {
+                unary(&instr.opcode, self.operand(instr, 0, env)?, out_vt)
+            }
             other => bail!("unsupported HLO opcode '{other}' (in-tree interpreter, DESIGN.md §9)"),
         }
     }
 
+    // -- control flow -------------------------------------------------------
+
+    /// `conditional` in both HLO forms: predicated
+    /// (`true_computation=`/`false_computation=`) and N-way indexed
+    /// (`branch_computations={%b0, %b1, …}`, out-of-range selectors
+    /// clamp to the last branch, per the XLA spec).
+    fn conditional(&self, instr: &HloInstr, env: &HashMap<&str, Value>) -> Result<Value> {
+        let sel = self.operand(instr, 0, env)?;
+        if let Some(list) = instr.attr("branch_computations") {
+            let names: Vec<&str> = list
+                .trim()
+                .trim_start_matches('{')
+                .trim_end_matches('}')
+                .split(',')
+                .map(|s| s.trim().trim_start_matches('%'))
+                .filter(|s| !s.is_empty())
+                .collect();
+            if names.is_empty() {
+                bail!("conditional with empty branch_computations");
+            }
+            let raw = sel.scalar()? as i64;
+            let idx = if raw < 0 || raw as usize >= names.len() {
+                names.len() - 1
+            } else {
+                raw as usize
+            };
+            let comp = self
+                .module
+                .computation(names[idx])
+                .ok_or_else(|| anyhow!("unknown computation '{}'", names[idx]))?;
+            let arg = self.operand(instr, idx + 1, env)?.clone();
+            self.eval_computation(comp, &[arg])
+        } else {
+            let taken = sel.scalar()? != 0.0;
+            let comp = self.body(
+                instr,
+                if taken { "true_computation" } else { "false_computation" },
+            )?;
+            let arg = self.operand(instr, if taken { 1 } else { 2 }, env)?.clone();
+            self.eval_computation(comp, &[arg])
+        }
+    }
+
+    // -- dynamic slicing ----------------------------------------------------
+
+    /// Start indices for dynamic-slice/dynamic-update-slice: one scalar
+    /// operand per dimension starting at `first`, or (legacy form) a
+    /// single rank-1 vector operand.
+    fn dynamic_starts(
+        &self,
+        instr: &HloInstr,
+        env: &HashMap<&str, Value>,
+        first: usize,
+        rank: usize,
+    ) -> Result<Vec<i64>> {
+        if instr.operands.len() < first {
+            bail!("{}: missing start-index operands", instr.name);
+        }
+        let given = instr.operands.len() - first;
+        if given == 1 && rank != 1 {
+            let (dims, xs) = self.operand(instr, first, env)?.ints()?;
+            if dims.len() == 1 && xs.len() == rank {
+                return Ok(xs.iter().map(|&x| x as i64).collect());
+            }
+        }
+        if given != rank {
+            bail!("{}: {} start indices for rank {rank}", instr.name, given);
+        }
+        (0..rank)
+            .map(|d| Ok(self.operand(instr, first + d, env)?.scalar()? as i64))
+            .collect()
+    }
+
+    fn dynamic_slice(
+        &self,
+        instr: &HloInstr,
+        env: &HashMap<&str, Value>,
+        out_dims: &[usize],
+    ) -> Result<Value> {
+        let v = self.operand(instr, 0, env)?;
+        let in_dims = v.dims().to_vec();
+        let sizes = instr.dims_attr("dynamic_slice_sizes");
+        let sizes = if sizes.len() == in_dims.len() { sizes } else { out_dims.to_vec() };
+        if sizes.len() != in_dims.len() {
+            bail!("dynamic-slice sizes {:?} vs rank {}", sizes, in_dims.len());
+        }
+        for (d, (&sz, &n)) in sizes.iter().zip(&in_dims).enumerate() {
+            if sz > n {
+                bail!("dynamic-slice size {sz} exceeds operand extent {n} in dim {d}");
+            }
+        }
+        let starts = self.dynamic_starts(instr, env, 1, in_dims.len())?;
+        // XLA clamps each start into [0, dim - size].
+        let starts: Vec<usize> = starts
+            .iter()
+            .zip(&in_dims)
+            .zip(&sizes)
+            .map(|((&s, &d), &sz)| s.clamp(0, d.saturating_sub(sz) as i64) as usize)
+            .collect();
+        let in_strides = strides(&in_dims);
+        let sz = sizes.clone();
+        let mut idx = Vec::new();
+        v.remap(
+            sizes,
+            |lin| {
+                unravel(lin, &sz, &mut idx);
+                Ok(Some(
+                    idx.iter()
+                        .zip(&starts)
+                        .zip(&in_strides)
+                        .map(|((&i, &s), &st)| (s + i) * st)
+                        .sum(),
+                ))
+            },
+            None,
+        )
+    }
+
+    fn dynamic_update_slice(
+        &self,
+        instr: &HloInstr,
+        env: &HashMap<&str, Value>,
+        out_vt: VType,
+    ) -> Result<Value> {
+        let v = self.operand(instr, 0, env)?;
+        let u = self.operand(instr, 1, env)?;
+        let in_dims = v.dims().to_vec();
+        let u_dims = u.dims().to_vec();
+        if u_dims.len() != in_dims.len() {
+            bail!("dynamic-update-slice rank mismatch: {:?} vs {:?}", u_dims, in_dims);
+        }
+        for (d, (&sz, &n)) in u_dims.iter().zip(&in_dims).enumerate() {
+            if sz > n {
+                bail!("dynamic-update-slice update extent {sz} exceeds operand extent {n} in dim {d}");
+            }
+        }
+        let starts = self.dynamic_starts(instr, env, 2, in_dims.len())?;
+        let starts: Vec<usize> = starts
+            .iter()
+            .zip(&in_dims)
+            .zip(&u_dims)
+            .map(|((&s, &d), &sz)| s.clamp(0, d.saturating_sub(sz) as i64) as usize)
+            .collect();
+        let in_strides = strides(&in_dims);
+        let mut idx = Vec::new();
+        if v.is_int() {
+            let (_, base) = v.ints()?;
+            let (_, upd) = u.ints()?;
+            let mut out = base.to_vec();
+            for (lin, &x) in upd.iter().enumerate() {
+                unravel(lin, &u_dims, &mut idx);
+                let o: usize = idx
+                    .iter()
+                    .zip(&starts)
+                    .zip(&in_strides)
+                    .map(|((&i, &s), &st)| (s + i) * st)
+                    .sum();
+                out[o] = x;
+            }
+            Value::from_i32s(out_vt, in_dims, out)
+        } else {
+            let (_, base) = v.floats()?;
+            let (_, upd) = u.floats()?;
+            let mut out = base.into_owned();
+            for (lin, &x) in upd.iter().enumerate() {
+                unravel(lin, &u_dims, &mut idx);
+                let o: usize = idx
+                    .iter()
+                    .zip(&starts)
+                    .zip(&in_strides)
+                    .map(|((&i, &s), &st)| (s + i) * st)
+                    .sum();
+                out[o] = x;
+            }
+            Value::from_f32s(out_vt, in_dims, out)
+        }
+    }
+
+    // -- gather / scatter ---------------------------------------------------
+
+    /// General-dimension-numbers `gather` (XLA semantics: start indices
+    /// clamp into bounds so every output element is defined).
+    fn gather(
+        &self,
+        instr: &HloInstr,
+        env: &HashMap<&str, Value>,
+        out_dims: &[usize],
+    ) -> Result<Value> {
+        let operand = self.operand(instr, 0, env)?;
+        let (idx_dims, idx_data) = {
+            let (d, x) = self.operand(instr, 1, env)?.ints()?;
+            (d.to_vec(), x.to_vec())
+        };
+        let odims = operand.dims().to_vec();
+        let offset_dims = instr.dims_attr("offset_dims");
+        let collapsed = instr.dims_attr("collapsed_slice_dims");
+        let start_map = instr.dims_attr("start_index_map");
+        let slice_sizes = instr.dims_attr("slice_sizes");
+        let ivd: usize = instr
+            .attr("index_vector_dim")
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(idx_dims.len());
+        if slice_sizes.len() != odims.len() {
+            bail!("gather slice_sizes {:?} vs operand rank {}", slice_sizes, odims.len());
+        }
+        for (&s, &d) in slice_sizes.iter().zip(&odims) {
+            if s > d {
+                bail!("gather slice size {s} exceeds operand extent {d}");
+            }
+        }
+        for &c in &collapsed {
+            if slice_sizes.get(c) != Some(&1) {
+                bail!("gather collapsed dim {c} must have slice size 1");
+            }
+        }
+        // Range-check the dimension numbers up front so a malformed
+        // module reports a named error instead of panicking mid-walk.
+        if let Some(&d) = offset_dims.iter().find(|&&d| d >= out_dims.len()) {
+            bail!("gather offset dim {d} out of range for output rank {}", out_dims.len());
+        }
+        if let Some(&d) = start_map.iter().find(|&&d| d >= odims.len()) {
+            bail!("gather start_index_map entry {d} out of range for operand rank {}", odims.len());
+        }
+        if ivd > idx_dims.len() {
+            bail!("gather index_vector_dim {ivd} out of range for indices rank {}", idx_dims.len());
+        }
+        // Output positions not in offset_dims are batch positions; their
+        // coordinates walk the index tensor's batch dims in order.
+        let batch_pos: Vec<usize> =
+            (0..out_dims.len()).filter(|d| !offset_dims.contains(d)).collect();
+        let idx_batch: Vec<usize> = (0..idx_dims.len()).filter(|&d| d != ivd).collect();
+        if batch_pos.len() != idx_batch.len() {
+            bail!(
+                "gather: {} output batch dims vs {} index batch dims",
+                batch_pos.len(),
+                idx_batch.len()
+            );
+        }
+        // offset_dims (in order) map onto the non-collapsed operand dims
+        // (in order).
+        let offset_operand_dims: Vec<usize> =
+            (0..odims.len()).filter(|d| !collapsed.contains(d)).collect();
+        if offset_operand_dims.len() != offset_dims.len() {
+            bail!(
+                "gather: {} offset dims vs {} uncollapsed operand dims",
+                offset_dims.len(),
+                offset_operand_dims.len()
+            );
+        }
+        let ostrides = strides(&odims);
+        let istrides = strides(&idx_dims);
+        let out_elems: usize = out_dims.iter().product();
+        let mut oidx = Vec::new();
+        let fetch_start = |oidx: &[usize], k: usize| -> Result<i64> {
+            let mut lin = 0usize;
+            let mut b = 0usize;
+            for (d, &st) in istrides.iter().enumerate() {
+                let coord = if d == ivd {
+                    k
+                } else {
+                    let c = oidx[batch_pos[b]];
+                    b += 1;
+                    c
+                };
+                lin += coord * st;
+            }
+            idx_data
+                .get(lin)
+                .map(|&v| v as i64)
+                .ok_or_else(|| anyhow!("gather index read out of bounds"))
+        };
+        let mut out_src = Vec::with_capacity(out_elems);
+        for lin in 0..out_elems {
+            unravel(lin, out_dims, &mut oidx);
+            // Clamped start vector in operand space.
+            let mut start = vec![0i64; odims.len()];
+            for (k, &d) in start_map.iter().enumerate() {
+                let raw = fetch_start(&oidx, k)?;
+                start[d] = raw.clamp(0, (odims[d] - slice_sizes[d]) as i64);
+            }
+            let mut src = 0usize;
+            for (w, &d) in offset_operand_dims.iter().enumerate() {
+                src += (start[d] as usize + oidx[offset_dims[w]]) * ostrides[d];
+            }
+            for &d in &collapsed {
+                src += start[d] as usize * ostrides[d];
+            }
+            out_src.push(src);
+        }
+        let mut it = out_src.into_iter();
+        operand.remap(out_dims.to_vec(), |_| Ok(Some(it.next().unwrap())), None)
+    }
+
+    /// General-dimension-numbers `scatter` (XLA semantics: updates whose
+    /// window falls out of bounds are dropped). The combiner is the
+    /// `to_apply` computation; add/max/min/multiply bodies and the
+    /// overwrite body (`ROOT = parameter(1)`) run as fast paths,
+    /// anything else evaluates the body per update element.
+    fn scatter(
+        &self,
+        instr: &HloInstr,
+        env: &HashMap<&str, Value>,
+        out_vt: VType,
+    ) -> Result<Value> {
+        let operand = self.operand(instr, 0, env)?;
+        let (idx_dims, idx_data) = {
+            let (d, x) = self.operand(instr, 1, env)?.ints()?;
+            (d.to_vec(), x.to_vec())
+        };
+        let updates = self.operand(instr, 2, env)?;
+        let body = self.body(instr, "to_apply")?;
+        let odims = operand.dims().to_vec();
+        let udims = updates.dims().to_vec();
+        let window_dims = instr.dims_attr("update_window_dims");
+        let inserted = instr.dims_attr("inserted_window_dims");
+        let scatter_map = instr.dims_attr("scatter_dims_to_operand_dims");
+        let ivd: usize = instr
+            .attr("index_vector_dim")
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(idx_dims.len());
+        if let Some(&d) = window_dims.iter().find(|&&d| d >= udims.len()) {
+            bail!("scatter update_window_dim {d} out of range for updates rank {}", udims.len());
+        }
+        if let Some(&d) = scatter_map.iter().find(|&&d| d >= odims.len()) {
+            bail!(
+                "scatter scatter_dims_to_operand_dims entry {d} out of range for operand rank {}",
+                odims.len()
+            );
+        }
+        if let Some(&d) = inserted.iter().find(|&&d| d >= odims.len()) {
+            bail!("scatter inserted_window_dim {d} out of range for operand rank {}", odims.len());
+        }
+        if ivd > idx_dims.len() {
+            bail!("scatter index_vector_dim {ivd} out of range for indices rank {}", idx_dims.len());
+        }
+        let batch_pos: Vec<usize> =
+            (0..udims.len()).filter(|d| !window_dims.contains(d)).collect();
+        let idx_batch: Vec<usize> = (0..idx_dims.len()).filter(|&d| d != ivd).collect();
+        if batch_pos.len() != idx_batch.len() {
+            bail!(
+                "scatter: {} update batch dims vs {} index batch dims",
+                batch_pos.len(),
+                idx_batch.len()
+            );
+        }
+        let window_operand_dims: Vec<usize> =
+            (0..odims.len()).filter(|d| !inserted.contains(d)).collect();
+        if window_operand_dims.len() != window_dims.len() {
+            bail!(
+                "scatter: {} window dims vs {} uninserted operand dims",
+                window_dims.len(),
+                window_operand_dims.len()
+            );
+        }
+        let ostrides = strides(&odims);
+        let istrides = strides(&idx_dims);
+        let u_elems: usize = udims.iter().product();
+        let mut uidx = Vec::new();
+        let fetch_start = |uidx: &[usize], k: usize| -> Result<i64> {
+            let mut lin = 0usize;
+            let mut b = 0usize;
+            for (d, &st) in istrides.iter().enumerate() {
+                let coord = if d == ivd {
+                    k
+                } else {
+                    let c = uidx[batch_pos[b]];
+                    b += 1;
+                    c
+                };
+                lin += coord * st;
+            }
+            idx_data
+                .get(lin)
+                .map(|&v| v as i64)
+                .ok_or_else(|| anyhow!("scatter index read out of bounds"))
+        };
+        // Destination linear index for one update element, or None when
+        // out of bounds (dropped).
+        let dest = |uidx: &[usize]| -> Result<Option<usize>> {
+            let mut start = vec![0i64; odims.len()];
+            for (k, &d) in scatter_map.iter().enumerate() {
+                start[d] = fetch_start(uidx, k)?;
+            }
+            let mut lin = 0usize;
+            for (w, &d) in window_operand_dims.iter().enumerate() {
+                let i = start[d] + uidx[window_dims[w]] as i64;
+                if i < 0 || i as usize >= odims[d] {
+                    return Ok(None);
+                }
+                lin += i as usize * ostrides[d];
+            }
+            for &d in &inserted {
+                let i = start[d];
+                if i < 0 || i as usize >= odims[d] {
+                    return Ok(None);
+                }
+                lin += i as usize * ostrides[d];
+            }
+            Ok(Some(lin))
+        };
+        let combiner = scalar_body_op(body);
+        if operand.is_int() {
+            let (_, base) = operand.ints()?;
+            let (_, upd) = updates.ints()?;
+            let mut out = base.to_vec();
+            for (lin, &x) in upd.iter().enumerate() {
+                unravel(lin, &udims, &mut uidx);
+                let Some(o) = dest(&uidx)? else { continue };
+                out[o] = match combiner.as_deref() {
+                    Some("add") => out[o].wrapping_add(x),
+                    Some("maximum") => out[o].max(x),
+                    Some("minimum") => out[o].min(x),
+                    Some("multiply") => out[o].wrapping_mul(x),
+                    Some("overwrite") => x,
+                    _ => bail!("generic scatter combiners support float operands only"),
+                };
+            }
+            Value::from_i32s(out_vt, odims, out)
+        } else {
+            let (_, base) = operand.floats()?;
+            let upd = updates.floats()?.1.into_owned();
+            let mut out = base.into_owned();
+            for (lin, &x) in upd.iter().enumerate() {
+                unravel(lin, &udims, &mut uidx);
+                let Some(o) = dest(&uidx)? else { continue };
+                out[o] = match combiner.as_deref() {
+                    Some("add") => out[o] + x,
+                    Some("maximum") => out[o].max(x),
+                    Some("minimum") => out[o].min(x),
+                    Some("multiply") => out[o] * x,
+                    Some("overwrite") => x,
+                    _ => {
+                        let r = self.eval_computation(
+                            body,
+                            &[Value::scalar_f32(out[o]), Value::scalar_f32(x)],
+                        )?;
+                        r.scalar()? as f32
+                    }
+                };
+            }
+            Value::from_f32s(out_vt, odims, out)
+        }
+    }
+
     /// `reduce` with fast paths for the common scalar bodies and a generic
-    /// recursive path for anything else.
+    /// recursive path for anything else. Accumulation is f64 regardless
+    /// of storage type; the result rounds once into `out_vt`.
     fn reduce(
         &self,
         data: &Value,
         init: &Value,
         dims: &[usize],
         body: &HloComputation,
+        out_vt: VType,
     ) -> Result<Value> {
         let in_dims = data.dims().to_vec();
         for &d in dims {
@@ -310,80 +814,79 @@ impl Interp {
             (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
         let out_dims: Vec<usize> = keep.iter().map(|&d| in_dims[d]).collect();
         let out_strides = strides(&out_dims);
-
-        // Recognize `(a, b) -> op(a, b)` bodies for the fold fast path:
-        // exactly two parameters AND the root consuming both of them raw
-        // (a body like `add(a, multiply(b, b))` must take the generic
-        // path, not be misfolded into a plain sum).
-        let fast = body.root().and_then(|r| {
-            let params: Vec<&str> = body
-                .instrs
-                .iter()
-                .filter(|i| i.opcode == "parameter")
-                .map(|i| i.name.as_str())
-                .collect();
-            let root_takes_params = r.operands.len() == 2
-                && params.len() == 2
-                && r.operands.iter().all(|o| params.contains(&o.as_str()));
-            match (root_takes_params, r.opcode.as_str()) {
-                (true, "add") | (true, "maximum") | (true, "minimum") | (true, "multiply") => {
-                    Some(r.opcode.clone())
-                }
-                _ => None,
-            }
-        });
+        let fast = scalar_body_op(body).filter(|op| op.as_str() != "overwrite");
 
         let mut idx = Vec::new();
-        match data {
-            Value::F32 { data: xs, .. } => {
-                let (_, init_v) = init.f32s()?;
-                let init_v = *init_v.first().ok_or_else(|| anyhow!("empty reduce init"))?;
-                // f64 accumulators for the additive fast path.
-                let mut acc = vec![init_v as f64; out_dims.iter().product::<usize>().max(1)];
-                for (lin, &x) in xs.iter().enumerate() {
-                    unravel(lin, &in_dims, &mut idx);
-                    let o: usize =
-                        keep.iter().enumerate().map(|(i, &d)| idx[d] * out_strides[i]).sum();
-                    match fast.as_deref() {
-                        Some("add") => acc[o] += x as f64,
-                        Some("maximum") => acc[o] = acc[o].max(x as f64),
-                        Some("minimum") => acc[o] = acc[o].min(x as f64),
-                        Some("multiply") => acc[o] *= x as f64,
-                        _ => {
-                            let r = self.eval_computation(
-                                body,
-                                &[Value::scalar_f32(acc[o] as f32), Value::scalar_f32(x)],
-                            )?;
-                            let (_, rv) = r.f32s()?;
-                            acc[o] = rv[0] as f64;
-                        }
+        if data.is_int() {
+            let (_, xs) = data.ints()?;
+            let (_, init_v) = init.ints()?;
+            let init_v = *init_v.first().ok_or_else(|| anyhow!("empty reduce init"))?;
+            let mut acc = vec![init_v; out_dims.iter().product::<usize>().max(1)];
+            for (lin, &x) in xs.iter().enumerate() {
+                unravel(lin, &in_dims, &mut idx);
+                let o: usize =
+                    keep.iter().enumerate().map(|(i, &d)| idx[d] * out_strides[i]).sum();
+                match fast.as_deref() {
+                    Some("add") => acc[o] = acc[o].wrapping_add(x),
+                    Some("maximum") => acc[o] = acc[o].max(x),
+                    Some("minimum") => acc[o] = acc[o].min(x),
+                    Some("multiply") => acc[o] = acc[o].wrapping_mul(x),
+                    Some("and") => acc[o] &= x,
+                    Some("or") => acc[o] |= x,
+                    _ => bail!("generic reduce bodies support float operands only"),
+                }
+            }
+            Value::from_i32s(out_vt, out_dims, acc)
+        } else {
+            let (_, xs) = data.floats()?;
+            let (_, init_v) = init.floats()?;
+            let init_v = *init_v.first().ok_or_else(|| anyhow!("empty reduce init"))?;
+            let mut acc = vec![init_v as f64; out_dims.iter().product::<usize>().max(1)];
+            for (lin, &x) in xs.iter().enumerate() {
+                unravel(lin, &in_dims, &mut idx);
+                let o: usize =
+                    keep.iter().enumerate().map(|(i, &d)| idx[d] * out_strides[i]).sum();
+                match fast.as_deref() {
+                    Some("add") => acc[o] += x as f64,
+                    Some("maximum") => acc[o] = acc[o].max(x as f64),
+                    Some("minimum") => acc[o] = acc[o].min(x as f64),
+                    Some("multiply") => acc[o] *= x as f64,
+                    _ => {
+                        let r = self.eval_computation(
+                            body,
+                            &[Value::scalar_f32(acc[o] as f32), Value::scalar_f32(x)],
+                        )?;
+                        acc[o] = r.scalar()?;
                     }
                 }
-                Ok(Value::F32 {
-                    dims: out_dims,
-                    data: acc.into_iter().map(|v| v as f32).collect(),
-                })
             }
-            Value::I32 { data: xs, .. } => {
-                let (_, init_v) = init.i32s()?;
-                let init_v = *init_v.first().ok_or_else(|| anyhow!("empty reduce init"))?;
-                let mut acc = vec![init_v; out_dims.iter().product::<usize>().max(1)];
-                for (lin, &x) in xs.iter().enumerate() {
-                    unravel(lin, &in_dims, &mut idx);
-                    let o: usize =
-                        keep.iter().enumerate().map(|(i, &d)| idx[d] * out_strides[i]).sum();
-                    match fast.as_deref() {
-                        Some("add") => acc[o] = acc[o].wrapping_add(x),
-                        Some("maximum") => acc[o] = acc[o].max(x),
-                        Some("minimum") => acc[o] = acc[o].min(x),
-                        Some("multiply") => acc[o] = acc[o].wrapping_mul(x),
-                        _ => bail!("generic reduce bodies support f32 only"),
-                    }
-                }
-                Ok(Value::I32 { dims: out_dims, data: acc })
-            }
-            Value::Tuple(_) => bail!("reduce over tuple"),
+            Value::from_f32s(out_vt, out_dims, acc.into_iter().map(|v| v as f32).collect())
         }
+    }
+}
+
+/// Recognize a `(a, b) -> op(a, b)` scalar combiner body: exactly two
+/// parameters AND the root consuming both of them raw (a body like
+/// `add(a, multiply(b, b))` must take the generic path). A body whose
+/// root *is* the second parameter is the overwrite combiner.
+fn scalar_body_op(body: &HloComputation) -> Option<String> {
+    let r = body.root()?;
+    let params: Vec<&str> = body
+        .instrs
+        .iter()
+        .filter(|i| i.opcode == "parameter")
+        .map(|i| i.name.as_str())
+        .collect();
+    if r.opcode == "parameter" && r.payload.trim() == "1" {
+        return Some("overwrite".to_string());
+    }
+    let root_takes_params = r.operands.len() == 2
+        && params.len() == 2
+        && r.operands.iter().all(|o| params.contains(&o.as_str()));
+    match (root_takes_params, r.opcode.as_str()) {
+        (true, "add") | (true, "maximum") | (true, "minimum") | (true, "multiply")
+        | (true, "and") | (true, "or") => Some(r.opcode.clone()),
+        _ => None,
     }
 }
 
@@ -391,40 +894,35 @@ impl Interp {
 // Op implementations (free functions; no interpreter state needed).
 // ---------------------------------------------------------------------------
 
-fn constant(payload: &str, dtype: DType, dims: &[usize]) -> Result<Value> {
+fn constant(payload: &str, vt: VType, dims: &[usize]) -> Result<Value> {
     let elems: usize = dims.iter().product();
     let toks: Vec<&str> = payload
         .split(|c: char| c == ',' || c == '{' || c == '}' || c.is_whitespace())
         .filter(|t| !t.is_empty())
         .collect();
-    match dtype {
-        DType::I32 => {
-            let mut vals = Vec::with_capacity(toks.len());
-            for t in &toks {
-                vals.push(match *t {
-                    "true" => 1,
-                    "false" => 0,
-                    _ => t
-                        .parse::<i64>()
-                        .map_err(|_| anyhow!("bad i32 literal '{t}'"))? as i32,
-                });
-            }
-            let data = splat_or_exact(vals, elems)?;
-            Ok(Value::I32 { dims: dims.to_vec(), data })
+    if vt.is_float() {
+        let mut vals = Vec::with_capacity(toks.len());
+        for t in &toks {
+            vals.push(match *t {
+                "inf" => f32::INFINITY,
+                "-inf" => f32::NEG_INFINITY,
+                "nan" => f32::NAN,
+                _ => t.parse::<f32>().map_err(|_| anyhow!("bad float literal '{t}'"))?,
+            });
         }
-        _ => {
-            let mut vals = Vec::with_capacity(toks.len());
-            for t in &toks {
-                vals.push(match *t {
-                    "inf" => f32::INFINITY,
-                    "-inf" => f32::NEG_INFINITY,
-                    "nan" => f32::NAN,
-                    _ => t.parse::<f32>().map_err(|_| anyhow!("bad f32 literal '{t}'"))?,
-                });
-            }
-            let data = splat_or_exact(vals, elems)?;
-            Ok(Value::F32 { dims: dims.to_vec(), data })
+        Value::from_f32s(vt, dims.to_vec(), splat_or_exact(vals, elems)?)
+    } else {
+        let mut vals = Vec::with_capacity(toks.len());
+        for t in &toks {
+            vals.push(match *t {
+                "true" => 1,
+                "false" => 0,
+                _ => t
+                    .parse::<i64>()
+                    .map_err(|_| anyhow!("bad integer literal '{t}'"))? as i32,
+            });
         }
+        Value::from_i32s(vt, dims.to_vec(), splat_or_exact(vals, elems)?)
     }
 }
 
@@ -439,7 +937,7 @@ fn splat_or_exact<T: Copy>(vals: Vec<T>, elems: usize) -> Result<Vec<T>> {
     }
 }
 
-fn iota(dtype: DType, dims: &[usize], d: usize) -> Result<Value> {
+fn iota(vt: VType, dims: &[usize], d: usize) -> Result<Value> {
     if d >= dims.len() {
         bail!("iota_dimension {d} out of range for rank {}", dims.len());
     }
@@ -447,9 +945,10 @@ fn iota(dtype: DType, dims: &[usize], d: usize) -> Result<Value> {
     let st = strides(dims);
     let extent = dims[d];
     let vals = (0..elems).map(|lin| (lin / st[d]) % extent);
-    match dtype {
-        DType::I32 => Ok(Value::I32 { dims: dims.to_vec(), data: vals.map(|v| v as i32).collect() }),
-        _ => Ok(Value::F32 { dims: dims.to_vec(), data: vals.map(|v| v as f32).collect() }),
+    if vt.is_float() {
+        Value::from_f32s(vt, dims.to_vec(), vals.map(|v| v as f32).collect())
+    } else {
+        Value::from_i32s(vt, dims.to_vec(), vals.map(|v| v as i32).collect())
     }
 }
 
@@ -458,32 +957,7 @@ fn reshaped(v: &Value, out_dims: &[usize]) -> Result<Value> {
     if n != v.elems() {
         bail!("reshape: {} elems into {:?}", v.elems(), out_dims);
     }
-    Ok(match v {
-        Value::F32 { data, .. } => Value::F32 { dims: out_dims.to_vec(), data: data.clone() },
-        Value::I32 { data, .. } => Value::I32 { dims: out_dims.to_vec(), data: data.clone() },
-        Value::Tuple(_) => bail!("reshape of tuple"),
-    })
-}
-
-fn convert(v: &Value, target: DType) -> Result<Value> {
-    Ok(match (v, target) {
-        (Value::F32 { dims, data }, DType::I32) => Value::I32 {
-            dims: dims.clone(),
-            // XLA converts float→int by truncation toward zero.
-            data: data.iter().map(|&x| x as i32).collect(),
-        },
-        (Value::I32 { dims, data }, DType::I32) => {
-            Value::I32 { dims: dims.clone(), data: data.clone() }
-        }
-        (Value::I32 { dims, data }, _) => Value::F32 {
-            dims: dims.clone(),
-            data: data.iter().map(|&x| x as f32).collect(),
-        },
-        (Value::F32 { dims, data }, _) => {
-            Value::F32 { dims: dims.clone(), data: data.clone() }
-        }
-        (Value::Tuple(_), _) => bail!("convert of tuple"),
-    })
+    v.remap(out_dims.to_vec(), |lin| Ok(Some(lin)), None)
 }
 
 fn broadcast(v: &Value, out_dims: &[usize], mapping: &[usize]) -> Result<Value> {
@@ -500,24 +974,16 @@ fn broadcast(v: &Value, out_dims: &[usize], mapping: &[usize]) -> Result<Value> 
             bail!("broadcast dim {k}→{m} mismatch: {:?} into {:?}", in_dims, out_dims);
         }
     }
-    let out_elems: usize = out_dims.iter().product();
     let in_strides = strides(&in_dims);
     let mut idx = Vec::new();
-    let gather = |lin: usize, idx: &mut Vec<usize>| -> usize {
-        unravel(lin, out_dims, idx);
-        mapping.iter().enumerate().map(|(k, &m)| idx[m] * in_strides[k]).sum()
-    };
-    Ok(match v {
-        Value::F32 { data, .. } => Value::F32 {
-            dims: out_dims.to_vec(),
-            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
+    v.remap(
+        out_dims.to_vec(),
+        |lin| {
+            unravel(lin, out_dims, &mut idx);
+            Ok(Some(mapping.iter().enumerate().map(|(k, &m)| idx[m] * in_strides[k]).sum()))
         },
-        Value::I32 { data, .. } => Value::I32 {
-            dims: out_dims.to_vec(),
-            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
-        },
-        Value::Tuple(_) => bail!("broadcast of tuple"),
-    })
+        None,
+    )
 }
 
 fn transpose(v: &Value, perm: &[usize]) -> Result<Value> {
@@ -526,24 +992,17 @@ fn transpose(v: &Value, perm: &[usize]) -> Result<Value> {
         bail!("transpose permutation {:?} vs rank {}", perm, in_dims.len());
     }
     let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
-    let out_elems: usize = out_dims.iter().product();
     let in_strides = strides(&in_dims);
+    let od = out_dims.clone();
     let mut idx = Vec::new();
-    let gather = |lin: usize, idx: &mut Vec<usize>| -> usize {
-        unravel(lin, &out_dims, idx);
-        perm.iter().enumerate().map(|(i, &p)| idx[i] * in_strides[p]).sum()
-    };
-    Ok(match v {
-        Value::F32 { data, .. } => Value::F32 {
-            dims: out_dims.clone(),
-            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
+    v.remap(
+        out_dims,
+        |lin| {
+            unravel(lin, &od, &mut idx);
+            Ok(Some(perm.iter().enumerate().map(|(i, &p)| idx[i] * in_strides[p]).sum()))
         },
-        Value::I32 { data, .. } => Value::I32 {
-            dims: out_dims.clone(),
-            data: (0..out_elems).map(|l| data[gather(l, &mut idx)]).collect(),
-        },
-        Value::Tuple(_) => bail!("transpose of tuple"),
-    })
+        None,
+    )
 }
 
 /// Parse `{[0:5], [2:4:1]}` into per-dimension (start, stride).
@@ -570,38 +1029,114 @@ fn parse_slice_attr(attr: &str, rank: usize) -> Result<Vec<(usize, usize)>> {
 fn slice(v: &Value, attr: &str, out_dims: &[usize]) -> Result<Value> {
     let in_dims = v.dims().to_vec();
     let spec = parse_slice_attr(attr, in_dims.len())?;
-    let out_elems: usize = out_dims.iter().product();
     let in_strides = strides(&in_dims);
     let mut idx = Vec::new();
-    let gather = |lin: usize, idx: &mut Vec<usize>| -> Result<usize> {
-        unravel(lin, out_dims, idx);
-        let mut o = 0usize;
-        for (d, &(start, stride)) in spec.iter().enumerate() {
-            let i = start + idx[d] * stride;
-            if i >= in_dims[d] {
-                bail!("slice index {i} out of bounds for dim {d} (extent {})", in_dims[d]);
+    v.remap(
+        out_dims.to_vec(),
+        |lin| {
+            unravel(lin, out_dims, &mut idx);
+            let mut o = 0usize;
+            for (d, &(start, stride)) in spec.iter().enumerate() {
+                let i = start + idx[d] * stride;
+                if i >= in_dims[d] {
+                    bail!("slice index {i} out of bounds for dim {d} (extent {})", in_dims[d]);
+                }
+                o += i * in_strides[d];
             }
-            o += i * in_strides[d];
+            Ok(Some(o))
+        },
+        None,
+    )
+}
+
+fn reverse(v: &Value, dims: &[usize]) -> Result<Value> {
+    let in_dims = v.dims().to_vec();
+    for &d in dims {
+        if d >= in_dims.len() {
+            bail!("reverse dimension {d} out of range for rank {}", in_dims.len());
         }
-        Ok(o)
-    };
-    match v {
-        Value::F32 { data, .. } => {
-            let mut out = Vec::with_capacity(out_elems);
-            for l in 0..out_elems {
-                out.push(data[gather(l, &mut idx)?]);
-            }
-            Ok(Value::F32 { dims: out_dims.to_vec(), data: out })
-        }
-        Value::I32 { data, .. } => {
-            let mut out = Vec::with_capacity(out_elems);
-            for l in 0..out_elems {
-                out.push(data[gather(l, &mut idx)?]);
-            }
-            Ok(Value::I32 { dims: out_dims.to_vec(), data: out })
-        }
-        Value::Tuple(_) => bail!("slice of tuple"),
     }
+    let in_strides = strides(&in_dims);
+    let od = in_dims.clone();
+    let mut idx = Vec::new();
+    v.remap(
+        in_dims.clone(),
+        |lin| {
+            unravel(lin, &od, &mut idx);
+            let mut o = 0usize;
+            for (d, &i) in idx.iter().enumerate() {
+                let i = if dims.contains(&d) { od[d] - 1 - i } else { i };
+                o += i * in_strides[d];
+            }
+            Ok(Some(o))
+        },
+        None,
+    )
+}
+
+/// Parse `1_2_0x0_3` (lo_hi[_interior] per dimension, `x`-separated)
+/// into (lo, hi, interior) triples. Negative lo/hi trim edges.
+fn parse_pad_attr(attr: &str, rank: usize) -> Result<Vec<(i64, i64, usize)>> {
+    let mut out = Vec::new();
+    for part in attr.trim().split('x') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = part.split('_').collect();
+        if f.len() < 2 || f.len() > 3 {
+            bail!("bad padding spec '{part}' (expected lo_hi[_interior])");
+        }
+        let lo: i64 = f[0].trim().parse().map_err(|_| anyhow!("bad pad lo '{}'", f[0]))?;
+        let hi: i64 = f[1].trim().parse().map_err(|_| anyhow!("bad pad hi '{}'", f[1]))?;
+        let interior: usize =
+            f.get(2).map(|s| s.trim().parse().unwrap_or(0)).unwrap_or(0);
+        out.push((lo, hi, interior));
+    }
+    if out.len() != rank {
+        bail!("padding '{attr}' has {} dims, operand rank {rank}", out.len());
+    }
+    Ok(out)
+}
+
+fn pad(v: &Value, pad_value: &Value, attr: &str, out_dims: &[usize]) -> Result<Value> {
+    let in_dims = v.dims().to_vec();
+    let spec = parse_pad_attr(attr, in_dims.len())?;
+    // Validate declared output against the spec.
+    for (d, &(lo, hi, interior)) in spec.iter().enumerate() {
+        let n = in_dims[d] as i64;
+        let expect = lo + hi + n + (n - 1).max(0) * interior as i64;
+        if expect != out_dims[d] as i64 {
+            bail!(
+                "pad dim {d}: spec {lo}_{hi}_{interior} over extent {n} gives {expect}, \
+                 result declares {}",
+                out_dims[d]
+            );
+        }
+    }
+    let in_strides = strides(&in_dims);
+    let mut idx = Vec::new();
+    v.remap(
+        out_dims.to_vec(),
+        |lin| {
+            unravel(lin, out_dims, &mut idx);
+            let mut o = 0usize;
+            for (d, &(lo, _, interior)) in spec.iter().enumerate() {
+                let pos = idx[d] as i64 - lo;
+                let step = interior as i64 + 1;
+                if pos < 0 || pos % step != 0 {
+                    return Ok(None);
+                }
+                let i = (pos / step) as usize;
+                if i >= in_dims[d] {
+                    return Ok(None);
+                }
+                o += i * in_strides[d];
+            }
+            Ok(Some(o))
+        },
+        Some(pad_value),
+    )
 }
 
 fn concatenate(parts: &[&Value], dim: usize, out_dims: &[usize]) -> Result<Value> {
@@ -634,44 +1169,60 @@ fn concatenate(parts: &[&Value], dim: usize, out_dims: &[usize]) -> Result<Value
             out_dims[dim]
         );
     }
-    let out_elems: usize = out_dims.iter().product();
-    let out_strides = strides(out_dims);
-    let is_f32 = matches!(parts[0], Value::F32 { .. });
-    let mut out_f = vec![0.0f32; if is_f32 { out_elems } else { 0 }];
-    let mut out_i = vec![0i32; if is_f32 { 0 } else { out_elems }];
-    let mut offset = 0usize;
-    let mut idx = Vec::new();
-    for part in parts {
-        if matches!(part, Value::F32 { .. }) != is_f32 {
-            bail!("concatenate: mixed element types");
+    // Per concat-coordinate lookup: coordinate along `dim` → (part,
+    // local coordinate). Robust to zero-extent parts.
+    let mut which: Vec<(usize, usize)> = Vec::with_capacity(out_dims[dim]);
+    for (p, part) in parts.iter().enumerate() {
+        for local in 0..part.dims()[dim] {
+            which.push((p, local));
         }
-        let in_dims = part.dims().to_vec();
-        if dim >= in_dims.len() {
-            bail!("concatenate dim {dim} out of range");
-        }
-        let n = part.elems();
-        for lin in 0..n {
-            unravel(lin, &in_dims, &mut idx);
-            idx[dim] += offset;
-            let o: usize = idx.iter().zip(&out_strides).map(|(&i, &s)| i * s).sum();
-            match part {
-                Value::F32 { data, .. } => out_f[o] = data[lin],
-                Value::I32 { data, .. } => out_i[o] = data[lin],
-                Value::Tuple(_) => bail!("concatenate of tuple"),
-            }
-        }
-        offset += in_dims[dim];
     }
-    Ok(if is_f32 {
-        Value::F32 { dims: out_dims.to_vec(), data: out_f }
-    } else {
-        Value::I32 { dims: out_dims.to_vec(), data: out_i }
-    })
+    let out_elems: usize = out_dims.iter().product();
+    let first = parts[0];
+    let same_storage = parts.iter().all(|p| p.vtype() == first.vtype());
+    if !same_storage {
+        bail!("concatenate: mixed element types");
+    }
+    let mut oidx = Vec::new();
+    let part_dims: Vec<Vec<usize>> = parts.iter().map(|p| p.dims().to_vec()).collect();
+    let part_strides: Vec<Vec<usize>> = part_dims.iter().map(|d| strides(d)).collect();
+    // (part index, source linear) for every output element.
+    let mut sources = Vec::with_capacity(out_elems);
+    for lin in 0..out_elems {
+        unravel(lin, out_dims, &mut oidx);
+        let (p, local) = which[oidx[dim]];
+        let mut src = 0usize;
+        for (d, &i) in oidx.iter().enumerate() {
+            let i = if d == dim { local } else { i };
+            src += i * part_strides[p][d];
+        }
+        sources.push((p, src));
+    }
+    macro_rules! assemble {
+        ($variant:ident) => {{
+            let bufs: Vec<&[_]> = parts
+                .iter()
+                .map(|p| match p {
+                    Value::$variant { data, .. } => Ok(data.as_slice()),
+                    _ => Err(anyhow!("concatenate: mixed element types")),
+                })
+                .collect::<Result<_>>()?;
+            let data = sources.iter().map(|&(p, s)| bufs[p][s]).collect();
+            Ok(Value::$variant { dims: out_dims.to_vec(), data })
+        }};
+    }
+    match first {
+        Value::F32 { .. } => assemble!(F32),
+        Value::F16 { .. } => assemble!(F16),
+        Value::BF16 { .. } => assemble!(BF16),
+        Value::I32 { .. } => assemble!(I32),
+        Value::Tuple(_) => bail!("concatenate of tuple"),
+    }
 }
 
 /// General dot: batch dims + any number of contracting dims per side.
 /// Output dims are `[batch (lhs order), lhs free, rhs free]` — XLA's
-/// DotGeneral convention. f32 with f64 accumulation.
+/// DotGeneral convention. f64 accumulation, one rounding into `out_vt`.
 fn dot(
     lhs: &Value,
     rhs: &Value,
@@ -679,9 +1230,12 @@ fn dot(
     lc: &[usize],
     rb: &[usize],
     rc: &[usize],
+    out_vt: VType,
 ) -> Result<Value> {
-    let (ldims, ldata) = lhs.f32s()?;
-    let (rdims, rdata) = rhs.f32s()?;
+    let (ldims, ldata) = lhs.floats()?;
+    let (rdims, rdata) = rhs.floats()?;
+    let ldims = ldims.to_vec();
+    let rdims = rdims.to_vec();
     if lb.len() != rb.len() || lc.len() != rc.len() {
         bail!("dot: batch/contracting dim count mismatch");
     }
@@ -704,8 +1258,8 @@ fn dot(
     out_dims.extend(rfree.iter().map(|&d| rdims[d]));
     let out_elems: usize = out_dims.iter().product::<usize>().max(1);
 
-    let lstr = strides(ldims);
-    let rstr = strides(rdims);
+    let lstr = strides(&ldims);
+    let rstr = strides(&rdims);
     // Precompute (lhs offset, rhs offset) for every contraction index.
     let csizes: Vec<usize> = lc.iter().map(|&d| ldims[d]).collect();
     let celems: usize = csizes.iter().product::<usize>().max(1);
@@ -744,94 +1298,157 @@ fn dot(
         }
         out.push(acc as f32);
     }
-    Ok(Value::F32 { dims: out_dims, data: out })
+    Value::from_f32s(out_vt, out_dims, out)
 }
 
-fn binary(op: &str, a: &Value, b: &Value) -> Result<Value> {
+fn binary(op: &str, a: &Value, b: &Value, out_vt: VType) -> Result<Value> {
     if a.dims() != b.dims() {
         bail!("{op}: shape mismatch {:?} vs {:?}", a.dims(), b.dims());
     }
-    match (a, b) {
-        (Value::F32 { dims, data: xa }, Value::F32 { data: xb, .. }) => {
-            let f: fn(f32, f32) -> f32 = match op {
-                "add" => |x, y| x + y,
-                "subtract" => |x, y| x - y,
-                "multiply" => |x, y| x * y,
-                "divide" => |x, y| x / y,
-                "maximum" => f32::max,
-                "minimum" => f32::min,
-                "power" => f32::powf,
-                "remainder" => |x, y| x % y,
-                _ => bail!("{op} unsupported on f32"),
-            };
-            Ok(Value::F32 {
-                dims: dims.clone(),
-                data: xa.iter().zip(xb).map(|(&x, &y)| f(x, y)).collect(),
-            })
-        }
-        (Value::I32 { dims, data: xa }, Value::I32 { data: xb, .. }) => {
-            let f: fn(i32, i32) -> i32 = match op {
-                "add" => i32::wrapping_add,
-                "subtract" => i32::wrapping_sub,
-                "multiply" => i32::wrapping_mul,
-                "divide" => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
-                "maximum" => i32::max,
-                "minimum" => i32::min,
-                "remainder" => |x, y| if y == 0 { 0 } else { x.wrapping_rem(y) },
-                "and" => |x, y| x & y,
-                "or" => |x, y| x | y,
-                "xor" => |x, y| x ^ y,
-                _ => bail!("{op} unsupported on i32"),
-            };
-            Ok(Value::I32 {
-                dims: dims.clone(),
-                data: xa.iter().zip(xb).map(|(&x, &y)| f(x, y)).collect(),
-            })
-        }
-        _ => bail!("{op}: mixed or tuple operand types"),
+    if a.is_int() && b.is_int() {
+        let (dims, xa) = a.ints()?;
+        let (_, xb) = b.ints()?;
+        let f: fn(i32, i32) -> i32 = match op {
+            "add" => i32::wrapping_add,
+            "subtract" => i32::wrapping_sub,
+            "multiply" => i32::wrapping_mul,
+            "divide" => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
+            "maximum" => i32::max,
+            "minimum" => i32::min,
+            "remainder" => |x, y| if y == 0 { 0 } else { x.wrapping_rem(y) },
+            "and" => |x, y| x & y,
+            "or" => |x, y| x | y,
+            "xor" => |x, y| x ^ y,
+            // XLA integer pow: negative exponents give 0 except for
+            // base ±1; positive exponents wrap like the other int ops.
+            "power" => |x: i32, y: i32| {
+                if y < 0 {
+                    return match x {
+                        1 => 1,
+                        -1 => {
+                            if y % 2 == 0 {
+                                1
+                            } else {
+                                -1
+                            }
+                        }
+                        _ => 0,
+                    };
+                }
+                let (mut base, mut exp, mut acc) = (x, y as u32, 1i32);
+                while exp > 0 {
+                    if exp & 1 == 1 {
+                        acc = acc.wrapping_mul(base);
+                    }
+                    base = base.wrapping_mul(base);
+                    exp >>= 1;
+                }
+                acc
+            },
+            _ => bail!("{op} unsupported on integers"),
+        };
+        Value::from_i32s(
+            out_vt,
+            dims.to_vec(),
+            xa.iter().zip(xb).map(|(&x, &y)| f(x, y)).collect(),
+        )
+    } else if a.is_float() && b.is_float() {
+        let (dims, xa) = a.floats()?;
+        let (_, xb) = b.floats()?;
+        let f: fn(f32, f32) -> f32 = match op {
+            "add" => |x, y| x + y,
+            "subtract" => |x, y| x - y,
+            "multiply" => |x, y| x * y,
+            "divide" => |x, y| x / y,
+            "maximum" => f32::max,
+            "minimum" => f32::min,
+            "power" => f32::powf,
+            "remainder" => |x, y| x % y,
+            "atan2" => f32::atan2,
+            _ => bail!("{op} unsupported on floats"),
+        };
+        Value::from_f32s(
+            out_vt,
+            dims.to_vec(),
+            xa.iter().zip(xb.iter()).map(|(&x, &y)| f(x, y)).collect(),
+        )
+    } else {
+        bail!("{op}: mixed or tuple operand types")
     }
 }
 
-fn unary(op: &str, a: &Value) -> Result<Value> {
-    match a {
-        Value::F32 { dims, data } => {
-            let f: fn(f32) -> f32 = match op {
-                "negate" => |x| -x,
-                "exponential" => f32::exp,
-                "exponential-minus-one" => f32::exp_m1,
-                "log" => f32::ln,
-                "log-plus-one" => f32::ln_1p,
-                "sqrt" => f32::sqrt,
-                "rsqrt" => |x| 1.0 / x.sqrt(),
-                "tanh" => f32::tanh,
-                "logistic" => |x| 1.0 / (1.0 + (-x).exp()),
-                "abs" => f32::abs,
-                "sign" => f32::signum,
-                "floor" => f32::floor,
-                "ceil" => f32::ceil,
-                "cosine" => f32::cos,
-                "sine" => f32::sin,
-                _ => bail!("{op} unsupported on f32"),
-            };
-            Ok(Value::F32 { dims: dims.clone(), data: data.iter().map(|&x| f(x)).collect() })
+fn unary(op: &str, a: &Value, out_vt: VType) -> Result<Value> {
+    if a.is_int() {
+        let (dims, data) = a.ints()?;
+        let f: fn(i32) -> i32 = match op {
+            "negate" => |x| x.wrapping_neg(),
+            "abs" => i32::wrapping_abs,
+            "sign" => i32::signum,
+            // `not` is logical on pred, bitwise complement on s32 — the
+            // declared result type says which one this instruction is.
+            "not" => {
+                if out_vt == VType::Pred {
+                    |x| (x == 0) as i32
+                } else {
+                    |x: i32| !x
+                }
+            }
+            "is-finite" => |_| 1,
+            _ => bail!("{op} unsupported on integers"),
+        };
+        Value::from_i32s(out_vt, dims.to_vec(), data.iter().map(|&x| f(x)).collect())
+    } else if a.is_float() {
+        let (dims, data) = a.floats()?;
+        if op == "is-finite" {
+            return Value::from_i32s(
+                out_vt,
+                dims.to_vec(),
+                data.iter().map(|&x| x.is_finite() as i32).collect(),
+            );
         }
-        Value::I32 { dims, data } => {
-            let f: fn(i32) -> i32 = match op {
-                "negate" => |x| x.wrapping_neg(),
-                "abs" => i32::wrapping_abs,
-                "sign" => i32::signum,
-                "not" => |x| if x == 0 { 1 } else { 0 }, // pred semantics
-                _ => bail!("{op} unsupported on i32"),
-            };
-            Ok(Value::I32 { dims: dims.clone(), data: data.iter().map(|&x| f(x)).collect() })
-        }
-        Value::Tuple(_) => bail!("{op} of tuple"),
+        let f: fn(f32) -> f32 = match op {
+            "negate" => |x| -x,
+            "exponential" => f32::exp,
+            "exponential-minus-one" => f32::exp_m1,
+            "log" => f32::ln,
+            "log-plus-one" => f32::ln_1p,
+            "sqrt" => f32::sqrt,
+            "rsqrt" => |x| 1.0 / x.sqrt(),
+            "cbrt" => f32::cbrt,
+            "tanh" => f32::tanh,
+            "logistic" => |x| 1.0 / (1.0 + (-x).exp()),
+            "abs" => f32::abs,
+            "sign" => f32::signum,
+            "floor" => f32::floor,
+            "ceil" => f32::ceil,
+            "round-nearest-afz" => f32::round,
+            "round-nearest-even" => round_ties_even_f32,
+            "cosine" => f32::cos,
+            "sine" => f32::sin,
+            _ => bail!("{op} unsupported on floats"),
+        };
+        Value::from_f32s(out_vt, dims.to_vec(), data.iter().map(|&x| f(x)).collect())
+    } else {
+        bail!("{op} of tuple")
+    }
+}
+
+/// Round half to even (MSRV-safe stand-in for `f32::round_ties_even`).
+fn round_ties_even_f32(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - x.signum()
+    } else {
+        r
     }
 }
 
 fn compare(a: &Value, b: &Value, direction: &str) -> Result<Value> {
     if a.dims() != b.dims() {
         bail!("compare: shape mismatch {:?} vs {:?}", a.dims(), b.dims());
+    }
+    if !matches!(direction, "EQ" | "NE" | "LT" | "LE" | "GT" | "GE") {
+        bail!("unsupported compare direction '{direction}' (in-tree interpreter, DESIGN.md §9)");
     }
     let cmp = |ord: std::cmp::Ordering| -> bool {
         match direction {
@@ -841,52 +1458,104 @@ fn compare(a: &Value, b: &Value, direction: &str) -> Result<Value> {
             "LE" => ord.is_le(),
             "GT" => ord.is_gt(),
             "GE" => ord.is_ge(),
-            _ => false,
+            _ => unreachable!(),
         }
     };
-    let data: Vec<i32> = match (a, b) {
-        (Value::F32 { data: xa, .. }, Value::F32 { data: xb, .. }) => xa
-            .iter()
-            .zip(xb)
+    let data: Vec<i32> = if a.is_int() && b.is_int() {
+        let (_, xa) = a.ints()?;
+        let (_, xb) = b.ints()?;
+        xa.iter().zip(xb).map(|(&x, &y)| cmp(x.cmp(&y)) as i32).collect()
+    } else if a.is_float() && b.is_float() {
+        let (_, xa) = a.floats()?;
+        let (_, xb) = b.floats()?;
+        xa.iter()
+            .zip(xb.iter())
             // XLA totalorder-free comparison semantics: any comparison
             // involving NaN is false, except NE which is true.
             .map(|(&x, &y)| match x.partial_cmp(&y) {
                 Some(ord) => cmp(ord) as i32,
                 None => (direction == "NE") as i32,
             })
-            .collect(),
-        (Value::I32 { data: xa, .. }, Value::I32 { data: xb, .. }) => {
-            xa.iter().zip(xb).map(|(&x, &y)| cmp(x.cmp(&y)) as i32).collect()
-        }
-        _ => bail!("compare: mixed operand types"),
+            .collect()
+    } else {
+        bail!("compare: mixed operand types");
     };
     Ok(Value::I32 { dims: a.dims().to_vec(), data })
 }
 
-fn select(pred: &Value, on_true: &Value, on_false: &Value) -> Result<Value> {
-    let (_, p) = pred.i32s()?;
-    if pred.dims() != on_true.dims() || on_true.dims() != on_false.dims() {
-        bail!("select: shape mismatch");
+fn select(pred: &Value, on_true: &Value, on_false: &Value, out_vt: VType) -> Result<Value> {
+    let (_, p) = pred.ints()?;
+    if on_true.dims() != on_false.dims() {
+        bail!("select: branch shape mismatch");
     }
-    Ok(match (on_true, on_false) {
-        (Value::F32 { dims, data: xt }, Value::F32 { data: xf, .. }) => Value::F32 {
-            dims: dims.clone(),
-            data: p
-                .iter()
-                .zip(xt.iter().zip(xf))
-                .map(|(&c, (&t, &f))| if c != 0 { t } else { f })
+    // Scalar predicates broadcast; otherwise shapes must match.
+    let scalar_pred = p.len() == 1 && pred.dims().is_empty();
+    if !scalar_pred && pred.dims() != on_true.dims() {
+        bail!("select: predicate shape mismatch");
+    }
+    let pick = |i: usize| -> bool {
+        if scalar_pred {
+            p[0] != 0
+        } else {
+            p[i] != 0
+        }
+    };
+    if on_true.is_int() && on_false.is_int() {
+        let (dims, xt) = on_true.ints()?;
+        let (_, xf) = on_false.ints()?;
+        Value::from_i32s(
+            out_vt,
+            dims.to_vec(),
+            (0..xt.len()).map(|i| if pick(i) { xt[i] } else { xf[i] }).collect(),
+        )
+    } else if on_true.is_float() && on_false.is_float() {
+        let (dims, xt) = on_true.floats()?;
+        let (_, xf) = on_false.floats()?;
+        Value::from_f32s(
+            out_vt,
+            dims.to_vec(),
+            (0..xt.len()).map(|i| if pick(i) { xt[i] } else { xf[i] }).collect(),
+        )
+    } else {
+        bail!("select: mixed or tuple operand types")
+    }
+}
+
+/// `clamp(min, x, max)`: min/max either scalar or the operand's shape.
+fn clamp(lo: &Value, x: &Value, hi: &Value, out_vt: VType) -> Result<Value> {
+    let bound_ok = |b: &Value| b.elems() == 1 || b.dims() == x.dims();
+    if !bound_ok(lo) || !bound_ok(hi) {
+        bail!(
+            "clamp: bounds must be scalar or match the operand shape {:?}",
+            x.dims()
+        );
+    }
+    if x.is_int() {
+        let (dims, xs) = x.ints()?;
+        let (_, ls) = lo.ints()?;
+        let (_, hs) = hi.ints()?;
+        let at = |s: &[i32], i: usize| if s.len() == 1 { s[0] } else { s[i] };
+        Value::from_i32s(
+            out_vt,
+            dims.to_vec(),
+            (0..xs.len())
+                .map(|i| xs[i].clamp(at(ls, i).min(at(hs, i)), at(hs, i).max(at(ls, i))))
                 .collect(),
-        },
-        (Value::I32 { dims, data: xt }, Value::I32 { data: xf, .. }) => Value::I32 {
-            dims: dims.clone(),
-            data: p
-                .iter()
-                .zip(xt.iter().zip(xf))
-                .map(|(&c, (&t, &f))| if c != 0 { t } else { f })
+        )
+    } else {
+        let (dims, xs) = x.floats()?;
+        let (_, ls) = lo.floats()?;
+        let (_, hs) = hi.floats()?;
+        let at = |s: &[f32], i: usize| if s.len() == 1 { s[0] } else { s[i] };
+        // XLA clamp = max(min, min(x, max)) elementwise.
+        Value::from_f32s(
+            out_vt,
+            dims.to_vec(),
+            (0..xs.len())
+                .map(|i| xs[i].min(at(&hs, i)).max(at(&ls, i)))
                 .collect(),
-        },
-        _ => bail!("select: mixed or tuple operand types"),
-    })
+        )
+    }
 }
 
 #[cfg(test)]
@@ -983,5 +1652,126 @@ mod tests {
         let interp = Interp::from_text(text).unwrap();
         let err = interp.run(&[f32lit(&[2.0, 1.0], &[2])]).unwrap_err();
         assert!(format!("{err:#}").contains("unsupported HLO opcode"));
+    }
+
+    #[test]
+    fn gather_rows_from_embedding_table() {
+        // The embedding-lookup shape: [V,D] table, [B,1] indices.
+        let text = "HloModule t\nENTRY main {\n  e = f32[4,2]{1,0} parameter(0)\n  ix = s32[3,1]{1,0} parameter(1)\n  ROOT g = f32[3,2]{1,0} gather(e, ix), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}\n}\n";
+        let e = f32lit(&[0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5], &[4, 2]);
+        let ix = Literal::vec1(&[2i32, 0, 3]).reshape(&[3, 1]).unwrap();
+        let out = run1(text, &[e, ix]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![2.0, 2.5, 0.0, 0.5, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn gather_clamps_out_of_bounds_starts() {
+        let text = "HloModule t\nENTRY main {\n  e = f32[4]{0} parameter(0)\n  ix = s32[2,1]{1,0} parameter(1)\n  ROOT g = f32[2]{0} gather(e, ix), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}\n}\n";
+        let e = f32lit(&[10.0, 11.0, 12.0, 13.0], &[4]);
+        let ix = Literal::vec1(&[-5i32, 99]).reshape(&[2, 1]).unwrap();
+        let out = run1(text, &[e, ix]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![10.0, 13.0]);
+    }
+
+    #[test]
+    fn scatter_add_accumulates_duplicate_indices() {
+        let text = "HloModule t\nadd_f {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT r = f32[] add(a, b)\n}\nENTRY main {\n  z = f32[4]{0} parameter(0)\n  ix = s32[3,1]{1,0} parameter(1)\n  u = f32[3]{0} parameter(2)\n  ROOT s = f32[4]{0} scatter(z, ix, u), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=add_f\n}\n";
+        let z = f32lit(&[0.0; 4], &[4]);
+        let ix = Literal::vec1(&[1i32, 1, 3]).reshape(&[3, 1]).unwrap();
+        let u = f32lit(&[5.0, 7.0, 2.0], &[3]);
+        let out = run1(text, &[z, ix, u]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![0.0, 12.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn scatter_drops_out_of_bounds_updates() {
+        let text = "HloModule t\nadd_f {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT r = f32[] add(a, b)\n}\nENTRY main {\n  z = f32[3]{0} parameter(0)\n  ix = s32[2,1]{1,0} parameter(1)\n  u = f32[2]{0} parameter(2)\n  ROOT s = f32[3]{0} scatter(z, ix, u), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=add_f\n}\n";
+        let z = f32lit(&[1.0, 1.0, 1.0], &[3]);
+        let ix = Literal::vec1(&[7i32, 0]).reshape(&[2, 1]).unwrap();
+        let u = f32lit(&[100.0, 5.0], &[2]);
+        let out = run1(text, &[z, ix, u]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![6.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn while_loop_counts_and_accumulates() {
+        // (i, acc) → (i+1, acc+i) while i < 5: acc = 0+1+2+3+4 = 10.
+        let text = "HloModule t\ncond {\n  t = (s32[], s32[]) parameter(0)\n  i = s32[] get-tuple-element(t), index=0\n  five = s32[] constant(5)\n  ROOT lt = pred[] compare(i, five), direction=LT\n}\nbody {\n  t = (s32[], s32[]) parameter(0)\n  i = s32[] get-tuple-element(t), index=0\n  acc = s32[] get-tuple-element(t), index=1\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  acc2 = s32[] add(acc, i)\n  ROOT r = (s32[], s32[]) tuple(i2, acc2)\n}\nENTRY main {\n  zero = s32[] constant(0)\n  init = (s32[], s32[]) tuple(zero, zero)\n  w = (s32[], s32[]) while(init), condition=cond, body=body\n  ROOT acc = s32[] get-tuple-element(w), index=1\n}\n";
+        let out = run1(text, &[]);
+        assert_eq!(out[0].to_vec::<i32>().unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn conditional_predicated_and_indexed() {
+        let text = "HloModule t\ndouble {\n  x = f32[] parameter(0)\n  two = f32[] constant(2)\n  ROOT r = f32[] multiply(x, two)\n}\nnegate_c {\n  x = f32[] parameter(0)\n  ROOT r = f32[] negate(x)\n}\nENTRY main {\n  p = pred[] parameter(0)\n  a = f32[] parameter(1)\n  c = f32[] conditional(p, a, a), true_computation=double, false_computation=negate_c\n  ix = s32[] parameter(2)\n  d = f32[] conditional(ix, a, a), branch_computations={double, negate_c}\n  ROOT r = (f32[], f32[]) tuple(c, d)\n}\n";
+        let interp = Interp::from_text(text).unwrap();
+        let run = |p: i32, ix: i32| -> (f32, f32) {
+            let out = interp
+                .run(&[
+                    Literal::vec1(&[p]).reshape(&[]).unwrap(),
+                    f32lit(&[3.0], &[]),
+                    Literal::vec1(&[ix]).reshape(&[]).unwrap(),
+                ])
+                .unwrap();
+            (out[0].to_vec::<f32>().unwrap()[0], out[1].to_vec::<f32>().unwrap()[0])
+        };
+        assert_eq!(run(1, 0), (6.0, 6.0));
+        assert_eq!(run(0, 1), (-3.0, -3.0));
+        // Out-of-range branch index clamps to the last branch.
+        assert_eq!(run(0, 99).1, -3.0);
+    }
+
+    #[test]
+    fn dynamic_slice_and_update_clamp_starts() {
+        let text = "HloModule t\nENTRY main {\n  v = f32[4]{0} parameter(0)\n  i = s32[] parameter(1)\n  ds = f32[2]{0} dynamic-slice(v, i), dynamic_slice_sizes={2}\n  u = f32[2]{0} parameter(2)\n  dus = f32[4]{0} dynamic-update-slice(v, u, i)\n  ROOT r = (f32[2], f32[4]) tuple(ds, dus)\n}\n";
+        let interp = Interp::from_text(text).unwrap();
+        let v = f32lit(&[1.0, 2.0, 3.0, 4.0], &[4]);
+        let u = f32lit(&[8.0, 9.0], &[2]);
+        let i = Literal::vec1(&[3i32]).reshape(&[]).unwrap(); // clamps to 2
+        let out = interp.run(&[v, i, u]).unwrap();
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![3.0, 4.0]);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn pad_reverse_clamp() {
+        let text = "HloModule t\nENTRY main {\n  v = f32[3]{0} parameter(0)\n  z = f32[] constant(-1)\n  p = f32[7]{0} pad(v, z), padding=1_1_1\n  r = f32[3]{0} reverse(v), dimensions={0}\n  lo = f32[] constant(0)\n  hi = f32[] constant(2)\n  c = f32[3]{0} clamp(lo, v, hi)\n  ROOT t = (f32[7], f32[3], f32[3]) tuple(p, r, c)\n}\n";
+        let out = run1(text, &[f32lit(&[1.0, 2.0, 3.0], &[3])]);
+        assert_eq!(
+            out[0].to_vec::<f32>().unwrap(),
+            vec![-1.0, 1.0, -1.0, 2.0, -1.0, 3.0, -1.0]
+        );
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![3.0, 2.0, 1.0]);
+        assert_eq!(out[2].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn f16_parameters_round_storage() {
+        // 1 + 2⁻¹² is not representable in f16; storage rounds it away.
+        let text = "HloModule t\nENTRY main {\n  p = f16[2]{0} parameter(0)\n  ROOT r = f32[2]{0} convert(p)\n}\n";
+        let x = 1.0 + 2.0f32.powi(-12);
+        let out = run1(text, &[f32lit(&[x, 2.5], &[2])]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn f16_reduce_accumulates_in_f64_then_rounds_once() {
+        // Each element is 1 + 2⁻¹⁰ (exactly one f16 ULP above 1.0). The
+        // wide accumulator keeps the exact sum 8 + 2⁻⁷, which is exactly
+        // one f16 ULP above 8.0 — a sequential f16 accumulation would
+        // have rounded the increments away midway.
+        let text = "HloModule t\nsum {\n  a = f16[] parameter(0)\n  b = f16[] parameter(1)\n  ROOT r = f16[] add(a, b)\n}\nENTRY main {\n  p = f16[8]{0} parameter(0)\n  z = f16[] constant(0)\n  s = f16[] reduce(p, z), dimensions={0}, to_apply=sum\n  ROOT r = f32[] convert(s)\n}\n";
+        let tiny = 2.0f32.powi(-10);
+        let input = vec![1.0 + tiny; 8];
+        let out = run1(text, &[f32lit(&input, &[8])]);
+        let got = out[0].to_vec::<f32>().unwrap()[0];
+        assert!((got - 8.0078125).abs() < 1e-6, "got {got}");
+    }
+
+    #[test]
+    fn call_executes_nested_computation() {
+        let text = "HloModule t\nsq {\n  x = f32[2]{0} parameter(0)\n  ROOT r = f32[2]{0} multiply(x, x)\n}\nENTRY main {\n  p = f32[2]{0} parameter(0)\n  ROOT c = f32[2]{0} call(p), to_apply=sq\n}\n";
+        let out = run1(text, &[f32lit(&[3.0, -4.0], &[2])]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![9.0, 16.0]);
     }
 }

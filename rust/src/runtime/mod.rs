@@ -20,10 +20,12 @@
 //!
 //! Select with `DISCO_BACKEND=interp|pjrt` (CLI: `--backend`).
 
+pub mod corpus;
 pub mod gen;
 pub mod gnn;
 pub mod interp;
 pub mod trainer;
+pub mod value;
 
 use crate::util::json::Json;
 use crate::xla_stub as xla;
@@ -210,23 +212,15 @@ impl Runtime {
             ),
         };
         let manifest = Manifest::load(dir)?;
-        if backend == BackendKind::Interp {
-            // Refuse prebuilt sets the interpreter cannot execute up
-            // front (aot.py's JAX-lowered modules use custom-calls and
-            // gather/while the in-tree executor doesn't implement),
-            // instead of failing deep inside a run with "unsupported
-            // HLO opcode". Rust-generated sets carry a generator stamp.
-            let stamp = manifest.raw.get("generator").as_str().unwrap_or("");
-            if !stamp.starts_with("rust-offline") {
-                return Err(anyhow!(
-                    "{}: artifact set was not produced by `disco gen-artifacts` and is \
-                     not executable by the in-tree interpreter; use `--backend pjrt` \
-                     (requires a real xla binding), or point DISCO_ARTIFACTS at a \
-                     different directory / regenerate with `disco gen-artifacts`",
-                    dir.display()
-                ));
-            }
-        }
+        // Prebuilt (aot.py / JAX-lowered) sets load through the
+        // interpreter like generated ones: gather/scatter, dynamic
+        // slicing, while/conditional and the f16/bf16/s32/pred storage
+        // layer are all implemented in-tree (conformance corpus:
+        // rust/tests/hlo_corpus/), so the stamp gate that used to force
+        // `--backend pjrt` for such sets is gone. A module using a
+        // genuinely unsupported opcode (e.g. a Pallas custom-call)
+        // still fails with a clear "unsupported HLO opcode" error at
+        // execution.
         Ok(Runtime { manifest, backend, client })
     }
 
@@ -360,7 +354,15 @@ mod tests {
         let dir = tmp_dir("boot");
         let rt = Runtime::with_backend(&dir, BackendKind::Interp).unwrap();
         assert_eq!(rt.backend().name(), "interp");
-        for name in ["gnn_infer", "gnn_train", "lm_grads", "lm_adam", "lm_eval"] {
+        for name in [
+            "gnn_infer",
+            "gnn_train",
+            "lm_grads",
+            "lm_adam",
+            "lm_eval",
+            "embed_grads",
+            "probe_ops",
+        ] {
             let exe = rt.load(name).unwrap();
             assert!(!exe.spec.inputs.is_empty(), "{name}");
         }

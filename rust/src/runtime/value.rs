@@ -1,0 +1,487 @@
+//! Typed runtime values for the in-tree HLO interpreter (DESIGN.md §9).
+//!
+//! A [`Value`] is a dense host tensor whose buffer is **storage-typed**:
+//! `f16`/`bf16` tensors hold 16-bit patterns, not widened floats, so the
+//! interpreter reproduces reduced-precision rounding the way a real
+//! backend does. Arithmetic follows the usual software-emulation
+//! contract: every op widens its operands to `f32` (f64 accumulation for
+//! `dot`/`reduce`), computes, and rounds the result back to the
+//! instruction's declared storage type — one rounding per op, the same
+//! observable semantics as XLA's CPU float-normalization pass.
+//!
+//! `pred`/`s32`/`u32`/`s64` all store as `i32` (pred as 0/1); the
+//! [`VType`] of the declared result distinguishes pred narrowing
+//! (non-zero → 1) from integer truncation.
+//!
+//! The `f16`/`bf16` bit conversions (round-to-nearest-even, subnormals,
+//! inf/NaN) and the ULP distance used by the conformance tests live here
+//! too, so tests and the corpus runner share one definition.
+
+use crate::graph::hlo_import::Prim;
+use crate::xla_stub::{Elements, Literal};
+use anyhow::{anyhow, bail, Result};
+use std::borrow::Cow;
+
+/// Storage type of one interpreter value — the executable refinement of
+/// the byte-accounting [`crate::graph::DType`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VType {
+    F32,
+    F16,
+    BF16,
+    /// s32/u32/s64 storage.
+    I32,
+    /// Boolean storage (i32 0/1); narrowing maps non-zero → 1.
+    Pred,
+}
+
+impl VType {
+    /// Storage type of a parsed HLO primitive type.
+    pub fn of(prim: Prim) -> VType {
+        match prim {
+            Prim::F32 => VType::F32,
+            Prim::F16 => VType::F16,
+            Prim::BF16 => VType::BF16,
+            Prim::S32 => VType::I32,
+            Prim::Pred => VType::Pred,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, VType::F32 | VType::F16 | VType::BF16)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            VType::F32 => "f32",
+            VType::F16 => "f16",
+            VType::BF16 => "bf16",
+            VType::I32 => "s32",
+            VType::Pred => "pred",
+        }
+    }
+}
+
+/// A runtime value: a dense host tensor or a tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    /// IEEE binary16 bit patterns.
+    F16 { dims: Vec<usize>, data: Vec<u16> },
+    /// bfloat16 bit patterns.
+    BF16 { dims: Vec<usize>, data: Vec<u16> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32 { dims, .. }
+            | Value::F16 { dims, .. }
+            | Value::BF16 { dims, .. }
+            | Value::I32 { dims, .. } => dims,
+            Value::Tuple(_) => &[],
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            Value::Tuple(_) => 0,
+            _ => self.dims().iter().product(),
+        }
+    }
+
+    /// Storage type (tuples have none).
+    pub fn vtype(&self) -> Option<VType> {
+        match self {
+            Value::F32 { .. } => Some(VType::F32),
+            Value::F16 { .. } => Some(VType::F16),
+            Value::BF16 { .. } => Some(VType::BF16),
+            Value::I32 { .. } => Some(VType::I32),
+            Value::Tuple(_) => None,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, Value::F32 { .. } | Value::F16 { .. } | Value::BF16 { .. })
+    }
+
+    pub fn is_int(&self) -> bool {
+        matches!(self, Value::I32 { .. })
+    }
+
+    /// Widen to f32 (borrowed for f32 storage, owned otherwise).
+    pub fn floats(&self) -> Result<(&[usize], Cow<'_, [f32]>)> {
+        match self {
+            Value::F32 { dims, data } => Ok((dims, Cow::Borrowed(data))),
+            Value::F16 { dims, data } => {
+                Ok((dims, Cow::Owned(data.iter().map(|&b| f16_bits_to_f32(b)).collect())))
+            }
+            Value::BF16 { dims, data } => {
+                Ok((dims, Cow::Owned(data.iter().map(|&b| bf16_bits_to_f32(b)).collect())))
+            }
+            _ => bail!("expected a float tensor, got {}", self.type_str()),
+        }
+    }
+
+    pub fn ints(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            Value::I32 { dims, data } => Ok((dims, data)),
+            _ => bail!("expected an integer/pred tensor, got {}", self.type_str()),
+        }
+    }
+
+    fn type_str(&self) -> String {
+        match self.vtype() {
+            Some(vt) => format!("{}{:?}", vt.name(), self.dims()),
+            None => "tuple".to_string(),
+        }
+    }
+
+    /// Build a float-family value by narrowing f32 data into `vt` storage.
+    /// `vt` must be a float type.
+    pub fn from_f32s(vt: VType, dims: Vec<usize>, data: Vec<f32>) -> Result<Value> {
+        Ok(match vt {
+            VType::F32 => Value::F32 { dims, data },
+            VType::F16 => {
+                Value::F16 { dims, data: data.into_iter().map(f32_to_f16_bits).collect() }
+            }
+            VType::BF16 => {
+                Value::BF16 { dims, data: data.into_iter().map(f32_to_bf16_bits).collect() }
+            }
+            VType::I32 => Value::I32 {
+                dims,
+                // XLA float→int conversion truncates toward zero.
+                data: data.into_iter().map(|x| x as i32).collect(),
+            },
+            VType::Pred => {
+                Value::I32 { dims, data: data.into_iter().map(|x| (x != 0.0) as i32).collect() }
+            }
+        })
+    }
+
+    /// Build an int-family value (or convert to a float type) from i32s.
+    pub fn from_i32s(vt: VType, dims: Vec<usize>, data: Vec<i32>) -> Result<Value> {
+        Ok(match vt {
+            VType::I32 => Value::I32 { dims, data },
+            VType::Pred => {
+                Value::I32 { dims, data: data.into_iter().map(|x| (x != 0) as i32).collect() }
+            }
+            _ => Value::from_f32s(vt, dims, data.into_iter().map(|x| x as f32).collect())?,
+        })
+    }
+
+    /// `convert`-style cast into `vt` storage (identity when already
+    /// there).
+    pub fn cast(&self, vt: VType) -> Result<Value> {
+        if self.vtype() == Some(vt) {
+            return Ok(self.clone());
+        }
+        if let Value::Tuple(_) = self {
+            bail!("cannot convert a tuple");
+        }
+        let dims = self.dims().to_vec();
+        if self.is_int() {
+            let (_, xs) = self.ints()?;
+            Value::from_i32s(vt, dims, xs.to_vec())
+        } else {
+            let (_, xs) = self.floats()?;
+            Value::from_f32s(vt, dims, xs.into_owned())
+        }
+    }
+
+    /// Convert from the runtime's host literal type (f32/i32 interchange).
+    pub fn from_literal(lit: &Literal) -> Value {
+        let dims: Vec<usize> = lit.dims.iter().map(|&d| d as usize).collect();
+        match &lit.elements {
+            Elements::F32(v) => Value::F32 { dims, data: v.clone() },
+            Elements::I32(v) => Value::I32 { dims, data: v.clone() },
+        }
+    }
+
+    /// Convert back to the runtime's host literal type (arrays only —
+    /// tuples are flattened by the caller). Reduced-precision floats
+    /// widen to f32: the `Literal` interchange type carries f32/i32 only,
+    /// and f16/bf16 → f32 is exact.
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        match self {
+            Value::F32 { data, .. } => {
+                Ok(Literal { elements: Elements::F32(data.clone()), dims })
+            }
+            Value::F16 { .. } | Value::BF16 { .. } => {
+                let (_, xs) = self.floats()?;
+                Ok(Literal { elements: Elements::F32(xs.into_owned()), dims })
+            }
+            Value::I32 { data, .. } => {
+                Ok(Literal { elements: Elements::I32(data.clone()), dims })
+            }
+            Value::Tuple(_) => bail!("cannot convert tuple to a single literal"),
+        }
+    }
+
+    /// The single scalar as f64 (any non-tuple storage; pred/i32 widen).
+    pub fn scalar(&self) -> Result<f64> {
+        if self.elems() != 1 {
+            bail!("expected a scalar, got {}", self.type_str());
+        }
+        if self.is_int() {
+            Ok(self.ints()?.1[0] as f64)
+        } else {
+            Ok(self.floats()?.1[0] as f64)
+        }
+    }
+
+    /// Pure data movement into the same storage type: out[i] =
+    /// self[src(i)], or the `fill` scalar where `src` returns `None`
+    /// (pad). `fill` must share the storage type when provided.
+    pub fn remap(
+        &self,
+        out_dims: Vec<usize>,
+        mut src: impl FnMut(usize) -> Result<Option<usize>>,
+        fill: Option<&Value>,
+    ) -> Result<Value> {
+        let out_elems: usize = out_dims.iter().product();
+        macro_rules! arm {
+            ($variant:ident, $data:expr, $zero:expr) => {{
+                let fill_v = match fill {
+                    Some(Value::$variant { data: fd, .. }) => {
+                        *fd.first().ok_or_else(|| anyhow!("empty pad value"))?
+                    }
+                    Some(other) => bail!(
+                        "pad value storage mismatch: {} vs {}",
+                        other.type_str(),
+                        self.type_str()
+                    ),
+                    None => $zero,
+                };
+                let mut out = Vec::with_capacity(out_elems);
+                for lin in 0..out_elems {
+                    out.push(match src(lin)? {
+                        Some(i) => $data[i],
+                        None => fill_v,
+                    });
+                }
+                Ok(Value::$variant { dims: out_dims, data: out })
+            }};
+        }
+        match self {
+            Value::F32 { data, .. } => arm!(F32, data, 0.0),
+            Value::F16 { data, .. } => arm!(F16, data, 0),
+            Value::BF16 { data, .. } => arm!(BF16, data, 0),
+            Value::I32 { data, .. } => arm!(I32, data, 0),
+            Value::Tuple(_) => bail!("cannot remap a tuple"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16 / bf16 bit conversions (round-to-nearest-even).
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even, with subnormals,
+/// overflow→inf, and NaN→canonical quiet NaN.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let mut man = x & 0x007f_ffff;
+    if exp == 255 {
+        // Inf stays inf; NaN becomes the canonical quiet NaN.
+        return if man != 0 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+    let e16 = exp - 112; // re-bias: f32 bias 127 → f16 bias 15
+    if e16 >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // below half the smallest subnormal → ±0
+        }
+        // Subnormal: shift the 24-bit significand into the 10-bit field.
+        man |= 0x0080_0000;
+        let shift = (14 - e16) as u32;
+        let kept = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded =
+            kept + (rem > half) as u32 + ((rem == half) as u32 & (kept & 1));
+        return sign | rounded as u16;
+    }
+    let kept = ((e16 as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    // Rounding may carry through the exponent (up to inf) — that carry is
+    // exactly the correct result, so no masking.
+    let rounded = kept + (rem > 0x1000) as u32 + ((rem == 0x1000) as u32 & (kept & 1));
+    sign | rounded as u16
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: value = man · 2⁻²⁴; normalize into f32.
+            let k = 31 - man.leading_zeros(); // 0..=9
+            let e = (k + 103) << 23;
+            let m = ((man & !(1u32 << k)) << (23 - k)) & 0x007f_ffff;
+            sign | e | m
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even (NaN → quiet, sign kept).
+pub fn f32_to_bf16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    if value.is_nan() {
+        return ((x >> 16) as u16) | 0x0040;
+    }
+    let bias = 0x7fff + ((x >> 16) & 1);
+    ((x.wrapping_add(bias)) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// ULP distance between two 16-bit float patterns of the same format
+/// (f16 or bf16): both bit patterns are mapped onto a monotone integer
+/// line, so the distance is format-agnostic. ±0 compare equal; any NaN
+/// involvement returns `u32::MAX` unless both are NaN.
+pub fn ulp_diff_16(a: u16, b: u16, is_bf16: bool) -> u32 {
+    let is_nan = |v: u16| {
+        if is_bf16 {
+            (v & 0x7fff) > 0x7f80
+        } else {
+            (v & 0x7fff) > 0x7c00
+        }
+    };
+    match (is_nan(a), is_nan(b)) {
+        (true, true) => return 0,
+        (true, false) | (false, true) => return u32::MAX,
+        _ => {}
+    }
+    let order = |v: u16| -> i32 {
+        let m = (v & 0x7fff) as i32;
+        if v & 0x8000 != 0 {
+            -m
+        } else {
+            m
+        }
+    };
+    (order(a) - order(b)).unsigned_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_constants() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // → inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Smallest subnormal 2⁻²⁴ and smallest normal 2⁻¹⁴.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-14)), 0x0400);
+        // Below half the smallest subnormal rounds to zero.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2⁻¹¹ is exactly halfway between 1.0 and the next f16; ties
+        // go to even (1.0). 1 + 3·2⁻¹¹ is halfway and rounds up to even.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3c01);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_identity_on_representables() {
+        for bits in (0u16..=0xffff).step_by(7) {
+            let f = f16_bits_to_f32(bits);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), bits, "bits {bits:#06x} → {f}");
+        }
+    }
+
+    #[test]
+    fn bf16_conversions() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert_eq!(f32_to_bf16_bits(-0.5), 0xbf00);
+        // Round-to-nearest-even at the 16-bit boundary.
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f80_8000)), 0x3f80); // tie→even
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f81_8000)), 0x3f82); // tie→even
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f80_8001)), 0x3f81);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        for x in [0.0f32, 3.5, -1.25e10, 7.8e-20] {
+            let b = f32_to_bf16_bits(x);
+            let back = bf16_bits_to_f32(b);
+            assert!((back - x).abs() <= x.abs() * 0.01, "{x} → {back}");
+        }
+    }
+
+    #[test]
+    fn ulp_distance() {
+        assert_eq!(ulp_diff_16(0x3c00, 0x3c00, false), 0);
+        assert_eq!(ulp_diff_16(0x3c00, 0x3c01, false), 1);
+        assert_eq!(ulp_diff_16(0x0000, 0x8000, false), 0); // ±0
+        assert_eq!(ulp_diff_16(0x0001, 0x8001, false), 2); // straddles zero
+        assert_eq!(ulp_diff_16(0x7e00, 0x7e00, false), 0); // NaN == NaN here
+        assert_eq!(ulp_diff_16(0x7e00, 0x3c00, false), u32::MAX);
+    }
+
+    #[test]
+    fn value_cast_and_narrowing() {
+        let v = Value::F32 { dims: vec![3], data: vec![1.0, 2.5, -3.7] };
+        let h = v.cast(VType::F16).unwrap();
+        let (_, back) = h.floats().unwrap();
+        assert_eq!(back.as_ref(), &[1.0, 2.5, -3.7]); // exactly representable
+        let i = v.cast(VType::I32).unwrap();
+        assert_eq!(i.ints().unwrap().1, &[1, 2, -3]); // trunc toward zero
+        let p = v.cast(VType::Pred).unwrap();
+        assert_eq!(p.ints().unwrap().1, &[1, 1, 1]);
+        let z = Value::F32 { dims: vec![2], data: vec![0.0, 0.5] };
+        assert_eq!(z.cast(VType::Pred).unwrap().ints().unwrap().1, &[0, 1]);
+    }
+
+    #[test]
+    fn remap_with_fill() {
+        let v = Value::I32 { dims: vec![2], data: vec![7, 9] };
+        let fill = Value::I32 { dims: vec![], data: vec![-1] };
+        let out = v
+            .remap(
+                vec![4],
+                |i| Ok(if i < 2 { Some(i) } else { None }),
+                Some(&fill),
+            )
+            .unwrap();
+        assert_eq!(out.ints().unwrap().1, &[7, 9, -1, -1]);
+    }
+}

@@ -7,8 +7,17 @@
 //! via [`crate::util::json`], last write per key wins on load, corrupt or
 //! version-mismatched lines are skipped, the file is compacted when
 //! appends outgrow the live set) with a bounded in-memory LRU index, so a
-//! long-running `disco serve` process stays within a fixed footprint no
-//! matter how many distinct workloads pass through it.
+//! long-running `disco serve` process stays within a fixed *memory*
+//! footprint no matter how many distinct workloads pass through it (the
+//! disk file keeps one line per distinct key — it grows with the union
+//! of live plans, not with traffic).
+//!
+//! Two processes (or two [`PlanStore`]s) may share one JSONL path: every
+//! append and compaction runs under an advisory flock-style sidecar lock
+//! ([`StoreLock`]), and compaction merges from the *file*, never from one
+//! process's in-memory view — so a compaction in one server can't drop
+//! records another server appended. Concurrency is integration-tested in
+//! `tests/service.rs` (`store_shared_path_concurrent_appends`).
 
 use super::fingerprint::GraphSketch;
 use crate::fusion::{FusionKind, Mutation};
@@ -23,9 +32,119 @@ use std::path::{Path, PathBuf};
 pub const RECORD_VERSION: u64 = 1;
 
 /// When the JSONL file holds more than this many lines per live record,
-/// `put` rewrites it from the in-memory index (append-only compaction
+/// `put` rewrites it from the on-disk record set (append-only compaction
 /// threshold).
 const COMPACT_FACTOR: usize = 4;
+
+/// How long [`StoreLock::acquire`] keeps retrying before giving up.
+const LOCK_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// A sidecar lock older than this is considered leaked by a dead
+/// process and is stolen. Critical sections are sub-second (one append
+/// or one file rewrite), so a healthy holder can't plausibly age this
+/// far — every acquire writes the lock file fresh.
+const LOCK_STALE: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Advisory cross-process lock on one store file (flock-style, std-only:
+/// a sidecar `<store>.lock` created with `create_new`, which is atomic
+/// on every platform std supports). Held across any append/compaction
+/// so two `disco serve` processes can share one JSONL path without a
+/// compaction in one clobbering an append in the other. `Drop` releases.
+///
+/// Stale locks (crashed holder) are stolen after [`LOCK_STALE`] by
+/// atomically *renaming* the lock aside — never by a blind delete, so
+/// two would-be stealers can't both proceed, and a lock that turns out
+/// to be freshly re-created by a live holder (the check→steal race) is
+/// detected after the claim and restored. The restore path uses
+/// `hard_link`, which fails rather than clobbers if a third process
+/// locked in the meantime; the residual unprotected window needs three
+/// processes racing within the same few milliseconds on a path that
+/// just crossed the 30 s staleness line — acceptable for an advisory
+/// lock.
+struct StoreLock {
+    path: PathBuf,
+}
+
+impl StoreLock {
+    fn lock_path(store_path: &Path) -> PathBuf {
+        let mut os = store_path.as_os_str().to_os_string();
+        os.push(".lock");
+        PathBuf::from(os)
+    }
+
+    /// Atomically claim a stale-looking lock file by renaming it aside.
+    /// Returns true when a genuinely stale lock was removed; restores
+    /// the file when the claim turns out to have caught a live lock.
+    fn steal_stale(path: &Path) -> bool {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static STEAL_SEQ: AtomicU64 = AtomicU64::new(0);
+        let claim = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(format!(
+                ".steal.{}.{}",
+                std::process::id(),
+                STEAL_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            PathBuf::from(os)
+        };
+        if std::fs::rename(path, &claim).is_err() {
+            return false; // already released or claimed by someone else
+        }
+        let still_stale = std::fs::metadata(&claim)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|m| m.elapsed().ok())
+            .is_some_and(|age| age > LOCK_STALE);
+        if !still_stale {
+            // We raced a live holder re-creating the lock: put it back
+            // (hard_link errors instead of clobbering a newer lock).
+            let _ = std::fs::hard_link(&claim, path);
+        }
+        let _ = std::fs::remove_file(&claim);
+        still_stale
+    }
+
+    fn acquire(store_path: &Path) -> Result<StoreLock> {
+        let path = Self::lock_path(store_path);
+        let deadline = std::time::Instant::now() + LOCK_TIMEOUT;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{}", std::process::id());
+                    return Ok(StoreLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let looks_stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|m| m.elapsed().ok())
+                        .is_some_and(|age| age > LOCK_STALE);
+                    if looks_stale && Self::steal_stale(&path) {
+                        continue;
+                    }
+                    if std::time::Instant::now() > deadline {
+                        return Err(anyhow!(
+                            "timed out waiting for plan-store lock {}",
+                            path.display()
+                        ));
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("creating plan-store lock {}", path.display())
+                    })
+                }
+            }
+        }
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
 
 fn mutation_json(m: &Mutation) -> Json {
     match *m {
@@ -161,6 +280,12 @@ pub struct PlanStore {
     /// Lines currently on disk (appends since the last compaction plus
     /// the loaded base) — drives the compaction heuristic.
     disk_lines: usize,
+    /// Distinct keys on disk as of the last load/compaction (best-effort
+    /// across processes). The compaction threshold compares lines
+    /// against THIS, not against the capacity-bounded in-memory map —
+    /// otherwise a store whose file legitimately holds more keys than
+    /// its own capacity would rewrite the whole file on every put.
+    disk_keys: usize,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
@@ -178,6 +303,7 @@ impl PlanStore {
             recency: HashMap::new(),
             clock: 0,
             disk_lines: 0,
+            disk_keys: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
@@ -187,29 +313,38 @@ impl PlanStore {
 
     /// Open (creating if absent) a JSONL-backed store. Later lines win on
     /// duplicate keys; unreadable lines are counted in `skipped` and
-    /// dropped; anything beyond `capacity` is evicted oldest-first.
+    /// dropped; anything beyond `capacity` is evicted oldest-first (from
+    /// the in-memory index only — the file keeps every live record, so a
+    /// second process with a larger capacity loses nothing).
     pub fn open(path: &Path, capacity: usize) -> Result<PlanStore> {
         let mut store = PlanStore::in_memory(capacity);
         store.path = Some(path.to_path_buf());
         if path.exists() {
+            let _lock = StoreLock::acquire(path)?;
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading plan store {}", path.display()))?;
             let mut lines = 0usize;
+            let mut unique: std::collections::HashSet<String> = std::collections::HashSet::new();
             for line in text.lines() {
                 if line.trim().is_empty() {
                     continue;
                 }
                 lines += 1;
                 match Json::parse(line).ok().and_then(|j| PlanRecord::from_json(&j)) {
-                    Some(rec) => store.index(rec),
+                    Some(rec) => {
+                        unique.insert(rec.key.clone());
+                        store.index(rec);
+                    }
                     None => store.skipped += 1,
                 }
             }
             store.disk_lines = lines;
-            // Reclaim the file when load dropped duplicates, corrupt
-            // lines or over-capacity records.
-            if lines != store.map.len() {
-                store.compact()?;
+            store.disk_keys = unique.len();
+            // Reclaim the file when the load found duplicate or corrupt
+            // lines (NOT when records merely exceeded our capacity —
+            // those stay on disk for other readers).
+            if lines != unique.len() {
+                store.compact_locked()?;
             }
         }
         Ok(store)
@@ -275,41 +410,95 @@ impl PlanStore {
         self.map.get(key)
     }
 
-    /// Insert (or overwrite) a record and persist it.
+    /// Insert (or overwrite) a record and persist it. The append and any
+    /// resulting compaction happen under the cross-process file lock.
     pub fn put(&mut self, rec: PlanRecord) -> Result<()> {
         let line = rec.to_json().to_string();
         self.index(rec);
         if let Some(path) = self.path.clone() {
+            let _lock = StoreLock::acquire(&path)?;
             let mut f = std::fs::OpenOptions::new()
                 .create(true)
                 .append(true)
                 .open(&path)
                 .with_context(|| format!("appending to plan store {}", path.display()))?;
             writeln!(f, "{line}")?;
+            drop(f);
             self.disk_lines += 1;
-            if self.disk_lines > COMPACT_FACTOR * self.map.len().max(4) {
-                self.compact()?;
+            // disk_keys is only ever set from an exact disk scan (open /
+            // compaction), never guessed at put time: a guess based on
+            // the capacity-bounded map over-counts once eviction starts
+            // (every re-put of an evicted key would look new), inflating
+            // the threshold until compaction never fires. A stale-LOW
+            // disk_keys merely compacts a little early — the safe
+            // direction, and it amortizes geometrically either way.
+            if self.disk_lines > COMPACT_FACTOR * self.disk_keys.max(4) {
+                self.compact_locked()?;
             }
         }
         Ok(())
     }
 
-    /// Rewrite the backing file to exactly the live records, LRU order
-    /// (so a future load reconstructs the same recency).
+    /// Compact the backing file under the cross-process lock.
     pub fn compact(&mut self) -> Result<()> {
         let Some(path) = self.path.clone() else { return Ok(()) };
-        let mut keys: Vec<&String> = self.map.keys().collect();
-        keys.sort_by_key(|k| self.recency.get(*k).copied().unwrap_or(0));
-        let mut out = String::new();
-        for key in keys {
-            if let Some(rec) = self.map.get(key) {
-                out.push_str(&rec.to_json().to_string());
-                out.push('\n');
+        let _lock = StoreLock::acquire(&path)?;
+        self.compact_locked()
+    }
+
+    /// Rewrite the backing file with exactly the live on-disk record set
+    /// (one line per key, last write wins, corrupt lines dropped). The
+    /// caller must hold the store lock. Compaction deliberately merges
+    /// from *disk*, not from this process's in-memory index: a second
+    /// process sharing the path may have appended records this index has
+    /// never seen (or has evicted), and rewriting from memory would
+    /// silently delete them. Every record this process has put is on
+    /// disk already (`put` appends before compacting), so the disk set
+    /// is a superset of this index.
+    fn compact_locked(&mut self) -> Result<()> {
+        let Some(path) = self.path.clone() else { return Ok(()) };
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("re-reading plan store {}", path.display()))
+            }
+        };
+        // Last-write-wins in file order, preserving first-seen order so
+        // the rewrite is stable.
+        let mut order: Vec<String> = Vec::new();
+        let mut live: HashMap<String, String> = HashMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Some(rec) = Json::parse(line).ok().and_then(|j| PlanRecord::from_json(&j)) {
+                if !live.contains_key(&rec.key) {
+                    order.push(rec.key.clone());
+                }
+                live.insert(rec.key, line.to_string());
             }
         }
-        std::fs::write(&path, out)
+        let mut out = String::new();
+        for key in &order {
+            out.push_str(&live[key]);
+            out.push('\n');
+        }
+        // Write-then-rename: the shared file is every process's source
+        // of truth, so it must never be observable (or left, on a
+        // crash) in a truncated in-place-rewrite state.
+        let tmp = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(format!(".compact.{}", std::process::id()));
+            PathBuf::from(os)
+        };
+        std::fs::write(&tmp, out)
+            .with_context(|| format!("writing compacted plan store {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
             .with_context(|| format!("compacting plan store {}", path.display()))?;
-        self.disk_lines = self.map.len();
+        self.disk_lines = order.len();
+        self.disk_keys = order.len();
         Ok(())
     }
 

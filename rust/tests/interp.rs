@@ -13,7 +13,8 @@ use disco::estimator::{AnalyticalFused, FusedOpEstimator};
 use disco::graph::{FusedGroup, OpKind, OrigOp};
 use disco::runtime::gnn::{encode_group, FEAT_DIM, MAX_NODES};
 use disco::runtime::interp::Interp;
-use disco::runtime::{gen, lit_f32, lit_scalar, lit_to_f32, BackendKind, Runtime};
+use disco::runtime::{corpus, gen, lit_f32, lit_i32, lit_scalar, lit_to_f32, BackendKind, Runtime};
+use disco::util::rng::Rng;
 
 fn chain_group(n: usize, time_ms: f64) -> FusedGroup {
     FusedGroup {
@@ -201,6 +202,183 @@ fn lm_adam_moves_params_against_gradient() {
     // Bias-corrected first step ≈ lr · sign(g).
     let lr = gen::LM_LR as f32;
     assert!((0.5 - p2[0] - lr).abs() < lr * 0.05, "step={}", 0.5 - p2[0]);
+}
+
+// ---------------------------------------------------------------------------
+// Golden conformance corpus (DESIGN.md §9): every .hlo file under
+// tests/hlo_corpus/ executes and its `// expect:` directives must hold.
+// ---------------------------------------------------------------------------
+
+fn corpus_files() -> Vec<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/hlo_corpus");
+    let mut files: Vec<_> = std::fs::read_dir(&dir)
+        .expect("tests/hlo_corpus exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|e| e == "hlo"))
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn conformance_corpus() {
+    let files = corpus_files();
+    assert!(files.len() >= 25, "conformance corpus has only {} cases", files.len());
+    let mut failures = Vec::new();
+    for f in &files {
+        let name = f.file_name().unwrap().to_string_lossy().into_owned();
+        // A case without expectations verifies nothing — reject it so a
+        // forgotten `// expect:` line can't silently pass.
+        let text = std::fs::read_to_string(f).unwrap();
+        match corpus::parse_case(&name, &text) {
+            Ok(case) if case.expects.is_empty() => {
+                failures.push(format!("{name}: no expect directives"));
+                continue;
+            }
+            Err(e) => {
+                failures.push(format!("{name}: {e:#}"));
+                continue;
+            }
+            Ok(_) => {}
+        }
+        if let Err(e) = corpus::run_file(f) {
+            failures.push(format!("{name}: {e:#}"));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} of {} corpus case(s) failed:\n{}",
+        failures.len(),
+        files.len(),
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn corpus_covers_every_new_op_family() {
+    // The corpus is the proof the op set is sufficient — make sure no
+    // family can be silently dropped from it.
+    let all: String = corpus_files()
+        .iter()
+        .map(|f| std::fs::read_to_string(f).unwrap())
+        .collect::<Vec<_>>()
+        .join("\n");
+    for needle in [
+        " gather(", " scatter(", " dynamic-slice(", " dynamic-update-slice(", " while(",
+        " conditional(", " call(", " pad(", " reverse(", " clamp(", "f16[", "bf16[",
+        "pred[", "s32[",
+    ] {
+        assert!(all.contains(needle), "corpus lost coverage of '{needle}'");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-precision training-step artifact (gather + while + scatter + f16):
+// finite differences validate the hand-derived backward end-to-end,
+// including through the while-loop call-frame path.
+// ---------------------------------------------------------------------------
+
+fn embed_tokens_targets() -> (Vec<i32>, Vec<f32>) {
+    // Row 2 is referenced three times (scatter-add accumulation), rows
+    // 3/4/6 … never (their gradient must be exactly zero).
+    (vec![1, 2, 1, 5, 0, 2, 7, 2], vec![0.5, -0.3])
+}
+
+/// One embed_grads step: returns (loss, grad).
+fn embed_step(interp: &Interp, params: &[f32]) -> (f64, Vec<f32>) {
+    let (b, s) = (gen::EMBED_BATCH, gen::EMBED_SEQ);
+    let (tokens, targets) = embed_tokens_targets();
+    let out = interp
+        .run(&[
+            lit_f32(params, &[params.len()]).unwrap(),
+            lit_i32(&tokens, &[b, s]).unwrap(),
+            lit_f32(&targets, &[b]).unwrap(),
+        ])
+        .unwrap();
+    (lit_scalar(&out[0]).unwrap() as f64, lit_to_f32(&out[1]).unwrap())
+}
+
+fn embed_params(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..gen::embed_flat_len()).map(|_| (rng.gen_normal() * 0.2) as f32).collect()
+}
+
+#[test]
+fn embed_grads_match_finite_differences_through_gather_scatter_f16() {
+    let interp = Interp::from_text(&gen::embed_grads_hlo()).unwrap();
+    let params = embed_params(0xE4B);
+    let (loss0, grad) = embed_step(&interp, &params);
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss0={loss0}");
+    let d = gen::EMBED_DIM;
+    // Probe rows hit once (1, 5), three times (2), and never (3).
+    let probes = [d + 0, d + 3, 2 * d + 1, 2 * d + 7, 5 * d + 2, 3 * d + 4];
+    let eps = 2e-2f32;
+    for &i in &probes {
+        let mut up = params.clone();
+        up[i] += eps;
+        let (lu, _) = embed_step(&interp, &up);
+        let mut dn = params.clone();
+        dn[i] -= eps;
+        let (ld, _) = embed_step(&interp, &dn);
+        let fd = (lu - ld) / (2.0 * eps as f64);
+        let g = grad[i] as f64;
+        // Tolerance absorbs the f16 cast-pair quantization (quantum
+        // ≈ 2.4e-4 against a 4e-2 probe span).
+        let tol = 0.05 * g.abs().max(0.2);
+        assert!((fd - g).abs() < tol, "param {i}: finite-diff {fd:.5} vs analytic {g:.5}");
+    }
+    // Never-referenced rows have exactly zero gradient.
+    for j in 0..d {
+        assert_eq!(grad[3 * d + j], 0.0, "untouched row leaked gradient at col {j}");
+    }
+}
+
+#[test]
+fn while_loop_gradient_matches_finite_differences() {
+    // Dedicated guard on the call-frame path: the loss flows through a
+    // real `while` (sequence pooling), so any drift in carried-tuple
+    // evaluation shows up as a gradient mismatch here.
+    let interp = Interp::from_text(&gen::embed_grads_hlo()).unwrap();
+    let params = embed_params(0x3117);
+    let (_, grad) = embed_step(&interp, &params);
+    let d = gen::EMBED_DIM;
+    let eps = 2e-2f32;
+    for &i in &[0, 2 * d + 3, 7 * d + 5] {
+        let mut up = params.clone();
+        up[i] += eps;
+        let mut dn = params.clone();
+        dn[i] -= eps;
+        let fd = (embed_step(&interp, &up).0 - embed_step(&interp, &dn).0) / (2.0 * eps as f64);
+        let g = grad[i] as f64;
+        assert!(
+            (fd - g).abs() < 0.05 * g.abs().max(0.2),
+            "param {i}: finite-diff {fd:.5} vs analytic {g:.5}"
+        );
+    }
+}
+
+#[test]
+fn probe_ops_artifact_hits_every_remaining_family() {
+    let interp = Interp::from_text(&gen::probe_ops_hlo()).unwrap();
+    let v = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+    let sel = lit_i32(&[1], &[]).unwrap();
+    let out = interp.run(&[v, sel]).unwrap();
+    // pad 1_2_1 over [1,2,3,4] with value 0.
+    assert_eq!(
+        lit_to_f32(&out[0]).unwrap(),
+        vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0, 0.0]
+    );
+    // conditional true branch negates.
+    assert_eq!(lit_to_f32(&out[1]).unwrap(), vec![-1.0, -2.0, -3.0, -4.0]);
+    // dynamic-update-slice writes [1,2] into reverse(v) at offset 2.
+    assert_eq!(lit_to_f32(&out[2]).unwrap(), vec![4.0, 3.0, 1.0, 2.0]);
+    // bf16 round-trip is exact on small integers.
+    assert_eq!(lit_to_f32(&out[3]).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    // false branch halves instead.
+    let v = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+    let sel = lit_i32(&[0], &[]).unwrap();
+    let out = interp.run(&[v, sel]).unwrap();
+    assert_eq!(lit_to_f32(&out[1]).unwrap(), vec![2.0, 1.5, 1.0, 0.5]);
 }
 
 #[test]

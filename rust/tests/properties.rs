@@ -597,3 +597,259 @@ fn prop_track_best_path_is_pure_observation() {
         CaseResult::Pass
     });
 }
+
+// ---------------------------------------------------------------------------
+// Interpreter vs naive reference (DESIGN.md §9): for each new op family,
+// random shapes/dimension-numbers executed by the interpreter must match
+// a per-element reference implementation written directly from the spec.
+// Equality is exact for integer/pred ops and for float ops whose
+// reference mirrors the storage contract (compute in f32, round once);
+// f16/bf16 compare as storage bit patterns (0 ULPs).
+// ---------------------------------------------------------------------------
+
+use disco::runtime::interp::Interp;
+use disco::runtime::value::{f16_bits_to_f32, f32_to_f16_bits};
+use disco::runtime::{lit_f32, lit_i32, lit_to_f32};
+
+fn rand_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.gen_normal() * 2.0) as f32).collect()
+}
+
+fn run_floats(text: &str, inputs: &[disco::xla_stub::Literal]) -> Result<Vec<f32>, String> {
+    let interp = Interp::from_text(text).map_err(|e| format!("parse: {e:#}"))?;
+    let out = interp.run(inputs).map_err(|e| format!("run: {e:#}"))?;
+    lit_to_f32(&out[0]).map_err(|e| format!("readback: {e:#}"))
+}
+
+#[test]
+fn prop_interp_matches_reference() {
+    check("interp-vs-reference", PropConfig { cases: 120, seed: 0x1417 }, |rng| {
+        match rng.gen_range(7) {
+            // gather: 1-D lookups and 1-D windows, OOB starts clamp.
+            0 => {
+                let n = rng.gen_range_inclusive(2, 8);
+                let k = rng.gen_range_inclusive(1, 6);
+                let w = rng.gen_range_inclusive(1, n);
+                let vals = rand_f32s(rng, n);
+                let ix: Vec<i32> =
+                    (0..k).map(|_| rng.gen_range_inclusive(0, n + 8) as i32 - 4).collect();
+                let text = format!(
+                    "HloModule g\nENTRY main {{\n  v = f32[{n}] parameter(0)\n  ix = s32[{k},1] parameter(1)\n  ROOT g = f32[{k},{w}] gather(v, ix), offset_dims={{1}}, collapsed_slice_dims={{}}, start_index_map={{0}}, index_vector_dim=1, slice_sizes={{{w}}}\n}}\n"
+                );
+                let got = match run_floats(
+                    &text,
+                    &[lit_f32(&vals, &[n]).unwrap(), lit_i32(&ix, &[k, 1]).unwrap()],
+                ) {
+                    Ok(v) => v,
+                    Err(e) => return CaseResult::Fail(e),
+                };
+                let mut want = Vec::new();
+                for &i in &ix {
+                    let start = (i as i64).clamp(0, (n - w) as i64) as usize;
+                    for o in 0..w {
+                        want.push(vals[start + o]);
+                    }
+                }
+                prop_assert!(got == want, "gather n={n} k={k} w={w}: {got:?} vs {want:?}");
+            }
+            // scatter-add (f32 and s32): duplicates accumulate in update
+            // order, out-of-bounds updates are dropped.
+            1 => {
+                let n = rng.gen_range_inclusive(2, 8);
+                let k = rng.gen_range_inclusive(1, 8);
+                let ix: Vec<i32> =
+                    (0..k).map(|_| rng.gen_range_inclusive(0, n + 8) as i32 - 4).collect();
+                if rng.gen_bool(0.5) {
+                    let base = rand_f32s(rng, n);
+                    let upd = rand_f32s(rng, k);
+                    let text = format!(
+                        "HloModule s\nadd_f {{\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT r = f32[] add(a, b)\n}}\nENTRY main {{\n  z = f32[{n}] parameter(0)\n  ix = s32[{k},1] parameter(1)\n  u = f32[{k}] parameter(2)\n  ROOT s = f32[{n}] scatter(z, ix, u), update_window_dims={{}}, inserted_window_dims={{0}}, scatter_dims_to_operand_dims={{0}}, index_vector_dim=1, to_apply=add_f\n}}\n"
+                    );
+                    let got = match run_floats(
+                        &text,
+                        &[
+                            lit_f32(&base, &[n]).unwrap(),
+                            lit_i32(&ix, &[k, 1]).unwrap(),
+                            lit_f32(&upd, &[k]).unwrap(),
+                        ],
+                    ) {
+                        Ok(v) => v,
+                        Err(e) => return CaseResult::Fail(e),
+                    };
+                    let mut want = base.clone();
+                    for (j, &i) in ix.iter().enumerate() {
+                        if i >= 0 && (i as usize) < n {
+                            want[i as usize] += upd[j]; // same f32 order as the interpreter
+                        }
+                    }
+                    prop_assert!(got == want, "scatter f32: {got:?} vs {want:?}");
+                } else {
+                    let base: Vec<i32> = (0..n).map(|_| rng.gen_range(100) as i32 - 50).collect();
+                    let upd: Vec<i32> = (0..k).map(|_| rng.gen_range(100) as i32 - 50).collect();
+                    let text = format!(
+                        "HloModule s\nadd_i {{\n  a = s32[] parameter(0)\n  b = s32[] parameter(1)\n  ROOT r = s32[] add(a, b)\n}}\nENTRY main {{\n  z = s32[{n}] parameter(0)\n  ix = s32[{k},1] parameter(1)\n  u = s32[{k}] parameter(2)\n  ROOT s = s32[{n}] scatter(z, ix, u), update_window_dims={{}}, inserted_window_dims={{0}}, scatter_dims_to_operand_dims={{0}}, index_vector_dim=1, to_apply=add_i\n}}\n"
+                    );
+                    let interp = Interp::from_text(&text).unwrap();
+                    let out = interp
+                        .run(&[
+                            lit_i32(&base, &[n]).unwrap(),
+                            lit_i32(&ix, &[k, 1]).unwrap(),
+                            lit_i32(&upd, &[k]).unwrap(),
+                        ])
+                        .unwrap();
+                    let got = out[0].to_vec::<i32>().unwrap();
+                    let mut want = base.clone();
+                    for (j, &i) in ix.iter().enumerate() {
+                        if i >= 0 && (i as usize) < n {
+                            want[i as usize] = want[i as usize].wrapping_add(upd[j]);
+                        }
+                    }
+                    prop_assert!(got == want, "scatter s32: {got:?} vs {want:?}");
+                }
+            }
+            // dynamic-slice + dynamic-update-slice: starts clamp.
+            2 => {
+                let n = rng.gen_range_inclusive(2, 9);
+                let w = rng.gen_range_inclusive(1, n);
+                let vals = rand_f32s(rng, n);
+                let upd = rand_f32s(rng, w);
+                let raw = rng.gen_range_inclusive(0, n + 6) as i64 - 3;
+                let start = raw.clamp(0, (n - w) as i64) as usize;
+                let text = format!(
+                    "HloModule d\nENTRY main {{\n  v = f32[{n}] parameter(0)\n  i = s32[] parameter(1)\n  u = f32[{w}] parameter(2)\n  ds = f32[{w}] dynamic-slice(v, i), dynamic_slice_sizes={{{w}}}\n  dus = f32[{n}] dynamic-update-slice(v, u, i)\n  ROOT t = (f32[{w}], f32[{n}]) tuple(ds, dus)\n}}\n"
+                );
+                let interp = Interp::from_text(&text).unwrap();
+                let out = interp
+                    .run(&[
+                        lit_f32(&vals, &[n]).unwrap(),
+                        lit_i32(&[raw as i32], &[]).unwrap(),
+                        lit_f32(&upd, &[w]).unwrap(),
+                    ])
+                    .unwrap();
+                let ds = lit_to_f32(&out[0]).unwrap();
+                let dus = lit_to_f32(&out[1]).unwrap();
+                let want_ds: Vec<f32> = (0..w).map(|o| vals[start + o]).collect();
+                let mut want_dus = vals.clone();
+                want_dus[start..start + w].copy_from_slice(&upd);
+                prop_assert!(ds == want_ds, "dynamic-slice: {ds:?} vs {want_ds:?}");
+                prop_assert!(dus == want_dus, "dynamic-update-slice: {dus:?} vs {want_dus:?}");
+            }
+            // pad (incl. negative low/high and interior) + reverse.
+            3 => {
+                let n = rng.gen_range_inclusive(1, 7);
+                let vals = rand_f32s(rng, n);
+                let interior = rng.gen_range(3);
+                let span = n as i64 + (n as i64 - 1).max(0) * interior as i64;
+                let lo = rng.gen_range_inclusive(0, 4) as i64 - 2;
+                let mut hi = rng.gen_range_inclusive(0, 4) as i64 - 2;
+                if lo + hi + span < 0 {
+                    hi = -span - lo; // keep the result non-negative-sized
+                }
+                let out_n = (lo + hi + span) as usize;
+                let text = format!(
+                    "HloModule p\nENTRY main {{\n  v = f32[{n}] parameter(0)\n  c = f32[] constant(9)\n  p = f32[{out_n}] pad(v, c), padding={lo}_{hi}_{interior}\n  r = f32[{n}] reverse(v), dimensions={{0}}\n  ROOT t = (f32[{out_n}], f32[{n}]) tuple(p, r)\n}}\n"
+                );
+                let interp = Interp::from_text(&text).unwrap();
+                let out = interp.run(&[lit_f32(&vals, &[n]).unwrap()]).unwrap();
+                let got_p = lit_to_f32(&out[0]).unwrap();
+                let got_r = lit_to_f32(&out[1]).unwrap();
+                let mut want_p = vec![9.0f32; out_n];
+                for (i, &v) in vals.iter().enumerate() {
+                    let o = lo + (i as i64) * (interior as i64 + 1);
+                    if o >= 0 && (o as usize) < out_n {
+                        want_p[o as usize] = v;
+                    }
+                }
+                let want_r: Vec<f32> = vals.iter().rev().copied().collect();
+                prop_assert!(
+                    got_p == want_p,
+                    "pad {lo}_{hi}_{interior} over {n}: {got_p:?} vs {want_p:?}"
+                );
+                prop_assert!(got_r == want_r, "reverse: {got_r:?} vs {want_r:?}");
+            }
+            // while: T doublings of a vector, T decided by the condition
+            // constant — reference replays the same f32 arithmetic.
+            4 => {
+                let m = rng.gen_range_inclusive(1, 5);
+                let t = rng.gen_range(6);
+                let vals = rand_f32s(rng, m);
+                let text = format!(
+                    "HloModule w\ncond {{\n  c = (s32[], f32[{m}]) parameter(0)\n  i = s32[] get-tuple-element(c), index=0\n  tt = s32[] constant({t})\n  ROOT lt = pred[] compare(i, tt), direction=LT\n}}\nbody {{\n  c = (s32[], f32[{m}]) parameter(0)\n  i = s32[] get-tuple-element(c), index=0\n  v = f32[{m}] get-tuple-element(c), index=1\n  v2 = f32[{m}] add(v, v)\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  ROOT r = (s32[], f32[{m}]) tuple(i2, v2)\n}}\nENTRY main {{\n  v0 = f32[{m}] parameter(0)\n  z = s32[] constant(0)\n  init = (s32[], f32[{m}]) tuple(z, v0)\n  w = (s32[], f32[{m}]) while(init), condition=cond, body=body\n  ROOT v = f32[{m}] get-tuple-element(w), index=1\n}}\n"
+                );
+                let got = match run_floats(&text, &[lit_f32(&vals, &[m]).unwrap()]) {
+                    Ok(v) => v,
+                    Err(e) => return CaseResult::Fail(e),
+                };
+                let mut want = vals.clone();
+                for _ in 0..t {
+                    for x in want.iter_mut() {
+                        *x += *x;
+                    }
+                }
+                prop_assert!(got == want, "while t={t}: {got:?} vs {want:?}");
+            }
+            // f16 elementwise: storage-rounding contract — compute in
+            // f32 on the narrowed operands, round once; 0 ULPs apart.
+            5 => {
+                let m = rng.gen_range_inclusive(1, 6);
+                let ops = ["add", "subtract", "multiply", "maximum"];
+                let op = *rng.choose(&ops).unwrap();
+                let a = rand_f32s(rng, m);
+                let b = rand_f32s(rng, m);
+                let text = format!(
+                    "HloModule h\nENTRY main {{\n  a = f16[{m}] parameter(0)\n  b = f16[{m}] parameter(1)\n  ROOT r = f16[{m}] {op}(a, b)\n}}\n"
+                );
+                let got = match run_floats(
+                    &text,
+                    &[lit_f32(&a, &[m]).unwrap(), lit_f32(&b, &[m]).unwrap()],
+                ) {
+                    Ok(v) => v,
+                    Err(e) => return CaseResult::Fail(e),
+                };
+                for i in 0..m {
+                    let ah = f16_bits_to_f32(f32_to_f16_bits(a[i]));
+                    let bh = f16_bits_to_f32(f32_to_f16_bits(b[i]));
+                    let r = match op {
+                        "add" => ah + bh,
+                        "subtract" => ah - bh,
+                        "multiply" => ah * bh,
+                        _ => ah.max(bh),
+                    };
+                    let want_bits = f32_to_f16_bits(r);
+                    let got_bits = f32_to_f16_bits(got[i]);
+                    prop_assert!(
+                        want_bits == got_bits,
+                        "f16 {op} [{i}]: {} vs {} ({a:?} {b:?})",
+                        got[i],
+                        r
+                    );
+                }
+            }
+            // integer / pred ops: exact equality against wrapping
+            // reference arithmetic.
+            _ => {
+                let m = rng.gen_range_inclusive(1, 6);
+                let a: Vec<i32> = (0..m).map(|_| rng.gen_range(200) as i32 - 100).collect();
+                let b: Vec<i32> = (0..m).map(|_| rng.gen_range(200) as i32 - 100).collect();
+                let text = format!(
+                    "HloModule i\nENTRY main {{\n  a = s32[{m}] parameter(0)\n  b = s32[{m}] parameter(1)\n  s = s32[{m}] add(a, b)\n  p = s32[{m}] multiply(a, b)\n  lt = pred[{m}] compare(a, b), direction=LT\n  sel = s32[{m}] select(lt, a, b)\n  nn = pred[{m}] not(lt)\n  ROOT t = (s32[{m}], s32[{m}], pred[{m}], s32[{m}], pred[{m}]) tuple(s, p, lt, sel, nn)\n}}\n"
+                );
+                let interp = Interp::from_text(&text).unwrap();
+                let out = interp
+                    .run(&[lit_i32(&a, &[m]).unwrap(), lit_i32(&b, &[m]).unwrap()])
+                    .unwrap();
+                let got: Vec<Vec<i32>> =
+                    out.iter().map(|l| l.to_vec::<i32>().unwrap()).collect();
+                for i in 0..m {
+                    prop_assert!(got[0][i] == a[i].wrapping_add(b[i]), "add mismatch");
+                    prop_assert!(got[1][i] == a[i].wrapping_mul(b[i]), "mul mismatch");
+                    let lt = (a[i] < b[i]) as i32;
+                    prop_assert!(got[2][i] == lt, "compare mismatch");
+                    prop_assert!(got[3][i] == if lt != 0 { a[i] } else { b[i] }, "select mismatch");
+                    prop_assert!(got[4][i] == 1 - lt, "not mismatch");
+                }
+            }
+        }
+        CaseResult::Pass
+    });
+}
