@@ -1,0 +1,409 @@
+//! Deterministic fault injection for the enactment protocol
+//! (DESIGN.md §12).
+//!
+//! Chaos testing only earns trust if failures are *reproducible*: a
+//! [`FaultPlan`] is a seeded, declarative description of which ranks
+//! misbehave and how, and [`FaultStream`] enacts the byte-level faults by
+//! wrapping the worker's `TcpStream`. The same plan + seed always yields
+//! the same byte-for-byte failure, so every chaos test shrinks to a
+//! one-line spec.
+//!
+//! Spec grammar (comma- or `|`-separated clauses):
+//!
+//! ```text
+//! kill@R:K      rank R exits abruptly at iteration K (socket drop, no Error frame)
+//! drop@R:N      rank R's connection drops after N bytes transferred (either direction)
+//! delay@R:MS    rank R's socket ops are each delayed by MS milliseconds (straggler)
+//! corrupt@R[:N] rank R's N-th outbound frame (default 1st) gets one byte flipped
+//! ```
+//!
+//! e.g. `--chaos "kill@3:1,delay@2:80"` kills rank 3 after its first
+//! iteration and makes rank 2 a straggler.
+
+use crate::util::frame::TimedStream;
+use crate::util::rng::Rng;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+/// One injected fault, bound to a rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Worker exits abruptly at iteration `iter` (0-based) of the run
+    /// phase — no Error frame, no shutdown handshake, just a dead socket.
+    KillAtIter { rank: usize, iter: usize },
+    /// Connection is severed after `bytes` total bytes in either
+    /// direction.
+    DropAfterBytes { rank: usize, bytes: u64 },
+    /// Every socket operation on this rank sleeps `ms` first — models a
+    /// straggler / congested fabric, visible to the leader as silence.
+    DelayMs { rank: usize, ms: u64 },
+    /// The `nth` outbound frame (1-based) has one byte flipped — models
+    /// fabric corruption the codec must catch, not crash on.
+    CorruptFrame { rank: usize, nth: usize },
+}
+
+impl Fault {
+    pub fn rank(&self) -> usize {
+        match *self {
+            Fault::KillAtIter { rank, .. }
+            | Fault::DropAfterBytes { rank, .. }
+            | Fault::DelayMs { rank, .. }
+            | Fault::CorruptFrame { rank, .. } => rank,
+        }
+    }
+}
+
+/// A seeded set of faults: the complete, reproducible description of one
+/// chaos scenario.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+/// Faults projected onto a single rank, in the shape the worker and its
+/// I/O shim consume.
+#[derive(Debug, Clone, Default)]
+pub struct RankFaults {
+    pub seed: u64,
+    pub kill_at_iter: Option<usize>,
+    pub drop_after_bytes: Option<u64>,
+    pub delay: Option<Duration>,
+    pub corrupt_frame: Option<usize>,
+}
+
+impl RankFaults {
+    /// True if this rank has any byte-level fault the stream shim must
+    /// enact (kill-at-iter lives in the worker loop instead).
+    pub fn wants_stream(&self) -> bool {
+        self.drop_after_bytes.is_some() || self.delay.is_some() || self.corrupt_frame.is_some()
+    }
+}
+
+impl FaultPlan {
+    /// Parse the spec grammar above. Clauses separated by `,` or `|`;
+    /// whitespace around clauses is ignored; empty spec = empty plan.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for clause in spec.split(|c| c == ',' || c == '|') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind, args) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("fault clause '{clause}' missing '@'"))?;
+            let mut parts = args.split(':');
+            let rank: usize = parts
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| format!("fault clause '{clause}': bad rank"))?;
+            let arg = parts.next();
+            let num = |what: &str| -> Result<u64, String> {
+                arg.ok_or_else(|| format!("fault clause '{clause}' missing :{what}"))?
+                    .parse()
+                    .map_err(|_| format!("fault clause '{clause}': bad {what}"))
+            };
+            faults.push(match kind {
+                "kill" => Fault::KillAtIter { rank, iter: num("iteration")? as usize },
+                "drop" => Fault::DropAfterBytes { rank, bytes: num("bytes")? },
+                "delay" => Fault::DelayMs { rank, ms: num("ms")? },
+                "corrupt" => Fault::CorruptFrame {
+                    rank,
+                    nth: arg.map(|a| a.parse().map_err(|_| format!("fault clause '{clause}': bad nth")))
+                        .transpose()?
+                        .unwrap_or(1),
+                },
+                other => return Err(format!("unknown fault kind '{other}'")),
+            });
+        }
+        Ok(FaultPlan { seed, faults })
+    }
+
+    /// Render back to the spec grammar (inverse of [`FaultPlan::parse`]).
+    pub fn to_spec(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| match *f {
+                Fault::KillAtIter { rank, iter } => format!("kill@{rank}:{iter}"),
+                Fault::DropAfterBytes { rank, bytes } => format!("drop@{rank}:{bytes}"),
+                Fault::DelayMs { rank, ms } => format!("delay@{rank}:{ms}"),
+                Fault::CorruptFrame { rank, nth } => format!("corrupt@{rank}:{nth}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Project the plan onto one rank. Later clauses win on conflict.
+    pub fn for_rank(&self, rank: usize) -> RankFaults {
+        let mut rf = RankFaults {
+            // Per-rank stream randomness must diverge across ranks even
+            // under one plan seed.
+            seed: self.seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            ..RankFaults::default()
+        };
+        for f in &self.faults {
+            if f.rank() != rank {
+                continue;
+            }
+            match *f {
+                Fault::KillAtIter { iter, .. } => rf.kill_at_iter = Some(iter),
+                Fault::DropAfterBytes { bytes, .. } => rf.drop_after_bytes = Some(bytes),
+                Fault::DelayMs { ms, .. } => rf.delay = Some(Duration::from_millis(ms)),
+                Fault::CorruptFrame { nth, .. } => rf.corrupt_frame = Some(nth),
+            }
+        }
+        rf
+    }
+}
+
+/// A `TcpStream` wrapper that enacts the byte-level faults of a
+/// [`RankFaults`]: connection drops after a byte budget, per-op delays,
+/// and single-byte corruption of a chosen outbound frame.
+#[derive(Debug)]
+pub struct FaultStream {
+    inner: TcpStream,
+    rng: Rng,
+    faults: RankFaults,
+    /// Total bytes moved in either direction (drop-after-bytes budget).
+    transferred: u64,
+    /// Completed outbound frames, counted at flush (corrupt-frame index).
+    frames_out: usize,
+    /// Set once the drop fault has fired; all later ops fail fast.
+    dead: bool,
+}
+
+impl FaultStream {
+    pub fn new(inner: TcpStream, faults: RankFaults) -> FaultStream {
+        let rng = Rng::new(faults.seed);
+        FaultStream { inner, rng, faults, transferred: 0, frames_out: 0, dead: false }
+    }
+
+    fn delay(&self) {
+        if let Some(d) = self.faults.delay {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Fire the drop fault: sever the underlying socket so the peer sees
+    /// a reset, then report the reset locally too.
+    fn sever(&mut self) -> io::Error {
+        self.dead = true;
+        let _ = self.inner.shutdown(Shutdown::Both);
+        io::Error::new(io::ErrorKind::ConnectionReset, "fault: connection dropped")
+    }
+
+    fn budget_exhausted(&self) -> bool {
+        matches!(self.faults.drop_after_bytes, Some(b) if self.transferred >= b)
+    }
+}
+
+impl Read for FaultStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "fault: dead"));
+        }
+        if self.budget_exhausted() {
+            return Err(self.sever());
+        }
+        self.delay();
+        let n = self.inner.read(buf)?;
+        self.transferred += n as u64;
+        Ok(n)
+    }
+}
+
+impl Write for FaultStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "fault: dead"));
+        }
+        if self.budget_exhausted() {
+            return Err(self.sever());
+        }
+        self.delay();
+        // Corrupt one byte of the frame *body* (writes longer than the
+        // 4-byte length prefix) when this is the chosen outbound frame.
+        if self.faults.corrupt_frame == Some(self.frames_out + 1) && buf.len() > 4 {
+            let mut poisoned = buf.to_vec();
+            let at = self.rng.gen_range(poisoned.len());
+            poisoned[at] ^= 0x55;
+            let n = self.inner.write(&poisoned)?;
+            self.transferred += n as u64;
+            return Ok(n);
+        }
+        let n = self.inner.write(buf)?;
+        self.transferred += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.frames_out += 1;
+        self.inner.flush()
+    }
+}
+
+impl TimedStream for FaultStream {
+    fn set_rd_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        self.inner.set_read_timeout(t)
+    }
+    fn set_wr_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        self.inner.set_write_timeout(t)
+    }
+}
+
+/// Either a plain socket or a fault-wrapped one — the worker's single
+/// stream type, chosen at connect time (avoids trait objects in the
+/// deadline helpers).
+#[derive(Debug)]
+pub enum ChaosStream {
+    Plain(TcpStream),
+    Fault(FaultStream),
+}
+
+impl ChaosStream {
+    pub fn connect(addr: &str, faults: &RankFaults) -> io::Result<ChaosStream> {
+        let s = TcpStream::connect(addr)?;
+        Ok(if faults.wants_stream() {
+            ChaosStream::Fault(FaultStream::new(s, faults.clone()))
+        } else {
+            ChaosStream::Plain(s)
+        })
+    }
+}
+
+impl Read for ChaosStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            ChaosStream::Plain(s) => s.read(buf),
+            ChaosStream::Fault(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ChaosStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            ChaosStream::Plain(s) => s.write(buf),
+            ChaosStream::Fault(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            ChaosStream::Plain(s) => s.flush(),
+            ChaosStream::Fault(s) => s.flush(),
+        }
+    }
+}
+
+impl TimedStream for ChaosStream {
+    fn set_rd_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            ChaosStream::Plain(s) => s.set_read_timeout(t),
+            ChaosStream::Fault(s) => s.set_rd_timeout(t),
+        }
+    }
+    fn set_wr_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            ChaosStream::Plain(s) => s.set_write_timeout(t),
+            ChaosStream::Fault(s) => s.set_wr_timeout(t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        let plan = FaultPlan::parse("kill@3:1, drop@0:4096 | delay@2:80, corrupt@1", 42).unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::KillAtIter { rank: 3, iter: 1 },
+                Fault::DropAfterBytes { rank: 0, bytes: 4096 },
+                Fault::DelayMs { rank: 2, ms: 80 },
+                Fault::CorruptFrame { rank: 1, nth: 1 },
+            ]
+        );
+        // to_spec normalizes (explicit nth, comma-joined) and reparses to
+        // the same plan.
+        let again = FaultPlan::parse(&plan.to_spec(), 42).unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        for bad in ["boom@0:1", "kill3:1", "kill@x:1", "kill@0:y", "drop@1", "delay@1"] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad} should not parse");
+        }
+        // Empty spec is a valid empty plan.
+        assert!(FaultPlan::parse("", 0).unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn for_rank_projects_and_seeds_diverge() {
+        let plan = FaultPlan::parse("kill@1:2,delay@1:50,drop@0:100", 7).unwrap();
+        let r0 = plan.for_rank(0);
+        let r1 = plan.for_rank(1);
+        assert_eq!(r0.drop_after_bytes, Some(100));
+        assert!(r0.kill_at_iter.is_none() && r0.delay.is_none());
+        assert_eq!(r1.kill_at_iter, Some(2));
+        assert_eq!(r1.delay, Some(Duration::from_millis(50)));
+        assert_ne!(r0.seed, r1.seed, "per-rank streams must not correlate");
+        assert!(r0.wants_stream());
+        assert!(!plan.for_rank(2).wants_stream());
+    }
+
+    #[test]
+    fn drop_after_bytes_severs_both_sides() {
+        use std::io::Read as _;
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink); // until reset/EOF
+            sink.len()
+        });
+        let faults = RankFaults { drop_after_bytes: Some(8), ..RankFaults::default() };
+        let mut fs = FaultStream::new(TcpStream::connect(addr).unwrap(), faults);
+        assert_eq!(fs.write(&[0u8; 8]).unwrap(), 8);
+        let err = fs.write(&[0u8; 8]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        let peer_got = t.join().unwrap();
+        assert!(peer_got <= 8, "peer saw bytes past the drop budget");
+    }
+
+    #[test]
+    fn corrupt_frame_flips_exactly_one_body_byte() {
+        use std::io::Read as _;
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let body = b"0123456789abcdef";
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut got = Vec::new();
+            s.read_to_end(&mut got).unwrap();
+            got
+        });
+        let faults =
+            RankFaults { corrupt_frame: Some(1), seed: 99, ..RankFaults::default() };
+        let mut fs = FaultStream::new(TcpStream::connect(addr).unwrap(), faults);
+        fs.write_all(&(body.len() as u32).to_be_bytes()).unwrap();
+        fs.write_all(body).unwrap();
+        fs.flush().unwrap();
+        drop(fs);
+        let got = t.join().unwrap();
+        assert_eq!(&got[..4], &(body.len() as u32).to_be_bytes(), "prefix untouched");
+        let diff: Vec<usize> =
+            (0..body.len()).filter(|&i| got[4 + i] != body[i]).collect();
+        assert_eq!(diff.len(), 1, "exactly one body byte flipped: {diff:?}");
+    }
+}

@@ -1,11 +1,27 @@
-//! Leader: strategy broadcast + report aggregation.
+//! Leader: strategy broadcast + report aggregation, fault-tolerant.
+//!
+//! The happy path is the paper's Enactment Phase (§4.1): every worker
+//! joins, acks the module fingerprint, executes, reports. This
+//! implementation additionally survives the unhappy paths (DESIGN.md
+//! §12): each phase (join / ack / run) has its own wall-clock deadline, a
+//! rank that dies is retired — or re-admitted on reconnect, up to
+//! `max_rank_retries` — heartbeats separate stragglers from corpses, and
+//! the round degrades gracefully to any `quorum` of survivors instead of
+//! hanging or aborting. `enact()` never blocks past its deadlines: it
+//! returns a report (possibly `degraded`) or a typed [`EnactError`], and
+//! always joins its in-process worker threads before returning.
 
-use super::messages::Msg;
+use super::fault::FaultPlan;
+use super::messages::{Msg, MAX_FRAME_BYTES};
+use super::worker::WorkerOptions;
 use crate::device::DeviceModel;
 use crate::graph::TrainingGraph;
 use crate::network::Cluster;
-use anyhow::{anyhow, Result};
+use crate::service::arena_fingerprint;
+use crate::util::frame::FrameReader;
+use std::io;
 use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 /// Enactment configuration.
 #[derive(Debug, Clone)]
@@ -22,6 +38,20 @@ pub struct EnactConfig {
     pub spawn_inproc: bool,
     pub device: DeviceModel,
     pub cluster: Cluster,
+    /// Minimum ranks that must complete for the round to succeed.
+    /// `0` means "all of them" (no degradation tolerated).
+    pub quorum: usize,
+    /// Wall-clock budget per phase (join / ack / run), milliseconds.
+    pub phase_timeout_ms: u64,
+    /// Times a dead rank may be re-admitted on reconnect before being
+    /// retired for good. `0` disables re-admission.
+    pub max_rank_retries: usize,
+    /// Run-phase silence (no frame from a rank) after which it is
+    /// retired as a straggler. `0` disables straggler retirement (the
+    /// phase deadline still bounds the wait).
+    pub straggler_timeout_ms: u64,
+    /// Injected faults for in-process workers (chaos testing only).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for EnactConfig {
@@ -34,99 +64,583 @@ impl Default for EnactConfig {
             spawn_inproc: true,
             device: DeviceModel::gtx1080ti(),
             cluster: Cluster::cluster_a(),
+            quorum: 0,
+            phase_timeout_ms: 10_000,
+            max_rank_retries: 1,
+            straggler_timeout_ms: 0,
+            fault: None,
         }
     }
+}
+
+/// Typed enactment failures — every way `enact()` can give up, bounded
+/// by its deadlines.
+#[derive(Debug, thiserror::Error)]
+pub enum EnactError {
+    #[error("enact config invalid: {0}")]
+    Config(String),
+    #[error("i/o: {0}")]
+    Io(#[from] io::Error),
+    #[error(
+        "quorum lost in {phase} phase: {live} usable ranks < quorum {quorum} (failed: {failed:?})"
+    )]
+    QuorumLost { phase: Phase, live: usize, quorum: usize, failed: Vec<usize> },
+}
+
+/// Protocol phase, each with its own deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Join,
+    Ack,
+    Run,
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Phase::Join => "join",
+            Phase::Ack => "ack",
+            Phase::Run => "run",
+        })
+    }
+}
+
+/// Final disposition of one rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RankState {
+    /// Completed: acked and reported.
+    Ok,
+    /// Never joined (or vanished and never came back) — no specific
+    /// failure reason observed.
+    Missing,
+    /// Actively retired, with the reason (error frame, fingerprint
+    /// mismatch, straggler, phase timeout, retries exhausted...).
+    Retired(String),
+}
+
+/// Per-rank outcome detail in the [`EnactReport`].
+#[derive(Debug, Clone)]
+pub struct RankStatus {
+    pub rank: usize,
+    pub state: RankState,
+    pub makespan_ms: f64,
+    pub comp_ms: f64,
+    pub comm_ms: f64,
+    /// Times this rank was re-admitted after losing its connection.
+    pub reconnects: usize,
+    /// Heartbeats received during the run phase.
+    pub heartbeats: usize,
 }
 
 /// Aggregated result of an enactment round.
 #[derive(Debug, Clone)]
 pub struct EnactReport {
-    /// Per-rank (makespan, comp, comm) in ms.
+    /// Per-rank (makespan, comp, comm) in ms, indexed by rank; failed
+    /// ranks hold zeros (see `status` / `failed_ranks`).
     pub per_rank: Vec<(f64, f64, f64)>,
-    /// Synchronous per-iteration time: max makespan across ranks.
+    /// Synchronous per-iteration time: max makespan across reporting
+    /// ranks.
     pub iteration_ms: f64,
     pub acks: usize,
+    /// Per-rank disposition detail.
+    pub status: Vec<RankStatus>,
+    /// True if any rank failed to complete (survivors still ≥ quorum).
+    pub degraded: bool,
+    /// Ranks that did not deliver a report.
+    pub failed_ranks: Vec<usize>,
+    /// In-process worker threads joined before returning — always equal
+    /// to the number spawned (leak check).
+    pub workers_joined: usize,
+}
+
+/// One live worker connection.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    last_heard: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn { stream, reader: FrameReader::with_cap(MAX_FRAME_BYTES), last_heard: Instant::now() }
+    }
+}
+
+/// What one poll of a connection produced.
+enum Polled {
+    Idle,
+    Frame(Msg),
+    /// Connection unusable (EOF, reset, oversize, undecodable frame) —
+    /// the transport-level reason travels with it.
+    Dead(String),
+}
+
+fn poll_conn(conn: &mut Conn) -> Polled {
+    let _ = conn.stream.set_read_timeout(Some(Duration::from_millis(1)));
+    match conn.reader.poll(&mut conn.stream) {
+        Ok(Some(body)) => match Msg::decode(&body) {
+            Ok(m) => {
+                conn.last_heard = Instant::now();
+                Polled::Frame(m)
+            }
+            Err(e) => Polled::Dead(format!("undecodable frame: {e}")),
+        },
+        Ok(None) => Polled::Idle,
+        Err(e) => Polled::Dead(e.to_string()),
+    }
+}
+
+/// Leader-side bookkeeping for one rank.
+struct Slot {
+    conn: Option<Conn>,
+    /// Times this rank has been admitted (1 = first join).
+    admissions: usize,
+    acked: bool,
+    reported: bool,
+    report: (f64, f64, f64),
+    heartbeats: usize,
+    retired: Option<String>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            conn: None,
+            admissions: 0,
+            acked: false,
+            reported: false,
+            report: (0.0, 0.0, 0.0),
+            heartbeats: 0,
+            retired: None,
+        }
+    }
+    fn live(&self) -> bool {
+        self.retired.is_none()
+    }
+    fn joined(&self) -> bool {
+        self.admissions > 0
+    }
+}
+
+struct Engine {
+    listener: TcpListener,
+    slots: Vec<Slot>,
+    /// Accepted sockets whose Hello hasn't arrived yet.
+    pending: Vec<Conn>,
+    graph_json: String,
+    fp: u64,
+    iterations: usize,
+    seed: u64,
+    quorum: usize,
+    phase_timeout: Duration,
+    max_rank_retries: usize,
+    straggler_timeout: Option<Duration>,
+}
+
+impl Engine {
+    fn io_deadline(&self) -> Instant {
+        // Frame writes to a local worker are small; bound them by a
+        // short slice of the phase budget so one wedged peer can't eat
+        // the whole phase.
+        Instant::now() + self.phase_timeout.min(Duration::from_secs(2))
+    }
+
+    fn retire(&mut self, rank: usize, reason: impl Into<String>) {
+        let reason = reason.into();
+        let slot = &mut self.slots[rank];
+        if slot.retired.is_none() {
+            slot.retired = Some(reason);
+        }
+        // Close the socket so the worker learns promptly.
+        slot.conn = None;
+    }
+
+    /// Accept fresh sockets (nonblocking) into the pending set.
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    self.pending.push(Conn::new(stream));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Pump pending sockets for their Hello; admit or reject.
+    fn drain_pending(&mut self) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            match poll_conn(&mut self.pending[i]) {
+                Polled::Idle => {
+                    // A socket that never says Hello is dropped at the
+                    // phase-budget age: slow-join defense.
+                    if self.pending[i].last_heard.elapsed() > self.phase_timeout {
+                        self.pending.swap_remove(i);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Polled::Frame(Msg::Hello { rank }) => {
+                    let conn = self.pending.swap_remove(i);
+                    self.admit(rank, conn);
+                }
+                Polled::Frame(_) | Polled::Dead(_) => {
+                    self.pending.swap_remove(i);
+                }
+            }
+        }
+    }
+
+    /// A Hello arrived: wire the connection to its rank slot and send
+    /// the strategy immediately (the phases pipeline per rank).
+    fn admit(&mut self, rank: usize, mut conn: Conn) {
+        let deadline = self.io_deadline();
+        if rank >= self.slots.len() {
+            let _ = Msg::Error { rank, reason: format!("rank {rank} out of range") }
+                .send_deadline(&mut conn.stream, deadline);
+            return;
+        }
+        if self.slots[rank].retired.is_some() {
+            // Tell the comeback attempt it's over so the worker dies
+            // fast instead of burning its reconnect budget.
+            let _ = Msg::Error { rank, reason: "rank is retired".into() }
+                .send_deadline(&mut conn.stream, deadline);
+            return;
+        }
+        if self.slots[rank].conn.is_some() {
+            // The rank redialed before we noticed its old session die —
+            // workers only reconnect after abandoning a session, so the
+            // newcomer is authoritative. Charge the loss against the
+            // retry budget; if that exhausts it, turn the comeback away.
+            self.conn_lost(rank, "superseded by reconnect");
+            if self.slots[rank].retired.is_some() {
+                let _ = Msg::Error { rank, reason: "rank is retired".into() }
+                    .send_deadline(&mut conn.stream, deadline);
+                return;
+            }
+        }
+        self.slots[rank].admissions += 1;
+        // Re-admission invalidates the previous session's ack: the
+        // worker must prove it still holds the right module.
+        self.slots[rank].acked = false;
+        let strategy = Msg::Strategy { graph_json: self.graph_json.clone() };
+        if strategy.send_deadline(&mut conn.stream, deadline).is_err() {
+            self.conn_lost(rank, "strategy send failed");
+            return;
+        }
+        self.slots[rank].conn = Some(conn);
+    }
+
+    /// A rank's connection became unusable: re-admittable while its
+    /// retry budget lasts, retired otherwise.
+    fn conn_lost(&mut self, rank: usize, reason: &str) {
+        self.slots[rank].conn = None;
+        let readmits_used = self.slots[rank].admissions.saturating_sub(1);
+        if readmits_used >= self.max_rank_retries {
+            self.retire(rank, format!("{reason} (retries exhausted)"));
+        }
+        // else: stays Missing; a reconnect within the phase deadline
+        // re-admits it.
+    }
+
+    /// Pump every live connection once; advance per-rank protocol state.
+    fn pump_slots(&mut self, phase: Phase) {
+        for rank in 0..self.slots.len() {
+            if self.slots[rank].retired.is_some() {
+                continue;
+            }
+            // Straggler retirement: run-phase silence beyond the budget.
+            if phase == Phase::Run && !self.slots[rank].reported {
+                if let (Some(limit), Some(conn)) =
+                    (self.straggler_timeout, self.slots[rank].conn.as_ref())
+                {
+                    if conn.last_heard.elapsed() > limit {
+                        self.retire(rank, format!("straggler: silent for {limit:?}"));
+                        continue;
+                    }
+                }
+            }
+            let Some(conn) = self.slots[rank].conn.as_mut() else { continue };
+            match poll_conn(conn) {
+                Polled::Idle => {}
+                Polled::Dead(reason) => self.conn_lost(rank, &reason),
+                Polled::Frame(msg) => self.on_frame(rank, msg),
+            }
+        }
+    }
+
+    fn on_frame(&mut self, rank: usize, msg: Msg) {
+        match msg {
+            Msg::Ack { rank: r, fingerprint } => {
+                if r != rank {
+                    self.retire(rank, format!("ack rank mismatch: said {r}"));
+                    return;
+                }
+                if fingerprint != self.fp {
+                    // Deterministic disagreement — a retry would fail the
+                    // same way, so no re-admission.
+                    let reason = format!(
+                        "fingerprint mismatch: worker {fingerprint:#x} != leader {:#x}",
+                        self.fp
+                    );
+                    if let Some(conn) = self.slots[rank].conn.as_mut() {
+                        let _ = Msg::Error { rank, reason: reason.clone() }
+                            .send_deadline(&mut conn.stream, Instant::now() + Duration::from_millis(200));
+                    }
+                    self.retire(rank, reason);
+                    return;
+                }
+                self.slots[rank].acked = true;
+                // Pipelined: a verified rank starts running immediately;
+                // ranks that already reported (re-ack after a post-report
+                // reconnect) are not re-run.
+                if !self.slots[rank].reported {
+                    let deadline = self.io_deadline();
+                    let run = Msg::Run { iterations: self.iterations, seed: self.seed ^ rank as u64 };
+                    let conn = self.slots[rank].conn.as_mut().expect("acked conn");
+                    if run.send_deadline(&mut conn.stream, deadline).is_err() {
+                        self.conn_lost(rank, "run send failed");
+                    }
+                }
+            }
+            Msg::Heartbeat { rank: r, .. } => {
+                if r == rank {
+                    self.slots[rank].heartbeats += 1;
+                } else {
+                    self.retire(rank, format!("heartbeat rank mismatch: said {r}"));
+                }
+            }
+            Msg::Report { rank: r, makespan_ms, comp_ms, comm_ms } => {
+                if r != rank {
+                    self.retire(rank, format!("report rank mismatch: said {r}"));
+                    return;
+                }
+                self.slots[rank].report = (makespan_ms, comp_ms, comm_ms);
+                self.slots[rank].reported = true;
+            }
+            Msg::Error { reason, .. } => {
+                self.retire(rank, format!("worker error: {reason}"));
+            }
+            other => {
+                self.retire(rank, format!("unexpected frame {other:?}"));
+            }
+        }
+    }
+
+    /// Has `rank` met the milestone that ends `phase`?
+    fn milestone(&self, phase: Phase, rank: usize) -> bool {
+        let s = &self.slots[rank];
+        match phase {
+            Phase::Join => s.joined(),
+            Phase::Ack => s.acked || s.reported,
+            Phase::Run => s.reported,
+        }
+    }
+
+    /// Drive one phase to completion or its deadline. Returns the
+    /// quorum-loss error if too few ranks remain usable.
+    fn run_phase(&mut self, phase: Phase) -> Result<(), EnactError> {
+        let deadline = Instant::now() + self.phase_timeout;
+        loop {
+            self.accept_new();
+            self.drain_pending();
+            self.pump_slots(phase);
+
+            let live: Vec<usize> = (0..self.slots.len()).filter(|&r| self.slots[r].live()).collect();
+            if live.iter().all(|&r| self.milestone(phase, r)) && !live.is_empty() {
+                if live.len() < self.quorum {
+                    return Err(self.quorum_lost(phase));
+                }
+                return Ok(());
+            }
+            if live.len() < self.quorum {
+                // Nothing can restore a retired rank: fail fast, well
+                // before the deadline.
+                return Err(self.quorum_lost(phase));
+            }
+            if Instant::now() >= deadline {
+                // Laggards are retired at the deadline; the round
+                // continues iff a quorum met the milestone.
+                for r in 0..self.slots.len() {
+                    if self.slots[r].live() && !self.milestone(phase, r) {
+                        self.retire(r, format!("{phase} phase deadline"));
+                    }
+                }
+                let met = (0..self.slots.len())
+                    .filter(|&r| self.slots[r].live() && self.milestone(phase, r))
+                    .count();
+                if met < self.quorum || met == 0 {
+                    return Err(self.quorum_lost(phase));
+                }
+                return Ok(());
+            }
+            // poll_conn's 1ms read timeouts pace the loop per live
+            // connection; add a floor so an empty slot table can't spin.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn quorum_lost(&self, phase: Phase) -> EnactError {
+        let live = (0..self.slots.len()).filter(|&r| self.slots[r].live()).count();
+        let failed: Vec<usize> =
+            (0..self.slots.len()).filter(|&r| !self.slots[r].live()).collect();
+        EnactError::QuorumLost { phase, live, quorum: self.quorum, failed }
+    }
+
+    /// Best-effort clean shutdown of every remaining socket.
+    fn shutdown_all(&mut self) {
+        let deadline = Instant::now() + Duration::from_millis(500);
+        for slot in &mut self.slots {
+            if let Some(conn) = slot.conn.as_mut() {
+                let _ = Msg::Shutdown.send_deadline(&mut conn.stream, deadline);
+            }
+            slot.conn = None;
+        }
+        for conn in &mut self.pending {
+            let _ = Msg::Shutdown.send_deadline(&mut conn.stream, deadline);
+        }
+        self.pending.clear();
+    }
 }
 
 /// Run the enactment phase: broadcast `graph` to `world` workers, have
-/// them execute it, aggregate their reports.
-pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport> {
+/// them execute it, aggregate their reports. Degrades to `cfg.quorum`
+/// survivors; never blocks past `phase_timeout_ms` per phase (plus a
+/// bounded shutdown); always joins in-process worker threads before
+/// returning — on both success and failure.
+pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport, EnactError> {
+    if cfg.world == 0 {
+        return Err(EnactError::Config("world must be ≥ 1".into()));
+    }
+    let quorum = if cfg.quorum == 0 { cfg.world } else { cfg.quorum };
+    if quorum > cfg.world {
+        return Err(EnactError::Config(format!(
+            "quorum {quorum} exceeds world {}",
+            cfg.world
+        )));
+    }
     let listener = TcpListener::bind(&cfg.bind)?;
+    listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
 
-    // Optionally host the workers ourselves (single-machine mode).
+    // Optionally host the workers ourselves (single-machine mode). Their
+    // deadlines derive from the phase budget so a hung leader can't
+    // strand them, and their retry budget mirrors the leader's
+    // re-admission budget.
     let mut worker_handles = Vec::new();
     if cfg.spawn_inproc {
         for rank in 0..cfg.world {
             let device = cfg.device.clone();
             let cluster = cfg.cluster.clone();
             let addr = addr.to_string();
+            let opts = WorkerOptions {
+                io_timeout_ms: cfg.phase_timeout_ms.max(1),
+                idle_timeout_ms: cfg.phase_timeout_ms.saturating_mul(2).max(1),
+                retry: cfg.max_rank_retries > 0,
+                max_reconnects: cfg.max_rank_retries,
+                backoff_base_ms: 10,
+                backoff_cap_ms: 100,
+                seed: cfg.seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                faults: cfg.fault.as_ref().map(|p| p.for_rank(rank)),
+            };
             worker_handles.push(std::thread::spawn(move || {
-                super::worker::run_worker(&addr, rank, &device, &cluster)
+                super::worker::run_worker_opts(&addr, rank, &device, &cluster, &opts)
             }));
         }
     }
 
-    // Accept exactly `world` workers.
-    let mut conns: Vec<(usize, TcpStream)> = Vec::new();
-    for _ in 0..cfg.world {
-        let (mut stream, _) = listener.accept()?;
-        match Msg::recv(&mut stream)? {
-            Msg::Hello { rank } => conns.push((rank, stream)),
-            other => return Err(anyhow!("expected Hello, got {other:?}")),
-        }
-    }
-    conns.sort_by_key(|(r, _)| *r);
-    let ranks: Vec<usize> = conns.iter().map(|(r, _)| *r).collect();
-    let expect: Vec<usize> = (0..cfg.world).collect();
-    if ranks != expect {
-        return Err(anyhow!("worker ranks {ranks:?} != {expect:?}"));
-    }
+    let mut eng = Engine {
+        listener,
+        slots: (0..cfg.world).map(|_| Slot::new()).collect(),
+        pending: Vec::new(),
+        graph_json: graph.to_json(),
+        fp: arena_fingerprint(graph),
+        iterations: cfg.iterations,
+        seed: cfg.seed,
+        quorum,
+        phase_timeout: Duration::from_millis(cfg.phase_timeout_ms.max(1)),
+        max_rank_retries: cfg.max_rank_retries,
+        straggler_timeout: (cfg.straggler_timeout_ms > 0)
+            .then(|| Duration::from_millis(cfg.straggler_timeout_ms)),
+    };
 
-    // Broadcast the strategy; collect fingerprint acks.
-    let graph_json = graph.to_json();
-    let fp = graph.fingerprint();
-    let mut acks = 0;
-    for (_, stream) in conns.iter_mut() {
-        Msg::Strategy { graph_json: graph_json.clone() }.send(stream)?;
-    }
-    for (rank, stream) in conns.iter_mut() {
-        match Msg::recv(stream)? {
-            Msg::Ack { rank: r, fingerprint } => {
-                if r != *rank {
-                    return Err(anyhow!("ack rank mismatch: {r} != {rank}"));
-                }
-                if fingerprint != fp {
-                    return Err(anyhow!(
-                        "worker {rank} fingerprint {fingerprint:#x} != leader {fp:#x}"
-                    ));
-                }
-                acks += 1;
-            }
-            other => return Err(anyhow!("expected Ack, got {other:?}")),
-        }
-    }
+    let outcome = [Phase::Join, Phase::Ack, Phase::Run]
+        .into_iter()
+        .try_for_each(|p| eng.run_phase(p));
 
-    // Run + collect reports.
-    for (rank, stream) in conns.iter_mut() {
-        Msg::Run { iterations: cfg.iterations, seed: cfg.seed ^ (*rank as u64) }.send(stream)?;
-    }
-    let mut per_rank = vec![(0.0, 0.0, 0.0); cfg.world];
-    for (_, stream) in conns.iter_mut() {
-        match Msg::recv(stream)? {
-            Msg::Report { rank, makespan_ms, comp_ms, comm_ms } => {
-                per_rank[rank] = (makespan_ms, comp_ms, comm_ms);
-            }
-            other => return Err(anyhow!("expected Report, got {other:?}")),
-        }
-    }
-    for (_, stream) in conns.iter_mut() {
-        Msg::Shutdown.send(stream)?;
-    }
+    // Teardown is unconditional: close sockets, stop listening, then
+    // join every spawned thread — no leaks on either path. Workers
+    // racing a reconnect hit a dead port (fast refusal) and exhaust a
+    // bounded retry budget, so these joins are bounded too.
+    eng.shutdown_all();
+    drop(eng.listener);
+    let workers_joined = worker_handles.len();
+    let mut worker_results = Vec::new();
     for h in worker_handles {
-        h.join().map_err(|_| anyhow!("worker thread panicked"))??;
+        // A worker thread may legitimately return Err under injected
+        // faults (e.g. killed with no retry budget); panics are still
+        // surfaced as retirement-grade errors, never ignored silently.
+        worker_results.push(match h.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("worker thread panicked")),
+        });
+    }
+    outcome?;
+
+    // Attribute worker-thread failures to otherwise-unexplained slots so
+    // the report names a cause, not just "missing".
+    if worker_results.len() == eng.slots.len() {
+        for (rank, res) in worker_results.iter().enumerate() {
+            if let Err(e) = res {
+                let slot = &mut eng.slots[rank];
+                if !slot.reported && slot.retired.is_none() {
+                    slot.retired = Some(format!("worker thread: {e}"));
+                }
+            }
+        }
     }
 
+    let mut status = Vec::with_capacity(cfg.world);
+    let mut per_rank = vec![(0.0, 0.0, 0.0); cfg.world];
+    let mut failed_ranks = Vec::new();
+    let mut acks = 0;
+    for (rank, slot) in eng.slots.iter().enumerate() {
+        if slot.acked || slot.reported {
+            acks += 1;
+        }
+        if slot.reported {
+            per_rank[rank] = slot.report;
+        } else {
+            failed_ranks.push(rank);
+        }
+        let state = if slot.reported {
+            RankState::Ok
+        } else if let Some(reason) = &slot.retired {
+            RankState::Retired(reason.clone())
+        } else {
+            RankState::Missing
+        };
+        status.push(RankStatus {
+            rank,
+            state,
+            makespan_ms: slot.report.0,
+            comp_ms: slot.report.1,
+            comm_ms: slot.report.2,
+            reconnects: slot.admissions.saturating_sub(1),
+            heartbeats: slot.heartbeats,
+        });
+    }
     let iteration_ms = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
-    Ok(EnactReport { per_rank, iteration_ms, acks })
+    Ok(EnactReport {
+        per_rank,
+        iteration_ms,
+        acks,
+        status,
+        degraded: !failed_ranks.is_empty(),
+        failed_ranks,
+        workers_joined,
+    })
 }

@@ -1,13 +1,46 @@
 //! Wire protocol: length-prefixed JSON frames over TCP.
 //!
 //! Deliberately simple — 4-byte big-endian length, then a JSON object with
-//! a `"type"` tag. All fields are strings/numbers so the in-tree JSON
-//! module suffices.
+//! a `"type"` tag and a `"v"` protocol version. All fields are
+//! strings/numbers so the in-tree JSON module suffices. Framing rides on
+//! [`crate::util::frame`], which supplies the hard cap on the length
+//! prefix (validated before allocation), deadline-bounded socket ops, and
+//! typed errors (DESIGN.md §12).
 
+use crate::util::frame::{
+    read_frame_deadline, write_frame_deadline, FrameError, FrameReader, TimedStream,
+};
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
-use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Protocol version carried on every frame. Bumped with the
+/// fault-tolerance rework (Heartbeat/Error frames, versioning itself);
+/// v1 peers are rejected with a typed error instead of silently
+/// misbehaving.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Hard upper bound on a coordinator frame. Strategy graphs serialize to
+/// well under a megabyte even for the largest workloads in-tree; 16 MiB
+/// leaves headroom without letting a hostile prefix drive allocation.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Default per-operation deadline when callers don't supply one.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// What went wrong decoding or transporting a message, precisely.
+#[derive(Debug, thiserror::Error)]
+pub enum MsgError {
+    #[error(transparent)]
+    Frame(#[from] FrameError),
+    #[error("frame is not valid JSON: {0}")]
+    Json(String),
+    #[error("protocol version mismatch: peer speaks v{got}, we speak v{want}")]
+    Version { got: u64, want: u64 },
+    #[error("unknown message type '{0}'")]
+    UnknownType(String),
+    #[error("message field missing or malformed: {0}")]
+    Field(&'static str),
+}
 
 /// Coordinator protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -17,111 +50,163 @@ pub enum Msg {
     /// Leader → worker: the optimized training graph (serialized).
     Strategy { graph_json: String },
     /// Worker → leader: strategy received; fingerprint echo for
-    /// consistency checking.
+    /// consistency checking (stable FNV `service::arena_fingerprint`).
     Ack { rank: usize, fingerprint: u64 },
     /// Leader → worker: execute `iterations` training iterations.
     Run { iterations: usize, seed: u64 },
+    /// Worker → leader: liveness signal between iterations, so the
+    /// leader can tell a straggler from a corpse.
+    Heartbeat { rank: usize, iter: usize },
     /// Worker → leader: execution report.
     Report { rank: usize, makespan_ms: f64, comp_ms: f64, comm_ms: f64 },
+    /// Either direction: typed failure notice before the sender gives up
+    /// on the session — lets the peer retire the rank with a reason
+    /// instead of diagnosing a bare hangup.
+    Error { rank: usize, reason: String },
     /// Leader → worker: shut down cleanly.
     Shutdown,
 }
 
 impl Msg {
     pub fn to_json(&self) -> Json {
+        let v = ("v", Json::Num(PROTOCOL_VERSION as f64));
         match self {
             Msg::Hello { rank } => Json::obj(vec![
+                v,
                 ("type", Json::Str("hello".into())),
                 ("rank", Json::Num(*rank as f64)),
             ]),
             Msg::Strategy { graph_json } => Json::obj(vec![
+                v,
                 ("type", Json::Str("strategy".into())),
                 ("graph", Json::Str(graph_json.clone())),
             ]),
             Msg::Ack { rank, fingerprint } => Json::obj(vec![
+                v,
                 ("type", Json::Str("ack".into())),
                 ("rank", Json::Num(*rank as f64)),
                 // u64 doesn't fit f64 exactly; ship as hex string.
                 ("fingerprint", Json::Str(format!("{fingerprint:016x}"))),
             ]),
             Msg::Run { iterations, seed } => Json::obj(vec![
+                v,
                 ("type", Json::Str("run".into())),
                 ("iterations", Json::Num(*iterations as f64)),
                 ("seed", Json::Str(format!("{seed:016x}"))),
             ]),
+            Msg::Heartbeat { rank, iter } => Json::obj(vec![
+                v,
+                ("type", Json::Str("heartbeat".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("iter", Json::Num(*iter as f64)),
+            ]),
             Msg::Report { rank, makespan_ms, comp_ms, comm_ms } => Json::obj(vec![
+                v,
                 ("type", Json::Str("report".into())),
                 ("rank", Json::Num(*rank as f64)),
                 ("makespan_ms", Json::Num(*makespan_ms)),
                 ("comp_ms", Json::Num(*comp_ms)),
                 ("comm_ms", Json::Num(*comm_ms)),
             ]),
-            Msg::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
+            Msg::Error { rank, reason } => Json::obj(vec![
+                v,
+                ("type", Json::Str("error".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Msg::Shutdown => Json::obj(vec![v, ("type", Json::Str("shutdown".into()))]),
         }
     }
 
-    pub fn from_json(j: &Json) -> Result<Msg> {
-        let t = j.get("type").as_str().ok_or_else(|| anyhow!("missing type"))?;
-        let hex = |s: &Json| -> Result<u64> {
-            u64::from_str_radix(s.as_str().ok_or_else(|| anyhow!("missing hex"))?, 16)
-                .map_err(|e| anyhow!("bad hex: {e}"))
+    pub fn from_json(j: &Json) -> Result<Msg, MsgError> {
+        // v1 frames carried no version field; treat absence as v1 so the
+        // mismatch error names the actual peer version.
+        let got = j.get("v").as_usize().unwrap_or(1) as u64;
+        if got != PROTOCOL_VERSION {
+            return Err(MsgError::Version { got, want: PROTOCOL_VERSION });
+        }
+        let t = j.get("type").as_str().ok_or(MsgError::Field("type"))?;
+        let hex = |s: &Json, f: &'static str| -> Result<u64, MsgError> {
+            u64::from_str_radix(s.as_str().ok_or(MsgError::Field(f))?, 16)
+                .map_err(|_| MsgError::Field(f))
         };
         Ok(match t {
-            "hello" => Msg::Hello {
-                rank: j.get("rank").as_usize().ok_or_else(|| anyhow!("rank"))?,
-            },
+            "hello" => Msg::Hello { rank: j.get("rank").as_usize().ok_or(MsgError::Field("rank"))? },
             "strategy" => Msg::Strategy {
-                graph_json: j.get("graph").as_str().ok_or_else(|| anyhow!("graph"))?.to_string(),
+                graph_json: j.get("graph").as_str().ok_or(MsgError::Field("graph"))?.to_string(),
             },
             "ack" => Msg::Ack {
-                rank: j.get("rank").as_usize().ok_or_else(|| anyhow!("rank"))?,
-                fingerprint: hex(j.get("fingerprint"))?,
+                rank: j.get("rank").as_usize().ok_or(MsgError::Field("rank"))?,
+                fingerprint: hex(j.get("fingerprint"), "fingerprint")?,
             },
             "run" => Msg::Run {
-                iterations: j.get("iterations").as_usize().ok_or_else(|| anyhow!("iters"))?,
-                seed: hex(j.get("seed"))?,
+                iterations: j.get("iterations").as_usize().ok_or(MsgError::Field("iterations"))?,
+                seed: hex(j.get("seed"), "seed")?,
+            },
+            "heartbeat" => Msg::Heartbeat {
+                rank: j.get("rank").as_usize().ok_or(MsgError::Field("rank"))?,
+                iter: j.get("iter").as_usize().ok_or(MsgError::Field("iter"))?,
             },
             "report" => Msg::Report {
-                rank: j.get("rank").as_usize().ok_or_else(|| anyhow!("rank"))?,
-                makespan_ms: j.get("makespan_ms").as_f64().ok_or_else(|| anyhow!("ms"))?,
-                comp_ms: j.get("comp_ms").as_f64().ok_or_else(|| anyhow!("comp"))?,
-                comm_ms: j.get("comm_ms").as_f64().ok_or_else(|| anyhow!("comm"))?,
+                rank: j.get("rank").as_usize().ok_or(MsgError::Field("rank"))?,
+                makespan_ms: j.get("makespan_ms").as_f64().ok_or(MsgError::Field("makespan_ms"))?,
+                comp_ms: j.get("comp_ms").as_f64().ok_or(MsgError::Field("comp_ms"))?,
+                comm_ms: j.get("comm_ms").as_f64().ok_or(MsgError::Field("comm_ms"))?,
+            },
+            "error" => Msg::Error {
+                rank: j.get("rank").as_usize().ok_or(MsgError::Field("rank"))?,
+                reason: j.get("reason").as_str().ok_or(MsgError::Field("reason"))?.to_string(),
             },
             "shutdown" => Msg::Shutdown,
-            other => return Err(anyhow!("unknown message type '{other}'")),
+            other => return Err(MsgError::UnknownType(other.to_string())),
         })
     }
 
-    /// Write one length-prefixed frame.
-    pub fn send(&self, stream: &mut TcpStream) -> Result<()> {
+    /// Decode a frame body that has already been read off the wire.
+    pub fn decode(body: &str) -> Result<Msg, MsgError> {
+        let j = Json::parse(body).map_err(|e| MsgError::Json(e.to_string()))?;
+        Msg::from_json(&j)
+    }
+
+    /// Write one length-prefixed frame, bounded by the default deadline.
+    pub fn send<S: TimedStream + ?Sized>(&self, stream: &mut S) -> Result<(), MsgError> {
+        self.send_deadline(stream, Instant::now() + DEFAULT_IO_TIMEOUT)
+    }
+
+    /// Write one length-prefixed frame, bounded by `deadline`.
+    pub fn send_deadline<S: TimedStream + ?Sized>(
+        &self,
+        stream: &mut S,
+        deadline: Instant,
+    ) -> Result<(), MsgError> {
         let payload = self.to_json().to_string();
-        let bytes = payload.as_bytes();
-        let len = (bytes.len() as u32).to_be_bytes();
-        stream.write_all(&len)?;
-        stream.write_all(bytes)?;
-        stream.flush()?;
+        write_frame_deadline(stream, payload.as_bytes(), deadline)?;
         Ok(())
     }
 
-    /// Read one length-prefixed frame.
-    pub fn recv(stream: &mut TcpStream) -> Result<Msg> {
-        let mut len = [0u8; 4];
-        stream.read_exact(&mut len)?;
-        let n = u32::from_be_bytes(len) as usize;
-        if n > 256 * 1024 * 1024 {
-            return Err(anyhow!("frame too large: {n}"));
-        }
-        let mut buf = vec![0u8; n];
-        stream.read_exact(&mut buf)?;
-        let s = String::from_utf8(buf)?;
-        let j = Json::parse(&s).map_err(|e| anyhow!("frame parse: {e}"))?;
-        Msg::from_json(&j)
+    /// Read one length-prefixed frame, bounded by the default deadline.
+    pub fn recv<S: TimedStream + ?Sized>(stream: &mut S) -> Result<Msg, MsgError> {
+        let mut reader = FrameReader::with_cap(MAX_FRAME_BYTES);
+        Msg::recv_deadline(stream, &mut reader, Instant::now() + DEFAULT_IO_TIMEOUT)
+    }
+
+    /// Read one length-prefixed frame, bounded by `deadline`, resuming
+    /// any partial frame held in `reader`.
+    pub fn recv_deadline<S: TimedStream + ?Sized>(
+        stream: &mut S,
+        reader: &mut FrameReader,
+        deadline: Instant,
+    ) -> Result<Msg, MsgError> {
+        let body = read_frame_deadline(stream, reader, deadline)?;
+        Msg::decode(&body)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
 
     #[test]
     fn json_roundtrip_all_variants() {
@@ -130,7 +215,9 @@ mod tests {
             Msg::Strategy { graph_json: "{\"x\":1}".into() },
             Msg::Ack { rank: 1, fingerprint: 0xDEADBEEF12345678 },
             Msg::Run { iterations: 10, seed: u64::MAX },
+            Msg::Heartbeat { rank: 2, iter: 7 },
             Msg::Report { rank: 2, makespan_ms: 1.5, comp_ms: 1.0, comm_ms: 0.75 },
+            Msg::Error { rank: 4, reason: "fingerprint mismatch".into() },
             Msg::Shutdown,
         ];
         for m in msgs {
@@ -142,7 +229,6 @@ mod tests {
 
     #[test]
     fn tcp_frame_roundtrip() {
-        use std::net::TcpListener;
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let t = std::thread::spawn(move || {
@@ -155,6 +241,76 @@ mod tests {
         m.send(&mut c).unwrap();
         let back = Msg::recv(&mut c).unwrap();
         assert_eq!(m, back);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        // A v1 frame (no "v" field) and a future v3 frame both fail with
+        // the precise version error, never a confusing field error.
+        let v1 = Json::obj(vec![("type", Json::Str("shutdown".into()))]);
+        match Msg::from_json(&v1) {
+            Err(MsgError::Version { got: 1, want }) => assert_eq!(want, PROTOCOL_VERSION),
+            other => panic!("expected Version error, got {other:?}"),
+        }
+        let v3 = Json::obj(vec![
+            ("v", Json::Num(3.0)),
+            ("type", Json::Str("shutdown".into())),
+        ]);
+        assert!(matches!(Msg::from_json(&v3), Err(MsgError::Version { got: 3, .. })));
+    }
+
+    #[test]
+    fn oversized_prefix_yields_too_large_without_allocation() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&(u32::MAX).to_be_bytes()).unwrap(); // 4 GiB claim
+            s.write_all(b"junk").unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        match Msg::recv(&mut c) {
+            Err(MsgError::Frame(FrameError::TooLarge { got, cap })) => {
+                assert_eq!(got, u32::MAX as usize);
+                assert_eq!(cap, MAX_FRAME_BYTES);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn garbage_json_and_bad_utf8_are_typed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Frame 1: valid UTF-8, invalid JSON.
+            s.write_all(&(7u32).to_be_bytes()).unwrap();
+            s.write_all(b"{nope!!").unwrap();
+            // Frame 2: invalid UTF-8.
+            s.write_all(&(3u32).to_be_bytes()).unwrap();
+            s.write_all(&[0xFF, 0xFE, 0xFD]).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        assert!(matches!(Msg::recv(&mut c), Err(MsgError::Json(_))));
+        assert!(matches!(Msg::recv(&mut c), Err(MsgError::Frame(FrameError::Utf8(_)))));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn mid_frame_eof_is_typed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&(100u32).to_be_bytes()).unwrap();
+            s.write_all(b"truncated").unwrap();
+            // drop: peer closes mid-frame
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        assert!(matches!(Msg::recv(&mut c), Err(MsgError::Frame(FrameError::Eof))));
         t.join().unwrap();
     }
 }

@@ -11,11 +11,19 @@
 //! the synchronous-iteration time). The same protocol drives in-process
 //! worker threads (tests, single-host runs) and separate processes
 //! (`disco worker` / `disco enact` over real sockets).
+//!
+//! Unlike the paper's idealized happy path, the protocol here is
+//! fault-tolerant (DESIGN.md §12): per-phase deadlines, heartbeat-based
+//! straggler detection, quorum-based graceful degradation, worker
+//! reconnect with capped backoff, and a seeded fault-injection shim
+//! ([`fault`]) for deterministic chaos testing.
 
+pub mod fault;
 pub mod messages;
 pub mod leader;
 pub mod worker;
 
-pub use leader::{enact, EnactConfig, EnactReport};
-pub use messages::Msg;
-pub use worker::run_worker;
+pub use fault::{ChaosStream, Fault, FaultPlan, FaultStream, RankFaults};
+pub use leader::{enact, EnactConfig, EnactError, EnactReport, Phase, RankState, RankStatus};
+pub use messages::{Msg, MsgError, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use worker::{run_worker, run_worker_opts, Backoff, WorkerOptions};

@@ -1,50 +1,339 @@
 //! Worker (Activator): receive the optimized module, execute, report.
+//!
+//! Fault-tolerant shape (DESIGN.md §12): every socket op is
+//! deadline-bounded, a lost leader connection is survivable — with
+//! `retry` the worker reconnects under capped exponential backoff with
+//! seeded jitter — and validated `Strategy` state is cached so a
+//! reconnect re-acks instantly instead of re-parsing (and a byte-identical
+//! re-broadcast is recognized as the same module). Execution is split per
+//! iteration so the worker can emit [`Msg::Heartbeat`] between
+//! iterations, giving the leader a liveness signal that distinguishes a
+//! straggler from a corpse.
 
+use super::fault::{ChaosStream, RankFaults};
 use super::messages::Msg;
 use crate::device::DeviceModel;
 use crate::graph::TrainingGraph;
 use crate::network::Cluster;
+use crate::service::arena_fingerprint;
 use crate::sim::hifi::{execute_real, HifiOptions};
+use crate::util::frame::{FrameError, FrameReader};
+use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
-use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::messages::MAX_FRAME_BYTES;
+
+/// Worker-side fault-tolerance knobs.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Deadline for each individual send/recv (ms).
+    pub io_timeout_ms: u64,
+    /// Max silence while waiting for the leader's next command (ms).
+    pub idle_timeout_ms: u64,
+    /// Reconnect after a transient connection loss instead of dying.
+    pub retry: bool,
+    /// Cap on reconnect attempts (per worker lifetime).
+    pub max_reconnects: usize,
+    /// Backoff base delay (ms): attempt n sleeps ~base·2ⁿ, jittered.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling (ms).
+    pub backoff_cap_ms: u64,
+    /// Seed for backoff jitter — deterministic in tests.
+    pub seed: u64,
+    /// Injected faults for this rank (chaos testing only).
+    pub faults: Option<RankFaults>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            io_timeout_ms: 10_000,
+            idle_timeout_ms: 30_000,
+            retry: false,
+            max_reconnects: 3,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 250,
+            seed: 0x5EED,
+            faults: None,
+        }
+    }
+}
+
+/// Capped exponential backoff with seeded jitter. Attempt `n` sleeps a
+/// uniform draw from `[d/2, d]` where `d = min(base·2ⁿ, cap)` — the
+/// classic decorrelation that keeps reconnecting workers from
+/// thundering-herding the leader, yet fully reproducible per seed.
+#[derive(Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base_ms: u64, cap_ms: u64, seed: u64) -> Backoff {
+        Backoff { base_ms: base_ms.max(1), cap_ms: cap_ms.max(1), attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// Delay for the next attempt (advances the attempt counter).
+    pub fn next_ms(&mut self) -> u64 {
+        let exp = self
+            .base_ms
+            .saturating_mul(1u64.checked_shl(self.attempt).unwrap_or(u64::MAX))
+            .min(self.cap_ms);
+        self.attempt = self.attempt.saturating_add(1);
+        let half = (exp / 2).max(1);
+        half + self.rng.gen_range((exp - half + 1) as usize) as u64
+    }
+}
+
+/// Strategy state that survives reconnects: the raw module string, the
+/// validated graph, and its stable fingerprint. A re-broadcast of the
+/// identical string re-acks without re-parsing.
+#[derive(Default)]
+struct WorkerState {
+    raw: Option<String>,
+    graph: Option<TrainingGraph>,
+    fp: u64,
+    kill_at_iter: Option<usize>,
+}
+
+/// Why one leader session ended without a fatal error.
+enum Served {
+    /// Leader sent Shutdown — clean exit.
+    Shutdown,
+    /// Connection lost / deadline expired — transient, retryable.
+    Lost(String),
+}
 
 /// Connect to the leader at `addr` as `rank` and serve the enactment
 /// protocol until Shutdown. Execution uses the hi-fi substrate with a
 /// per-rank seed (DESIGN.md §2 — this is "running on the testbed").
+///
+/// Compatibility wrapper over [`run_worker_opts`] with default options
+/// (no retry).
 pub fn run_worker(
     addr: &str,
     rank: usize,
     device: &DeviceModel,
     cluster: &Cluster,
 ) -> Result<()> {
-    let mut stream = TcpStream::connect(addr)?;
-    Msg::Hello { rank }.send(&mut stream)?;
+    run_worker_opts(addr, rank, device, cluster, &WorkerOptions::default())
+}
 
-    let mut graph: Option<TrainingGraph> = None;
+/// Full-control worker entry point.
+pub fn run_worker_opts(
+    addr: &str,
+    rank: usize,
+    device: &DeviceModel,
+    cluster: &Cluster,
+    opts: &WorkerOptions,
+) -> Result<()> {
+    let faults = opts.faults.clone().unwrap_or_default();
+    let mut state = WorkerState { kill_at_iter: faults.kill_at_iter, ..WorkerState::default() };
+    let mut backoff = Backoff::new(opts.backoff_base_ms, opts.backoff_cap_ms, opts.seed);
+    let mut reconnects = 0usize;
     loop {
-        match Msg::recv(&mut stream)? {
+        // Scope the stream to the session so a lost connection is torn
+        // down (FIN sent) *before* the backoff sleep — the leader then
+        // observes the death ahead of the reconnect's Hello instead of
+        // racing it.
+        let served = match ChaosStream::connect(addr, &faults) {
+            Ok(mut stream) => serve_once(&mut stream, rank, device, cluster, opts, &mut state),
+            Err(e) => {
+                if opts.retry && reconnects < opts.max_reconnects {
+                    reconnects += 1;
+                    std::thread::sleep(Duration::from_millis(backoff.next_ms()));
+                    continue;
+                }
+                return Err(anyhow!("worker {rank}: connect {addr}: {e}"));
+            }
+        };
+        match served {
+            Ok(Served::Shutdown) => return Ok(()),
+            Ok(Served::Lost(reason)) => {
+                if opts.retry && reconnects < opts.max_reconnects {
+                    reconnects += 1;
+                    std::thread::sleep(Duration::from_millis(backoff.next_ms()));
+                    continue;
+                }
+                return Err(anyhow!("worker {rank}: connection lost: {reason}"));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Serve one leader session on `stream`. `Ok(Lost)` is transient (the
+/// caller may reconnect); `Err` is fatal (protocol violation or invalid
+/// strategy — announced to the leader with an [`Msg::Error`] frame first
+/// where the socket still permits).
+fn serve_once(
+    stream: &mut ChaosStream,
+    rank: usize,
+    device: &DeviceModel,
+    cluster: &Cluster,
+    opts: &WorkerOptions,
+    state: &mut WorkerState,
+) -> Result<Served> {
+    let io = Duration::from_millis(opts.io_timeout_ms.max(1));
+    let idle = Duration::from_millis(opts.idle_timeout_ms.max(1));
+    let mut reader = FrameReader::with_cap(MAX_FRAME_BYTES);
+
+    if let Err(e) = Msg::Hello { rank }.send_deadline(stream, Instant::now() + io) {
+        return Ok(Served::Lost(format!("hello: {e}")));
+    }
+
+    loop {
+        let msg = match Msg::recv_deadline(stream, &mut reader, Instant::now() + idle) {
+            Ok(m) => m,
+            // Transport-level trouble is transient — the session can be
+            // re-established. Decode-level trouble (bad JSON, wrong
+            // version) means the leader is broken: die loudly.
+            Err(super::messages::MsgError::Frame(fe)) => {
+                return match fe {
+                    FrameError::Utf8(_) => {
+                        let reason = format!("leader sent non-UTF8 frame: {fe}");
+                        let _ = Msg::Error { rank, reason: reason.clone() }
+                            .send_deadline(stream, Instant::now() + io);
+                        Err(anyhow!("worker {rank}: {reason}"))
+                    }
+                    _ => Ok(Served::Lost(fe.to_string())),
+                };
+            }
+            Err(e) => {
+                let reason = format!("undecodable frame from leader: {e}");
+                let _ = Msg::Error { rank, reason: reason.clone() }
+                    .send_deadline(stream, Instant::now() + io);
+                return Err(anyhow!("worker {rank}: {reason}"));
+            }
+        };
+        match msg {
             Msg::Strategy { graph_json } => {
-                let g = TrainingGraph::from_json(&graph_json)?;
-                // Validate before acking: a worker must never execute a
-                // malformed module.
-                g.validate().map_err(|e| anyhow!("invalid strategy: {e}"))?;
-                Msg::Ack { rank, fingerprint: g.fingerprint() }.send(&mut stream)?;
-                graph = Some(g);
+                // Resumable state: a byte-identical module re-acks from
+                // cache (the common case after a reconnect).
+                if state.raw.as_deref() != Some(graph_json.as_str()) {
+                    let g = match TrainingGraph::from_json(&graph_json)
+                        .and_then(|g| g.validate().map(|_| g).map_err(|e| anyhow!("{e}")))
+                    {
+                        Ok(g) => g,
+                        Err(e) => {
+                            // A worker must never execute a malformed
+                            // module — tell the leader why, then die.
+                            let reason = format!("invalid strategy: {e}");
+                            let _ = Msg::Error { rank, reason: reason.clone() }
+                                .send_deadline(stream, Instant::now() + io);
+                            return Err(anyhow!("worker {rank}: {reason}"));
+                        }
+                    };
+                    state.fp = arena_fingerprint(&g);
+                    state.graph = Some(g);
+                    state.raw = Some(graph_json);
+                }
+                if let Err(e) = Msg::Ack { rank, fingerprint: state.fp }
+                    .send_deadline(stream, Instant::now() + io)
+                {
+                    return Ok(Served::Lost(format!("ack: {e}")));
+                }
             }
             Msg::Run { iterations, seed } => {
-                let g = graph.as_ref().ok_or_else(|| anyhow!("Run before Strategy"))?;
-                let opts = HifiOptions { iterations, seed, ..Default::default() };
-                let r = execute_real(g, device, cluster, &opts);
-                Msg::Report {
-                    rank,
-                    makespan_ms: r.makespan_ms,
-                    comp_ms: r.comp_busy_ms,
-                    comm_ms: r.comm_busy_ms,
+                let g = match state.graph.as_ref() {
+                    Some(g) => g,
+                    None => {
+                        let reason = "Run before Strategy".to_string();
+                        let _ = Msg::Error { rank, reason: reason.clone() }
+                            .send_deadline(stream, Instant::now() + io);
+                        return Err(anyhow!("worker {rank}: {reason}"));
+                    }
+                };
+                let iters = iterations.max(1);
+                let (mut mk, mut cp, mut cm) = (0.0f64, 0.0f64, 0.0f64);
+                for it in 0..iters {
+                    if state.kill_at_iter == Some(it) {
+                        // Abrupt death: no Error frame, no handshake —
+                        // the leader must cope with a bare dead socket.
+                        // Fires once so a readmitted worker can finish.
+                        state.kill_at_iter = None;
+                        return Ok(Served::Lost(format!("fault: killed at iteration {it}")));
+                    }
+                    let opts1 = HifiOptions {
+                        iterations: 1,
+                        seed: seed.wrapping_add(it as u64),
+                        ..Default::default()
+                    };
+                    let r = execute_real(g, device, cluster, &opts1);
+                    mk += r.makespan_ms;
+                    cp += r.comp_busy_ms;
+                    cm += r.comm_busy_ms;
+                    if it + 1 < iters {
+                        // Liveness between iterations: lets the leader
+                        // tell a straggler from a corpse.
+                        if let Err(e) = Msg::Heartbeat { rank, iter: it }
+                            .send_deadline(stream, Instant::now() + io)
+                        {
+                            return Ok(Served::Lost(format!("heartbeat: {e}")));
+                        }
+                    }
                 }
-                .send(&mut stream)?;
+                let k = iters as f64;
+                if let Err(e) = (Msg::Report {
+                    rank,
+                    makespan_ms: mk / k,
+                    comp_ms: cp / k,
+                    comm_ms: cm / k,
+                })
+                .send_deadline(stream, Instant::now() + io)
+                {
+                    return Ok(Served::Lost(format!("report: {e}")));
+                }
             }
-            Msg::Shutdown => return Ok(()),
-            other => return Err(anyhow!("worker {rank}: unexpected {other:?}")),
+            Msg::Shutdown => return Ok(Served::Shutdown),
+            Msg::Error { reason, .. } => {
+                return Err(anyhow!("worker {rank}: leader error: {reason}"))
+            }
+            other => {
+                let reason = format!("unexpected {other:?}");
+                let _ = Msg::Error { rank, reason: reason.clone() }
+                    .send_deadline(stream, Instant::now() + io);
+                return Err(anyhow!("worker {rank}: {reason}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_jittered_and_deterministic() {
+        let seq = |seed: u64| -> Vec<u64> {
+            let mut b = Backoff::new(10, 250, seed);
+            (0..8).map(|_| b.next_ms()).collect()
+        };
+        let a = seq(42);
+        let b = seq(42);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let c = seq(43);
+        assert_ne!(a, c, "different seeds must jitter differently");
+        // Every delay respects the cap and the half-to-full jitter band
+        // of the capped exponential.
+        for (i, &d) in a.iter().enumerate() {
+            let exp = 10u64.saturating_mul(1 << i.min(60)).min(250);
+            assert!(d <= exp, "attempt {i}: {d} > {exp}");
+            assert!(d >= (exp / 2).max(1), "attempt {i}: {d} below jitter floor");
+        }
+        // The tail must sit at the cap's band, not keep growing.
+        assert!(a[7] <= 250);
+    }
+
+    #[test]
+    fn backoff_shift_overflow_saturates() {
+        let mut b = Backoff::new(u64::MAX / 2, u64::MAX, 1);
+        for _ in 0..70 {
+            let _ = b.next_ms(); // must not panic on shift overflow
         }
     }
 }

@@ -4,12 +4,18 @@
 //! disco search    --model transformer --cluster a [--alpha 1.05 --beta 10]
 //!                 [--estimator analytical|gnn|oracle] [--out strategy.json]
 //! disco serve     [--addr 127.0.0.1:7077] [--store plans.jsonl|none]
-//!                 [--capacity 512] [--no-warm] [--no-nearest] [--stop]
+//!                 [--capacity 512] [--max-conns 256] [--no-warm]
+//!                 [--no-nearest] [--stop]
 //! disco plan      --model transformer [--graph module.json] [--cluster a]
 //!                 [--addr HOST:PORT] [--store plans.jsonl] [--unchanged 150]
 //!                 [--expect store|warm|cold] [--out strategy.json]
 //! disco enact     --strategy strategy.json --world 4 [--iterations 10]
+//!                 [--quorum N] [--timeout-ms 10000] [--retries 1]
+//!                 [--straggler-ms 0] [--chaos "kill@3:1,delay@2:80"]
+//!                 [--expect-degraded]
 //! disco worker    --connect 127.0.0.1:7100 --rank 0 [--cluster a]
+//!                 [--retry] [--max-reconnects 3] [--backoff-ms 10]
+//!                 [--timeout-ms 10000]
 //! disco profile   --model vgg19 --cluster a
 //! disco bench     fig6|fig7|fig8|fig9|table2|fig10|table3|table4|ablation|extensions|perf|all
 //!                 [--full] [--estimator ...] [--out EXPERIMENTS.md-section]
@@ -25,7 +31,7 @@
 
 use anyhow::{anyhow, Result};
 use disco::bench::{experiments, BenchOptions, EstimatorKind, Scale};
-use disco::coordinator::{enact, run_worker, EnactConfig};
+use disco::coordinator::{enact, EnactConfig};
 use disco::estimator::CostEstimator;
 use disco::graph::TrainingGraph;
 use disco::models::{build, ModelKind};
@@ -124,6 +130,7 @@ fn serve_options(args: &Args) -> Result<disco::service::ServeOptions> {
         opts.store_path = if store == "none" { None } else { Some(store.to_string()) };
     }
     opts.capacity = args.get_usize("capacity", opts.capacity);
+    opts.max_conns = args.get_usize("max-conns", opts.max_conns);
     if args.has_flag("no-warm") {
         opts.warm.enabled = false;
     }
@@ -298,18 +305,55 @@ fn cmd_enact(args: &Args) -> Result<()> {
     let path = args.get("strategy").ok_or_else(|| anyhow!("--strategy <file> required"))?;
     let graph = TrainingGraph::from_json(&std::fs::read_to_string(path)?)?;
     let cluster = cluster_of(args);
+    let seed = args.get_u64("seed", 0xC0DE);
+    // `--chaos "kill@3:1,delay@2:80"` — deterministic fault injection
+    // into the in-process workers (grammar in coordinator::fault).
+    let fault = match args.get("chaos") {
+        Some(spec) => {
+            Some(disco::coordinator::FaultPlan::parse(spec, seed).map_err(|e| anyhow!("{e}"))?)
+        }
+        None => None,
+    };
     let cfg = EnactConfig {
         world: args.get_usize("world", 4),
         iterations: args.get_usize("iterations", 10),
-        seed: args.get_u64("seed", 0xC0DE),
+        seed,
         device: BenchOptions::device_for(&cluster),
         cluster,
+        quorum: args.get_usize("quorum", 0),
+        phase_timeout_ms: args.get_u64("timeout-ms", 10_000),
+        max_rank_retries: args.get_usize("retries", 1),
+        straggler_timeout_ms: args.get_u64("straggler-ms", 0),
+        fault,
         ..Default::default()
     };
     let report = enact(&graph, &cfg)?;
-    println!("enactment: {} workers acked; per-iteration {:.3} ms", report.acks, report.iteration_ms);
-    for (rank, (mk, comp, comm)) in report.per_rank.iter().enumerate() {
-        println!("  rank {rank}: makespan {mk:.3} ms (comp {comp:.3}, comm {comm:.3})");
+    println!(
+        "enactment: {} workers acked; per-iteration {:.3} ms{}",
+        report.acks,
+        report.iteration_ms,
+        if report.degraded {
+            format!(" — DEGRADED (failed ranks {:?})", report.failed_ranks)
+        } else {
+            String::new()
+        }
+    );
+    for s in &report.status {
+        match &s.state {
+            disco::coordinator::RankState::Ok => println!(
+                "  rank {}: makespan {:.3} ms (comp {:.3}, comm {:.3}; {} reconnects, {} heartbeats)",
+                s.rank, s.makespan_ms, s.comp_ms, s.comm_ms, s.reconnects, s.heartbeats
+            ),
+            disco::coordinator::RankState::Missing => println!("  rank {}: MISSING", s.rank),
+            disco::coordinator::RankState::Retired(why) => {
+                println!("  rank {}: RETIRED ({why})", s.rank)
+            }
+        }
+    }
+    // CI hook: fail unless the run degraded exactly as the injected
+    // fault plan predicts.
+    if args.has_flag("expect-degraded") && !report.degraded {
+        return Err(anyhow!("--expect-degraded: run completed without degradation"));
     }
     Ok(())
 }
@@ -319,7 +363,18 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let rank = args.get_usize("rank", 0);
     let cluster = cluster_of(args);
     let device = BenchOptions::device_for(&cluster);
-    run_worker(addr, rank, &device, &cluster)
+    let defaults = disco::coordinator::WorkerOptions::default();
+    let opts = disco::coordinator::WorkerOptions {
+        io_timeout_ms: args.get_u64("timeout-ms", defaults.io_timeout_ms),
+        idle_timeout_ms: args.get_u64("idle-ms", defaults.idle_timeout_ms),
+        retry: args.has_flag("retry"),
+        max_reconnects: args.get_usize("max-reconnects", defaults.max_reconnects),
+        backoff_base_ms: args.get_u64("backoff-ms", defaults.backoff_base_ms),
+        backoff_cap_ms: args.get_u64("backoff-cap-ms", defaults.backoff_cap_ms),
+        seed: args.get_u64("seed", defaults.seed),
+        faults: None,
+    };
+    disco::coordinator::run_worker_opts(addr, rank, &device, &cluster, &opts)
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {

@@ -41,6 +41,8 @@ pub struct ServiceConfig {
     pub warm_start: bool,
     /// Allow seeding from the nearest-sketch plan of a different graph.
     pub nearest: bool,
+    /// Connection limit before the server sheds load.
+    pub max_conns: usize,
 }
 
 impl Default for ServiceConfig {
@@ -51,6 +53,7 @@ impl Default for ServiceConfig {
             capacity: 512,
             warm_start: true,
             nearest: true,
+            max_conns: 256,
         }
     }
 }
@@ -67,6 +70,7 @@ impl ServiceConfig {
                 nearest: self.nearest,
                 ..WarmOptions::default()
             },
+            max_conns: self.max_conns,
         }
     }
 }

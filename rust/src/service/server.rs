@@ -36,18 +36,26 @@ use crate::graph::TrainingGraph;
 use crate::network::Cluster;
 use crate::profiler;
 use crate::search::{backtracking_search_seeded, SearchConfig};
+use crate::util::frame::{FrameError, FrameReader};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Frames larger than this are rejected (a corrupt length prefix must
-/// not make the server try to allocate gigabytes).
+/// not make the server try to allocate gigabytes). The cap is enforced
+/// by [`FrameReader`] *before* any buffer is allocated — the same
+/// hardened idiom the coordinator uses (DESIGN.md §12).
 const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// A started frame must complete within this budget — defeats slowloris
+/// clients that dribble one byte per read-timeout tick and would
+/// otherwise pin a handler thread forever.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
 
 /// Default `unchanged_limit` for served searches — service latency over
 /// paper-budget exhaustiveness; requests override per call.
@@ -62,91 +70,27 @@ pub fn write_frame(stream: &mut TcpStream, body: &str) -> std::io::Result<()> {
 }
 
 /// Read one length-prefixed JSON frame (plain blocking form — the
-/// client side, whose streams have no read timeout).
+/// client side, whose streams have no read timeout). Shares the capped,
+/// incremental decoder with the server side; error kinds are preserved
+/// for callers matching on `io::ErrorKind`.
 pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<String> {
-    let mut len = [0u8; 4];
-    stream.read_exact(&mut len)?;
-    let n = frame_len(len)?;
-    let mut buf = vec![0u8; n];
-    stream.read_exact(&mut buf)?;
-    String::from_utf8(buf)
-        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
-}
-
-fn frame_len(len: [u8; 4]) -> std::io::Result<usize> {
-    let n = u32::from_be_bytes(len) as usize;
-    if n > MAX_FRAME_BYTES {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("frame of {n} bytes exceeds the {MAX_FRAME_BYTES}-byte cap"),
-        ));
-    }
-    Ok(n)
-}
-
-/// Fill `buf[*filled..]` from a stream that has a read timeout,
-/// *without* abandoning a partial read: a timeout after bytes were
-/// consumed must keep waiting (giving up mid-frame would desync the
-/// protocol — TCP gives no atomicity between the length prefix and the
-/// body). A timeout with nothing consumed yet returns `Ok(false)` (an
-/// idle tick); `give_up` aborts a mid-frame stall (server shutdown).
-fn read_full_timed(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    filled: &mut usize,
-    give_up: &AtomicBool,
-) -> std::io::Result<bool> {
-    while *filled < buf.len() {
-        match stream.read(&mut buf[*filled..]) {
-            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
-            Ok(n) => *filled += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                if *filled == 0 {
-                    return Ok(false);
-                }
-                if give_up.load(Ordering::SeqCst) {
-                    return Err(e);
-                }
+    let mut reader = FrameReader::with_cap(MAX_FRAME_BYTES);
+    loop {
+        match reader.poll(stream) {
+            Ok(Some(body)) => return Ok(body),
+            Ok(None) => continue, // blocking stream: spurious wakeup only
+            Err(FrameError::Io(e)) => return Err(e),
+            Err(e @ (FrameError::Closed | FrameError::Eof)) => {
+                return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, e.to_string()))
             }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(e),
+            Err(e @ FrameError::Deadline { .. }) => {
+                return Err(std::io::Error::new(std::io::ErrorKind::TimedOut, e.to_string()))
+            }
+            Err(e) => {
+                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+            }
         }
     }
-    Ok(true)
-}
-
-/// Server-side frame read on a timeout-bearing stream: `Ok(None)` is an
-/// idle tick (no frame started — caller checks for shutdown and keeps
-/// the connection), `Ok(Some(body))` is a complete frame.
-fn read_frame_idle(
-    stream: &mut TcpStream,
-    give_up: &AtomicBool,
-) -> std::io::Result<Option<String>> {
-    let mut len = [0u8; 4];
-    let mut filled = 0usize;
-    // Idle ticks are only possible before the first byte of the length
-    // prefix; after that the frame must complete.
-    if !read_full_timed(stream, &mut len, &mut filled, give_up)? {
-        return Ok(None);
-    }
-    let n = frame_len(len)?;
-    let mut buf = vec![0u8; n];
-    let mut body_filled = 0usize;
-    while !read_full_timed(stream, &mut buf, &mut body_filled, give_up)? {
-        // Timeout between prefix and body with zero body bytes: still
-        // mid-frame, keep waiting unless shutting down.
-        if give_up.load(Ordering::SeqCst) {
-            return Err(std::io::ErrorKind::TimedOut.into());
-        }
-    }
-    String::from_utf8(buf)
-        .map(Some)
-        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
 }
 
 /// One request/response round-trip against a running server.
@@ -166,6 +110,9 @@ pub struct ServeOptions {
     pub store_path: Option<String>,
     pub capacity: usize,
     pub warm: WarmOptions,
+    /// Connections beyond this are shed with an `overloaded` error frame
+    /// instead of spawning a handler — bounded thread usage under load.
+    pub max_conns: usize,
 }
 
 impl Default for ServeOptions {
@@ -175,6 +122,7 @@ impl Default for ServeOptions {
             store_path: Some("plans.jsonl".to_string()),
             capacity: 512,
             warm: WarmOptions::default(),
+            max_conns: 256,
         }
     }
 }
@@ -207,12 +155,26 @@ struct State {
     warm: WarmOptions,
     shutdown: AtomicBool,
     addr: SocketAddr,
+    max_conns: usize,
+    /// Live handler threads (shed-on-overload watermark).
+    active: AtomicUsize,
     // Counters (surfaced by the `stats` command).
     requests: AtomicU64,
     searches: AtomicU64,
     store_hits: AtomicU64,
     warm_starts: AtomicU64,
     coalesced: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// Decrements the live-handler count when a handler exits, however it
+/// exits.
+struct ActiveGuard<'a>(&'a State);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Removes the in-flight entry and opens the gate even if the leader's
@@ -251,11 +213,14 @@ impl Server {
                 warm: opts.warm.clone(),
                 shutdown: AtomicBool::new(false),
                 addr,
+                max_conns: opts.max_conns.max(1),
+                active: AtomicUsize::new(0),
                 requests: AtomicU64::new(0),
                 searches: AtomicU64::new(0),
                 store_hits: AtomicU64::new(0),
                 warm_starts: AtomicU64::new(0),
                 coalesced: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
             }),
         })
     }
@@ -273,17 +238,36 @@ impl Server {
                 break;
             }
             match stream {
-                Ok(s) => {
+                Ok(mut s) => {
+                    // Shed on overload: beyond `max_conns` live handlers,
+                    // reply inline with a typed error and drop — bounded
+                    // threads beat an unbounded spawn storm.
+                    if self.state.active.load(Ordering::SeqCst) >= self.state.max_conns {
+                        self.state.shed.fetch_add(1, Ordering::Relaxed);
+                        let _ = s.set_write_timeout(Some(Duration::from_millis(500)));
+                        let _ = write_frame(
+                            &mut s,
+                            &err_json("overloaded: connection limit reached, retry later")
+                                .to_string(),
+                        );
+                        continue;
+                    }
                     // Bounded read blocking so idle keep-alive connections
                     // notice shutdown instead of pinning the final join
                     // forever.
                     let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
                     let state = Arc::clone(&self.state);
+                    // Counted before spawn so a burst can't race past the
+                    // limit; the handler's guard decrements on any exit.
+                    state.active.fetch_add(1, Ordering::SeqCst);
                     // Reap finished handlers so a long-running server
                     // doesn't accumulate one dead JoinHandle per
                     // connection ever accepted.
                     handles.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
-                    handles.push(std::thread::spawn(move || handle_conn(&state, s)));
+                    handles.push(std::thread::spawn(move || {
+                        let _guard = ActiveGuard(&state);
+                        handle_conn(&state, s)
+                    }));
                 }
                 Err(e) => eprintln!("disco serve: accept failed: {e}"),
             }
@@ -296,18 +280,44 @@ impl Server {
 }
 
 fn handle_conn(state: &State, mut stream: TcpStream) {
+    let mut reader = FrameReader::with_cap(MAX_FRAME_BYTES);
+    // Set when the first byte of a frame arrives; a frame must complete
+    // within REQUEST_DEADLINE of this instant (slowloris defense).
+    let mut frame_started: Option<Instant> = None;
     loop {
-        let body = match read_frame_idle(&mut stream, &state.shutdown) {
-            // Idle tick (connection open, no frame started): keep
-            // serving unless the server is shutting down.
+        let body = match reader.poll(&mut stream) {
+            // Idle tick (read timeout). Keep serving — unless the server
+            // is shutting down, or a started frame has dribbled past its
+            // deadline.
             Ok(None) => {
                 if state.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
+                if reader.mid_frame() {
+                    let started = *frame_started.get_or_insert_with(Instant::now);
+                    if started.elapsed() > REQUEST_DEADLINE {
+                        let _ = write_frame(
+                            &mut stream,
+                            &err_json("request deadline exceeded mid-frame").to_string(),
+                        );
+                        return;
+                    }
+                } else {
+                    frame_started = None;
+                }
                 continue;
             }
-            Ok(Some(b)) => b,
-            Err(_) => return, // client closed (or sent garbage): drop the connection
+            Ok(Some(b)) => {
+                frame_started = None;
+                b
+            }
+            // A typed rejection frame tells well-meaning-but-broken
+            // clients *why* before the drop; hangups just drop.
+            Err(e @ (FrameError::TooLarge { .. } | FrameError::Utf8(_))) => {
+                let _ = write_frame(&mut stream, &err_json(&e.to_string()).to_string());
+                return;
+            }
+            Err(_) => return, // closed / reset / mid-frame EOF: drop
         };
         let reply = dispatch(state, &body);
         if write_frame(&mut stream, &reply.to_string()).is_err() {
@@ -355,6 +365,9 @@ fn stats_json(state: &State) -> Json {
         ("store_hits", Json::Num(state.store_hits.load(Ordering::Relaxed) as f64)),
         ("warm_starts", Json::Num(state.warm_starts.load(Ordering::Relaxed) as f64)),
         ("coalesced", Json::Num(state.coalesced.load(Ordering::Relaxed) as f64)),
+        ("active_conns", Json::Num(state.active.load(Ordering::SeqCst) as f64)),
+        ("shed", Json::Num(state.shed.load(Ordering::Relaxed) as f64)),
+        ("max_conns", Json::Num(state.max_conns as f64)),
         ("store_len", Json::Num(store.len() as f64)),
         ("store_capacity", Json::Num(store.capacity() as f64)),
         ("store_evictions", Json::Num(store.evictions as f64)),

@@ -10,7 +10,8 @@
 //!   "search":  {"alpha": 1.05, "beta": 10, "unchanged_limit": 1000,
 //!                "seed": 7},
 //!   "service": {"addr": "127.0.0.1:7077", "store_path": "plans.jsonl",
-//!                "capacity": 512, "warm_start": true, "nearest": true}
+//!                "capacity": 512, "warm_start": true, "nearest": true,
+//!                "max_conns": 256}
 //! }
 //! ```
 //!
@@ -173,6 +174,9 @@ impl Config {
             if let Some(n) = v.get("nearest").as_bool() {
                 cfg.service.nearest = n;
             }
+            if let Some(m) = v.get("max_conns").as_usize() {
+                cfg.service.max_conns = m;
+            }
         }
         Ok(cfg)
     }
@@ -228,7 +232,8 @@ mod tests {
     fn service_section_applies() {
         let c = Config::from_json_str(
             r#"{"service": {"addr": "0.0.0.0:9000", "store_path": "cache/plans.jsonl",
-                 "capacity": 64, "warm_start": false, "nearest": false},
+                 "capacity": 64, "warm_start": false, "nearest": false,
+                 "max_conns": 8},
                 "search": {"track_best_path": true}}"#,
         )
         .unwrap();
@@ -236,6 +241,7 @@ mod tests {
         assert_eq!(c.service.store_path.as_deref(), Some("cache/plans.jsonl"));
         assert_eq!(c.service.capacity, 64);
         assert!(!c.service.warm_start && !c.service.nearest);
+        assert_eq!(c.service.max_conns, 8);
         assert!(c.search.track_best_path);
         // Memory-only spelling.
         let m = Config::from_json_str(r#"{"service": {"store_path": "none"}}"#).unwrap();

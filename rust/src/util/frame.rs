@@ -1,0 +1,333 @@
+//! Hardened length-prefixed framing shared by the coordinator and the
+//! strategy service (DESIGN.md §12).
+//!
+//! Both TCP front-ends speak the same wire shape — a 4-byte big-endian
+//! length followed by one UTF-8 JSON document — and both face the same
+//! hostile-input surface: corrupt length prefixes (an attacker-controlled
+//! allocation if trusted blindly), truncated frames, mid-frame EOF, and
+//! peers that stall forever. This module is the single implementation of
+//! the defenses:
+//!
+//! * **Bounded allocation** — the length prefix is validated against a
+//!   cap *before* any buffer is allocated ([`FrameReader::poll`]).
+//! * **Incremental, resumable reads** — [`FrameReader`] keeps partial
+//!   state across `WouldBlock`/timeout ticks, so short read timeouts
+//!   never desync the protocol mid-frame.
+//! * **Deadlines on every op** — [`read_frame_deadline`] and
+//!   [`write_frame_deadline`] bound each socket operation by wall clock,
+//!   so a dead or byte-dribbling peer costs at most the deadline.
+//! * **Typed errors** — [`FrameError`] distinguishes clean close,
+//!   mid-frame EOF, oversized frames, UTF-8 violations and deadline
+//!   expiry, so callers can retire a peer with a precise reason.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Poll granularity for deadline-bounded reads: short enough that
+/// deadlines are honored promptly, long enough not to spin.
+const READ_TICK: Duration = Duration::from_millis(25);
+
+/// What went wrong with a frame, precisely.
+#[derive(Debug, thiserror::Error)]
+pub enum FrameError {
+    /// The length prefix claims more than the cap — rejected before any
+    /// allocation happens.
+    #[error("frame of {got} bytes exceeds the {cap}-byte cap")]
+    TooLarge { got: usize, cap: usize },
+    /// The peer closed the connection before a frame started (normal
+    /// disconnect).
+    #[error("connection closed")]
+    Closed,
+    /// The peer closed the connection in the middle of a frame.
+    #[error("peer closed the connection mid-frame")]
+    Eof,
+    /// The wall-clock deadline expired before the operation completed.
+    #[error("deadline exceeded (mid-frame: {mid_frame})")]
+    Deadline { mid_frame: bool },
+    /// The frame body is not valid UTF-8.
+    #[error("frame is not UTF-8: {0}")]
+    Utf8(#[from] std::string::FromUtf8Error),
+    #[error("i/o: {0}")]
+    Io(#[from] io::Error),
+}
+
+/// A stream whose read/write timeouts can be (re)armed — the hook the
+/// deadline helpers need. Implemented by [`TcpStream`] and by the chaos
+/// fault shim ([`crate::coordinator::fault::FaultStream`]).
+pub trait TimedStream: Read + Write {
+    fn set_rd_timeout(&self, t: Option<Duration>) -> io::Result<()>;
+    fn set_wr_timeout(&self, t: Option<Duration>) -> io::Result<()>;
+}
+
+impl TimedStream for TcpStream {
+    fn set_rd_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_read_timeout(self, t)
+    }
+    fn set_wr_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_write_timeout(self, t)
+    }
+}
+
+/// Incremental length-prefixed frame decoder. Feed it a stream whenever
+/// bytes might be available; partial frames survive across calls, so it
+/// composes with read timeouts and nonblocking polling without ever
+/// desyncing (TCP gives no atomicity between the prefix and the body).
+#[derive(Debug)]
+pub struct FrameReader {
+    cap: usize,
+    len: [u8; 4],
+    len_filled: usize,
+    body: Vec<u8>,
+    body_filled: usize,
+}
+
+impl FrameReader {
+    /// A reader that rejects frames larger than `cap` bytes.
+    pub fn with_cap(cap: usize) -> FrameReader {
+        FrameReader { cap, len: [0; 4], len_filled: 0, body: Vec::new(), body_filled: 0 }
+    }
+
+    /// True if a frame has started but not finished — a disconnect now
+    /// is a protocol violation, not a clean close.
+    pub fn mid_frame(&self) -> bool {
+        self.len_filled > 0
+    }
+
+    fn reset(&mut self) {
+        self.len_filled = 0;
+        self.body = Vec::new();
+        self.body_filled = 0;
+    }
+
+    /// Pump bytes from `r`. Returns `Ok(Some(frame))` when a complete
+    /// frame is decoded (the reader resets for the next one),
+    /// `Ok(None)` when the stream would block (partial state is kept),
+    /// and a typed error on EOF / oversize / UTF-8 / I/O failure.
+    ///
+    /// The body buffer is only allocated *after* the length prefix has
+    /// been validated against the cap — a hostile prefix can never drive
+    /// an unbounded allocation.
+    pub fn poll<R: Read + ?Sized>(&mut self, r: &mut R) -> Result<Option<String>, FrameError> {
+        loop {
+            if self.len_filled < 4 {
+                match r.read(&mut self.len[self.len_filled..]) {
+                    Ok(0) => {
+                        let e = if self.mid_frame() { FrameError::Eof } else { FrameError::Closed };
+                        self.reset();
+                        return Err(e);
+                    }
+                    Ok(n) => {
+                        self.len_filled += n;
+                        if self.len_filled == 4 {
+                            let want = u32::from_be_bytes(self.len) as usize;
+                            if want > self.cap {
+                                let cap = self.cap;
+                                self.reset();
+                                return Err(FrameError::TooLarge { got: want, cap });
+                            }
+                            self.body = vec![0u8; want];
+                            self.body_filled = 0;
+                        }
+                        continue;
+                    }
+                    Err(e) if would_block(&e) => return Ok(None),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        self.reset();
+                        return Err(FrameError::Io(e));
+                    }
+                }
+            }
+            if self.body_filled < self.body.len() {
+                match r.read(&mut self.body[self.body_filled..]) {
+                    Ok(0) => {
+                        self.reset();
+                        return Err(FrameError::Eof);
+                    }
+                    Ok(n) => {
+                        self.body_filled += n;
+                        continue;
+                    }
+                    Err(e) if would_block(&e) => return Ok(None),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        self.reset();
+                        return Err(FrameError::Io(e));
+                    }
+                }
+            }
+            let bytes = std::mem::take(&mut self.body);
+            self.reset();
+            return Ok(Some(String::from_utf8(bytes)?));
+        }
+    }
+}
+
+fn would_block(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read one complete frame, blocking at most until `deadline`. Partial
+/// progress is kept in `reader`, so a frame that straddles several
+/// timeout ticks still completes — but never past the deadline.
+pub fn read_frame_deadline<S: TimedStream + ?Sized>(
+    stream: &mut S,
+    reader: &mut FrameReader,
+    deadline: Instant,
+) -> Result<String, FrameError> {
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(FrameError::Deadline { mid_frame: reader.mid_frame() });
+        }
+        let tick = (deadline - now).min(READ_TICK).max(Duration::from_millis(1));
+        let _ = stream.set_rd_timeout(Some(tick));
+        if let Some(frame) = reader.poll(stream)? {
+            return Ok(frame);
+        }
+    }
+}
+
+/// Write one complete frame, bounded by `deadline`. A peer applying
+/// backpressure past the deadline (or the deadline already being in the
+/// past) yields `FrameError::Deadline`, never an indefinite block.
+pub fn write_frame_deadline<S: TimedStream + ?Sized>(
+    stream: &mut S,
+    body: &[u8],
+    deadline: Instant,
+) -> Result<(), FrameError> {
+    let now = Instant::now();
+    if now >= deadline {
+        return Err(FrameError::Deadline { mid_frame: false });
+    }
+    let _ = stream.set_wr_timeout(Some(deadline - now));
+    let wr = (|| {
+        stream.write_all(&(body.len() as u32).to_be_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()
+    })();
+    match wr {
+        Ok(()) => Ok(()),
+        Err(e) if would_block(&e) => Err(FrameError::Deadline { mid_frame: true }),
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn oversized_prefix_rejected_before_allocation() {
+        // A prefix claiming 1 GiB against a 1 KiB cap must produce a
+        // typed error without the reader ever growing its buffer.
+        let mut fr = FrameReader::with_cap(1024);
+        let mut data: &[u8] = &(1u32 << 30).to_be_bytes();
+        match fr.poll(&mut data) {
+            Err(FrameError::TooLarge { got, cap }) => {
+                assert_eq!(got, 1 << 30);
+                assert_eq!(cap, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        assert_eq!(fr.body.capacity(), 0, "no allocation for rejected frame");
+    }
+
+    #[test]
+    fn frame_split_across_reads_reassembles() {
+        let payload = b"hello frame";
+        let mut framed = (payload.len() as u32).to_be_bytes().to_vec();
+        framed.extend_from_slice(payload);
+        let mut fr = FrameReader::with_cap(64);
+        // Feed one byte at a time through a cursor that yields 1 byte per
+        // read call.
+        struct OneByte<'a>(&'a [u8], usize);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let mut src = OneByte(&framed, 0);
+        let mut out = None;
+        for _ in 0..framed.len() + 1 {
+            match fr.poll(&mut src) {
+                Ok(Some(s)) => {
+                    out = Some(s);
+                    break;
+                }
+                Ok(None) => continue,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(out.as_deref(), Some("hello frame"));
+    }
+
+    #[test]
+    fn mid_frame_eof_is_typed() {
+        let mut framed = (100u32).to_be_bytes().to_vec();
+        framed.extend_from_slice(b"short");
+        let mut fr = FrameReader::with_cap(1024);
+        let mut src: &[u8] = &framed;
+        match fr.poll(&mut src) {
+            Err(FrameError::Eof) => {}
+            other => panic!("expected Eof, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_close_distinguished_from_mid_frame() {
+        let mut fr = FrameReader::with_cap(1024);
+        let mut empty: &[u8] = &[];
+        assert!(matches!(fr.poll(&mut empty), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn non_utf8_body_is_typed() {
+        let mut framed = (2u32).to_be_bytes().to_vec();
+        framed.extend_from_slice(&[0xFF, 0xFE]);
+        let mut fr = FrameReader::with_cap(1024);
+        let mut src: &[u8] = &framed;
+        assert!(matches!(fr.poll(&mut src), Err(FrameError::Utf8(_))));
+    }
+
+    #[test]
+    fn deadline_bounds_a_silent_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _held = TcpStream::connect(addr).unwrap(); // connects, never writes
+        let (mut srv, _) = listener.accept().unwrap();
+        let mut fr = FrameReader::with_cap(1024);
+        let start = Instant::now();
+        let res = read_frame_deadline(&mut srv, &mut fr, start + Duration::from_millis(120));
+        assert!(matches!(res, Err(FrameError::Deadline { mid_frame: false })), "{res:?}");
+        let waited = start.elapsed();
+        assert!(waited >= Duration::from_millis(100), "returned too early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "deadline ignored: {waited:?}");
+    }
+
+    #[test]
+    fn roundtrip_over_tcp_with_deadlines() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut fr = FrameReader::with_cap(1 << 20);
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let body = read_frame_deadline(&mut s, &mut fr, deadline).unwrap();
+            write_frame_deadline(&mut s, body.as_bytes(), deadline).unwrap(); // echo
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        write_frame_deadline(&mut c, "ping".as_bytes(), deadline).unwrap();
+        let mut fr = FrameReader::with_cap(1 << 20);
+        assert_eq!(read_frame_deadline(&mut c, &mut fr, deadline).unwrap(), "ping");
+        t.join().unwrap();
+    }
+}

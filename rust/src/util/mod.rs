@@ -2,6 +2,7 @@
 //! (rand, serde_json, clap, criterion, proptest) plus shared numerics.
 
 pub mod config;
+pub mod frame;
 pub mod rng;
 pub mod stats;
 pub mod json;

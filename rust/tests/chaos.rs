@@ -1,0 +1,291 @@
+//! Chaos property suite: the enactment protocol under deterministic,
+//! seeded fault injection (DESIGN.md §12).
+//!
+//! The contract under test — for ANY seeded fault plan:
+//! * `enact()` never blocks past its per-phase deadlines (plus a bounded
+//!   shutdown/join tail);
+//! * it returns a (possibly `degraded`) report when survivors ≥ quorum,
+//!   and a typed `EnactError::QuorumLost` otherwise;
+//! * every in-process worker thread is joined before it returns
+//!   (`workers_joined` == world — no leaks on either path).
+
+use disco::coordinator::{
+    enact, EnactConfig, EnactError, Fault, FaultPlan, Phase, RankState,
+};
+use disco::models::{build, ModelKind, ModelSpec};
+use disco::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn tiny_model() -> disco::graph::TrainingGraph {
+    build(&ModelSpec { kind: ModelKind::Rnnlm, batch: 8, depth_scale: 0.15 }, 4)
+}
+
+/// Generate one random-but-seeded fault plan. Parameters are constrained
+/// to ranges that exercise every code path without padding the suite
+/// with full-deadline waits: drop budgets always let Hello through,
+/// delays stay well under the phase budget, kills target real iterations.
+fn gen_plan(rng: &mut Rng, world: usize, case: u64) -> FaultPlan {
+    let mut faults = Vec::new();
+    for rank in 0..world {
+        if rng.gen_f64() < 0.35 {
+            faults.push(match rng.gen_range(4) {
+                0 => Fault::KillAtIter { rank, iter: rng.gen_range(2) },
+                1 => Fault::DropAfterBytes { rank, bytes: 64 + rng.gen_range(4096) as u64 },
+                2 => Fault::DelayMs { rank, ms: 20 + rng.gen_range(100) as u64 },
+                _ => Fault::CorruptFrame { rank, nth: 1 + rng.gen_range(2) },
+            });
+        }
+    }
+    FaultPlan { seed: case, faults }
+}
+
+#[test]
+fn chaos_property_seeded_plans() {
+    const CASES: u64 = 50;
+    const PT_MS: u64 = 1200;
+    let g = tiny_model();
+    let mut rng = Rng::new(0xC4A05);
+    let (mut clean, mut degraded, mut quorum_lost) = (0u32, 0u32, 0u32);
+    for case in 0..CASES {
+        let world = rng.gen_range_inclusive(2, 4);
+        let quorum = rng.gen_range_inclusive(1, world);
+        let retries = rng.gen_range(2); // 0 or 1
+        let plan = gen_plan(&mut rng, world, case);
+        let cfg = EnactConfig {
+            world,
+            iterations: 2,
+            seed: 0xC0DE ^ case,
+            quorum,
+            phase_timeout_ms: PT_MS,
+            max_rank_retries: retries,
+            fault: Some(plan.clone()),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let res = enact(&g, &cfg);
+        let elapsed = start.elapsed();
+        // Deadline bound: 3 phases × PT plus a bounded shutdown/join
+        // tail (reconnect budgets, worker idle deadlines).
+        assert!(
+            elapsed < Duration::from_millis(3 * PT_MS + 4000),
+            "case {case} (plan '{}'): enact blocked for {elapsed:?}",
+            plan.to_spec()
+        );
+        match res {
+            Ok(r) => {
+                let reported =
+                    r.status.iter().filter(|s| s.state == RankState::Ok).count();
+                assert!(
+                    reported >= quorum,
+                    "case {case}: Ok with {reported} < quorum {quorum}"
+                );
+                assert_eq!(
+                    r.degraded,
+                    !r.failed_ranks.is_empty(),
+                    "case {case}: degraded flag inconsistent"
+                );
+                assert_eq!(r.per_rank.len(), world);
+                assert_eq!(r.status.len(), world);
+                assert_eq!(
+                    r.workers_joined, world,
+                    "case {case}: leaked worker threads"
+                );
+                // Reporting ranks carry real measurements; failed ranks
+                // carry zeros.
+                for s in &r.status {
+                    if s.state == RankState::Ok {
+                        assert!(s.makespan_ms > 0.0, "case {case} rank {}", s.rank);
+                    } else {
+                        assert!(r.failed_ranks.contains(&s.rank));
+                    }
+                }
+                if r.degraded {
+                    degraded += 1;
+                } else {
+                    clean += 1;
+                }
+            }
+            Err(EnactError::QuorumLost { live, quorum: q, .. }) => {
+                assert!(live < q, "case {case}: QuorumLost with live {live} >= {q}");
+                quorum_lost += 1;
+            }
+            Err(e) => panic!("case {case} (plan '{}'): unexpected error {e}", plan.to_spec()),
+        }
+    }
+    assert_eq!(clean + degraded + quorum_lost, CASES as u32);
+    // The generator must actually exercise all three outcomes; a chaos
+    // suite where nothing ever fails (or nothing ever succeeds) is
+    // testing the wrong distribution.
+    assert!(clean > 0, "no clean runs across {CASES} cases");
+    assert!(
+        degraded + quorum_lost > 0,
+        "no faulted outcomes across {CASES} cases"
+    );
+}
+
+#[test]
+fn killed_rank_degrades_but_quorum_succeeds() {
+    let g = tiny_model();
+    let cfg = EnactConfig {
+        world: 4,
+        iterations: 2,
+        quorum: 3,
+        phase_timeout_ms: 5000,
+        max_rank_retries: 0,
+        fault: Some(FaultPlan::parse("kill@3:1", 7).unwrap()),
+        ..Default::default()
+    };
+    let r = enact(&g, &cfg).unwrap();
+    assert!(r.degraded);
+    assert_eq!(r.failed_ranks, vec![3]);
+    assert_eq!(r.workers_joined, 4);
+    for rank in 0..3 {
+        assert_eq!(r.status[rank].state, RankState::Ok);
+        assert!(r.per_rank[rank].0 > 0.0);
+    }
+    assert!(matches!(r.status[3].state, RankState::Retired(_)));
+    assert_eq!(r.per_rank[3], (0.0, 0.0, 0.0));
+    // The victim ran iteration 0 and heartbeat before dying at
+    // iteration 1 — the liveness plumbing must have seen it.
+    assert_eq!(r.status[3].heartbeats, 1);
+}
+
+#[test]
+fn readmitted_rank_completes_clean() {
+    let g = tiny_model();
+    let cfg = EnactConfig {
+        world: 3,
+        iterations: 2,
+        quorum: 0, // all
+        phase_timeout_ms: 5000,
+        max_rank_retries: 1,
+        fault: Some(FaultPlan::parse("kill@1:0", 11).unwrap()),
+        ..Default::default()
+    };
+    let r = enact(&g, &cfg).unwrap();
+    // The killed rank reconnected, re-acked from cached strategy state,
+    // and completed — the round is NOT degraded.
+    assert!(!r.degraded, "status: {:?}", r.status);
+    assert!(r.failed_ranks.is_empty());
+    assert_eq!(r.acks, 3);
+    assert_eq!(r.status[1].reconnects, 1, "rank 1 must have been re-admitted once");
+    assert_eq!(r.status[1].state, RankState::Ok);
+    assert!(r.per_rank[1].0 > 0.0);
+    assert_eq!(r.status[0].reconnects, 0);
+    assert_eq!(r.status[2].reconnects, 0);
+}
+
+#[test]
+fn below_quorum_returns_typed_error_fast() {
+    let g = tiny_model();
+    let pt = 5000u64;
+    let cfg = EnactConfig {
+        world: 3,
+        iterations: 2,
+        quorum: 2,
+        phase_timeout_ms: pt,
+        max_rank_retries: 0,
+        fault: Some(FaultPlan::parse("kill@0:0,kill@1:0", 13).unwrap()),
+        ..Default::default()
+    };
+    let start = Instant::now();
+    let err = enact(&g, &cfg).unwrap_err();
+    let elapsed = start.elapsed();
+    match err {
+        EnactError::QuorumLost { phase, live, quorum, failed } => {
+            // The deaths land right after the Run frames go out, so the
+            // loss is detected in the ack or run phase depending on poll
+            // order — never join (everyone said Hello).
+            assert_ne!(phase, Phase::Join);
+            assert_eq!(live, 1);
+            assert_eq!(quorum, 2);
+            assert_eq!(failed, vec![0, 1]);
+        }
+        other => panic!("expected QuorumLost, got {other}"),
+    }
+    // Fail-fast: two dead sockets are detected immediately, not at the
+    // phase deadline.
+    assert!(
+        elapsed < Duration::from_millis(pt),
+        "quorum loss took {elapsed:?} — waited for the deadline instead of failing fast"
+    );
+}
+
+#[test]
+fn delay_straggler_retired_when_configured() {
+    let g = tiny_model();
+    let cfg = EnactConfig {
+        world: 3,
+        iterations: 2,
+        quorum: 2,
+        phase_timeout_ms: 3000,
+        max_rank_retries: 0,
+        straggler_timeout_ms: 120,
+        fault: Some(FaultPlan::parse("delay@2:300", 17).unwrap()),
+        ..Default::default()
+    };
+    let r = enact(&g, &cfg).unwrap();
+    assert!(r.degraded);
+    assert_eq!(r.failed_ranks, vec![2]);
+    match &r.status[2].state {
+        RankState::Retired(reason) => {
+            assert!(reason.contains("straggler"), "reason: {reason}")
+        }
+        other => panic!("expected straggler retirement, got {other:?}"),
+    }
+    assert_eq!(r.status[0].state, RankState::Ok);
+    assert_eq!(r.status[1].state, RankState::Ok);
+}
+
+#[test]
+fn no_workers_at_all_fails_in_join_phase() {
+    let g = tiny_model();
+    let pt = 300u64;
+    let cfg = EnactConfig {
+        world: 2,
+        iterations: 1,
+        spawn_inproc: false, // nobody will ever connect
+        quorum: 1,
+        phase_timeout_ms: pt,
+        ..Default::default()
+    };
+    let start = Instant::now();
+    let err = enact(&g, &cfg).unwrap_err();
+    assert!(matches!(err, EnactError::QuorumLost { phase: Phase::Join, live: 0, .. }), "{err}");
+    let elapsed = start.elapsed();
+    assert!(
+        elapsed >= Duration::from_millis(pt) && elapsed < Duration::from_millis(4 * pt + 1000),
+        "join-phase timeout not respected: {elapsed:?}"
+    );
+}
+
+#[test]
+fn same_plan_same_seed_is_reproducible() {
+    // The determinism claim behind "every chaos failure shrinks to a
+    // one-line spec": identical config + plan ⇒ identical disposition.
+    let g = tiny_model();
+    let mk = || EnactConfig {
+        world: 3,
+        iterations: 2,
+        quorum: 2,
+        phase_timeout_ms: 5000,
+        max_rank_retries: 0,
+        fault: Some(FaultPlan::parse("kill@1:0", 23).unwrap()),
+        ..Default::default()
+    };
+    let a = enact(&g, &mk()).unwrap();
+    let b = enact(&g, &mk()).unwrap();
+    assert_eq!(a.degraded, b.degraded);
+    assert_eq!(a.failed_ranks, b.failed_ranks);
+    assert_eq!(a.per_rank, b.per_rank, "surviving ranks must report identical timings");
+}
+
+#[test]
+fn invalid_chaos_config_is_typed() {
+    let g = tiny_model();
+    let err = enact(&g, &EnactConfig { world: 0, ..Default::default() }).unwrap_err();
+    assert!(matches!(err, EnactError::Config(_)), "{err}");
+    let err =
+        enact(&g, &EnactConfig { world: 2, quorum: 3, ..Default::default() }).unwrap_err();
+    assert!(matches!(err, EnactError::Config(_)), "{err}");
+}

@@ -19,6 +19,11 @@ fn enactment_broadcast_and_report() {
     let report = enact(&g, &cfg).unwrap();
     assert_eq!(report.acks, 4);
     assert_eq!(report.per_rank.len(), 4);
+    // A fault-free round is clean: nothing degraded, nobody failed,
+    // every in-process worker thread joined.
+    assert!(!report.degraded);
+    assert!(report.failed_ranks.is_empty());
+    assert_eq!(report.workers_joined, 4);
     // Every worker executed and reported a positive makespan.
     for (makespan, comp, comm) in &report.per_rank {
         assert!(*makespan > 0.0);

@@ -4,6 +4,8 @@
 use disco::coordinator::messages::Msg;
 use disco::graph::TrainingGraph;
 use disco::runtime::Manifest;
+use disco::service::server::{read_frame, write_frame};
+use disco::service::{request, ServeOptions, Server};
 use disco::util::json::Json;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -27,7 +29,8 @@ fn worker_rejects_corrupt_strategy() {
         }
         .send(&mut s)
         .unwrap();
-        // Worker should hang up with an error, not ack.
+        // Worker must announce the rejection with a typed Error frame
+        // (DESIGN.md §12) — never an ack.
         Msg::recv(&mut s)
     });
     let res = disco::coordinator::run_worker(
@@ -37,8 +40,13 @@ fn worker_rejects_corrupt_strategy() {
         &disco::network::Cluster::cluster_a(),
     );
     assert!(res.is_err(), "worker accepted a corrupt strategy");
-    let leader_saw = leader.join().unwrap();
-    assert!(leader_saw.is_err(), "leader received an unexpected ack");
+    match leader.join().unwrap() {
+        Ok(Msg::Error { rank, reason }) => {
+            assert_eq!(rank, 0);
+            assert!(reason.contains("invalid strategy"), "reason: {reason}");
+        }
+        other => panic!("expected a typed Error frame, got {other:?}"),
+    }
 }
 
 #[test]
@@ -54,6 +62,116 @@ fn oversized_frame_rejected() {
     let mut c = TcpStream::connect(addr).unwrap();
     assert!(Msg::recv(&mut c).is_err());
     t.join().unwrap();
+}
+
+fn spawn_service(max_conns: usize) -> (String, std::thread::JoinHandle<()>) {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        store_path: None,
+        max_conns,
+        ..Default::default()
+    };
+    let server = Server::bind(&opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn ping(addr: &str) -> anyhow::Result<Json> {
+    request(addr, &Json::obj(vec![("cmd", Json::Str("ping".into()))]))
+}
+
+/// The service front-end shares the coordinator's hardened framing: every
+/// hostile input gets a typed rejection (or a silent drop for hangups),
+/// and the server stays healthy afterwards.
+#[test]
+fn serve_survives_hostile_frames() {
+    let (addr, handle) = spawn_service(256);
+
+    // Oversized length prefix: typed rejection, no gigabyte allocation.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&(1u32 << 30).to_be_bytes()).unwrap();
+    s.write_all(b"xxxx").unwrap();
+    let reply = Json::parse(&read_frame(&mut s).unwrap()).unwrap();
+    assert_eq!(reply.get("ok").as_bool(), Some(false));
+    assert!(reply.get("error").as_str().unwrap().contains("exceeds"), "{reply:?}");
+    drop(s);
+
+    // Non-UTF8 body: typed rejection, then drop.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&2u32.to_be_bytes()).unwrap();
+    s.write_all(&[0xFF, 0xFE]).unwrap();
+    let reply = Json::parse(&read_frame(&mut s).unwrap()).unwrap();
+    assert_eq!(reply.get("ok").as_bool(), Some(false));
+    assert!(reply.get("error").as_str().unwrap().contains("UTF-8"), "{reply:?}");
+    drop(s);
+
+    // Garbage JSON in a well-formed frame: an application-level error,
+    // and the connection keeps serving.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut s, "][ not json").unwrap();
+    let reply = Json::parse(&read_frame(&mut s).unwrap()).unwrap();
+    assert_eq!(reply.get("ok").as_bool(), Some(false));
+    assert!(reply.get("error").as_str().unwrap().contains("bad request json"), "{reply:?}");
+    write_frame(&mut s, r#"{"cmd":"ping"}"#).unwrap();
+    let pong = Json::parse(&read_frame(&mut s).unwrap()).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    drop(s);
+
+    // Mid-frame hangup: claim 100 bytes, send 10, close. The server
+    // silently drops the connection — and must still be alive.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&100u32.to_be_bytes()).unwrap();
+    s.write_all(b"0123456789").unwrap();
+    drop(s);
+
+    assert_eq!(ping(&addr).unwrap().get("ok").as_bool(), Some(true));
+    let _ = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    handle.join().unwrap();
+}
+
+/// Beyond `max_conns` live handlers the server sheds new connections with
+/// an inline `overloaded` error frame instead of spawning unboundedly —
+/// and recovers as soon as the load drains.
+#[test]
+fn serve_sheds_load_beyond_max_conns() {
+    let (addr, handle) = spawn_service(1);
+
+    // Pin the single handler slot with an idle keep-alive connection.
+    let idle = TcpStream::connect(&addr).unwrap();
+    // The accept loop counts the connection before spawning its handler,
+    // so shedding starts as soon as it is accepted — poll until then.
+    let mut saw_shed = false;
+    for _ in 0..200 {
+        let r = ping(&addr).unwrap();
+        if r.get("ok").as_bool() == Some(false) {
+            assert!(r.get("error").as_str().unwrap().contains("overloaded"), "{r:?}");
+            saw_shed = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(saw_shed, "server never shed load past max_conns=1");
+
+    // Drain: close the idle connection, the slot frees, service resumes.
+    // With max_conns=1 each request's handler may linger a beat past its
+    // reply, so every follow-up retries until it lands a live slot.
+    drop(idle);
+    let retry_ok = |cmd: &str| -> Json {
+        for _ in 0..200 {
+            let r = request(&addr, &Json::obj(vec![("cmd", Json::Str(cmd.into()))])).unwrap();
+            if r.get("ok").as_bool() == Some(true) {
+                return r;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("server did not recover after load drained");
+    };
+    let stats = retry_ok("stats");
+    assert!(stats.get("shed").as_usize().unwrap() >= 1, "{stats:?}");
+    assert_eq!(stats.get("max_conns").as_usize(), Some(1));
+    let _ = retry_ok("shutdown");
+    handle.join().unwrap();
 }
 
 #[test]

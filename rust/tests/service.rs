@@ -371,6 +371,7 @@ fn spawn_server() -> (String, std::thread::JoinHandle<()>) {
         store_path: None,
         capacity: 32,
         warm: WarmOptions::default(),
+        max_conns: 256,
     };
     let server = Server::bind(&opts).unwrap();
     let addr = server.local_addr().to_string();
