@@ -1,0 +1,38 @@
+//! Chunked-collectives A/B (`cargo bench --bench chunk_bench`): on two
+//! comm-heavy model-zoo entries, compare the best plan found by the
+//! paper's fusion-only vocabulary against a joint fusion+chunking search
+//! warm-started from the fusion-only winner (so the chunked arm is a
+//! guaranteed-no-worse refinement, and any gap is overlap the chunk
+//! vocabulary bought). Upserts the `chunk_bench` line of
+//! `BENCH_search.json` at the repo root, leaving other arms' lines
+//! intact.
+
+use disco::bench::{write_chunk_bench_record, BenchOptions, Scale};
+
+fn main() {
+    let opts = BenchOptions { scale: Scale::Full, ..Default::default() };
+    match write_chunk_bench_record(&opts) {
+        Ok((record, path)) => {
+            println!(
+                "chunk_bench: seed {} unchanged_limit {} max_chunks {}",
+                record.seed, record.unchanged_limit, record.max_chunks
+            );
+            for m in &record.models {
+                println!(
+                    "  {:<18} {:>2}w  initial {:>8.3} ms  fusion-only {:>8.3} ms  \
+                     +chunking {:>8.3} ms  ({:.3}x, {} chunked ARs, {} evals)",
+                    m.model,
+                    m.workers,
+                    m.initial_ms,
+                    m.unchunked_ms,
+                    m.chunked_ms,
+                    m.speedup(),
+                    m.chunked_ars,
+                    m.chunked_evals
+                );
+            }
+            println!("wrote chunk_bench record to {}", path.display());
+        }
+        Err(e) => eprintln!("failed to write chunk_bench record: {e}"),
+    }
+}

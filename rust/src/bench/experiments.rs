@@ -112,7 +112,7 @@ pub fn fig8(opts: &BenchOptions) -> String {
         };
         let taso_steps = if opts.scale == Scale::Full { 400 } else { 120 };
         let mut cfg = opts.search_config();
-        cfg.methods = MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: false };
+        cfg.methods = MethodSet { nondup_fusion: true, dup_fusion: true, ..MethodSet::none() };
         cfg.sim = sim_opts;
         let disco = backtracking_search(&g, &est, &cfg);
         t.row(vec![
@@ -204,8 +204,8 @@ pub fn fig10(opts: &BenchOptions) -> String {
     let cluster = Cluster::cluster_a();
     let variants: [(&str, MethodSet); 4] = [
         ("none (no fusion)", MethodSet::none()),
-        ("+non-dup", MethodSet { nondup_fusion: true, dup_fusion: false, ar_fusion: false }),
-        ("+non-dup+dup", MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: false }),
+        ("+non-dup", MethodSet { nondup_fusion: true, ..MethodSet::none() }),
+        ("+non-dup+dup", MethodSet { nondup_fusion: true, dup_fusion: true, ..MethodSet::none() }),
         ("+all (DisCo)", MethodSet::all()),
     ];
     let mut t = Table::new(

@@ -387,6 +387,133 @@ pub fn search_hot_path_record(opts: &BenchOptions) -> HotPathRecord {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Chunked-collective A/B record (the chunk_bench arm of BENCH_search.json).
+// ---------------------------------------------------------------------------
+
+/// One model's fusion-only vs joint fusion+chunking search outcome.
+#[derive(Debug, Clone)]
+pub struct ChunkArmStats {
+    pub model: String,
+    pub workers: usize,
+    pub initial_ms: f64,
+    /// Best simulated iteration time under the paper's fusion-only
+    /// vocabulary.
+    pub unchunked_ms: f64,
+    /// Best with the chunking method added. The joint search is
+    /// warm-started from the fusion-only winner's mutation path, so it
+    /// can never end worse than `unchunked_ms` — any gap is overlap the
+    /// chunk vocabulary bought.
+    pub chunked_ms: f64,
+    pub chunked_evals: u64,
+    /// Live AllReduces carrying a chunk schedule in the winning plan.
+    pub chunked_ars: usize,
+}
+
+impl ChunkArmStats {
+    pub fn speedup(&self) -> f64 {
+        if self.chunked_ms == 0.0 { 1.0 } else { self.unchunked_ms / self.chunked_ms }
+    }
+}
+
+/// The `chunk_bench` arm: does adding the chunking method to the search
+/// vocabulary (DESIGN.md §13) find strictly faster plans than the best
+/// fusion-only strategy on the model zoo?
+#[derive(Debug, Clone)]
+pub struct ChunkBenchRecord {
+    pub seed: u64,
+    pub unchanged_limit: usize,
+    pub max_chunks: u32,
+    pub models: Vec<ChunkArmStats>,
+}
+
+impl ChunkBenchRecord {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("bench", Json::Str("chunk_bench".into())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("unchanged_limit", Json::Num(self.unchanged_limit as f64)),
+            ("max_chunks", Json::Num(self.max_chunks as f64)),
+            ("measured", Json::Bool(true)),
+            (
+                "models",
+                Json::Arr(
+                    self.models
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("model", Json::Str(m.model.clone())),
+                                ("workers", Json::Num(m.workers as f64)),
+                                ("initial_ms", Json::Num(m.initial_ms)),
+                                ("unchunked_ms", Json::Num(m.unchunked_ms)),
+                                ("chunked_ms", Json::Num(m.chunked_ms)),
+                                ("speedup", Json::Num(m.speedup())),
+                                ("chunked_evals", Json::Num(m.chunked_evals as f64)),
+                                ("chunked_ars", Json::Num(m.chunked_ars as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Measure the chunking A/B on two comm-heavy zoo entries. The chunked
+/// arm runs [`crate::search::backtracking_search_seeded`] warm-started
+/// from the fusion-only winner's recorded path, so its result is a
+/// guaranteed-no-worse refinement of the same strategy — the comparison
+/// isolates what the chunk vocabulary adds rather than trajectory noise.
+pub fn chunk_bench_record(opts: &BenchOptions) -> ChunkBenchRecord {
+    use crate::search::backtracking_search_seeded;
+    let cluster = Cluster::cluster_a();
+    let device = BenchOptions::device_for(&cluster);
+    let unchanged_limit = match opts.scale {
+        Scale::Full => 400,
+        Scale::Fast => 100,
+    };
+    let max_chunks = 8u32;
+    let mut arms = Vec::new();
+    for kind in [ModelKind::Transformer, ModelKind::Rnnlm] {
+        let graph = models::build(&opts.spec(kind), cluster.num_devices());
+        let profile = profiler::profile(&graph, &device, &cluster, 2, opts.seed ^ kind as u64);
+        let est = CostEstimator::analytical(&profile, &cluster);
+        let base = SearchConfig {
+            unchanged_limit,
+            seed: opts.seed,
+            track_best_path: true,
+            ..Default::default()
+        };
+        let unchunked = backtracking_search(&graph, &est, &base);
+        let chunked_cfg = SearchConfig {
+            methods: MethodSet::all_with_chunking(),
+            max_chunks,
+            ..base.clone()
+        };
+        let chunked = backtracking_search_seeded(
+            &graph,
+            &est,
+            &chunked_cfg,
+            &[unchunked.best_path.clone()],
+        );
+        arms.push(ChunkArmStats {
+            model: kind.name().to_string(),
+            workers: cluster.num_devices(),
+            initial_ms: unchunked.initial_cost_ms,
+            unchunked_ms: unchunked.best_cost_ms,
+            chunked_ms: chunked.best_cost_ms,
+            chunked_evals: chunked.evals,
+            chunked_ars: chunked
+                .best
+                .live()
+                .filter(|n| n.chunk_count() >= 2)
+                .count(),
+        });
+    }
+    ChunkBenchRecord { seed: opts.seed, unchanged_limit, max_chunks, models: arms }
+}
+
 /// Repository root (the parent of the `rust/` crate), resolved at compile
 /// time so the record lands in the same place regardless of cwd.
 pub fn repo_root() -> std::path::PathBuf {
@@ -396,14 +523,55 @@ pub fn repo_root() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("."))
 }
 
-/// Run the A/B measurement and write `BENCH_search.json` at the repo root.
-/// Returns the record and the path written.
+/// Upsert one record into the JSONL perf-record file: the existing line
+/// with the same `"bench"` tag (if any) is replaced, every other arm's
+/// line is preserved in order. The file holds one JSON object per line,
+/// one line per bench arm (`search_hot_path`, `chunk_bench`, ...), so
+/// regenerating one arm never clobbers another's record.
+fn upsert_bench_record(
+    path: &std::path::Path,
+    record: &crate::util::json::Json,
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let tag = record.get("bench").as_str().unwrap_or_default().to_string();
+    let mut lines: Vec<String> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let keep = Json::parse(line)
+                .ok()
+                .map_or(true, |j| j.get("bench").as_str() != Some(tag.as_str()));
+            if keep {
+                lines.push(line.to_string());
+            }
+        }
+    }
+    lines.push(record.to_string());
+    std::fs::write(path, lines.join("\n") + "\n")
+}
+
+/// Run the A/B measurement and upsert the `search_hot_path` line of
+/// `BENCH_search.json` at the repo root. Returns the record and the path
+/// written.
 pub fn write_search_perf_record(
     opts: &BenchOptions,
 ) -> std::io::Result<(HotPathRecord, std::path::PathBuf)> {
     let record = search_hot_path_record(opts);
     let path = repo_root().join("BENCH_search.json");
-    std::fs::write(&path, record.to_json().to_string())?;
+    upsert_bench_record(&path, &record.to_json())?;
+    Ok((record, path))
+}
+
+/// Run the chunking A/B and upsert the `chunk_bench` line of
+/// `BENCH_search.json` at the repo root.
+pub fn write_chunk_bench_record(
+    opts: &BenchOptions,
+) -> std::io::Result<(ChunkBenchRecord, std::path::PathBuf)> {
+    let record = chunk_bench_record(opts);
+    let path = repo_root().join("BENCH_search.json");
+    upsert_bench_record(&path, &record.to_json())?;
     Ok((record, path))
 }
 
@@ -430,6 +598,68 @@ mod tests {
         assert!(disco <= best_baseline * 1.05, "disco {disco} vs baseline {best_baseline}");
         assert!(disco >= fo * 0.999, "disco {disco} below FO {fo}");
         assert!(result.best.validate().is_ok());
+    }
+
+    #[test]
+    fn chunk_bench_chunked_never_worse() {
+        let opts = BenchOptions { scale: Scale::Fast, ..Default::default() };
+        let rec = chunk_bench_record(&opts);
+        assert_eq!(rec.models.len(), 2);
+        for m in &rec.models {
+            // Warm-started from the fusion-only winner, so the chunked
+            // arm is a guaranteed-no-worse refinement.
+            assert!(
+                m.chunked_ms <= m.unchunked_ms + 1e-9,
+                "{}: chunked {} worse than unchunked {}",
+                m.model,
+                m.chunked_ms,
+                m.unchunked_ms
+            );
+            assert!(m.unchunked_ms <= m.initial_ms + 1e-9);
+            assert!(m.chunked_evals > 0);
+        }
+        let j = rec.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("chunk_bench"));
+        assert_eq!(j.get("models").as_arr().map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn upsert_preserves_other_bench_lines() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!("disco_upsert_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_search.json");
+        let hot = Json::obj(vec![
+            ("bench", Json::Str("search_hot_path".into())),
+            ("measured", Json::Bool(false)),
+        ]);
+        let chunk1 = Json::obj(vec![
+            ("bench", Json::Str("chunk_bench".into())),
+            ("measured", Json::Bool(false)),
+        ]);
+        upsert_bench_record(&path, &hot).unwrap();
+        upsert_bench_record(&path, &chunk1).unwrap();
+        // Re-upserting one arm replaces its line and keeps the other.
+        let chunk2 = Json::obj(vec![
+            ("bench", Json::Str("chunk_bench".into())),
+            ("measured", Json::Bool(true)),
+        ]);
+        upsert_bench_record(&path, &chunk2).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 2);
+        let tags: Vec<_> = lines
+            .iter()
+            .map(|l| Json::parse(l).unwrap().get("bench").as_str().unwrap().to_string())
+            .collect();
+        assert!(tags.contains(&"search_hot_path".to_string()));
+        assert!(tags.contains(&"chunk_bench".to_string()));
+        let chunk_line = lines
+            .iter()
+            .find(|l| l.contains("chunk_bench"))
+            .unwrap();
+        assert_eq!(Json::parse(chunk_line).unwrap().get("measured").as_bool(), Some(true));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

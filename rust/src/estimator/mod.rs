@@ -285,6 +285,12 @@ impl CostSource for CostEstimator<'_> {
         self.comm.predict_ms(bytes)
     }
 
+    fn comm_overhead_ms(&self) -> f64 {
+        // The fitted model's intercept `D`: the per-collective negotiation
+        // cost a chunked stream pays once, not per chunk (DESIGN.md §13).
+        self.comm.d
+    }
+
     fn prepare(&self, graph: &crate::graph::TrainingGraph) {
         self.warm_cache(graph);
     }

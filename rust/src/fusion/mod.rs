@@ -20,8 +20,24 @@
 //! Nodes are tombstoned, never re-indexed, so `OrigOp::orig_id` always
 //! refers to the original instruction in the same arena — fused-group
 //! internal wiring is re-derivable from the original graph at any time.
+//!
+//! A fourth, *in-place* rewrite ([`set_chunks`]) chunks an AllReduce so the
+//! simulator can stream it: no nodes are created or tombstoned and no edge
+//! moves, only the instruction's [`ChunkSpec`] changes. Tensor fusion
+//! resets chunking on the fused AllReduce (it is a new collective); the
+//! search re-chunks it explicitly when that wins.
 
-use crate::graph::{FusedGroup, Node, NodeId, OpKind, OrigOp, Role, TrainingGraph};
+use crate::graph::{ChunkSpec, FusedGroup, Node, NodeId, OpKind, OrigOp, Role, TrainingGraph};
+
+/// Upper bound on chunks per collective the vocabulary will propose. Keeps
+/// the per-AR branching factor bounded and the per-chunk transfer above the
+/// latency floor where streaming stops paying.
+pub const MAX_CHUNKS: u32 = 32;
+
+/// A chunking is only legal if every chunk carries at least this many
+/// bytes — below this the per-chunk fixed costs dominate and the schedule
+/// space just gains noise.
+pub const MIN_CHUNK_BYTES: f64 = 1024.0;
 
 /// Op-fusion flavour (paper Fig. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +62,8 @@ pub enum FusionError {
     NotNeighbors(NodeId, NodeId),
     #[error("cannot fuse a node with itself")]
     SelfFusion,
+    #[error("chunking AllReduce {0} into {1} chunks is illegal: {2}")]
+    BadChunking(NodeId, u32, &'static str),
 }
 
 /// Singleton fused-group view of a (possibly already fused) compute node.
@@ -287,6 +305,7 @@ pub fn fuse_ops_explain(
         bytes_out: s_bytes_out + extra_out,
         fused: Some(group),
         ar_constituents: Vec::new(),
+        chunk: None,
         deleted: false,
     });
 
@@ -438,6 +457,10 @@ pub fn fuse_allreduce_explain(
         bytes_out: bytes,
         fused: None,
         ar_constituents,
+        // Tensor fusion resets chunking: a fused AR is a *new* collective
+        // and starts whole-tensor; the search re-chunks it explicitly if
+        // that wins (legality rule, DESIGN.md §13).
+        chunk: None,
         deleted: false,
     });
 
@@ -469,6 +492,75 @@ pub fn fuse_allreduce_explain(
     Ok(FusionEffects { fused: fused_id, redirected, pred_deleted: true })
 }
 
+/// Set the chunk count of a live AllReduce (`count == 1` un-chunks it).
+/// Returns the AllReduce's id. See [`set_chunks_explain`] for legality.
+pub fn set_chunks(g: &mut TrainingGraph, ar: NodeId, count: u32) -> Result<NodeId, FusionError> {
+    set_chunks_explain(g, ar, count).map(|fx| fx.fused)
+}
+
+/// [`set_chunks`] returning the full [`FusionEffects`] record.
+///
+/// Legality rules (DESIGN.md §13):
+/// * `ar` must be a live AllReduce;
+/// * `1 <= count <= MAX_CHUNKS`;
+/// * for `count >= 2`, every chunk must carry at least [`MIN_CHUNK_BYTES`]
+///   (`bytes_out / count >= MIN_CHUNK_BYTES`);
+/// * `count` must differ from the current chunk count (a no-op rewrite
+///   would only produce fingerprint-duplicate children).
+///
+/// This is an **in-place** edit: no node is created or tombstoned and no
+/// edge moves, so cached adjacency stays valid and is *not* invalidated.
+/// The AR's comm cost depends only on `bytes_out`, which is unchanged, so
+/// per-node cost tables built against the parent remain valid too — the
+/// delta simulator's `CostTable::extend_in` contract holds.
+pub fn set_chunks_explain(
+    g: &mut TrainingGraph,
+    ar: NodeId,
+    count: u32,
+) -> Result<FusionEffects, FusionError> {
+    if ar >= g.nodes.len() || g.nodes[ar].deleted || g.nodes[ar].kind != OpKind::AllReduce {
+        return Err(FusionError::NotAllReduce(ar));
+    }
+    if count == 0 || count > MAX_CHUNKS {
+        return Err(FusionError::BadChunking(ar, count, "count out of range"));
+    }
+    if count == g.nodes[ar].chunk_count() {
+        return Err(FusionError::BadChunking(ar, count, "already at this chunk count"));
+    }
+    if count >= 2 && g.nodes[ar].bytes_out / count as f64 < MIN_CHUNK_BYTES {
+        return Err(FusionError::BadChunking(ar, count, "chunks would fall below MIN_CHUNK_BYTES"));
+    }
+    // Canonical form: count <= 1 is stored as None so fingerprints of
+    // "never chunked" and "chunked then reset" graphs coincide.
+    g.nodes[ar].chunk = if count >= 2 { Some(ChunkSpec::new(count)) } else { None };
+    debug_assert!(g.validate().is_ok(), "chunking broke the graph");
+    Ok(FusionEffects { fused: ar, redirected: Vec::new(), pred_deleted: false })
+}
+
+/// Chunk counts the vocabulary offers for `ar`: 1 (un-chunk) and powers of
+/// two up to `max_chunks` (itself capped at [`MAX_CHUNKS`]), each
+/// respecting [`MIN_CHUNK_BYTES`], excluding the AR's current count.
+pub fn chunk_candidates(g: &TrainingGraph, ar: NodeId, max_chunks: u32) -> Vec<u32> {
+    let Some(n) = g.nodes.get(ar) else { return Vec::new() };
+    if n.deleted || n.kind != OpKind::AllReduce {
+        return Vec::new();
+    }
+    let cur = n.chunk_count();
+    let cap = max_chunks.min(MAX_CHUNKS);
+    let mut out = Vec::new();
+    let mut k = 1u32;
+    while k <= cap {
+        if k != cur && (k == 1 || n.bytes_out / k as f64 >= MIN_CHUNK_BYTES) {
+            out.push(k);
+        }
+        if k > cap / 2 {
+            break;
+        }
+        k *= 2;
+    }
+    out
+}
+
 /// Candidate (pred, succ) op-fusion pairs in the current graph.
 pub fn op_fusion_candidates(g: &TrainingGraph) -> Vec<(NodeId, NodeId)> {
     let mut out = Vec::new();
@@ -493,6 +585,7 @@ pub fn op_fusion_candidates(g: &TrainingGraph) -> Vec<(NodeId, NodeId)> {
 pub enum Mutation {
     FuseOps { pred: NodeId, succ: NodeId, kind: FusionKind },
     FuseAllReduce { a: NodeId, b: NodeId },
+    SetChunks { ar: NodeId, count: u32 },
 }
 
 impl Mutation {
@@ -502,6 +595,7 @@ impl Mutation {
         match *self {
             Mutation::FuseOps { pred, succ, kind } => fuse_ops(g, pred, succ, kind),
             Mutation::FuseAllReduce { a, b } => fuse_allreduce(g, a, b),
+            Mutation::SetChunks { ar, count } => set_chunks(g, ar, count),
         }
     }
 }
@@ -579,6 +673,17 @@ impl CandidateSet {
         self.ars.retain(|&x| x != a && x != b);
         self.ars.push(fx.fused);
         Ok(fx)
+    }
+
+    /// Apply a chunking rewrite through the set. In-place: neither pool
+    /// changes (no node is created or tombstoned).
+    pub fn apply_chunking(
+        &mut self,
+        g: &mut TrainingGraph,
+        ar: NodeId,
+        count: u32,
+    ) -> Result<FusionEffects, FusionError> {
+        set_chunks_explain(g, ar, count)
     }
 }
 
@@ -856,6 +961,94 @@ mod tests {
         let fx = fuse_ops_explain(&mut g, p, s, FusionKind::NonDuplicate).unwrap();
         assert_eq!(g.nodes[c].inputs, vec![fx.fused]);
         assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn chunking_legality_enforced() {
+        // ar1 carries 256 f32 elems = 1024 bytes: 2 chunks of 512 bytes
+        // fall below MIN_CHUNK_BYTES and must be rejected.
+        let (mut g, ar1, _ar2) = two_grad_graph();
+        assert!(matches!(
+            set_chunks(&mut g, ar1, 2),
+            Err(FusionError::BadChunking(_, 2, _))
+        ));
+        // Non-AR target, zero count, over-cap count, and no-op count.
+        assert_eq!(set_chunks(&mut g, 0, 2), Err(FusionError::NotAllReduce(0)));
+        assert!(matches!(set_chunks(&mut g, ar1, 0), Err(FusionError::BadChunking(_, 0, _))));
+        assert!(matches!(
+            set_chunks(&mut g, ar1, MAX_CHUNKS + 1),
+            Err(FusionError::BadChunking(_, _, _))
+        ));
+        assert!(matches!(set_chunks(&mut g, ar1, 1), Err(FusionError::BadChunking(_, 1, _))));
+        assert_eq!(g.nodes[ar1].chunk_count(), 1, "rejected rewrites must not edit");
+
+        // A big enough tensor chunks fine, and count=1 resets to canonical
+        // None (fingerprint equal to the never-chunked graph).
+        let mut b = GraphBuilder::new("big", 4);
+        let x = b.constant("x", &[1 << 16]);
+        let gr = b.compute(OpKind::Mul, "g", &[x], &[1 << 16], Role::Backward);
+        let ar = b.allreduce("ar", gr, &[1 << 16]);
+        let mut g = b.finish();
+        let fp0 = g.fingerprint();
+        let fx = set_chunks_explain(&mut g, ar, 8).unwrap();
+        assert_eq!(fx.fused, ar);
+        assert!(fx.redirected.is_empty() && !fx.pred_deleted);
+        assert_eq!(g.nodes[ar].chunk_count(), 8);
+        assert!(g.has_chunking());
+        assert_ne!(g.fingerprint(), fp0);
+        set_chunks(&mut g, ar, 1).unwrap();
+        assert!(g.nodes[ar].chunk.is_none(), "count=1 stored canonically as None");
+        assert_eq!(g.fingerprint(), fp0);
+    }
+
+    #[test]
+    fn chunk_candidates_respect_floor_and_current() {
+        let mut b = GraphBuilder::new("cc", 4);
+        let x = b.constant("x", &[2048]);
+        let gr = b.compute(OpKind::Mul, "g", &[x], &[2048], Role::Backward);
+        let ar = b.allreduce("ar", gr, &[2048]); // 8192 bytes
+        let mut g = b.finish();
+        // 8192 / 8 = 1024 is the floor; 16 would be 512.
+        assert_eq!(chunk_candidates(&g, ar, 32), vec![2, 4, 8]);
+        set_chunks(&mut g, ar, 4).unwrap();
+        let cands = chunk_candidates(&g, ar, 32);
+        assert!(cands.contains(&1) && !cands.contains(&4), "current count excluded, 1 offered");
+        // Every offered count is legal by construction.
+        for &k in &cands {
+            let mut h = g.clone();
+            set_chunks(&mut h, ar, k).unwrap();
+        }
+        // Non-AR and dead targets yield nothing.
+        assert!(chunk_candidates(&g, x, 32).is_empty());
+    }
+
+    #[test]
+    fn ar_fusion_resets_chunking() {
+        let mut b = GraphBuilder::new("rst", 4);
+        let x = b.constant("x", &[4096]);
+        let g1 = b.compute(OpKind::Mul, "g1", &[x], &[4096], Role::Backward);
+        let g2 = b.compute(OpKind::Mul, "g2", &[g1], &[4096], Role::Backward);
+        let ar1 = b.allreduce("ar1", g1, &[4096]);
+        let ar2 = b.allreduce("ar2", g2, &[4096]);
+        let mut g = b.finish();
+        set_chunks(&mut g, ar1, 4).unwrap();
+        let f = fuse_allreduce(&mut g, ar1, ar2).unwrap();
+        assert_eq!(g.nodes[f].chunk_count(), 1, "fused AR starts whole-tensor");
+        assert!(!g.has_chunking());
+    }
+
+    #[test]
+    fn chunk_mutation_replay_reproduces_rewrite() {
+        let mut b = GraphBuilder::new("rp", 4);
+        let x = b.constant("x", &[1 << 14]);
+        let gr = b.compute(OpKind::Mul, "g", &[x], &[1 << 14], Role::Backward);
+        let ar = b.allreduce("ar", gr, &[1 << 14]);
+        let mut g = b.finish();
+        let mut h = g.clone();
+        set_chunks(&mut g, ar, 8).unwrap();
+        Mutation::SetChunks { ar, count: 8 }.replay(&mut h).unwrap();
+        assert_eq!(g.fingerprint(), h.fingerprint());
+        assert_eq!(g, h);
     }
 
     #[test]

@@ -72,6 +72,7 @@ impl GraphBuilder {
             bytes_out,
             fused: None,
             ar_constituents: Vec::new(),
+            chunk: None,
             deleted: false,
         })
     }

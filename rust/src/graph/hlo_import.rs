@@ -520,6 +520,7 @@ pub fn import_hlo_text(text: &str, num_workers: usize) -> Result<TrainingGraph> 
             bytes_out,
             fused: None,
             ar_constituents: if kind == OpKind::AllReduce { vec![] } else { Vec::new() },
+            chunk: None,
             deleted: false,
         });
         if kind == OpKind::AllReduce {

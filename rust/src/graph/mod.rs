@@ -120,6 +120,45 @@ impl FusedGroup {
     }
 }
 
+/// Chunking descriptor for a communication tensor (CoCoNet-style
+/// chunked collectives): the AllReduce's payload is transferred as
+/// `count` equal-latency chunks on the (in-order) channel, and each
+/// chunk becomes visible to pipelinable consumers as soon as it lands
+/// instead of at whole-tensor completion. `count <= 1` is canonically
+/// equivalent to "no chunking" — every consumer of this descriptor
+/// (simulator, fingerprint, serializer) treats it as absent, which is
+/// what makes the degenerate-case bit-identity contract (DESIGN.md §13)
+/// hold by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Number of chunks the tensor is split into (meaningful when >= 2).
+    pub count: u32,
+}
+
+impl ChunkSpec {
+    pub fn new(count: u32) -> ChunkSpec {
+        ChunkSpec { count }
+    }
+
+    /// True when this descriptor actually changes scheduling.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.count >= 2
+    }
+
+    /// Exact byte split: `total` bytes (an integral f64 for every tensor
+    /// the builder produces) divided into `count` chunks with u64
+    /// arithmetic — the remainder spreads one byte each over the first
+    /// chunks, so the per-chunk sizes always sum EXACTLY to the input.
+    pub fn chunk_bytes(&self, total: f64) -> Vec<f64> {
+        let k = self.count.max(1) as u64;
+        let t = total.max(0.0) as u64;
+        let per = t / k;
+        let rem = t % k;
+        (0..k).map(|i| (per + u64::from(i < rem)) as f64).collect()
+    }
+}
+
 /// One instruction of the training graph.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
@@ -148,6 +187,10 @@ pub struct Node {
     /// merged into this one (singleton when unfused). Used for neighbor
     /// discovery and byte accounting in tensor fusion.
     pub ar_constituents: Vec<NodeId>,
+    /// For `OpKind::AllReduce`: optional chunking descriptor. `None` and
+    /// `Some(count <= 1)` mean the same thing — a whole-tensor transfer
+    /// (see [`ChunkSpec`]); tensor fusion resets this to `None`.
+    pub chunk: Option<ChunkSpec>,
     /// Tombstone: true once absorbed by a fusion transform.
     pub deleted: bool,
 }
@@ -157,6 +200,16 @@ impl Node {
     pub fn tensor_bytes(&self) -> f64 {
         debug_assert_eq!(self.kind, OpKind::AllReduce);
         self.bytes_out
+    }
+
+    /// Effective chunk count: 1 (whole-tensor) unless an active
+    /// [`ChunkSpec`] is present. Canonicalizes `None` ≡ `Some(count<=1)`.
+    #[inline]
+    pub fn chunk_count(&self) -> u32 {
+        match &self.chunk {
+            Some(c) if c.is_active() => c.count,
+            _ => 1,
+        }
     }
 
     /// Signature used as an estimator cache key. Unfused ops key on
@@ -538,8 +591,21 @@ impl TrainingGraph {
                 g.signature().hash(&mut h);
             }
             n.ar_constituents.hash(&mut h);
+            // Chunking is hashed only when active so that `None` and
+            // `Some(count <= 1)` — semantically identical schedules —
+            // dedup to the same candidate fingerprint.
+            if n.chunk_count() >= 2 {
+                n.chunk_count().hash(&mut h);
+            }
         }
         h.finish()
+    }
+
+    /// True if any live AllReduce carries an active chunking descriptor —
+    /// the simulator's gate between the (unchanged) whole-tensor event
+    /// loop and the chunked dual-track loop (DESIGN.md §13).
+    pub fn has_chunking(&self) -> bool {
+        self.live().any(|n| n.kind == OpKind::AllReduce && n.chunk_count() >= 2)
     }
 }
 
@@ -702,6 +768,38 @@ mod tests {
         f.mark(1);
         f.reset(8);
         assert!((0..8).all(|i| !f.is_marked(i)));
+    }
+
+    #[test]
+    fn chunk_bytes_conserve_total_exactly() {
+        for k in 1..=9u32 {
+            for total in [0.0, 1.0, 7.0, 4096.0, 65536.0 + 3.0] {
+                let parts = ChunkSpec::new(k).chunk_bytes(total);
+                assert_eq!(parts.len(), k as usize);
+                assert_eq!(parts.iter().sum::<f64>(), total, "k={k} total={total}");
+                // Chunks differ by at most one byte.
+                let max = parts.iter().cloned().fold(0.0, f64::max);
+                let min = parts.iter().cloned().fold(f64::INFINITY, f64::min);
+                assert!(max - min <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_count_one_is_canonically_unchunked() {
+        let base = tiny();
+        let ar = base.allreduces()[0];
+        let mut one = base.clone();
+        one.nodes[ar].chunk = Some(ChunkSpec::new(1));
+        // count <= 1 is identical to no descriptor at all.
+        assert_eq!(base.fingerprint(), one.fingerprint());
+        assert!(!one.has_chunking());
+        assert_eq!(one.nodes[ar].chunk_count(), 1);
+        let mut four = base.clone();
+        four.nodes[ar].chunk = Some(ChunkSpec::new(4));
+        assert_ne!(base.fingerprint(), four.fingerprint());
+        assert!(four.has_chunking());
+        assert_eq!(four.nodes[ar].chunk_count(), 4);
     }
 
     #[test]

@@ -74,6 +74,11 @@ fn node_json(n: &Node) -> Json {
     if !n.ar_constituents.is_empty() {
         fields.push(("ar", Json::arr_usize(&n.ar_constituents)));
     }
+    // Emitted only when active: pre-chunk readers never see the field, and
+    // pre-chunk payloads parse to the canonical unchunked form below.
+    if n.chunk_count() >= 2 {
+        fields.push(("chunk", Json::Num(n.chunk_count() as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -127,6 +132,17 @@ fn node_from(j: &Json) -> Option<Node> {
         bytes_out: j.get("bout").as_f64()?,
         fused,
         ar_constituents,
+        chunk: match j.get("chunk") {
+            Json::Null => None,
+            c => {
+                let count = c.as_usize()? as u32;
+                if count >= 2 {
+                    Some(super::ChunkSpec::new(count))
+                } else {
+                    None
+                }
+            }
+        },
         deleted: j.get("deleted").as_bool()?,
     })
 }
@@ -250,6 +266,23 @@ mod tests {
         assert_eq!(g, g2);
         assert_eq!(g2.nodes[m].inputs, vec![x, x]);
         assert_eq!(g2.nodes[m].orig_inputs, vec![x, x]);
+    }
+
+    #[test]
+    fn roundtrip_preserves_chunk_spec() {
+        use crate::fusion::set_chunks;
+        let mut b = GraphBuilder::new("rt5", 4);
+        let x = b.constant("x", &[1 << 14]);
+        let gr = b.compute(OpKind::Mul, "g", &[x], &[1 << 14], Role::Backward);
+        let ar = b.allreduce("ar", gr, &[1 << 14]);
+        let mut g = b.finish();
+        // Unchunked graphs must not emit the field at all (old readers).
+        assert!(!g.to_json().contains("\"chunk\""));
+        set_chunks(&mut g, ar, 8).unwrap();
+        let g2 = TrainingGraph::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g2.nodes[ar].chunk_count(), 8);
+        assert_eq!(g.fingerprint(), g2.fingerprint());
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //!
 //! ```text
 //! disco search    --model transformer --cluster a [--alpha 1.05 --beta 10]
-//!                 [--estimator analytical|gnn|oracle] [--out strategy.json]
+//!                 [--estimator analytical|gnn|oracle] [--chunking]
+//!                 [--max-chunks 8] [--out strategy.json]
 //! disco serve     [--addr 127.0.0.1:7077] [--store plans.jsonl|none]
 //!                 [--capacity 512] [--max-conns 256] [--no-warm]
 //!                 [--no-nearest] [--stop]
 //! disco plan      --model transformer [--graph module.json] [--cluster a]
 //!                 [--addr HOST:PORT] [--store plans.jsonl] [--unchanged 150]
+//!                 [--chunking] [--max-chunks 8]
 //!                 [--expect store|warm|cold] [--out strategy.json]
 //! disco enact     --strategy strategy.json --world 4 [--iterations 10]
 //!                 [--quorum N] [--timeout-ms 10000] [--retries 1]
@@ -88,6 +90,12 @@ fn cmd_search(args: &Args) -> Result<()> {
         None => opts.search_config(),
     };
     cfg.unchanged_limit = args.get_usize("unchanged", cfg.unchanged_limit);
+    // `--chunking` opts the vocabulary into chunked collectives
+    // (DESIGN.md §13); the config file's `search.chunking` also enables it.
+    if args.has_flag("chunking") {
+        cfg.methods.chunking = true;
+    }
+    cfg.max_chunks = args.get_usize("max-chunks", cfg.max_chunks as usize) as u32;
     println!(
         "searching {} on cluster {} ({} devices, {} live ops, {} AllReduces; estimator={}, α={}, β={})",
         kind.name(),
@@ -108,6 +116,15 @@ fn cmd_search(args: &Args) -> Result<()> {
         r.evals,
         r.elapsed.as_secs_f64()
     );
+    if r.best.has_chunking() {
+        let sched: Vec<String> = r
+            .best
+            .live()
+            .filter(|n| n.chunk_count() >= 2)
+            .map(|n| format!("{}×{}", n.name, n.chunk_count()))
+            .collect();
+        println!("chunk schedule: {}", sched.join(", "));
+    }
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.best.to_json())?;
         println!("wrote optimized strategy to {path}");
@@ -215,6 +232,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
             if args.has_flag("no-nearest") {
                 fields.push(("nearest", Json::Bool(false)));
             }
+            if args.has_flag("chunking") {
+                fields.push(("chunking", Json::Bool(true)));
+            }
+            if let Some(mc) = args.get("max-chunks") {
+                let mc: usize =
+                    mc.parse().map_err(|_| anyhow!("--max-chunks must be an integer"))?;
+                fields.push(("max_chunks", Json::Num(mc as f64)));
+            }
             let req = Json::obj(fields);
             let resp = disco::service::request(addr, &req)?;
             if resp.get("ok").as_bool() != Some(true) {
@@ -245,6 +270,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 ..Default::default()
             };
             cfg.track_best_path = true;
+            if args.has_flag("chunking") {
+                cfg.methods.chunking = true;
+            }
+            cfg.max_chunks = args.get_usize("max-chunks", cfg.max_chunks as usize) as u32;
             let est_name = if estimator == "analytical" { "analytical" } else { "oracle" };
             let env = disco::service::env_fingerprint(&cluster, &device, est_name, &cfg);
             let gfp = disco::service::graph_fingerprint(&graph)
@@ -288,6 +317,21 @@ fn cmd_plan(args: &Args) -> Result<()> {
         graph.name,
         (initial_ms / best_ms - 1.0) * 100.0,
     );
+    // A chunked plan carries its overlap schedule in the strategy itself
+    // (the serialized graph's per-AR "chunk" field) — surface it.
+    if let Some(nodes) = strategy_json.get("nodes").as_arr() {
+        let sched: Vec<String> = nodes
+            .iter()
+            .filter(|n| n.get("deleted").as_bool() != Some(true))
+            .filter_map(|n| {
+                let c = n.get("chunk").as_usize()?;
+                Some(format!("{}×{}", n.get("name").as_str().unwrap_or("?"), c))
+            })
+            .collect();
+        if !sched.is_empty() {
+            println!("chunk schedule: {}", sched.join(", "));
+        }
+    }
     if let Some(path) = args.get("out") {
         std::fs::write(path, strategy_json.to_string())?;
         println!("wrote optimized strategy to {path}");

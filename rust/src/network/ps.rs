@@ -132,6 +132,7 @@ mod tests {
             bytes_out: 0.0,
             fused: None,
             ar_constituents: vec![],
+            chunk: None,
             deleted: false,
         };
         assert_eq!(src.compute_time_ms(&node), 1.5);

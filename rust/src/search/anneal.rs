@@ -52,6 +52,9 @@ fn propose(g: &mut TrainingGraph, methods: &MethodSet, rng: &mut Rng) -> bool {
     if methods.ar_fusion {
         options.push(2);
     }
+    if methods.chunking {
+        options.push(3);
+    }
     let Some(&m) = rng.choose(&options) else { return false };
     match m {
         0 | 1 => {
@@ -66,13 +69,27 @@ fn propose(g: &mut TrainingGraph, methods: &MethodSet, rng: &mut Rng) -> bool {
             }
             false
         }
-        _ => {
+        2 => {
             let ars = g.allreduces();
             for _ in 0..4 {
                 if let Some(&a) = rng.choose(&ars) {
                     let nbrs = fusion::ar_neighbors(g, a);
                     if let Some(&b) = rng.choose(&nbrs) {
                         if fusion::fuse_allreduce(g, a, b).is_ok() {
+                            return true;
+                        }
+                    }
+                }
+            }
+            false
+        }
+        _ => {
+            let ars = g.allreduces();
+            for _ in 0..4 {
+                if let Some(&a) = rng.choose(&ars) {
+                    let counts = fusion::chunk_candidates(g, a, fusion::MAX_CHUNKS);
+                    if let Some(&count) = rng.choose(&counts) {
+                        if fusion::set_chunks(g, a, count).is_ok() {
                             return true;
                         }
                     }

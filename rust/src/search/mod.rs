@@ -14,6 +14,12 @@
 //! 2. duplicate op fusion of a random (pred, succ) pair,
 //! 3. fusion of a random AllReduce with a random neighbour AllReduce.
 //!
+//! A fourth, opt-in method extends the vocabulary past the paper:
+//! 4. re-chunking a random AllReduce into a power-of-two chunk stream
+//!    (DESIGN.md §13), so the search discovers comm/compute overlap
+//!    schedules jointly with the fusion decisions that create the fused
+//!    tensors being chunked.
+//!
 //! Method subsets are configurable to reproduce the Fig. 10 ablation.
 //!
 //! ## Hot-path architecture (see `rust/PERF.md`)
@@ -54,15 +60,35 @@ pub struct MethodSet {
     pub nondup_fusion: bool,
     pub dup_fusion: bool,
     pub ar_fusion: bool,
+    /// Re-chunk AllReduce tensors into pipelined chunk streams
+    /// (DESIGN.md §13). Off in [`MethodSet::all`] — the paper's move set
+    /// is the three fusion methods, and keeping the default vocabulary
+    /// unchanged keeps every recorded search trajectory and the
+    /// `BENCH_search.json` projections comparable across PRs. Enable via
+    /// `search.chunking` in the config file or `--chunking` on the CLI.
+    pub chunking: bool,
 }
 
 impl MethodSet {
+    /// The paper's full move set (the three fusion methods). Chunking is
+    /// a vocabulary *extension* and stays opt-in; see
+    /// [`MethodSet::chunking`].
     pub fn all() -> MethodSet {
-        MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: true }
+        MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: true, chunking: false }
     }
 
     pub fn none() -> MethodSet {
-        MethodSet { nondup_fusion: false, dup_fusion: false, ar_fusion: false }
+        MethodSet {
+            nondup_fusion: false,
+            dup_fusion: false,
+            ar_fusion: false,
+            chunking: false,
+        }
+    }
+
+    /// All fusion methods plus the chunking extension.
+    pub fn all_with_chunking() -> MethodSet {
+        MethodSet { chunking: true, ..MethodSet::all() }
     }
 
     fn enabled(&self) -> Vec<Method> {
@@ -76,6 +102,9 @@ impl MethodSet {
         if self.ar_fusion {
             v.push(Method::ArFusion);
         }
+        if self.chunking {
+            v.push(Method::Chunk);
+        }
         v
     }
 }
@@ -85,6 +114,7 @@ enum Method {
     NonDupFusion,
     DupFusion,
     ArFusion,
+    Chunk,
 }
 
 /// Search hyper-parameters (paper defaults: α = 1.05, β = 10,
@@ -109,6 +139,11 @@ pub struct SearchConfig {
     /// Hard wall-clock budget; 0 = unlimited.
     pub max_seconds: f64,
     pub methods: MethodSet,
+    /// Cap on the chunk count the chunking method may propose (clamped to
+    /// [`fusion::MAX_CHUNKS`]; candidates are powers of two respecting the
+    /// [`fusion::MIN_CHUNK_BYTES`] floor). Only read when
+    /// [`MethodSet::chunking`] is enabled.
+    pub max_chunks: u32,
     pub sim: SimOptions,
     pub seed: u64,
     /// Maximum worker threads for the per-step candidate evaluations
@@ -171,6 +206,7 @@ impl Default for SearchConfig {
             max_queue: 256,
             max_seconds: 0.0,
             methods: MethodSet::all(),
+            max_chunks: 8,
             sim: SimOptions::default(),
             seed: 0xD15C0,
             eval_threads: 3,
@@ -240,6 +276,7 @@ fn random_apply(
     cset: &mut CandidateSet,
     m: Method,
     n: usize,
+    max_chunks: u32,
     rng: &mut Rng,
     incremental: bool,
     mut frontier: Option<&mut Vec<NodeId>>,
@@ -283,6 +320,24 @@ fn random_apply(
                         if let Some(f) = frontier.as_deref_mut() {
                             f.push(a);
                             f.push(b);
+                            fx.extend_frontier(g, f);
+                        }
+                        ok = true;
+                        break;
+                    }
+                }
+                ok
+            }
+            Method::Chunk => {
+                let mut ok = false;
+                for _ in 0..4 {
+                    let Some(&a) = rng.choose(cset.allreduces()) else { break };
+                    let counts = fusion::chunk_candidates(g, a, max_chunks);
+                    let Some(&count) = rng.choose(&counts) else { continue };
+                    if let Ok(fx) = cset.apply_chunking(g, a, count) {
+                        muts.push(Mutation::SetChunks { ar: a, count });
+                        if let Some(f) = frontier.as_deref_mut() {
+                            f.push(a);
                             fx.extend_frontier(g, f);
                         }
                         ok = true;
@@ -711,6 +766,7 @@ pub fn backtracking_search_seeded(
                 &mut cset,
                 m,
                 n,
+                cfg.max_chunks,
                 &mut rng,
                 cfg.incremental_candidates,
                 if cfg.delta_sim { Some(&mut frontier) } else { None },
@@ -1136,7 +1192,7 @@ mod tests {
         let prof = profiler::profile(&g, &d, &c, 2, 5);
         let est = CostEstimator::oracle(&prof, &d);
         let only_nondup = SearchConfig {
-            methods: MethodSet { nondup_fusion: true, dup_fusion: false, ar_fusion: false },
+            methods: MethodSet { nondup_fusion: true, ..MethodSet::none() },
             ..quick_cfg()
         };
         let all = quick_cfg();
@@ -1145,6 +1201,82 @@ mod tests {
         // With the same budget the richer space should do at least roughly
         // as well (allow small stochastic slack).
         assert!(r2.best_cost_ms <= r1.best_cost_ms * 1.10, "all={} nondup={}", r2.best_cost_ms, r1.best_cost_ms);
+    }
+
+    /// Communication-dominated cost model: every compute op is cheap and
+    /// uniform, the channel is the bottleneck. Under it the only way to
+    /// shave the tail is to start dependent compute before the collective
+    /// fully lands — exactly what the chunking method buys.
+    struct CommBound;
+    impl CostSource for CommBound {
+        fn compute_time_ms(&self, _n: &crate::graph::Node) -> f64 {
+            0.5
+        }
+        fn comm_time_ms(&self, bytes: f64) -> f64 {
+            1.0 + bytes * 1e-3
+        }
+    }
+
+    #[test]
+    fn chunking_method_discovers_overlap() {
+        let g = workload();
+        let cfg = SearchConfig {
+            methods: MethodSet { chunking: true, ..MethodSet::none() },
+            ..quick_cfg()
+        };
+        let r = backtracking_search(&g, &CommBound, &cfg);
+        // With chunking as the *only* move, any improvement is overlap the
+        // chunk schedule created: the optimizer updates start on their
+        // first landed chunk instead of waiting out the whole collective.
+        assert!(
+            r.best_cost_ms < r.initial_cost_ms,
+            "chunking found no overlap win: {} -> {}",
+            r.initial_cost_ms,
+            r.best_cost_ms
+        );
+        assert!(r.best.has_chunking(), "winning plan carries no chunk schedule");
+        assert!(r.best.validate().is_ok());
+        assert!((r.best.total_gradient_bytes() - g.total_gradient_bytes()).abs() < 1e-6);
+        // Deterministic per seed, like every other method.
+        let r2 = backtracking_search(&g, &CommBound, &cfg);
+        assert_eq!(r.best_cost_ms, r2.best_cost_ms);
+        assert_eq!(r.evals, r2.evals);
+        assert_eq!(r.best.fingerprint(), r2.best.fingerprint());
+    }
+
+    #[test]
+    fn chunking_joins_fusion_without_hurting() {
+        let g = workload();
+        let base = backtracking_search(&g, &CommBound, &quick_cfg());
+        let joint_cfg =
+            SearchConfig { methods: MethodSet::all_with_chunking(), ..quick_cfg() };
+        let joint = backtracking_search(&g, &CommBound, &joint_cfg);
+        // Same budget, richer vocabulary: at least roughly as good (same
+        // stochastic slack as `more_methods_never_hurt`) — and on this
+        // comm-bound workload the overlap schedule should genuinely win.
+        assert!(
+            joint.best_cost_ms <= base.best_cost_ms * 1.10,
+            "joint={} fusion-only={}",
+            joint.best_cost_ms,
+            base.best_cost_ms
+        );
+        assert!(joint.best.validate().is_ok());
+    }
+
+    #[test]
+    fn chunked_best_path_replays_to_best() {
+        let g = workload();
+        let cfg = SearchConfig {
+            methods: MethodSet::all_with_chunking(),
+            track_best_path: true,
+            ..quick_cfg()
+        };
+        let r = backtracking_search(&g, &CommBound, &cfg);
+        let mut replayed = g.clone();
+        for m in &r.best_path {
+            m.replay(&mut replayed).expect("best_path replay failed");
+        }
+        assert_eq!(replayed.fingerprint(), r.best.fingerprint());
     }
 
     #[test]

@@ -290,6 +290,13 @@ pub fn env_fingerprint(
         f.byte(cfg.methods.nondup_fusion as u8);
         f.byte(cfg.methods.dup_fusion as u8);
         f.byte(cfg.methods.ar_fusion as u8);
+        // Folded only when enabled: a chunking-off config hashes exactly
+        // as it did before the chunking vocabulary existed, so every
+        // pre-chunk plan record keeps its key (v1 cache stays warm).
+        if cfg.methods.chunking {
+            f.byte(1);
+            f.usize(cfg.max_chunks as usize);
+        }
         f.byte(cfg.incremental_candidates as u8);
         f.f64(cfg.sim.straggler_ms);
         f.byte(cfg.sim.ignore_comm as u8);

@@ -445,7 +445,7 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
         Json::Str(s) => s.parse::<u64>().map_err(|_| anyhow!("bad seed '{s}'"))?,
         n => n.as_usize().ok_or_else(|| anyhow!("seed must be a number or string"))? as u64,
     };
-    let cfg = SearchConfig {
+    let mut cfg = SearchConfig {
         alpha: req.get("alpha").as_f64().unwrap_or(1.05),
         beta: req.get("beta").as_usize().unwrap_or(10),
         unchanged_limit: req.get("unchanged").as_usize().unwrap_or(SERVE_UNCHANGED_LIMIT),
@@ -453,6 +453,15 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
         track_best_path: true,
         ..SearchConfig::default()
     };
+    // Chunked-collective vocabulary (DESIGN.md §13), per-request opt-in.
+    // Both fields fold into the environment fingerprint, so chunked and
+    // unchunked plans for the same graph get distinct store keys.
+    if let Some(ck) = req.get("chunking").as_bool() {
+        cfg.methods.chunking = ck;
+    }
+    if let Some(mc) = req.get("max_chunks").as_usize() {
+        cfg.max_chunks = mc as u32;
+    }
     let mut warm = state.warm.clone();
     if let Some(enabled) = req.get("warm").as_bool() {
         warm.enabled = enabled;

@@ -28,8 +28,19 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 
 /// On-disk record layout version; bump on breaking changes. Loading skips
-/// records with any other version (they just get re-searched).
-pub const RECORD_VERSION: u64 = 1;
+/// records with any *unknown* version (they just get re-searched).
+///
+/// Version history:
+/// * **1** — fusion-only plans (`"ops"` / `"ar"` mutation tags).
+/// * **2** — adds the `"ck"` (re-chunk) mutation tag for chunked
+///   collectives (DESIGN.md §13). v1 lines are still accepted: they
+///   contain no `"ck"` mutations, so they replay exactly as the
+///   unchunked plans they were recorded as — never corrupted, never
+///   silently re-interpreted.
+pub const RECORD_VERSION: u64 = 2;
+
+/// Versions [`PlanRecord::from_json`] accepts (see the history above).
+const COMPAT_VERSIONS: [u64; 2] = [1, RECORD_VERSION];
 
 /// When the JSONL file holds more than this many lines per live record,
 /// `put` rewrites it from the on-disk record set (append-only compaction
@@ -168,6 +179,11 @@ fn mutation_json(m: &Mutation) -> Json {
             ("a", Json::Num(a as f64)),
             ("b", Json::Num(b as f64)),
         ]),
+        Mutation::SetChunks { ar, count } => Json::obj(vec![
+            ("t", Json::Str("ck".into())),
+            ("a", Json::Num(ar as f64)),
+            ("n", Json::Num(count as f64)),
+        ]),
     }
 }
 
@@ -185,6 +201,10 @@ fn mutation_from(j: &Json) -> Option<Mutation> {
         "ar" => Some(Mutation::FuseAllReduce {
             a: j.get("a").as_usize()?,
             b: j.get("b").as_usize()?,
+        }),
+        "ck" => Some(Mutation::SetChunks {
+            ar: j.get("a").as_usize()?,
+            count: j.get("n").as_usize()? as u32,
         }),
         _ => None,
     }
@@ -240,7 +260,7 @@ impl PlanRecord {
     /// Parse one record; `None` for any malformed or version-mismatched
     /// value (the loader's skip-don't-fail contract).
     pub fn from_json(j: &Json) -> Option<PlanRecord> {
-        if j.get("v").as_usize()? as u64 != RECORD_VERSION {
+        if !COMPAT_VERSIONS.contains(&(j.get("v").as_usize()? as u64)) {
             return None;
         }
         Some(PlanRecord {
@@ -589,6 +609,30 @@ mod tests {
             m.insert("v".into(), Json::Num((RECORD_VERSION + 1) as f64));
         }
         assert!(PlanRecord::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn v1_records_still_load() {
+        // A pre-chunk (v1) record has only "ops"/"ar" mutation tags; it
+        // must parse under the bumped version and keep its plan intact —
+        // replaying it produces exactly the unchunked strategy it stored.
+        let mut j = record("k1", "g1", 1.0).to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".into(), Json::Num(1.0));
+        }
+        let r = PlanRecord::from_json(&j).expect("v1 record rejected");
+        assert_eq!(r.muts, record("k1", "g1", 1.0).muts);
+        assert!(!r.muts.iter().any(|m| matches!(m, Mutation::SetChunks { .. })));
+    }
+
+    #[test]
+    fn chunk_mutation_roundtrips() {
+        let mut r = record("k2", "g1", 2.0);
+        r.muts.push(Mutation::SetChunks { ar: 7, count: 8 });
+        let j = r.to_json().to_string();
+        let r2 = PlanRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(r, r2);
+        assert!(j.contains("\"ck\""));
     }
 
     #[test]

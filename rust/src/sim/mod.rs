@@ -30,11 +30,28 @@
 //!   its mutation frontier can influence and replays only the suffix.
 //!   Results are bit-identical to a full simulation (property-tested, no
 //!   float tolerance).
+//!
+//! ## Chunked collectives (DESIGN.md §13)
+//!
+//! An AllReduce with an active [`crate::graph::ChunkSpec`] streams through
+//! the channel as `k` equal chunks: the per-collective overhead is paid
+//! once, then chunk `i` *lands* at `L_i = start + D + i·(T−D)/k`, and a
+//! pipelinable consumer (optimizer update, fusible compute) may begin as
+//! soon as its first chunk lands instead of waiting for the whole tensor.
+//! Graphs with no active chunking take the pre-chunk [`event_loop`]
+//! untouched — results and traces are bit-identical to the pre-chunk
+//! simulator (`prop_chunked_sim_degenerates_to_whole_tensor`). Chunked
+//! graphs run a **dual-track** loop ([`event_loop_chunked`]): a
+//! conservative track replays the whole-tensor arithmetic exactly (it owns
+//! the heap keys, so the schedule *order* matches the unchunked run) and
+//! an actual track carries the overlapped times, each clamped to its
+//! conservative counterpart — which makes "chunking never loses under the
+//! flat-network model" a per-event invariant, not a hope.
 
 pub mod hifi;
 pub mod trace;
 
-use crate::graph::{Node, NodeFlags, NodeId, OpKind, TrainingGraph};
+use crate::graph::{Node, NodeFlags, NodeId, OpKind, Role, TrainingGraph};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -42,6 +59,19 @@ use std::collections::BinaryHeap;
 /// The no-op implementation compiles away in the search hot path.
 pub trait Recorder {
     fn record(&mut self, _node: &Node, _start_ms: f64, _end_ms: f64, _comm: bool) {}
+    /// One chunk of a chunked AllReduce: `idx` in `1..=count`, spanning
+    /// `[start_ms, end_ms]` on the channel. `end_ms` is the chunk's land
+    /// time (its `CommWait`); the whole collective's [`Recorder::record`]
+    /// call still fires with the full channel span. Default: no-op.
+    fn record_chunk(
+        &mut self,
+        _node: &Node,
+        _idx: u32,
+        _count: u32,
+        _start_ms: f64,
+        _end_ms: f64,
+    ) {
+    }
 }
 
 /// Default no-op recorder.
@@ -60,6 +90,14 @@ pub trait CostSource {
     /// sources with batched backends (the GNN estimator) prefetch every
     /// fused-op prediction here. Default: no-op.
     fn prepare(&self, _graph: &TrainingGraph) {}
+    /// Fixed per-collective negotiation/launch overhead, ms — paid once
+    /// per AllReduce regardless of chunk count; the chunks of a chunked
+    /// collective stream through the *remaining* channel occupancy.
+    /// Sources with an affine comm model return their intercept. Default
+    /// 0 (pure-bandwidth chunking).
+    fn comm_overhead_ms(&self) -> f64 {
+        0.0
+    }
 }
 
 /// Simulation knobs.
@@ -149,6 +187,9 @@ pub fn fo_bound(graph: &TrainingGraph, costs: &dyn CostSource) -> f64 {
 pub struct CostTable {
     compute: Vec<f64>,
     comm: Vec<f64>,
+    /// Per-collective overhead ([`CostSource::comm_overhead_ms`]) — one
+    /// scalar per source, resolved at build time like the per-node costs.
+    overhead: f64,
 }
 
 impl CostTable {
@@ -166,6 +207,7 @@ impl CostTable {
         self.compute.resize(n, 0.0);
         self.comm.clear();
         self.comm.resize(n, 0.0);
+        self.overhead = costs.comm_overhead_ms();
         self.fill(graph, costs, 0);
     }
 
@@ -199,6 +241,7 @@ impl CostTable {
         self.comm.clear();
         self.comm.extend_from_slice(&parent.comm[..base]);
         self.comm.resize(n, 0.0);
+        self.overhead = costs.comm_overhead_ms();
         self.fill(graph, costs, base);
     }
 
@@ -227,6 +270,12 @@ impl CostTable {
         self.comm[id]
     }
 
+    /// Resolved per-collective overhead (ms).
+    #[inline]
+    pub fn overhead_ms(&self) -> f64 {
+        self.overhead
+    }
+
     /// Number of arena slots covered.
     pub fn len(&self) -> usize {
         self.compute.len()
@@ -247,6 +296,10 @@ impl CostTable {
 pub struct SimWorkspace {
     indeg: Vec<u32>,
     ready: Vec<f64>,
+    /// Actual-track ready times of the chunked loop (the conservative
+    /// track owns `ready` and the heap keys). Zero-filled and unread in
+    /// unchunked runs.
+    ready_act: Vec<f64>,
     consumers_left: Vec<u32>,
     heap: BinaryHeap<Reverse<(OrderedF64, u32, u32)>>,
     flags: NodeFlags,
@@ -263,6 +316,8 @@ impl SimWorkspace {
         self.indeg.resize(n, 0);
         self.ready.clear();
         self.ready.resize(n, 0.0);
+        self.ready_act.clear();
+        self.ready_act.resize(n, 0.0);
         self.consumers_left.clear();
         self.consumers_left.resize(n, 0);
         self.heap.clear();
@@ -288,6 +343,14 @@ struct SimState {
     scheduled: usize,
     live_bytes: f64,
     peak_bytes: f64,
+    // Actual-track counterparts used by the chunked loop only; busy
+    // totals, counts and the memory accounting are schedule-order facts
+    // shared by both tracks. All stay zero in unchunked runs.
+    act_device_free: f64,
+    act_channel_free: f64,
+    act_comp_idle: f64,
+    act_comm_idle: f64,
+    act_makespan: f64,
 }
 
 impl SimState {
@@ -298,6 +361,20 @@ impl SimState {
             comm_busy_ms: self.comm_busy,
             comp_idle_ms: self.comp_idle,
             comm_idle_ms: self.comm_idle,
+            kernels: self.kernels,
+            allreduces: self.allreduces,
+            peak_bytes: self.peak_bytes,
+        }
+    }
+
+    /// Result of a chunked run: the actual (overlapped) track.
+    fn result_act(&self) -> SimResult {
+        SimResult {
+            makespan_ms: self.act_makespan,
+            comp_busy_ms: self.comp_busy,
+            comm_busy_ms: self.comm_busy,
+            comp_idle_ms: self.act_comp_idle,
+            comm_idle_ms: self.act_comm_idle,
             kernels: self.kernels,
             allreduces: self.allreduces,
             peak_bytes: self.peak_bytes,
@@ -314,6 +391,9 @@ struct SimCheckpoint {
     heap: BinaryHeap<Reverse<(OrderedF64, u32, u32)>>,
     indeg: Vec<u32>,
     ready: Vec<f64>,
+    /// Actual-track ready times — populated only by chunked recordings
+    /// (empty otherwise, so unchunked snapshots cost nothing extra).
+    ready_act: Vec<f64>,
     consumers_left: Vec<u32>,
 }
 
@@ -328,6 +408,10 @@ pub struct CheckpointLog {
     sched_order: Vec<u32>,
     snaps: Vec<SimCheckpoint>,
     used: usize,
+    /// Which event loop recorded this log: snapshots of a chunked run
+    /// carry the actual track too, and [`simulate_delta`] restores (or
+    /// synthesizes) it accordingly.
+    chunked: bool,
 }
 
 impl CheckpointLog {
@@ -338,10 +422,11 @@ impl CheckpointLog {
     /// Snapshot cadence: one every `every` events (`0` = auto, n/8
     /// clamped to ≥ 32 — a handful of snapshots per evaluation, so the
     /// recording overhead stays a small fraction of the event loop).
-    fn reset(&mut self, every: usize, n: usize) {
+    fn reset(&mut self, every: usize, n: usize, chunked: bool) {
         self.every = if every > 0 { every } else { (n / 8).max(32) };
         self.sched_order.clear();
         self.used = 0;
+        self.chunked = chunked;
     }
 
     /// Events the recorded parent evaluation scheduled.
@@ -364,6 +449,11 @@ impl CheckpointLog {
         s.heap.clone_from(&ws.heap);
         s.indeg.clone_from(&ws.indeg);
         s.ready.clone_from(&ws.ready);
+        if self.chunked {
+            s.ready_act.clone_from(&ws.ready_act);
+        } else {
+            s.ready_act.clear();
+        }
         s.consumers_left.clone_from(&ws.consumers_left);
         self.used += 1;
     }
@@ -375,6 +465,7 @@ impl CheckpointLog {
 trait NodeCosts {
     fn compute(&self, node: &Node) -> f64;
     fn comm(&self, node: &Node) -> f64;
+    fn overhead(&self) -> f64;
 }
 
 struct DynCosts<'a>(&'a dyn CostSource);
@@ -388,6 +479,10 @@ impl NodeCosts for DynCosts<'_> {
     fn comm(&self, node: &Node) -> f64 {
         self.0.comm_time_ms(node.bytes_out)
     }
+    #[inline]
+    fn overhead(&self) -> f64 {
+        self.0.comm_overhead_ms()
+    }
 }
 
 struct TableCosts<'a>(&'a CostTable);
@@ -400,6 +495,10 @@ impl NodeCosts for TableCosts<'_> {
     #[inline]
     fn comm(&self, node: &Node) -> f64 {
         self.0.comm[node.id]
+    }
+    #[inline]
+    fn overhead(&self) -> f64 {
+        self.0.overhead
     }
 }
 
@@ -438,6 +537,11 @@ pub fn simulate_in<R: Recorder>(
 ) -> SimResult {
     let mut st = SimState::default();
     init_state(graph, ws, &mut st);
+    if graph.has_chunking() {
+        event_loop_chunked(graph, &DynCosts(costs), opts, rec, ws, &mut st, None);
+        debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
+        return st.result_act();
+    }
     event_loop(graph, &DynCosts(costs), opts, rec, ws, &mut st, None);
     debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
     st.result()
@@ -456,6 +560,11 @@ pub fn simulate_table_in<R: Recorder>(
 ) -> SimResult {
     let mut st = SimState::default();
     init_state(graph, ws, &mut st);
+    if graph.has_chunking() {
+        event_loop_chunked(graph, &TableCosts(table), opts, rec, ws, &mut st, None);
+        debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
+        return st.result_act();
+    }
     event_loop(graph, &TableCosts(table), opts, rec, ws, &mut st, None);
     debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
     st.result()
@@ -476,7 +585,13 @@ pub fn simulate_ckpt_in<R: Recorder>(
 ) -> SimResult {
     let mut st = SimState::default();
     init_state(graph, ws, &mut st);
-    log.reset(every, graph.nodes.len());
+    let chunked = graph.has_chunking();
+    log.reset(every, graph.nodes.len(), chunked);
+    if chunked {
+        event_loop_chunked(graph, &TableCosts(table), opts, rec, ws, &mut st, Some(log));
+        debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
+        return st.result_act();
+    }
     event_loop(graph, &TableCosts(table), opts, rec, ws, &mut st, Some(log));
     debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
     st.result()
@@ -566,6 +681,23 @@ pub fn simulate_delta<R: Recorder>(
     ws.ready.resize(child_len, 0.0);
     ws.consumers_left.clone_from(&cp.consumers_left);
     ws.consumers_left.resize(child_len, 0);
+    let child_chunked = child.has_chunking();
+    if child_chunked {
+        if log.chunked {
+            ws.ready_act.clone_from(&cp.ready_act);
+        } else {
+            // Unchunked parent prefix: the actual track is identical to
+            // the conservative one everywhere (no chunked AR was ever
+            // processed), so synthesize it from the conservative state.
+            ws.ready_act.clone_from(&cp.ready);
+            st.act_device_free = st.device_free;
+            st.act_channel_free = st.channel_free;
+            st.act_comp_idle = st.comp_idle;
+            st.act_comm_idle = st.comm_idle;
+            st.act_makespan = st.makespan;
+        }
+        ws.ready_act.resize(child_len, 0.0);
+    }
 
     // --- patch to child-initial values ----------------------------------
     // Appended nodes were never initialized by the parent run; frontier
@@ -580,6 +712,9 @@ pub fn simulate_delta<R: Recorder>(
         }
         ws.indeg[id] = node.inputs.len() as u32;
         ws.ready[id] = 0.0;
+        if child_chunked {
+            ws.ready_act[id] = 0.0;
+        }
         ws.consumers_left[id] = csucc.out_degree(id) as u32;
     }
     for &a in frontier {
@@ -588,10 +723,23 @@ pub fn simulate_delta<R: Recorder>(
         }
         ws.indeg[a] = child.nodes[a].inputs.len() as u32;
         ws.ready[a] = 0.0;
+        if child_chunked {
+            ws.ready_act[a] = 0.0;
+        }
         ws.consumers_left[a] = csucc.out_degree(a) as u32;
     }
 
     // --- replay the suffix ----------------------------------------------
+    // An unchunked child replays through the pre-chunk loop even when the
+    // parent log is chunked: the conservative parts of a chunked snapshot
+    // are bitwise what an unchunked run of the chunk-stripped parent would
+    // have recorded (the conservative track *is* that run), and the
+    // unchunked loop reads nothing else.
+    if child_chunked {
+        event_loop_chunked(child, &TableCosts(table), opts, rec, ws, &mut st, None);
+        debug_assert_eq!(st.scheduled, child.live_count(), "delta replay lost events");
+        return st.result_act();
+    }
     event_loop(child, &TableCosts(table), opts, rec, ws, &mut st, None);
     debug_assert_eq!(st.scheduled, child.live_count(), "delta replay lost events");
     st.result()
@@ -690,6 +838,151 @@ fn event_loop<C: NodeCosts, R: Recorder>(
         for &v in succ.row(id) {
             let v = v as NodeId;
             ws.ready[v] = ws.ready[v].max(done);
+            ws.indeg[v] -= 1;
+            if ws.indeg[v] == 0 {
+                ws.heap.push(Reverse((OrderedF64(ws.ready[v]), st.seq, v as u32)));
+                st.seq += 1;
+            }
+        }
+    }
+}
+
+/// Dual-track event loop for graphs with at least one chunked AllReduce.
+///
+/// * The **conservative track** replays [`event_loop`]'s arithmetic
+///   bit-for-bit — it owns the heap keys, so events pop in exactly the
+///   order an unchunked run of the chunk-stripped graph would schedule
+///   them, and checkpoint snapshots stay compatible with unchunked
+///   children.
+/// * The **actual track** (`ready_act`, `act_*` state) carries the
+///   overlapped times. Every actual value is clamped so it never exceeds
+///   its conservative counterpart — `max`/`+` are monotone in f64, so
+///   `act_makespan <= makespan` holds *exactly*, by induction per event,
+///   with no float tolerance (the monotonicity property test).
+///
+/// A chunked AllReduce occupies the channel for its full time `T`, but its
+/// data lands incrementally: overhead `D` once, then `k` equal chunks of
+/// `(T−D)/k`. A pipelinable consumer with compute cost `c` processes each
+/// landed chunk in `c/k`, finishing at `max(L_1 + c, L_k + c/k)` — which
+/// the whole-tensor scheduler reproduces by giving it the *effective*
+/// ready time `r = max(L_1, L_k − (k−1)·c/k)`, clamped to `L_k` (the
+/// whole-tensor arrival) against last-chunk rounding.
+fn event_loop_chunked<C: NodeCosts, R: Recorder>(
+    graph: &TrainingGraph,
+    costs: &C,
+    opts: SimOptions,
+    rec: &mut R,
+    ws: &mut SimWorkspace,
+    st: &mut SimState,
+    mut log: Option<&mut CheckpointLog>,
+) {
+    let succ = graph.succ_csr();
+    let transient =
+        |node: &Node| !matches!(node.kind, OpKind::Parameter | OpKind::Constant);
+
+    loop {
+        if let Some(l) = log.as_deref_mut() {
+            if st.scheduled % l.every == 0 {
+                l.snap(st.scheduled, st, ws);
+            }
+        }
+        let Some(Reverse((OrderedF64(rt), _s, id))) = ws.heap.pop() else { break };
+        if let Some(l) = log.as_deref_mut() {
+            l.sched_order.push(id);
+        }
+        let id = id as NodeId;
+        let node = &graph.nodes[id];
+        let rt_act = ws.ready_act[id];
+        let k = node.chunk_count();
+        let chunked_ar = node.kind == OpKind::AllReduce && k >= 2 && !opts.ignore_comm;
+        let (done, done_act) = match node.kind {
+            OpKind::AllReduce => {
+                if opts.ignore_comm {
+                    (rt, rt_act)
+                } else {
+                    let start = (rt + opts.straggler_ms).max(st.channel_free);
+                    st.comm_idle += start - st.channel_free;
+                    let t = costs.comm(node);
+                    st.channel_free = start + t;
+                    st.comm_busy += t;
+                    st.allreduces += 1;
+
+                    let start_a = (rt_act + opts.straggler_ms).max(st.act_channel_free);
+                    st.act_comm_idle += start_a - st.act_channel_free;
+                    st.act_channel_free = start_a + t;
+                    let done_a = st.act_channel_free;
+                    rec.record(node, start_a, done_a, true);
+                    if k >= 2 {
+                        let d_over = costs.overhead().min(t).max(0.0);
+                        let per = (t - d_over) / k as f64;
+                        let mut s = start_a + d_over;
+                        let mut land1 = done_a;
+                        for i in 1..=k {
+                            let e = if i == k { done_a } else { s + per };
+                            rec.record_chunk(node, i, k, s, e);
+                            if i == 1 {
+                                land1 = e;
+                            }
+                            s = e;
+                        }
+                        for &v in succ.row(id) {
+                            let v = v as NodeId;
+                            let vn = &graph.nodes[v];
+                            let pipeline = vn.kind.is_fusible_compute()
+                                || vn.kind == OpKind::Fused
+                                || vn.role == Role::Optimizer;
+                            let r = if pipeline {
+                                let u = costs.compute(vn) / k as f64;
+                                land1.max(done_a - (k - 1) as f64 * u).min(done_a)
+                            } else {
+                                done_a
+                            };
+                            ws.ready_act[v] = ws.ready_act[v].max(r);
+                        }
+                    }
+                    (st.channel_free, done_a)
+                }
+            }
+            OpKind::Parameter | OpKind::Constant => (rt, rt_act),
+            _ => {
+                let t = costs.compute(node);
+                let start = rt.max(st.device_free);
+                st.comp_idle += start - st.device_free;
+                st.device_free = start + t;
+                st.comp_busy += t;
+                st.kernels += 1;
+
+                let start_a = rt_act.max(st.act_device_free);
+                st.act_comp_idle += start_a - st.act_device_free;
+                st.act_device_free = start_a + t;
+                rec.record(node, start_a, st.act_device_free, false);
+                (st.device_free, st.act_device_free)
+            }
+        };
+        st.makespan = st.makespan.max(done);
+        st.act_makespan = st.act_makespan.max(done_act);
+        st.scheduled += 1;
+
+        if transient(node) {
+            st.live_bytes += node.bytes_out;
+            st.peak_bytes = st.peak_bytes.max(st.live_bytes);
+        }
+        for &i in &node.inputs {
+            ws.consumers_left[i] -= 1;
+            if ws.consumers_left[i] == 0 && transient(&graph.nodes[i]) {
+                st.live_bytes -= graph.nodes[i].bytes_out;
+            }
+        }
+
+        for &v in succ.row(id) {
+            let v = v as NodeId;
+            ws.ready[v] = ws.ready[v].max(done);
+            // A chunked AR already relaxed its consumers' actual ready
+            // times chunk-wise above; everything else propagates its
+            // actual completion.
+            if !chunked_ar {
+                ws.ready_act[v] = ws.ready_act[v].max(done_act);
+            }
             ws.indeg[v] -= 1;
             if ws.indeg[v] == 0 {
                 ws.heap.push(Reverse((OrderedF64(ws.ready[v]), st.seq, v as u32)));
@@ -1020,5 +1313,205 @@ mod tests {
         assert_eq!(fo_bound(&g, &c), 16.0);
         let c2 = Fixed { comp: 0.1, comm: 5.0 };
         assert_eq!(fo_bound(&g, &c2), 20.0);
+    }
+
+    use crate::graph::ChunkSpec;
+
+    /// Like [`Fixed`] but with a per-collective overhead.
+    struct FixedOver {
+        comp: f64,
+        comm: f64,
+        over: f64,
+    }
+
+    impl CostSource for FixedOver {
+        fn compute_time_ms(&self, _node: &Node) -> f64 {
+            self.comp
+        }
+        fn comm_time_ms(&self, _bytes: f64) -> f64 {
+            self.comm
+        }
+        fn comm_overhead_ms(&self) -> f64 {
+            self.over
+        }
+    }
+
+    #[test]
+    fn chunking_overlaps_allreduce_with_optimizer() {
+        // comp=1, comm=10, unchunked: grad 0..1, AR 1..11, opt 11..12.
+        // Chunked k=2 (no overhead): chunks land at 6 and 11; the opt
+        // processes each landed half in 0.5ms, so its effective ready time
+        // is max(L1, L2 − 0.5) = 10.5 and it finishes at 11.5.
+        let mut g = bp_chain(1);
+        let ar = g.allreduces()[0];
+        let c = Fixed { comp: 1.0, comm: 10.0 };
+        assert_eq!(simulate(&g, &c, SimOptions::default()).makespan_ms, 12.0);
+        g.nodes[ar].chunk = Some(ChunkSpec::new(2));
+        let r2 = simulate(&g, &c, SimOptions::default());
+        assert_eq!(r2.makespan_ms, 11.5);
+        // Busy totals are schedule facts, identical to the unchunked run.
+        assert_eq!(r2.comp_busy_ms, 2.0);
+        assert_eq!(r2.comm_busy_ms, 10.0);
+        assert_eq!(r2.allreduces, 1);
+        // k=4: L1 = 3.5, ready = max(3.5, 11 − 3·0.25) = 10.25 → 11.25.
+        g.nodes[ar].chunk = Some(ChunkSpec::new(4));
+        assert_eq!(simulate(&g, &c, SimOptions::default()).makespan_ms, 11.25);
+    }
+
+    #[test]
+    fn chunk_overhead_delays_first_land() {
+        // Compute-heavy consumer (comp=16 ≫ per-chunk stream): the first
+        // land time governs. k=4, comm=10: grad 0..16, AR 16..26.
+        // D=2: L1 = 16+2+2 = 20 → opt 20..36. D=0: L1 = 18.5 → 34.5.
+        let mut g = bp_chain(1);
+        let ar = g.allreduces()[0];
+        g.nodes[ar].chunk = Some(ChunkSpec::new(4));
+        let with_over = FixedOver { comp: 16.0, comm: 10.0, over: 2.0 };
+        let no_over = FixedOver { comp: 16.0, comm: 10.0, over: 0.0 };
+        assert_eq!(simulate(&g, &with_over, SimOptions::default()).makespan_ms, 36.0);
+        assert_eq!(simulate(&g, &no_over, SimOptions::default()).makespan_ms, 34.5);
+    }
+
+    #[test]
+    fn chunk_count_one_is_bit_identical_to_unchunked() {
+        // count <= 1 is canonically unchunked: the gate routes through the
+        // pre-chunk event loop, so results are the same bits.
+        let c = Fixed { comp: 0.7, comm: 1.3 };
+        for k in [1usize, 4, 7] {
+            let g = bp_chain(k);
+            let base = simulate(&g, &c, SimOptions::default());
+            let mut g1 = g.clone();
+            for ar in g1.allreduces() {
+                g1.nodes[ar].chunk = Some(ChunkSpec::new(1));
+            }
+            assert!(!g1.has_chunking());
+            assert_eq!(simulate(&g1, &c, SimOptions::default()), base);
+        }
+    }
+
+    #[test]
+    fn chunking_never_worse_flat_network() {
+        // Exact (no tolerance): every actual value is clamped to its
+        // conservative counterpart per event.
+        for n in [1usize, 3, 6] {
+            for count in [2u32, 3, 5, 8] {
+                for (comp, comm, over) in
+                    [(1.0, 10.0, 0.0), (0.3, 2.7, 0.4), (5.0, 1.0, 0.1), (1.0, 1.0, 1.0)]
+                {
+                    let base = bp_chain(n);
+                    let mut g = base.clone();
+                    for ar in g.allreduces() {
+                        g.nodes[ar].chunk = Some(ChunkSpec::new(count));
+                    }
+                    let c = FixedOver { comp, comm, over };
+                    let whole = simulate(&base, &c, SimOptions::default());
+                    let chunked = simulate(&g, &c, SimOptions::default());
+                    assert!(
+                        chunked.makespan_ms <= whole.makespan_ms,
+                        "n={n} count={count} comp={comp} comm={comm} over={over}: \
+                         {} > {}",
+                        chunked.makespan_ms,
+                        whole.makespan_ms
+                    );
+                    assert_eq!(chunked.comp_busy_ms, whole.comp_busy_ms);
+                    assert_eq!(chunked.comm_busy_ms, whole.comm_busy_ms);
+                    assert_eq!(chunked.peak_bytes, whole.peak_bytes);
+                }
+            }
+        }
+    }
+
+    /// [`bp_chain`] with tensors wide enough for legal vocabulary
+    /// chunkings (16 KiB gradients).
+    fn bp_chain_wide(k: usize) -> TrainingGraph {
+        let mut b = GraphBuilder::new("chainw", 4);
+        let mut prev = b.constant("x", &[1 << 12]);
+        for i in 0..k {
+            let g = b.compute(OpKind::Mul, &format!("g{i}"), &[prev], &[1 << 12], Role::Backward);
+            let p = b.param(&format!("w{i}"), &[1 << 12]);
+            let ar = b.allreduce(&format!("ar{i}"), g, &[1 << 12]);
+            b.optimizer_update(&format!("u{i}"), &[ar, p]);
+            prev = g;
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn chunked_delta_matches_full_all_mode_combos() {
+        use crate::fusion::set_chunks_explain;
+        let c = FixedOver { comp: 0.7, comm: 1.3, over: 0.2 };
+        // (parent chunked?, child chunked?) — chunk mutations drive all
+        // three reachable combinations; (false, false) is the pre-chunk
+        // path covered by the existing delta tests.
+        for (parent_chunked, child_mutation_count) in
+            [(false, 8u32), (true, 8u32), (true, 1u32)]
+        {
+            let mut parent = bp_chain_wide(6);
+            if parent_chunked {
+                let ar0 = parent.allreduces()[0];
+                set_chunks_explain(&mut parent, ar0, 4).unwrap();
+            }
+            // Mutate: re-chunk (or un-chunk) an AR. For the un-chunk case
+            // target the same AR so the child ends fully unchunked.
+            let target = if child_mutation_count == 1 {
+                parent.allreduces()[0]
+            } else {
+                *parent.allreduces().last().unwrap()
+            };
+            let mut child = parent.clone();
+            let fx = set_chunks_explain(&mut child, target, child_mutation_count).unwrap();
+            let mut frontier = vec![target];
+            fx.extend_frontier(&child, &mut frontier);
+            if child_mutation_count == 1 {
+                assert!(!child.has_chunking());
+            } else {
+                assert!(child.has_chunking());
+            }
+
+            for opts in [
+                SimOptions::default(),
+                SimOptions { straggler_ms: 0.3, ignore_comm: false },
+            ] {
+                for every in [1usize, 3, 1000] {
+                    let mut ws = SimWorkspace::new();
+                    let parent_table = CostTable::build(&parent, &c);
+                    let mut log = CheckpointLog::new();
+                    let _ = simulate_ckpt_in(
+                        &parent,
+                        &parent_table,
+                        opts,
+                        &mut NoRecord,
+                        &mut ws,
+                        &mut log,
+                        every,
+                    );
+                    assert_eq!(log.chunked, parent.has_chunking());
+                    let mut child_table = CostTable::new();
+                    child_table.extend_in(&parent_table, &child, &c);
+                    let delta = simulate_delta(
+                        &parent,
+                        &log,
+                        &child,
+                        &frontier,
+                        &child_table,
+                        opts,
+                        &mut NoRecord,
+                        &mut ws,
+                    );
+                    let full = simulate_table_in(
+                        &child,
+                        &child_table,
+                        opts,
+                        &mut NoRecord,
+                        &mut SimWorkspace::new(),
+                    );
+                    assert_eq!(
+                        delta, full,
+                        "parent_chunked={parent_chunked} count={child_mutation_count} \
+                         every={every} opts={opts:?}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -15,6 +15,10 @@ pub struct TraceEvent {
     pub end_ms: f64,
     /// Track: false = device stream, true = comm channel.
     pub comm: bool,
+    /// `Some((idx, count))` for one chunk of a chunked AllReduce
+    /// (`idx` in `1..=count`); rendered on its own chunk-stream track
+    /// below the channel so the whole-collective span stays visible.
+    pub chunk: Option<(u32, u32)>,
 }
 
 /// Collecting recorder.
@@ -30,6 +34,17 @@ impl Recorder for TraceRecorder {
             start_ms,
             end_ms,
             comm,
+            chunk: None,
+        });
+    }
+
+    fn record_chunk(&mut self, node: &Node, idx: u32, count: u32, start_ms: f64, end_ms: f64) {
+        self.events.push(TraceEvent {
+            name: format!("{}[{idx}/{count}]", node.name),
+            start_ms,
+            end_ms,
+            comm: true,
+            chunk: Some((idx, count)),
         });
     }
 }
@@ -50,14 +65,28 @@ pub fn capture(
 pub fn to_chrome_json(events: &[TraceEvent]) -> String {
     let mut arr = Vec::with_capacity(events.len());
     for e in events {
+        let cat = if e.chunk.is_some() {
+            "comm-chunk"
+        } else if e.comm {
+            "comm"
+        } else {
+            "compute"
+        };
+        let tid = if e.chunk.is_some() {
+            3.0
+        } else if e.comm {
+            2.0
+        } else {
+            1.0
+        };
         arr.push(Json::obj(vec![
             ("name", Json::Str(e.name.clone())),
-            ("cat", Json::Str(if e.comm { "comm" } else { "compute" }.into())),
+            ("cat", Json::Str(cat.into())),
             ("ph", Json::Str("X".into())),
             ("ts", Json::Num(e.start_ms * 1e3)),
             ("dur", Json::Num((e.end_ms - e.start_ms) * 1e3)),
             ("pid", Json::Num(1.0)),
-            ("tid", Json::Num(if e.comm { 2.0 } else { 1.0 })),
+            ("tid", Json::Num(tid)),
         ]));
     }
     Json::obj(vec![
@@ -113,6 +142,35 @@ mod tests {
                 assert!(w[1].start_ms >= w[0].end_ms - 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn chunked_capture_tiles_the_collective_span() {
+        let mut g = graph();
+        let ar = g.allreduces()[0];
+        g.nodes[ar].chunk = Some(crate::graph::ChunkSpec::new(4));
+        let (res, events) = capture(&g, &Unit, SimOptions::default());
+        let whole: Vec<_> =
+            events.iter().filter(|e| e.comm && e.chunk.is_none()).collect();
+        let chunks: Vec<_> = events.iter().filter(|e| e.chunk.is_some()).collect();
+        assert_eq!(whole.len(), 1);
+        assert_eq!(chunks.len(), 4);
+        // Chunks abut and exactly tile the collective's channel span
+        // (Unit has no overhead, so the stream starts at the AR start).
+        assert_eq!(chunks[0].start_ms, whole[0].start_ms);
+        assert_eq!(chunks.last().unwrap().end_ms, whole[0].end_ms);
+        for w in chunks.windows(2) {
+            assert_eq!(w[1].start_ms, w[0].end_ms);
+        }
+        // Co-scheduling contract: the wait for chunk i never fires before
+        // its start plus the per-chunk transfer (2ms / 4 chunks), and the
+        // dependent optimizer never starts before its first chunk lands.
+        for c in &chunks[..3] {
+            assert_eq!(c.end_ms, c.start_ms + 0.5);
+        }
+        let opt = events.iter().find(|e| e.name == "u").unwrap();
+        assert!(opt.start_ms >= chunks[0].end_ms);
+        assert!(res.makespan_ms <= 5.0, "chunking must not lose vs whole-tensor 5.0");
     }
 
     #[test]

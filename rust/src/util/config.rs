@@ -8,7 +8,7 @@
 //!   "device":  {"preset": "tesla_t4", "peak_tflops": 8.1,
 //!                "mem_gbps": 300, "onchip_mb": 4},
 //!   "search":  {"alpha": 1.05, "beta": 10, "unchanged_limit": 1000,
-//!                "seed": 7},
+//!                "seed": 7, "chunking": true, "max_chunks": 8},
 //!   "service": {"addr": "127.0.0.1:7077", "store_path": "plans.jsonl",
 //!                "capacity": 512, "warm_start": true, "nearest": true,
 //!                "max_conns": 256}
@@ -152,6 +152,12 @@ impl Config {
             if let Some(t) = s.get("track_best_path").as_bool() {
                 cfg.search.track_best_path = t;
             }
+            if let Some(ck) = s.get("chunking").as_bool() {
+                cfg.search.methods.chunking = ck;
+            }
+            if let Some(mc) = s.get("max_chunks").as_usize() {
+                cfg.search.max_chunks = mc as u32;
+            }
         }
 
         let v = j.get("service");
@@ -251,6 +257,20 @@ mod tests {
         assert!(d.service.warm_start && d.service.nearest);
         assert_eq!(d.service.capacity, 512);
         assert!(!d.search.track_best_path);
+    }
+
+    #[test]
+    fn chunking_knobs_apply() {
+        let c = Config::from_json_str(
+            r#"{"search": {"chunking": true, "max_chunks": 16}}"#,
+        )
+        .unwrap();
+        assert!(c.search.methods.chunking);
+        assert_eq!(c.search.max_chunks, 16);
+        // Off by default: the paper's vocabulary unless explicitly enabled.
+        let d = Config::from_json_str("{}").unwrap();
+        assert!(!d.search.methods.chunking);
+        assert_eq!(d.search.max_chunks, 8);
     }
 
     #[test]

@@ -20,10 +20,18 @@ use disco::util::rng::Rng;
 /// Random layered DAG with gradients + AllReduces, structurally similar to
 /// a BP graph.
 fn random_graph(rng: &mut Rng) -> TrainingGraph {
+    random_graph_elems(rng, 256)
+}
+
+/// [`random_graph`] with a configurable base tensor width. The chunking
+/// properties use larger tensors (`elems = 8192` → 4-32 KiB gradients)
+/// because the vocabulary's `MIN_CHUNK_BYTES` floor correctly refuses to
+/// chunk the default 256-element (≤ 1 KiB) gradients.
+fn random_graph_elems(rng: &mut Rng, elems: usize) -> TrainingGraph {
     let layers = rng.gen_range_inclusive(2, 6);
     let width = rng.gen_range_inclusive(1, 4);
     let mut b = GraphBuilder::new("prop", rng.gen_range_inclusive(2, 16));
-    let mut prev: Vec<usize> = vec![b.constant("x", &[256])];
+    let mut prev: Vec<usize> = vec![b.constant("x", &[elems])];
     let kinds = [OpKind::Mul, OpKind::Add, OpKind::Tanh, OpKind::Sigmoid, OpKind::MatMul, OpKind::Reduce];
     for l in 0..layers {
         let mut cur = Vec::new();
@@ -37,7 +45,7 @@ fn random_graph(rng: &mut Rng) -> TrainingGraph {
                     ins.push(extra);
                 }
             }
-            let dims = [256usize >> rng.gen_range(3)];
+            let dims = [elems >> rng.gen_range(3)];
             let id = b.compute(k, &format!("l{l}w{w}"), &ins, &dims, if l >= layers / 2 { Role::Backward } else { Role::Forward }, );
             cur.push(id);
         }
@@ -87,6 +95,23 @@ fn random_rewrites(g: &mut TrainingGraph, rng: &mut Rng, tries: usize) -> usize 
                     }
                 }
             }
+        }
+    }
+    applied
+}
+
+/// Re-chunk random AllReduces through the search vocabulary
+/// ([`fusion::chunk_candidates`] + [`fusion::set_chunks`]); returns how
+/// many chunkings were applied.
+fn random_chunkings(g: &mut TrainingGraph, rng: &mut Rng, tries: usize) -> usize {
+    let mut applied = 0;
+    for _ in 0..tries {
+        let ars = g.allreduces();
+        let Some(&a) = rng.choose(&ars) else { break };
+        let counts = fusion::chunk_candidates(g, a, fusion::MAX_CHUNKS);
+        let Some(&c) = rng.choose(&counts) else { continue };
+        if fusion::set_chunks(g, a, c).is_ok() && c >= 2 {
+            applied += 1;
         }
     }
     applied
@@ -171,6 +196,204 @@ fn prop_sim_monotone_in_comm_cost() {
     });
 }
 
+/// Cost source with a per-collective launch overhead, for pinning the
+/// "overhead charged once, not per chunk" semantics (DESIGN.md §13).
+struct Ovh;
+
+impl CostSource for Ovh {
+    fn compute_time_ms(&self, _n: &disco::graph::Node) -> f64 {
+        0.5
+    }
+    fn comm_time_ms(&self, bytes: f64) -> f64 {
+        0.1 + bytes * 1e-7
+    }
+    fn comm_overhead_ms(&self) -> f64 {
+        0.07
+    }
+}
+
+#[test]
+fn prop_chunked_sim_degenerates_to_whole_tensor() {
+    // DESIGN.md §13 degenerate-case contract: a ChunkSpec with count 1
+    // is canonically "no chunking" — the simulator must produce a
+    // BIT-identical SimResult, an identical trace, and the same
+    // fingerprint as the graph without any descriptor at all.
+    check("chunked-degenerate", PropConfig { cases: 64, seed: 0xC4C41 }, |rng| {
+        let mut g = random_graph_elems(rng, 8192);
+        random_rewrites(&mut g, rng, 6);
+        let mut one = g.clone();
+        for id in one.allreduces() {
+            one.nodes[id].chunk = Some(disco::graph::ChunkSpec::new(1));
+        }
+        prop_assert!(!one.has_chunking(), "count=1 spec counted as active chunking");
+        prop_assert!(
+            g.fingerprint() == one.fingerprint(),
+            "inactive chunk spec changed the fingerprint"
+        );
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.3) { 0.25 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.2),
+        };
+        let (ra, ta) = disco::sim::trace::capture(&g, &Unit, opts);
+        let (rb, tb) = disco::sim::trace::capture(&one, &Unit, opts);
+        prop_assert!(ra == rb, "count=1 sim diverged: {ra:?} vs {rb:?}");
+        prop_assert!(ta.len() == tb.len(), "trace lengths differ: {} vs {}", ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            prop_assert!(
+                x.name == y.name
+                    && x.start_ms == y.start_ms
+                    && x.end_ms == y.end_ms
+                    && x.comm == y.comm
+                    && x.chunk == y.chunk,
+                "trace event diverged: {x:?} vs {y:?}"
+            );
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_chunk_bytes_conserved_and_legal() {
+    // Every chunking the vocabulary can produce splits the gradient
+    // tensor EXACTLY: per-chunk bytes sum to bytes_out with zero float
+    // drift, every chunk respects the MIN_CHUNK_BYTES floor, and counts
+    // stay within [2, MAX_CHUNKS].
+    check("chunk-conservation", PropConfig { cases: 96, seed: 0xC4C42 }, |rng| {
+        let mut g = random_graph_elems(rng, 8192);
+        random_rewrites(&mut g, rng, 6);
+        if random_chunkings(&mut g, rng, 6) == 0 {
+            return CaseResult::Discard;
+        }
+        prop_assert!(g.validate().is_ok(), "chunking broke the graph");
+        for n in g.live() {
+            let k = n.chunk_count();
+            if k < 2 {
+                continue;
+            }
+            prop_assert!(n.kind == OpKind::AllReduce, "chunk spec on non-AllReduce {}", n.name);
+            prop_assert!(k <= fusion::MAX_CHUNKS, "count {k} above MAX_CHUNKS");
+            let parts = n.chunk.unwrap().chunk_bytes(n.bytes_out);
+            prop_assert!(parts.len() == k as usize, "expected {k} chunks, got {}", parts.len());
+            let sum: f64 = parts.iter().sum();
+            prop_assert!(
+                sum == n.bytes_out,
+                "chunk bytes drifted: {} vs {} on {}",
+                sum,
+                n.bytes_out,
+                n.name
+            );
+            for &p in &parts {
+                prop_assert!(
+                    p >= fusion::MIN_CHUNK_BYTES,
+                    "chunk of {p} bytes below floor on {}",
+                    n.name
+                );
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_chunk_stream_tiles_the_collective() {
+    // Start/wait co-scheduling contract at the trace level: a chunked
+    // AllReduce's chunk events tile its channel span contiguously —
+    // chunk 1's CommStart is exactly one per-collective overhead after
+    // the collective's CommStart (overhead charged ONCE, not per chunk),
+    // each chunk's CommWait is its land time, and the last land IS the
+    // collective's completion.
+    check("chunk-tiling", PropConfig { cases: 64, seed: 0xC4C43 }, |rng| {
+        let mut g = random_graph_elems(rng, 8192);
+        random_rewrites(&mut g, rng, 4);
+        if random_chunkings(&mut g, rng, 5) == 0 {
+            return CaseResult::Discard;
+        }
+        let (_r, tr) = disco::sim::trace::capture(&g, &Ovh, SimOptions::default());
+        for n in g.live().filter(|n| n.chunk_count() >= 2) {
+            let k = n.chunk_count();
+            let Some(whole) = tr.iter().find(|e| e.comm && e.chunk.is_none() && e.name == n.name)
+            else {
+                return CaseResult::Fail(format!("no collective span for {}", n.name));
+            };
+            let prefix = format!("{}[", n.name);
+            let chunks: Vec<_> = tr
+                .iter()
+                .filter(|e| e.chunk.is_some() && e.name.starts_with(&prefix))
+                .collect();
+            prop_assert!(
+                chunks.len() == k as usize,
+                "{}: {} chunk events for count {k}",
+                n.name,
+                chunks.len()
+            );
+            for (i, c) in chunks.iter().enumerate() {
+                prop_assert!(
+                    c.chunk == Some((i as u32 + 1, k)),
+                    "{}: chunk indices out of order",
+                    n.name
+                );
+                prop_assert!(c.end_ms >= c.start_ms, "negative-span chunk on {}", n.name);
+            }
+            // Overhead once: chunk 1 starts exactly overhead after the
+            // collective (Ovh's 0.07 ms, clamped to the transfer).
+            let want_first = whole.start_ms + 0.07f64.min(whole.end_ms - whole.start_ms);
+            prop_assert!(
+                chunks[0].start_ms == want_first,
+                "{}: first chunk starts {} not {}",
+                n.name,
+                chunks[0].start_ms,
+                want_first
+            );
+            for w in chunks.windows(2) {
+                prop_assert!(
+                    w[0].end_ms == w[1].start_ms,
+                    "{}: chunk stream not contiguous",
+                    n.name
+                );
+            }
+            prop_assert!(
+                chunks[k as usize - 1].end_ms == whole.end_ms,
+                "{}: last chunk lands at {} but collective completes at {}",
+                n.name,
+                chunks[k as usize - 1].end_ms,
+                whole.end_ms
+            );
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_chunked_never_slower_than_whole_tensor() {
+    // EXACT monotonicity on the flat in-order channel: the dual-track
+    // clamp guarantees a chunked graph's makespan is never worse than
+    // the same graph with every chunk descriptor stripped — no epsilon.
+    check("chunk-monotone", PropConfig { cases: 96, seed: 0xC4C44 }, |rng| {
+        let mut g = random_graph_elems(rng, 8192);
+        random_rewrites(&mut g, rng, 6);
+        if random_chunkings(&mut g, rng, 6) == 0 {
+            return CaseResult::Discard;
+        }
+        let mut flat = g.clone();
+        for id in flat.allreduces() {
+            flat.nodes[id].chunk = None;
+        }
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.3) { 0.25 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.2),
+        };
+        let chunked = simulate(&g, &Ovh, opts);
+        let whole = simulate(&flat, &Ovh, opts);
+        prop_assert!(
+            chunked.makespan_ms <= whole.makespan_ms,
+            "chunking made it slower: {} vs {}",
+            chunked.makespan_ms,
+            whole.makespan_ms
+        );
+        CaseResult::Pass
+    });
+}
+
 #[test]
 fn prop_sim_workspace_reuse_identical() {
     // One workspace reused across every case and graph size must produce
@@ -225,6 +448,58 @@ fn random_tracked_rewrites(
                 frontier.push(b);
                 fx.extend_frontier(g, frontier);
                 applied += 1;
+            }
+        }
+    }
+    applied
+}
+
+/// [`random_tracked_rewrites`] with the chunking method mixed in — the
+/// full mutation vocabulary the chunking-enabled search draws from.
+fn random_tracked_rewrites_chunked(
+    g: &mut TrainingGraph,
+    rng: &mut Rng,
+    tries: usize,
+    frontier: &mut Vec<NodeId>,
+) -> usize {
+    let mut cset = CandidateSet::build(g);
+    let mut applied = 0;
+    for _ in 0..tries {
+        match rng.gen_range(10) {
+            0..=4 => {
+                let Some(&(p, s)) = rng.choose(cset.op_pairs()) else { continue };
+                let kind = if rng.gen_bool(0.5) {
+                    FusionKind::NonDuplicate
+                } else {
+                    FusionKind::Duplicate
+                };
+                if let Ok(fx) = cset.apply_op_fusion(g, p, s, kind) {
+                    frontier.push(p);
+                    frontier.push(s);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
+            }
+            5..=7 => {
+                let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+                let nbrs = fusion::ar_neighbors(g, a);
+                let Some(&b) = rng.choose(&nbrs) else { continue };
+                if let Ok(fx) = cset.apply_ar_fusion(g, a, b) {
+                    frontier.push(a);
+                    frontier.push(b);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
+            }
+            _ => {
+                let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+                let counts = fusion::chunk_candidates(g, a, fusion::MAX_CHUNKS);
+                let Some(&c) = rng.choose(&counts) else { continue };
+                if let Ok(fx) = cset.apply_chunking(g, a, c) {
+                    frontier.push(a);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
             }
         }
     }
@@ -337,6 +612,74 @@ fn prop_delta_sim_matches_full() {
         prop_assert!(
             delta == full,
             "delta sim diverged (every={every}, opts={opts:?}): {delta:?} vs {full:?}"
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_chunked_delta_sim_matches_full() {
+    // The tentpole contract extended to chunked frontiers: with
+    // SetChunks in the mutation mix (and possibly-chunked parents), a
+    // checkpoint restore + suffix replay must stay BIT-IDENTICAL to a
+    // full child simulation — across chunked->chunked,
+    // chunked->unchunked and unchunked->chunked parent/child pairs.
+    check("delta-sim-vs-full-chunked", PropConfig { cases: 96, seed: 0xDE17C }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let mut parent = random_graph_elems(rng, 8192);
+        let prof = disco::profiler::profile(&parent, &device, &cluster, 1, 5);
+        let parent_muts = rng.gen_range_inclusive(0, 4);
+        random_rewrites(&mut parent, rng, parent_muts);
+        if rng.gen_bool(0.5) {
+            random_chunkings(&mut parent, rng, 3);
+        }
+        let mut child = parent.clone();
+        let mut frontier: Vec<NodeId> = Vec::new();
+        let tries = rng.gen_range_inclusive(1, 6);
+        if random_tracked_rewrites_chunked(&mut child, rng, tries, &mut frontier) == 0 {
+            return CaseResult::Discard;
+        }
+        let est = CostEstimator::oracle(&prof, &device);
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.4) { 0.3 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.25),
+        };
+        let every = match rng.gen_range(4) {
+            0 => 1,
+            1 => rng.gen_range_inclusive(2, 9),
+            2 => 0, // auto
+            _ => 10_000,
+        };
+        let mut ws = SimWorkspace::new();
+        let parent_table = CostTable::build(&parent, &est);
+        let mut log = CheckpointLog::new();
+        let _ = simulate_ckpt_in(
+            &parent,
+            &parent_table,
+            opts,
+            &mut NoRecord,
+            &mut ws,
+            &mut log,
+            every,
+        );
+        let mut child_table = CostTable::new();
+        child_table.extend_in(&parent_table, &child, &est);
+        let delta = simulate_delta(
+            &parent,
+            &log,
+            &child,
+            &frontier,
+            &child_table,
+            opts,
+            &mut NoRecord,
+            &mut ws,
+        );
+        let full =
+            simulate_table_in(&child, &child_table, opts, &mut NoRecord, &mut SimWorkspace::new());
+        prop_assert!(
+            delta == full,
+            "chunked delta sim diverged (every={every}, opts={opts:?}): {delta:?} vs {full:?}"
         );
         CaseResult::Pass
     });
@@ -534,11 +877,16 @@ fn prop_coordinator_consistent_broadcast() {
 fn prop_serial_roundtrip_lossless() {
     // JSON (de)serialization must preserve EVERYTHING the strategy
     // service's canonical fingerprint hashes — shapes, dtypes, flops,
-    // byte traffic, fused-group contents, tombstones and duplicate
-    // operand edges — across arbitrary post-fusion graph states.
+    // byte traffic, fused-group contents, tombstones, duplicate operand
+    // edges and chunk descriptors — across arbitrary post-fusion (and
+    // post-chunking) graph states.
     check("serial-roundtrip", PropConfig { cases: 48, seed: 0x5E41A1 }, |rng| {
-        let mut g = random_graph(rng);
+        // Half the cases use gradients large enough for the chunking
+        // vocabulary to apply, so chunk specs actually ride the wire.
+        let elems = if rng.gen_bool(0.5) { 8192 } else { 256 };
+        let mut g = random_graph_elems(rng, elems);
         random_rewrites(&mut g, rng, rng.gen_range_inclusive(0, 8));
+        random_chunkings(&mut g, rng, rng.gen_range_inclusive(0, 4));
         let text = g.to_json();
         let back = match TrainingGraph::from_json(&text) {
             Ok(b) => b,

@@ -350,6 +350,82 @@ fn store_hit_survives_reopen() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// Record-format compatibility (DESIGN.md §13): a v1 JSONL line — the
+/// pre-chunking record format, whose mutation list only carries the
+/// "ops"/"ar" tags — must load under the v2 store and serve a store hit
+/// that replays UNCHUNKED with zero simulator invocations. Old caches
+/// are never corrupted and never silently re-searched.
+#[test]
+fn v1_store_lines_replay_unchunked_with_zero_sim_calls() {
+    let dir = std::env::temp_dir().join(format!("disco-v1-compat-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v1.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let g = workload(0);
+    let d = DeviceModel::gtx1080ti();
+    let c = Cluster::cluster_a();
+    let prof = profiler::profile(&g, &d, &c, 2, 5);
+    let est = CostEstimator::oracle(&prof, &d);
+    let cfg = quick_cfg(); // chunking off: the paper's fusion-only vocabulary
+    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let warm = WarmOptions::default();
+    let first_cost = {
+        let mut store = PlanStore::open(&path, 16).unwrap();
+        plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap().best_cost_ms
+    };
+
+    // Downgrade every line to record version 1. With chunking off the
+    // mutation list is already v1-shaped, so the rewritten file is
+    // byte-for-byte what a pre-chunking build would have written.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"v\":2"), "expected v2 records on disk: {text}");
+    assert!(!text.contains("\"t\":\"ck\""), "fusion-only plan must carry no chunk mutations");
+    std::fs::write(&path, text.replace("\"v\":2", "\"v\":1")).unwrap();
+
+    let mut reopened = PlanStore::open(&path, 16).unwrap();
+    assert_eq!(reopened.skipped, 0, "v1 lines must still parse under the v2 store");
+    let out = plan_with_store(&g, &PanicCost, &cfg, env, &mut reopened, &warm).unwrap();
+    assert_eq!(out.source, PlanSource::Store);
+    assert_eq!(out.evals, 0);
+    assert_eq!(out.best_cost_ms, first_cost);
+    assert!(!out.best.has_chunking(), "v1 record must replay unchunked");
+    assert!(out.best.validate().is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A plan whose mutation path includes chunk rewrites persists to JSONL
+/// with the v2 "ck" tag and reloads losslessly across a reopen.
+#[test]
+fn chunked_plan_record_survives_reopen() {
+    use disco::fusion::{FusionKind, Mutation};
+    let dir = std::env::temp_dir().join(format!("disco-ck-store-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let mut rec = shared_record("ck-key", 3.0);
+    rec.muts = vec![
+        Mutation::FuseOps { pred: 1, succ: 2, kind: FusionKind::NonDuplicate },
+        Mutation::FuseAllReduce { a: 4, b: 5 },
+        Mutation::SetChunks { ar: 7, count: 8 },
+    ];
+    {
+        let mut store = PlanStore::open(&path, 8).unwrap();
+        store.put(rec.clone()).unwrap();
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"v\":2"), "chunk-carrying record must be versioned v2");
+    assert!(text.contains("\"t\":\"ck\""), "chunk mutation missing from the wire: {text}");
+
+    let reloaded = PlanStore::open(&path, 8).unwrap();
+    assert_eq!(reloaded.skipped, 0);
+    let got = reloaded.peek("ck-key").expect("chunked record lost across reopen");
+    assert_eq!(got.muts, rec.muts, "mutation path drifted across the JSONL round-trip");
+    assert_eq!(got.best_cost_ms, rec.best_cost_ms);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ---------------------------------------------------------------------------
 // TCP front-end
 // ---------------------------------------------------------------------------
