@@ -6,7 +6,9 @@
 //!                 [--max-chunks 8] [--out strategy.json]
 //! disco serve     [--addr 127.0.0.1:7077] [--store plans.jsonl|none]
 //!                 [--capacity 512] [--max-conns 256] [--no-warm]
-//!                 [--no-nearest] [--stop]
+//!                 [--no-nearest] [--cold-budget-ms 0] [--max-cold 8]
+//!                 [--metrics] [--stop]
+//! disco store     fsck [--store plans.jsonl] [--repair]
 //! disco plan      --model transformer [--graph module.json] [--cluster a]
 //!                 [--addr HOST:PORT] [--store plans.jsonl] [--unchanged 150]
 //!                 [--chunking] [--max-chunks 8]
@@ -148,6 +150,8 @@ fn serve_options(args: &Args) -> Result<disco::service::ServeOptions> {
     }
     opts.capacity = args.get_usize("capacity", opts.capacity);
     opts.max_conns = args.get_usize("max-conns", opts.max_conns);
+    opts.cold_budget_ms = args.get_f64("cold-budget-ms", opts.cold_budget_ms).max(0.0);
+    opts.max_cold = args.get_usize("max-cold", opts.max_cold);
     if args.has_flag("no-warm") {
         opts.warm.enabled = false;
     }
@@ -159,6 +163,27 @@ fn serve_options(args: &Args) -> Result<disco::service::ServeOptions> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = serve_options(args)?;
+    if args.has_flag("metrics") {
+        let resp = disco::service::request(
+            &opts.addr,
+            &disco::util::json::Json::obj(vec![(
+                "cmd",
+                disco::util::json::Json::Str("stats".into()),
+            )]),
+        )?;
+        if resp.get("ok").as_bool() != Some(true) {
+            return Err(anyhow!("stats request failed: {}", resp.to_string()));
+        }
+        // BTreeMap keys iterate sorted — stable, grep-friendly output.
+        if let disco::util::json::Json::Obj(fields) = &resp {
+            for (k, v) in fields {
+                if k != "ok" && k != "cmd" {
+                    println!("{k:<24} {}", v.to_string());
+                }
+            }
+        }
+        return Ok(());
+    }
     if args.has_flag("stop") {
         let resp = disco::service::request(
             &opts.addr,
@@ -183,6 +208,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts.warm.nearest,
     );
     server.run()
+}
+
+/// `disco store fsck [--store plans.jsonl] [--repair]` — offline store
+/// integrity check (DESIGN.md §14). Prints the recovery report; exits 1
+/// when damage is found and `--repair` was not given.
+fn cmd_store(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    if sub != "fsck" {
+        return Err(anyhow!("usage: disco store fsck [--store plans.jsonl] [--repair]"));
+    }
+    let path = args.get_or("store", "plans.jsonl");
+    let repair = args.has_flag("repair");
+    let report = disco::service::fsck(std::path::Path::new(path), repair)?;
+    println!("{path}: {report}");
+    if !report.is_clean() && !report.repaired {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 /// The graph a `plan` request is about: an explicit serialized module
@@ -275,7 +318,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
             }
             cfg.max_chunks = args.get_usize("max-chunks", cfg.max_chunks as usize) as u32;
             let est_name = if estimator == "analytical" { "analytical" } else { "oracle" };
-            let env = disco::service::env_fingerprint(&cluster, &device, est_name, &cfg);
+            // Fingerprint covers the estimator *content* (trained gnn
+            // artifact bytes), not just its name — retraining invalidates
+            // cached plans (DESIGN.md §11).
+            let est_fp =
+                disco::service::EstimatorFp::resolve(&estimator, est_name, &Manifest::default_dir());
+            let env = disco::service::env_fingerprint(&cluster, &device, &est_fp, &cfg);
             let gfp = disco::service::graph_fingerprint(&graph)
                 .map_err(|e| anyhow!("unfingerprintable graph: {e}"))?;
             let key_hex = disco::service::plan_key(gfp, env).hex();
@@ -699,7 +747,7 @@ fn cmd_import_hlo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: disco <search|serve|plan|enact|worker|profile|bench|train-gnn|e2e|import-hlo|run-hlo|gen-artifacts> [options]
+const USAGE: &str = "usage: disco <search|serve|store|plan|enact|worker|profile|bench|train-gnn|e2e|import-hlo|run-hlo|gen-artifacts> [options]
   run `disco <cmd> --help` conventions: see rust/src/main.rs module docs";
 
 fn main() {
@@ -717,6 +765,7 @@ fn main() {
     let result = match cmd {
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "store" => cmd_store(&args),
         "plan" => cmd_plan(&args),
         "enact" => cmd_enact(&args),
         "worker" => cmd_worker(&args),

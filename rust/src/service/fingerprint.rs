@@ -256,13 +256,64 @@ pub fn arena_fingerprint(g: &TrainingGraph) -> u64 {
     f.finish()
 }
 
+/// Identity of the cost estimator as a cache-key component: its name
+/// plus a hash of its *content* (trained-parameter artifact or
+/// calibration state). Name alone is not enough — retraining the GNN
+/// estimator changes every cost it predicts, so cached plans searched
+/// under the old parameters are stale even though the name `"gnn"` is
+/// unchanged (the ROADMAP-named invalidation bug). `content == 0` means
+/// "content-free" (analytical / oracle estimators, or a named estimator
+/// whose artifact is absent) and hashes exactly as the pre-content
+/// format did, so those keys stay warm across the upgrade.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EstimatorFp {
+    pub name: String,
+    pub content: u64,
+}
+
+impl EstimatorFp {
+    /// A content-free estimator identity (analytical, oracle).
+    pub fn named(name: &str) -> EstimatorFp {
+        EstimatorFp { name: name.to_string(), content: 0 }
+    }
+
+    /// Identity of a parameterised estimator: the serialized parameter
+    /// bytes are hashed so any retrain flips the fingerprint and a
+    /// byte-identical reload does not.
+    pub fn with_params(name: &str, params: &[u8]) -> EstimatorFp {
+        let mut f = Fnv64::new(0xE57A_7E01);
+        f.usize(params.len());
+        for &b in params {
+            f.byte(b);
+        }
+        EstimatorFp { name: name.to_string(), content: f.finish() }
+    }
+
+    /// Resolve the identity for a request: `requested` is the client's
+    /// estimator string, `serving` the backend actually used. A `"gnn"`
+    /// request folds the trained-parameter artifact
+    /// (`<artifacts>/gnn_trained.f32`, written by the training
+    /// pipeline) into the key when present — the artifact state is part
+    /// of the environment, so retraining invalidates cached plans.
+    /// Absent artifact (or any other estimator) is content-free.
+    pub fn resolve(requested: &str, serving: &str, artifacts: &std::path::Path) -> EstimatorFp {
+        if requested == "gnn" {
+            if let Ok(bytes) = std::fs::read(artifacts.join("gnn_trained.f32")) {
+                return EstimatorFp::with_params(serving, &bytes);
+            }
+        }
+        EstimatorFp::named(serving)
+    }
+}
+
 /// Fingerprint of everything outside the graph that determines a search
-/// result: cluster, device, estimator backend, simulation knobs and the
-/// trajectory-relevant search hyper-parameters.
+/// result: cluster, device, estimator identity (name *and* content —
+/// see [`EstimatorFp`]), simulation knobs and the trajectory-relevant
+/// search hyper-parameters.
 pub fn env_fingerprint(
     cluster: &Cluster,
     device: &DeviceModel,
-    estimator: &str,
+    estimator: &EstimatorFp,
     cfg: &SearchConfig,
 ) -> Fingerprint {
     let lane = |seed: u64| {
@@ -280,7 +331,14 @@ pub fn env_fingerprint(
         f.f64(d.launch_overhead_ms);
         f.f64(d.onchip_bytes);
         f.f64(d.noise_sigma);
-        f.str(estimator);
+        f.str(&estimator.name);
+        // Folded only when nonzero: content-free estimators hash exactly
+        // as the name-only format did, so analytical/oracle plan keys
+        // stay warm across the content-hash upgrade.
+        if estimator.content != 0 {
+            f.byte(1);
+            f.u64(estimator.content);
+        }
         f.f64(cfg.alpha);
         f.usize(cfg.beta);
         f.usize(cfg.unchanged_limit);
@@ -464,22 +522,71 @@ mod tests {
     fn env_fingerprint_sensitive_to_cluster_and_params() {
         let cfg = SearchConfig::default();
         let d = DeviceModel::gtx1080ti();
-        let a = env_fingerprint(&Cluster::cluster_a(), &d, "analytical", &cfg);
-        let b = env_fingerprint(&Cluster::cluster_b(), &d, "analytical", &cfg);
+        let analytical = EstimatorFp::named("analytical");
+        let a = env_fingerprint(&Cluster::cluster_a(), &d, &analytical, &cfg);
+        let b = env_fingerprint(&Cluster::cluster_b(), &d, &analytical, &cfg);
         assert_ne!(a, b);
-        let oracle = env_fingerprint(&Cluster::cluster_a(), &d, "oracle", &cfg);
+        let oracle = env_fingerprint(&Cluster::cluster_a(), &d, &EstimatorFp::named("oracle"), &cfg);
         assert_ne!(a, oracle);
-        let seeded =
-            env_fingerprint(&Cluster::cluster_a(), &d, "analytical", &SearchConfig { seed: 1, ..SearchConfig::default() });
+        let seeded = env_fingerprint(
+            &Cluster::cluster_a(),
+            &d,
+            &analytical,
+            &SearchConfig { seed: 1, ..SearchConfig::default() },
+        );
         assert_ne!(a, seeded);
         // Engine toggles that never change results do not change the key.
         let toggled = env_fingerprint(
             &Cluster::cluster_a(),
             &d,
-            "analytical",
+            &analytical,
             &SearchConfig { eval_threads: 1, delta_sim: false, ..SearchConfig::default() },
         );
         assert_eq!(a, toggled);
+    }
+
+    #[test]
+    fn estimator_content_flips_env_fingerprint() {
+        let cfg = SearchConfig::default();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let named = env_fingerprint(&c, &d, &EstimatorFp::named("gnn"), &cfg);
+        let trained_a =
+            env_fingerprint(&c, &d, &EstimatorFp::with_params("gnn", &[1, 2, 3]), &cfg);
+        let trained_a2 =
+            env_fingerprint(&c, &d, &EstimatorFp::with_params("gnn", &[1, 2, 3]), &cfg);
+        let trained_b =
+            env_fingerprint(&c, &d, &EstimatorFp::with_params("gnn", &[1, 2, 4]), &cfg);
+        // Retraining (different parameter bytes) invalidates; a
+        // byte-identical reload of the same artifact does not.
+        assert_ne!(named, trained_a, "parameter content must enter the key");
+        assert_eq!(trained_a, trained_a2, "same-content reload must keep the key");
+        assert_ne!(trained_a, trained_b, "retraining must flip the key");
+    }
+
+    #[test]
+    fn estimator_resolve_tracks_artifact_state() {
+        let dir = std::env::temp_dir().join(format!("disco-estfp-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let artifact = dir.join("gnn_trained.f32");
+        let _ = std::fs::remove_file(&artifact);
+        // Absent artifact → content-free (keys stay warm across upgrade);
+        // non-gnn estimators never read the artifact at all.
+        assert_eq!(EstimatorFp::resolve("gnn", "oracle", &dir), EstimatorFp::named("oracle"));
+        assert_eq!(
+            EstimatorFp::resolve("analytical", "analytical", &dir),
+            EstimatorFp::named("analytical")
+        );
+        std::fs::write(&artifact, [0u8, 1, 2, 3]).unwrap();
+        let first = EstimatorFp::resolve("gnn", "oracle", &dir);
+        assert_ne!(first.content, 0);
+        // Same-name, same-bytes reload: key unchanged.
+        std::fs::write(&artifact, [0u8, 1, 2, 3]).unwrap();
+        assert_eq!(EstimatorFp::resolve("gnn", "oracle", &dir), first);
+        // Retrain: key flips.
+        std::fs::write(&artifact, [9u8, 9, 9, 9]).unwrap();
+        assert_ne!(EstimatorFp::resolve("gnn", "oracle", &dir), first);
+        let _ = std::fs::remove_file(&artifact);
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Seeded disk-fault injection for the plan store (DESIGN.md §14).
+//!
+//! The enactment path earned its fault-tolerance claims through
+//! [`crate::coordinator::fault`]'s deterministic chaos plans; this module
+//! applies the same discipline to store durability. A [`DiskFaultPlan`]
+//! is parsed from a compact spec — `torn@N:BYTES,err@N,slow@N:MS` — and
+//! threaded into [`super::store::PlanStore::open_with`]. Every *logical*
+//! store I/O operation (one file read, one record append, one snapshot
+//! write, one rename) consumes one slot of a shared 1-based op counter;
+//! when the counter hits a fault's `N`, that operation fails (or stalls)
+//! deterministically.
+//!
+//! Counting logical operations rather than raw syscalls keeps op indices
+//! stable across buffer sizes and platforms, which is what makes the
+//! crash-recovery tests in `tests/service.rs` reproducible. The op order
+//! is documented on [`DiskFaultPlan`].
+//!
+//! Fault semantics:
+//! * `err@N` — the Nth op returns `io::ErrorKind::Other` ("injected disk
+//!   error"), modeling a read-only or failing disk.
+//! * `torn@N:BYTES` — the Nth op, if it is a write, lands only its first
+//!   `BYTES` bytes — with the final landed byte garbled by a seeded XOR —
+//!   then errors, modeling a crash mid-append (the classic torn tail).
+//! * `slow@N:MS` — the Nth op sleeps `MS` milliseconds first, modeling a
+//!   saturated device (lock-contention and deadline tests).
+
+use crate::util::rng::Rng;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One injected disk fault, armed at a specific logical op index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DiskFault {
+    /// Crash mid-write: land `bytes` bytes (last one garbled), then fail.
+    Torn { op: u64, bytes: usize },
+    /// Hard I/O error.
+    Err { op: u64 },
+    /// Stall for `ms` milliseconds, then proceed normally.
+    Slow { op: u64, ms: u64 },
+}
+
+impl DiskFault {
+    pub fn op(&self) -> u64 {
+        match *self {
+            DiskFault::Torn { op, .. } | DiskFault::Err { op } | DiskFault::Slow { op, .. } => op,
+        }
+    }
+}
+
+/// A seeded, shareable schedule of disk faults over the store's logical
+/// op sequence.
+///
+/// Op numbering (1-based, incremented per logical store operation):
+/// * `PlanStore::open_with` on an existing file: one **read** op (plus a
+///   compaction's read/snapshot/rename ops when recovery rewrites).
+/// * `PlanStore::put`: one **append** op; if the compaction threshold
+///   trips, a **read**, a **snapshot write**, and a **rename** op follow.
+/// * `PlanStore::compact`: **read**, **snapshot write**, **rename**.
+///
+/// Lock-file housekeeping is deliberately *not* counted: it would make
+/// indices depend on lock contention and stale-steal timing.
+#[derive(Debug)]
+pub struct DiskFaultPlan {
+    pub seed: u64,
+    pub faults: Vec<DiskFault>,
+    ops: AtomicU64,
+}
+
+impl DiskFaultPlan {
+    pub fn new(seed: u64, faults: Vec<DiskFault>) -> DiskFaultPlan {
+        DiskFaultPlan { seed, faults, ops: AtomicU64::new(0) }
+    }
+
+    /// Parse a spec like `"torn@2:10,err@5,slow@1:40"`. Clauses separate
+    /// on `,` or `|`; each is `kind@op[:arg]` with a 1-based op index —
+    /// the same grammar family as `FaultPlan::parse` (DESIGN.md §12).
+    pub fn parse(spec: &str, seed: u64) -> Result<DiskFaultPlan, String> {
+        let mut faults = Vec::new();
+        for clause in spec.split([',', '|']) {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("disk-fault clause `{clause}`: missing `@`"))?;
+            let num = |what: &str, s: &str| -> Result<u64, String> {
+                s.trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("disk-fault clause `{clause}`: bad {what} `{s}`"))
+            };
+            let fault = match kind.trim() {
+                "torn" => {
+                    let (op, bytes) = rest
+                        .split_once(':')
+                        .ok_or_else(|| format!("disk-fault clause `{clause}`: torn needs `:BYTES`"))?;
+                    DiskFault::Torn { op: num("op", op)?, bytes: num("bytes", bytes)? as usize }
+                }
+                "err" => DiskFault::Err { op: num("op", rest)? },
+                "slow" => {
+                    let (op, ms) = rest
+                        .split_once(':')
+                        .ok_or_else(|| format!("disk-fault clause `{clause}`: slow needs `:MS`"))?;
+                    DiskFault::Slow { op: num("op", op)?, ms: num("ms", ms)? }
+                }
+                other => return Err(format!("unknown disk-fault kind `{other}` in `{clause}`")),
+            };
+            if fault.op() == 0 {
+                return Err(format!("disk-fault clause `{clause}`: op index is 1-based"));
+            }
+            faults.push(fault);
+        }
+        Ok(DiskFaultPlan::new(seed, faults))
+    }
+
+    /// Canonical spec text (parse∘to_spec is identity up to separators).
+    pub fn to_spec(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| match *f {
+                DiskFault::Torn { op, bytes } => format!("torn@{op}:{bytes}"),
+                DiskFault::Err { op } => format!("err@{op}"),
+                DiskFault::Slow { op, ms } => format!("slow@{op}:{ms}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Consume one logical-op slot and return the fault armed for it, if
+    /// any. Thread-safe; every store I/O path calls this exactly once.
+    pub fn begin_op(&self) -> Option<DiskFault> {
+        let op = self.ops.fetch_add(1, Ordering::SeqCst) + 1;
+        self.faults.iter().find(|f| f.op() == op).cloned()
+    }
+
+    /// Logical ops issued so far (test introspection).
+    pub fn ops_issued(&self) -> u64 {
+        self.ops.load(Ordering::SeqCst)
+    }
+}
+
+/// The injected-error constructor, shared so tests can match on the text.
+pub fn injected_error() -> io::Error {
+    io::Error::other("injected disk fault")
+}
+
+/// Read/Write/flush shim wrapping one file handle for one logical op,
+/// applying at most one [`DiskFault`] to it. The store constructs one
+/// `FaultFile` per logical operation with the fault (if any) that
+/// [`DiskFaultPlan::begin_op`] armed for it; with no plan attached the
+/// wrapper is a transparent pass-through.
+#[derive(Debug)]
+pub struct FaultFile<F> {
+    inner: F,
+    fault: Option<DiskFault>,
+    seed: u64,
+    /// One-shot latch: a fault fires on the first I/O call it applies to.
+    tripped: bool,
+}
+
+impl<F> FaultFile<F> {
+    pub fn new(inner: F, fault: Option<DiskFault>, seed: u64) -> FaultFile<F> {
+        FaultFile { inner, fault, seed, tripped: false }
+    }
+
+    pub fn into_inner(self) -> F {
+        self.inner
+    }
+
+    /// Take the armed fault if it should fire now, marking it tripped.
+    fn trip(&mut self) -> Option<DiskFault> {
+        if self.tripped {
+            return None;
+        }
+        self.tripped = self.fault.is_some();
+        self.fault.clone()
+    }
+}
+
+impl<F: Read> Read for FaultFile<F> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self.trip() {
+            Some(DiskFault::Err { .. }) => Err(injected_error()),
+            Some(DiskFault::Slow { ms, .. }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.inner.read(buf)
+            }
+            // Torn is a write-side fault; reads pass through.
+            Some(DiskFault::Torn { .. }) | None => self.inner.read(buf),
+        }
+    }
+}
+
+impl<F: Write> Write for FaultFile<F> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self.trip() {
+            None => self.inner.write(buf),
+            Some(DiskFault::Err { .. }) => Err(injected_error()),
+            Some(DiskFault::Slow { ms, .. }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.inner.write(buf)
+            }
+            Some(DiskFault::Torn { op, bytes }) => {
+                let n = bytes.min(buf.len());
+                let mut partial = buf[..n].to_vec();
+                if let Some(last) = partial.last_mut() {
+                    // Seeded garble of the final landed byte: a torn
+                    // sector rarely ends on a clean byte boundary, and
+                    // the XOR is derived from (seed, op) so the damage
+                    // is reproducible but varies across seeds.
+                    let mut rng = Rng::new(self.seed ^ op.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    *last ^= (rng.gen_range(255) + 1) as u8;
+                }
+                self.inner.write_all(&partial)?;
+                let _ = self.inner.flush();
+                Err(injected_error())
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self.trip() {
+            Some(DiskFault::Err { .. }) => Err(injected_error()),
+            Some(DiskFault::Slow { ms, .. }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.inner.flush()
+            }
+            _ => self.inner.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_roundtrips_through_to_spec() {
+        let plan = DiskFaultPlan::parse("torn@2:10, err@5 | slow@1:40", 7).unwrap();
+        assert_eq!(plan.to_spec(), "torn@2:10,err@5,slow@1:40");
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(plan.seed, 7);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in ["torn@2", "slow@1", "err@x", "boom@1", "torn@0:4", "err"] {
+            assert!(DiskFaultPlan::parse(bad, 0).is_err(), "`{bad}` should not parse");
+        }
+        assert!(DiskFaultPlan::parse("", 0).unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn op_counter_arms_the_right_operation() {
+        let plan = DiskFaultPlan::parse("err@2", 0).unwrap();
+        assert!(plan.begin_op().is_none()); // op 1
+        assert!(matches!(plan.begin_op(), Some(DiskFault::Err { op: 2 }))); // op 2
+        assert!(plan.begin_op().is_none()); // op 3
+        assert_eq!(plan.ops_issued(), 3);
+    }
+
+    #[test]
+    fn torn_write_lands_garbled_prefix_then_errors() {
+        let mut sink = FaultFile::new(Vec::new(), Some(DiskFault::Torn { op: 1, bytes: 4 }), 42);
+        let err = sink.write_all(b"abcdefgh").unwrap_err();
+        assert_eq!(err.to_string(), injected_error().to_string());
+        let landed = sink.into_inner();
+        assert_eq!(landed.len(), 4);
+        assert_eq!(&landed[..3], b"abc");
+        assert_ne!(landed[3], b'd', "final landed byte must be garbled");
+        // Same seed → same garble; different seed → (almost surely) different.
+        let mut again = FaultFile::new(Vec::new(), Some(DiskFault::Torn { op: 1, bytes: 4 }), 42);
+        let _ = again.write_all(b"abcdefgh");
+        assert_eq!(again.into_inner(), landed);
+    }
+
+    #[test]
+    fn err_fault_fails_reads_writes_and_flushes_once() {
+        let mut f = FaultFile::new(Cursor::new(b"data".to_vec()), Some(DiskFault::Err { op: 1 }), 0);
+        let mut buf = [0u8; 4];
+        assert!(f.read(&mut buf).is_err());
+        // The latch tripped: subsequent calls pass through.
+        assert_eq!(f.read(&mut buf).unwrap(), 4);
+        let mut w = FaultFile::new(Vec::new(), Some(DiskFault::Err { op: 3 }), 0);
+        assert!(w.flush().is_err());
+        assert!(w.write_all(b"ok").is_ok());
+    }
+
+    #[test]
+    fn passthrough_without_fault() {
+        let mut f = FaultFile::new(Vec::new(), None, 0);
+        f.write_all(b"hello").unwrap();
+        f.flush().unwrap();
+        assert_eq!(f.into_inner(), b"hello");
+    }
+}

@@ -11,23 +11,30 @@
 //! plans instead of rediscovering their rewrites.
 //!
 //! * [`fingerprint`] — relabeling-invariant graph hashing + environment
-//!   keys + similarity sketches;
-//! * [`store`] — the persistent JSONL plan store with a bounded LRU
-//!   index;
+//!   keys (estimator name *and* content) + similarity sketches;
+//! * [`store`] — the persistent JSONL plan store with checksummed v3
+//!   framing, crash recovery and a bounded LRU index;
+//! * [`io_fault`] — seeded disk-fault injection behind the store's
+//!   constructor hook (the §14 durability proofs);
 //! * [`warm`] — hit → warm → cold plan resolution;
 //! * [`server`] — the threaded TCP front-end with per-fingerprint request
-//!   coalescing.
+//!   coalescing and cold-search admission control.
 
 pub mod fingerprint;
+pub mod io_fault;
 pub mod server;
 pub mod store;
 pub mod warm;
 
 pub use fingerprint::{
-    arena_fingerprint, env_fingerprint, graph_fingerprint, plan_key, Fingerprint, GraphSketch,
+    arena_fingerprint, env_fingerprint, graph_fingerprint, plan_key, EstimatorFp, Fingerprint,
+    GraphSketch,
 };
+pub use io_fault::{DiskFault, DiskFaultPlan, FaultFile};
 pub use server::{request, Server, ServeOptions};
-pub use store::{open_store, PlanRecord, PlanStore, RECORD_VERSION};
+pub use store::{
+    fsck, open_store, PlanRecord, PlanStore, RecoveryReport, StoreError, RECORD_VERSION,
+};
 pub use warm::{plan_with_store, try_replay_hit, PlanOutcome, PlanSource, WarmOptions};
 
 /// Config-file `service` section (`disco serve --config svc.json`): store
@@ -43,6 +50,12 @@ pub struct ServiceConfig {
     pub nearest: bool,
     /// Connection limit before the server sheds load.
     pub max_conns: usize,
+    /// Default cold-search deadline budget in ms (0 = unlimited);
+    /// requests override with `budget_ms`.
+    pub cold_budget_ms: f64,
+    /// Concurrent cold-search cap (separate from `max_conns`; 0 admits
+    /// none — a replay-only server).
+    pub max_cold: usize,
 }
 
 impl Default for ServiceConfig {
@@ -54,6 +67,8 @@ impl Default for ServiceConfig {
             warm_start: true,
             nearest: true,
             max_conns: 256,
+            cold_budget_ms: 0.0,
+            max_cold: 8,
         }
     }
 }
@@ -71,6 +86,8 @@ impl ServiceConfig {
                 ..WarmOptions::default()
             },
             max_conns: self.max_conns,
+            cold_budget_ms: self.cold_budget_ms,
+            max_cold: self.max_cold,
         }
     }
 }

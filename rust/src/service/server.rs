@@ -7,13 +7,26 @@
 //!
 //! * `{"cmd":"plan", "graph":{…}, "cluster":"a|b|single",
 //!   "estimator":"analytical|oracle|gnn", "seed":"N", "alpha":F,
-//!   "beta":N, "unchanged":N, "warm":bool}` — resolve a strategy for the
-//!   serialized [`TrainingGraph`]; everything but `graph` is optional.
+//!   "beta":N, "unchanged":N, "warm":bool, "budget_ms":F}` — resolve a
+//!   strategy for the serialized [`TrainingGraph`]; everything but
+//!   `graph` is optional.
 //!   `seed` travels as a decimal *string* (JSON numbers are f64 and
 //!   would round u64 seeds above 2^53); plain numbers are also accepted.
 //!   `warm`/`nearest` override the server's warm-start policy per
-//!   request.
-//! * `{"cmd":"stats"}` — counters + store occupancy.
+//!   request; `budget_ms` caps the cold-search deadline (default is the
+//!   server's `--cold-budget-ms`, 0 = unlimited).
+//! * `{"cmd":"stats"}` — counters + store occupancy + resolve-latency
+//!   percentiles (the `disco serve --metrics` surface).
+//!
+//! **Admission control (DESIGN.md §14):** store hits are always served,
+//! but the expensive cold path is gated twice. A per-request deadline
+//! budget bounds how long a cold resolve may take (it also caps the
+//! search's own `max_seconds`, and because `max_seconds` is part of the
+//! environment fingerprint, budgeted and unbudgeted requests get honest,
+//! distinct store keys). A cold-search concurrency cap — separate from
+//! `max_conns`, which bounds cheap connection handlers — sheds excess
+//! cold searches with a typed `retry_after` error frame instead of
+//! letting a miss storm pile up unbounded search threads.
 //! * `{"cmd":"ping"}` — liveness.
 //! * `{"cmd":"shutdown"}` — drain and stop accepting.
 //!
@@ -27,7 +40,7 @@
 //! — asserted by the coalescing test. Store hits never profile, estimate
 //! or simulate anything.
 
-use super::fingerprint::{env_fingerprint, graph_fingerprint, plan_key, GraphSketch};
+use super::fingerprint::{env_fingerprint, graph_fingerprint, plan_key, EstimatorFp, GraphSketch};
 use super::store::PlanStore;
 use super::warm::{record_from, seeds_from_store, try_replay_hit, PlanSource, WarmOptions};
 use crate::device::DeviceModel;
@@ -38,6 +51,7 @@ use crate::profiler;
 use crate::search::{backtracking_search_seeded, SearchConfig};
 use crate::util::frame::{FrameError, FrameReader};
 use crate::util::json::Json;
+use crate::util::stats::percentile;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::io::Write;
@@ -113,6 +127,14 @@ pub struct ServeOptions {
     /// Connections beyond this are shed with an `overloaded` error frame
     /// instead of spawning a handler — bounded thread usage under load.
     pub max_conns: usize,
+    /// Default per-request cold-search deadline budget in milliseconds;
+    /// `0` = unlimited. Requests override with `budget_ms`.
+    pub cold_budget_ms: f64,
+    /// Cold searches running concurrently beyond this are shed with a
+    /// typed `retry_after` frame. Separate from `max_conns`: connection
+    /// handlers are cheap (hits, stats, pings), searches are not. `0`
+    /// admits no cold searches at all (a replay-only server).
+    pub max_cold: usize,
 }
 
 impl Default for ServeOptions {
@@ -123,6 +145,8 @@ impl Default for ServeOptions {
             capacity: 512,
             warm: WarmOptions::default(),
             max_conns: 256,
+            cold_budget_ms: 0.0,
+            max_cold: 8,
         }
     }
 }
@@ -158,6 +182,12 @@ struct State {
     max_conns: usize,
     /// Live handler threads (shed-on-overload watermark).
     active: AtomicUsize,
+    /// Default cold-search deadline budget (ms, 0 = unlimited).
+    cold_budget_ms: f64,
+    /// Cold-search concurrency cap (0 = admit none).
+    max_cold: usize,
+    /// Cold searches currently running (admission watermark).
+    cold_active: AtomicUsize,
     // Counters (surfaced by the `stats` command).
     requests: AtomicU64,
     searches: AtomicU64,
@@ -165,6 +195,56 @@ struct State {
     warm_starts: AtomicU64,
     coalesced: AtomicU64,
     shed: AtomicU64,
+    /// Cold searches shed by the admission cap (`retry_after` frames).
+    shed_cold: AtomicU64,
+    /// Requests rejected because their deadline budget ran out before
+    /// the search could start.
+    deadline_exceeded: AtomicU64,
+    /// Recent plan-resolve latencies (ms) for the p50/p99 stats surface;
+    /// bounded so a long-running server can't grow it without limit.
+    resolve_lat_ms: Mutex<Vec<f64>>,
+}
+
+/// Cap on the retained latency samples (drop-oldest beyond this).
+const LAT_SAMPLES: usize = 4096;
+
+fn observe_latency(state: &State, ms: f64) {
+    let mut lat = state.resolve_lat_ms.lock().unwrap();
+    if lat.len() >= LAT_SAMPLES {
+        let drop_n = lat.len() / 2;
+        lat.drain(..drop_n);
+    }
+    lat.push(ms);
+}
+
+/// RAII admission ticket for the cold-search path: at most `max_cold`
+/// may exist at once.
+struct ColdGuard<'a>(&'a State);
+
+impl<'a> ColdGuard<'a> {
+    fn admit(state: &'a State) -> Option<ColdGuard<'a>> {
+        let mut cur = state.cold_active.load(Ordering::SeqCst);
+        loop {
+            if cur >= state.max_cold {
+                return None;
+            }
+            match state.cold_active.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return Some(ColdGuard(state)),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl Drop for ColdGuard<'_> {
+    fn drop(&mut self) {
+        self.0.cold_active.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Decrements the live-handler count when a handler exits, however it
@@ -215,12 +295,18 @@ impl Server {
                 addr,
                 max_conns: opts.max_conns.max(1),
                 active: AtomicUsize::new(0),
+                cold_budget_ms: opts.cold_budget_ms.max(0.0),
+                max_cold: opts.max_cold,
+                cold_active: AtomicUsize::new(0),
                 requests: AtomicU64::new(0),
                 searches: AtomicU64::new(0),
                 store_hits: AtomicU64::new(0),
                 warm_starts: AtomicU64::new(0),
                 coalesced: AtomicU64::new(0),
                 shed: AtomicU64::new(0),
+                shed_cold: AtomicU64::new(0),
+                deadline_exceeded: AtomicU64::new(0),
+                resolve_lat_ms: Mutex::new(Vec::new()),
             }),
         })
     }
@@ -348,29 +434,61 @@ fn dispatch(state: &State, body: &str) -> Json {
             state.shutdown.store(true, Ordering::SeqCst);
             Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))])
         }
-        Some("plan") => match handle_plan(state, &req) {
-            Ok(resp) => resp,
-            Err(e) => err_json(&format!("{e:#}")),
-        },
+        Some("plan") => {
+            let t0 = Instant::now();
+            let resp = match handle_plan(state, &req) {
+                Ok(resp) => resp,
+                Err(e) => err_json(&format!("{e:#}")),
+            };
+            observe_latency(state, t0.elapsed().as_secs_f64() * 1e3);
+            resp
+        }
         _ => err_json("unknown cmd (expected plan|stats|ping|shutdown)"),
     }
 }
 
 fn stats_json(state: &State) -> Json {
+    let (p50, p99, samples) = {
+        let lat = state.resolve_lat_ms.lock().unwrap();
+        if lat.is_empty() {
+            (0.0, 0.0, 0)
+        } else {
+            (percentile(&lat[..], 50.0), percentile(&lat[..], 99.0), lat.len())
+        }
+    };
+    let searches = state.searches.load(Ordering::Relaxed);
+    let warm_starts = state.warm_starts.load(Ordering::Relaxed);
     let store = state.store.lock().unwrap();
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
-        ("searches", Json::Num(state.searches.load(Ordering::Relaxed) as f64)),
+        ("searches", Json::Num(searches as f64)),
         ("store_hits", Json::Num(state.store_hits.load(Ordering::Relaxed) as f64)),
-        ("warm_starts", Json::Num(state.warm_starts.load(Ordering::Relaxed) as f64)),
+        ("warm_starts", Json::Num(warm_starts as f64)),
+        ("cold_searches", Json::Num(searches.saturating_sub(warm_starts) as f64)),
         ("coalesced", Json::Num(state.coalesced.load(Ordering::Relaxed) as f64)),
         ("active_conns", Json::Num(state.active.load(Ordering::SeqCst) as f64)),
         ("shed", Json::Num(state.shed.load(Ordering::Relaxed) as f64)),
+        ("shed_cold", Json::Num(state.shed_cold.load(Ordering::Relaxed) as f64)),
+        (
+            "deadline_exceeded",
+            Json::Num(state.deadline_exceeded.load(Ordering::Relaxed) as f64),
+        ),
         ("max_conns", Json::Num(state.max_conns as f64)),
+        ("max_cold", Json::Num(state.max_cold as f64)),
+        ("cold_budget_ms", Json::Num(state.cold_budget_ms)),
+        ("resolve_p50_ms", Json::Num(p50)),
+        ("resolve_p99_ms", Json::Num(p99)),
+        ("resolve_samples", Json::Num(samples as f64)),
         ("store_len", Json::Num(store.len() as f64)),
         ("store_capacity", Json::Num(store.capacity() as f64)),
         ("store_evictions", Json::Num(store.evictions as f64)),
+        (
+            "store_corrupt_skipped",
+            Json::Num((store.recovery.corrupt + usize::from(store.recovery.torn_tail)) as f64),
+        ),
+        ("store_write_errors", Json::Num(store.write_errors as f64)),
+        ("store_degraded", Json::Bool(store.degraded)),
         (
             "store_path",
             match store.path() {
@@ -378,6 +496,29 @@ fn stats_json(state: &State) -> Json {
                 None => Json::Null,
             },
         ),
+    ])
+}
+
+/// Typed shed frame for a saturated cold-search path: clients should
+/// retry after `retry_after_ms` (by then either capacity freed up or a
+/// peer's identical search landed in the store).
+fn retry_after_json(retry_after_ms: f64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("kind", Json::Str("retry_after".into())),
+        ("error", Json::Str("cold-search capacity saturated".into())),
+        ("retry_after_ms", Json::Num(retry_after_ms)),
+    ])
+}
+
+/// Typed deadline frame: the request's budget ran out before the cold
+/// search could start.
+fn deadline_json(budget_ms: f64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("kind", Json::Str("deadline".into())),
+        ("error", Json::Str("cold-search deadline budget exhausted".into())),
+        ("budget_ms", Json::Num(budget_ms)),
     ])
 }
 
@@ -427,16 +568,23 @@ fn try_store_hit(
 }
 
 fn handle_plan(state: &State, req: &Json) -> Result<Json> {
+    let start = Instant::now();
     let graph = TrainingGraph::from_json_value(req.get("graph"))
         .map_err(|e| anyhow!("bad graph: {e}"))?;
     let (cluster, device) = cluster_device(req.get("cluster").as_str().unwrap_or("a"))?;
-    let estimator = match req.get("estimator").as_str().unwrap_or("analytical") {
+    let requested = req.get("estimator").as_str().unwrap_or("analytical");
+    let estimator = match requested {
         "analytical" => "analytical",
         // As in the bench harness, GNN falls back to oracle when no
         // trained predictor is wired into the process.
         "oracle" | "gnn" => "oracle",
         other => return Err(anyhow!("unknown estimator '{other}'")),
     };
+    // Estimator *content* enters the plan key: a "gnn" request folds the
+    // trained-parameter artifact state, so retraining invalidates every
+    // stale cached plan instead of serving costs from dead weights.
+    let est_fp =
+        EstimatorFp::resolve(requested, estimator, &crate::runtime::Manifest::default_dir());
     // `seed` is a u64; JSON numbers are f64 and round above 2^53, so the
     // CLI transmits it as a decimal string. Plain numbers stay accepted
     // for hand-written clients with small seeds.
@@ -462,6 +610,16 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
     if let Some(mc) = req.get("max_chunks").as_usize() {
         cfg.max_chunks = mc as u32;
     }
+    // Deadline budget: request field wins, else the server default;
+    // 0 = unlimited. Applied to `max_seconds` BEFORE the environment
+    // fingerprint so a budgeted search (which may stop early with a
+    // worse plan) never shares a store key with an unbudgeted one.
+    let budget_ms = req.get("budget_ms").as_f64().unwrap_or(state.cold_budget_ms).max(0.0);
+    if budget_ms > 0.0 {
+        let budget_s = budget_ms / 1e3;
+        cfg.max_seconds =
+            if cfg.max_seconds > 0.0 { cfg.max_seconds.min(budget_s) } else { budget_s };
+    }
     let mut warm = state.warm.clone();
     if let Some(enabled) = req.get("warm").as_bool() {
         warm.enabled = enabled;
@@ -470,10 +628,9 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
         warm.nearest = nearest;
     }
 
-    let start = Instant::now();
     let gfp = graph_fingerprint(&graph).map_err(|e| anyhow!("unfingerprintable graph: {e}"))?;
     let gfp_hex = gfp.hex();
-    let env = env_fingerprint(&cluster, &device, estimator, &cfg);
+    let env = env_fingerprint(&cluster, &device, &est_fp, &cfg);
     let key = plan_key(gfp, env);
     let key_hex = key.hex();
     let sketch = GraphSketch::of(&graph);
@@ -509,6 +666,19 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
         if let Some(resp) = try_store_hit(state, &key_hex, &gfp_hex, &graph, start) {
             return Ok(resp);
         }
+
+        // Admission control — only the expensive path below is gated;
+        // store hits above are always served. Deadline first (cheap
+        // signal), then the cold-concurrency cap.
+        if budget_ms > 0.0 && start.elapsed().as_secs_f64() * 1e3 >= budget_ms {
+            state.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            return Ok(deadline_json(budget_ms));
+        }
+        let Some(_cold) = ColdGuard::admit(state) else {
+            state.shed_cold.fetch_add(1, Ordering::Relaxed);
+            return Ok(retry_after_json(1000.0));
+        };
+
         let seeds = {
             let store = state.store.lock().unwrap();
             seeds_from_store(&store, &key_hex, &gfp_hex, &sketch, &warm)

@@ -1,31 +1,50 @@
-//! Persistent, content-addressed plan store (DESIGN.md §11).
+//! Persistent, content-addressed plan store (DESIGN.md §11, durability
+//! model in §14).
 //!
 //! One [`PlanRecord`] per (graph, environment) fingerprint, holding the
 //! winning [`Mutation`] sequence and its costs — the auto-tuning-record
 //! pattern: a strategy is an artifact keyed by the program, computed once
-//! and replayed thereafter. Storage is JSON-lines on disk (append-only
-//! via [`crate::util::json`], last write per key wins on load, corrupt or
-//! version-mismatched lines are skipped, the file is compacted when
-//! appends outgrow the live set) with a bounded in-memory LRU index, so a
-//! long-running `disco serve` process stays within a fixed *memory*
-//! footprint no matter how many distinct workloads pass through it (the
-//! disk file keeps one line per distinct key — it grows with the union
-//! of live plans, not with traffic).
+//! and replayed thereafter. Storage is JSON-lines on disk with a bounded
+//! in-memory LRU index, so a long-running `disco serve` process stays
+//! within a fixed *memory* footprint no matter how many distinct
+//! workloads pass through it (the disk file keeps one line per distinct
+//! key — it grows with the union of live plans, not with traffic).
+//!
+//! Since format v3 every line is framed
+//! `v3:<generation>:<payload-len>:<crc32c-hex>:<json-payload>` so that a
+//! torn append, a garbled sector, or a stale duplicate is *detected*
+//! rather than silently served: [`PlanStore::open`] scans byte-by-byte,
+//! verifies length + [`crate::util::checksum::crc32c`] per line,
+//! truncates a torn tail, skips corrupt interior lines, resolves
+//! duplicate keys by highest generation, and reports it all in a typed
+//! [`RecoveryReport`] — never a panic, never a record served that failed
+//! its checksum. Bare legacy v1/v2 JSON lines (no framing) still load,
+//! verified by parse only and flagged as `legacy` in the report.
 //!
 //! Two processes (or two [`PlanStore`]s) may share one JSONL path: every
 //! append and compaction runs under an advisory flock-style sidecar lock
 //! ([`StoreLock`]), and compaction merges from the *file*, never from one
 //! process's in-memory view — so a compaction in one server can't drop
-//! records another server appended. Concurrency is integration-tested in
-//! `tests/service.rs` (`store_shared_path_concurrent_appends`).
+//! records another server appended. Compaction writes a snapshot to
+//! `<store>.snap.<pid>` and renames it into place; a crash at any point
+//! leaves either the old consistent file (plus an orphan snapshot that
+//! the next open sweeps) or the new one. Disk failures during `put`
+//! degrade the store to memory-only for that record instead of failing
+//! the plan request; the degradation is counted and surfaced in server
+//! stats. All I/O is threaded through the seeded fault shim in
+//! [`super::io_fault`] (constructor hook [`PlanStore::open_with`]) and the
+//! failure modes are property-tested in `tests/service.rs`.
 
 use super::fingerprint::GraphSketch;
+use super::io_fault::{DiskFault, DiskFaultPlan, FaultFile};
 use crate::fusion::{FusionKind, Mutation};
+use crate::util::checksum::crc32c;
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// On-disk record layout version; bump on breaking changes. Loading skips
 /// records with any *unknown* version (they just get re-searched).
@@ -37,10 +56,14 @@ use std::path::{Path, PathBuf};
 ///   contain no `"ck"` mutations, so they replay exactly as the
 ///   unchunked plans they were recorded as — never corrupted, never
 ///   silently re-interpreted.
-pub const RECORD_VERSION: u64 = 2;
+/// * **3** — durability framing (DESIGN.md §14): each line carries a
+///   generation counter, payload length and CRC32C outside the JSON
+///   payload. Bare v1/v2 lines (which always start with `{`) still
+///   load, verified by parse only.
+pub const RECORD_VERSION: u64 = 3;
 
 /// Versions [`PlanRecord::from_json`] accepts (see the history above).
-const COMPAT_VERSIONS: [u64; 2] = [1, RECORD_VERSION];
+const COMPAT_VERSIONS: [u64; 3] = [1, 2, RECORD_VERSION];
 
 /// When the JSONL file holds more than this many lines per live record,
 /// `put` rewrites it from the on-disk record set (append-only compaction
@@ -55,6 +78,109 @@ const LOCK_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
 /// or one file rewrite), so a healthy holder can't plausibly age this
 /// far — every acquire writes the lock file fresh.
 const LOCK_STALE: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Typed store I/O failure: which operation, on which path, with the
+/// underlying error — so `compact`'s rename landing step (and every
+/// other disk step) surfaces as something callers can match on instead
+/// of a stringly-typed context chain.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Could not acquire (or create) the sidecar lock.
+    Lock { path: PathBuf, reason: String },
+    /// A data-file operation failed. `op` is one of `"read"`,
+    /// `"append"`, `"snapshot"`, `"rename"`.
+    Io { op: &'static str, path: PathBuf, source: std::io::Error },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Lock { path, reason } => {
+                write!(f, "plan-store lock {}: {reason}", path.display())
+            }
+            StoreError::Io { op, path, source } => {
+                write!(f, "plan-store {op} {}: {source}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Lock { .. } => None,
+            StoreError::Io { source, .. } => Some(source),
+        }
+    }
+}
+
+/// What [`PlanStore::open`] / [`fsck`] found and did while loading a
+/// store file — the documented outcome for every hostile input
+/// (DESIGN.md §14). All counters are per load, not cumulative.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryReport {
+    /// Non-empty lines seen in the file.
+    pub total_lines: usize,
+    /// Lines that passed v3 frame verification (length + CRC32C + parse).
+    pub verified: usize,
+    /// Bare v1/v2 lines accepted by parse alone (no checksum on disk).
+    pub legacy: usize,
+    /// Interior lines that failed verification and were skipped.
+    pub corrupt: usize,
+    /// Whether the final line was an unterminated/invalid torn tail.
+    pub torn_tail: bool,
+    /// Bytes dropped by truncating the torn tail.
+    pub torn_bytes: usize,
+    /// Valid lines superseded by a same-key line of higher generation
+    /// (or equal generation later in the file) — normal last-write-wins
+    /// traffic, folded away at compaction.
+    pub duplicates: usize,
+    /// Orphan `<store>.snap.*` files from a crash between snapshot write
+    /// and rename (the main file is still the consistent truth).
+    pub orphan_snapshots: usize,
+    /// Live records after duplicate resolution.
+    pub live: usize,
+    /// Whether this load/fsck rewrote the file to a clean state.
+    pub repaired: bool,
+}
+
+impl RecoveryReport {
+    /// No damage and nothing to fold: the file is byte-for-byte what a
+    /// fresh compaction would write (legacy lines are clean — old, not
+    /// damaged).
+    pub fn is_clean(&self) -> bool {
+        self.corrupt == 0 && !self.torn_tail && self.duplicates == 0 && self.orphan_snapshots == 0
+    }
+}
+
+impl std::fmt::Display for RecoveryReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{} line(s): {} live record(s) ({} v3-verified, {} legacy verified-by-parse)",
+            self.total_lines, self.live, self.verified, self.legacy
+        )?;
+        writeln!(f, "  corrupt lines skipped:          {}", self.corrupt)?;
+        writeln!(
+            f,
+            "  torn tail truncated:            {}",
+            if self.torn_tail { format!("yes ({} byte(s))", self.torn_bytes) } else { "no".into() }
+        )?;
+        writeln!(f, "  duplicate records superseded:   {}", self.duplicates)?;
+        writeln!(f, "  orphan snapshots swept:         {}", self.orphan_snapshots)?;
+        write!(
+            f,
+            "  status: {}",
+            if self.is_clean() {
+                "clean"
+            } else if self.repaired {
+                "repaired"
+            } else {
+                "damaged (run `disco store fsck --repair`)"
+            }
+        )
+    }
+}
 
 /// Advisory cross-process lock on one store file (flock-style, std-only:
 /// a sidecar `<store>.lock` created with `create_new`, which is atomic
@@ -115,7 +241,7 @@ impl StoreLock {
         still_stale
     }
 
-    fn acquire(store_path: &Path) -> Result<StoreLock> {
+    fn acquire(store_path: &Path) -> Result<StoreLock, StoreError> {
         let path = Self::lock_path(store_path);
         let deadline = std::time::Instant::now() + LOCK_TIMEOUT;
         loop {
@@ -134,17 +260,15 @@ impl StoreLock {
                         continue;
                     }
                     if std::time::Instant::now() > deadline {
-                        return Err(anyhow!(
-                            "timed out waiting for plan-store lock {}",
-                            path.display()
-                        ));
+                        return Err(StoreError::Lock {
+                            path,
+                            reason: "timed out waiting for holder".into(),
+                        });
                     }
                     std::thread::sleep(std::time::Duration::from_millis(2));
                 }
                 Err(e) => {
-                    return Err(e).with_context(|| {
-                        format!("creating plan-store lock {}", path.display())
-                    })
+                    return Err(StoreError::Lock { path, reason: format!("create failed: {e}") })
                 }
             }
         }
@@ -284,6 +408,192 @@ impl PlanRecord {
     }
 }
 
+/// Frame one record payload as a v3 store line (no trailing newline):
+/// `v3:<generation>:<payload-len>:<crc32c-hex>:<payload>`. Public so
+/// tests (and fsck tooling) can author byte-exact lines.
+pub fn frame_line(generation: u64, payload: &str) -> String {
+    format!("v3:{generation}:{}:{:08x}:{payload}", payload.len(), crc32c(payload.as_bytes()))
+}
+
+/// One line that survived the verification scan.
+#[derive(Debug, Clone)]
+struct ScannedRecord {
+    rec: PlanRecord,
+    /// The raw JSON payload text, preserved verbatim so compaction
+    /// re-frames without re-serialising (legacy v1/v2 payloads keep
+    /// their inner version and replay semantics).
+    payload: String,
+    generation: u64,
+    /// File position (line index among non-empty lines) — recency and
+    /// tie-breaking.
+    position: usize,
+}
+
+struct Scan {
+    records: Vec<ScannedRecord>,
+    report: RecoveryReport,
+    max_generation: u64,
+}
+
+enum LineVerdict {
+    Valid(ScannedRecord),
+    Invalid,
+}
+
+/// Verify one line. `position` feeds the scanned record; classification
+/// of *invalid* lines (corrupt vs. torn tail) is positional and handled
+/// by the caller.
+fn verify_line(line: &[u8], position: usize, legacy: &mut bool) -> LineVerdict {
+    // v3 framed line: header fields are ASCII, so byte-split is safe.
+    if let Some(rest) = line.strip_prefix(b"v3:") {
+        let Some(c1) = rest.iter().position(|&b| b == b':') else { return LineVerdict::Invalid };
+        let Some(c2off) = rest[c1 + 1..].iter().position(|&b| b == b':') else {
+            return LineVerdict::Invalid;
+        };
+        let c2 = c1 + 1 + c2off;
+        let Some(c3off) = rest[c2 + 1..].iter().position(|&b| b == b':') else {
+            return LineVerdict::Invalid;
+        };
+        let c3 = c2 + 1 + c3off;
+        let gen_s = std::str::from_utf8(&rest[..c1]).ok();
+        let len_s = std::str::from_utf8(&rest[c1 + 1..c2]).ok();
+        let crc_s = std::str::from_utf8(&rest[c2 + 1..c3]).ok();
+        let (Some(gen_s), Some(len_s), Some(crc_s)) = (gen_s, len_s, crc_s) else {
+            return LineVerdict::Invalid;
+        };
+        let (Ok(generation), Ok(len), Ok(crc)) = (
+            gen_s.parse::<u64>(),
+            len_s.parse::<usize>(),
+            u32::from_str_radix(crc_s, 16),
+        ) else {
+            return LineVerdict::Invalid;
+        };
+        let payload = &rest[c3 + 1..];
+        if payload.len() != len || crc32c(payload) != crc {
+            return LineVerdict::Invalid;
+        }
+        let Ok(payload) = std::str::from_utf8(payload) else { return LineVerdict::Invalid };
+        match Json::parse(payload).ok().and_then(|j| PlanRecord::from_json(&j)) {
+            Some(rec) => LineVerdict::Valid(ScannedRecord {
+                rec,
+                payload: payload.to_string(),
+                generation,
+                position,
+            }),
+            None => LineVerdict::Invalid,
+        }
+    } else {
+        // Legacy bare JSON line (v1/v2): verified by parse only.
+        let Ok(text) = std::str::from_utf8(line) else { return LineVerdict::Invalid };
+        match Json::parse(text).ok().and_then(|j| PlanRecord::from_json(&j)) {
+            Some(rec) => {
+                *legacy = true;
+                LineVerdict::Valid(ScannedRecord {
+                    rec,
+                    payload: text.to_string(),
+                    generation: 0,
+                    position,
+                })
+            }
+            None => LineVerdict::Invalid,
+        }
+    }
+}
+
+/// Byte-level verification scan of a whole store file. Pure and total:
+/// any input classifies every line as verified / legacy / corrupt /
+/// torn-tail without panicking. The recovery state machine (DESIGN.md
+/// §14): an invalid line that is the *final* line and lacks its
+/// terminating newline is a torn tail (truncate); an invalid line
+/// anywhere else — or a terminated final line — is corrupt (skip).
+fn scan_bytes(data: &[u8]) -> Scan {
+    let mut scan =
+        Scan { records: Vec::new(), report: RecoveryReport::default(), max_generation: 0 };
+    let mut pos = 0usize;
+    let mut position = 0usize;
+    while pos < data.len() {
+        let (line, next, terminated) = match data[pos..].iter().position(|&b| b == b'\n') {
+            Some(i) => (&data[pos..pos + i], pos + i + 1, true),
+            None => (&data[pos..], data.len(), false),
+        };
+        pos = next;
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            continue;
+        }
+        scan.report.total_lines += 1;
+        let mut legacy = false;
+        match verify_line(line, position, &mut legacy) {
+            LineVerdict::Valid(sr) => {
+                scan.max_generation = scan.max_generation.max(sr.generation);
+                if legacy {
+                    scan.report.legacy += 1;
+                } else {
+                    scan.report.verified += 1;
+                }
+                scan.records.push(sr);
+                position += 1;
+            }
+            LineVerdict::Invalid => {
+                if !terminated && pos >= data.len() {
+                    scan.report.torn_tail = true;
+                    scan.report.torn_bytes = line.len();
+                } else {
+                    scan.report.corrupt += 1;
+                }
+            }
+        }
+    }
+    scan
+}
+
+/// Resolve duplicates: highest generation wins; equal generations fall
+/// back to file order (later wins — legacy lines are all generation 0,
+/// which reduces to the historical last-write-wins). Returns winners in
+/// file order of the winning line, and counts the superseded.
+fn fold_records(records: Vec<ScannedRecord>, report: &mut RecoveryReport) -> Vec<ScannedRecord> {
+    let mut winners: HashMap<String, ScannedRecord> = HashMap::new();
+    for sr in records {
+        match winners.get(&sr.rec.key) {
+            Some(prev) if prev.generation > sr.generation => report.duplicates += 1,
+            Some(_) => {
+                report.duplicates += 1;
+                winners.insert(sr.rec.key.clone(), sr);
+            }
+            None => {
+                winners.insert(sr.rec.key.clone(), sr);
+            }
+        }
+    }
+    let mut out: Vec<ScannedRecord> = winners.into_values().collect();
+    out.sort_by_key(|sr| sr.position);
+    report.live = out.len();
+    out
+}
+
+/// Find (and optionally remove) orphan `<store>.snap.*` files left by a
+/// crash between snapshot write and rename. The main file is still the
+/// consistent truth in that state; the snapshot is garbage.
+fn sweep_orphan_snapshots(path: &Path, remove: bool) -> usize {
+    let Some(name) = path.file_name().and_then(|s| s.to_str()) else { return 0 };
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let prefix = format!("{name}.snap.");
+    let mut found = 0usize;
+    if let Ok(entries) = std::fs::read_dir(parent) {
+        for entry in entries.flatten() {
+            if entry.file_name().to_str().is_some_and(|f| f.starts_with(&prefix)) {
+                found += 1;
+                if remove {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+    found
+}
+
 /// Bounded plan cache: in-memory LRU index over an append-only JSONL file
 /// (or memory-only when opened without a path).
 #[derive(Debug)]
@@ -306,11 +616,24 @@ pub struct PlanStore {
     /// otherwise a store whose file legitimately holds more keys than
     /// its own capacity would rewrite the whole file on every put.
     disk_keys: usize,
+    /// Next generation this store stamps on an appended record; seeded
+    /// past the highest generation seen at load so re-puts always
+    /// supersede what is on disk.
+    next_generation: u64,
+    /// Seeded disk-fault schedule (tests); `None` = real I/O.
+    fault: Option<Arc<DiskFaultPlan>>,
+    /// What the load-time verification scan found.
+    pub recovery: RecoveryReport,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
-    /// Lines skipped at load time (corrupt / old version).
+    /// Lines skipped at load time (corrupt, torn or old-version).
     pub skipped: u64,
+    /// Disk writes that failed and were degraded to memory-only.
+    pub write_errors: u64,
+    /// Set once any disk write has failed: the in-memory index is ahead
+    /// of the file (surfaced in `disco serve` stats).
+    pub degraded: bool,
 }
 
 impl PlanStore {
@@ -324,47 +647,91 @@ impl PlanStore {
             clock: 0,
             disk_lines: 0,
             disk_keys: 0,
+            next_generation: 1,
+            fault: None,
+            recovery: RecoveryReport::default(),
             hits: 0,
             misses: 0,
             evictions: 0,
             skipped: 0,
+            write_errors: 0,
+            degraded: false,
         }
     }
 
-    /// Open (creating if absent) a JSONL-backed store. Later lines win on
-    /// duplicate keys; unreadable lines are counted in `skipped` and
-    /// dropped; anything beyond `capacity` is evicted oldest-first (from
-    /// the in-memory index only — the file keeps every live record, so a
-    /// second process with a larger capacity loses nothing).
+    /// Open (creating if absent) a JSONL-backed store with real I/O.
     pub fn open(path: &Path, capacity: usize) -> Result<PlanStore> {
+        Self::open_with(path, capacity, None)
+    }
+
+    /// Constructor hook for seeded disk-fault injection: identical to
+    /// [`PlanStore::open`] but every subsequent data-file operation
+    /// consults `fault` (see [`DiskFaultPlan`] for the op numbering).
+    ///
+    /// Recovery contract: duplicate keys resolve by highest generation
+    /// (file order on ties), unreadable lines are counted in `skipped`
+    /// and dropped, a torn tail is truncated, and the full outcome lands
+    /// in [`PlanStore::recovery`]. Anything beyond `capacity` is evicted
+    /// oldest-first from the in-memory index only — the file keeps every
+    /// live record, so a second process with a larger capacity loses
+    /// nothing. When damage was found the file is rewritten clean; if
+    /// that rewrite fails (read-only disk) the store still opens, marked
+    /// degraded.
+    pub fn open_with(
+        path: &Path,
+        capacity: usize,
+        fault: Option<Arc<DiskFaultPlan>>,
+    ) -> Result<PlanStore> {
         let mut store = PlanStore::in_memory(capacity);
         store.path = Some(path.to_path_buf());
+        store.fault = fault;
         if path.exists() {
             let _lock = StoreLock::acquire(path)?;
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading plan store {}", path.display()))?;
-            let mut lines = 0usize;
-            let mut unique: std::collections::HashSet<String> = std::collections::HashSet::new();
-            for line in text.lines() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                lines += 1;
-                match Json::parse(line).ok().and_then(|j| PlanRecord::from_json(&j)) {
-                    Some(rec) => {
-                        unique.insert(rec.key.clone());
-                        store.index(rec);
-                    }
-                    None => store.skipped += 1,
-                }
+            store.recovery.orphan_snapshots = sweep_orphan_snapshots(path, true);
+            let data = store.io_read(path).map_err(|source| StoreError::Io {
+                op: "read",
+                path: path.to_path_buf(),
+                source,
+            })?;
+            let scan = scan_bytes(&data);
+            store.recovery.total_lines = scan.report.total_lines;
+            store.recovery.verified = scan.report.verified;
+            store.recovery.legacy = scan.report.legacy;
+            store.recovery.corrupt = scan.report.corrupt;
+            store.recovery.torn_tail = scan.report.torn_tail;
+            store.recovery.torn_bytes = scan.report.torn_bytes;
+            store.next_generation = scan.max_generation + 1;
+            let mut report = store.recovery.clone();
+            let winners = fold_records(scan.records, &mut report);
+            store.recovery = report;
+            store.skipped =
+                (store.recovery.corrupt + usize::from(store.recovery.torn_tail)) as u64;
+            store.disk_lines = store.recovery.total_lines;
+            store.disk_keys = store.recovery.live;
+            for sr in winners {
+                store.index(sr.rec);
             }
-            store.disk_lines = lines;
-            store.disk_keys = unique.len();
-            // Reclaim the file when the load found duplicate or corrupt
-            // lines (NOT when records merely exceeded our capacity —
-            // those stay on disk for other readers).
-            if lines != unique.len() {
-                store.compact_locked()?;
+            // Reclaim the file when the load found damage or duplicates
+            // (NOT when records merely exceeded our capacity — those
+            // stay on disk for other readers). A failed rewrite (e.g.
+            // read-only disk) degrades instead of failing the open: the
+            // loaded records are already correct in memory.
+            //
+            // A VALID final line missing its newline (truncation that
+            // stopped exactly at the line's last content byte) also
+            // forces the rewrite: the record is served, but a blind
+            // append would concatenate onto the unterminated line and
+            // corrupt both records.
+            let unterminated = !data.is_empty() && data.last() != Some(&b'\n');
+            if !store.recovery.is_clean() || unterminated {
+                match store.compact_locked() {
+                    Ok(()) => store.recovery.repaired = true,
+                    Err(e) => {
+                        store.write_errors += 1;
+                        store.degraded = true;
+                        eprintln!("disco store: recovery rewrite failed ({e}); continuing degraded");
+                    }
+                }
             }
         }
         Ok(store)
@@ -384,6 +751,52 @@ impl PlanStore {
 
     pub fn path(&self) -> Option<&Path> {
         self.path.as_deref()
+    }
+
+    /// Read the whole data file through the fault shim (one logical op).
+    fn io_read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        use std::io::Read;
+        let fault = self.fault.as_ref().and_then(|p| p.begin_op());
+        let seed = self.fault.as_ref().map_or(0, |p| p.seed);
+        let f = std::fs::File::open(path)?;
+        let mut shim = FaultFile::new(f, fault, seed);
+        let mut data = Vec::new();
+        shim.read_to_end(&mut data)?;
+        Ok(data)
+    }
+
+    /// Append one framed line through the fault shim (one logical op).
+    fn io_append(&self, path: &Path, line: &str) -> std::io::Result<()> {
+        let fault = self.fault.as_ref().and_then(|p| p.begin_op());
+        let seed = self.fault.as_ref().map_or(0, |p| p.seed);
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        let mut shim = FaultFile::new(f, fault, seed);
+        shim.write_all(line.as_bytes())?;
+        shim.write_all(b"\n")?;
+        shim.flush()
+    }
+
+    /// Write a whole snapshot file through the fault shim (one logical op).
+    fn io_write_snapshot(&self, path: &Path, contents: &str) -> std::io::Result<()> {
+        let fault = self.fault.as_ref().and_then(|p| p.begin_op());
+        let seed = self.fault.as_ref().map_or(0, |p| p.seed);
+        let f = std::fs::File::create(path)?;
+        let mut shim = FaultFile::new(f, fault, seed);
+        shim.write_all(contents.as_bytes())?;
+        shim.flush()
+    }
+
+    /// Rename through the fault shim (one logical op; `err`/`slow` only —
+    /// a rename has no partial state to tear).
+    fn io_rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        match self.fault.as_ref().and_then(|p| p.begin_op()) {
+            Some(DiskFault::Err { .. }) => return Err(super::io_fault::injected_error()),
+            Some(DiskFault::Slow { ms, .. }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms))
+            }
+            _ => {}
+        }
+        std::fs::rename(from, to)
     }
 
     fn touch(&mut self, key: &str) {
@@ -432,77 +845,88 @@ impl PlanStore {
 
     /// Insert (or overwrite) a record and persist it. The append and any
     /// resulting compaction happen under the cross-process file lock.
+    ///
+    /// Disk failure does NOT fail the request: the record stays indexed
+    /// in memory, `write_errors`/`degraded` are set and a warning is
+    /// logged — a read-only disk turns the store into a cache, not an
+    /// outage (DESIGN.md §14).
     pub fn put(&mut self, rec: PlanRecord) -> Result<()> {
-        let line = rec.to_json().to_string();
+        let generation = self.next_generation;
+        self.next_generation += 1;
+        let line = frame_line(generation, &rec.to_json().to_string());
         self.index(rec);
-        if let Some(path) = self.path.clone() {
-            let _lock = StoreLock::acquire(&path)?;
-            let mut f = std::fs::OpenOptions::new()
-                .create(true)
-                .append(true)
-                .open(&path)
-                .with_context(|| format!("appending to plan store {}", path.display()))?;
-            writeln!(f, "{line}")?;
-            drop(f);
-            self.disk_lines += 1;
-            // disk_keys is only ever set from an exact disk scan (open /
-            // compaction), never guessed at put time: a guess based on
-            // the capacity-bounded map over-counts once eviction starts
-            // (every re-put of an evicted key would look new), inflating
-            // the threshold until compaction never fires. A stale-LOW
-            // disk_keys merely compacts a little early — the safe
-            // direction, and it amortizes geometrically either way.
-            if self.disk_lines > COMPACT_FACTOR * self.disk_keys.max(4) {
-                self.compact_locked()?;
+        if self.path.is_some() {
+            if let Err(e) = self.put_disk(&line) {
+                self.write_errors += 1;
+                self.degraded = true;
+                eprintln!("disco store: append failed ({e}); record kept memory-only");
             }
         }
         Ok(())
     }
 
-    /// Compact the backing file under the cross-process lock.
+    fn put_disk(&mut self, line: &str) -> Result<(), StoreError> {
+        let path = self.path.clone().expect("put_disk without path");
+        let _lock = StoreLock::acquire(&path)?;
+        self.io_append(&path, line).map_err(|source| StoreError::Io {
+            op: "append",
+            path: path.clone(),
+            source,
+        })?;
+        self.disk_lines += 1;
+        // disk_keys is only ever set from an exact disk scan (open /
+        // compaction), never guessed at put time: a guess based on
+        // the capacity-bounded map over-counts once eviction starts
+        // (every re-put of an evicted key would look new), inflating
+        // the threshold until compaction never fires. A stale-LOW
+        // disk_keys merely compacts a little early — the safe
+        // direction, and it amortizes geometrically either way.
+        if self.disk_lines > COMPACT_FACTOR * self.disk_keys.max(4) {
+            self.compact_locked()?;
+        }
+        Ok(())
+    }
+
+    /// Compact the backing file under the cross-process lock. Unlike
+    /// `put`, this surfaces disk failures to the caller (typed
+    /// [`StoreError`] behind the anyhow wrapper) — an explicit compaction
+    /// is an administrative action whose failure must be visible.
     pub fn compact(&mut self) -> Result<()> {
         let Some(path) = self.path.clone() else { return Ok(()) };
         let _lock = StoreLock::acquire(&path)?;
-        self.compact_locked()
+        self.compact_locked()?;
+        Ok(())
     }
 
     /// Rewrite the backing file with exactly the live on-disk record set
-    /// (one line per key, last write wins, corrupt lines dropped). The
-    /// caller must hold the store lock. Compaction deliberately merges
-    /// from *disk*, not from this process's in-memory index: a second
-    /// process sharing the path may have appended records this index has
-    /// never seen (or has evicted), and rewriting from memory would
-    /// silently delete them. Every record this process has put is on
-    /// disk already (`put` appends before compacting), so the disk set
-    /// is a superset of this index.
-    fn compact_locked(&mut self) -> Result<()> {
+    /// (one framed line per key, highest generation wins, corrupt lines
+    /// dropped). The caller must hold the store lock. Compaction
+    /// deliberately merges from *disk*, not from this process's
+    /// in-memory index: a second process sharing the path may have
+    /// appended records this index has never seen (or has evicted), and
+    /// rewriting from memory would silently delete them. Every record
+    /// this process has put is on disk already (`put` appends before
+    /// compacting), so the disk set is a superset of this index.
+    ///
+    /// Crash-atomicity: the new contents land in `<store>.snap.<pid>`
+    /// first and are renamed over the store. A crash before the rename
+    /// leaves the old file intact plus an orphan snapshot (swept at next
+    /// open); the rename itself is atomic. Every step's failure is a
+    /// typed [`StoreError`] naming the step — nothing is swallowed.
+    fn compact_locked(&mut self) -> Result<(), StoreError> {
         let Some(path) = self.path.clone() else { return Ok(()) };
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
-            Err(e) => {
-                return Err(e)
-                    .with_context(|| format!("re-reading plan store {}", path.display()))
-            }
+        let data = match self.io_read(&path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(source) => return Err(StoreError::Io { op: "read", path, source }),
         };
-        // Last-write-wins in file order, preserving first-seen order so
-        // the rewrite is stable.
-        let mut order: Vec<String> = Vec::new();
-        let mut live: HashMap<String, String> = HashMap::new();
-        for line in text.lines() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            if let Some(rec) = Json::parse(line).ok().and_then(|j| PlanRecord::from_json(&j)) {
-                if !live.contains_key(&rec.key) {
-                    order.push(rec.key.clone());
-                }
-                live.insert(rec.key, line.to_string());
-            }
-        }
+        let scan = scan_bytes(&data);
+        self.next_generation = self.next_generation.max(scan.max_generation + 1);
+        let mut report = RecoveryReport::default();
+        let winners = fold_records(scan.records, &mut report);
         let mut out = String::new();
-        for key in &order {
-            out.push_str(&live[key]);
+        for sr in &winners {
+            out.push_str(&frame_line(sr.generation, &sr.payload));
             out.push('\n');
         }
         // Write-then-rename: the shared file is every process's source
@@ -510,15 +934,19 @@ impl PlanStore {
         // crash) in a truncated in-place-rewrite state.
         let tmp = {
             let mut os = path.as_os_str().to_os_string();
-            os.push(format!(".compact.{}", std::process::id()));
+            os.push(format!(".snap.{}", std::process::id()));
             PathBuf::from(os)
         };
-        std::fs::write(&tmp, out)
-            .with_context(|| format!("writing compacted plan store {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("compacting plan store {}", path.display()))?;
-        self.disk_lines = order.len();
-        self.disk_keys = order.len();
+        if let Err(source) = self.io_write_snapshot(&tmp, &out) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(StoreError::Io { op: "snapshot", path: tmp, source });
+        }
+        if let Err(source) = self.io_rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(StoreError::Io { op: "rename", path, source });
+        }
+        self.disk_lines = winners.len();
+        self.disk_keys = winners.len();
         Ok(())
     }
 
@@ -552,6 +980,59 @@ impl PlanStore {
             })
             .map(|(_, r)| r)
     }
+}
+
+/// Verify a store file and print-ready report; `repair` rewrites the
+/// file clean (and sweeps orphan snapshots) when damage is found. Runs
+/// under the cross-process lock; a missing file is a clean empty store.
+/// The scan is the same one `open` runs — fsck IS the recovery path,
+/// minus the in-memory indexing.
+pub fn fsck(path: &Path, repair: bool) -> Result<RecoveryReport> {
+    if !path.exists() {
+        return Ok(RecoveryReport::default());
+    }
+    let _lock = StoreLock::acquire(path)?;
+    let mut report = RecoveryReport {
+        orphan_snapshots: sweep_orphan_snapshots(path, repair),
+        ..RecoveryReport::default()
+    };
+    let data = std::fs::read(path).map_err(|source| StoreError::Io {
+        op: "read",
+        path: path.to_path_buf(),
+        source,
+    })?;
+    let scan = scan_bytes(&data);
+    report.total_lines = scan.report.total_lines;
+    report.verified = scan.report.verified;
+    report.legacy = scan.report.legacy;
+    report.corrupt = scan.report.corrupt;
+    report.torn_tail = scan.report.torn_tail;
+    report.torn_bytes = scan.report.torn_bytes;
+    let winners = fold_records(scan.records, &mut report);
+    if repair && !report.is_clean() {
+        let mut out = String::new();
+        for sr in &winners {
+            out.push_str(&frame_line(sr.generation, &sr.payload));
+            out.push('\n');
+        }
+        let tmp = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(format!(".snap.{}", std::process::id()));
+            PathBuf::from(os)
+        };
+        std::fs::write(&tmp, out).map_err(|source| StoreError::Io {
+            op: "snapshot",
+            path: tmp.clone(),
+            source,
+        })?;
+        std::fs::rename(&tmp, path).map_err(|source| StoreError::Io {
+            op: "rename",
+            path: path.to_path_buf(),
+            source,
+        })?;
+        report.repaired = true;
+    }
+    Ok(report)
 }
 
 /// Convenience for CLI/config plumbing: `None`/`"none"` → memory-only.
@@ -612,17 +1093,20 @@ mod tests {
     }
 
     #[test]
-    fn v1_records_still_load() {
-        // A pre-chunk (v1) record has only "ops"/"ar" mutation tags; it
-        // must parse under the bumped version and keep its plan intact —
-        // replaying it produces exactly the unchunked strategy it stored.
-        let mut j = record("k1", "g1", 1.0).to_json();
-        if let Json::Obj(m) = &mut j {
-            m.insert("v".into(), Json::Num(1.0));
+    fn v1_and_v2_records_still_load() {
+        // Pre-durability records (v1 fusion-only, v2 chunked) must parse
+        // under the bumped version and keep their plans intact —
+        // replaying a v1 record produces exactly the unchunked strategy
+        // it stored.
+        for old in [1.0, 2.0] {
+            let mut j = record("k1", "g1", 1.0).to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("v".into(), Json::Num(old));
+            }
+            let r = PlanRecord::from_json(&j).unwrap_or_else(|| panic!("v{old} record rejected"));
+            assert_eq!(r.muts, record("k1", "g1", 1.0).muts);
+            assert!(!r.muts.iter().any(|m| matches!(m, Mutation::SetChunks { .. })));
         }
-        let r = PlanRecord::from_json(&j).expect("v1 record rejected");
-        assert_eq!(r.muts, record("k1", "g1", 1.0).muts);
-        assert!(!r.muts.iter().any(|m| matches!(m, Mutation::SetChunks { .. })));
     }
 
     #[test]
@@ -633,6 +1117,23 @@ mod tests {
         let r2 = PlanRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(r, r2);
         assert!(j.contains("\"ck\""));
+    }
+
+    #[test]
+    fn frame_line_verifies_and_detects_flips() {
+        let payload = record("k1", "g1", 1.0).to_json().to_string();
+        let line = frame_line(7, &payload);
+        assert!(line.starts_with("v3:7:"));
+        let mut legacy = false;
+        assert!(matches!(
+            verify_line(line.as_bytes(), 0, &mut legacy),
+            LineVerdict::Valid(ScannedRecord { generation: 7, .. })
+        ));
+        // Any single-byte corruption of the payload must be rejected.
+        let mut bad = line.clone().into_bytes();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x20;
+        assert!(matches!(verify_line(&bad, 0, &mut legacy), LineVerdict::Invalid));
     }
 
     #[test]
@@ -691,7 +1192,8 @@ mod tests {
             s.put(record("b", "g", 2.0)).unwrap();
             s.put(record("a", "g", 9.0)).unwrap(); // overwrite
         }
-        // Corrupt trailing line must not poison the load.
+        // Corrupt trailing line (newline-terminated → corrupt, not torn)
+        // must not poison the load.
         {
             let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
             writeln!(f, "{{ not json").unwrap();
@@ -700,9 +1202,67 @@ mod tests {
         assert_eq!(s.len(), 2);
         assert_eq!(s.peek("a").unwrap().best_cost_ms, 9.0);
         assert_eq!(s.skipped, 1);
+        assert_eq!(s.recovery.corrupt, 1);
+        assert!(!s.recovery.torn_tail);
+        assert!(s.recovery.repaired);
         // Load compacted away the duplicate and the corrupt line.
         let reread = std::fs::read_to_string(&path).unwrap();
         assert_eq!(reread.lines().count(), 2);
+        assert!(reread.lines().all(|l| l.starts_with("v3:")));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn generation_wins_over_file_order() {
+        // A higher-generation line EARLIER in the file beats a
+        // lower-generation duplicate appended after it (e.g. a stale
+        // writer re-appending an old record after a compaction).
+        let dir = std::env::temp_dir().join(format!("disco-store-gen-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.jsonl");
+        let newer = frame_line(9, &record("k", "g", 5.0).to_json().to_string());
+        let stale = frame_line(3, &record("k", "g", 1.0).to_json().to_string());
+        std::fs::write(&path, format!("{newer}\n{stale}\n")).unwrap();
+        let s = PlanStore::open(&path, 8).unwrap();
+        assert_eq!(s.peek("k").unwrap().best_cost_ms, 5.0);
+        assert_eq!(s.recovery.duplicates, 1);
+        // A fresh put must supersede generation 9, even though the
+        // stale line was the last one read.
+        drop(s);
+        let mut s = PlanStore::open(&path, 8).unwrap();
+        s.put(record("k", "g", 7.0)).unwrap();
+        let s = PlanStore::open(&path, 8).unwrap();
+        assert_eq!(s.peek("k").unwrap().best_cost_ms, 7.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_put_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("disco-store-torn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = PlanStore::open(&path, 8).unwrap();
+            s.put(record("a", "g", 1.0)).unwrap();
+        }
+        // Simulate a crash mid-append: half a framed line, no newline.
+        let half = frame_line(99, &record("b", "g", 2.0).to_json().to_string());
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{}", &half[..half.len() / 2]).unwrap();
+        }
+        {
+            let mut s = PlanStore::open(&path, 8).unwrap();
+            assert_eq!(s.len(), 1);
+            assert!(s.recovery.torn_tail);
+            assert!(s.recovery.repaired);
+            s.put(record("c", "g", 3.0)).unwrap();
+        }
+        let s = PlanStore::open(&path, 8).unwrap();
+        assert!(s.recovery.is_clean());
+        assert_eq!(s.len(), 2);
+        assert!(s.peek("a").is_some() && s.peek("c").is_some());
         let _ = std::fs::remove_file(&path);
     }
 

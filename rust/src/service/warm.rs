@@ -236,7 +236,7 @@ mod tests {
     use crate::graph::{OpKind, Role};
     use crate::network::Cluster;
     use crate::profiler;
-    use crate::service::fingerprint::env_fingerprint;
+    use crate::service::fingerprint::{env_fingerprint, EstimatorFp};
 
     fn workload() -> TrainingGraph {
         let mut b = GraphBuilder::new("warm-wl", 12);
@@ -271,7 +271,7 @@ mod tests {
         let prof = profiler::profile(&g, &d, &c, 2, 5);
         let est = CostEstimator::oracle(&prof, &d);
         let cfg = quick_cfg();
-        let env = env_fingerprint(&c, &d, "oracle", &cfg);
+        let env = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
         let mut store = PlanStore::in_memory(8);
         let warm = WarmOptions::default();
         let first = plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap();
@@ -295,12 +295,12 @@ mod tests {
         let cfg = quick_cfg();
         let mut store = PlanStore::in_memory(8);
         let warm = WarmOptions::default();
-        let env_a = env_fingerprint(&c, &d, "oracle", &cfg);
+        let env_a = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
         let _ = plan_with_store(&g, &est, &cfg, env_a, &mut store, &warm).unwrap();
         // Same graph, different seed → different env key → not a store
         // hit, but warm-started from the sibling plan.
         let cfg2 = SearchConfig { seed: 11, ..quick_cfg() };
-        let env_b = env_fingerprint(&c, &d, "oracle", &cfg2);
+        let env_b = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg2);
         let out = plan_with_store(&g, &est, &cfg2, env_b, &mut store, &warm).unwrap();
         assert_eq!(out.source, PlanSource::Warm);
         assert!(out.warm_hits > 0);
@@ -339,10 +339,10 @@ mod tests {
         let cfg = quick_cfg();
         let mut store = PlanStore::in_memory(8);
         let warm_off = WarmOptions { enabled: false, ..WarmOptions::default() };
-        let env_a = env_fingerprint(&c, &d, "oracle", &cfg);
+        let env_a = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
         let _ = plan_with_store(&g, &est, &cfg, env_a, &mut store, &warm_off).unwrap();
         let cfg2 = SearchConfig { seed: 11, ..quick_cfg() };
-        let env_b = env_fingerprint(&c, &d, "oracle", &cfg2);
+        let env_b = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg2);
         let out = plan_with_store(&g, &est, &cfg2, env_b, &mut store, &warm_off).unwrap();
         assert_eq!(out.source, PlanSource::Cold);
         assert_eq!(out.steps_saved, 0);

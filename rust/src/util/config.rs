@@ -11,15 +11,18 @@
 //!                "seed": 7, "chunking": true, "max_chunks": 8},
 //!   "service": {"addr": "127.0.0.1:7077", "store_path": "plans.jsonl",
 //!                "capacity": 512, "warm_start": true, "nearest": true,
-//!                "max_conns": 256}
+//!                "max_conns": 256, "cold_budget_ms": 0, "max_cold": 8}
 //! }
 //! ```
 //!
 //! Every field is optional; omitted ones keep the preset/default. The
 //! `service` section configures `disco serve`'s plan store (DESIGN.md
 //! §11): `store_path` (JSONL file; the string `"none"` = memory-only),
-//! `capacity` (LRU bound on cached plans) and the `warm_start`/`nearest`
-//! toggles.
+//! `capacity` (LRU bound on cached plans), the `warm_start`/`nearest`
+//! toggles, and the admission-control knobs (DESIGN.md §14):
+//! `cold_budget_ms` (per-request cold-search deadline, 0 = unlimited)
+//! and `max_cold` (concurrent cold-search cap, separate from
+//! `max_conns`).
 
 use crate::device::DeviceModel;
 use crate::network::Cluster;
@@ -183,6 +186,12 @@ impl Config {
             if let Some(m) = v.get("max_conns").as_usize() {
                 cfg.service.max_conns = m;
             }
+            if let Some(b) = v.get("cold_budget_ms").as_f64() {
+                cfg.service.cold_budget_ms = b.max(0.0);
+            }
+            if let Some(mc) = v.get("max_cold").as_usize() {
+                cfg.service.max_cold = mc;
+            }
         }
         Ok(cfg)
     }
@@ -257,6 +266,23 @@ mod tests {
         assert!(d.service.warm_start && d.service.nearest);
         assert_eq!(d.service.capacity, 512);
         assert!(!d.search.track_best_path);
+    }
+
+    #[test]
+    fn admission_control_knobs_apply() {
+        let c = Config::from_json_str(
+            r#"{"service": {"cold_budget_ms": 1500, "max_cold": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.service.cold_budget_ms, 1500.0);
+        assert_eq!(c.service.max_cold, 2);
+        // Defaults: budget off, cap at 8 (DESIGN.md §14).
+        let d = Config::from_json_str("{}").unwrap();
+        assert_eq!(d.service.cold_budget_ms, 0.0);
+        assert_eq!(d.service.max_cold, 8);
+        // Negative budget clamps to "off" instead of going backwards.
+        let n = Config::from_json_str(r#"{"service": {"cold_budget_ms": -5}}"#).unwrap();
+        assert_eq!(n.service.cold_budget_ms, 0.0);
     }
 
     #[test]

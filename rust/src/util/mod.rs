@@ -1,6 +1,7 @@
 //! Small in-tree substitutes for crates unavailable in the airgapped build
 //! (rand, serde_json, clap, criterion, proptest) plus shared numerics.
 
+pub mod checksum;
 pub mod config;
 pub mod frame;
 pub mod rng;

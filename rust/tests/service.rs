@@ -11,9 +11,10 @@ use disco::network::Cluster;
 use disco::profiler;
 use disco::prop_assert;
 use disco::search::SearchConfig;
+use disco::service::store::frame_line;
 use disco::service::{
-    env_fingerprint, graph_fingerprint, plan_with_store, request, PlanSource, PlanStore,
-    ServeOptions, Server, WarmOptions,
+    env_fingerprint, fsck, graph_fingerprint, plan_with_store, request, DiskFaultPlan,
+    EstimatorFp, PlanSource, PlanStore, ServeOptions, Server, StoreError, WarmOptions,
 };
 use disco::sim::CostSource;
 use disco::util::json::Json;
@@ -203,16 +204,28 @@ fn prop_fingerprint_sensitive_to_semantic_edits() {
 fn env_fingerprint_separates_cluster_estimator_and_seed() {
     let cfg = quick_cfg();
     let d = DeviceModel::gtx1080ti();
-    let a = env_fingerprint(&Cluster::cluster_a(), &d, "analytical", &cfg);
-    assert_ne!(a, env_fingerprint(&Cluster::cluster_b(), &d, "analytical", &cfg));
-    assert_ne!(a, env_fingerprint(&Cluster::cluster_a(), &d, "oracle", &cfg));
+    let ana = EstimatorFp::named("analytical");
+    let a = env_fingerprint(&Cluster::cluster_a(), &d, &ana, &cfg);
+    assert_ne!(a, env_fingerprint(&Cluster::cluster_b(), &d, &ana, &cfg));
+    assert_ne!(a, env_fingerprint(&Cluster::cluster_a(), &d, &EstimatorFp::named("oracle"), &cfg));
     assert_ne!(
         a,
         env_fingerprint(
             &Cluster::cluster_a(),
             &d,
-            "analytical",
+            &ana,
             &SearchConfig { seed: 8, ..quick_cfg() }
+        )
+    );
+    // Estimator *content* separates too: same name, different trained
+    // parameters → different key (DESIGN.md §11).
+    assert_ne!(
+        a,
+        env_fingerprint(
+            &Cluster::cluster_a(),
+            &d,
+            &EstimatorFp::with_params("analytical", b"retrained"),
+            &cfg
         )
     );
 }
@@ -232,7 +245,7 @@ fn second_plan_is_store_hit_with_zero_simulator_invocations() {
     let prof = profiler::profile(&g, &d, &c, 2, 5);
     let est = CostEstimator::oracle(&prof, &d);
     let cfg = quick_cfg();
-    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let env = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
     let mut store = PlanStore::in_memory(16);
     let warm = WarmOptions::default();
 
@@ -262,7 +275,7 @@ fn warm_start_on_perturbed_graph_saves_steps() {
     let d = DeviceModel::gtx1080ti();
     let c = Cluster::cluster_a();
     let cfg = quick_cfg();
-    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let env = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
     let mut store = PlanStore::in_memory(16);
     let warm = WarmOptions::default();
 
@@ -309,7 +322,7 @@ fn relabeled_graph_is_not_blindly_replayed() {
     let d = DeviceModel::gtx1080ti();
     let c = Cluster::cluster_a();
     let cfg = quick_cfg();
-    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let env = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
     let mut store = PlanStore::in_memory(16);
     let warm = WarmOptions::default();
     let prof = profiler::profile(&g, &d, &c, 2, 5);
@@ -337,7 +350,7 @@ fn store_hit_survives_reopen() {
     let prof = profiler::profile(&g, &d, &c, 2, 5);
     let est = CostEstimator::oracle(&prof, &d);
     let cfg = quick_cfg();
-    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let env = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
     let warm = WarmOptions::default();
     let first_cost = {
         let mut store = PlanStore::open(&path, 16).unwrap();
@@ -350,11 +363,12 @@ fn store_hit_survives_reopen() {
     let _ = std::fs::remove_file(&path);
 }
 
-/// Record-format compatibility (DESIGN.md §13): a v1 JSONL line — the
-/// pre-chunking record format, whose mutation list only carries the
-/// "ops"/"ar" tags — must load under the v2 store and serve a store hit
-/// that replays UNCHUNKED with zero simulator invocations. Old caches
-/// are never corrupted and never silently re-searched.
+/// Record-format compatibility (DESIGN.md §13/§14): a bare v1 JSONL
+/// line — the pre-chunking, pre-framing record format, whose mutation
+/// list only carries the "ops"/"ar" tags — must load under the v3 store
+/// and serve a store hit that replays UNCHUNKED with zero simulator
+/// invocations. Old caches are never corrupted and never silently
+/// re-searched.
 #[test]
 fn v1_store_lines_replay_unchunked_with_zero_sim_calls() {
     let dir = std::env::temp_dir().join(format!("disco-v1-compat-{}", std::process::id()));
@@ -368,23 +382,37 @@ fn v1_store_lines_replay_unchunked_with_zero_sim_calls() {
     let prof = profiler::profile(&g, &d, &c, 2, 5);
     let est = CostEstimator::oracle(&prof, &d);
     let cfg = quick_cfg(); // chunking off: the paper's fusion-only vocabulary
-    let env = env_fingerprint(&c, &d, "oracle", &cfg);
+    let env = env_fingerprint(&c, &d, &EstimatorFp::named("oracle"), &cfg);
     let warm = WarmOptions::default();
     let first_cost = {
         let mut store = PlanStore::open(&path, 16).unwrap();
         plan_with_store(&g, &est, &cfg, env, &mut store, &warm).unwrap().best_cost_ms
     };
 
-    // Downgrade every line to record version 1. With chunking off the
-    // mutation list is already v1-shaped, so the rewritten file is
-    // byte-for-byte what a pre-chunking build would have written.
+    // Downgrade every line to what a pre-framing v1 build wrote: strip
+    // the `v3:<gen>:<len>:<crc>:` frame and set the inner version to 1.
+    // With chunking off the mutation list is already v1-shaped, so the
+    // rewritten file is byte-for-byte a pre-chunking store.
     let text = std::fs::read_to_string(&path).unwrap();
-    assert!(text.contains("\"v\":2"), "expected v2 records on disk: {text}");
+    assert!(
+        text.lines().all(|l| l.starts_with("v3:")),
+        "expected v3-framed records on disk: {text}"
+    );
     assert!(!text.contains("\"t\":\"ck\""), "fusion-only plan must carry no chunk mutations");
-    std::fs::write(&path, text.replace("\"v\":2", "\"v\":1")).unwrap();
+    let legacy: String = text
+        .lines()
+        .map(|l| l.splitn(5, ':').nth(4).expect("malformed v3 frame").replace("\"v\":3", "\"v\":1"))
+        .map(|payload| payload + "\n")
+        .collect();
+    std::fs::write(&path, legacy).unwrap();
 
     let mut reopened = PlanStore::open(&path, 16).unwrap();
-    assert_eq!(reopened.skipped, 0, "v1 lines must still parse under the v2 store");
+    assert_eq!(reopened.skipped, 0, "v1 lines must still parse under the v3 store");
+    assert_eq!(
+        reopened.recovery.legacy, reopened.recovery.total_lines,
+        "bare v1 lines load as legacy verified-by-parse"
+    );
+    assert!(reopened.recovery.is_clean(), "an old-but-undamaged store must not be rewritten");
     let out = plan_with_store(&g, &PanicCost, &cfg, env, &mut reopened, &warm).unwrap();
     assert_eq!(out.source, PlanSource::Store);
     assert_eq!(out.evals, 0);
@@ -415,7 +443,8 @@ fn chunked_plan_record_survives_reopen() {
         store.put(rec.clone()).unwrap();
     }
     let text = std::fs::read_to_string(&path).unwrap();
-    assert!(text.contains("\"v\":2"), "chunk-carrying record must be versioned v2");
+    assert!(text.starts_with("v3:"), "record must carry the v3 durability frame: {text}");
+    assert!(text.contains("\"v\":3"), "record payload must be versioned v3");
     assert!(text.contains("\"t\":\"ck\""), "chunk mutation missing from the wire: {text}");
 
     let reloaded = PlanStore::open(&path, 8).unwrap();
@@ -441,18 +470,22 @@ fn plan_request(graph: &TrainingGraph, unchanged: usize) -> Json {
     ])
 }
 
+fn spawn_server_with(opts: ServeOptions) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind(&opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
 fn spawn_server() -> (String, std::thread::JoinHandle<()>) {
-    let opts = ServeOptions {
+    spawn_server_with(ServeOptions {
         addr: "127.0.0.1:0".to_string(),
         store_path: None,
         capacity: 32,
         warm: WarmOptions::default(),
         max_conns: 256,
-    };
-    let server = Server::bind(&opts).unwrap();
-    let addr = server.local_addr().to_string();
-    let handle = std::thread::spawn(move || server.run().unwrap());
-    (addr, handle)
+        ..ServeOptions::default()
+    })
 }
 
 #[test]
@@ -482,6 +515,18 @@ fn serve_end_to_end_second_request_is_store_hit() {
     let stats = request(&addr, &Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
     assert_eq!(stats.get("searches").as_usize(), Some(1));
     assert_eq!(stats.get("store_hits").as_usize(), Some(1));
+    // The `--metrics` surface (DESIGN.md §14): cold/shed/degradation
+    // counters and the resolve-latency percentiles are always present.
+    assert_eq!(stats.get("cold_searches").as_usize(), Some(1));
+    assert_eq!(stats.get("shed_cold").as_usize(), Some(0));
+    assert_eq!(stats.get("deadline_exceeded").as_usize(), Some(0));
+    assert_eq!(stats.get("store_corrupt_skipped").as_usize(), Some(0));
+    assert_eq!(stats.get("store_write_errors").as_usize(), Some(0));
+    assert_eq!(stats.get("store_degraded").as_bool(), Some(false));
+    assert!(stats.get("resolve_samples").as_usize().unwrap() >= 2, "both plans were timed");
+    let p50 = stats.get("resolve_p50_ms").as_f64().unwrap();
+    let p99 = stats.get("resolve_p99_ms").as_f64().unwrap();
+    assert!(p50 >= 0.0 && p99 >= p50, "percentiles out of order: p50 {p50}, p99 {p99}");
 
     let bye = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
     assert_eq!(bye.get("ok").as_bool(), Some(true));
@@ -640,4 +685,355 @@ fn store_lock_is_stolen_from_a_dead_holder() {
     assert!(s.peek("k").is_some());
     assert!(!lock.exists(), "lock file leaked after the put");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Store durability (DESIGN.md §14): hostile inputs, crash recovery at
+// every byte offset, seeded disk-fault degradation.
+// ---------------------------------------------------------------------------
+
+/// Content spans of each line in a JSONL byte buffer: `(start, end)`
+/// exclusive of the terminating newline.
+fn line_spans(data: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut start = 0usize;
+    for (i, &b) in data.iter().enumerate() {
+        if b == b'\n' {
+            spans.push((start, i));
+            start = i + 1;
+        }
+    }
+    if start < data.len() {
+        spans.push((start, data.len()));
+    }
+    spans
+}
+
+/// Hostile-store corpus: every damage class the recovery state machine
+/// documents, in one file — a checksum failure, a length-header lie,
+/// non-UTF8 bytes, a stale duplicate (higher generation EARLIER in the
+/// file) and an orphan compaction snapshot. `fsck` reports it all
+/// without writing; `open` recovers, serves exactly the verified
+/// records and repairs the file. Zero panics anywhere.
+#[test]
+fn hostile_store_corpus_recovers_with_documented_outcomes() {
+    let dir = std::env::temp_dir().join(format!("disco-hostile-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let rec = |k: &str, c: f64| shared_record(k, c).to_json().to_string();
+    let mut data: Vec<u8> = Vec::new();
+    // 1: a valid v3 line.
+    data.extend_from_slice(frame_line(1, &rec("good", 1.0)).as_bytes());
+    data.push(b'\n');
+    // 2: checksum failure — intact frame, one payload byte flipped.
+    let mut bad_crc = frame_line(2, &rec("badcrc", 2.0)).into_bytes();
+    let last = bad_crc.len() - 1;
+    bad_crc[last] ^= 0x01;
+    data.extend_from_slice(&bad_crc);
+    data.push(b'\n');
+    // 3: length-header lie (declared length ≠ payload length).
+    let p = rec("badlen", 3.0);
+    data.extend_from_slice(format!("v3:1:{}:{:08x}:{p}", p.len() + 7, 0).as_bytes());
+    data.push(b'\n');
+    // 4: non-UTF8 garbage.
+    data.extend_from_slice(&[0xFF, 0xFE, 0x80, b'{', b'x', 0xC0]);
+    data.push(b'\n');
+    // 5+6: duplicate key, generation 5 BEFORE generation 3 — the higher
+    // generation must win regardless of file order.
+    data.extend_from_slice(frame_line(5, &rec("dup", 5.0)).as_bytes());
+    data.push(b'\n');
+    data.extend_from_slice(frame_line(3, &rec("dup", 3.0)).as_bytes());
+    data.push(b'\n');
+    std::fs::write(&path, &data).unwrap();
+    // 7: orphan snapshot from a crash between snapshot write and rename.
+    let orphan = dir.join("plans.jsonl.snap.99999");
+    std::fs::write(&orphan, b"half-written snapshot").unwrap();
+
+    // fsck without --repair: full report, zero writes.
+    let report = fsck(&path, false).unwrap();
+    assert_eq!(report.total_lines, 6);
+    assert_eq!(report.verified, 3, "good + both dup generations verify");
+    assert_eq!(report.legacy, 0);
+    assert_eq!(report.corrupt, 3, "bad crc, bad length, non-UTF8");
+    assert!(!report.torn_tail);
+    assert_eq!(report.duplicates, 1);
+    assert_eq!(report.orphan_snapshots, 1);
+    assert_eq!(report.live, 2);
+    assert!(!report.is_clean() && !report.repaired);
+    assert_eq!(std::fs::read(&path).unwrap(), data, "fsck without --repair must not write");
+    assert!(orphan.exists(), "fsck without --repair must not sweep");
+
+    // open recovers: verified records served, higher generation wins,
+    // orphan swept, file rewritten clean.
+    let s = PlanStore::open(&path, 8).unwrap();
+    assert_eq!(s.len(), 2);
+    assert_eq!(s.peek("good"), Some(&shared_record("good", 1.0)));
+    assert_eq!(s.peek("dup"), Some(&shared_record("dup", 5.0)));
+    assert_eq!(s.skipped, 3);
+    assert!(s.recovery.repaired);
+    assert_eq!(s.recovery.orphan_snapshots, 1);
+    assert!(!orphan.exists(), "open sweeps orphan snapshots");
+    drop(s);
+    let clean = fsck(&path, false).unwrap();
+    assert!(clean.is_clean(), "repaired store must fsck clean: {clean:?}");
+    assert_eq!((clean.live, clean.verified), (2, 2));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash-recovery property: truncate the store at EVERY byte offset
+/// (a crash mid-append can stop anywhere). Reopening must recover
+/// exactly the records whose full line content fits in the surviving
+/// prefix — no panic, no partial record served — and the store must
+/// accept new writes afterwards.
+#[test]
+fn crash_recovery_truncation_at_every_byte_offset() {
+    let dir = std::env::temp_dir().join(format!("disco-crash-trunc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let keys = ["a", "b", "c"];
+    {
+        let mut s = PlanStore::open(&path, 8).unwrap();
+        for (i, k) in keys.iter().enumerate() {
+            s.put(shared_record(k, (i + 1) as f64)).unwrap();
+        }
+    }
+    let full = std::fs::read(&path).unwrap();
+    let spans = line_spans(&full);
+    assert_eq!(spans.len(), keys.len());
+
+    for cut in 0..=full.len() {
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let s = PlanStore::open(&path, 8)
+            .unwrap_or_else(|e| panic!("open failed at truncation offset {cut}: {e}"));
+        // A line survives iff its full content fits in the prefix (the
+        // final newline itself is optional — a complete unterminated
+        // line still verifies).
+        let expect = spans.iter().filter(|&&(_, end)| end <= cut).count();
+        assert_eq!(s.len(), expect, "wrong survivor count at offset {cut}");
+        for (i, k) in keys.iter().take(expect).enumerate() {
+            assert_eq!(
+                s.peek(k),
+                Some(&shared_record(k, (i + 1) as f64)),
+                "record {k} damaged at offset {cut}"
+            );
+        }
+        let torn = spans.iter().any(|&(start, end)| start < cut && cut < end);
+        assert_eq!(s.recovery.torn_tail, torn, "torn-tail misclassified at offset {cut}");
+
+        // Spot-check the post-recovery write path: a put lands and the
+        // store reopens clean.
+        if cut % 37 == 0 {
+            drop(s);
+            let mut s = PlanStore::open(&path, 8).unwrap();
+            s.put(shared_record("z", 99.0)).unwrap();
+            drop(s);
+            let r = PlanStore::open(&path, 8).unwrap();
+            assert!(r.recovery.is_clean(), "post-recovery put left damage at offset {cut}");
+            assert_eq!(r.len(), expect + 1);
+            assert_eq!(r.peek("z"), Some(&shared_record("z", 99.0)));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash-recovery property: flip one byte at EVERY offset (a garbled
+/// sector). The containing line — both lines, when the flipped byte is
+/// the newline joining them — must be detected and dropped; every other
+/// record must survive byte-exact. The checksum makes this total: no
+/// single-byte corruption can smuggle a wrong record through.
+#[test]
+fn crash_recovery_corruption_at_every_byte_offset() {
+    let dir = std::env::temp_dir().join(format!("disco-crash-flip-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let keys = ["a", "b", "c"];
+    {
+        let mut s = PlanStore::open(&path, 8).unwrap();
+        for (i, k) in keys.iter().enumerate() {
+            s.put(shared_record(k, (i + 1) as f64)).unwrap();
+        }
+    }
+    let full = std::fs::read(&path).unwrap();
+    let spans = line_spans(&full);
+
+    for off in 0..full.len() {
+        let mut data = full.clone();
+        data[off] ^= 0x41;
+        std::fs::write(&path, &data).unwrap();
+        let s = PlanStore::open(&path, 8)
+            .unwrap_or_else(|e| panic!("open failed with flip at offset {off}: {e}"));
+        // Lines whose content contains the flip; a flipped newline
+        // merges its two neighbours into one invalid line.
+        let mut affected: Vec<usize> = spans
+            .iter()
+            .enumerate()
+            .filter(|&(_, &(start, end))| off >= start && off < end)
+            .map(|(i, _)| i)
+            .collect();
+        if affected.is_empty() {
+            let i = spans.iter().position(|&(_, end)| end == off).unwrap();
+            affected.push(i);
+            if i + 1 < spans.len() {
+                affected.push(i + 1);
+            }
+        }
+        assert_eq!(s.len(), keys.len() - affected.len(), "survivor count at offset {off}");
+        assert_eq!(
+            s.recovery.corrupt + usize::from(s.recovery.torn_tail),
+            1,
+            "exactly one damage site at offset {off}"
+        );
+        for (i, k) in keys.iter().enumerate() {
+            if affected.contains(&i) {
+                assert!(s.peek(k).is_none(), "damaged record {k} served at offset {off}");
+            } else {
+                assert_eq!(
+                    s.peek(k),
+                    Some(&shared_record(k, (i + 1) as f64)),
+                    "record {k} not byte-exact at offset {off}"
+                );
+            }
+        }
+        if off % 37 == 0 {
+            drop(s);
+            let mut s = PlanStore::open(&path, 8).unwrap();
+            s.put(shared_record("z", 99.0)).unwrap();
+            drop(s);
+            let r = PlanStore::open(&path, 8).unwrap();
+            assert!(r.recovery.is_clean(), "post-recovery put left damage at offset {off}");
+            assert_eq!(r.peek("z"), Some(&shared_record("z", 99.0)));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Seeded disk-fault injection (DESIGN.md §14): a torn append degrades
+/// the store to memory-only for that record — the put still succeeds,
+/// the record is served from memory, the damage is counted, and a
+/// fault-free reopen truncates the torn bytes away.
+#[test]
+fn store_put_degrades_to_memory_only_on_disk_fault() {
+    let dir = std::env::temp_dir().join(format!("disco-fault-put-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.jsonl");
+    let _ = std::fs::remove_file(&path);
+    // Fresh file: no open-time read, so op 1 is the first append and
+    // op 2 (the second put) tears after 10 bytes.
+    let plan = std::sync::Arc::new(DiskFaultPlan::parse("torn@2:10", 0xFA11).unwrap());
+    let mut s = PlanStore::open_with(&path, 8, Some(plan.clone())).unwrap();
+    s.put(shared_record("a", 1.0)).unwrap();
+    assert!(!s.degraded);
+    s.put(shared_record("b", 2.0)).unwrap();
+    assert!(s.degraded, "torn append must degrade, not fail the put");
+    assert_eq!(s.write_errors, 1);
+    assert_eq!(s.peek("b"), Some(&shared_record("b", 2.0)), "record must stay served");
+    assert_eq!(plan.ops_issued(), 2);
+    drop(s);
+
+    let r = PlanStore::open(&path, 8).unwrap();
+    assert!(r.recovery.torn_tail, "the torn append is a torn tail on reopen");
+    assert!(r.recovery.repaired);
+    assert_eq!(r.len(), 1);
+    assert!(r.peek("a").is_some() && r.peek("b").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An explicit compaction whose rename step fails must surface a typed
+/// [`StoreError::Io`] naming the step, leak no snapshot file, and leave
+/// the original store intact.
+#[test]
+fn store_compact_surfaces_rename_failure_as_typed_error() {
+    let dir = std::env::temp_dir().join(format!("disco-fault-compact-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.jsonl");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut s = PlanStore::open(&path, 8).unwrap();
+        s.put(shared_record("a", 1.0)).unwrap();
+    }
+    // Ops under fault: 1 = open-time read, 2 = compaction read, 3 =
+    // snapshot write, 4 = the rename landing the snapshot.
+    let plan = std::sync::Arc::new(DiskFaultPlan::parse("err@4", 0xFA11).unwrap());
+    let mut s = PlanStore::open_with(&path, 8, Some(plan)).unwrap();
+    assert!(s.recovery.is_clean());
+    let err = s.compact().unwrap_err();
+    match err.downcast_ref::<StoreError>() {
+        Some(StoreError::Io { op, .. }) => assert_eq!(*op, "rename"),
+        other => panic!("expected a typed rename StoreError, got {other:?}"),
+    }
+    let snap = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".snap.{}", std::process::id()));
+        std::path::PathBuf::from(os)
+    };
+    assert!(!snap.exists(), "failed compaction leaked its snapshot");
+    drop(s);
+    let r = PlanStore::open(&path, 8).unwrap();
+    assert!(r.recovery.is_clean(), "failed rename must leave the original intact");
+    assert_eq!(r.peek("a"), Some(&shared_record("a", 1.0)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Admission control (DESIGN.md §14): cold-search cap and deadline budget.
+// ---------------------------------------------------------------------------
+
+/// `max_cold: 0` is a replay-only server: every cold request is shed
+/// with a typed `retry_after` frame before any search work starts.
+#[test]
+fn serve_sheds_cold_searches_at_zero_cap() {
+    let (addr, handle) = spawn_server_with(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        store_path: None,
+        capacity: 32,
+        warm: WarmOptions::default(),
+        max_conns: 256,
+        cold_budget_ms: 0.0,
+        max_cold: 0,
+    });
+    let g = workload(0);
+    let resp = request(&addr, &plan_request(&g, 40)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "got: {resp:?}");
+    assert_eq!(resp.get("kind").as_str(), Some("retry_after"));
+    assert!(resp.get("retry_after_ms").as_f64().unwrap() > 0.0);
+
+    let stats = request(&addr, &Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("shed_cold").as_usize(), Some(1));
+    assert_eq!(stats.get("searches").as_usize(), Some(0), "no search may have run");
+    assert_eq!(stats.get("max_cold").as_usize(), Some(0));
+    let _ = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    handle.join().unwrap();
+}
+
+/// A request whose `budget_ms` is already exhausted by the time
+/// admission runs gets a typed `deadline` frame — the server never
+/// starts a cold search it has no time to finish. The same request
+/// without a budget is admitted (and lands under a DIFFERENT store key:
+/// the budget folds into the search config's time limit, which is part
+/// of the environment fingerprint).
+#[test]
+fn serve_enforces_request_deadline_budget() {
+    let (addr, handle) = spawn_server();
+    let g = workload(0);
+    let mut req = plan_request(&g, 40);
+    if let Json::Obj(m) = &mut req {
+        m.insert("budget_ms".into(), Json::Num(1e-4));
+    }
+    let resp = request(&addr, &req).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "got: {resp:?}");
+    assert_eq!(resp.get("kind").as_str(), Some("deadline"));
+    assert_eq!(resp.get("budget_ms").as_f64(), Some(1e-4));
+
+    let stats = request(&addr, &Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("deadline_exceeded").as_usize(), Some(1));
+
+    let ok = request(&addr, &plan_request(&g, 40)).unwrap();
+    assert_eq!(ok.get("ok").as_bool(), Some(true), "unbudgeted twin must be admitted: {ok:?}");
+    assert_eq!(ok.get("source").as_str(), Some("cold"));
+    let _ = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    handle.join().unwrap();
 }
