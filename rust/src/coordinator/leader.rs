@@ -19,9 +19,22 @@ use crate::graph::TrainingGraph;
 use crate::network::Cluster;
 use crate::service::arena_fingerprint;
 use crate::util::frame::FrameReader;
+use crate::util::trace::{Event, SharedSink, TrackId};
 use std::io;
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
+
+/// Enactment pid in the shared track scheme (DESIGN.md §15).
+pub const ENACT_PID: u32 = 3;
+
+/// Leader phase lane: Join/Ack/Run spans.
+pub const LEADER_TRACK: TrackId = TrackId::new(ENACT_PID, 0);
+
+/// One lane per rank: leader-observed instants (join/ack/heartbeat/
+/// report/retire) interleaved with worker-side iteration spans.
+pub fn rank_track(rank: usize) -> TrackId {
+    TrackId::new(ENACT_PID, rank as u32 + 1)
+}
 
 /// Enactment configuration.
 #[derive(Debug, Clone)]
@@ -52,6 +65,10 @@ pub struct EnactConfig {
     pub straggler_timeout_ms: u64,
     /// Injected faults for in-process workers (chaos testing only).
     pub fault: Option<FaultPlan>,
+    /// Record a per-rank timeline of the round (DESIGN.md §15): leader
+    /// phase spans, rank lifecycle instants, worker iteration spans —
+    /// returned in [`EnactReport::trace_events`]. Pure observation.
+    pub trace: bool,
 }
 
 impl Default for EnactConfig {
@@ -69,6 +86,7 @@ impl Default for EnactConfig {
             max_rank_retries: 1,
             straggler_timeout_ms: 0,
             fault: None,
+            trace: false,
         }
     }
 }
@@ -151,6 +169,11 @@ pub struct EnactReport {
     /// In-process worker threads joined before returning — always equal
     /// to the number spawned (leak check).
     pub workers_joined: usize,
+    /// Timeline of the round (empty unless [`EnactConfig::trace`]):
+    /// render with `util::trace::to_chrome_json(&events, &tracks)`.
+    pub trace_events: Vec<Event>,
+    /// Track labels for `trace_events` (leader + one per rank).
+    pub trace_tracks: Vec<(TrackId, String)>,
 }
 
 /// One live worker connection.
@@ -235,9 +258,18 @@ struct Engine {
     phase_timeout: Duration,
     max_rank_retries: usize,
     straggler_timeout: Option<Duration>,
+    /// Shared timeline sink (None = tracing off; never touched then).
+    tr: Option<SharedSink>,
 }
 
 impl Engine {
+    /// Instant on a rank's lane; no-op with tracing off.
+    fn mark(&self, rank: usize, name: String, args: Vec<(&'static str, f64)>) {
+        if let Some(tr) = &self.tr {
+            tr.emit(Event::instant(rank_track(rank), name, tr.now_ms(), "enact").with_args(args));
+        }
+    }
+
     fn io_deadline(&self) -> Instant {
         // Frame writes to a local worker are small; bound them by a
         // short slice of the phase budget so one wedged peer can't eat
@@ -247,12 +279,14 @@ impl Engine {
 
     fn retire(&mut self, rank: usize, reason: impl Into<String>) {
         let reason = reason.into();
-        let slot = &mut self.slots[rank];
-        if slot.retired.is_none() {
-            slot.retired = Some(reason);
+        if self.slots[rank].retired.is_none() {
+            // The retire instant is the last leader-side event on this
+            // rank's lane — the well-formedness tests pin that.
+            self.mark(rank, format!("retire: {reason}"), Vec::new());
+            self.slots[rank].retired = Some(reason);
         }
         // Close the socket so the worker learns promptly.
-        slot.conn = None;
+        self.slots[rank].conn = None;
     }
 
     /// Accept fresh sockets (nonblocking) into the pending set.
@@ -332,12 +366,21 @@ impl Engine {
             return;
         }
         self.slots[rank].conn = Some(conn);
+        let n = self.slots[rank].admissions;
+        self.mark(
+            rank,
+            if n > 1 { "readmit".to_string() } else { "join".to_string() },
+            vec![("admissions", n as f64)],
+        );
     }
 
     /// A rank's connection became unusable: re-admittable while its
     /// retry budget lasts, retired otherwise.
     fn conn_lost(&mut self, rank: usize, reason: &str) {
         self.slots[rank].conn = None;
+        if self.slots[rank].retired.is_none() {
+            self.mark(rank, format!("conn-lost: {reason}"), Vec::new());
+        }
         let readmits_used = self.slots[rank].admissions.saturating_sub(1);
         if readmits_used >= self.max_rank_retries {
             self.retire(rank, format!("{reason} (retries exhausted)"));
@@ -394,6 +437,7 @@ impl Engine {
                     return;
                 }
                 self.slots[rank].acked = true;
+                self.mark(rank, "ack".to_string(), Vec::new());
                 // Pipelined: a verified rank starts running immediately;
                 // ranks that already reported (re-ack after a post-report
                 // reconnect) are not re-run.
@@ -406,9 +450,10 @@ impl Engine {
                     }
                 }
             }
-            Msg::Heartbeat { rank: r, .. } => {
+            Msg::Heartbeat { rank: r, iter } => {
                 if r == rank {
                     self.slots[rank].heartbeats += 1;
+                    self.mark(rank, "heartbeat".to_string(), vec![("iter", iter as f64)]);
                 } else {
                     self.retire(rank, format!("heartbeat rank mismatch: said {r}"));
                 }
@@ -420,6 +465,7 @@ impl Engine {
                 }
                 self.slots[rank].report = (makespan_ms, comp_ms, comm_ms);
                 self.slots[rank].reported = true;
+                self.mark(rank, "report".to_string(), vec![("makespan_ms", makespan_ms)]);
             }
             Msg::Error { reason, .. } => {
                 self.retire(rank, format!("worker error: {reason}"));
@@ -526,6 +572,16 @@ pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport, En
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
 
+    // One shared clock + buffer for the leader and its in-process
+    // workers, so all lanes sit on a single timeline.
+    let tr = cfg.trace.then(SharedSink::new);
+    if let Some(t) = &tr {
+        t.name_track(LEADER_TRACK, "leader");
+        for r in 0..cfg.world {
+            t.name_track(rank_track(r), &format!("rank {r}"));
+        }
+    }
+
     // Optionally host the workers ourselves (single-machine mode). Their
     // deadlines derive from the phase budget so a hung leader can't
     // strand them, and their retry budget mirrors the leader's
@@ -545,6 +601,7 @@ pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport, En
                 backoff_cap_ms: 100,
                 seed: cfg.seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15),
                 faults: cfg.fault.as_ref().map(|p| p.for_rank(rank)),
+                trace: tr.clone(),
             };
             worker_handles.push(std::thread::spawn(move || {
                 super::worker::run_worker_opts(&addr, rank, &device, &cluster, &opts)
@@ -565,11 +622,21 @@ pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport, En
         max_rank_retries: cfg.max_rank_retries,
         straggler_timeout: (cfg.straggler_timeout_ms > 0)
             .then(|| Duration::from_millis(cfg.straggler_timeout_ms)),
+        tr: tr.clone(),
     };
 
-    let outcome = [Phase::Join, Phase::Ack, Phase::Run]
-        .into_iter()
-        .try_for_each(|p| eng.run_phase(p));
+    let outcome = [Phase::Join, Phase::Ack, Phase::Run].into_iter().try_for_each(|p| {
+        let t0 = eng.tr.as_ref().map_or(0.0, |t| t.now_ms());
+        let res = eng.run_phase(p);
+        if let Some(t) = &eng.tr {
+            let mut ev = Event::span(LEADER_TRACK, p.to_string(), t0, t.now_ms(), "phase");
+            if res.is_err() {
+                ev = ev.with_args(vec![("quorum_lost", 1.0)]);
+            }
+            t.emit(ev);
+        }
+        res
+    });
 
     // Teardown is unconditional: close sockets, stop listening, then
     // join every spawned thread — no leaks on either path. Workers
@@ -634,6 +701,14 @@ pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport, En
         });
     }
     let iteration_ms = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    // Workers are joined, so every producer clone of the sink is done.
+    let (trace_events, trace_tracks) = match &tr {
+        Some(t) => {
+            let m = t.take();
+            (m.events, m.tracks)
+        }
+        None => (Vec::new(), Vec::new()),
+    };
     Ok(EnactReport {
         per_rank,
         iteration_ms,
@@ -642,5 +717,7 @@ pub fn enact(graph: &TrainingGraph, cfg: &EnactConfig) -> Result<EnactReport, En
         degraded: !failed_ranks.is_empty(),
         failed_ranks,
         workers_joined,
+        trace_events,
+        trace_tracks,
     })
 }

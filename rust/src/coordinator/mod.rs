@@ -24,6 +24,9 @@ pub mod leader;
 pub mod worker;
 
 pub use fault::{ChaosStream, Fault, FaultPlan, FaultStream, RankFaults};
-pub use leader::{enact, EnactConfig, EnactError, EnactReport, Phase, RankState, RankStatus};
+pub use leader::{
+    enact, rank_track, EnactConfig, EnactError, EnactReport, Phase, RankState, RankStatus,
+    ENACT_PID, LEADER_TRACK,
+};
 pub use messages::{Msg, MsgError, MAX_FRAME_BYTES, PROTOCOL_VERSION};
 pub use worker::{run_worker, run_worker_opts, Backoff, WorkerOptions};

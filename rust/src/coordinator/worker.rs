@@ -19,6 +19,7 @@ use crate::service::arena_fingerprint;
 use crate::sim::hifi::{execute_real, HifiOptions};
 use crate::util::frame::{FrameError, FrameReader};
 use crate::util::rng::Rng;
+use crate::util::trace::{Event, SharedSink};
 use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
@@ -43,6 +44,9 @@ pub struct WorkerOptions {
     pub seed: u64,
     /// Injected faults for this rank (chaos testing only).
     pub faults: Option<RankFaults>,
+    /// Shared timeline sink from the leader (in-process workers only):
+    /// iteration spans land on this rank's lane with the leader's clock.
+    pub trace: Option<SharedSink>,
 }
 
 impl Default for WorkerOptions {
@@ -56,6 +60,7 @@ impl Default for WorkerOptions {
             backoff_cap_ms: 250,
             seed: 0x5EED,
             faults: None,
+            trace: None,
         }
     }
 }
@@ -263,7 +268,20 @@ fn serve_once(
                         seed: seed.wrapping_add(it as u64),
                         ..Default::default()
                     };
+                    let t0 = opts.trace.as_ref().map_or(0.0, |t| t.now_ms());
                     let r = execute_real(g, device, cluster, &opts1);
+                    if let Some(tr) = &opts.trace {
+                        tr.emit(
+                            Event::span(
+                                super::leader::rank_track(rank),
+                                format!("iter {it}"),
+                                t0,
+                                tr.now_ms(),
+                                "iter",
+                            )
+                            .with_args(vec![("makespan_ms", r.makespan_ms)]),
+                        );
+                    }
                     mk += r.makespan_ms;
                     cp += r.comp_busy_ms;
                     cm += r.comm_busy_ms;

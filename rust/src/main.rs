@@ -4,10 +4,11 @@
 //! disco search    --model transformer --cluster a [--alpha 1.05 --beta 10]
 //!                 [--estimator analytical|gnn|oracle] [--chunking]
 //!                 [--max-chunks 8] [--out strategy.json]
+//!                 [--trace search.json]   # Chrome trace + convergence JSONL
 //! disco serve     [--addr 127.0.0.1:7077] [--store plans.jsonl|none]
 //!                 [--capacity 512] [--max-conns 256] [--no-warm]
 //!                 [--no-nearest] [--cold-budget-ms 0] [--max-cold 8]
-//!                 [--metrics] [--stop]
+//!                 [--metrics] [--prom] [--stop]
 //! disco store     fsck [--store plans.jsonl] [--repair]
 //! disco plan      --model transformer [--graph module.json] [--cluster a]
 //!                 [--addr HOST:PORT] [--store plans.jsonl] [--unchanged 150]
@@ -16,7 +17,7 @@
 //! disco enact     --strategy strategy.json --world 4 [--iterations 10]
 //!                 [--quorum N] [--timeout-ms 10000] [--retries 1]
 //!                 [--straggler-ms 0] [--chaos "kill@3:1,delay@2:80"]
-//!                 [--expect-degraded]
+//!                 [--expect-degraded] [--trace enact.json]
 //! disco worker    --connect 127.0.0.1:7100 --rank 0 [--cluster a]
 //!                 [--retry] [--max-reconnects 3] [--backoff-ms 10]
 //!                 [--timeout-ms 10000]
@@ -109,7 +110,23 @@ fn cmd_search(args: &Args) -> Result<()> {
         cfg.alpha,
         cfg.beta
     );
-    let r = backtracking_search(&p.graph, &est, &cfg);
+    // `--trace out.json` records search telemetry (DESIGN.md §15):
+    // Chrome-trace JSON at the given path plus a convergence-curve JSONL
+    // sibling (same stem, `.jsonl`) whose last line is the final result.
+    let trace_path = args.get("trace");
+    let r = if let Some(path) = trace_path {
+        use disco::util::trace::{to_chrome_json, to_jsonl, MemSink};
+        cfg.trace = true;
+        let mut sink = MemSink::default();
+        let r = disco::search::backtracking_search_traced(&p.graph, &est, &cfg, &[], &mut sink);
+        std::fs::write(path, to_chrome_json(&sink.events, &sink.tracks))?;
+        let jsonl = std::path::Path::new(path).with_extension("jsonl");
+        std::fs::write(&jsonl, to_jsonl(&sink.events))?;
+        println!("wrote search trace to {path} (convergence curve: {})", jsonl.display());
+        r
+    } else {
+        backtracking_search(&p.graph, &est, &cfg)
+    };
     println!(
         "initial {:.3} ms → best {:.3} ms ({:.1}% faster); {} evals in {:.1}s",
         r.initial_cost_ms,
@@ -182,6 +199,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 }
             }
         }
+        return Ok(());
+    }
+    // `--prom`: one scrape of the server's Prometheus-style exposition,
+    // printed raw (pipe to a file, or let CI grep it).
+    if args.has_flag("prom") {
+        let resp = disco::service::request(
+            &opts.addr,
+            &disco::util::json::Json::obj(vec![(
+                "cmd",
+                disco::util::json::Json::Str("metrics".into()),
+            )]),
+        )?;
+        if resp.get("ok").as_bool() != Some(true) {
+            return Err(anyhow!("metrics request failed: {}", resp.to_string()));
+        }
+        print!("{}", resp.get("exposition").as_str().unwrap_or(""));
         return Ok(());
     }
     if args.has_flag("stop") {
@@ -406,6 +439,7 @@ fn cmd_enact(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let trace_path = args.get("trace");
     let cfg = EnactConfig {
         world: args.get_usize("world", 4),
         iterations: args.get_usize("iterations", 10),
@@ -417,9 +451,17 @@ fn cmd_enact(args: &Args) -> Result<()> {
         max_rank_retries: args.get_usize("retries", 1),
         straggler_timeout_ms: args.get_u64("straggler-ms", 0),
         fault,
+        trace: trace_path.is_some(),
         ..Default::default()
     };
     let report = enact(&graph, &cfg)?;
+    // `--trace out.json` — Chrome-trace timeline: leader phase spans on
+    // one lane, one lane per rank (iterations, heartbeats, retire marks).
+    if let Some(path) = trace_path {
+        let json = disco::util::trace::to_chrome_json(&report.trace_events, &report.trace_tracks);
+        std::fs::write(path, json)?;
+        println!("wrote enactment trace to {path}");
+    }
     println!(
         "enactment: {} workers acked; per-iteration {:.3} ms{}",
         report.acks,
@@ -465,6 +507,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         backoff_cap_ms: args.get_u64("backoff-cap-ms", defaults.backoff_cap_ms),
         seed: args.get_u64("seed", defaults.seed),
         faults: None,
+        trace: None,
     };
     disco::coordinator::run_worker_opts(addr, rank, &device, &cluster, &opts)
 }

@@ -50,9 +50,14 @@ use crate::sim::{
     CostSource, CostTable, NoRecord, OrderedF64, SimOptions, SimWorkspace,
 };
 use crate::util::rng::Rng;
+use crate::util::trace::{Event, NullSink, TraceSink, TrackId};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::time::{Duration, Instant};
+
+/// Search telemetry lane in the shared track scheme (DESIGN.md §15):
+/// pid 2 is the search subsystem, one lane of step spans.
+pub const SEARCH_TRACK: TrackId = TrackId::new(2, 1);
 
 /// Which optimization methods the search may use (Fig. 10 ablation knob).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -195,6 +200,12 @@ pub struct SearchConfig {
     /// per enqueued candidate, so it is off by default to keep the hot
     /// path's allocation profile identical to the A/B record's.
     pub track_best_path: bool,
+    /// Emit per-step telemetry events (DESIGN.md §15) to the sink passed
+    /// to [`backtracking_search_traced`]. Pure observation: with the
+    /// toggle off the sink is never touched and the search is
+    /// bit-identical to pre-telemetry behavior (property-tested with a
+    /// panicking sink, the same pattern as the panic-cost-source).
+    pub trace: bool,
 }
 
 impl Default for SearchConfig {
@@ -218,6 +229,7 @@ impl Default for SearchConfig {
             delta_sim: true,
             ckpt_every: 0,
             track_best_path: false,
+            trace: false,
         }
     }
 }
@@ -659,6 +671,25 @@ pub fn backtracking_search_seeded(
     cfg: &SearchConfig,
     seeds: &[Vec<Mutation>],
 ) -> SearchResult {
+    backtracking_search_traced(input, costs, cfg, seeds, &mut NullSink)
+}
+
+/// [`backtracking_search_seeded`] with a telemetry sink: when
+/// [`SearchConfig::trace`] is set, every dequeue step emits one span on
+/// [`SEARCH_TRACK`] (args: step, candidates evaluated, cumulative evals,
+/// best makespan, children accepted, backtracks, warm hits, delta-sim
+/// parent re-sims, wall ms) framed by `initial` / `final` instants — the
+/// convergence curve of the run. The `final` instant's `best_ms` is read
+/// from the same variable returned as [`SearchResult::best_cost_ms`], so
+/// the two agree exactly. With the toggle off the sink is never touched
+/// and results are bit-identical to the untraced search.
+pub fn backtracking_search_traced(
+    input: &TrainingGraph,
+    costs: &(dyn CostSource + Sync),
+    cfg: &SearchConfig,
+    seeds: &[Vec<Mutation>],
+    sink: &mut dyn TraceSink,
+) -> SearchResult {
     let start = Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let methods = cfg.methods.enabled();
@@ -674,6 +705,18 @@ pub fn backtracking_search_seeded(
     let initial_cost = eval_one(input, costs, cfg, &mut ws_pool[0], &mut tables[0]);
     let mut best = input.clone();
     let mut best_cost = initial_cost;
+    if cfg.trace {
+        sink.name_track(SEARCH_TRACK, "search");
+        sink.event(
+            Event::instant(
+                SEARCH_TRACK,
+                "initial",
+                start.elapsed().as_secs_f64() * 1e3,
+                "search-init",
+            )
+            .with_args(vec![("best_ms", initial_cost), ("evals", 1.0)]),
+        );
+    }
 
     // Priority queue of (cost, seq, arena index); the arena holds deltas
     // (or full clones in eager mode).
@@ -686,6 +729,7 @@ pub fn backtracking_search_seeded(
     let mut unchanged = 0usize;
     let mut steps = 0u64;
     let mut evals = 1u64;
+    let mut backtracks = 0u64;
     let mut seq = 1u64;
     let mut warm_hits = 0u64;
     let mut steps_saved = 0u64;
@@ -716,6 +760,21 @@ pub fn backtracking_search_seeded(
                 best_path = applied.clone();
             }
         }
+        if cfg.trace {
+            sink.event(
+                Event::instant(
+                    SEARCH_TRACK,
+                    "warm-seed",
+                    start.elapsed().as_secs_f64() * 1e3,
+                    "search-warm",
+                )
+                .with_args(vec![
+                    ("cost_ms", cost),
+                    ("applied", applied.len() as f64),
+                    ("best_ms", best_cost),
+                ]),
+            );
+        }
         if cost <= cfg.alpha * best_cost && queue.len() < cfg.max_queue {
             let path = if cfg.track_best_path { applied.clone() } else { Vec::new() };
             // The root (arena slot 0) is a materialized `Stored::Graph`,
@@ -737,6 +796,7 @@ pub fn backtracking_search_seeded(
         if cfg.max_seconds > 0.0 && start.elapsed().as_secs_f64() > cfg.max_seconds {
             break;
         }
+        let step_t0 = if cfg.trace { start.elapsed().as_secs_f64() * 1e3 } else { 0.0 };
         // Capture the parent's root-path before this step's pushes can
         // reuse the slot (eager mode reclaims consumed slots eagerly).
         let parent_path: Vec<Mutation> =
@@ -828,6 +888,8 @@ pub fn backtracking_search_seeded(
 
         // --- deterministic merge, in method order ------------------------
         let mut h_is_parent = false;
+        let step_candidates = batch_costs.len();
+        let mut step_accepted = 0u64;
         for (prepared, &cost) in batch.drain(..).zip(&batch_costs) {
             evals += 1;
             if cost < best_cost {
@@ -841,6 +903,7 @@ pub fn backtracking_search_seeded(
                 unchanged = 0;
             } else {
                 unchanged += 1;
+                backtracks += 1;
             }
             if cost <= cfg.alpha * best_cost && queue.len() < cfg.max_queue {
                 let child_path = if cfg.track_best_path {
@@ -858,6 +921,7 @@ pub fn backtracking_search_seeded(
                 };
                 queue.push(Reverse((OrderedF64(cost), seq, slot)));
                 seq += 1;
+                step_accepted += 1;
             }
         }
         // `h` is an enqueued child's parent: keep it materialized (no
@@ -865,8 +929,43 @@ pub fn backtracking_search_seeded(
         if cfg.delta_candidates && h_is_parent {
             arena.memoize(idx, h);
         }
+        if cfg.trace {
+            let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+            sink.event(
+                Event::span(SEARCH_TRACK, format!("step {steps}"), step_t0, wall_ms, "search-step")
+                    .with_args(vec![
+                        ("step", steps as f64),
+                        ("candidates", step_candidates as f64),
+                        ("accepted", step_accepted as f64),
+                        ("evals", evals as f64),
+                        ("best_ms", best_cost),
+                        ("backtracks", backtracks as f64),
+                        ("warm_hits", warm_hits as f64),
+                        ("resims", resims as f64),
+                        ("wall_ms", wall_ms),
+                    ]),
+            );
+        }
     }
 
+    if cfg.trace {
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        sink.event(
+            // `best_ms` here is the same `best_cost` returned below as
+            // `SearchResult::best_cost_ms` — the convergence curve's last
+            // point equals the result exactly.
+            Event::instant(SEARCH_TRACK, "final", wall_ms, "search-final").with_args(vec![
+                ("best_ms", best_cost),
+                ("initial_ms", initial_cost),
+                ("steps", steps as f64),
+                ("evals", evals as f64),
+                ("backtracks", backtracks as f64),
+                ("warm_hits", warm_hits as f64),
+                ("resims", resims as f64),
+                ("wall_ms", wall_ms),
+            ]),
+        );
+    }
     SearchResult {
         best,
         best_cost_ms: best_cost,
@@ -1277,6 +1376,34 @@ mod tests {
             m.replay(&mut replayed).expect("best_path replay failed");
         }
         assert_eq!(replayed.fingerprint(), r.best.fingerprint());
+    }
+
+    #[test]
+    fn trace_toggle_is_pure_observation() {
+        use crate::util::trace::{MemSink, PanicSink};
+        let g = workload();
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let prof = profiler::profile(&g, &d, &c, 2, 5);
+        let est = CostEstimator::oracle(&prof, &d);
+        let off = backtracking_search(&g, &est, &quick_cfg());
+        let mut sink = MemSink::default();
+        let on_cfg = SearchConfig { trace: true, ..quick_cfg() };
+        let on = backtracking_search_traced(&g, &est, &on_cfg, &[], &mut sink);
+        assert_eq!(off.best_cost_ms, on.best_cost_ms);
+        assert_eq!(off.evals, on.evals);
+        assert_eq!(off.steps, on.steps);
+        assert_eq!(off.best.fingerprint(), on.best.fingerprint());
+        // The final instant reports exactly the returned best cost, and
+        // there is one step span per dequeue.
+        let last = sink.events.last().unwrap();
+        assert_eq!(last.name, "final");
+        let best_ms = last.args.iter().find(|(k, _)| *k == "best_ms").unwrap().1;
+        assert_eq!(best_ms, on.best_cost_ms);
+        let step_spans = sink.events.iter().filter(|e| e.cat == "search-step").count();
+        assert_eq!(step_spans as u64, on.steps);
+        // With the toggle off the sink is never touched.
+        let _ = backtracking_search_traced(&g, &est, &quick_cfg(), &[], &mut PanicSink);
     }
 
     #[test]

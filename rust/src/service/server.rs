@@ -16,7 +16,11 @@
 //!   request; `budget_ms` caps the cold-search deadline (default is the
 //!   server's `--cold-budget-ms`, 0 = unlimited).
 //! * `{"cmd":"stats"}` — counters + store occupancy + resolve-latency
-//!   percentiles (the `disco serve --metrics` surface).
+//!   percentiles (the `disco serve --metrics` surface). Backed by the
+//!   [`crate::util::metrics`] registry (DESIGN.md §15); field names are
+//!   stable API.
+//! * `{"cmd":"metrics"}` — Prometheus-style text exposition of the same
+//!   registry (`disco serve --prom` prints one scrape of it).
 //!
 //! **Admission control (DESIGN.md §14):** store hits are always served,
 //! but the expensive cold path is gated twice. A per-request deadline
@@ -51,12 +55,12 @@ use crate::profiler;
 use crate::search::{backtracking_search_seeded, SearchConfig};
 use crate::util::frame::{FrameError, FrameReader};
 use crate::util::json::Json;
-use crate::util::stats::percentile;
+use crate::util::metrics::{Counter, Gauge, Histogram, Registry};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -172,6 +176,68 @@ impl Gate {
     }
 }
 
+/// Registry-backed service metrics (DESIGN.md §15). Handles are resolved
+/// once at bind and observed lock-free on the hot path; the registry
+/// itself stays around for the `metrics` wire op's text exposition.
+struct Metrics {
+    registry: Registry,
+    /// `disco_requests_total` — every dispatched frame.
+    requests: Arc<Counter>,
+    /// `disco_searches_total` — cold + warm searches actually run.
+    searches: Arc<Counter>,
+    /// `disco_store_hits_total` — plans replayed from the store.
+    store_hits: Arc<Counter>,
+    /// `disco_warm_starts_total` — searches that reused a warm seed.
+    warm_starts: Arc<Counter>,
+    /// `disco_coalesced_total` — followers parked behind a leader.
+    coalesced: Arc<Counter>,
+    /// `disco_shed_total` — connections shed at the `max_conns` gate.
+    shed: Arc<Counter>,
+    /// `disco_shed_cold_total` — cold searches shed by the admission cap
+    /// (`retry_after` frames).
+    shed_cold: Arc<Counter>,
+    /// `disco_deadline_exceeded_total` — requests whose budget ran out
+    /// before the search could start.
+    deadline_exceeded: Arc<Counter>,
+    /// `disco_active_conns` — live handler threads (shed watermark).
+    active: Arc<Gauge>,
+    /// `disco_cold_active` — cold searches running (admission watermark).
+    cold_active: Arc<Gauge>,
+    /// `disco_resolve_ms` — end-to-end `plan` latency, every outcome.
+    resolve_ms: Arc<Histogram>,
+    /// `disco_resolve_hit_ms` / `_warm_ms` / `_cold_ms` — the same
+    /// latency split by resolution path.
+    resolve_hit_ms: Arc<Histogram>,
+    resolve_warm_ms: Arc<Histogram>,
+    resolve_cold_ms: Arc<Histogram>,
+    /// `disco_store_put_ms` — store write+persist time (disk I/O).
+    store_put_ms: Arc<Histogram>,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        let registry = Registry::new();
+        Metrics {
+            requests: registry.counter("disco_requests_total"),
+            searches: registry.counter("disco_searches_total"),
+            store_hits: registry.counter("disco_store_hits_total"),
+            warm_starts: registry.counter("disco_warm_starts_total"),
+            coalesced: registry.counter("disco_coalesced_total"),
+            shed: registry.counter("disco_shed_total"),
+            shed_cold: registry.counter("disco_shed_cold_total"),
+            deadline_exceeded: registry.counter("disco_deadline_exceeded_total"),
+            active: registry.gauge("disco_active_conns"),
+            cold_active: registry.gauge("disco_cold_active"),
+            resolve_ms: registry.histogram("disco_resolve_ms"),
+            resolve_hit_ms: registry.histogram("disco_resolve_hit_ms"),
+            resolve_warm_ms: registry.histogram("disco_resolve_warm_ms"),
+            resolve_cold_ms: registry.histogram("disco_resolve_cold_ms"),
+            store_put_ms: registry.histogram("disco_store_put_ms"),
+            registry,
+        }
+    }
+}
+
 /// Shared server state.
 struct State {
     store: Mutex<PlanStore>,
@@ -180,80 +246,38 @@ struct State {
     shutdown: AtomicBool,
     addr: SocketAddr,
     max_conns: usize,
-    /// Live handler threads (shed-on-overload watermark).
-    active: AtomicUsize,
     /// Default cold-search deadline budget (ms, 0 = unlimited).
     cold_budget_ms: f64,
     /// Cold-search concurrency cap (0 = admit none).
     max_cold: usize,
-    /// Cold searches currently running (admission watermark).
-    cold_active: AtomicUsize,
-    // Counters (surfaced by the `stats` command).
-    requests: AtomicU64,
-    searches: AtomicU64,
-    store_hits: AtomicU64,
-    warm_starts: AtomicU64,
-    coalesced: AtomicU64,
-    shed: AtomicU64,
-    /// Cold searches shed by the admission cap (`retry_after` frames).
-    shed_cold: AtomicU64,
-    /// Requests rejected because their deadline budget ran out before
-    /// the search could start.
-    deadline_exceeded: AtomicU64,
-    /// Recent plan-resolve latencies (ms) for the p50/p99 stats surface;
-    /// bounded so a long-running server can't grow it without limit.
-    resolve_lat_ms: Mutex<Vec<f64>>,
-}
-
-/// Cap on the retained latency samples (drop-oldest beyond this).
-const LAT_SAMPLES: usize = 4096;
-
-fn observe_latency(state: &State, ms: f64) {
-    let mut lat = state.resolve_lat_ms.lock().unwrap();
-    if lat.len() >= LAT_SAMPLES {
-        let drop_n = lat.len() / 2;
-        lat.drain(..drop_n);
-    }
-    lat.push(ms);
+    m: Metrics,
 }
 
 /// RAII admission ticket for the cold-search path: at most `max_cold`
-/// may exist at once.
+/// may exist at once. Admission is the gauge's CAS (`inc_if_below`), so
+/// the watermark the scrape sees *is* the admission state — they can't
+/// drift apart.
 struct ColdGuard<'a>(&'a State);
 
 impl<'a> ColdGuard<'a> {
     fn admit(state: &'a State) -> Option<ColdGuard<'a>> {
-        let mut cur = state.cold_active.load(Ordering::SeqCst);
-        loop {
-            if cur >= state.max_cold {
-                return None;
-            }
-            match state.cold_active.compare_exchange(
-                cur,
-                cur + 1,
-                Ordering::SeqCst,
-                Ordering::SeqCst,
-            ) {
-                Ok(_) => return Some(ColdGuard(state)),
-                Err(actual) => cur = actual,
-            }
-        }
+        state.m.cold_active.inc_if_below(state.max_cold as u64).then(|| ColdGuard(state))
     }
 }
 
 impl Drop for ColdGuard<'_> {
     fn drop(&mut self) {
-        self.0.cold_active.fetch_sub(1, Ordering::SeqCst);
+        self.0.m.cold_active.dec();
     }
 }
 
-/// Decrements the live-handler count when a handler exits, however it
+/// Decrements the live-handler gauge when a handler exits, however it
 /// exits.
 struct ActiveGuard<'a>(&'a State);
 
 impl Drop for ActiveGuard<'_> {
     fn drop(&mut self) {
-        self.0.active.fetch_sub(1, Ordering::SeqCst);
+        self.0.m.active.dec();
     }
 }
 
@@ -294,19 +318,9 @@ impl Server {
                 shutdown: AtomicBool::new(false),
                 addr,
                 max_conns: opts.max_conns.max(1),
-                active: AtomicUsize::new(0),
                 cold_budget_ms: opts.cold_budget_ms.max(0.0),
                 max_cold: opts.max_cold,
-                cold_active: AtomicUsize::new(0),
-                requests: AtomicU64::new(0),
-                searches: AtomicU64::new(0),
-                store_hits: AtomicU64::new(0),
-                warm_starts: AtomicU64::new(0),
-                coalesced: AtomicU64::new(0),
-                shed: AtomicU64::new(0),
-                shed_cold: AtomicU64::new(0),
-                deadline_exceeded: AtomicU64::new(0),
-                resolve_lat_ms: Mutex::new(Vec::new()),
+                m: Metrics::new(),
             }),
         })
     }
@@ -328,8 +342,8 @@ impl Server {
                     // Shed on overload: beyond `max_conns` live handlers,
                     // reply inline with a typed error and drop — bounded
                     // threads beat an unbounded spawn storm.
-                    if self.state.active.load(Ordering::SeqCst) >= self.state.max_conns {
-                        self.state.shed.fetch_add(1, Ordering::Relaxed);
+                    if self.state.m.active.get() >= self.state.max_conns as u64 {
+                        self.state.m.shed.inc();
                         let _ = s.set_write_timeout(Some(Duration::from_millis(500)));
                         let _ = write_frame(
                             &mut s,
@@ -345,7 +359,7 @@ impl Server {
                     let state = Arc::clone(&self.state);
                     // Counted before spawn so a burst can't race past the
                     // limit; the handler's guard decrements on any exit.
-                    state.active.fetch_add(1, Ordering::SeqCst);
+                    state.m.active.inc();
                     // Reap finished handlers so a long-running server
                     // doesn't accumulate one dead JoinHandle per
                     // connection ever accepted.
@@ -422,7 +436,7 @@ fn err_json(msg: &str) -> Json {
 }
 
 fn dispatch(state: &State, body: &str) -> Json {
-    state.requests.fetch_add(1, Ordering::Relaxed);
+    state.m.requests.inc();
     let req = match Json::parse(body) {
         Ok(j) => j,
         Err(e) => return err_json(&format!("bad request json: {e}")),
@@ -430,6 +444,10 @@ fn dispatch(state: &State, body: &str) -> Json {
     match req.get("cmd").as_str() {
         Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         Some("stats") => stats_json(state),
+        Some("metrics") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("exposition", Json::Str(state.m.registry.expose())),
+        ]),
         Some("shutdown") => {
             state.shutdown.store(true, Ordering::SeqCst);
             Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))])
@@ -440,40 +458,45 @@ fn dispatch(state: &State, body: &str) -> Json {
                 Ok(resp) => resp,
                 Err(e) => err_json(&format!("{e:#}")),
             };
-            observe_latency(state, t0.elapsed().as_secs_f64() * 1e3);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            state.m.resolve_ms.observe(ms);
+            // Split the same latency by resolution path so hit storms
+            // can't hide a slow cold tail (and vice versa).
+            match resp.get("source").as_str() {
+                Some("store") => state.m.resolve_hit_ms.observe(ms),
+                Some("warm") => state.m.resolve_warm_ms.observe(ms),
+                Some("cold") => state.m.resolve_cold_ms.observe(ms),
+                _ => {} // error / shed / deadline frames
+            }
             resp
         }
-        _ => err_json("unknown cmd (expected plan|stats|ping|shutdown)"),
+        _ => err_json("unknown cmd (expected plan|stats|metrics|ping|shutdown)"),
     }
 }
 
 fn stats_json(state: &State) -> Json {
-    let (p50, p99, samples) = {
-        let lat = state.resolve_lat_ms.lock().unwrap();
-        if lat.is_empty() {
-            (0.0, 0.0, 0)
-        } else {
-            (percentile(&lat[..], 50.0), percentile(&lat[..], 99.0), lat.len())
-        }
-    };
-    let searches = state.searches.load(Ordering::Relaxed);
-    let warm_starts = state.warm_starts.load(Ordering::Relaxed);
+    // Same field names as the pre-registry surface (`--metrics` is
+    // stable API); percentiles now come from the lock-free histogram,
+    // so they are bucket upper bounds (sample ≤ estimate < 2·sample)
+    // over the full history instead of a 4096-sample ring.
+    let m = &state.m;
+    let (p50, p99, samples) =
+        (m.resolve_ms.percentile(50.0), m.resolve_ms.percentile(99.0), m.resolve_ms.count());
+    let searches = m.searches.get();
+    let warm_starts = m.warm_starts.get();
     let store = state.store.lock().unwrap();
     Json::obj(vec![
         ("ok", Json::Bool(true)),
-        ("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
+        ("requests", Json::Num(m.requests.get() as f64)),
         ("searches", Json::Num(searches as f64)),
-        ("store_hits", Json::Num(state.store_hits.load(Ordering::Relaxed) as f64)),
+        ("store_hits", Json::Num(m.store_hits.get() as f64)),
         ("warm_starts", Json::Num(warm_starts as f64)),
         ("cold_searches", Json::Num(searches.saturating_sub(warm_starts) as f64)),
-        ("coalesced", Json::Num(state.coalesced.load(Ordering::Relaxed) as f64)),
-        ("active_conns", Json::Num(state.active.load(Ordering::SeqCst) as f64)),
-        ("shed", Json::Num(state.shed.load(Ordering::Relaxed) as f64)),
-        ("shed_cold", Json::Num(state.shed_cold.load(Ordering::Relaxed) as f64)),
-        (
-            "deadline_exceeded",
-            Json::Num(state.deadline_exceeded.load(Ordering::Relaxed) as f64),
-        ),
+        ("coalesced", Json::Num(m.coalesced.get() as f64)),
+        ("active_conns", Json::Num(m.active.get() as f64)),
+        ("shed", Json::Num(m.shed.get() as f64)),
+        ("shed_cold", Json::Num(m.shed_cold.get() as f64)),
+        ("deadline_exceeded", Json::Num(m.deadline_exceeded.get() as f64)),
         ("max_conns", Json::Num(state.max_conns as f64)),
         ("max_cold", Json::Num(state.max_cold as f64)),
         ("cold_budget_ms", Json::Num(state.cold_budget_ms)),
@@ -552,7 +575,7 @@ fn try_store_hit(
     let best = try_replay_hit(rec, graph)?;
     let (best_ms, init_ms) = (rec.best_cost_ms, rec.initial_cost_ms);
     drop(store);
-    state.store_hits.fetch_add(1, Ordering::Relaxed);
+    state.m.store_hits.inc();
     Some(plan_json(
         key_hex,
         gfp_hex,
@@ -653,7 +676,7 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
             }
         };
         if let Some(gate) = follower_gate {
-            state.coalesced.fetch_add(1, Ordering::Relaxed);
+            state.m.coalesced.inc();
             gate.wait();
             continue; // leader published (or failed) — re-resolve
         }
@@ -671,11 +694,11 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
         // store hits above are always served. Deadline first (cheap
         // signal), then the cold-concurrency cap.
         if budget_ms > 0.0 && start.elapsed().as_secs_f64() * 1e3 >= budget_ms {
-            state.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            state.m.deadline_exceeded.inc();
             return Ok(deadline_json(budget_ms));
         }
         let Some(_cold) = ColdGuard::admit(state) else {
-            state.shed_cold.fetch_add(1, Ordering::Relaxed);
+            state.m.shed_cold.inc();
             return Ok(retry_after_json(1000.0));
         };
 
@@ -692,12 +715,14 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
             _ => CostEstimator::oracle(&profile, &device),
         };
         let r = backtracking_search_seeded(&graph, &est, &cfg, &seeds);
-        state.searches.fetch_add(1, Ordering::Relaxed);
+        state.m.searches.inc();
         if r.warm_hits > 0 {
-            state.warm_starts.fetch_add(1, Ordering::Relaxed);
+            state.m.warm_starts.inc();
         }
         let rec = record_from(&key, &gfp, &graph, sketch.clone(), &r);
+        let put_t0 = Instant::now();
         state.store.lock().unwrap().put(rec)?;
+        state.m.store_put_ms.observe(put_t0.elapsed().as_secs_f64() * 1e3);
         // `_guard` drops here: inflight entry removed AFTER the record is
         // in the store, so followers always resolve to a hit.
         let source = if r.warm_hits > 0 { PlanSource::Warm } else { PlanSource::Cold };

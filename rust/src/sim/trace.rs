@@ -5,7 +5,12 @@
 
 use super::{simulate_with, CostSource, Recorder, SimOptions, SimResult};
 use crate::graph::{Node, TrainingGraph};
-use crate::util::json::Json;
+use crate::util::trace::{self as core, Event, TrackId};
+
+/// Simulated-schedule pid in the shared track scheme (DESIGN.md §15):
+/// search telemetry is pid 2, enactment pid 3 — merged views never
+/// collide.
+pub const SIM_PID: u32 = 1;
 
 /// One scheduled interval.
 #[derive(Debug, Clone)]
@@ -60,40 +65,38 @@ pub fn capture(
     (result, rec.events)
 }
 
-/// Render events as Chrome trace JSON (`chrome://tracing`, Perfetto).
-/// Timestamps are microseconds per the trace-event format.
+/// Lower captured sim events to the shared event shape: device stream
+/// on tid 1, comm channel tid 2, chunk stream tid 3.
+pub fn to_events(events: &[TraceEvent]) -> Vec<Event> {
+    events
+        .iter()
+        .map(|e| {
+            let (cat, tid) = if e.chunk.is_some() {
+                ("comm-chunk", 3)
+            } else if e.comm {
+                ("comm", 2)
+            } else {
+                ("compute", 1)
+            };
+            Event::span(TrackId::new(SIM_PID, tid), e.name.clone(), e.start_ms, e.end_ms, cat)
+        })
+        .collect()
+}
+
+/// Track labels for the simulated-schedule lanes.
+pub fn sim_tracks() -> Vec<(TrackId, String)> {
+    vec![
+        (TrackId::new(SIM_PID, 1), "device stream".to_string()),
+        (TrackId::new(SIM_PID, 2), "comm channel".to_string()),
+        (TrackId::new(SIM_PID, 3), "chunk stream".to_string()),
+    ]
+}
+
+/// Render events as Chrome trace JSON (`chrome://tracing`, Perfetto)
+/// via the shared emitter — same `ph:"X"`/µs shape as before, now with
+/// `thread_name` metadata labeling the three lanes.
 pub fn to_chrome_json(events: &[TraceEvent]) -> String {
-    let mut arr = Vec::with_capacity(events.len());
-    for e in events {
-        let cat = if e.chunk.is_some() {
-            "comm-chunk"
-        } else if e.comm {
-            "comm"
-        } else {
-            "compute"
-        };
-        let tid = if e.chunk.is_some() {
-            3.0
-        } else if e.comm {
-            2.0
-        } else {
-            1.0
-        };
-        arr.push(Json::obj(vec![
-            ("name", Json::Str(e.name.clone())),
-            ("cat", Json::Str(cat.into())),
-            ("ph", Json::Str("X".into())),
-            ("ts", Json::Num(e.start_ms * 1e3)),
-            ("dur", Json::Num((e.end_ms - e.start_ms) * 1e3)),
-            ("pid", Json::Num(1.0)),
-            ("tid", Json::Num(tid)),
-        ]));
-    }
-    Json::obj(vec![
-        ("traceEvents", Json::Arr(arr)),
-        ("displayTimeUnit", Json::Str("ms".into())),
-    ])
-    .to_string()
+    core::to_chrome_json(&to_events(events), &sim_tracks())
 }
 
 #[cfg(test)]
@@ -175,11 +178,23 @@ mod tests {
 
     #[test]
     fn chrome_json_is_valid() {
+        use crate::util::json::Json;
         let g = graph();
         let (_, events) = capture(&g, &Unit, SimOptions::default());
         let s = to_chrome_json(&events);
         let parsed = Json::parse(&s).unwrap();
-        assert_eq!(parsed.get("traceEvents").as_arr().unwrap().len(), events.len());
+        let rows = parsed.get("traceEvents").as_arr().unwrap();
+        // One "X" row per captured event plus thread_name metadata rows.
+        let spans = rows.iter().filter(|r| r.get("ph").as_str() == Some("X")).count();
+        assert_eq!(spans, events.len());
+        assert_eq!(rows.len(), events.len() + sim_tracks().len());
+        // File-order timestamps are monotone (shared emitter sorts).
+        let ts: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.get("ph").as_str() == Some("X"))
+            .map(|r| r.get("ts").as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

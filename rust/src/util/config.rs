@@ -155,6 +155,9 @@ impl Config {
             if let Some(t) = s.get("track_best_path").as_bool() {
                 cfg.search.track_best_path = t;
             }
+            if let Some(t) = s.get("trace").as_bool() {
+                cfg.search.trace = t;
+            }
             if let Some(ck) = s.get("chunking").as_bool() {
                 cfg.search.methods.chunking = ck;
             }
@@ -283,6 +286,15 @@ mod tests {
         // Negative budget clamps to "off" instead of going backwards.
         let n = Config::from_json_str(r#"{"service": {"cold_budget_ms": -5}}"#).unwrap();
         assert_eq!(n.service.cold_budget_ms, 0.0);
+    }
+
+    #[test]
+    fn trace_knob_applies() {
+        let c = Config::from_json_str(r#"{"search": {"trace": true}}"#).unwrap();
+        assert!(c.search.trace);
+        // Off by default: telemetry is strictly opt-in.
+        let d = Config::from_json_str("{}").unwrap();
+        assert!(!d.search.trace);
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! std-only metrics core (DESIGN.md §15): atomic counters and gauges
+//! plus fixed-bucket log₂-scale histograms, behind a registry with
+//! stable names and Prometheus-style text exposition.
+//!
+//! Observation paths are lock-free: counters/gauges are single atomic
+//! ops, a histogram observe is one atomic bucket increment plus a CAS
+//! loop folding the value into an f64 sum. Only registration (startup)
+//! and exposition (scrape) take the registry lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------------
+// Counter / Gauge
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (active connections, in-flight cold searches).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (a stray double-release must not wrap to
+    /// u64::MAX and wedge admission forever).
+    pub fn dec(&self) {
+        let _ = self.v.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |x| {
+            Some(x.saturating_sub(1))
+        });
+    }
+
+    /// Admission-style CAS increment: succeed only while the level is
+    /// below `cap`. Pairs with [`Gauge::dec`] on release.
+    pub fn inc_if_below(&self, cap: u64) -> bool {
+        self.v
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |x| {
+                if x < cap {
+                    Some(x + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// Number of log₂ buckets: upper bounds `LO · 2^i` for `i` in
+/// `0..BUCKETS`, i.e. 1 µs up to ~8.8e9 ms (≈102 days) — everything a
+/// resolve latency or store write can plausibly take. The last bucket
+/// also absorbs overflow.
+pub const BUCKETS: usize = 44;
+
+/// Lowest bucket upper bound, in the histogram's own unit (we use ms
+/// everywhere): values ≤ 1 µs land in bucket 0.
+pub const LO: f64 = 0.001;
+
+/// Lock-free fixed-bucket log₂-scale histogram.
+///
+/// Replaces `server.rs`'s `Mutex<Vec<f64>>` latency ring: observe is
+/// wait-free per bucket, memory is constant, and percentiles come from
+/// a cumulative scan. A percentile estimate is the upper bound of the
+/// bucket holding the target rank, so for any sample `s` the estimate
+/// `e` satisfies `s ≤ e < 2s` — error bounded by the bucket width
+/// (property-tested in `tests/properties.rs`).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    /// f64 bit pattern of the running sum, updated by CAS.
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+/// Bucket index for a value: smallest `i` with `v ≤ LO · 2^i`, clamped
+/// into range. Non-finite and non-positive values fold into bucket 0.
+fn bucket_of(v: f64) -> usize {
+    if !v.is_finite() || v <= LO {
+        return 0;
+    }
+    let i = (v / LO).log2().ceil() as i64;
+    i.clamp(0, BUCKETS as i64 - 1) as usize
+}
+
+/// Upper bound of bucket `i` (`LO · 2^i`).
+pub fn bucket_bound(i: usize) -> f64 {
+    LO * (2f64).powi(i as i32)
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let add = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        let _ = self.sum_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + add).to_bits())
+        });
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Percentile estimate for `q` in `[0, 100]` (same convention as
+    /// `util::stats::percentile`): upper bound of the bucket containing
+    /// the nearest-rank sample; 0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(BUCKETS - 1)
+    }
+
+    /// Cumulative bucket counts (Prometheus `le` semantics), ending at
+    /// the total for `+Inf`.
+    fn cumulative(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(BUCKETS);
+        let mut cum = 0u64;
+        for b in &self.buckets {
+            cum += b.load(Ordering::Relaxed);
+            out.push(cum);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry + exposition
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Names are stable API: `[a-z_][a-z0-9_]*`, registered once, never
+/// renamed. Re-registering a name returns the existing handle (so call
+/// sites can be wired independently); registering it as a *different*
+/// kind panics — that is a programming error, caught at startup.
+fn check_name(name: &str) {
+    let ok = !name.is_empty()
+        && (name.as_bytes()[0].is_ascii_lowercase() || name.as_bytes()[0] == b'_')
+        && name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+    assert!(ok, "invalid metric name {name:?}: want [a-z_][a-z0-9_]*");
+}
+
+/// Home for every metric the process exports. Lock is held only for
+/// registration and exposition; handles are `Arc`s observed lock-free.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Vec<(String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register<T>(
+        &self,
+        name: &str,
+        make: impl FnOnce() -> Metric,
+        pick: impl Fn(&Metric) -> Option<Arc<T>>,
+    ) -> Arc<T> {
+        check_name(name);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, m)) = inner.iter().find(|(n, _)| n == name) {
+            return pick(m).unwrap_or_else(|| {
+                panic!("metric {name:?} already registered as a {}", m.kind())
+            });
+        }
+        let m = make();
+        let h = pick(&m).unwrap();
+        inner.push((name.to_string(), m));
+        h
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.register(
+            name,
+            || Metric::Counter(Arc::new(Counter::default())),
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.register(
+            name,
+            || Metric::Gauge(Arc::new(Gauge::default())),
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.register(
+            name,
+            || Metric::Histogram(Arc::new(Histogram::default())),
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Prometheus-style text exposition, metrics sorted by name. For
+    /// histograms, only buckets up to the last non-empty one are listed
+    /// (plus `+Inf`) to keep the payload proportional to observed range.
+    pub fn expose(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut entries: Vec<&(String, Metric)> = inner.iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out = String::new();
+        for (name, m) in entries {
+            out.push_str(&format!("# TYPE {name} {}\n", m.kind()));
+            match m {
+                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", g.get())),
+                Metric::Histogram(h) => {
+                    let cum = h.cumulative();
+                    let total = h.count();
+                    let last = cum.iter().rposition(|&c| c < total).map_or(0, |i| i + 1);
+                    for (i, &c) in cum.iter().enumerate().take(last + 1) {
+                        out.push_str(&format!(
+                            "{name}_bucket{{le=\"{}\"}} {c}\n",
+                            bucket_bound(i)
+                        ));
+                    }
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
+                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{name}_count {total}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("disco_requests_total");
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        // Same name → same handle.
+        assert_eq!(r.counter("disco_requests_total").get(), 3);
+        let g = r.gauge("disco_active");
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // saturates, no wrap
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn gauge_admission_cas() {
+        let g = Gauge::default();
+        assert!(g.inc_if_below(2));
+        assert!(g.inc_if_below(2));
+        assert!(!g.inc_if_below(2));
+        g.dec();
+        assert!(g.inc_if_below(2));
+    }
+
+    #[test]
+    fn bucket_mapping_monotone_and_bounding() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(LO), 0);
+        for i in 0..BUCKETS {
+            let ub = bucket_bound(i);
+            assert!(bucket_of(ub) <= i, "upper bound maps into its bucket");
+            if i + 1 < BUCKETS {
+                assert_eq!(bucket_of(ub * 1.5), i + 1);
+            }
+        }
+        // Overflow clamps to the last bucket.
+        assert_eq!(bucket_of(1e300), BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentiles_bound_samples() {
+        let h = Histogram::default();
+        for v in [0.2, 0.4, 1.0, 3.0, 9.0, 20.0, 120.0, 450.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 8);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p99);
+        // Nearest-rank p50 sample is 3.0; estimate within [3, 6).
+        assert!((3.0..6.0).contains(&p50), "p50 {p50}");
+        // p99 sample is 450; estimate within [450, 900).
+        assert!((450.0..900.0).contains(&p99), "p99 {p99}");
+        assert!((h.sum() - 603.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn exposition_format() {
+        let r = Registry::new();
+        r.counter("disco_b_total").add(2);
+        r.gauge("disco_a").set(5);
+        let h = r.histogram("disco_lat_ms");
+        h.observe(0.5);
+        h.observe(2.0);
+        let text = r.expose();
+        // Sorted by name, typed, histogram has cumulative buckets.
+        let a = text.find("# TYPE disco_a gauge").unwrap();
+        let b = text.find("# TYPE disco_b_total counter").unwrap();
+        let l = text.find("# TYPE disco_lat_ms histogram").unwrap();
+        assert!(a < b && b < l);
+        assert!(text.contains("disco_a 5\n"));
+        assert!(text.contains("disco_b_total 2\n"));
+        assert!(text.contains("disco_lat_ms_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("disco_lat_ms_count 2\n"));
+        assert!(text.contains("disco_lat_ms_sum 2.5\n"));
+        // Buckets are cumulative: the bucket holding 2.0 (le = 0.001·2^11
+        // = 2.048) already counts both observations.
+        assert!(text.contains("disco_lat_ms_bucket{le=\"2.048\"} 2\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn bad_names_rejected() {
+        Registry::new().counter("Disco-Requests");
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_collision_rejected() {
+        let r = Registry::new();
+        r.counter("disco_x");
+        r.gauge("disco_x");
+    }
+}

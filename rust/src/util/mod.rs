@@ -7,6 +7,8 @@ pub mod frame;
 pub mod rng;
 pub mod stats;
 pub mod json;
+pub mod metrics;
+pub mod trace;
 pub mod cli;
 pub mod prop;
 pub mod table;

@@ -1,0 +1,353 @@
+//! Shared tracing core (DESIGN.md §15): one event shape for every
+//! timeline the system produces — simulated schedules (`sim/trace.rs`),
+//! search telemetry (`search --trace`), and enactment runs
+//! (`enact --trace`) — so all exports load side by side in one
+//! Perfetto / `chrome://tracing` session.
+//!
+//! Design rules:
+//! * **Explicit tracks.** Every event names its `(pid, tid)` lane; the
+//!   pid partitions subsystems (1 = simulated schedule, 2 = search,
+//!   3 = enactment) so merged views never collide.
+//! * **Milliseconds everywhere.** `ts_ms`/`dur_ms` match the simulator's
+//!   native unit; the Chrome emitter converts to µs at the edge.
+//! * **Sinks are dumb.** A [`TraceSink`] only records; producers decide
+//!   *whether* to emit (a disabled path must never touch its sink —
+//!   [`PanicSink`] exists to property-test exactly that, the same
+//!   pattern as PR 4's panic-cost-source).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Events and tracks
+// ---------------------------------------------------------------------------
+
+/// Track identity. Perfetto renders one horizontal lane per `(pid, tid)`
+/// pair; [`MemSink::name_track`] attaches the human-readable label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TrackId {
+    pub pid: u32,
+    pub tid: u32,
+}
+
+impl TrackId {
+    pub const fn new(pid: u32, tid: u32) -> TrackId {
+        TrackId { pid, tid }
+    }
+}
+
+/// Event phase: a complete span (`ph:"X"`) or an instant marker
+/// (`ph:"i"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    Span,
+    Instant,
+}
+
+/// One trace event. Numeric `args` ride along into both emitters; the
+/// JSONL emitter flattens them to top-level keys so a convergence curve
+/// is directly plottable line by line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: String,
+    pub cat: &'static str,
+    pub track: TrackId,
+    pub ph: Ph,
+    pub ts_ms: f64,
+    pub dur_ms: f64,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+impl Event {
+    pub fn span(
+        track: TrackId,
+        name: impl Into<String>,
+        start_ms: f64,
+        end_ms: f64,
+        cat: &'static str,
+    ) -> Event {
+        Event {
+            name: name.into(),
+            cat,
+            track,
+            ph: Ph::Span,
+            ts_ms: start_ms,
+            dur_ms: (end_ms - start_ms).max(0.0),
+            args: Vec::new(),
+        }
+    }
+
+    pub fn instant(track: TrackId, name: impl Into<String>, ts_ms: f64, cat: &'static str) -> Event {
+        Event { name: name.into(), cat, track, ph: Ph::Instant, ts_ms, dur_ms: 0.0, args: Vec::new() }
+    }
+
+    pub fn with_args(mut self, args: Vec<(&'static str, f64)>) -> Event {
+        self.args = args;
+        self
+    }
+
+    pub fn end_ms(&self) -> f64 {
+        self.ts_ms + self.dur_ms
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// Where events go. Producers hold `&mut dyn TraceSink` (single-thread
+/// paths) or a [`SharedSink`] clone (multi-thread paths).
+pub trait TraceSink {
+    fn event(&mut self, ev: Event);
+    /// Attach a display name to a track (renders as the lane label).
+    fn name_track(&mut self, track: TrackId, name: &str);
+}
+
+/// Discards everything. The default sink for untraced runs.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn event(&mut self, _ev: Event) {}
+    fn name_track(&mut self, _track: TrackId, _name: &str) {}
+}
+
+/// Panics on any call — a test-only guard proving a disabled trace path
+/// never touches its sink (zero events, zero track names, zero arg
+/// construction reaching the sink boundary).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PanicSink;
+
+impl TraceSink for PanicSink {
+    fn event(&mut self, ev: Event) {
+        panic!("PanicSink received event {:?} with tracing disabled", ev.name);
+    }
+    fn name_track(&mut self, track: TrackId, name: &str) {
+        panic!("PanicSink received track name {:?} for {:?} with tracing disabled", name, track);
+    }
+}
+
+/// Collecting sink: events in arrival order plus named tracks.
+#[derive(Debug, Default, Clone)]
+pub struct MemSink {
+    pub events: Vec<Event>,
+    pub tracks: Vec<(TrackId, String)>,
+}
+
+impl TraceSink for MemSink {
+    fn event(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+    fn name_track(&mut self, track: TrackId, name: &str) {
+        if let Some(slot) = self.tracks.iter_mut().find(|(t, _)| *t == track) {
+            slot.1 = name.to_string();
+        } else {
+            self.tracks.push((track, name.to_string()));
+        }
+    }
+}
+
+/// Thread-safe sink plus a shared wall clock, for producers spread
+/// across threads (the enactment leader and its in-process workers).
+/// Clones share both the buffer and the epoch, so `now_ms()` timestamps
+/// from any thread land on one common timeline.
+#[derive(Debug, Clone)]
+pub struct SharedSink {
+    t0: Instant,
+    inner: Arc<Mutex<MemSink>>,
+}
+
+impl Default for SharedSink {
+    fn default() -> SharedSink {
+        SharedSink::new()
+    }
+}
+
+impl SharedSink {
+    pub fn new() -> SharedSink {
+        SharedSink { t0: Instant::now(), inner: Arc::new(Mutex::new(MemSink::default())) }
+    }
+
+    /// Milliseconds since this sink's epoch.
+    pub fn now_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn emit(&self, ev: Event) {
+        self.inner.lock().unwrap().event(ev);
+    }
+
+    pub fn name_track(&self, track: TrackId, name: &str) {
+        self.inner.lock().unwrap().name_track(track, name);
+    }
+
+    /// Drain the collected buffer (events + tracks), leaving it empty.
+    pub fn take(&self) -> MemSink {
+        std::mem::take(&mut *self.inner.lock().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Emitters
+// ---------------------------------------------------------------------------
+
+/// Chronological copy: stable sort by start time, then track — exports
+/// are emitted in this order so file-order timestamps are monotone.
+pub fn sorted(events: &[Event]) -> Vec<Event> {
+    let mut v = events.to_vec();
+    v.sort_by(|a, b| {
+        a.ts_ms
+            .partial_cmp(&b.ts_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.track.cmp(&b.track))
+    });
+    v
+}
+
+fn args_json(args: &[(&'static str, f64)]) -> Json {
+    Json::Obj(args.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect())
+}
+
+/// Chrome-trace / Perfetto JSON: `thread_name` metadata rows label the
+/// tracks, span events carry `ph:"X"` with µs `ts`/`dur`, instants carry
+/// `ph:"i"` with thread scope. Wraps in `{"traceEvents": ..}` (object
+/// form) so `displayTimeUnit` applies.
+pub fn to_chrome_json(events: &[Event], tracks: &[(TrackId, String)]) -> String {
+    let mut rows = Vec::with_capacity(events.len() + tracks.len());
+    for (track, name) in tracks {
+        rows.push(Json::obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(track.pid as f64)),
+            ("tid", Json::Num(track.tid as f64)),
+            ("args", Json::obj(vec![("name", Json::Str(name.clone()))])),
+        ]));
+    }
+    for ev in sorted(events) {
+        let mut pairs = vec![
+            ("name", Json::Str(ev.name.clone())),
+            ("cat", Json::Str(ev.cat.into())),
+            ("pid", Json::Num(ev.track.pid as f64)),
+            ("tid", Json::Num(ev.track.tid as f64)),
+            ("ts", Json::Num(ev.ts_ms * 1e3)),
+        ];
+        match ev.ph {
+            Ph::Span => {
+                pairs.push(("ph", Json::Str("X".into())));
+                pairs.push(("dur", Json::Num(ev.dur_ms * 1e3)));
+            }
+            Ph::Instant => {
+                pairs.push(("ph", Json::Str("i".into())));
+                pairs.push(("s", Json::Str("t".into())));
+            }
+        }
+        if !ev.args.is_empty() {
+            pairs.push(("args", args_json(&ev.args)));
+        }
+        rows.push(Json::obj(pairs));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+    .to_string()
+}
+
+/// JSONL: one ts-sorted JSON object per line with `args` flattened to
+/// top-level keys — `tail -1` of a search trace IS the final makespan
+/// record, and each line plots directly as a convergence-curve point.
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for ev in sorted(events) {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        // Args first: the fixed keys below win any (unlikely) collision.
+        for (k, v) in &ev.args {
+            m.insert(k.to_string(), Json::Num(*v));
+        }
+        m.insert("name".into(), Json::Str(ev.name.clone()));
+        m.insert("cat".into(), Json::Str(ev.cat.into()));
+        m.insert("pid".into(), Json::Num(ev.track.pid as f64));
+        m.insert("tid".into(), Json::Num(ev.track.tid as f64));
+        m.insert("ph".into(), Json::Str(if ev.ph == Ph::Span { "X" } else { "i" }.into()));
+        m.insert("ts_ms".into(), Json::Num(ev.ts_ms));
+        if ev.ph == Ph::Span {
+            m.insert("dur_ms".into(), Json::Num(ev.dur_ms));
+        }
+        out.push_str(&Json::Obj(m).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MemSink {
+        let mut s = MemSink::default();
+        let t = TrackId::new(7, 1);
+        s.name_track(t, "lane");
+        s.event(Event::span(t, "b", 2.0, 5.0, "work").with_args(vec![("n", 3.0)]));
+        s.event(Event::span(t, "a", 0.0, 2.0, "work"));
+        s.event(Event::instant(t, "mark", 4.0, "note"));
+        s
+    }
+
+    #[test]
+    fn chrome_export_sorted_and_labeled() {
+        let s = sample();
+        let parsed = Json::parse(&to_chrome_json(&s.events, &s.tracks)).unwrap();
+        let rows = parsed.get("traceEvents").as_arr().unwrap();
+        assert_eq!(rows.len(), 4); // 1 metadata + 3 events
+        assert_eq!(rows[0].get("ph").as_str(), Some("M"));
+        assert_eq!(rows[0].get("args").get("name").as_str(), Some("lane"));
+        // Events sorted by ts regardless of arrival order.
+        assert_eq!(rows[1].get("name").as_str(), Some("a"));
+        assert_eq!(rows[2].get("name").as_str(), Some("b"));
+        assert_eq!(rows[2].get("ts").as_f64(), Some(2000.0));
+        assert_eq!(rows[2].get("dur").as_f64(), Some(3000.0));
+        assert_eq!(rows[2].get("args").get("n").as_f64(), Some(3.0));
+        assert_eq!(rows[3].get("ph").as_str(), Some("i"));
+    }
+
+    #[test]
+    fn jsonl_flattens_args_and_sorts() {
+        let s = sample();
+        let lines: Vec<&str> = to_jsonl(&s.events).lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("name").as_str(), Some("a"));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("n").as_f64(), Some(3.0));
+        assert_eq!(second.get("dur_ms").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn shared_sink_merges_across_clones() {
+        let s = SharedSink::new();
+        let s2 = s.clone();
+        s.emit(Event::instant(TrackId::new(1, 1), "x", s.now_ms(), "t"));
+        s2.emit(Event::instant(TrackId::new(1, 2), "y", s2.now_ms(), "t"));
+        s2.name_track(TrackId::new(1, 1), "first");
+        let m = s.take();
+        assert_eq!(m.events.len(), 2);
+        assert_eq!(m.tracks.len(), 1);
+        assert!(s.take().events.is_empty());
+    }
+
+    #[test]
+    fn name_track_is_idempotent() {
+        let mut s = MemSink::default();
+        s.name_track(TrackId::new(1, 1), "old");
+        s.name_track(TrackId::new(1, 1), "new");
+        assert_eq!(s.tracks, vec![(TrackId::new(1, 1), "new".to_string())]);
+    }
+
+    #[test]
+    #[should_panic(expected = "PanicSink")]
+    fn panic_sink_panics_on_event() {
+        PanicSink.event(Event::instant(TrackId::new(1, 1), "boom", 0.0, "t"));
+    }
+}

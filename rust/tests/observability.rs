@@ -1,0 +1,311 @@
+//! Observability integration tests (DESIGN.md §15): exporter
+//! well-formedness for every emitter, per-rank enactment timelines under
+//! a known chaos kill plan, search convergence-curve exactness, and the
+//! registry-backed service metrics surface.
+
+use disco::coordinator::{enact, rank_track, EnactConfig, FaultPlan, LEADER_TRACK};
+use disco::device::DeviceModel;
+use disco::estimator::CostEstimator;
+use disco::graph::builder::GraphBuilder;
+use disco::graph::{OpKind, Role, TrainingGraph};
+use disco::models::{build, ModelKind, ModelSpec};
+use disco::network::Cluster;
+use disco::search::{backtracking_search_traced, SearchConfig};
+use disco::service::{request, ServeOptions, Server, WarmOptions};
+use disco::util::json::Json;
+use disco::util::trace::{to_chrome_json, to_jsonl, Event, MemSink, Ph, TrackId};
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Small fusion-rich training graph (mirrors tests/service.rs).
+fn workload() -> TrainingGraph {
+    let mut b = GraphBuilder::new("obs-wl", 8);
+    let x = b.constant("x", &[1 << 14]);
+    let mut prev = x;
+    for i in 0..4 {
+        let m = b.compute(OpKind::Mul, &format!("m{i}"), &[prev], &[1 << 14], Role::Forward);
+        let t = b.compute(OpKind::Tanh, &format!("t{i}"), &[m], &[1 << 14], Role::Forward);
+        prev = t;
+    }
+    let mut grad = prev;
+    for i in 0..4 {
+        let gop = b.compute(OpKind::Mul, &format!("bg{i}"), &[grad], &[1 << 10], Role::Backward);
+        let p = b.param(&format!("w{i}"), &[1 << 10]);
+        let ar = b.allreduce(&format!("ar{i}"), gop, &[1 << 10]);
+        b.optimizer_update(&format!("u{i}"), &[ar, p]);
+        grad = gop;
+    }
+    b.finish()
+}
+
+fn tiny_model() -> TrainingGraph {
+    build(&ModelSpec { kind: ModelKind::Rnnlm, batch: 8, depth_scale: 0.15 }, 4)
+}
+
+/// Well-formedness contract every exporter must satisfy — valid JSON,
+/// metadata rows labeling real tracks, file-order monotone timestamps,
+/// and non-overlapping spans within each lane.
+fn assert_chrome_well_formed(json: &str, expect_tracks: usize) -> Vec<Json> {
+    let parsed = Json::parse(json).expect("chrome trace must be valid JSON");
+    let rows = parsed.get("traceEvents").as_arr().expect("traceEvents array").clone();
+    let meta: Vec<&Json> =
+        rows.iter().filter(|r| r.get("ph").as_str() == Some("M")).collect();
+    assert_eq!(meta.len(), expect_tracks, "one thread_name row per track");
+    for m in &meta {
+        assert!(m.get("args").get("name").as_str().is_some(), "unlabeled track: {m:?}");
+    }
+    let events: Vec<&Json> =
+        rows.iter().filter(|r| r.get("ph").as_str() != Some("M")).collect();
+    let mut last_ts = f64::NEG_INFINITY;
+    for e in &events {
+        let ph = e.get("ph").as_str().unwrap();
+        assert!(ph == "X" || ph == "i", "unknown phase {ph}");
+        let ts = e.get("ts").as_f64().unwrap();
+        assert!(ts >= last_ts, "timestamps regress in file order");
+        last_ts = ts;
+        if ph == "X" {
+            assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+        }
+    }
+    // Spans on the same (pid, tid) lane never overlap.
+    let mut lanes: std::collections::BTreeMap<(u64, u64), Vec<(f64, f64)>> = Default::default();
+    for e in &events {
+        if e.get("ph").as_str() == Some("X") {
+            let key =
+                (e.get("pid").as_f64().unwrap() as u64, e.get("tid").as_f64().unwrap() as u64);
+            let ts = e.get("ts").as_f64().unwrap();
+            lanes.entry(key).or_default().push((ts, ts + e.get("dur").as_f64().unwrap()));
+        }
+    }
+    for (lane, spans) in lanes {
+        for w in spans.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1 - 1e-6,
+                "lane {lane:?}: span starting {} overlaps one ending {}",
+                w[1].0,
+                w[0].1
+            );
+        }
+    }
+    rows
+}
+
+fn events_on(events: &[Event], track: TrackId) -> Vec<Event> {
+    let mut v: Vec<Event> =
+        events.iter().filter(|e| e.track == track).cloned().collect();
+    v.sort_by(|a, b| a.ts_ms.partial_cmp(&b.ts_ms).unwrap());
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Search telemetry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn search_trace_exports_are_well_formed_and_exact() {
+    let g = workload();
+    let device = DeviceModel::gtx1080ti();
+    let cluster = Cluster::cluster_a();
+    let prof = disco::profiler::profile(&g, &device, &cluster, 1, 7);
+    let est = CostEstimator::oracle(&prof, &device);
+    let cfg = SearchConfig {
+        unchanged_limit: 40,
+        max_queue: 64,
+        seed: 7,
+        trace: true,
+        ..Default::default()
+    };
+    let mut sink = MemSink::default();
+    let r = backtracking_search_traced(&g, &est, &cfg, &[], &mut sink);
+
+    // Chrome export: one labeled search track, monotone, non-overlapping.
+    assert_chrome_well_formed(&to_chrome_json(&sink.events, &sink.tracks), 1);
+    // One step span per dequeue step, framed by initial/final instants.
+    let steps = sink.events.iter().filter(|e| e.cat == "search-step").count();
+    assert_eq!(steps as u64, r.steps, "one span per search step");
+    assert_eq!(sink.events.first().unwrap().name, "initial");
+    assert_eq!(sink.events.last().unwrap().name, "final");
+
+    // Convergence JSONL: every line parses; the final record's best_ms
+    // survives the JSON round-trip bit-exactly equal to the result.
+    let jsonl = to_jsonl(&sink.events);
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), sink.events.len());
+    let mut best_seen = f64::INFINITY;
+    for line in &lines {
+        let row = Json::parse(line).expect("JSONL line must parse");
+        if let Some(b) = row.get("best_ms").as_f64() {
+            assert!(b <= best_seen + 1e-12, "convergence curve must not regress");
+            best_seen = b;
+        }
+    }
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("name").as_str(), Some("final"));
+    assert_eq!(
+        last.get("best_ms").as_f64(),
+        Some(r.best_cost_ms),
+        "tail -1 of the curve IS the final makespan, exactly"
+    );
+    assert_eq!(last.get("evals").as_f64(), Some(r.evals as f64));
+}
+
+// ---------------------------------------------------------------------------
+// Enactment tracing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn enact_trace_chaos_kill_ends_rank_lane_with_retire() {
+    let g = tiny_model();
+    let seed = 0xC0DE;
+    let cfg = EnactConfig {
+        world: 3,
+        iterations: 2,
+        seed,
+        quorum: 1,
+        phase_timeout_ms: 5_000,
+        max_rank_retries: 0, // no re-admission: the kill is final
+        fault: Some(FaultPlan::parse("kill@1:1", seed).unwrap()),
+        trace: true,
+        ..Default::default()
+    };
+    let report = enact(&g, &cfg).expect("quorum of survivors must succeed");
+    assert!(report.degraded, "killed rank must degrade the round");
+    assert!(report.failed_ranks.contains(&1));
+
+    // One leader phase track plus one track per rank, all labeled.
+    assert_eq!(report.trace_tracks.len(), 4);
+    let labels: Vec<&str> =
+        report.trace_tracks.iter().map(|(_, n)| n.as_str()).collect();
+    assert!(labels.contains(&"leader"));
+    for r in 0..3 {
+        assert!(labels.contains(&format!("rank {r}").as_str()), "missing rank {r} label");
+    }
+    let rows = assert_chrome_well_formed(
+        &to_chrome_json(&report.trace_events, &report.trace_tracks),
+        4,
+    );
+    assert!(rows.len() > 4, "trace must contain real events");
+
+    // Leader lane: the three phase spans, in protocol order.
+    let phases: Vec<String> = events_on(&report.trace_events, LEADER_TRACK)
+        .iter()
+        .filter(|e| e.ph == Ph::Span)
+        .map(|e| e.name.clone())
+        .collect();
+    assert_eq!(phases, ["join", "ack", "run"]);
+
+    // Surviving ranks ran both iterations on their own lanes.
+    for r in [0usize, 2] {
+        let lane = events_on(&report.trace_events, rank_track(r));
+        let iters = lane.iter().filter(|e| e.cat == "iter").count();
+        assert_eq!(iters, 2, "rank {r} iteration spans");
+        assert!(lane.iter().any(|e| e.name == "join"));
+        assert!(lane.iter().any(|e| e.name == "report"));
+        assert!(!lane.iter().any(|e| e.name.starts_with("retire")));
+    }
+
+    // The killed rank's lane ends with its retire instant: the worker
+    // stops emitting at the kill, so the leader-side retirement is the
+    // last thing on the timeline.
+    let lane = events_on(&report.trace_events, rank_track(1));
+    assert!(lane.iter().any(|e| e.name == "join"), "rank 1 joined before dying");
+    assert_eq!(
+        lane.iter().filter(|e| e.cat == "iter").count(),
+        1,
+        "rank 1 completed exactly iteration 0 before the kill"
+    );
+    let last = lane.last().unwrap();
+    assert!(
+        last.name.starts_with("retire"),
+        "rank 1's lane must end with the retire event, got {:?}",
+        last.name
+    );
+    assert_eq!(last.ph, Ph::Instant);
+}
+
+#[test]
+fn enact_trace_toggle_is_pure_observation() {
+    let g = tiny_model();
+    let base = EnactConfig {
+        world: 2,
+        iterations: 2,
+        seed: 0x0B5,
+        phase_timeout_ms: 5_000,
+        ..Default::default()
+    };
+    let off = enact(&g, &base).unwrap();
+    assert!(off.trace_events.is_empty() && off.trace_tracks.is_empty());
+    let on = enact(&g, &EnactConfig { trace: true, ..base }).unwrap();
+    assert!(!on.trace_events.is_empty());
+    // Measurements are wall-clock-free simulator output — identical.
+    assert_eq!(off.per_rank, on.per_rank);
+    assert_eq!(off.iteration_ms, on.iteration_ms);
+    assert_eq!(off.acks, on.acks);
+}
+
+// ---------------------------------------------------------------------------
+// Service metrics
+// ---------------------------------------------------------------------------
+
+fn plan_request(graph: &TrainingGraph) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("plan".into())),
+        ("graph", graph.to_json_value()),
+        ("cluster", Json::Str("a".into())),
+        ("estimator", Json::Str("oracle".into())),
+        ("seed", Json::Num(7.0)),
+        ("unchanged", Json::Num(40.0)),
+    ])
+}
+
+#[test]
+fn serve_metrics_exposition_tracks_the_stats_surface() {
+    let server = Server::bind(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        store_path: None,
+        capacity: 32,
+        warm: WarmOptions::default(),
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let g = workload();
+    let first = request(&addr, &plan_request(&g)).unwrap();
+    assert_eq!(first.get("source").as_str(), Some("cold"));
+    let second = request(&addr, &plan_request(&g)).unwrap();
+    assert_eq!(second.get("source").as_str(), Some("store"));
+
+    // The `metrics` wire op returns a text exposition of the registry.
+    let m = request(&addr, &Json::obj(vec![("cmd", Json::Str("metrics".into()))])).unwrap();
+    assert_eq!(m.get("ok").as_bool(), Some(true));
+    let text = m.get("exposition").as_str().unwrap();
+    assert!(text.contains("# TYPE disco_requests_total counter"));
+    assert!(text.contains("# TYPE disco_resolve_ms histogram"));
+    assert!(text.contains("disco_searches_total 1\n"));
+    assert!(text.contains("disco_store_hits_total 1\n"));
+    // Per-path split: one cold resolve, one store hit, no warm starts.
+    assert!(text.contains("disco_resolve_cold_ms_count 1\n"));
+    assert!(text.contains("disco_resolve_hit_ms_count 1\n"));
+    assert!(text.contains("disco_resolve_warm_ms_count 0\n"));
+    assert!(text.contains("disco_resolve_ms_count 2\n"));
+    // The cold search persisted one record — store I/O was timed.
+    assert!(text.contains("disco_store_put_ms_count 1\n"));
+    assert!(text.contains("disco_resolve_ms_bucket{le=\"+Inf\"} 2\n"));
+
+    // The stats surface reads the same registry: identical counts, and
+    // percentiles that are log₂ bucket upper bounds covering the sum.
+    let stats = request(&addr, &Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("searches").as_usize(), Some(1));
+    assert_eq!(stats.get("store_hits").as_usize(), Some(1));
+    assert_eq!(stats.get("resolve_samples").as_usize(), Some(2));
+    let p50 = stats.get("resolve_p50_ms").as_f64().unwrap();
+    let p99 = stats.get("resolve_p99_ms").as_f64().unwrap();
+    assert!(p50 > 0.0 && p99 >= p50, "p50 {p50}, p99 {p99}");
+
+    let _ = request(&addr, &Json::obj(vec![("cmd", Json::Str("shutdown".into()))])).unwrap();
+    handle.join().unwrap();
+}

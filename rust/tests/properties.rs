@@ -946,6 +946,90 @@ fn prop_track_best_path_is_pure_observation() {
     });
 }
 
+#[test]
+fn prop_search_trace_is_pure_observation() {
+    // Telemetry must never steer the search: with the toggle off the
+    // sink is provably untouched (PanicSink), and with it on the result
+    // is bit-identical — the final event's best_ms is the exact
+    // best_cost_ms (DESIGN.md §15).
+    use disco::search::backtracking_search_traced;
+    use disco::util::trace::{MemSink, PanicSink};
+    check("search-trace-purity", PropConfig { cases: 6, seed: 0x7A4CE }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        let est = CostEstimator::oracle(&prof, &device);
+        let base = SearchConfig {
+            unchanged_limit: 30,
+            max_queue: 32,
+            seed: rng.next_u64(),
+            eval_threads: 1,
+            ..Default::default()
+        };
+        // Trace off: a panicking sink proves the disabled path never
+        // reaches the sink boundary.
+        let off = backtracking_search_traced(&g, &est, &base, &[], &mut PanicSink);
+        let on_cfg = SearchConfig { trace: true, ..base };
+        let mut sink = MemSink::default();
+        let on = backtracking_search_traced(&g, &est, &on_cfg, &[], &mut sink);
+        prop_assert!(
+            off.best_cost_ms == on.best_cost_ms
+                && off.evals == on.evals
+                && off.steps == on.steps
+                && off.best.fingerprint() == on.best.fingerprint(),
+            "tracing changed the trajectory: {}ms/{} vs {}ms/{}",
+            off.best_cost_ms,
+            off.evals,
+            on.best_cost_ms,
+            on.evals
+        );
+        let last = sink.events.last().expect("traced run must emit events");
+        prop_assert!(last.name == "final", "last event is {:?}", last.name);
+        let best_ms = last.args.iter().find(|(k, _)| *k == "best_ms").unwrap().1;
+        prop_assert!(
+            best_ms == on.best_cost_ms,
+            "final event best_ms {best_ms} != best_cost_ms {}",
+            on.best_cost_ms
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_histogram_percentile_error_bounded_by_bucket_width() {
+    // For any sample set and quantile, the histogram estimate e and the
+    // exact nearest-rank percentile s satisfy s ≤ e < 2s (log₂ buckets:
+    // the estimate is the upper bound of the bucket holding the rank).
+    use disco::util::metrics::{Histogram, LO};
+    check("histogram-percentile-bound", PropConfig { cases: 64, seed: 0x4157 }, |rng| {
+        let n = rng.gen_range_inclusive(1, 200);
+        // Log-uniform spread across ~40 octaves, all ≥ LO (below the
+        // first bucket bound the estimate clamps to LO by design).
+        let mut samples: Vec<f64> =
+            (0..n).map(|_| LO * (2f64).powf(rng.gen_f64() * 40.0)).collect();
+        let h = Histogram::default();
+        for &s in &samples {
+            h.observe(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [1.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+            let exact = samples[rank - 1];
+            let est = h.percentile(q);
+            prop_assert!(
+                est >= exact * (1.0 - 1e-9) && est <= exact * 2.0 * (1.0 + 1e-9),
+                "q{q}: exact {exact} est {est} outside [s, 2s]"
+            );
+        }
+        prop_assert!(
+            (h.sum() - samples.iter().sum::<f64>()).abs() < 1e-6 * h.sum().max(1.0),
+            "histogram sum drifted"
+        );
+        CaseResult::Pass
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Interpreter vs naive reference (DESIGN.md §9): for each new op family,
 // random shapes/dimension-numbers executed by the interpreter must match
