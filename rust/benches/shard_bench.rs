@@ -1,0 +1,40 @@
+//! Gradient-sharding A/B (`cargo bench --bench shard_bench`): on two
+//! comm-heavy model-zoo entries, compare the best plan found by the
+//! paper's fusion-only vocabulary (DDP semantics: whole-tensor
+//! AllReduces) against a joint fusion+sharding search warm-started from
+//! the DDP winner (so the sharded arm is a guaranteed-no-worse
+//! refinement, and any gap is what ZeRO/FSDP-style
+//! reduce-scatter/all-gather scheduling bought — sharded optimizer
+//! compute plus the all-gather hidden behind the next forward pass).
+//! Upserts the `shard_bench` line of `BENCH_search.json` at the repo
+//! root, leaving other arms' lines intact.
+
+use disco::bench::{write_shard_bench_record, BenchOptions, Scale};
+
+fn main() {
+    let opts = BenchOptions { scale: Scale::Full, ..Default::default() };
+    match write_shard_bench_record(&opts) {
+        Ok((record, path)) => {
+            println!(
+                "shard_bench: seed {} unchanged_limit {}",
+                record.seed, record.unchanged_limit
+            );
+            for m in &record.models {
+                println!(
+                    "  {:<18} {:>2}w  initial {:>8.3} ms  DDP {:>8.3} ms  \
+                     +sharding {:>8.3} ms  ({:.3}x, {} sharded ARs, {} evals)",
+                    m.model,
+                    m.workers,
+                    m.initial_ms,
+                    m.ddp_ms,
+                    m.sharded_ms,
+                    m.speedup(),
+                    m.sharded_ars,
+                    m.sharded_evals
+                );
+            }
+            println!("wrote shard_bench record to {}", path.display());
+        }
+        Err(e) => eprintln!("failed to write shard_bench record: {e}"),
+    }
+}

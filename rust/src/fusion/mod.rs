@@ -26,8 +26,20 @@
 //! moves, only the instruction's [`ChunkSpec`] changes. Tensor fusion
 //! resets chunking on the fused AllReduce (it is a new collective); the
 //! search re-chunks it explicitly when that wins.
+//!
+//! A fifth in-place rewrite ([`set_sharding`]) switches a collective
+//! between DDP all-reduce and ZeRO/FSDP reduce-scatter + all-gather
+//! ([`ShardSpec`], DESIGN.md §16). Legality: only same-kind collectives
+//! tensor-fuse, a sharded collective is never chunked (activating one
+//! resets the other), and sharding requires every consumer to be an
+//! optimizer update (the phase split reorders the optimizer step against
+//! the parameter re-replication, which is only sound when nothing else
+//! reads the reduced gradient).
 
-use crate::graph::{ChunkSpec, FusedGroup, Node, NodeId, OpKind, OrigOp, Role, TrainingGraph};
+use crate::graph::{
+    ChunkSpec, CollectiveKind, FusedGroup, Node, NodeId, OpKind, OrigOp, Role, ShardSpec,
+    TrainingGraph,
+};
 
 /// Upper bound on chunks per collective the vocabulary will propose. Keeps
 /// the per-AR branching factor bounded and the per-chunk transfer above the
@@ -64,6 +76,10 @@ pub enum FusionError {
     SelfFusion,
     #[error("chunking AllReduce {0} into {1} chunks is illegal: {2}")]
     BadChunking(NodeId, u32, &'static str),
+    #[error("sharding collective {0} is illegal: {1}")]
+    BadSharding(NodeId, &'static str),
+    #[error("collectives {0} and {1} have different collective kinds")]
+    MixedCollectiveKinds(NodeId, NodeId),
 }
 
 /// Singleton fused-group view of a (possibly already fused) compute node.
@@ -306,6 +322,7 @@ pub fn fuse_ops_explain(
         fused: Some(group),
         ar_constituents: Vec::new(),
         chunk: None,
+        shard: None,
         deleted: false,
     });
 
@@ -429,6 +446,13 @@ pub fn fuse_allreduce_explain(
     if !are_ar_neighbors(g, a, b) {
         return Err(FusionError::NotNeighbors(a, b));
     }
+    // Only same-kind collectives fuse (DESIGN.md §16): a reduce-scatter
+    // phase and a whole all-reduce have different completion semantics,
+    // so a mixed fusion has no single collective implementing it.
+    if g.nodes[a].shard_kind() != g.nodes[b].shard_kind() {
+        return Err(FusionError::MixedCollectiveKinds(a, b));
+    }
+    let shard_kind = g.nodes[a].shard_kind();
 
     let mut inputs = g.nodes[a].inputs.clone();
     for &i in &g.nodes[b].inputs {
@@ -461,6 +485,14 @@ pub fn fuse_allreduce_explain(
         // and starts whole-tensor; the search re-chunks it explicitly if
         // that wins (legality rule, DESIGN.md §13).
         chunk: None,
+        // Sharding carries over: both constituents have the same kind
+        // (checked above), and the fused collective keeps it — stored in
+        // canonical form so an unsharded fusion stays `None`.
+        shard: if shard_kind == CollectiveKind::ReduceScatterAllGather {
+            Some(ShardSpec::new(shard_kind))
+        } else {
+            None
+        },
         deleted: false,
     });
 
@@ -527,6 +559,9 @@ pub fn set_chunks_explain(
     if count == g.nodes[ar].chunk_count() {
         return Err(FusionError::BadChunking(ar, count, "already at this chunk count"));
     }
+    if count >= 2 && g.nodes[ar].is_sharded_collective() {
+        return Err(FusionError::BadChunking(ar, count, "collective is sharded (rs+ag)"));
+    }
     if count >= 2 && g.nodes[ar].bytes_out / count as f64 < MIN_CHUNK_BYTES {
         return Err(FusionError::BadChunking(ar, count, "chunks would fall below MIN_CHUNK_BYTES"));
     }
@@ -561,6 +596,101 @@ pub fn chunk_candidates(g: &TrainingGraph, ar: NodeId, max_chunks: u32) -> Vec<u
     out
 }
 
+/// Set the collective kind of a live AllReduce (`AllReduce` un-shards
+/// it). Returns the collective's id. See [`set_sharding_explain`].
+pub fn set_sharding(
+    g: &mut TrainingGraph,
+    ar: NodeId,
+    kind: CollectiveKind,
+) -> Result<NodeId, FusionError> {
+    set_sharding_explain(g, ar, kind).map(|fx| fx.fused)
+}
+
+/// [`set_sharding`] returning the full [`FusionEffects`] record.
+///
+/// Legality rules (DESIGN.md §16):
+/// * `ar` must be a live AllReduce;
+/// * the graph must span at least two workers (a single replica has no
+///   shards to scatter over);
+/// * every consumer of the collective must be an optimizer update — the
+///   split schedule moves the parameter re-replication (all-gather)
+///   after/around the optimizer step, which is only sound when nothing
+///   else reads the fully-reduced gradient;
+/// * `kind` must differ from the current collective kind (a no-op
+///   rewrite would only produce fingerprint-duplicate children).
+///
+/// Activating sharding resets chunking (a sharded collective is never
+/// chunked — the phase split already pipelines it); un-sharding leaves
+/// the collective whole-tensor.
+///
+/// This is an **in-place** edit like [`set_chunks`]: no node is created
+/// or tombstoned and no edge moves, so cached adjacency stays valid and
+/// is *not* invalidated. The per-node cost-table entry for the
+/// collective keeps holding the *unsharded* full-all-reduce time —
+/// the simulator derives the reduce-scatter/all-gather phase costs from
+/// it inside the event loop — so tables built against the parent remain
+/// valid and `CostTable::extend_in`'s contract holds.
+pub fn set_sharding_explain(
+    g: &mut TrainingGraph,
+    ar: NodeId,
+    kind: CollectiveKind,
+) -> Result<FusionEffects, FusionError> {
+    if ar >= g.nodes.len() || g.nodes[ar].deleted || g.nodes[ar].kind != OpKind::AllReduce {
+        return Err(FusionError::NotAllReduce(ar));
+    }
+    if kind == g.nodes[ar].shard_kind() {
+        return Err(FusionError::BadSharding(ar, "already at this collective kind"));
+    }
+    if kind == CollectiveKind::ReduceScatterAllGather {
+        if g.num_workers < 2 {
+            return Err(FusionError::BadSharding(ar, "needs >= 2 workers to shard over"));
+        }
+        let all_opt = g
+            .live()
+            .filter(|n| n.inputs.contains(&ar))
+            .all(|n| n.role == Role::Optimizer);
+        if !all_opt {
+            return Err(FusionError::BadSharding(
+                ar,
+                "a non-optimizer consumer reads the reduced gradient",
+            ));
+        }
+        g.nodes[ar].chunk = None;
+        g.nodes[ar].shard = Some(ShardSpec::new(kind));
+    } else {
+        // Canonical form: a DDP all-reduce is stored as None so
+        // fingerprints of "never sharded" and "sharded then reset"
+        // graphs coincide.
+        g.nodes[ar].shard = None;
+    }
+    debug_assert!(g.validate().is_ok(), "sharding broke the graph");
+    Ok(FusionEffects { fused: ar, redirected: Vec::new(), pred_deleted: false })
+}
+
+/// Collective kinds the vocabulary offers for `ar`: the one kind it is
+/// not currently using, when switching to it would be legal (empty for
+/// non-collectives or when sharding's preconditions fail).
+pub fn shard_candidates(g: &TrainingGraph, ar: NodeId) -> Vec<CollectiveKind> {
+    let Some(n) = g.nodes.get(ar) else { return Vec::new() };
+    if n.deleted || n.kind != OpKind::AllReduce {
+        return Vec::new();
+    }
+    match n.shard_kind() {
+        CollectiveKind::ReduceScatterAllGather => vec![CollectiveKind::AllReduce],
+        CollectiveKind::AllReduce => {
+            let legal = g.num_workers >= 2
+                && g.live()
+                    .filter(|c| c.inputs.contains(&ar))
+                    .all(|c| c.role == Role::Optimizer);
+            if legal {
+                vec![CollectiveKind::ReduceScatterAllGather]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+}
+
 /// Candidate (pred, succ) op-fusion pairs in the current graph.
 pub fn op_fusion_candidates(g: &TrainingGraph) -> Vec<(NodeId, NodeId)> {
     let mut out = Vec::new();
@@ -586,6 +716,7 @@ pub enum Mutation {
     FuseOps { pred: NodeId, succ: NodeId, kind: FusionKind },
     FuseAllReduce { a: NodeId, b: NodeId },
     SetChunks { ar: NodeId, count: u32 },
+    SetSharding { ar: NodeId, kind: CollectiveKind },
 }
 
 impl Mutation {
@@ -596,6 +727,7 @@ impl Mutation {
             Mutation::FuseOps { pred, succ, kind } => fuse_ops(g, pred, succ, kind),
             Mutation::FuseAllReduce { a, b } => fuse_allreduce(g, a, b),
             Mutation::SetChunks { ar, count } => set_chunks(g, ar, count),
+            Mutation::SetSharding { ar, kind } => set_sharding(g, ar, kind),
         }
     }
 }
@@ -684,6 +816,17 @@ impl CandidateSet {
         count: u32,
     ) -> Result<FusionEffects, FusionError> {
         set_chunks_explain(g, ar, count)
+    }
+
+    /// Apply a sharding rewrite through the set. In-place: neither pool
+    /// changes (no node is created or tombstoned).
+    pub fn apply_sharding(
+        &mut self,
+        g: &mut TrainingGraph,
+        ar: NodeId,
+        kind: CollectiveKind,
+    ) -> Result<FusionEffects, FusionError> {
+        set_sharding_explain(g, ar, kind)
     }
 }
 
@@ -1035,6 +1178,128 @@ mod tests {
         let f = fuse_allreduce(&mut g, ar1, ar2).unwrap();
         assert_eq!(g.nodes[f].chunk_count(), 1, "fused AR starts whole-tensor");
         assert!(!g.has_chunking());
+    }
+
+    /// Two gradients, two ARs, each feeding an optimizer update.
+    fn sharded_ready_graph() -> (TrainingGraph, NodeId, NodeId, NodeId, NodeId) {
+        let mut b = GraphBuilder::new("sh", 4);
+        let x = b.constant("x", &[256]);
+        let g1 = b.compute(OpKind::Mul, "g1", &[x], &[256], Role::Backward);
+        let g2 = b.compute(OpKind::Mul, "g2", &[g1], &[128], Role::Backward);
+        let p1 = b.param("w1", &[256]);
+        let p2 = b.param("w2", &[128]);
+        let ar1 = b.allreduce("ar1", g1, &[256]);
+        let ar2 = b.allreduce("ar2", g2, &[128]);
+        let u1 = b.optimizer_update("u1", &[ar1, p1]);
+        let u2 = b.optimizer_update("u2", &[ar2, p2]);
+        (b.finish(), ar1, ar2, u1, u2)
+    }
+
+    #[test]
+    fn sharding_legality_enforced() {
+        let (mut g, ar1, _ar2, _u1, _u2) = sharded_ready_graph();
+        let rs = CollectiveKind::ReduceScatterAllGather;
+        // Non-AR target and no-op kind.
+        assert_eq!(set_sharding(&mut g, 0, rs), Err(FusionError::NotAllReduce(0)));
+        assert!(matches!(
+            set_sharding(&mut g, ar1, CollectiveKind::AllReduce),
+            Err(FusionError::BadSharding(_, _))
+        ));
+        // Legal activation: chunking resets, fingerprint moves.
+        let fp0 = g.fingerprint();
+        let fx = set_sharding_explain(&mut g, ar1, rs).unwrap();
+        assert_eq!(fx.fused, ar1);
+        assert!(fx.redirected.is_empty() && !fx.pred_deleted);
+        assert!(g.nodes[ar1].is_sharded_collective());
+        assert!(g.has_sharding());
+        assert_ne!(g.fingerprint(), fp0);
+        // A sharded collective may not be chunked.
+        assert!(matches!(
+            set_chunks(&mut g, ar1, 2),
+            Err(FusionError::BadChunking(_, 2, _))
+        ));
+        // Un-sharding resets to canonical None — fingerprint returns.
+        set_sharding(&mut g, ar1, CollectiveKind::AllReduce).unwrap();
+        assert!(g.nodes[ar1].shard.is_none(), "unsharded stored canonically as None");
+        assert_eq!(g.fingerprint(), fp0);
+        // Single-worker graphs cannot shard.
+        let mut b1 = GraphBuilder::new("w1", 1);
+        let x = b1.constant("x", &[64]);
+        let gr = b1.compute(OpKind::Mul, "g", &[x], &[64], Role::Backward);
+        let ar = b1.allreduce("ar", gr, &[64]);
+        let mut g1w = b1.finish();
+        assert!(matches!(
+            set_sharding(&mut g1w, ar, rs),
+            Err(FusionError::BadSharding(_, _))
+        ));
+        // A non-optimizer consumer of the reduced gradient blocks sharding.
+        let mut b2 = GraphBuilder::new("nc", 4);
+        let x2 = b2.constant("x", &[64]);
+        let gr2 = b2.compute(OpKind::Mul, "g", &[x2], &[64], Role::Backward);
+        let ar2 = b2.allreduce("ar", gr2, &[64]);
+        let _reader = b2.compute(OpKind::Mul, "norm", &[ar2], &[64], Role::Backward);
+        let mut g2 = b2.finish();
+        assert!(matches!(
+            set_sharding(&mut g2, ar2, rs),
+            Err(FusionError::BadSharding(_, _))
+        ));
+        assert!(shard_candidates(&g2, ar2).is_empty());
+    }
+
+    #[test]
+    fn shard_candidates_offer_the_other_kind() {
+        let (mut g, ar1, _ar2, _u1, _u2) = sharded_ready_graph();
+        let rs = CollectiveKind::ReduceScatterAllGather;
+        assert_eq!(shard_candidates(&g, ar1), vec![rs]);
+        set_sharding(&mut g, ar1, rs).unwrap();
+        assert_eq!(shard_candidates(&g, ar1), vec![CollectiveKind::AllReduce]);
+        // Non-AR targets yield nothing.
+        assert!(shard_candidates(&g, 0).is_empty());
+    }
+
+    #[test]
+    fn ar_fusion_requires_same_collective_kind() {
+        let (mut g, ar1, ar2, _u1, _u2) = sharded_ready_graph();
+        let rs = CollectiveKind::ReduceScatterAllGather;
+        set_sharding(&mut g, ar1, rs).unwrap();
+        assert_eq!(
+            fuse_allreduce(&mut g, ar1, ar2),
+            Err(FusionError::MixedCollectiveKinds(ar1, ar2))
+        );
+        // Shard both the same way and fusion works, carrying the kind.
+        set_sharding(&mut g, ar2, rs).unwrap();
+        let f = fuse_allreduce(&mut g, ar1, ar2).unwrap();
+        assert!(g.nodes[f].is_sharded_collective(), "fusion carries the shared kind");
+        assert_eq!(g.nodes[f].chunk_count(), 1);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn sharding_resets_chunking() {
+        let mut b = GraphBuilder::new("shck", 4);
+        let x = b.constant("x", &[1 << 16]);
+        let gr = b.compute(OpKind::Mul, "g", &[x], &[1 << 16], Role::Backward);
+        let p = b.param("w", &[1 << 16]);
+        let ar = b.allreduce("ar", gr, &[1 << 16]);
+        b.optimizer_update("u", &[ar, p]);
+        let mut g = b.finish();
+        set_chunks(&mut g, ar, 8).unwrap();
+        assert!(g.has_chunking());
+        set_sharding(&mut g, ar, CollectiveKind::ReduceScatterAllGather).unwrap();
+        assert!(!g.has_chunking(), "sharding resets the chunk spec");
+        assert!(g.nodes[ar].chunk.is_none());
+        assert!(g.has_sharding());
+    }
+
+    #[test]
+    fn shard_mutation_replay_reproduces_rewrite() {
+        let (mut g, ar1, _ar2, _u1, _u2) = sharded_ready_graph();
+        let mut h = g.clone();
+        let rs = CollectiveKind::ReduceScatterAllGather;
+        set_sharding(&mut g, ar1, rs).unwrap();
+        Mutation::SetSharding { ar: ar1, kind: rs }.replay(&mut h).unwrap();
+        assert_eq!(g.fingerprint(), h.fingerprint());
+        assert_eq!(g, h);
     }
 
     #[test]

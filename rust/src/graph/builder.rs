@@ -73,6 +73,7 @@ impl GraphBuilder {
             fused: None,
             ar_constituents: Vec::new(),
             chunk: None,
+            shard: None,
             deleted: false,
         })
     }

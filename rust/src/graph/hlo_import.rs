@@ -521,6 +521,7 @@ pub fn import_hlo_text(text: &str, num_workers: usize) -> Result<TrainingGraph> 
             fused: None,
             ar_constituents: if kind == OpKind::AllReduce { vec![] } else { Vec::new() },
             chunk: None,
+            shard: None,
             deleted: false,
         });
         if kind == OpKind::AllReduce {

@@ -159,6 +159,120 @@ impl ChunkSpec {
     }
 }
 
+/// Which collective implements a gradient's cross-replica reduction
+/// (ZeRO/FSDP sharding dimension, DESIGN.md §16). `AllReduce` is the
+/// paper's DDP baseline: every rank ends with the full reduced gradient.
+/// `ReduceScatterAllGather` splits the collective: a reduce-scatter
+/// leaves each rank with its 1/W shard of the reduced gradient (the
+/// optimizer then updates only that shard), and an all-gather of the
+/// updated parameter shards restores replication — schedulable into the
+/// next iteration's forward pass (the overlap window the simulator
+/// models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    ReduceScatterAllGather,
+}
+
+impl CollectiveKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "ar",
+            CollectiveKind::ReduceScatterAllGather => "rs_ag",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CollectiveKind> {
+        match s {
+            "ar" => Some(CollectiveKind::AllReduce),
+            "rs_ag" => Some(CollectiveKind::ReduceScatterAllGather),
+            _ => None,
+        }
+    }
+}
+
+/// Per-tensor placement state in the sharded-training state machine
+/// (CoCoNet / commfuser tagging model). The simulator does not branch on
+/// these at run time — they document and validate the legality rules the
+/// sharded schedule obeys (see [`ShardSpec::placement_after`]):
+///
+/// * gradient before its collective: `Partial` (each rank holds its
+///   local, un-reduced contribution);
+/// * after reduce-scatter: `Sharded` (rank `r` holds the reduced shard
+///   `r`);
+/// * parameter shard after the optimizer step: still `Sharded`;
+/// * after all-gather: `Replicated` (every rank holds the full tensor);
+/// * `OnDemand` marks a tensor materialized lazily right before use —
+///   the prefetch window the all-gather is scheduled into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    Replicated,
+    Sharded,
+    Partial,
+    OnDemand,
+}
+
+impl Placement {
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Replicated => "replicated",
+            Placement::Sharded => "sharded",
+            Placement::Partial => "partial",
+            Placement::OnDemand => "ondemand",
+        }
+    }
+}
+
+/// Sharding descriptor for a gradient collective (ZeRO/FSDP-style
+/// sharded-state training). Mirrors [`ChunkSpec`]'s canonical-`None`
+/// contract: `Some(ShardSpec { kind: AllReduce })` is semantically
+/// identical to no descriptor at all — every consumer (simulator,
+/// fingerprint, serializer) treats the inactive form as absent, so
+/// "never sharded" and "sharded then reset" graphs are bit-identical
+/// (DESIGN.md §16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Collective implementing the reduction.
+    pub kind: CollectiveKind,
+}
+
+impl ShardSpec {
+    pub fn new(kind: CollectiveKind) -> ShardSpec {
+        ShardSpec { kind }
+    }
+
+    /// True when this descriptor actually changes scheduling.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.kind == CollectiveKind::ReduceScatterAllGather
+    }
+
+    /// Exact per-rank byte split of a `total`-byte tensor over `workers`
+    /// ranks, in u64 arithmetic — the remainder spreads one byte each
+    /// over the first ranks, so the shard sizes always sum EXACTLY to
+    /// the input (the conservation property the reduce-scatter and
+    /// all-gather phases are tested against).
+    pub fn shard_bytes(total: f64, workers: usize) -> Vec<f64> {
+        let w = workers.max(1) as u64;
+        let t = total.max(0.0) as u64;
+        let per = t / w;
+        let rem = t % w;
+        (0..w).map(|i| (per + u64::from(i < rem)) as f64).collect()
+    }
+
+    /// The placement state a tensor is in after each stage of the
+    /// sharded schedule — the commfuser state machine the legality rules
+    /// encode. `stage` 0 = gradient produced, 1 = after reduce-scatter,
+    /// 2 = after optimizer step, 3 = after all-gather.
+    pub fn placement_after(stage: u8) -> Placement {
+        match stage {
+            0 => Placement::Partial,
+            1 | 2 => Placement::Sharded,
+            _ => Placement::Replicated,
+        }
+    }
+}
+
 /// One instruction of the training graph.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
@@ -191,6 +305,11 @@ pub struct Node {
     /// `Some(count <= 1)` mean the same thing — a whole-tensor transfer
     /// (see [`ChunkSpec`]); tensor fusion resets this to `None`.
     pub chunk: Option<ChunkSpec>,
+    /// For `OpKind::AllReduce`: optional sharding descriptor. `None` and
+    /// `Some(kind = AllReduce)` mean the same thing — a DDP whole-gradient
+    /// all-reduce (see [`ShardSpec`]); tensor fusion carries the shared
+    /// kind of its (same-kind, by legality) constituents.
+    pub shard: Option<ShardSpec>,
     /// Tombstone: true once absorbed by a fusion transform.
     pub deleted: bool,
 }
@@ -210,6 +329,24 @@ impl Node {
             Some(c) if c.is_active() => c.count,
             _ => 1,
         }
+    }
+
+    /// Effective collective kind: DDP all-reduce unless an active
+    /// [`ShardSpec`] is present. Canonicalizes `None` ≡
+    /// `Some(kind = AllReduce)`.
+    #[inline]
+    pub fn shard_kind(&self) -> CollectiveKind {
+        match &self.shard {
+            Some(s) if s.is_active() => s.kind,
+            _ => CollectiveKind::AllReduce,
+        }
+    }
+
+    /// True for a live-schedulable collective that runs as
+    /// reduce-scatter + all-gather instead of a whole all-reduce.
+    #[inline]
+    pub fn is_sharded_collective(&self) -> bool {
+        self.kind == OpKind::AllReduce && self.shard_kind() == CollectiveKind::ReduceScatterAllGather
     }
 
     /// Signature used as an estimator cache key. Unfused ops key on
@@ -597,6 +734,12 @@ impl TrainingGraph {
             if n.chunk_count() >= 2 {
                 n.chunk_count().hash(&mut h);
             }
+            // Sharding likewise: hashed only when active, so unsharded
+            // graphs fingerprint exactly as they did before the sharding
+            // dimension existed (DESIGN.md §16 bit-identity contract).
+            if n.is_sharded_collective() {
+                1u8.hash(&mut h);
+            }
         }
         h.finish()
     }
@@ -606,6 +749,15 @@ impl TrainingGraph {
     /// loop and the chunked dual-track loop (DESIGN.md §13).
     pub fn has_chunking(&self) -> bool {
         self.live().any(|n| n.kind == OpKind::AllReduce && n.chunk_count() >= 2)
+    }
+
+    /// True if any live collective carries an active sharding descriptor —
+    /// together with [`TrainingGraph::has_chunking`] this gates the
+    /// simulator's extended dual-track event loop; a graph with neither
+    /// replays through today's whole-tensor loop bit-identically
+    /// (DESIGN.md §16).
+    pub fn has_sharding(&self) -> bool {
+        self.live().any(|n| n.is_sharded_collective())
     }
 }
 
@@ -800,6 +952,52 @@ mod tests {
         assert_ne!(base.fingerprint(), four.fingerprint());
         assert!(four.has_chunking());
         assert_eq!(four.nodes[ar].chunk_count(), 4);
+    }
+
+    #[test]
+    fn shard_bytes_conserve_total_exactly() {
+        for w in 1..=9usize {
+            for total in [0.0, 1.0, 7.0, 4096.0, 65536.0 + 3.0] {
+                let parts = ShardSpec::shard_bytes(total, w);
+                assert_eq!(parts.len(), w);
+                assert_eq!(parts.iter().sum::<f64>(), total, "w={w} total={total}");
+                // Shards differ by at most one byte.
+                let max = parts.iter().cloned().fold(0.0, f64::max);
+                let min = parts.iter().cloned().fold(f64::INFINITY, f64::min);
+                assert!(max - min <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_kind_allreduce_is_canonically_unsharded() {
+        let base = tiny();
+        let ar = base.allreduces()[0];
+        let mut inert = base.clone();
+        inert.nodes[ar].shard = Some(ShardSpec::new(CollectiveKind::AllReduce));
+        // kind = AllReduce is identical to no descriptor at all.
+        assert_eq!(base.fingerprint(), inert.fingerprint());
+        assert!(!inert.has_sharding());
+        assert_eq!(inert.nodes[ar].shard_kind(), CollectiveKind::AllReduce);
+        let mut sharded = base.clone();
+        sharded.nodes[ar].shard =
+            Some(ShardSpec::new(CollectiveKind::ReduceScatterAllGather));
+        assert_ne!(base.fingerprint(), sharded.fingerprint());
+        assert!(sharded.has_sharding());
+        assert!(sharded.nodes[ar].is_sharded_collective());
+    }
+
+    #[test]
+    fn placement_state_machine_matches_commfuser_model() {
+        assert_eq!(ShardSpec::placement_after(0), Placement::Partial);
+        assert_eq!(ShardSpec::placement_after(1), Placement::Sharded);
+        assert_eq!(ShardSpec::placement_after(2), Placement::Sharded);
+        assert_eq!(ShardSpec::placement_after(3), Placement::Replicated);
+        assert_eq!(Placement::OnDemand.name(), "ondemand");
+        assert_eq!(CollectiveKind::from_name("rs_ag"),
+            Some(CollectiveKind::ReduceScatterAllGather));
+        assert_eq!(CollectiveKind::from_name("ar"), Some(CollectiveKind::AllReduce));
+        assert_eq!(CollectiveKind::from_name("x"), None);
     }
 
     #[test]

@@ -79,6 +79,11 @@ fn node_json(n: &Node) -> Json {
     if n.chunk_count() >= 2 {
         fields.push(("chunk", Json::Num(n.chunk_count() as f64)));
     }
+    // Same only-when-active rule for the gradient-sharding spec: the
+    // canonical AllReduce kind serializes as no field at all.
+    if n.is_sharded_collective() {
+        fields.push(("shard", Json::Str(n.shard_kind().name().into())));
+    }
     Json::obj(fields)
 }
 
@@ -138,6 +143,18 @@ fn node_from(j: &Json) -> Option<Node> {
                 let count = c.as_usize()? as u32;
                 if count >= 2 {
                     Some(super::ChunkSpec::new(count))
+                } else {
+                    None
+                }
+            }
+        },
+        shard: match j.get("shard") {
+            Json::Null => None,
+            s => {
+                let kind = super::CollectiveKind::from_name(s.as_str()?)?;
+                // Canonicalize: a persisted AllReduce kind is no spec.
+                if kind == super::CollectiveKind::ReduceScatterAllGather {
+                    Some(super::ShardSpec::new(kind))
                 } else {
                     None
                 }
@@ -282,6 +299,28 @@ mod tests {
         let g2 = TrainingGraph::from_json(&g.to_json()).unwrap();
         assert_eq!(g, g2);
         assert_eq!(g2.nodes[ar].chunk_count(), 8);
+        assert_eq!(g.fingerprint(), g2.fingerprint());
+    }
+
+    #[test]
+    fn roundtrip_preserves_shard_spec() {
+        use crate::fusion::set_sharding;
+        use crate::graph::CollectiveKind;
+        let mut b = GraphBuilder::new("rt6", 4);
+        let x = b.constant("x", &[1 << 14]);
+        let gr = b.compute(OpKind::Mul, "g", &[x], &[1 << 14], Role::Backward);
+        let p = b.param("w", &[1 << 14]);
+        let ar = b.allreduce("ar", gr, &[1 << 14]);
+        b.optimizer_update("u", &[ar, p]);
+        let mut g = b.finish();
+        // Unsharded graphs must not emit the field at all (old readers).
+        assert!(!g.to_json().contains("\"shard\""));
+        set_sharding(&mut g, ar, CollectiveKind::ReduceScatterAllGather).unwrap();
+        let json = g.to_json();
+        assert!(json.contains("\"shard\":\"rs_ag\""));
+        let g2 = TrainingGraph::from_json(&json).unwrap();
+        assert_eq!(g, g2);
+        assert!(g2.nodes[ar].is_sharded_collective());
         assert_eq!(g.fingerprint(), g2.fingerprint());
     }
 

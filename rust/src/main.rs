@@ -3,16 +3,16 @@
 //! ```text
 //! disco search    --model transformer --cluster a [--alpha 1.05 --beta 10]
 //!                 [--estimator analytical|gnn|oracle] [--chunking]
-//!                 [--max-chunks 8] [--out strategy.json]
+//!                 [--max-chunks 8] [--sharding] [--out strategy.json]
 //!                 [--trace search.json]   # Chrome trace + convergence JSONL
 //! disco serve     [--addr 127.0.0.1:7077] [--store plans.jsonl|none]
 //!                 [--capacity 512] [--max-conns 256] [--no-warm]
 //!                 [--no-nearest] [--cold-budget-ms 0] [--max-cold 8]
 //!                 [--metrics] [--prom] [--stop]
 //! disco store     fsck [--store plans.jsonl] [--repair]
-//! disco plan      --model transformer [--graph module.json] [--cluster a]
-//!                 [--addr HOST:PORT] [--store plans.jsonl] [--unchanged 150]
-//!                 [--chunking] [--max-chunks 8]
+//! disco plan      --model transformer [--graph module.json] [--hlo module.hlo.txt]
+//!                 [--cluster a] [--addr HOST:PORT] [--store plans.jsonl]
+//!                 [--unchanged 150] [--chunking] [--max-chunks 8] [--sharding]
 //!                 [--expect store|warm|cold] [--out strategy.json]
 //! disco enact     --strategy strategy.json --world 4 [--iterations 10]
 //!                 [--quorum N] [--timeout-ms 10000] [--retries 1]
@@ -99,6 +99,12 @@ fn cmd_search(args: &Args) -> Result<()> {
         cfg.methods.chunking = true;
     }
     cfg.max_chunks = args.get_usize("max-chunks", cfg.max_chunks as usize) as u32;
+    // `--sharding` opts the vocabulary into reduce-scatter/all-gather
+    // gradient sharding (DESIGN.md §16); `search.sharding` in the config
+    // file does the same.
+    if args.has_flag("sharding") {
+        cfg.methods.sharding = true;
+    }
     println!(
         "searching {} on cluster {} ({} devices, {} live ops, {} AllReduces; estimator={}, α={}, β={})",
         kind.name(),
@@ -143,6 +149,15 @@ fn cmd_search(args: &Args) -> Result<()> {
             .map(|n| format!("{}×{}", n.name, n.chunk_count()))
             .collect();
         println!("chunk schedule: {}", sched.join(", "));
+    }
+    if r.best.has_sharding() {
+        let sched: Vec<String> = r
+            .best
+            .live()
+            .filter(|n| n.is_sharded_collective())
+            .map(|n| n.name.clone())
+            .collect();
+        println!("sharded (reduce-scatter/all-gather): {}", sched.join(", "));
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.best.to_json())?;
@@ -262,8 +277,21 @@ fn cmd_store(args: &Args) -> Result<()> {
 }
 
 /// The graph a `plan` request is about: an explicit serialized module
-/// (`--graph file.json`) or a model-zoo build.
+/// (`--graph file.json`), an HLO text module (`--hlo module.hlo.txt`),
+/// or a model-zoo build.
+///
+/// All three sources return a plain `TrainingGraph`, so every one of
+/// them flows through the same fingerprint → store-hit / warm / cold
+/// resolution in `cmd_plan`. (An earlier revision special-cased
+/// imports straight to a cold search, which silently bypassed the plan
+/// store — imported modules never hit or warm-started.)
 fn plan_graph(args: &Args, cluster: &Cluster) -> Result<TrainingGraph> {
+    if let Some(path) = args.get("hlo") {
+        return disco::graph::hlo_import::import_hlo_file(
+            std::path::Path::new(path),
+            cluster.num_devices(),
+        );
+    }
     match args.get("graph") {
         Some(path) => TrainingGraph::from_json(&std::fs::read_to_string(path)?),
         None => {
@@ -316,6 +344,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
                     mc.parse().map_err(|_| anyhow!("--max-chunks must be an integer"))?;
                 fields.push(("max_chunks", Json::Num(mc as f64)));
             }
+            if args.has_flag("sharding") {
+                fields.push(("sharding", Json::Bool(true)));
+            }
             let req = Json::obj(fields);
             let resp = disco::service::request(addr, &req)?;
             if resp.get("ok").as_bool() != Some(true) {
@@ -350,6 +381,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 cfg.methods.chunking = true;
             }
             cfg.max_chunks = args.get_usize("max-chunks", cfg.max_chunks as usize) as u32;
+            if args.has_flag("sharding") {
+                cfg.methods.sharding = true;
+            }
             let est_name = if estimator == "analytical" { "analytical" } else { "oracle" };
             // Fingerprint covers the estimator *content* (trained gnn
             // artifact bytes), not just its name — retraining invalidates
@@ -411,6 +445,18 @@ fn cmd_plan(args: &Args) -> Result<()> {
             .collect();
         if !sched.is_empty() {
             println!("chunk schedule: {}", sched.join(", "));
+        }
+        // Same for a sharded plan: the per-AR "shard" tag travels in the
+        // strategy, so enactment and humans both see which gradients run
+        // reduce-scatter/all-gather instead of a whole all-reduce.
+        let sharded: Vec<String> = nodes
+            .iter()
+            .filter(|n| n.get("deleted").as_bool() != Some(true))
+            .filter(|n| n.get("shard").as_str() == Some("rs_ag"))
+            .map(|n| n.get("name").as_str().unwrap_or("?").to_string())
+            .collect();
+        if !sharded.is_empty() {
+            println!("sharded (reduce-scatter/all-gather): {}", sharded.join(", "));
         }
     }
     if let Some(path) = args.get("out") {

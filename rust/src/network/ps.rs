@@ -133,6 +133,7 @@ mod tests {
             fused: None,
             ar_constituents: vec![],
             chunk: None,
+            shard: None,
             deleted: false,
         };
         assert_eq!(src.compute_time_ms(&node), 1.5);

@@ -14,11 +14,17 @@
 //! 2. duplicate op fusion of a random (pred, succ) pair,
 //! 3. fusion of a random AllReduce with a random neighbour AllReduce.
 //!
-//! A fourth, opt-in method extends the vocabulary past the paper:
+//! A fourth and fifth, opt-in method extend the vocabulary past the
+//! paper:
 //! 4. re-chunking a random AllReduce into a power-of-two chunk stream
 //!    (DESIGN.md §13), so the search discovers comm/compute overlap
 //!    schedules jointly with the fusion decisions that create the fused
-//!    tensors being chunked.
+//!    tensors being chunked;
+//! 5. toggling a random AllReduce between whole-tensor DDP and a
+//!    ZeRO/FSDP-style reduce-scatter + all-gather split (DESIGN.md §16),
+//!    so gradient-sharding decisions are searched jointly with the op-
+//!    and tensor-fusion decisions that shape the collectives being
+//!    sharded.
 //!
 //! Method subsets are configurable to reproduce the Fig. 10 ablation.
 //!
@@ -72,14 +78,28 @@ pub struct MethodSet {
     /// `BENCH_search.json` projections comparable across PRs. Enable via
     /// `search.chunking` in the config file or `--chunking` on the CLI.
     pub chunking: bool,
+    /// Toggle AllReduce collectives between whole-tensor DDP and the
+    /// ZeRO/FSDP reduce-scatter + all-gather split (DESIGN.md §16). Off
+    /// in [`MethodSet::all`] for the same reason as chunking: the paper's
+    /// move set is the three fusion methods, and the default vocabulary
+    /// must keep recorded trajectories and `BENCH_search.json`
+    /// projections comparable. Enable via `search.sharding` in the config
+    /// file or `--sharding` on the CLI.
+    pub sharding: bool,
 }
 
 impl MethodSet {
-    /// The paper's full move set (the three fusion methods). Chunking is
-    /// a vocabulary *extension* and stays opt-in; see
-    /// [`MethodSet::chunking`].
+    /// The paper's full move set (the three fusion methods). Chunking and
+    /// sharding are vocabulary *extensions* and stay opt-in; see
+    /// [`MethodSet::chunking`] / [`MethodSet::sharding`].
     pub fn all() -> MethodSet {
-        MethodSet { nondup_fusion: true, dup_fusion: true, ar_fusion: true, chunking: false }
+        MethodSet {
+            nondup_fusion: true,
+            dup_fusion: true,
+            ar_fusion: true,
+            chunking: false,
+            sharding: false,
+        }
     }
 
     pub fn none() -> MethodSet {
@@ -88,12 +108,18 @@ impl MethodSet {
             dup_fusion: false,
             ar_fusion: false,
             chunking: false,
+            sharding: false,
         }
     }
 
     /// All fusion methods plus the chunking extension.
     pub fn all_with_chunking() -> MethodSet {
         MethodSet { chunking: true, ..MethodSet::all() }
+    }
+
+    /// All fusion methods plus the gradient-sharding extension.
+    pub fn all_with_sharding() -> MethodSet {
+        MethodSet { sharding: true, ..MethodSet::all() }
     }
 
     fn enabled(&self) -> Vec<Method> {
@@ -110,6 +136,9 @@ impl MethodSet {
         if self.chunking {
             v.push(Method::Chunk);
         }
+        if self.sharding {
+            v.push(Method::Shard);
+        }
         v
     }
 }
@@ -120,6 +149,7 @@ enum Method {
     DupFusion,
     ArFusion,
     Chunk,
+    Shard,
 }
 
 /// Search hyper-parameters (paper defaults: α = 1.05, β = 10,
@@ -348,6 +378,24 @@ fn random_apply(
                     let Some(&count) = rng.choose(&counts) else { continue };
                     if let Ok(fx) = cset.apply_chunking(g, a, count) {
                         muts.push(Mutation::SetChunks { ar: a, count });
+                        if let Some(f) = frontier.as_deref_mut() {
+                            f.push(a);
+                            fx.extend_frontier(g, f);
+                        }
+                        ok = true;
+                        break;
+                    }
+                }
+                ok
+            }
+            Method::Shard => {
+                let mut ok = false;
+                for _ in 0..4 {
+                    let Some(&a) = rng.choose(cset.allreduces()) else { break };
+                    let kinds = fusion::shard_candidates(g, a);
+                    let Some(&kind) = rng.choose(&kinds) else { continue };
+                    if let Ok(fx) = cset.apply_sharding(g, a, kind) {
+                        muts.push(Mutation::SetSharding { ar: a, kind });
                         if let Some(f) = frontier.as_deref_mut() {
                             f.push(a);
                             fx.extend_frontier(g, f);
@@ -1360,6 +1408,68 @@ mod tests {
             base.best_cost_ms
         );
         assert!(joint.best.validate().is_ok());
+    }
+
+    #[test]
+    fn sharding_method_discovers_zero_style_win() {
+        let g = workload();
+        let cfg = SearchConfig {
+            methods: MethodSet { sharding: true, ..MethodSet::none() },
+            ..quick_cfg()
+        };
+        let r = backtracking_search(&g, &CommBound, &cfg);
+        // With sharding as the *only* move, any improvement comes from the
+        // reduce-scatter/all-gather split: optimizer updates shrink to the
+        // local shard and the all-gathers hide behind the next iteration's
+        // forward window.
+        assert!(
+            r.best_cost_ms < r.initial_cost_ms,
+            "sharding found no win: {} -> {}",
+            r.initial_cost_ms,
+            r.best_cost_ms
+        );
+        assert!(r.best.has_sharding(), "winning plan carries no shard spec");
+        assert!(r.best.validate().is_ok());
+        assert!((r.best.total_gradient_bytes() - g.total_gradient_bytes()).abs() < 1e-6);
+        // Deterministic per seed, like every other method.
+        let r2 = backtracking_search(&g, &CommBound, &cfg);
+        assert_eq!(r.best_cost_ms, r2.best_cost_ms);
+        assert_eq!(r.evals, r2.evals);
+        assert_eq!(r.best.fingerprint(), r2.best.fingerprint());
+    }
+
+    #[test]
+    fn sharding_joins_fusion_without_hurting() {
+        let g = workload();
+        let base = backtracking_search(&g, &CommBound, &quick_cfg());
+        let joint_cfg =
+            SearchConfig { methods: MethodSet::all_with_sharding(), ..quick_cfg() };
+        let joint = backtracking_search(&g, &CommBound, &joint_cfg);
+        // Same budget, richer vocabulary: at least roughly as good (same
+        // stochastic slack as `more_methods_never_hurt`).
+        assert!(
+            joint.best_cost_ms <= base.best_cost_ms * 1.10,
+            "joint={} fusion-only={}",
+            joint.best_cost_ms,
+            base.best_cost_ms
+        );
+        assert!(joint.best.validate().is_ok());
+    }
+
+    #[test]
+    fn sharded_best_path_replays_to_best() {
+        let g = workload();
+        let cfg = SearchConfig {
+            methods: MethodSet::all_with_sharding(),
+            track_best_path: true,
+            ..quick_cfg()
+        };
+        let r = backtracking_search(&g, &CommBound, &cfg);
+        let mut replayed = g.clone();
+        for m in &r.best_path {
+            m.replay(&mut replayed).expect("best_path replay failed");
+        }
+        assert_eq!(replayed.fingerprint(), r.best.fingerprint());
     }
 
     #[test]

@@ -205,6 +205,13 @@ fn graph_lane(g: &TrainingGraph, seed: u64) -> Result<u64, GraphError> {
         // and carry no cost information beyond their count — byte totals
         // already live in `bytes_out`.
         f.usize(n.ar_constituents.len());
+        // Folded only when active: an unsharded graph (including the
+        // canonical `ShardSpec` of kind AllReduce) hashes exactly as it
+        // did before the sharding vocabulary existed, so every pre-shard
+        // plan record keeps its key.
+        if n.is_sharded_collective() {
+            f.byte(2);
+        }
         node_hash[id] = f.finish();
     }
     let mut live: Vec<u64> = order.iter().map(|&id| node_hash[id]).collect();
@@ -251,6 +258,13 @@ pub fn arena_fingerprint(g: &TrainingGraph) -> u64 {
         f.usize(n.ar_constituents.len());
         for &a in &n.ar_constituents {
             f.usize(a);
+        }
+        // Active shard specs are replay-relevant (a SetSharding mutation
+        // recorded against a sharded arena must not blind-replay onto an
+        // unsharded one); folded only when active so pre-shard records
+        // keep their arena hashes.
+        if n.is_sharded_collective() {
+            f.byte(2);
         }
     }
     f.finish()
@@ -355,6 +369,11 @@ pub fn env_fingerprint(
             f.byte(1);
             f.usize(cfg.max_chunks as usize);
         }
+        // Same stay-warm rule for the sharding extension; the tag byte is
+        // distinct from chunking's so the two opt-ins can never alias.
+        if cfg.methods.sharding {
+            f.byte(2);
+        }
         f.byte(cfg.incremental_candidates as u8);
         f.f64(cfg.sim.straggler_ms);
         f.byte(cfg.sim.ignore_comm as u8);
@@ -402,14 +421,21 @@ impl GraphSketch {
     /// Symmetric distance: 0 for identical sketches, growing with
     /// histogram, scale and topology-class differences. Log-ratio terms
     /// keep FLOPs/bytes comparable across magnitudes.
+    ///
+    /// Sketches persisted before an op-kind vocabulary growth carry
+    /// shorter `kind_counts`; missing slots count as zero. (The old
+    /// `zip`-based histogram silently truncated to the shorter vector and
+    /// then charged a flat length-difference penalty — dropping every
+    /// count the longer sketch held in its tail slots.)
     pub fn distance(&self, other: &GraphSketch) -> f64 {
-        let hist: f64 = self
-            .kind_counts
-            .iter()
-            .zip(&other.kind_counts)
-            .map(|(&a, &b)| (a as f64 - b as f64).abs())
-            .sum::<f64>()
-            + (self.kind_counts.len() as f64 - other.kind_counts.len() as f64).abs();
+        let len = self.kind_counts.len().max(other.kind_counts.len());
+        let hist: f64 = (0..len)
+            .map(|i| {
+                let a = *self.kind_counts.get(i).unwrap_or(&0) as f64;
+                let b = *other.kind_counts.get(i).unwrap_or(&0) as f64;
+                (a - b).abs()
+            })
+            .sum();
         let log_ratio = |a: f64, b: f64| (a.max(1.0) / b.max(1.0)).log2().abs();
         hist + 8.0 * log_ratio(self.total_flops, other.total_flops)
             + 2.0 * log_ratio(self.grad_bytes, other.grad_bytes)
@@ -429,13 +455,20 @@ impl GraphSketch {
     }
 
     pub fn from_json(j: &Json) -> Option<GraphSketch> {
+        let mut kind_counts = j
+            .get("kinds")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as u32))
+            .collect::<Option<Vec<u32>>>()?;
+        // Sketches recorded under an older, smaller op-kind vocabulary:
+        // pad with zeros so every in-memory sketch has today's width and
+        // indexing by `OpKind::feature_index` stays in bounds.
+        if kind_counts.len() < OpKind::ALL.len() + 1 {
+            kind_counts.resize(OpKind::ALL.len() + 1, 0);
+        }
         Some(GraphSketch {
-            kind_counts: j
-                .get("kinds")
-                .as_arr()?
-                .iter()
-                .map(|v| v.as_f64().map(|x| x as u32))
-                .collect::<Option<Vec<u32>>>()?,
+            kind_counts,
             live: j.get("live").as_usize()? as u32,
             allreduces: j.get("ars").as_usize()? as u32,
             num_workers: j.get("workers").as_usize()? as u32,
@@ -608,5 +641,90 @@ mod tests {
         let j = s.to_json().to_string();
         let s2 = GraphSketch::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn sketch_distance_counts_tail_slots_across_vocabulary_growth() {
+        // A sketch persisted under an older, shorter op-kind vocabulary
+        // must compare against a modern one slot-by-slot with missing
+        // slots zero — not be zip-truncated.
+        let modern = GraphSketch::of(&tiny());
+        let mut old = modern.clone();
+        old.kind_counts.truncate(1);
+        // Everything the modern sketch holds past slot 0 must be charged.
+        // tiny() has six live nodes over five distinct op kinds, so at
+        // most one kind's count can sit in slot 0 — the tail is nonempty
+        // regardless of the feature-index assignment.
+        let tail: f64 =
+            modern.kind_counts[1..].iter().map(|&c| c as f64).sum();
+        assert!(tail > 0.0, "test graph has no counts past slot 0");
+        assert_eq!(modern.distance(&old), tail);
+        assert_eq!(old.distance(&modern), tail, "distance must stay symmetric");
+        // Zero-padded tails are genuinely identical sketches.
+        let mut padded = old.clone();
+        padded.kind_counts.resize(modern.kind_counts.len(), 0);
+        assert_eq!(old.distance(&padded), 0.0);
+    }
+
+    #[test]
+    fn sketch_from_json_pads_short_vocabulary() {
+        let s = GraphSketch::of(&tiny());
+        let mut j = s.to_json().to_string();
+        // Simulate an old record: keep only the first three histogram
+        // slots.
+        let kinds: Vec<String> =
+            s.kind_counts[..3].iter().map(|c| c.to_string()).collect();
+        let old_kinds = format!("[{}]", kinds.join(","));
+        let start = j.find("[").unwrap();
+        let end = j.find("]").unwrap();
+        j.replace_range(start..=end, &old_kinds);
+        let parsed = GraphSketch::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(parsed.kind_counts.len(), OpKind::ALL.len() + 1);
+        assert_eq!(&parsed.kind_counts[..3], &s.kind_counts[..3]);
+        assert!(parsed.kind_counts[3..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn sharded_collective_flips_graph_and_arena_fingerprints() {
+        use crate::graph::{CollectiveKind, ShardSpec};
+        let base = tiny();
+        let base_fp = graph_fingerprint(&base).unwrap();
+        let base_arena = arena_fingerprint(&base);
+        let ar = base.allreduces()[0];
+        // The canonical AllReduce-kind spec is identical to no spec.
+        let mut canon = tiny();
+        canon.nodes[ar].shard = Some(ShardSpec::new(CollectiveKind::AllReduce));
+        assert_eq!(graph_fingerprint(&canon).unwrap(), base_fp);
+        assert_eq!(arena_fingerprint(&canon), base_arena);
+        // An active reduce-scatter spec changes both identities.
+        let mut sharded = tiny();
+        sharded.nodes[ar].shard =
+            Some(ShardSpec::new(CollectiveKind::ReduceScatterAllGather));
+        assert_ne!(graph_fingerprint(&sharded).unwrap(), base_fp);
+        assert_ne!(arena_fingerprint(&sharded), base_arena);
+    }
+
+    #[test]
+    fn env_fingerprint_sharding_knob_folds_only_when_enabled() {
+        use crate::search::MethodSet;
+        let d = DeviceModel::gtx1080ti();
+        let c = Cluster::cluster_a();
+        let analytical = EstimatorFp::named("analytical");
+        let off = env_fingerprint(&c, &d, &analytical, &SearchConfig::default());
+        let on = env_fingerprint(
+            &c,
+            &d,
+            &analytical,
+            &SearchConfig { methods: MethodSet::all_with_sharding(), ..SearchConfig::default() },
+        );
+        assert_ne!(off, on, "enabling sharding must flip the env key");
+        // Sharding-on and chunking-on configs must never alias.
+        let chunked = env_fingerprint(
+            &c,
+            &d,
+            &analytical,
+            &SearchConfig { methods: MethodSet::all_with_chunking(), ..SearchConfig::default() },
+        );
+        assert_ne!(on, chunked);
     }
 }

@@ -633,6 +633,11 @@ fn handle_plan(state: &State, req: &Json) -> Result<Json> {
     if let Some(mc) = req.get("max_chunks").as_usize() {
         cfg.max_chunks = mc as u32;
     }
+    // Gradient-sharding vocabulary (DESIGN.md §16), per-request opt-in
+    // with the same key-separation rule as chunking.
+    if let Some(sh) = req.get("sharding").as_bool() {
+        cfg.methods.sharding = sh;
+    }
     // Deadline budget: request field wins, else the server default;
     // 0 = unlimited. Applied to `max_seconds` BEFORE the environment
     // fingerprint so a budgeted search (which may stop early with a

@@ -38,6 +38,7 @@
 use super::fingerprint::GraphSketch;
 use super::io_fault::{DiskFault, DiskFaultPlan, FaultFile};
 use crate::fusion::{FusionKind, Mutation};
+use crate::graph::CollectiveKind;
 use crate::util::checksum::crc32c;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
@@ -60,10 +61,14 @@ use std::sync::Arc;
 ///   generation counter, payload length and CRC32C outside the JSON
 ///   payload. Bare v1/v2 lines (which always start with `{`) still
 ///   load, verified by parse only.
-pub const RECORD_VERSION: u64 = 3;
+/// * **4** — adds the `"sh"` (gradient-sharding toggle) mutation tag for
+///   ZeRO/FSDP-style reduce-scatter + all-gather collectives (DESIGN.md
+///   §16). v≤3 lines contain no `"sh"` mutations, so they replay exactly
+///   as the unsharded plans they were recorded as.
+pub const RECORD_VERSION: u64 = 4;
 
 /// Versions [`PlanRecord::from_json`] accepts (see the history above).
-const COMPAT_VERSIONS: [u64; 3] = [1, 2, RECORD_VERSION];
+const COMPAT_VERSIONS: [u64; 4] = [1, 2, 3, RECORD_VERSION];
 
 /// When the JSONL file holds more than this many lines per live record,
 /// `put` rewrites it from the on-disk record set (append-only compaction
@@ -308,6 +313,17 @@ fn mutation_json(m: &Mutation) -> Json {
             ("a", Json::Num(ar as f64)),
             ("n", Json::Num(count as f64)),
         ]),
+        Mutation::SetSharding { ar, kind } => Json::obj(vec![
+            ("t", Json::Str("sh".into())),
+            ("a", Json::Num(ar as f64)),
+            (
+                "k",
+                Json::Num(match kind {
+                    CollectiveKind::AllReduce => 0.0,
+                    CollectiveKind::ReduceScatterAllGather => 1.0,
+                }),
+            ),
+        ]),
     }
 }
 
@@ -329,6 +345,14 @@ fn mutation_from(j: &Json) -> Option<Mutation> {
         "ck" => Some(Mutation::SetChunks {
             ar: j.get("a").as_usize()?,
             count: j.get("n").as_usize()? as u32,
+        }),
+        "sh" => Some(Mutation::SetSharding {
+            ar: j.get("a").as_usize()?,
+            kind: match j.get("k").as_usize()? {
+                0 => CollectiveKind::AllReduce,
+                1 => CollectiveKind::ReduceScatterAllGather,
+                _ => return None,
+            },
         }),
         _ => None,
     }
@@ -1094,11 +1118,11 @@ mod tests {
 
     #[test]
     fn v1_and_v2_records_still_load() {
-        // Pre-durability records (v1 fusion-only, v2 chunked) must parse
-        // under the bumped version and keep their plans intact —
-        // replaying a v1 record produces exactly the unchunked strategy
-        // it stored.
-        for old in [1.0, 2.0] {
+        // Pre-durability records (v1 fusion-only, v2 chunked, v3 framed)
+        // must parse under the bumped version and keep their plans
+        // intact — replaying a v1 record produces exactly the unchunked,
+        // unsharded strategy it stored.
+        for old in [1.0, 2.0, 3.0] {
             let mut j = record("k1", "g1", 1.0).to_json();
             if let Json::Obj(m) = &mut j {
                 m.insert("v".into(), Json::Num(old));
@@ -1106,6 +1130,7 @@ mod tests {
             let r = PlanRecord::from_json(&j).unwrap_or_else(|| panic!("v{old} record rejected"));
             assert_eq!(r.muts, record("k1", "g1", 1.0).muts);
             assert!(!r.muts.iter().any(|m| matches!(m, Mutation::SetChunks { .. })));
+            assert!(!r.muts.iter().any(|m| matches!(m, Mutation::SetSharding { .. })));
         }
     }
 
@@ -1117,6 +1142,23 @@ mod tests {
         let r2 = PlanRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(r, r2);
         assert!(j.contains("\"ck\""));
+    }
+
+    #[test]
+    fn shard_mutation_roundtrips() {
+        let mut r = record("k3", "g1", 2.0);
+        r.muts.push(Mutation::SetSharding {
+            ar: 5,
+            kind: CollectiveKind::ReduceScatterAllGather,
+        });
+        r.muts.push(Mutation::SetSharding { ar: 5, kind: CollectiveKind::AllReduce });
+        let j = r.to_json().to_string();
+        let r2 = PlanRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(r, r2);
+        assert!(j.contains("\"sh\""));
+        // An unknown kind index is a malformed record, not a panic.
+        let bad = j.replace("\"k\":1", "\"k\":9");
+        assert!(PlanRecord::from_json(&Json::parse(&bad).unwrap()).is_none());
     }
 
     #[test]

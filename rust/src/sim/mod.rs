@@ -41,12 +41,35 @@
 //! Graphs with no active chunking take the pre-chunk [`event_loop`]
 //! untouched — results and traces are bit-identical to the pre-chunk
 //! simulator (`prop_chunked_sim_degenerates_to_whole_tensor`). Chunked
-//! graphs run a **dual-track** loop ([`event_loop_chunked`]): a
+//! graphs run a **dual-track** loop ([`event_loop_extended`]): a
 //! conservative track replays the whole-tensor arithmetic exactly (it owns
 //! the heap keys, so the schedule *order* matches the unchunked run) and
 //! an actual track carries the overlapped times, each clamped to its
 //! conservative counterpart — which makes "chunking never loses under the
 //! flat-network model" a per-event invariant, not a hope.
+//!
+//! ## Sharded collectives (ZeRO/FSDP, DESIGN.md §16)
+//!
+//! A collective with an active [`crate::graph::ShardSpec`] runs as
+//! **reduce-scatter + all-gather** on the actual track of the same
+//! dual-track loop. With ring cost `t_full = 2(W−1)·x/(bw·W) + D`, each
+//! phase transfers `(W−1)·x/(bw·W)` and pays the negotiation overhead
+//! once: `t_rs = t_ag = (t_full − D)/2 + D` — both derived *inside* the
+//! event loop from the [`CostTable`]'s unsharded entry, so
+//! [`CostTable::extend_in`]'s copy-surviving-entries contract holds
+//! (`SetSharding` never changes `bytes_out`). The reduce-scatter releases
+//! the optimizer step, which updates only the local 1/W parameter shard
+//! (actual compute `t/W`); the all-gather of updated shards launches when
+//! the collective's last consumer finishes and is schedulable *into the
+//! next iteration's forward pass* — its tail beyond the forward-compute
+//! window (`act_ag_tail − fwd_window`) is what extends the reported
+//! makespan. The conservative track still replays the whole-tensor DDP
+//! arithmetic (schedule order and snapshots stay those of the DDP run).
+//! Unlike chunking, sharding carries **no never-worse clamp**: each
+//! phase re-pays `D`, so `t_rs + t_ag = t_full + D` — the split wins via
+//! the `/W` optimizer and the forward-overlapped all-gather, not by
+//! construction; the search keeps a candidate only when it actually
+//! wins.
 
 pub mod hifi;
 pub mod trace;
@@ -343,14 +366,24 @@ struct SimState {
     scheduled: usize,
     live_bytes: f64,
     peak_bytes: f64,
-    // Actual-track counterparts used by the chunked loop only; busy
-    // totals, counts and the memory accounting are schedule-order facts
-    // shared by both tracks. All stay zero in unchunked runs.
+    // Actual-track counterparts used by the extended loop only; counts
+    // and the memory accounting are schedule-order facts shared by both
+    // tracks. All stay zero in plain (unchunked, unsharded) runs. For
+    // chunked-only graphs the act busy accumulators receive the exact
+    // same addends in the same order as their conservative counterparts,
+    // so they end bitwise equal; sharded graphs diverge (reduce-scatter +
+    // all-gather occupy the actual channel, the optimizer runs `t/W`).
     act_device_free: f64,
     act_channel_free: f64,
+    act_comp_busy: f64,
+    act_comm_busy: f64,
     act_comp_idle: f64,
     act_comm_idle: f64,
     act_makespan: f64,
+    /// Latest all-gather completion on the actual channel (sharded
+    /// collectives only); its tail beyond the next iteration's forward
+    /// window extends the actual makespan after the loop.
+    act_ag_tail: f64,
 }
 
 impl SimState {
@@ -367,12 +400,16 @@ impl SimState {
         }
     }
 
-    /// Result of a chunked run: the actual (overlapped) track.
+    /// Result of an extended (chunked and/or sharded) run: the actual
+    /// (overlapped) track. For chunked-only graphs the act busy fields
+    /// are bitwise equal to the conservative ones (same addends, same
+    /// order); sharded graphs report the split collective's real channel
+    /// and device occupancy.
     fn result_act(&self) -> SimResult {
         SimResult {
             makespan_ms: self.act_makespan,
-            comp_busy_ms: self.comp_busy,
-            comm_busy_ms: self.comm_busy,
+            comp_busy_ms: self.act_comp_busy,
+            comm_busy_ms: self.act_comm_busy,
             comp_idle_ms: self.act_comp_idle,
             comm_idle_ms: self.act_comm_idle,
             kernels: self.kernels,
@@ -408,10 +445,10 @@ pub struct CheckpointLog {
     sched_order: Vec<u32>,
     snaps: Vec<SimCheckpoint>,
     used: usize,
-    /// Which event loop recorded this log: snapshots of a chunked run
-    /// carry the actual track too, and [`simulate_delta`] restores (or
-    /// synthesizes) it accordingly.
-    chunked: bool,
+    /// Which event loop recorded this log: snapshots of an extended
+    /// (chunked and/or sharded) run carry the actual track too, and
+    /// [`simulate_delta`] restores (or synthesizes) it accordingly.
+    extended: bool,
 }
 
 impl CheckpointLog {
@@ -422,11 +459,11 @@ impl CheckpointLog {
     /// Snapshot cadence: one every `every` events (`0` = auto, n/8
     /// clamped to ≥ 32 — a handful of snapshots per evaluation, so the
     /// recording overhead stays a small fraction of the event loop).
-    fn reset(&mut self, every: usize, n: usize, chunked: bool) {
+    fn reset(&mut self, every: usize, n: usize, extended: bool) {
         self.every = if every > 0 { every } else { (n / 8).max(32) };
         self.sched_order.clear();
         self.used = 0;
-        self.chunked = chunked;
+        self.extended = extended;
     }
 
     /// Events the recorded parent evaluation scheduled.
@@ -449,7 +486,7 @@ impl CheckpointLog {
         s.heap.clone_from(&ws.heap);
         s.indeg.clone_from(&ws.indeg);
         s.ready.clone_from(&ws.ready);
-        if self.chunked {
+        if self.extended {
             s.ready_act.clone_from(&ws.ready_act);
         } else {
             s.ready_act.clear();
@@ -537,8 +574,8 @@ pub fn simulate_in<R: Recorder>(
 ) -> SimResult {
     let mut st = SimState::default();
     init_state(graph, ws, &mut st);
-    if graph.has_chunking() {
-        event_loop_chunked(graph, &DynCosts(costs), opts, rec, ws, &mut st, None);
+    if graph.has_chunking() || graph.has_sharding() {
+        event_loop_extended(graph, &DynCosts(costs), opts, rec, ws, &mut st, None);
         debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
         return st.result_act();
     }
@@ -560,8 +597,8 @@ pub fn simulate_table_in<R: Recorder>(
 ) -> SimResult {
     let mut st = SimState::default();
     init_state(graph, ws, &mut st);
-    if graph.has_chunking() {
-        event_loop_chunked(graph, &TableCosts(table), opts, rec, ws, &mut st, None);
+    if graph.has_chunking() || graph.has_sharding() {
+        event_loop_extended(graph, &TableCosts(table), opts, rec, ws, &mut st, None);
         debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
         return st.result_act();
     }
@@ -585,10 +622,10 @@ pub fn simulate_ckpt_in<R: Recorder>(
 ) -> SimResult {
     let mut st = SimState::default();
     init_state(graph, ws, &mut st);
-    let chunked = graph.has_chunking();
-    log.reset(every, graph.nodes.len(), chunked);
-    if chunked {
-        event_loop_chunked(graph, &TableCosts(table), opts, rec, ws, &mut st, Some(log));
+    let extended = graph.has_chunking() || graph.has_sharding();
+    log.reset(every, graph.nodes.len(), extended);
+    if extended {
+        event_loop_extended(graph, &TableCosts(table), opts, rec, ws, &mut st, Some(log));
         debug_assert_eq!(st.scheduled, graph.live_count(), "graph has a cycle?");
         return st.result_act();
     }
@@ -681,17 +718,21 @@ pub fn simulate_delta<R: Recorder>(
     ws.ready.resize(child_len, 0.0);
     ws.consumers_left.clone_from(&cp.consumers_left);
     ws.consumers_left.resize(child_len, 0);
-    let child_chunked = child.has_chunking();
-    if child_chunked {
-        if log.chunked {
+    let child_extended = child.has_chunking() || child.has_sharding();
+    if child_extended {
+        if log.extended {
             ws.ready_act.clone_from(&cp.ready_act);
         } else {
-            // Unchunked parent prefix: the actual track is identical to
-            // the conservative one everywhere (no chunked AR was ever
-            // processed), so synthesize it from the conservative state.
+            // Plain (unchunked, unsharded) parent prefix: the actual
+            // track is identical to the conservative one everywhere (no
+            // chunked or sharded collective was ever processed), so
+            // synthesize it from the conservative state. `act_ag_tail`
+            // stays 0: no all-gather has run in such a prefix.
             ws.ready_act.clone_from(&cp.ready);
             st.act_device_free = st.device_free;
             st.act_channel_free = st.channel_free;
+            st.act_comp_busy = st.comp_busy;
+            st.act_comm_busy = st.comm_busy;
             st.act_comp_idle = st.comp_idle;
             st.act_comm_idle = st.comm_idle;
             st.act_makespan = st.makespan;
@@ -712,7 +753,7 @@ pub fn simulate_delta<R: Recorder>(
         }
         ws.indeg[id] = node.inputs.len() as u32;
         ws.ready[id] = 0.0;
-        if child_chunked {
+        if child_extended {
             ws.ready_act[id] = 0.0;
         }
         ws.consumers_left[id] = csucc.out_degree(id) as u32;
@@ -723,20 +764,20 @@ pub fn simulate_delta<R: Recorder>(
         }
         ws.indeg[a] = child.nodes[a].inputs.len() as u32;
         ws.ready[a] = 0.0;
-        if child_chunked {
+        if child_extended {
             ws.ready_act[a] = 0.0;
         }
         ws.consumers_left[a] = csucc.out_degree(a) as u32;
     }
 
     // --- replay the suffix ----------------------------------------------
-    // An unchunked child replays through the pre-chunk loop even when the
-    // parent log is chunked: the conservative parts of a chunked snapshot
-    // are bitwise what an unchunked run of the chunk-stripped parent would
+    // A plain child replays through the pre-chunk loop even when the
+    // parent log is extended: the conservative parts of an extended
+    // snapshot are bitwise what a plain run of the stripped parent would
     // have recorded (the conservative track *is* that run), and the
-    // unchunked loop reads nothing else.
-    if child_chunked {
-        event_loop_chunked(child, &TableCosts(table), opts, rec, ws, &mut st, None);
+    // plain loop reads nothing else.
+    if child_extended {
+        event_loop_extended(child, &TableCosts(table), opts, rec, ws, &mut st, None);
         debug_assert_eq!(st.scheduled, child.live_count(), "delta replay lost events");
         return st.result_act();
     }
@@ -847,18 +888,34 @@ fn event_loop<C: NodeCosts, R: Recorder>(
     }
 }
 
-/// Dual-track event loop for graphs with at least one chunked AllReduce.
+/// Per-phase time of a sharded collective, derived from its unsharded
+/// full-all-reduce time `t_full`: ring cost splits the transfer evenly
+/// across the reduce-scatter and all-gather phases, and each phase
+/// re-pays the negotiation overhead `D` (clamped into `[0, t_full]`).
+#[inline]
+fn shard_phase_ms(t_full: f64, overhead: f64) -> f64 {
+    let d = overhead.min(t_full).max(0.0);
+    (t_full - d) / 2.0 + d
+}
+
+/// Dual-track event loop for graphs with at least one chunked or sharded
+/// collective.
 ///
 /// * The **conservative track** replays [`event_loop`]'s arithmetic
 ///   bit-for-bit — it owns the heap keys, so events pop in exactly the
-///   order an unchunked run of the chunk-stripped graph would schedule
-///   them, and checkpoint snapshots stay compatible with unchunked
-///   children.
+///   order a plain run of the chunk- and shard-stripped graph would
+///   schedule them, and checkpoint snapshots stay compatible with plain
+///   children. For sharded graphs the conservative track *is* the DDP
+///   baseline schedule.
 /// * The **actual track** (`ready_act`, `act_*` state) carries the
-///   overlapped times. Every actual value is clamped so it never exceeds
-///   its conservative counterpart — `max`/`+` are monotone in f64, so
-///   `act_makespan <= makespan` holds *exactly*, by induction per event,
-///   with no float tolerance (the monotonicity property test).
+///   overlapped times. For chunking, every actual value is clamped so it
+///   never exceeds its conservative counterpart — `max`/`+` are monotone
+///   in f64, so `act_makespan <= makespan` holds *exactly*, by induction
+///   per event, with no float tolerance (the monotonicity property
+///   test). Sharding is **not** clamped (module docs): the split
+///   collective's all-gather tail can legitimately exceed the DDP
+///   makespan when the next iteration's forward window is too short to
+///   hide it.
 ///
 /// A chunked AllReduce occupies the channel for its full time `T`, but its
 /// data lands incrementally: overhead `D` once, then `k` equal chunks of
@@ -867,7 +924,18 @@ fn event_loop<C: NodeCosts, R: Recorder>(
 /// the whole-tensor scheduler reproduces by giving it the *effective*
 /// ready time `r = max(L_1, L_k − (k−1)·c/k)`, clamped to `L_k` (the
 /// whole-tensor arrival) against last-chunk rounding.
-fn event_loop_chunked<C: NodeCosts, R: Recorder>(
+///
+/// A sharded collective ([`crate::graph::ShardSpec`], never chunked — the
+/// rewrites enforce exclusivity) occupies the actual channel for its
+/// reduce-scatter phase only; its consumers (optimizer updates, by the
+/// sharding legality rule) see the reduce-scatter completion and run at
+/// `t/W` on the actual device (each rank updates its local shard). When
+/// the collective's last consumer finishes, the all-gather of updated
+/// parameter shards is laid onto the actual channel; the loop tracks the
+/// latest all-gather completion and, after draining, extends the actual
+/// makespan by whatever tail the next iteration's forward-compute window
+/// (`Σ` forward costs) cannot hide.
+fn event_loop_extended<C: NodeCosts, R: Recorder>(
     graph: &TrainingGraph,
     costs: &C,
     opts: SimOptions,
@@ -879,6 +947,23 @@ fn event_loop_chunked<C: NodeCosts, R: Recorder>(
     let succ = graph.succ_csr();
     let transient =
         |node: &Node| !matches!(node.kind, OpKind::Parameter | OpKind::Constant);
+    let sharding = graph.has_sharding();
+    // Forward-compute window the all-gathers overlap into (the next
+    // iteration's forward pass). A pure function of graph + costs, so
+    // recomputing it on a delta-sim suffix replay is deterministic.
+    let fwd_window: f64 = if sharding {
+        graph
+            .live()
+            .filter(|n| {
+                n.role == Role::Forward
+                    && !matches!(n.kind, OpKind::AllReduce | OpKind::Parameter | OpKind::Constant)
+            })
+            .map(|n| costs.compute(n))
+            .sum()
+    } else {
+        0.0
+    };
+    let workers = graph.num_workers.max(1) as f64;
 
     loop {
         if let Some(l) = log.as_deref_mut() {
@@ -907,11 +992,23 @@ fn event_loop_chunked<C: NodeCosts, R: Recorder>(
                     st.comm_busy += t;
                     st.allreduces += 1;
 
+                    // Actual channel occupancy: the reduce-scatter phase
+                    // for a sharded collective, the full transfer
+                    // otherwise (the all-gather is laid later, when the
+                    // optimizer consumers finish).
+                    let t_act =
+                        if node.is_sharded_collective() { shard_phase_ms(t, costs.overhead()) } else { t };
                     let start_a = (rt_act + opts.straggler_ms).max(st.act_channel_free);
                     st.act_comm_idle += start_a - st.act_channel_free;
-                    st.act_channel_free = start_a + t;
+                    st.act_channel_free = start_a + t_act;
+                    st.act_comm_busy += t_act;
                     let done_a = st.act_channel_free;
                     rec.record(node, start_a, done_a, true);
+                    if node.is_sharded_collective() {
+                        // Phase 1 of 2: the reduce-scatter span (the
+                        // all-gather is recorded when it launches).
+                        rec.record_chunk(node, 1, 2, start_a, done_a);
+                    }
                     if k >= 2 {
                         let d_over = costs.overhead().min(t).max(0.0);
                         let per = (t - d_over) / k as f64;
@@ -952,9 +1049,21 @@ fn event_loop_chunked<C: NodeCosts, R: Recorder>(
                 st.comp_busy += t;
                 st.kernels += 1;
 
+                // An optimizer update fed by a sharded collective touches
+                // only the local 1/W parameter shard on the actual track
+                // (ZeRO: optimizer state and step are sharded).
+                let t_act = if sharding
+                    && node.role == Role::Optimizer
+                    && node.inputs.iter().any(|&i| graph.nodes[i].is_sharded_collective())
+                {
+                    t / workers
+                } else {
+                    t
+                };
                 let start_a = rt_act.max(st.act_device_free);
                 st.act_comp_idle += start_a - st.act_device_free;
-                st.act_device_free = start_a + t;
+                st.act_device_free = start_a + t_act;
+                st.act_comp_busy += t_act;
                 rec.record(node, start_a, st.act_device_free, false);
                 (st.device_free, st.act_device_free)
             }
@@ -969,8 +1078,27 @@ fn event_loop_chunked<C: NodeCosts, R: Recorder>(
         }
         for &i in &node.inputs {
             ws.consumers_left[i] -= 1;
-            if ws.consumers_left[i] == 0 && transient(&graph.nodes[i]) {
-                st.live_bytes -= graph.nodes[i].bytes_out;
+            if ws.consumers_left[i] == 0 {
+                let inp = &graph.nodes[i];
+                if transient(inp) {
+                    st.live_bytes -= inp.bytes_out;
+                }
+                // Last consumer of a sharded collective just finished:
+                // every rank's shard of the updated parameter exists, so
+                // the all-gather restoring replication goes on the actual
+                // channel now. Its completion only matters as a tail
+                // against the next iteration's forward window (below) —
+                // within this iteration nothing consumes it, which is
+                // exactly the prefetch freedom DeepCompile exploits.
+                if sharding && inp.is_sharded_collective() && !opts.ignore_comm {
+                    let t_ag = shard_phase_ms(costs.comm(inp), costs.overhead());
+                    let start = done_act.max(st.act_channel_free);
+                    st.act_comm_idle += start - st.act_channel_free;
+                    st.act_channel_free = start + t_ag;
+                    st.act_comm_busy += t_ag;
+                    st.act_ag_tail = st.act_ag_tail.max(st.act_channel_free);
+                    rec.record_chunk(inp, 2, 2, start, st.act_channel_free);
+                }
             }
         }
 
@@ -989,6 +1117,13 @@ fn event_loop_chunked<C: NodeCosts, R: Recorder>(
                 st.seq += 1;
             }
         }
+    }
+
+    // All-gather tail: the updated-parameter all-gathers overlap the next
+    // iteration's forward pass; only the portion the forward window
+    // cannot hide extends the per-iteration time.
+    if sharding && st.act_ag_tail > 0.0 {
+        st.act_makespan = st.act_makespan.max(st.act_ag_tail - fwd_window);
     }
 }
 
@@ -1485,7 +1620,7 @@ mod tests {
                         &mut log,
                         every,
                     );
-                    assert_eq!(log.chunked, parent.has_chunking());
+                    assert_eq!(log.extended, parent.has_chunking());
                     let mut child_table = CostTable::new();
                     child_table.extend_in(&parent_table, &child, &c);
                     let delta = simulate_delta(
@@ -1513,5 +1648,191 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharding_splits_collective_and_overlaps_allgather() {
+        use crate::fusion::set_sharding_explain;
+        use crate::graph::CollectiveKind;
+        // comp=1, comm=10, W=4, no overhead. DDP: grad 0..1, AR 1..11,
+        // opt 11..12 → 12. Sharded: RS 1..6 (t/2), opt on the local
+        // shard 6..6.25 (t/W), AG 6.25..11.25; no forward window in a
+        // bp chain, so the AG tail is fully exposed → 11.25.
+        let mut g = bp_chain(1);
+        let ar = g.allreduces()[0];
+        let c = Fixed { comp: 1.0, comm: 10.0 };
+        assert_eq!(simulate(&g, &c, SimOptions::default()).makespan_ms, 12.0);
+        set_sharding_explain(&mut g, ar, CollectiveKind::ReduceScatterAllGather).unwrap();
+        assert!(g.has_sharding());
+        let r = simulate(&g, &c, SimOptions::default());
+        assert_eq!(r.makespan_ms, 11.25);
+        // Actual occupancy: RS + AG on the channel, grad + sharded opt
+        // on the device.
+        assert_eq!(r.comm_busy_ms, 10.0);
+        assert_eq!(r.comp_busy_ms, 1.25);
+        assert_eq!(r.allreduces, 1);
+    }
+
+    #[test]
+    fn sharding_pays_overhead_twice_no_clamp() {
+        use crate::fusion::set_sharding_explain;
+        use crate::graph::CollectiveKind;
+        // With per-phase overhead D=2: t_rs = t_ag = (10−2)/2 + 2 = 6.
+        // RS 1..7, opt 7..7.25, AG 7.25..13.25 — worse than the 12ms DDP
+        // run. Sharding has no never-worse clamp; the search must reject
+        // this candidate on merit.
+        let mut g = bp_chain(1);
+        let ar = g.allreduces()[0];
+        let c = FixedOver { comp: 1.0, comm: 10.0, over: 2.0 };
+        assert_eq!(simulate(&g, &c, SimOptions::default()).makespan_ms, 12.0);
+        set_sharding_explain(&mut g, ar, CollectiveKind::ReduceScatterAllGather).unwrap();
+        let r = simulate(&g, &c, SimOptions::default());
+        assert_eq!(r.makespan_ms, 13.25);
+    }
+
+    #[test]
+    fn sharded_allgather_hides_behind_forward_window() {
+        use crate::fusion::set_sharding_explain;
+        use crate::graph::CollectiveKind;
+        // One forward op extends the overlap window: the AG tail counts
+        // only past Σ(forward compute).
+        let mut b = GraphBuilder::new("fwd", 4);
+        let x = b.constant("x", &[64]);
+        let f = b.compute(OpKind::Mul, "f", &[x], &[64], Role::Forward);
+        let gr = b.compute(OpKind::Mul, "g", &[f], &[64], Role::Backward);
+        let p = b.param("w", &[64]);
+        let ar = b.allreduce("ar", gr, &[64]);
+        b.optimizer_update("u", &[ar, p]);
+        let mut g = b.finish();
+        let c = Fixed { comp: 1.0, comm: 10.0 };
+        // DDP: f 0..1, g 1..2, AR 2..12, opt 12..13.
+        assert_eq!(simulate(&g, &c, SimOptions::default()).makespan_ms, 13.0);
+        set_sharding_explain(&mut g, ar, CollectiveKind::ReduceScatterAllGather).unwrap();
+        // RS 2..7, opt 7..7.25, AG 7.25..12.25; fwd window = 1 hides 1ms
+        // of the tail: max(7.25, 12.25 − 1) = 11.25.
+        let r = simulate(&g, &c, SimOptions::default());
+        assert_eq!(r.makespan_ms, 11.25);
+    }
+
+    #[test]
+    fn sharded_ignore_comm_skips_both_phases() {
+        use crate::fusion::set_sharding_explain;
+        use crate::graph::CollectiveKind;
+        // ignore_comm drops RS and AG entirely; the sharded optimizer
+        // still runs t/W on the actual device (its sharding is a compute
+        // fact, not a communication one). bp_chain(1): grad 0..1,
+        // opt 1..1.25.
+        let mut g = bp_chain(1);
+        let ar = g.allreduces()[0];
+        set_sharding_explain(&mut g, ar, CollectiveKind::ReduceScatterAllGather).unwrap();
+        let c = Fixed { comp: 1.0, comm: 10.0 };
+        let r = simulate(&g, &c, SimOptions { ignore_comm: true, ..Default::default() });
+        assert_eq!(r.makespan_ms, 1.25);
+        assert_eq!(r.comm_busy_ms, 0.0);
+        assert_eq!(r.allreduces, 0);
+    }
+
+    #[test]
+    fn sharded_delta_matches_full_all_mode_combos() {
+        use crate::fusion::{set_chunks_explain, set_sharding_explain};
+        use crate::graph::CollectiveKind;
+        let c = FixedOver { comp: 0.7, comm: 1.3, over: 0.2 };
+        // (parent sharded?, parent chunked?, child unshards?) — covers
+        // plain→sharded, sharded→more-sharded, sharded→plain, and the
+        // mixed chunk+shard graph, each against a full re-simulation.
+        for (parent_sharded, parent_chunked, child_unshards) in [
+            (false, false, false),
+            (true, false, false),
+            (true, false, true),
+            (false, true, false),
+        ] {
+            let mut parent = bp_chain_wide(6);
+            if parent_sharded {
+                let ar0 = parent.allreduces()[0];
+                set_sharding_explain(&mut parent, ar0, CollectiveKind::ReduceScatterAllGather)
+                    .unwrap();
+            }
+            if parent_chunked {
+                let ar0 = parent.allreduces()[0];
+                set_chunks_explain(&mut parent, ar0, 4).unwrap();
+            }
+            let (target, kind) = if child_unshards {
+                (parent.allreduces()[0], CollectiveKind::AllReduce)
+            } else {
+                (*parent.allreduces().last().unwrap(), CollectiveKind::ReduceScatterAllGather)
+            };
+            let mut child = parent.clone();
+            let fx = set_sharding_explain(&mut child, target, kind).unwrap();
+            let mut frontier = vec![target];
+            fx.extend_frontier(&child, &mut frontier);
+            assert_eq!(child.has_sharding(), !child_unshards);
+
+            for opts in [
+                SimOptions::default(),
+                SimOptions { straggler_ms: 0.3, ignore_comm: false },
+            ] {
+                for every in [1usize, 3, 1000] {
+                    let mut ws = SimWorkspace::new();
+                    let parent_table = CostTable::build(&parent, &c);
+                    let mut log = CheckpointLog::new();
+                    let _ = simulate_ckpt_in(
+                        &parent,
+                        &parent_table,
+                        opts,
+                        &mut NoRecord,
+                        &mut ws,
+                        &mut log,
+                        every,
+                    );
+                    assert_eq!(
+                        log.extended,
+                        parent.has_chunking() || parent.has_sharding()
+                    );
+                    let mut child_table = CostTable::new();
+                    child_table.extend_in(&parent_table, &child, &c);
+                    let delta = simulate_delta(
+                        &parent,
+                        &log,
+                        &child,
+                        &frontier,
+                        &child_table,
+                        opts,
+                        &mut NoRecord,
+                        &mut ws,
+                    );
+                    let full = simulate_table_in(
+                        &child,
+                        &child_table,
+                        opts,
+                        &mut NoRecord,
+                        &mut SimWorkspace::new(),
+                    );
+                    assert_eq!(
+                        delta, full,
+                        "sharded={parent_sharded} chunked={parent_chunked} \
+                         unshards={child_unshards} every={every} opts={opts:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_only_graph_unaffected_by_sharding_machinery() {
+        // The extended loop's sharding paths are all gated on
+        // `has_sharding()`; a chunked-only graph must keep its exact
+        // pre-sharding arithmetic (bit-identical busy totals to the
+        // conservative track).
+        let mut g = bp_chain(3);
+        let ar = g.allreduces()[1];
+        g.nodes[ar].chunk = Some(ChunkSpec::new(4));
+        let c = FixedOver { comp: 1.0, comm: 5.0, over: 0.5 };
+        let r = simulate(&g, &c, SimOptions::default());
+        let mut stripped = g.clone();
+        stripped.nodes[ar].chunk = None;
+        let base = simulate(&stripped, &c, SimOptions::default());
+        assert_eq!(r.comp_busy_ms, base.comp_busy_ms);
+        assert_eq!(r.comm_busy_ms, base.comm_busy_ms);
+        assert!(r.makespan_ms <= base.makespan_ms);
     }
 }

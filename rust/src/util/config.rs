@@ -8,7 +8,8 @@
 //!   "device":  {"preset": "tesla_t4", "peak_tflops": 8.1,
 //!                "mem_gbps": 300, "onchip_mb": 4},
 //!   "search":  {"alpha": 1.05, "beta": 10, "unchanged_limit": 1000,
-//!                "seed": 7, "chunking": true, "max_chunks": 8},
+//!                "seed": 7, "chunking": true, "max_chunks": 8,
+//!                "sharding": false},
 //!   "service": {"addr": "127.0.0.1:7077", "store_path": "plans.jsonl",
 //!                "capacity": 512, "warm_start": true, "nearest": true,
 //!                "max_conns": 256, "cold_budget_ms": 0, "max_cold": 8}
@@ -164,6 +165,9 @@ impl Config {
             if let Some(mc) = s.get("max_chunks").as_usize() {
                 cfg.search.max_chunks = mc as u32;
             }
+            if let Some(sh) = s.get("sharding").as_bool() {
+                cfg.search.methods.sharding = sh;
+            }
         }
 
         let v = j.get("service");
@@ -309,6 +313,15 @@ mod tests {
         let d = Config::from_json_str("{}").unwrap();
         assert!(!d.search.methods.chunking);
         assert_eq!(d.search.max_chunks, 8);
+    }
+
+    #[test]
+    fn sharding_knob_applies() {
+        let c = Config::from_json_str(r#"{"search": {"sharding": true}}"#).unwrap();
+        assert!(c.search.methods.sharding);
+        // Off by default: the paper's vocabulary unless explicitly enabled.
+        let d = Config::from_json_str("{}").unwrap();
+        assert!(!d.search.methods.sharding);
     }
 
     #[test]

@@ -4,9 +4,9 @@
 use disco::collective::run_workers;
 use disco::device::DeviceModel;
 use disco::estimator::CostEstimator;
-use disco::fusion::{self, CandidateSet, FusionKind};
+use disco::fusion::{self, CandidateSet, FusionKind, Mutation};
 use disco::graph::builder::GraphBuilder;
-use disco::graph::{NodeId, OpKind, Role, TrainingGraph};
+use disco::graph::{CollectiveKind, NodeId, OpKind, Role, ShardSpec, TrainingGraph};
 use disco::network::Cluster;
 use disco::prop_assert;
 use disco::search::{backtracking_search, SearchConfig};
@@ -111,6 +111,24 @@ fn random_chunkings(g: &mut TrainingGraph, rng: &mut Rng, tries: usize) -> usize
         let counts = fusion::chunk_candidates(g, a, fusion::MAX_CHUNKS);
         let Some(&c) = rng.choose(&counts) else { continue };
         if fusion::set_chunks(g, a, c).is_ok() && c >= 2 {
+            applied += 1;
+        }
+    }
+    applied
+}
+
+/// Re-shard random AllReduces through the search vocabulary
+/// ([`fusion::shard_candidates`] + [`fusion::set_sharding`]); returns
+/// how many activations (switches to reduce-scatter/all-gather) were
+/// applied.
+fn random_shardings(g: &mut TrainingGraph, rng: &mut Rng, tries: usize) -> usize {
+    let mut applied = 0;
+    for _ in 0..tries {
+        let ars = g.allreduces();
+        let Some(&a) = rng.choose(&ars) else { break };
+        let kinds = fusion::shard_candidates(g, a);
+        let Some(&k) = rng.choose(&kinds) else { continue };
+        if fusion::set_sharding(g, a, k).is_ok() && k == CollectiveKind::ReduceScatterAllGather {
             applied += 1;
         }
     }
@@ -395,6 +413,105 @@ fn prop_chunked_never_slower_than_whole_tensor() {
 }
 
 #[test]
+fn prop_shard_canonical_allreduce_is_ddp() {
+    // DESIGN.md §16 degenerate-case contract: a ShardSpec with kind
+    // AllReduce is canonically "not sharded" — the simulator must
+    // produce a BIT-identical SimResult and trace, and the graph must
+    // serialize and fingerprint identically to one with no descriptor
+    // at all, so every pre-sharding plan key stays warm.
+    check("shard-canonical-none", PropConfig { cases: 64, seed: 0x5AD1 }, |rng| {
+        let mut g = random_graph(rng);
+        random_rewrites(&mut g, rng, 6);
+        let mut canon = g.clone();
+        for id in canon.allreduces() {
+            canon.nodes[id].shard = Some(ShardSpec::new(CollectiveKind::AllReduce));
+        }
+        prop_assert!(!canon.has_sharding(), "kind=AllReduce spec counted as active sharding");
+        prop_assert!(
+            g.fingerprint() == canon.fingerprint(),
+            "inactive shard spec changed the arena fingerprint"
+        );
+        let a = disco::service::graph_fingerprint(&g).unwrap();
+        let b = disco::service::graph_fingerprint(&canon).unwrap();
+        prop_assert!(a == b, "inactive shard spec changed the canonical fingerprint");
+        prop_assert!(
+            g.to_json() == canon.to_json(),
+            "inactive shard spec leaked into serialization"
+        );
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.3) { 0.25 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.2),
+        };
+        let (ra, ta) = disco::sim::trace::capture(&g, &Ovh, opts);
+        let (rb, tb) = disco::sim::trace::capture(&canon, &Ovh, opts);
+        prop_assert!(ra == rb, "canonical-kind sim diverged: {ra:?} vs {rb:?}");
+        prop_assert!(ta.len() == tb.len(), "trace lengths differ: {} vs {}", ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            prop_assert!(
+                x.name == y.name
+                    && x.start_ms == y.start_ms
+                    && x.end_ms == y.end_ms
+                    && x.comm == y.comm
+                    && x.chunk == y.chunk,
+                "trace event diverged: {x:?} vs {y:?}"
+            );
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_shard_bytes_conserved_and_legal() {
+    // Every sharding the vocabulary can produce is legal (all consumers
+    // are optimizer updates, chunking reset, ≥ 2 workers) and splits the
+    // gradient tensor EXACTLY: the per-rank reduce-scatter shards sum to
+    // bytes_out with zero float drift (so the all-gather re-replicates
+    // exactly what was scattered), and no two shards differ by more
+    // than one byte.
+    check("shard-conservation", PropConfig { cases: 96, seed: 0x5AD2 }, |rng| {
+        let mut g = random_graph(rng);
+        random_rewrites(&mut g, rng, 6);
+        if random_shardings(&mut g, rng, 6) == 0 {
+            return CaseResult::Discard;
+        }
+        prop_assert!(g.validate().is_ok(), "sharding broke the graph");
+        prop_assert!(g.num_workers >= 2, "sharded a single-replica graph");
+        for n in g.live().filter(|n| n.is_sharded_collective()) {
+            prop_assert!(n.kind == OpKind::AllReduce, "shard spec on non-AllReduce {}", n.name);
+            prop_assert!(n.chunk.is_none(), "sharded collective {} kept a chunk spec", n.name);
+            for c in g.live().filter(|c| c.inputs.contains(&n.id)) {
+                prop_assert!(
+                    c.role == Role::Optimizer,
+                    "non-optimizer consumer {} reads sharded {}",
+                    c.name,
+                    n.name
+                );
+            }
+            let shards = ShardSpec::shard_bytes(n.bytes_out, g.num_workers);
+            prop_assert!(
+                shards.len() == g.num_workers,
+                "{} shards for {} workers on {}",
+                shards.len(),
+                g.num_workers,
+                n.name
+            );
+            let sum: f64 = shards.iter().sum();
+            prop_assert!(
+                sum == n.bytes_out,
+                "shard bytes drifted: {} vs {} on {}",
+                sum,
+                n.bytes_out,
+                n.name
+            );
+            let mx = shards.iter().cloned().fold(0.0f64, f64::max);
+            let mn = shards.iter().cloned().fold(f64::INFINITY, f64::min);
+            prop_assert!(mx - mn <= 1.0, "shards unbalanced by {} bytes on {}", mx - mn, n.name);
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
 fn prop_sim_workspace_reuse_identical() {
     // One workspace reused across every case and graph size must produce
     // results bit-identical to fresh-allocation runs (SimResult derives
@@ -496,6 +613,70 @@ fn random_tracked_rewrites_chunked(
                 let counts = fusion::chunk_candidates(g, a, fusion::MAX_CHUNKS);
                 let Some(&c) = rng.choose(&counts) else { continue };
                 if let Ok(fx) = cset.apply_chunking(g, a, c) {
+                    frontier.push(a);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
+            }
+        }
+    }
+    applied
+}
+
+/// [`random_tracked_rewrites_chunked`] with the sharding method mixed in
+/// — the full mutation vocabulary the sharding-enabled search draws from
+/// (SetSharding can also *un*-shard, and activating it resets chunking,
+/// so the mix exercises every chunk×shard transition).
+fn random_tracked_rewrites_sharded(
+    g: &mut TrainingGraph,
+    rng: &mut Rng,
+    tries: usize,
+    frontier: &mut Vec<NodeId>,
+) -> usize {
+    let mut cset = CandidateSet::build(g);
+    let mut applied = 0;
+    for _ in 0..tries {
+        match rng.gen_range(12) {
+            0..=4 => {
+                let Some(&(p, s)) = rng.choose(cset.op_pairs()) else { continue };
+                let kind = if rng.gen_bool(0.5) {
+                    FusionKind::NonDuplicate
+                } else {
+                    FusionKind::Duplicate
+                };
+                if let Ok(fx) = cset.apply_op_fusion(g, p, s, kind) {
+                    frontier.push(p);
+                    frontier.push(s);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
+            }
+            5..=6 => {
+                let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+                let nbrs = fusion::ar_neighbors(g, a);
+                let Some(&b) = rng.choose(&nbrs) else { continue };
+                if let Ok(fx) = cset.apply_ar_fusion(g, a, b) {
+                    frontier.push(a);
+                    frontier.push(b);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
+            }
+            7..=8 => {
+                let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+                let counts = fusion::chunk_candidates(g, a, fusion::MAX_CHUNKS);
+                let Some(&c) = rng.choose(&counts) else { continue };
+                if let Ok(fx) = cset.apply_chunking(g, a, c) {
+                    frontier.push(a);
+                    fx.extend_frontier(g, frontier);
+                    applied += 1;
+                }
+            }
+            _ => {
+                let Some(&a) = rng.choose(cset.allreduces()) else { continue };
+                let kinds = fusion::shard_candidates(g, a);
+                let Some(&k) = rng.choose(&kinds) else { continue };
+                if let Ok(fx) = cset.apply_sharding(g, a, k) {
                     frontier.push(a);
                     fx.extend_frontier(g, frontier);
                     applied += 1;
@@ -681,6 +862,142 @@ fn prop_chunked_delta_sim_matches_full() {
             delta == full,
             "chunked delta sim diverged (every={every}, opts={opts:?}): {delta:?} vs {full:?}"
         );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_sharded_delta_sim_matches_full() {
+    // The tentpole contract extended to sharded frontiers: with
+    // SetSharding in the mutation mix (and possibly-sharded or chunked
+    // parents), a checkpoint restore + suffix replay must stay
+    // BIT-IDENTICAL to a full child simulation — across DDP->sharded,
+    // sharded->DDP, sharded->more-sharded and mixed chunk+shard
+    // parent/child pairs.
+    check("delta-sim-vs-full-sharded", PropConfig { cases: 96, seed: 0x5AD3 }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let mut parent = random_graph_elems(rng, 8192);
+        let prof = disco::profiler::profile(&parent, &device, &cluster, 1, 5);
+        let parent_muts = rng.gen_range_inclusive(0, 4);
+        random_rewrites(&mut parent, rng, parent_muts);
+        if rng.gen_bool(0.5) {
+            random_shardings(&mut parent, rng, 2);
+        } else if rng.gen_bool(0.5) {
+            random_chunkings(&mut parent, rng, 2);
+        }
+        let mut child = parent.clone();
+        let mut frontier: Vec<NodeId> = Vec::new();
+        let tries = rng.gen_range_inclusive(1, 6);
+        if random_tracked_rewrites_sharded(&mut child, rng, tries, &mut frontier) == 0 {
+            return CaseResult::Discard;
+        }
+        let est = CostEstimator::oracle(&prof, &device);
+        let opts = SimOptions {
+            straggler_ms: if rng.gen_bool(0.4) { 0.3 } else { 0.0 },
+            ignore_comm: rng.gen_bool(0.25),
+        };
+        let every = match rng.gen_range(4) {
+            0 => 1,
+            1 => rng.gen_range_inclusive(2, 9),
+            2 => 0, // auto
+            _ => 10_000,
+        };
+        let mut ws = SimWorkspace::new();
+        let parent_table = CostTable::build(&parent, &est);
+        let mut log = CheckpointLog::new();
+        let _ = simulate_ckpt_in(
+            &parent,
+            &parent_table,
+            opts,
+            &mut NoRecord,
+            &mut ws,
+            &mut log,
+            every,
+        );
+        let mut child_table = CostTable::new();
+        child_table.extend_in(&parent_table, &child, &est);
+        let delta = simulate_delta(
+            &parent,
+            &log,
+            &child,
+            &frontier,
+            &child_table,
+            opts,
+            &mut NoRecord,
+            &mut ws,
+        );
+        let full =
+            simulate_table_in(&child, &child_table, opts, &mut NoRecord, &mut SimWorkspace::new());
+        prop_assert!(
+            delta == full,
+            "sharded delta sim diverged (every={every}, opts={opts:?}): {delta:?} vs {full:?}"
+        );
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn prop_pre_sharding_records_replay_unsharded() {
+    // Store-compat contract for record v4: records written before the
+    // sharding vocabulary existed (v1-v3) must load under the bumped
+    // version and replay to their exact recorded winner — necessarily
+    // unsharded (no "sh" tags predate v4) and with zero simulator
+    // calls: try_replay_hit replays mutations only and takes no cost
+    // source at all.
+    use disco::util::json::Json;
+    check("store-downgrade-replay", PropConfig { cases: 6, seed: 0x5AD4 }, |rng| {
+        let device = DeviceModel::gtx1080ti();
+        let cluster = Cluster::cluster_a();
+        let g = random_graph(rng);
+        let prof = disco::profiler::profile(&g, &device, &cluster, 1, 5);
+        let est = CostEstimator::oracle(&prof, &device);
+        let cfg = SearchConfig {
+            unchanged_limit: 30,
+            max_queue: 32,
+            seed: rng.next_u64(),
+            eval_threads: 1,
+            track_best_path: true,
+            ..Default::default()
+        };
+        let r = backtracking_search(&g, &est, &cfg);
+        let gfp = disco::service::graph_fingerprint(&g).unwrap();
+        let rec = disco::service::PlanRecord {
+            key: "k".to_string(),
+            graph_fp: gfp.hex(),
+            arena_fp: disco::service::arena_fingerprint(&g),
+            model: g.name.clone(),
+            sketch: disco::service::GraphSketch::of(&g),
+            muts: r.best_path.clone(),
+            best_cost_ms: r.best_cost_ms,
+            initial_cost_ms: r.initial_cost_ms,
+            evals: r.evals,
+            steps: r.steps,
+            elapsed_ms: 1.0,
+        };
+        for old in [1.0, 2.0, 3.0] {
+            let mut j = rec.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("v".into(), Json::Num(old));
+            }
+            let back = match disco::service::PlanRecord::from_json(&j) {
+                Some(b) => b,
+                None => return CaseResult::Fail(format!("v{old} record rejected under v4")),
+            };
+            prop_assert!(
+                !back.muts.iter().any(|m| matches!(m, Mutation::SetSharding { .. })),
+                "pre-sharding record decoded a SetSharding mutation"
+            );
+            let replayed = match disco::service::try_replay_hit(&back, &g) {
+                Some(p) => p,
+                None => return CaseResult::Fail(format!("v{old} record did not replay")),
+            };
+            prop_assert!(!replayed.has_sharding(), "downgrade replay produced a sharded plan");
+            prop_assert!(
+                replayed.fingerprint() == r.best.fingerprint(),
+                "downgrade replay does not reproduce the recorded winner"
+            );
+        }
         CaseResult::Pass
     });
 }
@@ -878,8 +1195,8 @@ fn prop_serial_roundtrip_lossless() {
     // JSON (de)serialization must preserve EVERYTHING the strategy
     // service's canonical fingerprint hashes — shapes, dtypes, flops,
     // byte traffic, fused-group contents, tombstones, duplicate operand
-    // edges and chunk descriptors — across arbitrary post-fusion (and
-    // post-chunking) graph states.
+    // edges, chunk descriptors and shard descriptors — across arbitrary
+    // post-fusion (and post-chunking/post-sharding) graph states.
     check("serial-roundtrip", PropConfig { cases: 48, seed: 0x5E41A1 }, |rng| {
         // Half the cases use gradients large enough for the chunking
         // vocabulary to apply, so chunk specs actually ride the wire.
@@ -887,6 +1204,8 @@ fn prop_serial_roundtrip_lossless() {
         let mut g = random_graph_elems(rng, elems);
         random_rewrites(&mut g, rng, rng.gen_range_inclusive(0, 8));
         random_chunkings(&mut g, rng, rng.gen_range_inclusive(0, 4));
+        // ... and shard descriptors (DESIGN.md §16) ride it too.
+        random_shardings(&mut g, rng, rng.gen_range_inclusive(0, 3));
         let text = g.to_json();
         let back = match TrainingGraph::from_json(&text) {
             Ok(b) => b,
